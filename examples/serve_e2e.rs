@@ -1,0 +1,104 @@
+//! End-to-end driver (DESIGN.md "End-to-end validation"): every layer of
+//! the stack composes on a real workload.
+//!
+//!   Pallas kernel (L1) → JAX model (L2) → `make artifacts` HLO text →
+//!   Rust PJRT runtime → dynamic batcher → policy router → GEMM service.
+//!
+//! The service is loaded with the AOT artifacts, then serves a mixed
+//! stream of batched requests at the artifact shapes:
+//!  * urand(-1,1) inputs route to cutlass_halfhalf → PJRT halfhalf kernel,
+//!  * exp_rand(-100,-36) inputs (Fig. 11 Type 4) route to cutlass_tf32tf32,
+//!  * every response is checked against the FP64 oracle and the FP32 SGEMM
+//!    residual for the same inputs.
+//! Latency/throughput and the accuracy audit are printed at the end and
+//! recorded in EXPERIMENTS.md.
+//!
+//! Run: `make artifacts && cargo run --release --example serve_e2e`
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+use tcec::coordinator::{GemmService, Policy, ServiceConfig};
+use tcec::gemm::{gemm_f64, relative_residual, Method, TileConfig};
+use tcec::matgen::Workload;
+use tcec::runtime::{ArtifactRegistry, PjrtExecutor, PjrtHandle};
+
+fn main() {
+    // --- bring up the runtime over the AOT artifacts --------------------
+    let handle = PjrtHandle::spawn();
+    let reg = ArtifactRegistry::scan("artifacts", handle.clone()).expect("scan artifacts/");
+    let names = reg.names();
+    if names.is_empty() {
+        eprintln!("artifacts/ is empty — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    println!("loaded artifact dir with {} artifacts:", names.len());
+    for n in &names {
+        println!("  {n}");
+    }
+
+    let svc = GemmService::start(
+        Arc::new(PjrtExecutor::new(reg)),
+        ServiceConfig {
+            workers: 2,
+            max_batch: 4,
+            linger: Duration::from_millis(2),
+            force_method: None, // the router decides
+        },
+    );
+
+    // --- submit a mixed request stream at the artifact shape ------------
+    let n = 128usize;
+    let total = 48usize;
+    let good = Workload::Urand { lo: -1.0, hi: 1.0 };
+    let tiny = Workload::ExpRand { a: -100, b: -36 }; // Fig. 11 Type 4
+    let cfg = TileConfig::default();
+
+    struct Pending {
+        a: tcec::gemm::Mat,
+        b: tcec::gemm::Mat,
+        expect: Method,
+        rx: std::sync::mpsc::Receiver<tcec::coordinator::GemmResponse>,
+    }
+
+    let t0 = Instant::now();
+    let mut pending = Vec::new();
+    for i in 0..total {
+        let wide = i % 4 == 3; // every 4th request is out of halfhalf range
+        let a = if wide { tiny.generate(n, n, i as u64) } else { good.generate(n, n, i as u64) };
+        let b = good.generate(n, n, 10_000 + i as u64);
+        let expect = if wide { Method::OursTf32 } else { Method::OursHalfHalf };
+        let (_, rx) = svc.submit(a.clone(), b.clone(), Policy::Fp32Accuracy);
+        pending.push(Pending { a, b, expect, rx });
+    }
+
+    // --- collect + audit -------------------------------------------------
+    let mut worst_ratio = 0.0f64;
+    let mut max_batch = 0usize;
+    for p in pending {
+        let resp = p.rx.recv_timeout(Duration::from_secs(120)).expect("response");
+        assert_eq!(resp.method, p.expect, "router picked {:?}", resp.method);
+        max_batch = max_batch.max(resp.batch_size);
+        let oracle = gemm_f64(&p.a, &p.b);
+        let e = relative_residual(&oracle, &resp.c);
+        let e_simt = relative_residual(&oracle, &Method::Fp32Simt.run(&p.a, &p.b, &cfg));
+        worst_ratio = worst_ratio.max(e / e_simt.max(1e-300));
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    let snap = svc.metrics().snapshot();
+    println!("\n== e2e audit ==");
+    println!("requests          : {total} ({n}x{n}x{n} each, 25% Type-4 exponent range)");
+    println!("wall time         : {wall:.3}s  ({:.1} req/s, {:.2} GFlop/s served)",
+        total as f64 / wall, snap.flops as f64 / wall / 1e9);
+    println!("mean latency      : {:?}", snap.mean_latency);
+    println!("max batch size    : {max_batch}");
+    println!("per-method counts : {:?}", snap.per_method);
+    println!("worst residual vs FP32-SGEMM: {worst_ratio:.2}x");
+    assert!(worst_ratio < 2.5, "corrected GEMM must stay at the FP32 error level");
+    assert!(max_batch >= 2, "dynamic batching must have engaged");
+    assert_eq!(snap.completed as usize, total);
+
+    svc.shutdown();
+    handle.shutdown();
+    println!("\nOK: Pallas → AOT HLO → PJRT → batcher → router, all at FP32 accuracy.");
+}

@@ -1,0 +1,101 @@
+//! Quantum-circuit-style tensor-network contraction — the paper's second
+//! motivating application (qFlex rejected FP16 Tensor Cores because of the
+//! exponent range; TF32 + correction fixes exactly that).
+//!
+//! Uses the library's complex GEMM (`tcec::gemm::complex`, 3M algorithm —
+//! the same trick cuBLAS CGEMM3M uses) to contract a chain of complex gate
+//! layers whose magnitudes decay layer by layer: amplitudes in circuit
+//! simulations shrink exponentially, pushing values toward the FP16 cliff.
+//! Fidelity is tracked against an FP64 contraction.
+//!
+//! Expected: plain FP16-TC loses the state entirely; halfhalf degrades once
+//! magnitudes fall below ~2^-15 (Fig. 11 Types 2-4); tf32tf32 and the bf16
+//! triple-split track FP32 the whole way — "TF32 can represent nearly the
+//! entire FP32 exponent range".
+//!
+//! Run: `cargo run --release --example tensor_contraction`
+
+use tcec::gemm::{
+    c_relative_residual, cgemm, cgemm_f64, CgemmAlgo, CMat, Mat, Method, TileConfig,
+};
+use tcec::matgen::Rng;
+
+/// Random "gate layer" with magnitude scale s (unitary-ish, not exactly).
+fn layer(n: usize, s: f64, seed: u64) -> CMat {
+    let mut rng = Rng::new(seed);
+    let norm = s / (n as f64).sqrt();
+    CMat {
+        re: Mat::from_fn(n, n, |_, _| (rng.normal() * norm) as f32),
+        im: Mat::from_fn(n, n, |_, _| (rng.normal() * norm) as f32),
+    }
+}
+
+fn main() {
+    let n = 48;
+    let layers = 10;
+    // Each layer shrinks amplitudes ~8x: after 10 layers values sit around
+    // 2^-30 of the start — exactly the regime qFlex worried about.
+    let shrink = 0.125;
+    let cfg = TileConfig::default();
+    let methods =
+        [Method::Fp16Tc, Method::OursHalfHalf, Method::OursTf32, Method::OursBf16Triple, Method::Fp32Simt];
+
+    println!("contracting {layers} complex {n}x{n} gate layers (3M CGEMM), shrink {shrink}/layer\n");
+    println!(
+        "{:>5} {:>10} {:>13} {:>13} {:>13} {:>13} {:>13}",
+        "layer", "|amp|~2^e", "fp16tc", "halfhalf", "tf32tf32", "bf16x3", "fp32_simt"
+    );
+
+    let init = layer(n, 1.0, 7000);
+    let mut states: Vec<CMat> = methods.iter().map(|_| init.clone()).collect();
+    // FP64 reference state, carried as an exact CMat re-derived per layer.
+    let mut exact_state = init.clone();
+    let mut exact_ref = cgemm_f64(
+        &exact_state,
+        &CMat {
+            re: Mat::from_fn(n, n, |i, j| (i == j) as u32 as f32),
+            im: Mat::zeros(n, n),
+        },
+    );
+
+    let mut final_errs = vec![0.0f64; methods.len()];
+    for l in 0..layers {
+        let g = layer(n, shrink, 8000 + l as u64);
+        // Reference: contract in FP64, then round the state to f32 for the
+        // next exact step (the f32 state is what the methods start from,
+        // so the comparison isolates GEMM error per chain).
+        exact_ref = cgemm_f64(&exact_state, &g);
+        exact_state = CMat {
+            re: Mat::from_vec(n, n, exact_ref.re.data.iter().map(|&v| v as f32).collect()),
+            im: Mat::from_vec(n, n, exact_ref.im.data.iter().map(|&v| v as f32).collect()),
+        };
+        let mag = exact_ref
+            .re
+            .data
+            .iter()
+            .zip(&exact_ref.im.data)
+            .map(|(r, i)| (r * r + i * i).sqrt())
+            .fold(0.0, f64::max);
+        print!("{:>5} {:>10}", l + 1, format!("2^{:.0}", mag.log2()));
+        for (mi, &m) in methods.iter().enumerate() {
+            states[mi] = cgemm(&states[mi], &g, m, CgemmAlgo::ThreeM, &cfg);
+            let e = c_relative_residual(&exact_ref, &states[mi]);
+            final_errs[mi] = e;
+            print!(" {:>13.3e}", e);
+        }
+        println!();
+    }
+
+    let idx = |m: Method| methods.iter().position(|&x| x == m).unwrap();
+    let tf32 = final_errs[idx(Method::OursTf32)];
+    let bf16 = final_errs[idx(Method::OursBf16Triple)];
+    let simt = final_errs[idx(Method::Fp32Simt)];
+    let f16 = final_errs[idx(Method::Fp16Tc)];
+    println!(
+        "\nfinal fidelity error: fp16tc {f16:.3e}, tf32tf32 {tf32:.3e}, bf16x3 {bf16:.3e}, fp32 {simt:.3e}"
+    );
+    assert!(tf32 < 10.0 * simt, "tf32tf32 must track FP32 through the exponent decay");
+    assert!(bf16 < 10.0 * simt, "bf16x3 must track FP32 through the exponent decay");
+    assert!(f16 > 100.0 * tf32, "plain FP16-TC must have lost the state by now");
+    println!("OK: wide-exponent corrected kernels survive the amplitude decay that kills FP16.");
+}

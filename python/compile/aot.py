@@ -1,0 +1,105 @@
+"""AOT pipeline: lower the L2 models to HLO **text** artifacts.
+
+HLO text — not ``HloModuleProto.serialize()`` — is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (behind the published ``xla`` 0.1.6 crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifact naming is shared with ``rust/src/runtime/mod.rs``:
+``ec_gemm_<variant>_<m>x<k>x<n>.hlo.txt``.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts``
+Python runs ONCE here; the Rust binary is self-contained afterwards.
+"""
+
+import argparse
+import functools
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# The shapes the serving examples use. Small enough that interpret-mode
+# Pallas lowers and runs quickly; the runtime falls back to the bit-exact
+# simulator for any other shape.
+SHAPES = [(64, 64, 64), (128, 128, 128), (16, 256, 16)]
+VARIANTS = ["halfhalf", "tf32tf32", "fp32"]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-reassigning path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def artifact_name(variant: str, m: int, k: int, n: int) -> str:
+    return f"ec_gemm_{variant}_{m}x{k}x{n}.hlo.txt"
+
+
+def lower_gemm(variant: str, m: int, k: int, n: int) -> str:
+    a = jax.ShapeDtypeStruct((m, k), jnp.float32)
+    b = jax.ShapeDtypeStruct((k, n), jnp.float32)
+    if variant == "fp32":
+        fn = model.fp32_gemm_model
+    else:
+        fn = functools.partial(model.ec_gemm_model, variant=variant)
+    lowered = jax.jit(fn).lower(a, b)
+    return to_hlo_text(lowered)
+
+
+def lower_chain(variant: str, n: int) -> str:
+    """Lower the two-GEMM MLP-shaped chain (3 inputs) — proves multi-input
+    artifacts flow through the same AOT/runtime path."""
+    spec = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    fn = functools.partial(model.ec_gemm_chain, variant=variant)
+    lowered = jax.jit(fn).lower(spec, spec, spec)
+    return to_hlo_text(lowered)
+
+
+def main() -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--force", action="store_true", help="rebuild even if present")
+    args = p.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    wrote = 0
+    for variant in VARIANTS:
+        for (m, k, n) in SHAPES:
+            path = os.path.join(args.out_dir, artifact_name(variant, m, k, n))
+            if os.path.exists(path) and not args.force:
+                print(f"keep  {path}")
+                continue
+            text = lower_gemm(variant, m, k, n)
+            assert text.startswith("HloModule"), "unexpected HLO text header"
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"wrote {path} ({len(text)} chars)")
+            wrote += 1
+    # Multi-input chain artifact (L2 composition, executed by pjrt_e2e.rs).
+    chain_path = os.path.join(args.out_dir, "mlp_chain_halfhalf_64.hlo.txt")
+    if not os.path.exists(chain_path) or args.force:
+        text = lower_chain("halfhalf", 64)
+        assert text.startswith("HloModule")
+        with open(chain_path, "w") as f:
+            f.write(text)
+        print(f"wrote {chain_path} ({len(text)} chars)")
+        wrote += 1
+    else:
+        print(f"keep  {chain_path}")
+    # Stamp file so `make` can track freshness of the whole set.
+    with open(os.path.join(args.out_dir, ".stamp"), "w") as f:
+        f.write(f"shapes={SHAPES} variants={VARIANTS}\n")
+    print(f"done: {wrote} artifact(s) rebuilt")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

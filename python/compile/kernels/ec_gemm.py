@@ -1,0 +1,170 @@
+"""L1 — Pallas error-corrected GEMM kernels (Ootomo & Yokota 2022).
+
+The paper's CUDA kernel, rethought for a TPU-shaped machine (DESIGN.md
+§Hardware-Adaptation):
+
+* the CTA tile of shared memory becomes a VMEM-resident output block
+  expressed with ``pl.BlockSpec``;
+* the warp-level WMMA fragments disappear — the MXU consumes whole
+  ``(bm, k) x (k, bn)`` tiles via ``jnp.dot``;
+* the split/correct epilogue (eqs. 19-24) runs elementwise on the VPU
+  inside the same kernel, so HBM traffic is FP32 operands in, FP32 out —
+  exactly like the paper's "convert on registers, never store the split
+  to shared memory" optimization;
+* the MXU accumulates in FP32 with RN, so the paper's RZ-avoidance is
+  structural here: the three dot products are combined with plain f32
+  adds *outside* the (simulated) matrix unit.
+
+Kernels must be lowered with ``interpret=True``: real TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute (see
+/opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Residual scaling (eq. 18): 2^11 = l_F16 + 1 binades.
+SCALE = 2048.0
+INV_SCALE = 1.0 / SCALE
+
+# TF32 quantization constants: keep 10 explicit mantissa bits of the f32.
+# (Plain Python ints — materializing jnp scalars at module scope would be
+# captured constants, which pallas kernels reject.)
+_TF32_DROP_BITS = 13  # 23 - 10
+_TF32_HALF_ULP = 1 << (_TF32_DROP_BITS - 1)
+_TF32_MASK = ~((1 << _TF32_DROP_BITS) - 1) & 0xFFFFFFFF
+
+
+def quantize_tf32(x):
+    """Round an f32 array to the TF32 grid with RNA (the conversion the
+    paper selects on Ampere; round-half-away carries into the exponent
+    correctly because IEEE754 is sign-magnitude)."""
+    bits = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    sign = bits & jnp.uint32(0x80000000)
+    mag = bits & jnp.uint32(0x7FFFFFFF)
+    mag = (mag + jnp.uint32(_TF32_HALF_ULP)) & jnp.uint32(_TF32_MASK)
+    return jax.lax.bitcast_convert_type(sign | mag, jnp.float32)
+
+
+def quantize_f16(x):
+    """Round an f32 array to the binary16 grid with RN (CUDA default),
+    returning f32 values on the f16 grid."""
+    return x.astype(jnp.float16).astype(jnp.float32)
+
+
+def split_halfhalf(x):
+    """Eqs. (19)/(20): hi = toFP16(x); lo = toFP16((x - hi) * 2^11)."""
+    hi = quantize_f16(x)
+    lo = quantize_f16((x - hi) * SCALE)
+    return hi, lo
+
+
+def split_tf32tf32(x):
+    """The TF32 variant of eqs. (19)/(20) with RNA conversions."""
+    hi = quantize_tf32(x)
+    lo = quantize_tf32((x - hi) * SCALE)
+    return hi, lo
+
+
+# bf16 triple split (TPU-idiomatic extension — DESIGN.md
+# §Hardware-Adaptation): v ~= b0 + b1/2^8 + b2/2^16, each piece bfloat16.
+BF16_SCALE = 256.0
+INV_BF16_SCALE = 1.0 / BF16_SCALE
+
+
+def quantize_bf16(x):
+    """Round an f32 array to the bfloat16 grid with RN, kept as f32."""
+    return x.astype(jnp.bfloat16).astype(jnp.float32)
+
+
+def split_bf16_triple(x):
+    """Three-piece bf16 split with ×2^8 residual scaling per level."""
+    b0 = quantize_bf16(x)
+    r1 = (x - b0) * BF16_SCALE
+    b1 = quantize_bf16(r1)
+    b2 = quantize_bf16((r1 - b1) * BF16_SCALE)
+    return b0, b1, b2
+
+
+def _ec_gemm_kernel(a_ref, b_ref, o_ref, *, variant):
+    """One (bm, bn) output tile: split + 3 MMA terms + FP32 (RN) combine.
+
+    ``a_ref``: (bm, k) f32 panel, ``b_ref``: (k, bn) f32 panel — FP32 in
+    VMEM; the low-precision copies exist only in registers, mirroring the
+    paper's register-resident conversion.
+    """
+    a = a_ref[...]
+    b = b_ref[...]
+    dot = functools.partial(jnp.dot, preferred_element_type=jnp.float32)
+    if variant == "bf16x3":
+        # Six-term bf16 recovery (the tc_terms=6 extension):
+        # C = T00 + (T01+T10)/2^8 + (T11+T02+T20)/2^16.
+        a0, a1, a2 = split_bf16_triple(a)
+        b0, b1, b2 = split_bf16_triple(b)
+        main = dot(a0, b0)
+        c1 = dot(a0, b1) + dot(a1, b0)
+        c2 = dot(a1, b1) + dot(a0, b2) + dot(a2, b0)
+        o_ref[...] = main + c1 * INV_BF16_SCALE + c2 * (INV_BF16_SCALE * INV_BF16_SCALE)
+        return
+    if variant == "halfhalf":
+        a_hi, a_lo = split_halfhalf(a)
+        b_hi, b_lo = split_halfhalf(b)
+    elif variant == "tf32tf32":
+        a_hi, a_lo = split_tf32tf32(a)
+        b_hi, b_lo = split_tf32tf32(b)
+    else:
+        raise ValueError(f"unknown variant {variant!r}")
+
+    # Eq. (24): C = A.B + (dA.B + A.dB)/2^11 ; the dA.dB term is dropped.
+    main = dot(a_hi, b_hi)
+    corr = dot(a_lo, b_hi) + dot(a_hi, b_lo)
+    o_ref[...] = main + corr * INV_SCALE
+
+
+def _fp32_gemm_kernel(a_ref, b_ref, o_ref):
+    """Plain FP32 tile GEMM (the cuBLAS-SGEMM-shaped baseline artifact)."""
+    o_ref[...] = jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+
+
+def _tile(n, limit):
+    """Largest divisor of n not exceeding limit (VMEM-friendly tiles)."""
+    t = min(n, limit)
+    while n % t:
+        t -= 1
+    return t
+
+
+def ec_gemm(a, b, variant="halfhalf", bm=128, bn=128):
+    """Error-corrected single-precision GEMM via the Pallas kernel.
+
+    a: (m, k) f32, b: (k, n) f32 -> (m, n) f32 with FP32-SGEMM-level
+    accuracy computed from low-precision (f16/TF32) products only.
+    The grid is (m/bm, n/bn); each program reads an (bm, k) A-panel and a
+    (k, bn) B-panel (the k dimension stays resident — see module docs for
+    the VMEM budget).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims {k} != {k2}"
+    bm = _tile(m, bm)
+    bn = _tile(n, bn)
+
+    if variant == "fp32":
+        kernel = _fp32_gemm_kernel
+    else:
+        kernel = functools.partial(_ec_gemm_kernel, variant=variant)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,  # CPU path; real-TPU lowering is compile-only here
+    )(a, b)

@@ -1,0 +1,76 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+No Pallas, no tiling — just the paper's equations applied whole-array, in
+the clearest possible form. pytest compares every kernel output against
+these (the CORE correctness signal of the build path).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from .ec_gemm import quantize_f16, quantize_tf32, INV_SCALE, SCALE
+
+
+def split_ref(x, variant):
+    """Eqs. (19)/(20) whole-array."""
+    q = quantize_f16 if variant == "halfhalf" else quantize_tf32
+    hi = q(x)
+    lo = q((x - hi) * SCALE)
+    return hi, lo
+
+
+def ec_gemm_ref_bf16x3(a, b):
+    """Oracle for the bf16 triple-split kernel variant."""
+    from .ec_gemm import split_bf16_triple, INV_BF16_SCALE
+
+    a0, a1, a2 = split_bf16_triple(a)
+    b0, b1, b2 = split_bf16_triple(b)
+    dot = lambda x, y: jnp.dot(x, y, preferred_element_type=jnp.float32)
+    return (
+        dot(a0, b0)
+        + (dot(a0, b1) + dot(a1, b0)) * INV_BF16_SCALE
+        + (dot(a1, b1) + dot(a0, b2) + dot(a2, b0)) * (INV_BF16_SCALE * INV_BF16_SCALE)
+    )
+
+
+def ec_gemm_ref(a, b, variant="halfhalf"):
+    """Eq. (24) whole-array: the oracle for the Pallas ec-GEMM."""
+    a_hi, a_lo = split_ref(a, variant)
+    b_hi, b_lo = split_ref(b, variant)
+    main = jnp.dot(a_hi, b_hi, preferred_element_type=jnp.float32)
+    corr = jnp.dot(a_lo, b_hi, preferred_element_type=jnp.float32) + jnp.dot(
+        a_hi, b_lo, preferred_element_type=jnp.float32
+    )
+    return main + corr * INV_SCALE
+
+
+def ec_gemm_ref_4term(a, b, variant="halfhalf"):
+    """Eq. (23): the 4-term version including dA.dB (ablation oracle)."""
+    a_hi, a_lo = split_ref(a, variant)
+    b_hi, b_lo = split_ref(b, variant)
+    dot = lambda x, y: jnp.dot(x, y, preferred_element_type=jnp.float32)
+    return (
+        dot(a_hi, b_hi)
+        + (dot(a_lo, b_hi) + dot(a_hi, b_lo)) * INV_SCALE
+        + dot(a_lo, b_lo) * (INV_SCALE * INV_SCALE)
+    )
+
+
+def sgemm_ref(a, b):
+    """FP32 GEMM (the accuracy target)."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def gemm_f64(a, b):
+    """FP64 oracle of eq. (7), in numpy for exactness."""
+    return np.asarray(a, dtype=np.float64) @ np.asarray(b, dtype=np.float64)
+
+
+def relative_residual(c_f64, c):
+    """Eq. (7)."""
+    c_f64 = np.asarray(c_f64, dtype=np.float64)
+    c = np.asarray(c, dtype=np.float64)
+    denom = np.linalg.norm(c_f64)
+    if denom == 0.0:
+        return 0.0 if np.linalg.norm(c - c_f64) == 0.0 else np.inf
+    return float(np.linalg.norm(c_f64 - c) / denom)

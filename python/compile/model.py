@@ -1,0 +1,34 @@
+"""L2 — the JAX compute graph that the Rust runtime executes.
+
+The "model" for a GEMM-kernel paper is the GEMM itself plus the epilogue a
+serving system wants fused: the entry points here are jitted functions of
+``(a, b) -> (c,)`` that call the L1 Pallas kernel, lowered once by
+``aot.py`` to HLO text and never run from Python at serve time.
+
+``ec_gemm_chain`` exercises composition (two chained corrected GEMMs —
+the shape of one transformer-MLP block) to prove the kernel fuses into a
+larger graph; the e2e example serves the plain ``ec_gemm_model``.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import ec_gemm
+
+
+def ec_gemm_model(a, b, variant="halfhalf"):
+    """C = ec_gemm(A, B). Returned as a 1-tuple (AOT contract: the HLO's
+    root is a tuple, unwrapped by the Rust side with ``to_tuple1``)."""
+    return (ec_gemm.ec_gemm(a, b, variant=variant),)
+
+
+def fp32_gemm_model(a, b):
+    """Baseline FP32 GEMM artifact (same contract)."""
+    return (ec_gemm.ec_gemm(a, b, variant="fp32"),)
+
+
+def ec_gemm_chain(a, w1, w2, variant="halfhalf"):
+    """Two corrected GEMMs with a gelu between — an MLP-block-shaped graph
+    proving the kernel composes inside a bigger jit (L2 fusion test)."""
+    h = ec_gemm.ec_gemm(a, w1, variant=variant)
+    h = jnp.where(h > 0, h, 0.01 * h)  # cheap nonlinearity, f32-exact-ish
+    return (ec_gemm.ec_gemm(h, w2, variant=variant),)

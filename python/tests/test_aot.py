@@ -1,0 +1,69 @@
+"""AOT pipeline tests: HLO text is produced, well-formed, incremental."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+from compile import aot
+
+
+class TestAot:
+    def test_lower_produces_hlo_text(self):
+        text = aot.lower_gemm("halfhalf", 16, 16, 16)
+        assert text.startswith("HloModule")
+        # The corrected kernel must contain f16 conversions and two extra
+        # dots (the correction terms) beyond the main one.
+        assert "f16" in text
+        assert text.count("dot(") >= 3 or text.count(" dot") >= 3
+
+    def test_lower_tf32_has_no_f16(self):
+        text = aot.lower_gemm("tf32tf32", 16, 16, 16)
+        assert text.startswith("HloModule")
+        # TF32 is emulated with bit masks on f32: no f16 converts expected.
+        assert "f16" not in text
+
+    def test_lower_fp32_single_dot(self):
+        text = aot.lower_gemm("fp32", 16, 16, 16)
+        assert text.startswith("HloModule")
+
+    def test_lower_chain_three_inputs(self):
+        text = aot.lower_chain("halfhalf", 16)
+        assert text.startswith("HloModule")
+        # Three f32[16,16] parameters.
+        assert text.count("parameter(") >= 3 or text.count(" parameter") >= 3
+
+    def test_artifact_naming_matches_rust_side(self):
+        # rust/src/runtime/mod.rs::artifact_file must agree with this.
+        assert aot.artifact_name("halfhalf", 64, 64, 64) == "ec_gemm_halfhalf_64x64x64.hlo.txt"
+
+    def test_main_writes_and_skips(self, tmp_path, monkeypatch):
+        out = tmp_path / "artifacts"
+        monkeypatch.setattr(aot, "SHAPES", [(16, 16, 16)])
+        monkeypatch.setattr(aot, "VARIANTS", ["halfhalf"])
+        monkeypatch.setattr(sys, "argv", ["aot", "--out-dir", str(out)])
+        assert aot.main() == 0
+        name = out / "ec_gemm_halfhalf_16x16x16.hlo.txt"
+        assert name.exists()
+        first_mtime = name.stat().st_mtime_ns
+        # Second run: skipped, file untouched.
+        assert aot.main() == 0
+        assert name.stat().st_mtime_ns == first_mtime
+        assert (out / ".stamp").exists()
+
+
+@pytest.mark.skipif(
+    not os.path.isdir(os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")),
+    reason="artifacts/ not built",
+)
+class TestBuiltArtifacts:
+    def test_built_artifacts_are_parseable_headers(self):
+        d = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+        hlos = [f for f in os.listdir(d) if f.endswith(".hlo.txt")]
+        if not hlos:
+            pytest.skip("no artifacts yet (run `make artifacts`)")
+        for f in hlos:
+            with open(os.path.join(d, f)) as fh:
+                head = fh.read(64)
+            assert head.startswith("HloModule"), f

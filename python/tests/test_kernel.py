@@ -1,0 +1,242 @@
+"""L1 correctness: Pallas kernel vs pure-jnp oracle, quantizer bit-exactness,
+split properties, and the paper's accuracy claims at build time.
+
+proptest/hypothesis are unavailable offline (DESIGN.md §2); the sweeps below
+are seeded parameter grids covering the same property space.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile.kernels import ec_gemm, ref
+
+RNG = np.random.default_rng
+
+
+def urand(rng, shape, lo=-1.0, hi=1.0):
+    return rng.uniform(lo, hi, shape).astype(np.float32)
+
+
+def exp_rand(rng, shape, a, b):
+    """Eq. (25) in numpy."""
+    e = rng.integers(a, b + 1, shape)
+    m = rng.uniform(1.0, 2.0, shape)
+    s = rng.integers(0, 2, shape) * 2 - 1
+    return (s * m * np.exp2(e)).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Quantizers
+# ---------------------------------------------------------------------------
+
+class TestQuantizers:
+    def test_tf32_keeps_11_bit_grid(self):
+        on_grid = np.float32(1.0 + 2**-10)
+        assert float(ec_gemm.quantize_tf32(jnp.asarray(on_grid))) == on_grid
+
+    @pytest.mark.parametrize("sign", [1.0, -1.0])
+    def test_tf32_rna_ties_away(self, sign):
+        tie = np.float32(sign * (1.0 + 2**-11))
+        got = float(ec_gemm.quantize_tf32(jnp.asarray(tie)))
+        assert got == sign * (1.0 + 2**-10)
+
+    @pytest.mark.parametrize("e", [-126, -100, -37, -15, 0, 20, 100, 127])
+    def test_tf32_full_exponent_range(self, e):
+        v = np.float32(np.exp2(e))
+        assert float(ec_gemm.quantize_tf32(jnp.asarray(v))) == v
+
+    @pytest.mark.parametrize("seed", range(4))
+    def test_tf32_idempotent_and_close(self, seed):
+        x = exp_rand(RNG(seed), (256,), -30, 30)
+        q1 = np.asarray(ec_gemm.quantize_tf32(jnp.asarray(x)))
+        q2 = np.asarray(ec_gemm.quantize_tf32(jnp.asarray(q1)))
+        np.testing.assert_array_equal(q1, q2)
+        # RNA to 11 bits: |x - q| <= 2^-11 |x|
+        np.testing.assert_array_less(np.abs(x - q1), np.abs(x) * 2**-10.5 + 1e-38)
+
+    @pytest.mark.parametrize("seed", range(4))
+    def test_f16_quantizer_matches_numpy_rn(self, seed):
+        x = urand(RNG(seed), (512,))
+        ours = np.asarray(ec_gemm.quantize_f16(jnp.asarray(x)))
+        theirs = x.astype(np.float16).astype(np.float32)  # numpy is RN too
+        np.testing.assert_array_equal(ours, theirs)
+
+
+# ---------------------------------------------------------------------------
+# Splits (eqs. 19-22)
+# ---------------------------------------------------------------------------
+
+class TestSplits:
+    @pytest.mark.parametrize("variant", ["halfhalf", "tf32tf32"])
+    @pytest.mark.parametrize("seed", range(3))
+    def test_reconstruction_near_f32_exact(self, variant, seed):
+        x = urand(RNG(seed), (1024,))
+        hi, lo = ref.split_ref(jnp.asarray(x), variant)
+        rec = np.asarray(hi, dtype=np.float64) + np.asarray(lo, dtype=np.float64) / 2048.0
+        err = np.abs(rec - x.astype(np.float64))
+        # hi+lo keeps >= 21 significand bits for urand(-1,1) inputs.
+        assert err.max() <= np.abs(x).max() * 2**-21
+
+    def test_scaling_rescues_residual_from_underflow(self):
+        # Values around 2^-13: unscaled residual would be f16-subnormal.
+        x = exp_rand(RNG(7), (2048,), -14, -12)
+        hi, lo = ref.split_ref(jnp.asarray(x), "halfhalf")
+        rec = np.asarray(hi, np.float64) + np.asarray(lo, np.float64) / 2048.0
+        rel = np.abs(rec - x.astype(np.float64)) / np.abs(x)
+        assert np.median(rel) < 2**-20
+
+    def test_halfhalf_dies_below_range_tf32_does_not(self):
+        x = exp_rand(RNG(8), (256,), -100, -40)
+        hi16, _ = ref.split_ref(jnp.asarray(x), "halfhalf")
+        assert np.all(np.asarray(hi16) == 0.0)  # Fig 11 Type 4
+        hi32, lo32 = ref.split_ref(jnp.asarray(x), "tf32tf32")
+        rec = np.asarray(hi32, np.float64) + np.asarray(lo32, np.float64) / 2048.0
+        rel = np.abs(rec - x.astype(np.float64)) / np.abs(x)
+        assert rel.max() < 2**-20
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel vs oracle
+# ---------------------------------------------------------------------------
+
+SHAPE_SWEEP = [
+    (16, 16, 16),
+    (32, 64, 32),
+    (64, 64, 64),
+    (48, 96, 24),   # non-power-of-two
+    (17, 23, 19),   # primes: forces whole-matrix tiles
+    (128, 32, 128),
+]
+
+
+class TestKernelVsOracle:
+    @pytest.mark.parametrize("variant", ["halfhalf", "tf32tf32", "fp32"])
+    @pytest.mark.parametrize("m,k,n", SHAPE_SWEEP)
+    def test_matches_reference(self, variant, m, k, n):
+        rng = RNG(m * 1000 + k * 10 + n)
+        a, b = urand(rng, (m, k)), urand(rng, (k, n))
+        got = np.asarray(ec_gemm.ec_gemm(jnp.asarray(a), jnp.asarray(b), variant=variant))
+        if variant == "fp32":
+            want = np.asarray(ref.sgemm_ref(jnp.asarray(a), jnp.asarray(b)))
+        else:
+            want = np.asarray(ref.ec_gemm_ref(jnp.asarray(a), jnp.asarray(b), variant))
+        # Tiling may reorder the contraction: allow a few ulps.
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    @pytest.mark.parametrize("bm,bn", [(16, 16), (32, 64), (128, 128)])
+    def test_tile_size_invariance(self, bm, bn):
+        rng = RNG(42)
+        a, b = urand(rng, (64, 64)), urand(rng, (64, 64))
+        c = np.asarray(ec_gemm.ec_gemm(jnp.asarray(a), jnp.asarray(b), bm=bm, bn=bn))
+        c_ref = np.asarray(ref.ec_gemm_ref(jnp.asarray(a), jnp.asarray(b)))
+        np.testing.assert_allclose(c, c_ref, rtol=1e-5, atol=1e-6)
+
+    def test_rejects_bad_shapes(self):
+        with pytest.raises(AssertionError):
+            ec_gemm.ec_gemm(jnp.zeros((4, 5)), jnp.zeros((6, 4)))
+
+    def test_rejects_unknown_variant(self):
+        with pytest.raises(ValueError):
+            ec_gemm.ec_gemm(jnp.zeros((4, 4)), jnp.zeros((4, 4)), variant="nope")
+
+
+# ---------------------------------------------------------------------------
+# The paper's accuracy claims, at the Pallas layer
+# ---------------------------------------------------------------------------
+
+class TestPaperClaims:
+    @pytest.mark.parametrize("variant", ["halfhalf", "tf32tf32"])
+    @pytest.mark.parametrize("k", [64, 256, 1024])
+    def test_matches_sgemm_accuracy(self, variant, k):
+        """Fig. 1 at the kernel level: residual(ec) ~ residual(SGEMM)."""
+        rng = RNG(k)
+        a, b = urand(rng, (16, k)), urand(rng, (k, 16))
+        f64 = ref.gemm_f64(a, b)
+        e_ec = ref.relative_residual(
+            f64, ec_gemm.ec_gemm(jnp.asarray(a), jnp.asarray(b), variant=variant)
+        )
+        e_f32 = ref.relative_residual(f64, ref.sgemm_ref(jnp.asarray(a), jnp.asarray(b)))
+        assert e_ec <= 2.0 * e_f32, f"{variant} k={k}: {e_ec} vs {e_f32}"
+
+    @pytest.mark.parametrize("k", [64, 256])
+    def test_beats_plain_f16_gemm(self, k):
+        rng = RNG(k + 1)
+        a, b = urand(rng, (16, k)), urand(rng, (k, 16))
+        f64 = ref.gemm_f64(a, b)
+        e_ec = ref.relative_residual(
+            f64, ec_gemm.ec_gemm(jnp.asarray(a), jnp.asarray(b))
+        )
+        plain = jnp.dot(
+            jnp.asarray(a).astype(jnp.float16),
+            jnp.asarray(b).astype(jnp.float16),
+            preferred_element_type=jnp.float32,
+        )
+        e_f16 = ref.relative_residual(f64, plain)
+        assert e_ec < e_f16 / 50, f"k={k}: ec {e_ec} vs f16 {e_f16}"
+
+    @pytest.mark.parametrize("k", [64, 256])
+    def test_bf16_triple_matches_sgemm_accuracy(self, k):
+        """The TPU-idiomatic bf16x3 variant also reaches FP32 accuracy."""
+        rng = RNG(k + 7)
+        a, b = urand(rng, (16, k)), urand(rng, (k, 16))
+        f64 = ref.gemm_f64(a, b)
+        got = ec_gemm.ec_gemm(jnp.asarray(a), jnp.asarray(b), variant="bf16x3")
+        want = ref.ec_gemm_ref_bf16x3(jnp.asarray(a), jnp.asarray(b))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+        e_ec = ref.relative_residual(f64, got)
+        e_f32 = ref.relative_residual(f64, ref.sgemm_ref(jnp.asarray(a), jnp.asarray(b)))
+        assert e_ec <= 2.0 * e_f32, f"bf16x3 k={k}: {e_ec} vs {e_f32}"
+
+    def test_bf16_triple_survives_wide_exponents(self):
+        """bf16 keeps FP32's exponent range: no Type-4 cliff."""
+        rng = RNG(77)
+        a = exp_rand(rng, (16, 64), -100, -36)
+        b = exp_rand(rng, (64, 16), -100, -36)
+        f64 = ref.gemm_f64(a, b)
+        e_ec = ref.relative_residual(
+            f64, ec_gemm.ec_gemm(jnp.asarray(a), jnp.asarray(b), variant="bf16x3")
+        )
+        e_f32 = ref.relative_residual(f64, ref.sgemm_ref(jnp.asarray(a), jnp.asarray(b)))
+        assert e_ec <= 3.0 * e_f32, f"{e_ec} vs {e_f32}"
+
+    def test_dropping_delta2_changes_nothing(self):
+        """Eq. (24) vs eq. (23): the dA.dB term is below the FP32 LSB."""
+        rng = RNG(99)
+        a, b = urand(rng, (16, 256)), urand(rng, (256, 16))
+        f64 = ref.gemm_f64(a, b)
+        e3 = ref.relative_residual(f64, ref.ec_gemm_ref(jnp.asarray(a), jnp.asarray(b)))
+        e4 = ref.relative_residual(f64, ref.ec_gemm_ref_4term(jnp.asarray(a), jnp.asarray(b)))
+        assert abs(e3 - e4) <= 0.05 * max(e3, e4)
+
+    @pytest.mark.parametrize(
+        "gen,variant,should_match",
+        [
+            ("type1", "halfhalf", True),
+            ("type3", "halfhalf", False),  # degraded range
+            ("type3", "tf32tf32", True),
+            ("type4", "tf32tf32", True),
+        ],
+    )
+    def test_exponent_range_types(self, gen, variant, should_match):
+        """Fig. 11 at the kernel level (mean over seeds — single draws at
+        this size have ~2x residual variance)."""
+        ranges = {"type1": (-15, 14), "type3": (-35, -16), "type4": (-100, -36)}
+        lo_e, hi_e = ranges[gen]
+        e_ec_sum, e_f32_sum = 0.0, 0.0
+        for seed in range(4):
+            rng = RNG(1100 + seed)
+            a = exp_rand(rng, (32, 64), lo_e, hi_e)
+            b = exp_rand(rng, (64, 32), lo_e, hi_e)
+            f64 = ref.gemm_f64(a, b)
+            e_ec_sum += ref.relative_residual(
+                f64, ec_gemm.ec_gemm(jnp.asarray(a), jnp.asarray(b), variant=variant)
+            )
+            e_f32_sum += ref.relative_residual(
+                f64, ref.sgemm_ref(jnp.asarray(a), jnp.asarray(b))
+            )
+        if should_match:
+            assert e_ec_sum <= 2.5 * e_f32_sum, f"{gen}/{variant}: {e_ec_sum} vs {e_f32_sum}"
+        else:
+            assert e_ec_sum > 5.0 * e_f32_sum, f"{gen}/{variant}: {e_ec_sum} vs {e_f32_sum}"

@@ -1,0 +1,54 @@
+"""L2 model-layer tests: shapes, composition, jit-ability."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+
+def urand(seed, shape):
+    return np.random.default_rng(seed).uniform(-1, 1, shape).astype(np.float32)
+
+
+class TestModels:
+    @pytest.mark.parametrize("variant", ["halfhalf", "tf32tf32"])
+    def test_ec_gemm_model_returns_tuple(self, variant):
+        a, b = urand(1, (32, 32)), urand(2, (32, 32))
+        out = model.ec_gemm_model(jnp.asarray(a), jnp.asarray(b), variant=variant)
+        assert isinstance(out, tuple) and len(out) == 1
+        assert out[0].shape == (32, 32)
+        assert out[0].dtype == jnp.float32
+
+    def test_fp32_model(self):
+        a, b = urand(3, (16, 64)), urand(4, (64, 16))
+        (c,) = model.fp32_gemm_model(jnp.asarray(a), jnp.asarray(b))
+        np.testing.assert_allclose(
+            np.asarray(c), np.asarray(ref.sgemm_ref(jnp.asarray(a), jnp.asarray(b))),
+            rtol=1e-6,
+        )
+
+    def test_models_are_jittable(self):
+        a, b = urand(5, (32, 32)), urand(6, (32, 32))
+        jitted = jax.jit(model.ec_gemm_model, static_argnames=("variant",))
+        (c,) = jitted(jnp.asarray(a), jnp.asarray(b))
+        (c_ref,) = model.ec_gemm_model(jnp.asarray(a), jnp.asarray(b))
+        np.testing.assert_allclose(np.asarray(c), np.asarray(c_ref), rtol=1e-6, atol=1e-7)
+
+    def test_chain_composes_with_fp32_accuracy(self):
+        """The MLP-shaped chain stays at FP32-GEMM accuracy end to end."""
+        a = urand(7, (16, 64))
+        w1 = urand(8, (64, 64))
+        w2 = urand(9, (64, 16))
+        (c,) = model.ec_gemm_chain(jnp.asarray(a), jnp.asarray(w1), jnp.asarray(w2))
+        # FP32 reference of the same graph.
+        h = np.asarray(ref.sgemm_ref(jnp.asarray(a), jnp.asarray(w1)))
+        h = np.where(h > 0, h, 0.01 * h).astype(np.float32)
+        want = np.asarray(ref.sgemm_ref(jnp.asarray(h), jnp.asarray(w2)))
+        got = np.asarray(c)
+        denom = np.linalg.norm(want.astype(np.float64))
+        rel = np.linalg.norm(got.astype(np.float64) - want.astype(np.float64)) / denom
+        assert rel < 1e-6, rel

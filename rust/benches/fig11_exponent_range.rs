@@ -1,0 +1,17 @@
+//! Figure 11 — effect of the input exponent range: Types 1–4 built from
+//! exp_rand (eq. 25) combinations.
+//!
+//! Paper shape: cutlass_tf32tf32 == cublas_simt in all four types;
+//! cutlass_halfhalf matches in Type 1, degrades in Types 2–3, and cannot
+//! run Type 4 (hi underflows to zero ⇒ residual ≈ 1).
+//!
+//! Run: `cargo bench --bench fig11_exponent_range`
+
+use tcec::experiments;
+
+fn main() {
+    println!("== Figure 11: exponent-range Types 1-4 (exp_rand combos), n=128 ==\n");
+    experiments::fig11(128, 8).print();
+    println!("\nType1: both exp_rand(-15,14)   Type2: exp_rand(-15,14) x exp_rand(-100,-35)");
+    println!("Type3: both exp_rand(-35,-15)  Type4: both exp_rand(-100,-35)");
+}

@@ -1,0 +1,15 @@
+//! Figures 12–13 — real-world exponent patterns: STARS-H-like generators
+//! (randtlr / spatial / cauchy) times urand(-1,1) or exp_rand(-15,0).
+//!
+//! Paper shape: cutlass_halfhalf and cutlass_tf32tf32 match cublas_simt on
+//! every pattern (differences are summation-order noise only).
+//!
+//! Run: `cargo bench --bench fig13_starsh`
+
+use tcec::experiments;
+
+fn main() {
+    println!("== Figure 13: STARS-H matrix patterns, n=128 ==\n");
+    experiments::fig13(128, 8).print();
+    println!("\nExpected: all three columns at the same error level per row.");
+}

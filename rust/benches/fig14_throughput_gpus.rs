@@ -1,0 +1,39 @@
+//! Figure 14 — throughput on A100 / RTX A6000 / RTX 3090 (projected), plus
+//! Table 5 (specs) and Table 6 (summary).
+//!
+//! Paper shape: on A100 both corrected kernels beat cuBLAS SGEMM at every
+//! size; on GA102 boards halfhalf still wins but tf32tf32 loses in some
+//! cases (its peak/3 ceiling sits below the dual-issue FP32 peak).
+//!
+//! Run: `cargo bench --bench fig14_throughput_gpus`
+
+use tcec::bench_util::Table;
+use tcec::experiments;
+use tcec::perfmodel::ALL_GPUS;
+
+fn main() {
+    println!("== Table 5: GPU specifications ==\n");
+    let mut t = Table::new(&["gpu", "FP16-TC TF/s", "TF32-TC TF/s", "FP32 TF/s", "BW GB/s", "L1 KB/SM", "L2 MB"]);
+    for g in &ALL_GPUS {
+        t.row(&[
+            g.name.to_string(),
+            format!("{}", g.fp16_tc_tflops),
+            format!("{}", g.tf32_tc_tflops),
+            format!("{}", g.fp32_tflops),
+            format!("{}", g.mem_bw_gbs),
+            format!("{}", g.l1_kib_per_sm),
+            format!("{}", g.l2_mib),
+        ]);
+    }
+    t.print();
+
+    let sizes = [256, 512, 1024, 2048, 4096, 8192, 16384];
+    for gpu in &ALL_GPUS {
+        println!("\n== Figure 14 ({}): projected TFlop/s (model, DESIGN.md §2) ==\n", gpu.name);
+        experiments::fig14(gpu, &sizes).print();
+    }
+
+    println!("\n== Table 6: summary (peaks over size sweep) ==\n");
+    experiments::table6().print();
+    println!("\npaper peaks on A100: halfhalf 51 TFlop/s @121 GF/W, tf32tf32 33 @80.9, simt @67.0");
+}

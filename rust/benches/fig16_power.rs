@@ -1,0 +1,33 @@
+//! Figure 16 — power consumption per GEMM on the three GPUs (energy model,
+//! DESIGN.md §2), plus the paper's peak GFlops/W comparison.
+//!
+//! Paper shape: on A100 both corrected kernels need less energy per GEMM
+//! than cuBLAS SGEMM at every size (peaks 121 / 80.9 vs 67.0 GFlops/W); on
+//! GA102 boards halfhalf still wins everywhere, tf32tf32 only sometimes.
+//!
+//! Run: `cargo bench --bench fig16_power`
+
+use tcec::bench_util::Table;
+use tcec::experiments;
+use tcec::gemm::Method;
+use tcec::perfmodel::{peak_gflops_per_watt, ALL_GPUS};
+
+fn main() {
+    let sizes = [512, 1024, 2048, 4096, 8192, 16384];
+    for gpu in &ALL_GPUS {
+        println!("== Figure 16 ({}): energy per GEMM / efficiency (model) ==\n", gpu.name);
+        experiments::fig16(gpu, &sizes).print();
+        println!();
+    }
+    println!("== peak GFlops/W (paper A100: 121 / 80.9 / 67.0) ==\n");
+    let mut t = Table::new(&["gpu", "cutlass_halfhalf", "cutlass_tf32tf32", "cublas_simt"]);
+    for gpu in &ALL_GPUS {
+        t.row(&[
+            gpu.name.to_string(),
+            format!("{:.1}", peak_gflops_per_watt(gpu, Method::OursHalfHalf)),
+            format!("{:.1}", peak_gflops_per_watt(gpu, Method::OursTf32)),
+            format!("{:.1}", peak_gflops_per_watt(gpu, Method::Fp32Simt)),
+        ]);
+    }
+    t.print();
+}

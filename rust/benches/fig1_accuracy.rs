@@ -1,0 +1,20 @@
+//! Figure 1 — accuracy of A(16×k)·B(k×16), urand(-1,1), vs k.
+//!
+//! Paper shape to reproduce: cublas_fp16tc worst and degrading with k;
+//! markidis better but converging back to the TC line at large k (RZ
+//! accumulation); feng ≈ markidis; cutlass_halfhalf == cublas_simt at
+//! every k.
+//!
+//! Run: `cargo bench --bench fig1_accuracy`
+
+use tcec::experiments;
+
+fn main() {
+    println!("== Figure 1: relative residual (eq. 7) vs k, urand(-1,1), 16xk * kx16 ==");
+    println!("(bit-exact simulation; 8 seeds averaged — paper protocol)\n");
+    let ks: Vec<usize> = (4..=13).map(|p| 1usize << p).collect();
+    let t = experiments::fig1(&ks, 8);
+    t.print();
+    println!("\nExpected shape: halfhalf tracks cublas_simt; markidis/feng sit between");
+    println!("simt and fp16tc and converge toward fp16tc as k grows.");
+}

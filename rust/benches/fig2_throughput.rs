@@ -1,0 +1,53 @@
+//! Figure 2 — headline throughput comparison on the A100: our two methods
+//! vs cuBLAS SGEMM vs the FP32 theoretical peak (19.5 TFlop/s).
+//!
+//! GPU TFlop/s are *projections* from the calibrated performance model
+//! (DESIGN.md §2 — no GPU on this testbed); the bench also reports the
+//! measured CPU wall-clock throughput of the real artifact/simulator hot
+//! path so the projection is never mistaken for a measurement.
+//!
+//! Run: `cargo bench --bench fig2_throughput`
+
+use tcec::bench_util::Table;
+use tcec::experiments;
+use tcec::gemm::{Method, TileConfig};
+use tcec::perfmodel::{projected_tflops, A100};
+
+fn main() {
+    println!("== Figure 2: A100 projected TFlop/s vs matrix size ==\n");
+    let sizes = [256, 512, 1024, 2048, 4096, 8192, 16384];
+    let mut t = Table::new(&[
+        "n",
+        "cutlass_halfhalf",
+        "cutlass_tf32tf32",
+        "cublas_simt",
+        "FP32 peak",
+    ]);
+    for n in sizes {
+        t.row(&[
+            n.to_string(),
+            format!("{:.1}", projected_tflops(&A100, Method::OursHalfHalf, n)),
+            format!("{:.1}", projected_tflops(&A100, Method::OursTf32, n)),
+            format!("{:.1}", projected_tflops(&A100, Method::Fp32Simt, n)),
+            format!("{:.1}", A100.fp32_tflops),
+        ]);
+    }
+    t.print();
+    println!("\npaper headline: halfhalf 51, tf32tf32 33, both > 19.5 FP32 peak");
+    println!(
+        "related work (Ozaki scheme on TC, FP32 accuracy): {:.1} TFlop/s projected — \
+         slower than SGEMM, as the paper states",
+        tcec::gemm::ozaki::projected_tflops_fp32(&A100, 4096)
+    );
+
+    println!("\n-- measured CPU wall-clock of the bit-exact simulator (not a GPU number) --");
+    let cfg = TileConfig::default();
+    let mut t2 = Table::new(&["method", "n", "sim GFlop/s (CPU)"]);
+    for m in [Method::OursHalfHalf, Method::Fp32Simt] {
+        for n in [128usize, 256] {
+            let g = experiments::measured_sim_gflops(m, n, &cfg);
+            t2.row(&[m.name().to_string(), n.to_string(), format!("{g:.3}")]);
+        }
+    }
+    t2.print();
+}

@@ -1,0 +1,18 @@
+//! Figure 5 — the smoking gun: Markidis' correction run on an emulated
+//! `mma_rn` device (25-bit accumulator, round-to-nearest) vs `mma_rz`
+//! (= real Tensor Core).
+//!
+//! Paper shape: markidis+mma_rn == cublas_simt exactly; markidis+mma_rz ==
+//! markidis-on-TC. Conclusion: the RZ after every accumulator add is the
+//! accuracy killer, motivating the zero-C/outside-accumulate fix (Fig. 6).
+//!
+//! Run: `cargo bench --bench fig5_rounding_mode`
+
+use tcec::experiments;
+
+fn main() {
+    println!("== Figure 5: Markidis correction under mma_rn vs mma_rz ==\n");
+    let ks: Vec<usize> = (4..=13).map(|p| 1usize << p).collect();
+    experiments::fig5(&ks, 8).print();
+    println!("\nExpected: mma_rn column == cublas_simt column; mma_rz column above both.");
+}

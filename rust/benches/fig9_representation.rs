@@ -1,0 +1,21 @@
+//! Figure 9 — representation accuracy & exponent range of FP32 / FP16 /
+//! TF32 / halfhalf / tf32tf32 / Markidis' halfhalf.
+//!
+//! Paper shape: the split schemes sit on the FP32 error floor in-range;
+//! Markidis' floor decays from e ≈ -2 down (unscaled residual underflow);
+//! halfhalf holds to e ≈ -15, degrades to -35, dead below; tf32tf32 covers
+//! (nearly) the whole FP32 exponent range.
+//!
+//! Run: `cargo bench --bench fig9_representation`
+
+use tcec::experiments;
+
+fn main() {
+    println!("== Figure 9: mean relative representation error vs exponent ==\n");
+    let exps: Vec<i32> = vec![
+        -140, -126, -120, -100, -80, -60, -45, -40, -35, -30, -25, -20, -15, -10, -5, -2, 0,
+        5, 10, 14, 15, 16, 20, 40, 80, 120, 127,
+    ];
+    experiments::fig9(&exps, 20_000).print();
+    println!("\n(1.0 ≈ the scheme cannot represent the range at all; FP16 > ~2^15 overflows to inf)");
+}

@@ -1,0 +1,108 @@
+//! §Perf hot-path bench: measured CPU wall-clock of (a) the bit-exact
+//! simulated GEMM backends, (b) the PJRT artifact execution path, and
+//! (c) the coordinator request loop. These are the numbers the performance
+//! pass in EXPERIMENTS.md §Perf optimizes — real measurements, not GPU
+//! projections.
+//!
+//! Run: `cargo bench --bench hotpath`
+
+use std::sync::Arc;
+use tcec::bench_util::{bench, Table};
+use tcec::coordinator::{GemmService, Policy, ServiceConfig, SimExecutor};
+use tcec::gemm::{Method, TileConfig};
+use tcec::matgen::urand;
+use tcec::runtime::{ArtifactRegistry, PjrtHandle};
+
+fn main() {
+    let cfg = TileConfig::default();
+
+    println!("== simulated GEMM backends (CPU wall-clock) ==\n");
+    let mut t = Table::new(&["method", "n", "median ms", "sim MFlop/s"]);
+    for method in [
+        Method::Fp32Simt,
+        Method::Fp16Tc,
+        Method::Markidis,
+        Method::OursHalfHalf,
+        Method::OursTf32,
+    ] {
+        for n in [64usize, 128] {
+            let a = urand(n, n, -1.0, 1.0, 1);
+            let b = urand(n, n, -1.0, 1.0, 2);
+            let s = bench(
+                || {
+                    std::hint::black_box(method.run(&a, &b, &cfg));
+                },
+                1,
+                3,
+                0.3,
+            );
+            let mflops = 2.0 * (n as f64).powi(3) / s.median_s / 1e6;
+            t.row(&[
+                method.name().to_string(),
+                n.to_string(),
+                format!("{:.2}", s.median_s * 1e3),
+                format!("{mflops:.1}"),
+            ]);
+        }
+    }
+    t.print();
+
+    println!("\n== PJRT artifact execution (needs `make artifacts`) ==\n");
+    let handle = PjrtHandle::spawn();
+    match ArtifactRegistry::scan("artifacts", handle.clone()) {
+        Ok(reg) if !reg.names().is_empty() => {
+            let mut t = Table::new(&["artifact", "median us", "GFlop/s"]);
+            for name in ["ec_gemm_halfhalf_128x128x128.hlo.txt", "ec_gemm_fp32_128x128x128.hlo.txt"] {
+                if !reg.has(name) {
+                    continue;
+                }
+                reg.ensure_loaded(name).unwrap();
+                let a = urand(128, 128, -1.0, 1.0, 3);
+                let b = urand(128, 128, -1.0, 1.0, 4);
+                let s = bench(
+                    || {
+                        std::hint::black_box(reg.handle().execute(name, &a, &b).unwrap());
+                    },
+                    3,
+                    10,
+                    0.5,
+                );
+                let gflops = 2.0 * 128f64.powi(3) / s.median_s / 1e9;
+                t.row(&[
+                    name.to_string(),
+                    format!("{:.1}", s.median_s * 1e6),
+                    format!("{gflops:.2}"),
+                ]);
+            }
+            t.print();
+        }
+        _ => println!("(artifacts/ empty — skipped)"),
+    }
+    handle.shutdown();
+
+    println!("\n== coordinator request loop (sim executor, 64x64, batched) ==\n");
+    let svc = GemmService::start(
+        Arc::new(SimExecutor::new()),
+        ServiceConfig { workers: 2, max_batch: 8, ..ServiceConfig::default() },
+    );
+    let n_req = 64;
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = (0..n_req)
+        .map(|i| {
+            svc.submit(
+                urand(64, 64, -1.0, 1.0, i),
+                urand(64, 64, -1.0, 1.0, i + 999),
+                Policy::Fp32Accuracy,
+            )
+            .1
+        })
+        .collect();
+    for rx in rxs {
+        rx.recv().unwrap();
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let snap = svc.metrics().snapshot();
+    println!("{n_req} requests in {dt:.3}s = {:.1} req/s, mean batch {:.2}, mean latency {:?}",
+        n_req as f64 / dt, snap.mean_batch_size, snap.mean_latency);
+    svc.shutdown();
+}

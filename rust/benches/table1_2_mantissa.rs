@@ -1,0 +1,20 @@
+//! Tables 1–2 — mantissa length kept by (v16, Δv16) under RN and RZ:
+//! Monte-Carlo over the bit-exact splits vs the paper's closed forms.
+//!
+//! Paper values: E[len] = 22.75 (RN); Table 2's rows sum to 22.25 (the
+//! prose rounds to 22.5 — see EXPERIMENTS.md). The Fig. 4 control
+//! (truncate n LSBs) expectation is printed from the closed form.
+//!
+//! Run: `cargo bench --bench table1_2_mantissa`
+
+use tcec::analysis::trunc_lsb_expected_len;
+use tcec::experiments;
+
+fn main() {
+    println!("== Tables 1-2: kept-mantissa-length distribution (1e6 samples) ==\n");
+    experiments::table1_2(1_000_000).print();
+    println!("\n-- LSB-truncation control (Fig. 4) closed form --");
+    for n in 0..4 {
+        println!("truncate last {n} bit(s): E[len] = {}", trunc_lsb_expected_len(n));
+    }
+}

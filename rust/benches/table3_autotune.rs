@@ -1,0 +1,38 @@
+//! Table 3 — the CUTLASS template-parameter grid search: 3456 combinations,
+//! filtered by the paper's three rules, then ranked for a target size.
+//!
+//! Paper: 3456 → 202 (halfhalf) / 200 (tf32tf32) survivors. Our filter
+//! census reproduces the order of magnitude; the exact count differs
+//! because the compile-feasibility rule is replaced by explicit
+//! smem/occupancy limits (DESIGN.md §2).
+//!
+//! Run: `cargo bench --bench table3_autotune`
+
+use tcec::autotune;
+use tcec::bench_util::Table;
+use tcec::experiments;
+use tcec::gemm::{Method, OursBackend};
+use tcec::perfmodel::A100;
+
+fn main() {
+    println!("== Table 3: filter census (A100; accuracy probe 16x16x16) ==\n");
+    experiments::table3(&A100, 16).print();
+
+    println!("\n== top-10 configs for matmul-(1024,1024,1024), halfhalf ==\n");
+    let be = OursBackend::halfhalf();
+    let best = autotune::autotune(&A100, Method::OursHalfHalf, &be, 1024, 16, 10);
+    let mut t = Table::new(&["bm", "bn", "bk", "wm", "wn", "wk", "stages", "score"]);
+    for (c, s) in best {
+        t.row(&[
+            c.bm.to_string(),
+            c.bn.to_string(),
+            c.bk.to_string(),
+            c.wm.to_string(),
+            c.wn.to_string(),
+            c.wk.to_string(),
+            c.stages.to_string(),
+            format!("{s:.2}"),
+        ]);
+    }
+    t.print();
+}

@@ -1,0 +1,124 @@
+//! Probabilistic error-growth model — the quantitative version of the
+//! paper's Fig. 1/Fig. 5 argument (cf. Blanchard et al., "Mixed Precision
+//! Block FMA: Error Analysis", which the paper builds on).
+//!
+//! For a length-`k` inner product of O(1) i.i.d. terms:
+//! * **RN accumulation** (FP32 SIMT, or the paper's fixed kernel): rounding
+//!   errors are zero-mean ⇒ they random-walk, residual ≈ c·√k·u with
+//!   u = 2^-24.
+//! * **RZ accumulation** (inside the Tensor Core): every rounding is biased
+//!   toward zero ⇒ errors accumulate *coherently*, residual ≈ c'·k·u_acc
+//!   with u_acc = 2^-25 (the 25-bit accumulator).
+//!
+//! The crossover explains Fig. 1 exactly: Markidis' corrected mantissa is
+//! fine, but its linear RZ term overtakes the √k RN floor as k grows. The
+//! tests fit the growth exponent of the measured residuals and check RN
+//! paths sit near 0.5 and RZ paths near 1.0.
+
+/// FP32 unit roundoff.
+pub const U_FP32: f64 = 1.0 / (1u64 << 24) as f64;
+/// Tensor-Core accumulator unit roundoff (25-bit significand).
+pub const U_TC_ACC: f64 = 1.0 / (1u64 << 25) as f64;
+
+/// Predicted relative residual of an RN-accumulated FP32 inner product of
+/// length k over urand(-1,1) data. The constant is the standard
+/// random-walk factor for uniform data (≈ 0.5/√3 per step, empirically
+/// ≈ 0.4 end to end).
+pub fn predicted_rn(k: usize) -> f64 {
+    0.4 * (k as f64).sqrt() * U_FP32
+}
+
+/// Predicted relative residual of an RZ-accumulated Tensor-Core chain:
+/// each add truncates toward zero, losing u_acc/2 in expectation, and the
+/// losses share a sign.
+pub fn predicted_rz(k: usize) -> f64 {
+    0.5 * k as f64 * U_TC_ACC
+}
+
+/// Least-squares slope of log(residual) vs log(k) — the growth exponent
+/// (0.5 = random walk, 1.0 = coherent accumulation).
+pub fn fit_growth_exponent(ks: &[usize], residuals: &[f64]) -> f64 {
+    assert_eq!(ks.len(), residuals.len());
+    assert!(ks.len() >= 2);
+    let xs: Vec<f64> = ks.iter().map(|&k| (k as f64).ln()).collect();
+    let ys: Vec<f64> = residuals.iter().map(|&r| r.max(1e-300).ln()).collect();
+    let n = xs.len() as f64;
+    let sx: f64 = xs.iter().sum();
+    let sy: f64 = ys.iter().sum();
+    let sxx: f64 = xs.iter().map(|x| x * x).sum();
+    let sxy: f64 = xs.iter().zip(&ys).map(|(x, y)| x * y).sum();
+    (n * sxy - sx * sy) / (n * sxx - sx * sx)
+}
+
+/// Predicted k at which an RZ-accumulated corrected method crosses above
+/// the RN (FP32) floor — i.e. where Markidis stops being "accurate enough".
+pub fn rz_rn_crossover_k() -> f64 {
+    // 0.5 k u_acc = 0.4 sqrt(k) u  =>  sqrt(k) = 0.8 u / u_acc  => tiny:
+    // the RZ term dominates almost immediately; the interesting quantity
+    // is the RATIO at a given k.
+    let r = 0.8 * U_FP32 / U_TC_ACC;
+    r * r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::mean_residual;
+    use crate::gemm::{Method, TileConfig};
+    use crate::matgen::Workload;
+
+    fn residual_series(method: Method, ks: &[usize]) -> Vec<f64> {
+        let w = Workload::Urand { lo: -1.0, hi: 1.0 };
+        let cfg = TileConfig::default();
+        ks.iter().map(|&k| mean_residual(method, w, w, 16, 16, k, 4, &cfg)).collect()
+    }
+
+    #[test]
+    fn simt_grows_like_sqrt_k() {
+        let ks = [256, 512, 1024, 2048, 4096];
+        let rs = residual_series(Method::Fp32Simt, &ks);
+        let slope = fit_growth_exponent(&ks, &rs);
+        assert!((0.3..0.75).contains(&slope), "RN slope {slope} (expected ~0.5)");
+    }
+
+    #[test]
+    fn markidis_grows_like_k() {
+        let ks = [256, 512, 1024, 2048, 4096];
+        let rs = residual_series(Method::Markidis, &ks);
+        let slope = fit_growth_exponent(&ks, &rs);
+        assert!((0.8..1.2).contains(&slope), "RZ slope {slope} (expected ~1.0)");
+    }
+
+    #[test]
+    fn ours_inherits_the_rn_exponent() {
+        // The whole point of the RZ-avoidance: the corrected kernel's
+        // growth exponent matches the SIMT one, not Markidis'.
+        let ks = [256, 512, 1024, 2048, 4096];
+        let rs = residual_series(Method::OursHalfHalf, &ks);
+        let slope = fit_growth_exponent(&ks, &rs);
+        assert!(slope < 0.8, "ours slope {slope} (must stay sub-linear)");
+    }
+
+    #[test]
+    fn predictions_within_order_of_magnitude() {
+        let w = Workload::Urand { lo: -1.0, hi: 1.0 };
+        let cfg = TileConfig::default();
+        for k in [512usize, 2048] {
+            let simt = mean_residual(Method::Fp32Simt, w, w, 16, 16, k, 4, &cfg);
+            let markidis = mean_residual(Method::Markidis, w, w, 16, 16, k, 4, &cfg);
+            let p_rn = predicted_rn(k);
+            let p_rz = predicted_rz(k);
+            assert!(simt / p_rn < 5.0 && p_rn / simt < 5.0, "k={k} simt {simt} vs {p_rn}");
+            assert!(markidis / p_rz < 5.0 && p_rz / markidis < 5.0, "k={k} markidis {markidis} vs {p_rz}");
+        }
+    }
+
+    #[test]
+    fn fit_recovers_known_slopes() {
+        let ks = [16usize, 64, 256, 1024];
+        let lin: Vec<f64> = ks.iter().map(|&k| 3.0 * k as f64).collect();
+        let sqrt: Vec<f64> = ks.iter().map(|&k| 3.0 * (k as f64).sqrt()).collect();
+        assert!((fit_growth_exponent(&ks, &lin) - 1.0).abs() < 1e-9);
+        assert!((fit_growth_exponent(&ks, &sqrt) - 0.5).abs() < 1e-9);
+    }
+}

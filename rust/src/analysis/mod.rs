@@ -1,0 +1,21 @@
+//! The paper's theory, made executable: mantissa-length expectations
+//! (Tables 1–2), residual underflow probabilities (eqs. 13–17, Fig. 8) and
+//! representation-accuracy sweeps (Fig. 9). Each closed form is paired with
+//! a bit-exact experimental measurement so theory-vs-experiment is a test,
+//! not a claim.
+
+pub mod error_bound;
+pub mod mantissa_expectation;
+pub mod representation;
+pub mod underflow;
+
+pub use error_bound::{
+    fit_growth_exponent, predicted_rn, predicted_rz, U_FP32, U_TC_ACC,
+};
+
+pub use mantissa_expectation::{
+    expected_len, length_distribution, trunc_lsb_expected_len, SplitKind, THEORY_RN, THEORY_RZ,
+    THEORY_TRUNC_LSB,
+};
+pub use representation::{mean_rel_error, Repr};
+pub use underflow::{measure, measure_scaled, p_l0, p_underflow, p_underflow_or_gradual};

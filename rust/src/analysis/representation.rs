@@ -1,0 +1,143 @@
+//! Representation accuracy vs exponent (paper Fig. 9).
+//!
+//! For each representation scheme, measure the mean relative error of
+//! representing random values `v = ±m × 2^e` (m uniform in [1,2), drawn in
+//! f64) as a function of `e`. This regenerates Fig. 9's comparison of FP32,
+//! FP16, TF32, halfhalf (ours), tf32tf32 (ours) and Markidis' halfhalf:
+//! the error floors (~2^-24 for the split schemes, ~2^-11 for bare FP16 /
+//! TF32) and the exponent ranges where each scheme degrades or dies.
+
+use crate::fp::{
+    round_to_format, split_markidis, split_ootomo, split_ootomo_tf32, Format, Rounding,
+};
+use crate::matgen::Rng;
+
+/// The representation schemes compared in Fig. 9.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Repr {
+    Fp32,
+    Fp16,
+    Tf32,
+    /// This paper's scaled FP16 pair (eqs. 19–22).
+    HalfHalf,
+    /// This paper's scaled TF32 pair.
+    Tf32Tf32,
+    /// Markidis' unscaled FP16 pair (eqs. 2–5).
+    MarkidisHalfHalf,
+}
+
+impl Repr {
+    pub const ALL: [Repr; 6] =
+        [Repr::Fp32, Repr::Fp16, Repr::Tf32, Repr::HalfHalf, Repr::Tf32Tf32, Repr::MarkidisHalfHalf];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Repr::Fp32 => "FP32",
+            Repr::Fp16 => "FP16",
+            Repr::Tf32 => "TF32",
+            Repr::HalfHalf => "halfhalf",
+            Repr::Tf32Tf32 => "tf32tf32",
+            Repr::MarkidisHalfHalf => "markidis_halfhalf",
+        }
+    }
+
+    /// Represent `v` (an f64 "true" value) in this scheme and return the
+    /// representable value, exactly.
+    pub fn represent(&self, v: f64) -> f64 {
+        match self {
+            Repr::Fp32 => round_to_format(v, Format::F32, Rounding::RN),
+            Repr::Fp16 => round_to_format(v, Format::F16, Rounding::RN),
+            Repr::Tf32 => round_to_format(v, Format::TF32, Rounding::RNA),
+            Repr::HalfHalf => {
+                let v32 = round_to_format(v, Format::F32, Rounding::RN) as f32;
+                split_ootomo(v32).reconstruct()
+            }
+            Repr::Tf32Tf32 => {
+                let v32 = round_to_format(v, Format::F32, Rounding::RN) as f32;
+                split_ootomo_tf32(v32).reconstruct()
+            }
+            Repr::MarkidisHalfHalf => {
+                let v32 = round_to_format(v, Format::F32, Rounding::RN) as f32;
+                split_markidis(v32).reconstruct()
+            }
+        }
+    }
+}
+
+/// Mean relative representation error of `repr` at exponent `e`.
+/// Returns 1.0-level values where the scheme cannot represent the range at
+/// all (hi underflows to zero ⇒ relative error ≈ 1).
+pub fn mean_rel_error(repr: Repr, e: i32, samples: usize, seed: u64) -> f64 {
+    let mut rng = Rng::new(seed);
+    let mut total = 0.0;
+    for _ in 0..samples {
+        let m = rng.uniform_in(1.0, 2.0);
+        let v = rng.sign() * m * crate::fp::exp2i(e);
+        let r = repr.represent(v);
+        total += ((v - r) / v).abs();
+    }
+    total / samples as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const N: usize = 4000;
+
+    #[test]
+    fn error_floors_in_comfortable_range() {
+        // At e = 0: FP32 ~2^-25, FP16/TF32 ~2^-12, split schemes ~<=2^-24.
+        let f32e = mean_rel_error(Repr::Fp32, 0, N, 1);
+        let f16e = mean_rel_error(Repr::Fp16, 0, N, 1);
+        let tf32e = mean_rel_error(Repr::Tf32, 0, N, 1);
+        let hh = mean_rel_error(Repr::HalfHalf, 0, N, 1);
+        let tt = mean_rel_error(Repr::Tf32Tf32, 0, N, 1);
+        // Mean |err|/v for RN to 24 bits over m ∈ [1,2): ≈ 2^-25/1.44 ≈ 2.1e-8.
+        assert!(f32e < 5e-8 && f32e > 1e-9, "fp32 floor {f32e}");
+        assert!(f16e > 1e-4 && f16e < 5e-4);
+        assert!((tf32e / f16e - 1.0).abs() < 0.2, "tf32 {tf32e} vs f16 {f16e}");
+        // The split schemes sit at the FP32 floor.
+        assert!(hh < 3.0 * f32e, "halfhalf {hh} vs fp32 {f32e}");
+        assert!(tt < 3.0 * f32e, "tf32tf32 {tt} vs fp32 {f32e}");
+    }
+
+    #[test]
+    fn markidis_worse_than_ours_at_small_exponents() {
+        // Fig. 9: Markidis' halfhalf loses precision as e drops below ~-2
+        // (residual gradual underflow); ours holds to e ≈ -15.
+        let e = -8;
+        let ours = mean_rel_error(Repr::HalfHalf, e, N, 3);
+        let markidis = mean_rel_error(Repr::MarkidisHalfHalf, e, N, 3);
+        assert!(markidis > 3.0 * ours, "markidis {markidis} vs ours {ours}");
+    }
+
+    #[test]
+    fn halfhalf_range_cliffs() {
+        // In range: near-FP32. Degrading: −35 < e < −15. Dead: e < −39.
+        let good = mean_rel_error(Repr::HalfHalf, -14, N, 4);
+        let degraded = mean_rel_error(Repr::HalfHalf, -25, N, 4);
+        let dead = mean_rel_error(Repr::HalfHalf, -45, N, 4);
+        assert!(good < 1e-6, "good {good}");
+        assert!(degraded > 10.0 * good && degraded < 0.9, "degraded {degraded}");
+        assert!((dead - 1.0).abs() < 1e-9, "dead {dead}");
+    }
+
+    #[test]
+    fn tf32tf32_covers_full_f32_range() {
+        // Fig. 9 / Fig. 11 Type 4: tf32tf32 stays accurate where halfhalf died.
+        for e in [-45, -80, -120, 60, 120] {
+            let err = mean_rel_error(Repr::Tf32Tf32, e, N, 5);
+            assert!(err < 1e-6, "e={e}: {err}");
+        }
+    }
+
+    #[test]
+    fn fp16_range_limits() {
+        assert!((mean_rel_error(Repr::Fp16, 17, N, 6) - 1.0).abs() > 0.0); // overflow -> inf, rel err inf? clamp:
+        // e=17 overflows f16 (max 65504 ~ 2^16): representation error is
+        // infinite-ish; just check it is huge.
+        assert!(mean_rel_error(Repr::Fp16, 17, N, 6) > 0.5);
+        assert!((mean_rel_error(Repr::Fp16, -26, N, 6) - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,162 @@
+//! Underflow / gradual-underflow probability of the residual conversion
+//! (paper §"Reducing the underflow and gradual underflow probability",
+//! eqs. 13–17, Fig. 8).
+//!
+//! In `Δv ← toFP16(v − toFP16(v))` the residual's exponent sits
+//! `l0 + l_F16 + 1` binades below `e_v`, so for small-ish `e_v` the FP16
+//! conversion of the residual lands in the subnormal range (gradual
+//! underflow, losing correction bits) or flushes to zero (full underflow).
+//! This module provides the paper's closed forms and an experimental
+//! measurement using the bit-exact split, plus the verification that the
+//! ×2^11 scaling (eq. 18) eliminates the problem.
+
+use crate::fp::{exp2i, Half, Rounding};
+use crate::matgen::Rng;
+
+const L_F16: i32 = 10;
+const L_F32: i32 = 23;
+const B_F16: i32 = 15;
+
+/// `P(l0 = n)` — eq. (14): probability that the residual's leading 1 sits
+/// `n` zero-bits below m12, under Assumption 1.
+pub fn p_l0(n: i32) -> f64 {
+    let cap = L_F32 - L_F16; // 13
+    if n < 0 {
+        0.0
+    } else if n < cap {
+        exp2i(-(n + 1))
+    } else if n == cap {
+        exp2i(-cap)
+    } else {
+        0.0
+    }
+}
+
+/// `P_{u+gu}(e_v)` — eq. (15): probability of underflow *or* gradual
+/// underflow of the residual conversion, for a value with exponent `e_v`.
+pub fn p_underflow_or_gradual(e_v: i32) -> f64 {
+    let lower = (e_v - L_F16 + B_F16 - 2) + 1;
+    (lower..=L_F32 - L_F16).map(p_l0).sum()
+}
+
+/// `P_u(e_v)` — eq. (17): probability of full underflow only.
+pub fn p_underflow(e_v: i32) -> f64 {
+    let lower = (e_v + B_F16 - 2) + 1;
+    (lower..=L_F32 - L_F16).map(p_l0).sum()
+}
+
+/// Experimental counterpart measured with the bit-exact split (RZ in
+/// `toFP16`, matching the assumption under which eqs. 15/17 are derived).
+/// Returns `(P_u+gu, P_u)` estimated from `samples` draws at exponent `e_v`.
+pub fn measure(e_v: i32, samples: usize, seed: u64) -> (f64, f64) {
+    let mut rng = Rng::new(seed);
+    let mut n_ugu = 0u64;
+    let mut n_u = 0u64;
+    for _ in 0..samples {
+        let m = (rng.next_u64() & 0x7f_ffff) as u32;
+        let v = f32::from_bits(((e_v + 127) as u32) << 23 | m);
+        let hi = Half::from_f32(v, Rounding::RZ);
+        let resid = v as f64 - hi.to_f64();
+        if resid == 0.0 {
+            continue; // nothing to represent, no underflow event
+        }
+        let lo = Half::from_f64(resid, Rounding::RZ);
+        if lo.is_zero() {
+            n_u += 1;
+            n_ugu += 1;
+        } else if lo.is_subnormal() {
+            n_ugu += 1;
+        }
+    }
+    (n_ugu as f64 / samples as f64, n_u as f64 / samples as f64)
+}
+
+/// Same measurement with the paper's ×2^11 scaling (eq. 18): the residual is
+/// multiplied by 2^11 before conversion. Returns `(P_u+gu, P_u)` — which the
+/// paper's fix drives to ~0 for `e_v ≥ −4` (and shrinks everywhere).
+pub fn measure_scaled(e_v: i32, samples: usize, seed: u64) -> (f64, f64) {
+    let mut rng = Rng::new(seed);
+    let mut n_ugu = 0u64;
+    let mut n_u = 0u64;
+    for _ in 0..samples {
+        let m = (rng.next_u64() & 0x7f_ffff) as u32;
+        let v = f32::from_bits(((e_v + 127) as u32) << 23 | m);
+        let hi = Half::from_f32(v, Rounding::RZ);
+        let resid = (v as f64 - hi.to_f64()) * exp2i(crate::fp::SCALE_EXP);
+        if resid == 0.0 {
+            continue;
+        }
+        let lo = Half::from_f64(resid, Rounding::RZ);
+        if lo.is_zero() {
+            n_u += 1;
+            n_ugu += 1;
+        } else if lo.is_subnormal() {
+            n_ugu += 1;
+        }
+    }
+    (n_ugu as f64 / samples as f64, n_u as f64 / samples as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn p_l0_is_a_distribution() {
+        let total: f64 = (0..=13).map(p_l0).sum();
+        assert!((total - 1.0).abs() < 1e-12);
+        assert_eq!(p_l0(-1), 0.0);
+        assert_eq!(p_l0(0), 0.5);
+        assert_eq!(p_l0(13), exp2i(-13));
+        assert_eq!(p_l0(14), 0.0);
+    }
+
+    #[test]
+    fn closed_forms_sane() {
+        // At e_v = 0 gradual underflow already occurs with prob ~2^-4
+        // (the paper's "even if v is around 10^0" observation).
+        let p = p_underflow_or_gradual(0);
+        assert!((p - (exp2i(-4))).abs() < 1e-9, "P_u+gu(0) = {p}");
+        // Full underflow needs much smaller exponents.
+        assert_eq!(p_underflow(0), 0.0);
+        assert!(p_underflow(-1) > 0.0);
+        // Monotone: smaller exponent, higher probability; saturates at 1.
+        assert!(p_underflow_or_gradual(-10) > p_underflow_or_gradual(0));
+        assert!((p_underflow_or_gradual(-30) - 1.0).abs() < 1e-12);
+        assert!((p_underflow(-40) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn theory_matches_experiment() {
+        // Fig. 8: theory (eqs. 15/17) vs experiment across the exponent range.
+        for e_v in [-20, -12, -6, -3, 0, 3] {
+            let (exp_ugu, exp_u) = measure(e_v, 100_000, 7u64.wrapping_add(e_v as u64));
+            let th_ugu = p_underflow_or_gradual(e_v);
+            let th_u = p_underflow(e_v);
+            assert!(
+                (exp_ugu - th_ugu).abs() < 0.01,
+                "e_v={e_v}: measured u+gu {exp_ugu} vs theory {th_ugu}"
+            );
+            assert!(
+                (exp_u - th_u).abs() < 0.01,
+                "e_v={e_v}: measured u {exp_u} vs theory {th_u}"
+            );
+        }
+    }
+
+    #[test]
+    fn scaling_eliminates_underflow_in_normal_range() {
+        // Eq. 18's point: with ×2^11 the scaled residual's exponent is
+        // e_v − l0, so for e_v ≥ 0 (l0 ≤ 13 < e_v + 14) no (gradual)
+        // underflow remains at all.
+        for e_v in [0, 3, 8] {
+            let (ugu, u) = measure_scaled(e_v, 50_000, 11);
+            assert_eq!(u, 0.0, "e_v={e_v}");
+            assert_eq!(ugu, 0.0, "e_v={e_v}");
+        }
+        // And strictly reduces it deeper down.
+        let (unscaled, _) = measure(-10, 50_000, 13);
+        let (scaled, _) = measure_scaled(-10, 50_000, 13);
+        assert!(scaled < unscaled, "scaled {scaled} unscaled {unscaled}");
+    }
+}

@@ -1,0 +1,244 @@
+//! CUTLASS template-parameter autotuning (paper §"Parameter tuning of
+//! CUTLASS", Table 3).
+//!
+//! The paper grid-searches `bm, bn, bk ∈ {16,32,64,128}`, `wm, wn, wk ∈
+//! {16,32,64}` and `stages ∈ {3,4}` (3456 combinations) and filters with
+//! three rules: warp tiles must fit in the threadblock tile, the shared
+//! memory footprint must fit, and the measured residual must stay below
+//! 0.1. We reproduce the space, the filters (shared-memory limits from the
+//! target GPU, the residual check run on the bit-exact simulator) and the
+//! ranking, scoring surviving configs with the throughput projection plus a
+//! tile-quantization penalty for the given problem size.
+
+use crate::gemm::{gemm_f64, gemm_tiled, relative_residual, KernelBackend, TileConfig};
+use crate::matgen::urand;
+use crate::perfmodel::{projected_tflops, GpuSpec};
+
+/// Residual threshold of the paper's third filter rule.
+pub const ERROR_THRESHOLD: f64 = 0.1;
+
+/// Table 3's search space: 4³ × 3³ × 2 = 3456 combinations.
+pub fn search_space() -> Vec<TileConfig> {
+    let block = [16usize, 32, 64, 128];
+    let warp = [16usize, 32, 64];
+    let stages = [3usize, 4];
+    let mut out = Vec::with_capacity(3456);
+    for &bm in &block {
+        for &bn in &block {
+            for &bk in &block {
+                for &wm in &warp {
+                    for &wn in &warp {
+                        for &wk in &warp {
+                            for &st in &stages {
+                                out.push(TileConfig { bm, bn, bk, wm, wn, wk, stages: st });
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Why a config was rejected.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Reject {
+    /// A warp tile dimension exceeds its threadblock tile dimension.
+    WarpExceedsBlock,
+    /// Shared-memory footprint exceeds the GPU's per-block capacity.
+    SmemOverflow,
+    /// Too many warps per threadblock (>1024 threads).
+    TooManyWarps,
+    /// Residual above [`ERROR_THRESHOLD`] on the probe GEMM.
+    ErrorTooLarge,
+}
+
+/// Structural filters (rules 1–2 + occupancy); cheap, no simulation.
+pub fn structural_filter(cfg: &TileConfig, gpu: &GpuSpec, tf32: bool) -> Result<(), Reject> {
+    if cfg.wm > cfg.bm || cfg.wn > cfg.bn || cfg.wk > cfg.bk {
+        return Err(Reject::WarpExceedsBlock);
+    }
+    if cfg.warps() > 32 {
+        return Err(Reject::TooManyWarps);
+    }
+    let smem = if tf32 { cfg.smem_bytes_tf32() } else { cfg.smem_bytes_f16() };
+    if smem > gpu.smem_limit_bytes {
+        return Err(Reject::SmemOverflow);
+    }
+    Ok(())
+}
+
+/// Accuracy filter (rule 3): run the probe GEMM on the simulator.
+pub fn accuracy_filter(cfg: &TileConfig, backend: &dyn KernelBackend, probe: usize) -> Result<f64, Reject> {
+    let a = urand(probe, probe, -1.0, 1.0, 0x7ab1e3);
+    let b = urand(probe, probe, -1.0, 1.0, 0x7ab1e4);
+    let c = gemm_tiled(&a, &b, cfg, backend);
+    let r = gemm_f64(&a, &b);
+    let e = relative_residual(&r, &c);
+    if e > ERROR_THRESHOLD {
+        Err(Reject::ErrorTooLarge)
+    } else {
+        Ok(e)
+    }
+}
+
+/// Filtering outcome statistics (the paper reports 3456 → 202 / 200).
+#[derive(Debug, Default, Clone)]
+pub struct FilterStats {
+    pub total: usize,
+    pub warp_exceeds_block: usize,
+    pub smem_overflow: usize,
+    pub too_many_warps: usize,
+    pub error_too_large: usize,
+    pub survivors: usize,
+}
+
+/// Run the full filter pipeline. The accuracy probe runs only on configs
+/// that pass the structural rules (matching the paper's pipeline, where
+/// only compilable kernels are error-checked). `probe = 0` skips the
+/// accuracy rule (structural-only census).
+pub fn filter_space(
+    gpu: &GpuSpec,
+    tf32: bool,
+    backend: Option<&dyn KernelBackend>,
+    probe: usize,
+) -> (Vec<TileConfig>, FilterStats) {
+    let mut stats = FilterStats::default();
+    let mut ok = Vec::new();
+    for cfg in search_space() {
+        stats.total += 1;
+        match structural_filter(&cfg, gpu, tf32) {
+            Err(Reject::WarpExceedsBlock) => stats.warp_exceeds_block += 1,
+            Err(Reject::SmemOverflow) => stats.smem_overflow += 1,
+            Err(Reject::TooManyWarps) => stats.too_many_warps += 1,
+            Err(Reject::ErrorTooLarge) => unreachable!(),
+            Ok(()) => {
+                if let Some(be) = backend {
+                    match accuracy_filter(&cfg, be, probe) {
+                        Ok(_) => {
+                            stats.survivors += 1;
+                            ok.push(cfg);
+                        }
+                        Err(_) => stats.error_too_large += 1,
+                    }
+                } else {
+                    stats.survivors += 1;
+                    ok.push(cfg);
+                }
+            }
+        }
+    }
+    (ok, stats)
+}
+
+/// Tile-quantization efficiency: fraction of launched CTA work that is
+/// useful for an n×n problem (full tiles vs padded edges).
+pub fn quantization_efficiency(cfg: &TileConfig, n: usize) -> f64 {
+    let tiles_m = (n + cfg.bm - 1) / cfg.bm;
+    let tiles_n = (n + cfg.bn - 1) / cfg.bn;
+    let launched = (tiles_m * cfg.bm) as f64 * (tiles_n * cfg.bn) as f64;
+    (n * n) as f64 / launched
+}
+
+/// Score a surviving config for problem size `n` on `gpu`: projected
+/// saturation throughput × tile-quantization efficiency × a data-reuse
+/// factor × a mild pipeline bonus for more stages on large k.
+pub fn score(cfg: &TileConfig, gpu: &GpuSpec, method: crate::gemm::Method, n: usize) -> f64 {
+    let base = projected_tflops(gpu, method, n);
+    let stage_bonus = if n >= 1024 && cfg.stages == 4 { 1.03 } else { 1.0 };
+    // Larger bk amortizes the epilogue; tiny bk pays per-block overhead.
+    let bk_eff = (cfg.bk as f64 / (cfg.bk as f64 + 16.0)).sqrt();
+    // Data reuse: a CTA tile's flop/byte ratio is the harmonic mean of
+    // (bm, bn) — small tiles re-stream their panels and go memory-bound.
+    // Saturates once reuse clears the machine balance (~32 flop/B).
+    let hm = 2.0 / (1.0 / cfg.bm as f64 + 1.0 / cfg.bn as f64);
+    let reuse_eff = hm / (hm + 32.0);
+    base * quantization_efficiency(cfg, n) * stage_bonus * bk_eff * reuse_eff
+}
+
+/// Full autotune: filter, score, return the top `top` configs (descending).
+pub fn autotune(
+    gpu: &GpuSpec,
+    method: crate::gemm::Method,
+    backend: &dyn KernelBackend,
+    n: usize,
+    probe: usize,
+    top: usize,
+) -> Vec<(TileConfig, f64)> {
+    let tf32 = matches!(method, crate::gemm::Method::OursTf32 | crate::gemm::Method::Tf32Tc);
+    let (ok, _) = filter_space(gpu, tf32, Some(backend), probe);
+    let mut scored: Vec<(TileConfig, f64)> =
+        ok.into_iter().map(|c| (c, score(&c, gpu, method, n))).collect();
+    scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    scored.truncate(top);
+    scored
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::{Method, OursBackend};
+    use crate::perfmodel::A100;
+
+    #[test]
+    fn space_size_matches_table3() {
+        assert_eq!(search_space().len(), 3456);
+    }
+
+    #[test]
+    fn structural_filter_rules() {
+        let gpu = &A100;
+        // Warp > block rejected.
+        let bad = TileConfig { bm: 16, bn: 16, bk: 16, wm: 32, wn: 16, wk: 16, stages: 3 };
+        assert_eq!(structural_filter(&bad, gpu, false), Err(Reject::WarpExceedsBlock));
+        // Huge smem rejected for tf32 (4-byte elements) but the capacity
+        // rule must keep *some* large configs for f16.
+        let big = TileConfig { bm: 128, bn: 128, bk: 128, wm: 64, wn: 64, wk: 64, stages: 4 };
+        assert_eq!(structural_filter(&big, gpu, true), Err(Reject::SmemOverflow));
+        // A normal config passes.
+        let ok = TileConfig::default();
+        assert_eq!(structural_filter(&ok, gpu, false), Ok(()));
+    }
+
+    #[test]
+    fn census_reduces_space_like_paper() {
+        // The paper filters 3456 → ~200. Our structural census (without the
+        // accuracy probe) must land in the same order of magnitude.
+        let (ok, stats) = filter_space(&A100, false, None, 0);
+        assert_eq!(stats.total, 3456);
+        assert_eq!(ok.len(), stats.survivors);
+        assert!(
+            (100..=1200).contains(&ok.len()),
+            "{} survivors (paper: 202)",
+            ok.len()
+        );
+    }
+
+    #[test]
+    fn accuracy_filter_passes_good_config() {
+        let be = OursBackend::halfhalf();
+        let e = accuracy_filter(&TileConfig::default(), &be, 32).unwrap();
+        assert!(e < 1e-6);
+    }
+
+    #[test]
+    fn quantization_efficiency_bounds() {
+        let cfg = TileConfig::default(); // 64x64 tiles
+        assert_eq!(quantization_efficiency(&cfg, 128), 1.0);
+        let e = quantization_efficiency(&cfg, 65); // 2x2 tiles for 65x65
+        assert!(e < 0.3);
+    }
+
+    #[test]
+    fn autotune_prefers_aligned_tiles() {
+        let be = OursBackend::halfhalf();
+        let best = autotune(&A100, Method::OursHalfHalf, &be, 256, 16, 5);
+        assert!(!best.is_empty());
+        // Top config should have perfect quantization at n=256 and
+        // meaningful data reuse (not a 16-wide sliver).
+        let (cfg, _) = best[0];
+        assert_eq!(quantization_efficiency(&cfg, 256), 1.0);
+        assert!(cfg.bm >= 64 && cfg.bn >= 64, "reuse should favor big tiles: {cfg:?}");
+    }
+}

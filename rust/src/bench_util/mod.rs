@@ -1,0 +1,158 @@
+//! In-repo micro-benchmark harness (criterion is unavailable offline —
+//! DESIGN.md §2 toolchain substitutions). Provides warmup + repeated timing
+//! with robust statistics, and aligned table printing shared by every
+//! `harness = false` bench binary.
+
+use std::time::Instant;
+
+/// Timing statistics over repeated runs.
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub median_s: f64,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    pub iters: usize,
+}
+
+/// Benchmark `f`, returning robust statistics. Runs `warmup` unmeasured
+/// iterations, then measures until `min_iters` iterations *and*
+/// `min_time_s` seconds are both satisfied (capped at `max_iters`).
+pub fn bench<F: FnMut()>(mut f: F, warmup: usize, min_iters: usize, min_time_s: f64) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let max_iters = 10_000usize;
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while (samples.len() < min_iters || start.elapsed().as_secs_f64() < min_time_s)
+        && samples.len() < max_iters
+    {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    Stats {
+        median_s: samples[n / 2],
+        mean_s: samples.iter().sum::<f64>() / n as f64,
+        min_s: samples[0],
+        max_s: samples[n - 1],
+        iters: n,
+    }
+}
+
+/// Quick single-shot wall-clock of `f` in seconds.
+pub fn time_once<F: FnOnce()>(f: F) -> f64 {
+    let t0 = Instant::now();
+    f();
+    t0.elapsed().as_secs_f64()
+}
+
+/// Aligned text table writer for bench/report output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render with padded columns.
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::new();
+            for i in 0..ncols {
+                if i > 0 {
+                    line.push_str("  ");
+                }
+                let pad = widths[i] - cells[i].len();
+                line.push_str(&cells[i]);
+                line.push_str(&" ".repeat(pad));
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncols - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format a residual in scientific notation, or "exact"/"fail".
+pub fn sci(x: f64) -> String {
+    if x == 0.0 {
+        "0".into()
+    } else if !x.is_finite() {
+        "inf".into()
+    } else {
+        format!("{x:.2e}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_ordered_stats() {
+        let mut x = 0u64;
+        let s = bench(
+            || {
+                for i in 0..1000 {
+                    x = x.wrapping_add(i);
+                }
+            },
+            2,
+            5,
+            0.0,
+        );
+        assert!(s.iters >= 5);
+        assert!(s.min_s <= s.median_s && s.median_s <= s.max_s);
+        std::hint::black_box(x);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(&["a".into(), "1".into()]);
+        t.row(&["longer".into(), "22".into()]);
+        let r = t.render();
+        let lines: Vec<&str> = r.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("name"));
+        assert!(lines[3].starts_with("longer"));
+    }
+
+    #[test]
+    fn sci_formats() {
+        assert_eq!(sci(0.0), "0");
+        assert_eq!(sci(1.23e-7), "1.23e-7");
+        assert_eq!(sci(f64::INFINITY), "inf");
+    }
+}

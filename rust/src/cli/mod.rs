@@ -1,0 +1,86 @@
+//! Minimal CLI argument parser (clap is unavailable offline — DESIGN.md §2).
+//! Syntax: `tcec <command> [positional...] [--flag value | --switch]`.
+
+use std::collections::HashMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    pub positional: Vec<String>,
+    pub flags: HashMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                // `--flag value` unless the next token is another flag / absent.
+                let takes_value =
+                    it.peek().map(|n| !n.starts_with("--")).unwrap_or(false);
+                let v = if takes_value { it.next().unwrap() } else { "true".to_string() };
+                out.flags.insert(name.to_string(), v);
+            } else if out.command.is_none() {
+                out.command = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn str_flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn usize_flag(&self, name: &str, default: usize) -> usize {
+        self.flags.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_flag(&self, name: &str, default: u64) -> u64 {
+        self.flags.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn bool_flag(&self, name: &str) -> bool {
+        matches!(self.flags.get(name).map(|s| s.as_str()), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn command_and_positionals() {
+        let a = parse("gemm 16 32");
+        assert_eq!(a.command.as_deref(), Some("gemm"));
+        assert_eq!(a.positional, vec!["16", "32"]);
+    }
+
+    #[test]
+    fn flags_with_values_and_switches() {
+        let a = parse("serve --workers 4 --verbose --method cutlass_halfhalf");
+        assert_eq!(a.usize_flag("workers", 1), 4);
+        assert!(a.bool_flag("verbose"));
+        assert_eq!(a.str_flag("method"), Some("cutlass_halfhalf"));
+        assert_eq!(a.usize_flag("missing", 7), 7);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("x --a --b 3");
+        assert!(a.bool_flag("a"));
+        assert_eq!(a.usize_flag("b", 0), 3);
+    }
+}

@@ -1,0 +1,169 @@
+//! Dynamic batcher: groups same-shape, same-method GEMM requests so the
+//! runtime can execute them as one batched PJRT call (one compiled
+//! executable per shape — recompiling per request would dwarf the GEMM).
+//!
+//! Deterministic, thread-free core (the service wraps it in a worker loop):
+//! `push` returns a ready batch when the group hits `max_batch`; `flush`
+//! drains stragglers after the linger deadline.
+
+use super::request::GemmRequest;
+use crate::gemm::Method;
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+/// Batch key: only identical problem shapes on the same backend may share
+/// an executable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct BatchKey {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub method: Method,
+}
+
+/// A ready-to-execute group of requests.
+#[derive(Debug)]
+pub struct Batch {
+    pub key: BatchKey,
+    pub requests: Vec<GemmRequest>,
+}
+
+struct Pending {
+    requests: Vec<GemmRequest>,
+    opened_at: Instant,
+}
+
+/// Shape/method-keyed dynamic batcher with size and linger-time limits.
+pub struct DynamicBatcher {
+    max_batch: usize,
+    linger: Duration,
+    pending: HashMap<BatchKey, Pending>,
+}
+
+impl DynamicBatcher {
+    pub fn new(max_batch: usize, linger: Duration) -> DynamicBatcher {
+        assert!(max_batch >= 1);
+        DynamicBatcher { max_batch, linger, pending: HashMap::new() }
+    }
+
+    /// Queue a routed request. Returns a full batch if this push filled one.
+    pub fn push(&mut self, method: Method, req: GemmRequest) -> Option<Batch> {
+        let key = BatchKey { m: req.a.rows, n: req.b.cols, k: req.a.cols, method };
+        let entry = self
+            .pending
+            .entry(key)
+            .or_insert_with(|| Pending { requests: Vec::new(), opened_at: Instant::now() });
+        entry.requests.push(req);
+        if entry.requests.len() >= self.max_batch {
+            let p = self.pending.remove(&key).unwrap();
+            Some(Batch { key, requests: p.requests })
+        } else {
+            None
+        }
+    }
+
+    /// Emit every group older than the linger deadline (or all, if `force`).
+    pub fn flush(&mut self, force: bool) -> Vec<Batch> {
+        let now = Instant::now();
+        let due: Vec<BatchKey> = self
+            .pending
+            .iter()
+            .filter(|(_, p)| force || now.duration_since(p.opened_at) >= self.linger)
+            .map(|(k, _)| *k)
+            .collect();
+        due.into_iter()
+            .map(|key| {
+                let p = self.pending.remove(&key).unwrap();
+                Batch { key, requests: p.requests }
+            })
+            .collect()
+    }
+
+    /// Number of queued (not yet emitted) requests.
+    pub fn queued(&self) -> usize {
+        self.pending.values().map(|p| p.requests.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::GemmRequest;
+    use crate::coordinator::Policy;
+    use crate::matgen::urand;
+
+    fn req(id: u64, m: usize, k: usize, n: usize) -> GemmRequest {
+        GemmRequest {
+            id,
+            a: urand(m, k, -1.0, 1.0, id),
+            b: urand(k, n, -1.0, 1.0, id + 1),
+            policy: Policy::Fp32Accuracy,
+        }
+    }
+
+    #[test]
+    fn batches_fill_at_max() {
+        let mut b = DynamicBatcher::new(3, Duration::from_secs(100));
+        assert!(b.push(Method::OursHalfHalf, req(1, 8, 8, 8)).is_none());
+        assert!(b.push(Method::OursHalfHalf, req(2, 8, 8, 8)).is_none());
+        let batch = b.push(Method::OursHalfHalf, req(3, 8, 8, 8)).unwrap();
+        assert_eq!(batch.requests.len(), 3);
+        assert_eq!(b.queued(), 0);
+    }
+
+    #[test]
+    fn never_mixes_shapes_or_methods() {
+        let mut b = DynamicBatcher::new(2, Duration::from_secs(100));
+        assert!(b.push(Method::OursHalfHalf, req(1, 8, 8, 8)).is_none());
+        assert!(b.push(Method::OursHalfHalf, req(2, 16, 8, 8)).is_none()); // other shape
+        assert!(b.push(Method::OursTf32, req(3, 8, 8, 8)).is_none()); // other method
+        assert_eq!(b.queued(), 3);
+        let full = b.push(Method::OursHalfHalf, req(4, 8, 8, 8)).unwrap();
+        assert_eq!(full.requests.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 4]);
+    }
+
+    #[test]
+    fn flush_force_drains_everything() {
+        let mut b = DynamicBatcher::new(10, Duration::from_secs(100));
+        for i in 0..5 {
+            b.push(Method::OursHalfHalf, req(i, 8, 8, 8));
+        }
+        b.push(Method::OursTf32, req(10, 4, 4, 4));
+        let batches = b.flush(true);
+        assert_eq!(batches.iter().map(|x| x.requests.len()).sum::<usize>(), 6);
+        assert_eq!(b.queued(), 0);
+    }
+
+    #[test]
+    fn linger_timeout() {
+        let mut b = DynamicBatcher::new(10, Duration::from_millis(1));
+        b.push(Method::OursHalfHalf, req(1, 8, 8, 8));
+        std::thread::sleep(Duration::from_millis(5));
+        let batches = b.flush(false);
+        assert_eq!(batches.len(), 1);
+    }
+
+    #[test]
+    fn no_request_lost_or_duplicated_under_load() {
+        // Property: every pushed id comes out exactly once.
+        let mut b = DynamicBatcher::new(4, Duration::from_secs(100));
+        let mut out = Vec::new();
+        let mut rng = crate::matgen::Rng::new(99);
+        for id in 0..200u64 {
+            let (m, k, n) = match rng.int_in(0, 2) {
+                0 => (8, 8, 8),
+                1 => (16, 8, 8),
+                _ => (8, 16, 8),
+            };
+            let method = if rng.int_in(0, 1) == 0 { Method::OursHalfHalf } else { Method::OursTf32 };
+            if let Some(batch) = b.push(method, req(id, m, k, n)) {
+                out.extend(batch.requests.iter().map(|r| r.id));
+            }
+        }
+        for batch in b.flush(true) {
+            out.extend(batch.requests.iter().map(|r| r.id));
+        }
+        out.sort_unstable();
+        assert_eq!(out, (0..200u64).collect::<Vec<_>>());
+    }
+}

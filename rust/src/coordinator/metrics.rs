@@ -1,0 +1,134 @@
+//! Service metrics: request counts, per-backend tallies, flop throughput
+//! and a coarse latency histogram. Lock-free reads are not needed at this
+//! scale; a mutexed inner keeps it simple and safe.
+
+use crate::gemm::Method;
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Latency histogram bucket upper bounds (seconds).
+const BUCKETS: [f64; 8] = [1e-4, 3e-4, 1e-3, 3e-3, 1e-2, 3e-2, 1e-1, f64::INFINITY];
+
+#[derive(Debug, Default)]
+struct Inner {
+    requests: u64,
+    completed: u64,
+    flops: u64,
+    per_method: HashMap<&'static str, u64>,
+    latency_buckets: [u64; 8],
+    latency_total: Duration,
+    batches: u64,
+    batched_requests: u64,
+}
+
+/// Shared metrics sink.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+/// A point-in-time metrics snapshot for reporting.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    pub requests: u64,
+    pub completed: u64,
+    pub flops: u64,
+    pub per_method: Vec<(&'static str, u64)>,
+    pub latency_buckets: [u64; 8],
+    pub mean_latency: Duration,
+    pub mean_batch_size: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn on_submit(&self) {
+        self.inner.lock().unwrap().requests += 1;
+    }
+
+    pub fn on_complete(&self, method: Method, flops: u64, latency: Duration, batch_size: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.completed += 1;
+        g.flops += flops;
+        *g.per_method.entry(method.name()).or_default() += 1;
+        let s = latency.as_secs_f64();
+        let idx = BUCKETS.iter().position(|&b| s <= b).unwrap_or(BUCKETS.len() - 1);
+        g.latency_buckets[idx] += 1;
+        g.latency_total += latency;
+        g.batched_requests += batch_size as u64;
+        if batch_size > 0 {
+            g.batches += 1;
+        }
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let g = self.inner.lock().unwrap();
+        let mut per_method: Vec<(&'static str, u64)> =
+            g.per_method.iter().map(|(k, v)| (*k, *v)).collect();
+        per_method.sort();
+        Snapshot {
+            requests: g.requests,
+            completed: g.completed,
+            flops: g.flops,
+            per_method,
+            latency_buckets: g.latency_buckets,
+            mean_latency: if g.completed > 0 {
+                g.latency_total / g.completed as u32
+            } else {
+                Duration::ZERO
+            },
+            mean_batch_size: if g.batches > 0 {
+                g.batched_requests as f64 / g.batches as f64
+            } else {
+                0.0
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_accumulate() {
+        let m = Metrics::new();
+        m.on_submit();
+        m.on_submit();
+        m.on_complete(Method::OursHalfHalf, 1000, Duration::from_millis(2), 2);
+        m.on_complete(Method::Fp32Simt, 500, Duration::from_micros(50), 1);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.completed, 2);
+        assert_eq!(s.flops, 1500);
+        assert_eq!(s.per_method.len(), 2);
+        assert_eq!(s.latency_buckets.iter().sum::<u64>(), 2);
+        assert!(s.mean_latency > Duration::ZERO);
+        assert!((s.mean_batch_size - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn thread_safe() {
+        let m = std::sync::Arc::new(Metrics::new());
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let m = m.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        m.on_submit();
+                        m.on_complete(Method::OursHalfHalf, 1, Duration::from_nanos(10), 1);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let s = m.snapshot();
+        assert_eq!(s.requests, 4000);
+        assert_eq!(s.completed, 4000);
+    }
+}

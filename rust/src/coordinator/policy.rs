@@ -1,0 +1,172 @@
+//! Precision policy and the exponent-range probe.
+//!
+//! Fig. 11's lesson, turned into a routing rule: `cutlass_halfhalf` matches
+//! SGEMM accuracy only while the inputs' exponents stay inside the scaled
+//! split's comfortable range (Type 1). When either operand drifts below it
+//! (Types 2–3) accuracy degrades, and below ~2^-39 the hi part underflows
+//! entirely (Type 4). The router therefore probes the exponent range of
+//! both operands and picks the cheapest backend that still meets the
+//! requested accuracy.
+
+use crate::fp::mantissa::exponent_of;
+use crate::gemm::{Mat, Method};
+
+/// What the client asks for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// Must match FP32 SGEMM accuracy (the paper's headline use case).
+    Fp32Accuracy,
+    /// FP16-level accuracy is acceptable (ML inference style).
+    LowPrecisionOk,
+    /// Bit-level FP32 SIMT reproducibility required — no Tensor Cores.
+    StrictFp32,
+}
+
+/// Exponent-range classification of one operand (Fig. 11's input types).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum RangeClass {
+    /// All exponents in [-15, 15]: halfhalf represents at full precision.
+    HalfHalfExact,
+    /// Exponents reach into [-35, -15): halfhalf degrades (Type 2/3).
+    HalfHalfDegraded,
+    /// Exponents below -35 (or above f16 range): halfhalf unusable
+    /// (Type 4) — needs TF32 or SIMT.
+    NeedsWideExponent,
+    /// Exponents outside even TF32/FP32 comfortable range (|e| > 126ish,
+    /// subnormals): route to SIMT.
+    Extreme,
+}
+
+/// Probe a matrix: classify its exponent range (zeros are ignored — they
+/// are exactly representable everywhere).
+///
+/// Classification keys on the **largest** exponent — eq. (7)'s Frobenius
+/// residual is dominated by the matrix's largest-magnitude elements, so a
+/// handful of tiny outliers in an otherwise O(1) matrix (which any
+/// urand(-1,1) draw contains) do not degrade the result. This matches how
+/// Fig. 11's Types are defined: "*all* elements" in the given range.
+pub fn probe(m: &Mat) -> RangeClass {
+    let mut max_e = i32::MIN;
+    for &v in &m.data {
+        if v == 0.0 {
+            continue;
+        }
+        if !v.is_finite() {
+            return RangeClass::Extreme;
+        }
+        max_e = max_e.max(exponent_of(v));
+    }
+    if max_e == i32::MIN {
+        return RangeClass::HalfHalfExact; // all zeros
+    }
+    if max_e > 126 || max_e < -126 {
+        RangeClass::Extreme
+    } else if (-15..=15).contains(&max_e) {
+        RangeClass::HalfHalfExact
+    } else if (-35..-15).contains(&max_e) {
+        RangeClass::HalfHalfDegraded
+    } else {
+        RangeClass::NeedsWideExponent
+    }
+}
+
+/// Route a request: combine the policy with the worse of the two operand
+/// classes (the paper's Type 2 case shows one bad operand is enough).
+pub fn route(policy: Policy, a: &Mat, b: &Mat) -> Method {
+    let class = probe(a).max(probe(b));
+    match policy {
+        Policy::StrictFp32 => Method::Fp32Simt,
+        Policy::LowPrecisionOk => match class {
+            RangeClass::HalfHalfExact | RangeClass::HalfHalfDegraded => Method::Fp16Tc,
+            RangeClass::NeedsWideExponent => Method::Tf32Tc,
+            RangeClass::Extreme => Method::Fp32Simt,
+        },
+        Policy::Fp32Accuracy => match class {
+            RangeClass::HalfHalfExact => Method::OursHalfHalf,
+            // Degraded or wide range: tf32tf32 keeps FP32's exponent range
+            // (Fig. 11: same accuracy as SIMT in all four types).
+            RangeClass::HalfHalfDegraded | RangeClass::NeedsWideExponent => Method::OursTf32,
+            RangeClass::Extreme => Method::Fp32Simt,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matgen::{exp_rand, urand};
+
+    #[test]
+    fn probe_classes_match_fig11_types() {
+        assert_eq!(probe(&exp_rand(8, 8, -15, 14, 1)), RangeClass::HalfHalfExact);
+        assert_eq!(probe(&exp_rand(8, 8, -35, -16, 2)), RangeClass::HalfHalfDegraded);
+        assert_eq!(probe(&exp_rand(8, 8, -100, -36, 3)), RangeClass::NeedsWideExponent);
+        assert_eq!(probe(&urand(8, 8, -1.0, 1.0, 4)), RangeClass::HalfHalfExact);
+        assert_eq!(probe(&Mat::zeros(4, 4)), RangeClass::HalfHalfExact);
+    }
+
+    #[test]
+    fn routing_respects_policy() {
+        let good = urand(8, 8, -1.0, 1.0, 5);
+        let tiny = exp_rand(8, 8, -100, -36, 6);
+        assert_eq!(route(Policy::Fp32Accuracy, &good, &good), Method::OursHalfHalf);
+        // Fig 11 Type 2: one wide-range operand forces tf32tf32.
+        assert_eq!(route(Policy::Fp32Accuracy, &good, &tiny), Method::OursTf32);
+        assert_eq!(route(Policy::StrictFp32, &good, &good), Method::Fp32Simt);
+        assert_eq!(route(Policy::LowPrecisionOk, &good, &good), Method::Fp16Tc);
+        assert_eq!(route(Policy::LowPrecisionOk, &good, &tiny), Method::Tf32Tc);
+    }
+
+    #[test]
+    fn extreme_inputs_fall_back_to_simt() {
+        // Values at the very top of the f32 range (e = 127): no split
+        // headroom — route to SIMT.
+        let m = urand(4, 4, 2.0e38, 3.0e38, 7);
+        assert_eq!(probe(&m), RangeClass::Extreme);
+        assert_eq!(route(Policy::Fp32Accuracy, &m, &m), Method::Fp32Simt);
+        assert_eq!(route(Policy::LowPrecisionOk, &m, &m), Method::Fp32Simt);
+        // Non-finite data is extreme too.
+        let mut inf = urand(4, 4, -1.0, 1.0, 8);
+        inf.set(1, 1, f32::INFINITY);
+        assert_eq!(probe(&inf), RangeClass::Extreme);
+        // A few tiny outliers in an O(1) matrix do NOT flip the class
+        // (Frobenius weighting — see probe docs).
+        let mut tiny_outlier = urand(4, 4, -1.0, 1.0, 9);
+        tiny_outlier.set(0, 0, 1e-30);
+        assert_eq!(probe(&tiny_outlier), RangeClass::HalfHalfExact);
+    }
+
+    #[test]
+    fn routed_method_actually_meets_accuracy() {
+        // End-to-end property: for each class, the routed backend's residual
+        // is within 2x of SIMT's on that workload.
+        use crate::gemm::{gemm_f64, relative_residual, TileConfig};
+        // k = 64, 3 seeds per pair: the *level* of the residual is what
+        // Fig. 11 compares (single draws at small k are noisy).
+        let ranges = [(-15, 14), (-35, -16), (-100, -36)];
+        let cfg = TileConfig::default();
+        for ra in ranges {
+            for rb in ranges {
+                let mut e_sum = 0.0;
+                let mut simt_sum = 0.0;
+                let mut method = None;
+                for s in 0..3u64 {
+                    let a = exp_rand(64, 64, ra.0, ra.1, 10 + s);
+                    let b = exp_rand(64, 64, rb.0, rb.1, 40 + s);
+                    let m = route(Policy::Fp32Accuracy, &a, &b);
+                    method = Some(m);
+                    let c = m.run(&a, &b, &cfg);
+                    let simt = Method::Fp32Simt.run(&a, &b, &cfg);
+                    let r = gemm_f64(&a, &b);
+                    e_sum += relative_residual(&r, &c);
+                    simt_sum += relative_residual(&r, &simt);
+                }
+                assert!(
+                    e_sum <= 2.5 * simt_sum + 1e-12,
+                    "{:?} ra={ra:?} rb={rb:?}: {e_sum} vs simt {simt_sum}",
+                    method
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,51 @@
+//! Request / response types of the GEMM service.
+
+use super::policy::Policy;
+use crate::gemm::{Mat, Method};
+use std::time::Duration;
+
+/// A client GEMM request: `C = A·B` under an accuracy policy.
+#[derive(Debug, Clone)]
+pub struct GemmRequest {
+    pub id: u64,
+    pub a: Mat,
+    pub b: Mat,
+    pub policy: Policy,
+}
+
+impl GemmRequest {
+    /// Logical flop count (2mnk).
+    pub fn flops(&self) -> u64 {
+        2 * self.a.rows as u64 * self.a.cols as u64 * self.b.cols as u64
+    }
+}
+
+/// The service's answer.
+#[derive(Debug)]
+pub struct GemmResponse {
+    pub id: u64,
+    pub c: Mat,
+    /// Which backend the router picked.
+    pub method: Method,
+    /// Queue + execute wall time.
+    pub latency: Duration,
+    /// How many requests shared the executed batch.
+    pub batch_size: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matgen::urand;
+
+    #[test]
+    fn flops_counts_2mnk() {
+        let r = GemmRequest {
+            id: 1,
+            a: urand(3, 5, -1.0, 1.0, 1),
+            b: urand(5, 7, -1.0, 1.0, 2),
+            policy: Policy::Fp32Accuracy,
+        };
+        assert_eq!(r.flops(), 2 * 3 * 5 * 7);
+    }
+}

@@ -1,0 +1,383 @@
+//! The GEMM service: router → dynamic batcher → worker pool.
+//!
+//! Shaped like a miniature serving router (vllm-project/router): clients
+//! `submit` requests and receive a per-request response channel; a
+//! dispatcher thread routes (policy × exponent probe), batches same-shape
+//! work, and hands full or timed-out batches to a worker pool that executes
+//! them through an [`Executor`] — either the bit-exact simulator backends or
+//! the PJRT runtime executing AOT-compiled Pallas artifacts (see
+//! `runtime::PjrtExecutor`). Python is never on this path.
+//!
+//! std::thread + mpsc substitute for tokio (offline image; DESIGN.md §2).
+
+use super::batcher::{Batch, BatchKey, DynamicBatcher};
+use super::metrics::Metrics;
+use super::policy::{route, Policy};
+use super::request::{GemmRequest, GemmResponse};
+use crate::gemm::{Mat, Method, TileConfig};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Executes a routed, batched group of same-shape GEMMs.
+pub trait Executor: Send + Sync + 'static {
+    /// Produce `C_i = A_i · B_i` for every request, in order.
+    fn execute(&self, key: &BatchKey, reqs: &[GemmRequest]) -> Vec<Mat>;
+    fn name(&self) -> &'static str;
+}
+
+/// Simulator-backed executor: runs the bit-exact tiled GEMM backends.
+pub struct SimExecutor {
+    pub tile: TileConfig,
+}
+
+impl SimExecutor {
+    pub fn new() -> SimExecutor {
+        SimExecutor { tile: TileConfig::default() }
+    }
+}
+
+impl Default for SimExecutor {
+    fn default() -> Self {
+        SimExecutor::new()
+    }
+}
+
+impl Executor for SimExecutor {
+    fn execute(&self, key: &BatchKey, reqs: &[GemmRequest]) -> Vec<Mat> {
+        reqs.iter().map(|r| key.method.run(&r.a, &r.b, &self.tile)).collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+}
+
+struct WorkItem {
+    batch: Batch,
+    responders: Vec<(Sender<GemmResponse>, Instant)>,
+}
+
+enum Msg {
+    Submit(GemmRequest, Sender<GemmResponse>, Instant),
+    Shutdown,
+}
+
+/// Service configuration.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    pub workers: usize,
+    pub max_batch: usize,
+    pub linger: Duration,
+    /// Optional method override (bypass the router — used by benches).
+    pub force_method: Option<Method>,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            workers: 2,
+            max_batch: 8,
+            linger: Duration::from_millis(2),
+            force_method: None,
+        }
+    }
+}
+
+/// Handle to a running GEMM service.
+pub struct GemmService {
+    tx: Sender<Msg>,
+    dispatcher: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+}
+
+impl GemmService {
+    /// Start the dispatcher + worker pool over the given executor.
+    pub fn start(executor: Arc<dyn Executor>, cfg: ServiceConfig) -> GemmService {
+        let metrics = Arc::new(Metrics::new());
+        let (tx, rx) = channel::<Msg>();
+        let (work_tx, work_rx) = channel::<WorkItem>();
+        let work_rx = Arc::new(Mutex::new(work_rx));
+
+        let workers: Vec<JoinHandle<()>> = (0..cfg.workers.max(1))
+            .map(|_| {
+                let work_rx = Arc::clone(&work_rx);
+                let executor = Arc::clone(&executor);
+                let metrics = Arc::clone(&metrics);
+                std::thread::spawn(move || loop {
+                    let item = {
+                        let guard = work_rx.lock().unwrap();
+                        guard.recv()
+                    };
+                    let Ok(item) = item else { break };
+                    let batch_size = item.batch.requests.len();
+                    // A panicking executor must not take the worker down
+                    // with it: catch, drop the batch's responders (clients
+                    // observe a disconnected channel, not a hang), carry on.
+                    let outs = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        executor.execute(&item.batch.key, &item.batch.requests)
+                    }));
+                    let Ok(outs) = outs else {
+                        eprintln!(
+                            "tcec worker: executor panicked on batch {:?} ({} reqs dropped)",
+                            item.batch.key, batch_size
+                        );
+                        continue;
+                    };
+                    debug_assert_eq!(outs.len(), batch_size);
+                    for ((req, c), (resp_tx, t0)) in
+                        item.batch.requests.iter().zip(outs).zip(item.responders)
+                    {
+                        let latency = t0.elapsed();
+                        metrics.on_complete(item.batch.key.method, req.flops(), latency, batch_size);
+                        // Client may have dropped its receiver; ignore.
+                        let _ = resp_tx.send(GemmResponse {
+                            id: req.id,
+                            c,
+                            method: item.batch.key.method,
+                            latency,
+                            batch_size,
+                        });
+                    }
+                })
+            })
+            .collect();
+
+        let dispatcher = {
+            let metrics = Arc::clone(&metrics);
+            let force = cfg.force_method;
+            let linger = cfg.linger;
+            let max_batch = cfg.max_batch;
+            std::thread::spawn(move || {
+                let mut batcher = DynamicBatcher::new(max_batch, linger);
+                // id -> (responder, submit time), aligned by request id.
+                let mut responders: std::collections::HashMap<u64, (Sender<GemmResponse>, Instant)> =
+                    std::collections::HashMap::new();
+                let emit = |batch: Batch,
+                                responders: &mut std::collections::HashMap<
+                    u64,
+                    (Sender<GemmResponse>, Instant),
+                >| {
+                    let rs: Vec<_> = batch
+                        .requests
+                        .iter()
+                        .map(|r| responders.remove(&r.id).expect("responder registered"))
+                        .collect();
+                    let _ = work_tx.send(WorkItem { batch, responders: rs });
+                };
+                loop {
+                    match rx.recv_timeout(linger) {
+                        Ok(Msg::Submit(req, resp_tx, t0)) => {
+                            metrics.on_submit();
+                            let method = force.unwrap_or_else(|| route(req.policy, &req.a, &req.b));
+                            responders.insert(req.id, (resp_tx, t0));
+                            if let Some(batch) = batcher.push(method, req) {
+                                emit(batch, &mut responders);
+                            }
+                        }
+                        Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                            for batch in batcher.flush(false) {
+                                emit(batch, &mut responders);
+                            }
+                        }
+                        Ok(Msg::Shutdown) | Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                            for batch in batcher.flush(true) {
+                                emit(batch, &mut responders);
+                            }
+                            break;
+                        }
+                    }
+                }
+                // work_tx drops here, terminating the workers.
+            })
+        };
+
+        GemmService { tx, dispatcher: Some(dispatcher), workers, metrics, next_id: AtomicU64::new(1) }
+    }
+
+    /// Submit a GEMM; returns the request id and the response receiver.
+    pub fn submit(&self, a: Mat, b: Mat, policy: Policy) -> (u64, Receiver<GemmResponse>) {
+        assert_eq!(a.cols, b.rows, "inner dimensions must agree");
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (resp_tx, resp_rx) = channel();
+        self.tx
+            .send(Msg::Submit(GemmRequest { id, a, b, policy }, resp_tx, Instant::now()))
+            .expect("service running");
+        (id, resp_rx)
+    }
+
+    /// Convenience: submit and wait.
+    pub fn gemm_blocking(&self, a: Mat, b: Mat, policy: Policy) -> GemmResponse {
+        let (_, rx) = self.submit(a, b, policy);
+        rx.recv().expect("service answered")
+    }
+
+    pub fn metrics(&self) -> Arc<Metrics> {
+        Arc::clone(&self.metrics)
+    }
+
+    /// Graceful shutdown: drain queues, join all threads.
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for GemmService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::{gemm_f64, relative_residual};
+    use crate::matgen::{exp_rand, urand};
+
+    #[test]
+    fn single_request_roundtrip() {
+        let svc = GemmService::start(Arc::new(SimExecutor::new()), ServiceConfig::default());
+        let a = urand(16, 16, -1.0, 1.0, 1);
+        let b = urand(16, 16, -1.0, 1.0, 2);
+        let r_ref = gemm_f64(&a, &b);
+        let resp = svc.gemm_blocking(a, b, Policy::Fp32Accuracy);
+        assert_eq!(resp.method, Method::OursHalfHalf);
+        assert!(relative_residual(&r_ref, &resp.c) < 1e-6);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn many_requests_all_answered_correctly_routed() {
+        let svc = GemmService::start(
+            Arc::new(SimExecutor::new()),
+            ServiceConfig { workers: 2, max_batch: 4, ..ServiceConfig::default() },
+        );
+        let mut rxs = Vec::new();
+        for i in 0..20u64 {
+            let (a, b, policy) = if i % 3 == 0 {
+                (exp_rand(8, 8, -100, -36, i), urand(8, 8, -1.0, 1.0, i), Policy::Fp32Accuracy)
+            } else {
+                (urand(8, 8, -1.0, 1.0, i), urand(8, 8, -1.0, 1.0, i + 1), Policy::Fp32Accuracy)
+            };
+            rxs.push((i % 3 == 0, svc.submit(a, b, policy)));
+        }
+        for (wide, (_, rx)) in rxs {
+            let resp = rx.recv_timeout(Duration::from_secs(30)).expect("response");
+            if wide {
+                assert_eq!(resp.method, Method::OursTf32);
+            } else {
+                assert_eq!(resp.method, Method::OursHalfHalf);
+            }
+        }
+        let snap = svc.metrics().snapshot();
+        assert_eq!(snap.requests, 20);
+        assert_eq!(snap.completed, 20);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn batching_happens() {
+        let svc = GemmService::start(
+            Arc::new(SimExecutor::new()),
+            ServiceConfig {
+                workers: 1,
+                max_batch: 4,
+                linger: Duration::from_millis(50),
+                force_method: Some(Method::Fp32Simt),
+            },
+        );
+        let rxs: Vec<_> = (0..8)
+            .map(|i| {
+                svc.submit(urand(8, 8, -1.0, 1.0, i), urand(8, 8, -1.0, 1.0, i + 100), Policy::StrictFp32)
+                    .1
+            })
+            .collect();
+        let mut max_batch_seen = 0;
+        for rx in rxs {
+            let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+            max_batch_seen = max_batch_seen.max(resp.batch_size);
+        }
+        assert!(max_batch_seen >= 2, "expected batching, saw max {max_batch_seen}");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn worker_survives_panicking_executor() {
+        // Failure injection: an executor that panics on the first batch.
+        // The affected client gets a disconnect (not a hang) and the
+        // service keeps serving subsequent requests on the same worker.
+        struct FlakyExecutor {
+            panicked: std::sync::atomic::AtomicBool,
+            inner: SimExecutor,
+        }
+        impl Executor for FlakyExecutor {
+            fn execute(
+                &self,
+                key: &crate::coordinator::BatchKey,
+                reqs: &[crate::coordinator::GemmRequest],
+            ) -> Vec<Mat> {
+                if !self.panicked.swap(true, std::sync::atomic::Ordering::SeqCst) {
+                    panic!("injected executor failure");
+                }
+                self.inner.execute(key, reqs)
+            }
+            fn name(&self) -> &'static str {
+                "flaky"
+            }
+        }
+        let svc = GemmService::start(
+            Arc::new(FlakyExecutor {
+                panicked: std::sync::atomic::AtomicBool::new(false),
+                inner: SimExecutor::new(),
+            }),
+            ServiceConfig {
+                workers: 1,
+                max_batch: 1,
+                force_method: Some(Method::Fp32Simt),
+                ..ServiceConfig::default()
+            },
+        );
+        // First request: executor panics; client sees a closed channel.
+        let (_, rx1) = svc.submit(urand(8, 8, -1.0, 1.0, 1), urand(8, 8, -1.0, 1.0, 2), Policy::StrictFp32);
+        assert!(
+            rx1.recv_timeout(Duration::from_secs(30)).is_err(),
+            "panicked batch must yield a disconnect, not a result"
+        );
+        // Second request: the same (sole) worker must still be alive.
+        let resp = svc.gemm_blocking(urand(8, 8, -1.0, 1.0, 3), urand(8, 8, -1.0, 1.0, 4), Policy::StrictFp32);
+        assert_eq!(resp.method, Method::Fp32Simt);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_stragglers() {
+        let svc = GemmService::start(
+            Arc::new(SimExecutor::new()),
+            ServiceConfig {
+                workers: 1,
+                max_batch: 100,
+                linger: Duration::from_secs(60), // never auto-flush
+                force_method: Some(Method::Fp32Simt),
+            },
+        );
+        let rx = svc.submit(urand(8, 8, -1.0, 1.0, 1), urand(8, 8, -1.0, 1.0, 2), Policy::StrictFp32).1;
+        svc.shutdown(); // must flush the half-full batch
+        assert!(rx.recv_timeout(Duration::from_secs(5)).is_ok());
+    }
+}

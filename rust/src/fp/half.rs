@@ -1,0 +1,187 @@
+//! Software IEEE 754 binary16 ("FP16").
+//!
+//! A `Half` stores the 16 raw bits. Conversions to/from `f32`/`f64` are exact
+//! (every f16 value is exactly representable in f32) and conversions *into*
+//! f16 are correctly rounded via [`crate::fp::rounding::round_to_format`] in
+//! any of the three rounding modes the paper uses. CUDA's default
+//! `__float2half` is RN; the Tensor-Core input conversion the paper studies
+//! under RZ is also provided.
+
+use super::rounding::{round_to_format, Format, Rounding};
+
+/// IEEE binary16 value, stored as raw bits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Half(pub u16);
+
+impl Half {
+    pub const ZERO: Half = Half(0);
+    pub const ONE: Half = Half(0x3c00);
+    /// Largest finite f16 = 65504.
+    pub const MAX: Half = Half(0x7bff);
+    /// Smallest positive normal = 2^-14.
+    pub const MIN_POSITIVE: Half = Half(0x0400);
+    /// Smallest positive subnormal = 2^-24.
+    pub const MIN_SUBNORMAL: Half = Half(0x0001);
+    pub const INFINITY: Half = Half(0x7c00);
+    pub const NEG_INFINITY: Half = Half(0xfc00);
+
+    /// Convert from `f32` with the given rounding mode.
+    pub fn from_f32(x: f32, mode: Rounding) -> Half {
+        Half::from_f64(x as f64, mode)
+    }
+
+    /// Convert from `f64` with the given rounding mode.
+    pub fn from_f64(x: f64, mode: Rounding) -> Half {
+        if x.is_nan() {
+            return Half(0x7e00);
+        }
+        let r = round_to_format(x, Format::F16, mode);
+        Half::encode(r)
+    }
+
+    /// Encode an f64 that is *already* exactly representable in binary16.
+    fn encode(r: f64) -> Half {
+        let neg = r.is_sign_negative();
+        let sign = (neg as u16) << 15;
+        let a = r.abs();
+        if a == 0.0 {
+            return Half(sign);
+        }
+        if a.is_infinite() {
+            return Half(sign | 0x7c00);
+        }
+        let bits = a.to_bits();
+        let e = ((bits >> 52) & 0x7ff) as i32 - 1023;
+        let frac52 = bits & ((1u64 << 52) - 1);
+        if e >= -14 {
+            // Normal f16.
+            let exp = (e + 15) as u16;
+            let frac = (frac52 >> 42) as u16; // top 10 fraction bits (exact)
+            debug_assert_eq!(frac52 & ((1u64 << 42) - 1), 0, "not f16-exact: {r}");
+            Half(sign | (exp << 10) | frac)
+        } else {
+            // Subnormal f16: value = f * 2^-24 with 1 <= f < 2^10.
+            let shift = -14 - e; // >= 1
+            let sig = (1u64 << 52) | frac52;
+            let frac = (sig >> (42 + shift)) as u16;
+            debug_assert_eq!(sig & ((1u64 << (42 + shift)) - 1), 0, "not f16-exact: {r}");
+            Half(sign | frac)
+        }
+    }
+
+    /// Exact value as `f64`.
+    pub fn to_f64(self) -> f64 {
+        let bits = self.0;
+        let neg = bits >> 15 == 1;
+        let exp = ((bits >> 10) & 0x1f) as i32;
+        let frac = (bits & 0x3ff) as f64;
+        let mag = match exp {
+            0 => frac * super::rounding::exp2i(-24),
+            0x1f => {
+                if frac == 0.0 {
+                    f64::INFINITY
+                } else {
+                    f64::NAN
+                }
+            }
+            _ => (1024.0 + frac) * super::rounding::exp2i(exp - 15 - 10),
+        };
+        if neg {
+            -mag
+        } else {
+            mag
+        }
+    }
+
+    /// Exact value as `f32`.
+    pub fn to_f32(self) -> f32 {
+        self.to_f64() as f32 // exact: |f16| ⊂ f32
+    }
+
+    pub fn is_nan(self) -> bool {
+        (self.0 >> 10) & 0x1f == 0x1f && self.0 & 0x3ff != 0
+    }
+
+    pub fn is_infinite(self) -> bool {
+        self.0 & 0x7fff == 0x7c00
+    }
+
+    pub fn is_zero(self) -> bool {
+        self.0 & 0x7fff == 0
+    }
+
+    /// True if the value is subnormal (gradual underflow region).
+    pub fn is_subnormal(self) -> bool {
+        (self.0 >> 10) & 0x1f == 0 && self.0 & 0x3ff != 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp::rounding::exp2i;
+
+    #[test]
+    fn constants_decode() {
+        assert_eq!(Half::ONE.to_f64(), 1.0);
+        assert_eq!(Half::MAX.to_f64(), 65504.0);
+        assert_eq!(Half::MIN_POSITIVE.to_f64(), exp2i(-14));
+        assert_eq!(Half::MIN_SUBNORMAL.to_f64(), exp2i(-24));
+        assert_eq!(Half::INFINITY.to_f64(), f64::INFINITY);
+        assert!(Half(0x7e00).is_nan());
+    }
+
+    #[test]
+    fn all_f16_bit_patterns_roundtrip() {
+        // Exhaustive: every finite f16 value must round-trip through f64
+        // and re-encode to the identical bit pattern in every mode.
+        for bits in 0u16..=0xffff {
+            let h = Half(bits);
+            if h.is_nan() {
+                continue;
+            }
+            let v = h.to_f64();
+            for &mode in &[Rounding::RN, Rounding::RNA, Rounding::RZ] {
+                let back = Half::from_f64(v, mode);
+                // -0.0 and 0.0 encode distinctly and must be preserved.
+                assert_eq!(back.0, bits, "bits={bits:#06x} v={v} mode={mode:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn rounding_modes_differ_as_expected() {
+        let x = 1.0f32 + 2f32.powi(-11); // tie
+        assert_eq!(Half::from_f32(x, Rounding::RN).to_f64(), 1.0);
+        assert_eq!(Half::from_f32(x, Rounding::RNA).to_f64(), 1.0 + exp2i(-10));
+        assert_eq!(Half::from_f32(x, Rounding::RZ).to_f64(), 1.0);
+        let y = 1.0f32 + 2f32.powi(-11) + 2f32.powi(-20);
+        assert_eq!(Half::from_f32(y, Rounding::RN).to_f64(), 1.0 + exp2i(-10));
+        assert_eq!(Half::from_f32(y, Rounding::RZ).to_f64(), 1.0);
+    }
+
+    #[test]
+    fn subnormal_flags() {
+        assert!(Half::MIN_SUBNORMAL.is_subnormal());
+        assert!(!Half::MIN_POSITIVE.is_subnormal());
+        assert!(Half::ZERO.is_zero());
+        assert!(Half(0x8000).is_zero()); // -0
+    }
+
+    #[test]
+    fn underflow_to_zero_and_subnormal() {
+        // 2^-25 is half of the min subnormal: RN ties to even -> 0.
+        assert!(Half::from_f64(exp2i(-25), Rounding::RN).is_zero());
+        assert_eq!(Half::from_f64(exp2i(-25), Rounding::RNA), Half::MIN_SUBNORMAL);
+        // 2^-26 rounds to zero in all nearest modes, and RZ always truncates.
+        assert!(Half::from_f64(exp2i(-26), Rounding::RN).is_zero());
+        assert!(Half::from_f64(exp2i(-24) * 0.99, Rounding::RZ).is_zero());
+    }
+
+    #[test]
+    fn sign_preserved_through_underflow() {
+        let h = Half::from_f64(-exp2i(-30), Rounding::RN);
+        assert!(h.is_zero());
+        assert_eq!(h.0 >> 15, 1, "negative zero expected");
+    }
+}

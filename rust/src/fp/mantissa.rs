@@ -1,0 +1,121 @@
+//! Mantissa-length metering (paper §"Expectation of mantissa length").
+//!
+//! Given an FP32 value `v` and the exact value reconstructed from its hi/lo
+//! split, how many of v's 23 stored mantissa bits does the split preserve?
+//! The paper's Tables 1 and 2 tabulate this length and its probability under
+//! the i.i.d.-mantissa-bit Assumption 1; [`kept_mantissa_len`] measures it
+//! for concrete values so Monte-Carlo runs can be checked against theory.
+
+/// Number of v's mantissa bits (0..=23, excluding the implicit bit)
+/// faithfully represented by `approx`. 23 means the split is exact (or the
+/// error is below v's LSB); the paper's tables use the same convention.
+pub fn kept_mantissa_len(v: f32, approx: f64) -> u32 {
+    let v64 = v as f64;
+    let err = (v64 - approx).abs();
+    if err == 0.0 {
+        return 23;
+    }
+    if v == 0.0 {
+        return 0;
+    }
+    let ev = v64.abs().log2().floor() as i32;
+    let ee = err.log2() as f64; // exact log for powers of two, monotone otherwise
+    let ee = ee.floor() as i32;
+    // err magnitude 2^(ev - 23) == error confined to the LSB -> 22 bits kept.
+    // Generally: kept = (ev - ee) - 1, clamped to [0, 23].
+    let kept = ev as i64 - ee as i64 - 1;
+    kept.clamp(0, 23) as u32
+}
+
+/// `l0` as defined by the paper: the number of consecutive zero bits from
+/// m12 (the first bit *below* the FP16-kept field) toward the LSB of the
+/// FP32 mantissa. Drives both Tables 1–2 and the underflow analysis (Fig 8).
+pub fn l0_of(v: f32) -> u32 {
+    let m = v.to_bits() & 0x7f_ffff; // m22..m0
+    let mut l0 = 0;
+    // m12 is bit index 12.
+    for i in (0..=12).rev() {
+        if (m >> i) & 1 == 0 {
+            l0 += 1;
+        } else {
+            break;
+        }
+    }
+    l0
+}
+
+/// Unbiased exponent of a finite nonzero f32 (value = 1.m × 2^e for normals).
+pub fn exponent_of(v: f32) -> i32 {
+    let bits = v.to_bits();
+    let biased = ((bits >> 23) & 0xff) as i32;
+    if biased == 0 {
+        // subnormal: exponent of the leading 1. Bit position p (from LSB)
+        // carries weight 2^(p - 149).
+        let m = bits & 0x7f_ffff;
+        if m == 0 {
+            return i32::MIN;
+        }
+        (31 - m.leading_zeros() as i32) - 149
+    } else {
+        biased - 127
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp::split::{split_markidis, split_ootomo};
+
+    #[test]
+    fn exact_split_is_23() {
+        // 1.5 splits exactly.
+        assert_eq!(kept_mantissa_len(1.5, split_markidis(1.5).reconstruct()), 23);
+    }
+
+    #[test]
+    fn lsb_error_is_22() {
+        // v with a full 24-bit significand ending ...11: Markidis' RZ-like
+        // worst case loses the LSB.
+        let v = f32::from_bits(0x3f80_0001); // 1 + 2^-23
+        let approx = 1.0f64; // pretend split lost the LSB
+        assert_eq!(kept_mantissa_len(v, approx), 22);
+    }
+
+    #[test]
+    fn l0_examples() {
+        // mantissa with m12..m0 all zero -> l0 = 13.
+        let v = f32::from_bits(0x3f80_0000 | (0b101 << 20));
+        assert_eq!(l0_of(v), 13);
+        // m12 = 1 -> l0 = 0.
+        let v = f32::from_bits(0x3f80_0000 | (1 << 12));
+        assert_eq!(l0_of(v), 0);
+        // m12 = 0, m11 = 1 -> l0 = 1.
+        let v = f32::from_bits(0x3f80_0000 | (1 << 11));
+        assert_eq!(l0_of(v), 1);
+    }
+
+    #[test]
+    fn exponent_extraction() {
+        assert_eq!(exponent_of(1.0), 0);
+        assert_eq!(exponent_of(0.75), -1);
+        assert_eq!(exponent_of(-6.0), 2);
+        assert_eq!(exponent_of(f32::from_bits(1)), -149); // min subnormal
+    }
+
+    #[test]
+    fn ootomo_split_keeps_at_least_21_bits_in_range() {
+        let mut s = 123u64;
+        for _ in 0..20_000 {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            let u = (s >> 11) as f64 / (1u64 << 53) as f64;
+            let v = (2.0 * u - 1.0) as f32;
+            if v.abs() < 1e-6 {
+                continue;
+            }
+            let r = split_ootomo(v).reconstruct();
+            assert!(kept_mantissa_len(v, r) >= 21, "v={v:e} kept={}", kept_mantissa_len(v, r));
+        }
+    }
+}

@@ -1,0 +1,20 @@
+//! Bit-exact floating-point substrate.
+//!
+//! Implements the formats (binary16, TF32, bf16), rounding modes (RN, RNA,
+//! RZ, RA) and hi/lo split schemes (Markidis, Feng, Ootomo halfhalf /
+//! tf32tf32) the paper's analysis is built on, plus the mantissa-length
+//! meter behind Tables 1–2.
+
+pub mod half;
+pub mod mantissa;
+pub mod rounding;
+pub mod split;
+pub mod tf32;
+
+pub use half::Half;
+pub use rounding::{exp2i, round_to_format, round_to_precision, truncate_f32_mantissa_lsb, Format, Rounding};
+pub use split::{
+    reconstruct_bf16_triple, split_bf16_triple, split_feng, split_markidis, split_markidis_rz,
+    split_ootomo, split_ootomo_tf32, SplitF16, SplitTf32, BF16_SCALE_EXP, SCALE, SCALE_EXP,
+};
+pub use tf32::Tf32;

@@ -1,0 +1,434 @@
+//! Bit-exact rounding kernel.
+//!
+//! Everything in this crate that talks about "rounding inside Tensor Cores",
+//! "FP16 conversion with RN/RNA/RZ" or "25-bit accumulators" bottoms out in
+//! [`round_to_format`]: an MPFR-style correctly-rounded quantizer from `f64`
+//! to an arbitrary binary floating-point format `(p, emin, emax)` where `p`
+//! counts significand bits *including* the implicit leading 1 and `emin..=emax`
+//! bounds the unbiased exponent of normal numbers. Gradual underflow
+//! (subnormals) is modelled exactly: below `2^emin` the effective precision
+//! shrinks bit by bit down to the minimum subnormal `2^(emin - p + 1)`.
+//!
+//! All arithmetic is done on the integer significand of the `f64` input, so
+//! results are exact — no double rounding, no libm.
+
+/// Rounding modes used by the paper (§Background "Rounding").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Rounding {
+    /// Round to nearest, ties to even — IEEE default, what FP32 SIMT cores
+    /// and CUDA's `__float2half_rn` perform.
+    RN,
+    /// Round to nearest, ties away from zero — available for FP32→TF32.
+    RNA,
+    /// Round toward zero (truncation) — what the Tensor Core accumulator
+    /// performs after every fused add (Fasi et al. 2020).
+    RZ,
+    /// Round away from zero (directed). Not an IEEE mode; used to model the
+    /// unconditional "round-up" branch of Feng et al.'s round-split.
+    RA,
+}
+
+impl Rounding {
+    /// All modes, for exhaustive tests.
+    pub const ALL: [Rounding; 4] = [Rounding::RN, Rounding::RNA, Rounding::RZ, Rounding::RA];
+}
+
+/// A binary floating-point format: `p` significand bits (incl. implicit bit),
+/// normal exponent range `emin..=emax` (value of a normal x is
+/// `1.f × 2^e` with `emin <= e <= emax`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Format {
+    pub p: u32,
+    pub emin: i32,
+    pub emax: i32,
+}
+
+impl Format {
+    /// IEEE binary32.
+    pub const F32: Format = Format { p: 24, emin: -126, emax: 127 };
+    /// IEEE binary16.
+    pub const F16: Format = Format { p: 11, emin: -14, emax: 15 };
+    /// NVIDIA TF32: FP32's exponent range with an 11-bit significand.
+    pub const TF32: Format = Format { p: 11, emin: -126, emax: 127 };
+    /// bfloat16: FP32's exponent range with an 8-bit significand.
+    pub const BF16: Format = Format { p: 8, emin: -126, emax: 127 };
+
+    /// Format with `p` significand bits and an effectively unbounded
+    /// exponent range (used for "accumulator keeps 25 bits" emulation).
+    /// The bounds are wide enough that nothing f32/f64-GEMM-shaped can
+    /// reach them, while keeping `2^emax` representable in f64.
+    pub const fn precision_only(p: u32) -> Format {
+        Format { p, emin: -960, emax: 960 }
+    }
+
+    /// Smallest positive normal value.
+    pub fn min_normal(&self) -> f64 {
+        exp2i(self.emin)
+    }
+
+    /// Smallest positive subnormal value.
+    pub fn min_subnormal(&self) -> f64 {
+        exp2i(self.emin - self.p as i32 + 1)
+    }
+
+    /// Largest finite value: `(2 - 2^(1-p)) × 2^emax`.
+    pub fn max_finite(&self) -> f64 {
+        (2.0 - exp2i(1 - self.p as i32)) * exp2i(self.emax)
+    }
+}
+
+/// Exact `2^e` for |e| well inside the f64 range.
+#[inline]
+pub fn exp2i(e: i32) -> f64 {
+    debug_assert!((-1022..=1023).contains(&e), "exp2i exponent out of range: {e}");
+    f64::from_bits(((e + 1023) as u64) << 52)
+}
+
+/// Decompose a finite nonzero f64 into `(negative, significand m, exponent e)`
+/// such that `|x| = m × 2^(e - 52)` with `2^52 <= m < 2^53` (normalized).
+#[inline]
+fn decompose(x: f64) -> (bool, u64, i32) {
+    let bits = x.to_bits();
+    let neg = bits >> 63 == 1;
+    let biased = ((bits >> 52) & 0x7ff) as i32;
+    let frac = bits & ((1u64 << 52) - 1);
+    if biased == 0 {
+        // f64 subnormal: normalize. (Only reachable for inputs below
+        // 2^-1022; f32-ranged data never gets here, but be exact anyway.)
+        let shift = frac.leading_zeros() as i32 - 11;
+        (neg, frac << shift, -1022 - shift)
+    } else {
+        (neg, (1u64 << 52) | frac, biased - 1023)
+    }
+}
+
+/// Round the magnitude integer `m` (with `drop` low bits to be discarded)
+/// according to `mode`; returns the kept integer, possibly `+1`.
+#[inline]
+fn round_integer(m: u64, drop: u32, mode: Rounding, _neg: bool) -> u64 {
+    debug_assert!(drop >= 1 && drop <= 63);
+    let kept = m >> drop;
+    let round_bit = (m >> (drop - 1)) & 1;
+    let sticky = m & ((1u64 << (drop - 1)) - 1) != 0;
+    let inc = match mode {
+        Rounding::RZ => false,
+        Rounding::RN => round_bit == 1 && (sticky || kept & 1 == 1),
+        Rounding::RNA => round_bit == 1,
+        Rounding::RA => round_bit == 1 || sticky,
+    };
+    kept + inc as u64
+}
+
+/// Correctly round `x` into format `fmt` using `mode`.
+///
+/// Overflow goes to `±inf` for RN/RNA and saturates to `±max_finite` for RZ
+/// (matching IEEE round-toward-zero semantics). NaN/inf pass through.
+pub fn round_to_format(x: f64, fmt: Format, mode: Rounding) -> f64 {
+    if x == 0.0 || !x.is_finite() {
+        return x;
+    }
+    let (neg, m, e) = decompose(x); // |x| = m * 2^(e-52), 2^52 <= m < 2^53
+
+    // Effective number of significand bits we may keep at this exponent.
+    // Normal numbers keep p bits; below emin we lose one bit per binade.
+    let keep = if e >= fmt.emin {
+        fmt.p as i64
+    } else {
+        fmt.p as i64 - (fmt.emin as i64 - e as i64)
+    };
+
+    if keep <= 0 {
+        // |x| is at or below half the minimum subnormal: rounds to 0 or to
+        // the minimum subnormal depending on the mode and the magnitude.
+        let tiny = fmt.min_subnormal();
+        let half_tiny = tiny * 0.5;
+        let ax = x.abs();
+        let up = match mode {
+            Rounding::RZ => false,
+            Rounding::RN => ax > half_tiny, // tie at exactly half goes to even(0)
+            Rounding::RNA => ax >= half_tiny,
+            Rounding::RA => true,
+        };
+        let mag = if up { tiny } else { 0.0 };
+        return if neg { -mag } else { mag };
+    }
+
+    let keep = keep as u32; // 1..=p
+    if keep >= 53 {
+        // Format is wider than the f64 significand: exact (our formats all
+        // have p <= 25 so this only triggers for precision_only sanity uses).
+        return check_overflow(x, neg, e, fmt, mode);
+    }
+    let drop = 53 - keep;
+    let mut kept = round_integer(m, drop, mode, neg);
+    let mut e2 = e;
+    if kept == 1u64 << keep {
+        // Carry out of the significand: 1.11..1 rounded up to 10.0..0.
+        kept >>= 1;
+        e2 += 1;
+        // (If we were subnormal we just became the minimum normal; `keep`
+        // bookkeeping is irrelevant now since the value is a power of two
+        // times a (keep)-bit integer either way.)
+    }
+    if kept == 0 {
+        return if neg { -0.0 } else { 0.0 };
+    }
+    // value = kept * 2^(e2 - keep + 1)
+    let mag = (kept as f64) * exp2i(e2 - keep as i32 + 1);
+    let out = if neg { -mag } else { mag };
+    check_overflow(out, neg, e2, fmt, mode)
+}
+
+#[inline]
+fn check_overflow(x: f64, neg: bool, e: i32, fmt: Format, mode: Rounding) -> f64 {
+    if e > fmt.emax || x.abs() > fmt.max_finite() {
+        match mode {
+            Rounding::RZ => {
+                let m = fmt.max_finite();
+                if neg {
+                    -m
+                } else {
+                    m
+                }
+            }
+            _ => {
+                if neg {
+                    f64::NEG_INFINITY
+                } else {
+                    f64::INFINITY
+                }
+            }
+        }
+    } else {
+        x
+    }
+}
+
+/// Round to `p` significand bits without range limits — the "accumulator
+/// with `p`-bit mantissa" primitive used by the Tensor-Core model
+/// (`p = 25`: FP32's 24 bits plus at least one extra carry bit, per
+/// Fasi et al. and the paper's mma_rn/mma_rz emulation).
+///
+/// Hot path of the whole simulator (called once per fused multiply-add):
+/// for normal finite f64 inputs the rounding is done directly on the bit
+/// pattern — truncating/incrementing the significand field carries into
+/// the exponent field *by construction* of the IEEE layout, so this is
+/// exactly equivalent to the decompose-based [`round_to_format`] (the
+/// equivalence is property-tested).
+#[inline]
+pub fn round_to_precision(x: f64, p: u32, mode: Rounding) -> f64 {
+    debug_assert!((2..=52).contains(&p) || p == 53 || p > 53);
+    if p >= 53 {
+        return x;
+    }
+    let bits = x.to_bits();
+    let biased = (bits >> 52) & 0x7ff;
+    if biased == 0 || biased == 0x7ff {
+        // Zero (exact), f64-subnormal, inf or NaN: take the exact slow path
+        // (subnormals cannot occur for GEMM-ranged data, but stay correct).
+        if x == 0.0 || !x.is_finite() {
+            return x;
+        }
+        return round_to_format(x, Format::precision_only(p), mode);
+    }
+    let drop = 53 - p; // 1..=51
+    let mask = (1u64 << drop) - 1;
+    let frac = bits & mask;
+    if frac == 0 {
+        return x; // already on the grid (common: exact products/sums)
+    }
+    let base = bits & !mask;
+    let half = 1u64 << (drop - 1);
+    let inc = match mode {
+        Rounding::RZ => false,
+        Rounding::RN => frac > half || (frac == half && (bits >> drop) & 1 == 1),
+        Rounding::RNA => frac >= half,
+        Rounding::RA => true,
+    };
+    // `+ (1 << drop)` on the magnitude carries from significand into the
+    // exponent field, which is precisely "round up one binade" in IEEE.
+    f64::from_bits(base + if inc { 1u64 << drop } else { 0 })
+}
+
+/// Truncate the last `n` mantissa bits of an `f32` (used by Fig 4's
+/// "truncate the LSB of the FP32 mantissa" experiment).
+#[inline]
+pub fn truncate_f32_mantissa_lsb(x: f32, n: u32) -> f32 {
+    debug_assert!(n < 23);
+    if !x.is_finite() {
+        return x;
+    }
+    f32::from_bits(x.to_bits() & !((1u32 << n) - 1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_inf_nan_pass_through() {
+        for &mode in &[Rounding::RN, Rounding::RNA, Rounding::RZ] {
+            assert_eq!(round_to_format(0.0, Format::F16, mode), 0.0);
+            assert!(round_to_format(f64::NAN, Format::F16, mode).is_nan());
+            assert_eq!(round_to_format(f64::INFINITY, Format::F16, mode), f64::INFINITY);
+            assert_eq!(
+                round_to_format(f64::NEG_INFINITY, Format::F16, mode),
+                f64::NEG_INFINITY
+            );
+        }
+    }
+
+    #[test]
+    fn exact_values_unchanged() {
+        // Values already representable in the target format must round-trip
+        // bit-for-bit in every mode.
+        for &mode in &[Rounding::RN, Rounding::RNA, Rounding::RZ] {
+            for &v in &[1.0, 1.5, -2.0, 0.0009765625, 65504.0, -0.333251953125] {
+                // -0.333251953125 = -0x1.554p-2: 11 significand bits.
+                assert_eq!(round_to_format(v, Format::F16, mode), v, "mode {mode:?} v {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn rn_ties_to_even() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and the next f16
+        // (1 + 2^-10): RN must pick the even significand, i.e. 1.0.
+        let x = 1.0 + exp2i(-11);
+        assert_eq!(round_to_format(x, Format::F16, Rounding::RN), 1.0);
+        // 1 + 3*2^-11 is halfway between 1+2^-10 and 1+2^-9: even is 1+2^-9.
+        let x = 1.0 + 3.0 * exp2i(-11);
+        assert_eq!(round_to_format(x, Format::F16, Rounding::RN), 1.0 + exp2i(-9));
+    }
+
+    #[test]
+    fn rna_ties_away() {
+        let x = 1.0 + exp2i(-11);
+        assert_eq!(round_to_format(x, Format::F16, Rounding::RNA), 1.0 + exp2i(-10));
+        let x = -(1.0 + exp2i(-11));
+        assert_eq!(round_to_format(x, Format::F16, Rounding::RNA), -(1.0 + exp2i(-10)));
+    }
+
+    #[test]
+    fn rz_truncates_toward_zero() {
+        let x = 1.0 + exp2i(-11) + exp2i(-20);
+        assert_eq!(round_to_format(x, Format::F16, Rounding::RZ), 1.0);
+        assert_eq!(round_to_format(-x, Format::F16, Rounding::RZ), -1.0);
+    }
+
+    #[test]
+    fn f16_overflow() {
+        assert_eq!(round_to_format(65520.0, Format::F16, Rounding::RN), f64::INFINITY);
+        assert_eq!(round_to_format(65520.0, Format::F16, Rounding::RZ), 65504.0);
+        assert_eq!(round_to_format(-1e6, Format::F16, Rounding::RNA), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn f16_subnormals_exact_grid() {
+        let tiny = Format::F16.min_subnormal(); // 2^-24
+        assert_eq!(tiny, exp2i(-24));
+        // Multiples of the subnormal quantum are exact.
+        for k in 1..32u32 {
+            let v = k as f64 * tiny;
+            assert_eq!(round_to_format(v, Format::F16, Rounding::RN), v);
+        }
+        // 1.5 quanta: RN ties-to-even -> 2 quanta? No: 1.5*tiny is a tie
+        // between 1*tiny (odd) and 2*tiny (even) -> 2*tiny.
+        assert_eq!(
+            round_to_format(1.5 * tiny, Format::F16, Rounding::RN),
+            2.0 * tiny
+        );
+        assert_eq!(round_to_format(1.5 * tiny, Format::F16, Rounding::RZ), tiny);
+        // Below half the quantum -> 0 under RN.
+        assert_eq!(round_to_format(0.49 * tiny, Format::F16, Rounding::RN), 0.0);
+        assert_eq!(round_to_format(0.51 * tiny, Format::F16, Rounding::RN), tiny);
+        // Exactly half: tie to even = 0.
+        assert_eq!(round_to_format(0.5 * tiny, Format::F16, Rounding::RN), 0.0);
+        assert_eq!(round_to_format(0.5 * tiny, Format::F16, Rounding::RNA), tiny);
+        assert_eq!(round_to_format(0.5 * tiny, Format::F16, Rounding::RZ), 0.0);
+    }
+
+    #[test]
+    fn gradual_underflow_loses_precision() {
+        // 2^-15 * (1 + 2^-10) needs 11 bits at exponent -15 (subnormal for
+        // f16: emin=-14 so only 10 bits available) -> rounds.
+        let x = exp2i(-15) * (1.0 + exp2i(-10));
+        let r = round_to_format(x, Format::F16, Rounding::RZ);
+        assert_eq!(r, exp2i(-15));
+    }
+
+    #[test]
+    fn f32_roundtrip_matches_native() {
+        // round_to_format(x, F32, RN) must agree with the hardware f64->f32
+        // conversion (which is RN) for a broad sample including subnormals.
+        let mut state = 0x9e3779b97f4a7c15u64;
+        for _ in 0..20000 {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            let f = f32::from_bits((state >> 32) as u32);
+            if !f.is_finite() {
+                continue;
+            }
+            let x = f as f64 * 1.000000119; // perturb so rounding is exercised
+            let ours = round_to_format(x, Format::F32, Rounding::RN) as f32;
+            let native = x as f32;
+            assert_eq!(ours.to_bits(), native.to_bits(), "x={x:e}");
+        }
+    }
+
+    #[test]
+    fn round_to_precision_25_bits() {
+        // 1 + 2^-24 has 25 significant bits: kept exactly at p=25,
+        // truncated to 1.0 at p=24 under RZ.
+        let x = 1.0 + exp2i(-24);
+        assert_eq!(round_to_precision(x, 25, Rounding::RZ), x);
+        assert_eq!(round_to_precision(x, 24, Rounding::RZ), 1.0);
+        assert_eq!(round_to_precision(x, 24, Rounding::RN), 1.0); // tie->even
+        assert_eq!(round_to_precision(x, 24, Rounding::RNA), 1.0 + exp2i(-23));
+    }
+
+    #[test]
+    fn fast_precision_path_equals_slow_path() {
+        // The bit-twiddling hot path must agree with the decompose-based
+        // reference on a broad random sweep, for every mode and width.
+        let mut state = 0x2545f4914f6cdd1du64;
+        for _ in 0..50_000 {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            // Random f64 with GEMM-ish exponents.
+            let e = (state % 200) as i32 - 100;
+            let m = 1.0 + (state >> 12) as f64 / (1u64 << 52) as f64;
+            let x = if state & 1 == 0 { m } else { -m } * exp2i(e);
+            for p in [10u32, 24, 25, 53] {
+                for mode in Rounding::ALL {
+                    let fast = round_to_precision(x, p, mode);
+                    let slow = round_to_format(x, Format::precision_only(p), mode);
+                    assert_eq!(
+                        fast.to_bits(),
+                        slow.to_bits(),
+                        "x={x:e} p={p} mode={mode:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn truncate_lsb() {
+        let x = f32::from_bits(0x3f800001); // 1 + 2^-23
+        assert_eq!(truncate_f32_mantissa_lsb(x, 1), 1.0);
+        assert_eq!(truncate_f32_mantissa_lsb(1.0, 1), 1.0);
+        let y = f32::from_bits(0x3f800003);
+        assert_eq!(truncate_f32_mantissa_lsb(y, 2).to_bits(), 0x3f800000);
+    }
+
+    #[test]
+    fn tf32_has_f32_exponent_range() {
+        // A value representable in f32 but far below f16 range survives TF32.
+        let x = exp2i(-100);
+        assert_eq!(round_to_format(x, Format::TF32, Rounding::RNA), x);
+        assert_eq!(round_to_format(x, Format::F16, Rounding::RNA), 0.0);
+    }
+}

@@ -1,0 +1,273 @@
+//! The hi/lo split schemes at the heart of the paper.
+//!
+//! A single-precision value `v` is approximated by a low-precision pair
+//! `(hi, lo)` so that Tensor-Core products of the pieces can reconstruct a
+//! (nearly) FP32-accurate product:
+//!
+//! * **Markidis** (eqs. 2–5): `hi = toFP16(v)`, `lo = toFP16(v - hi)` — no
+//!   scaling, so `lo` frequently lands in the FP16 subnormal range or
+//!   underflows entirely (the paper's Fig. 8).
+//! * **Ootomo (this paper)** (eqs. 19–22): `lo = toFP16((v - hi) · 2^11)` —
+//!   the exponent shift of `l_F16 + 1 = 11` cancels the exponent drop of the
+//!   residual, all but eliminating (gradual) underflow. The correction
+//!   product is divided back by `2^11` (eq. 24).
+//! * **Feng (EGEMM-TC)**: "round-split" — the rounding direction of `hi` is
+//!   chosen by the 21st mantissa bit of `v` (as literally described in their
+//!   paper, which Ootomo & Yokota argue is off by one due to the implicit
+//!   bit); no residual scaling.
+//! * **tf32tf32**: the Ootomo split with TF32 pieces (RNA conversion),
+//!   retaining FP32's full exponent range.
+//! * **bf16 triple** (TPU extension, see DESIGN §Hardware-Adaptation):
+//!   three bfloat16 pieces at scales `1, 2^8, 2^16`.
+
+use super::half::Half;
+use super::rounding::{exp2i, Rounding};
+use super::tf32::Tf32;
+
+/// The residual scaling exponent: `l_F16 + 1 = 11`, i.e. ×2048 (eq. 18).
+pub const SCALE_EXP: i32 = 11;
+/// `2^11` as f32/f64-exact constant.
+pub const SCALE: f32 = 2048.0;
+
+/// The bf16 residual scaling exponent (`l_BF16 + 1 = 8`).
+pub const BF16_SCALE_EXP: i32 = 8;
+
+/// An FP16 hi/lo pair. `lo_scaled` records whether `lo` carries the ×2^11
+/// factor (Ootomo) or not (Markidis/Feng).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SplitF16 {
+    pub hi: Half,
+    pub lo: Half,
+    pub lo_scaled: bool,
+}
+
+impl SplitF16 {
+    /// Exact reconstruction `hi + lo (/ 2^11 if scaled)` in f64.
+    pub fn reconstruct(&self) -> f64 {
+        let lo = self.lo.to_f64();
+        let lo = if self.lo_scaled { lo * exp2i(-SCALE_EXP) } else { lo };
+        self.hi.to_f64() + lo
+    }
+}
+
+/// A TF32 hi/lo pair (always scaled — the paper's tf32tf32 method).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SplitTf32 {
+    pub hi: Tf32,
+    pub lo: Tf32,
+}
+
+impl SplitTf32 {
+    pub fn reconstruct(&self) -> f64 {
+        self.hi.to_f64() + self.lo.to_f64() * exp2i(-SCALE_EXP)
+    }
+}
+
+/// Markidis et al. split (eqs. 2–5): RN conversions, unscaled residual.
+pub fn split_markidis(v: f32) -> SplitF16 {
+    let hi = Half::from_f32(v, Rounding::RN);
+    let lo = Half::from_f64(v as f64 - hi.to_f64(), Rounding::RN);
+    SplitF16 { hi, lo, lo_scaled: false }
+}
+
+/// This paper's halfhalf split (eqs. 19–22): RN conversions, residual
+/// scaled by 2^11 *before* the FP16 conversion (eq. 18).
+pub fn split_ootomo(v: f32) -> SplitF16 {
+    let hi = Half::from_f32(v, Rounding::RN);
+    let resid = (v as f64 - hi.to_f64()) * exp2i(SCALE_EXP);
+    let lo = Half::from_f64(resid, Rounding::RN);
+    SplitF16 { hi, lo, lo_scaled: true }
+}
+
+/// Feng et al.'s round-split, implemented as literally described: inspect
+/// the 21st mantissa bit (from the MSB, 1-indexed over the 23 stored bits,
+/// i.e. bit m2) of `v` and round `hi` away from zero if it is set, toward
+/// zero otherwise. The residual is converted with RN and left unscaled.
+pub fn split_feng(v: f32) -> SplitF16 {
+    let m = v.to_bits() & 0x7f_ffff;
+    let bit21 = (m >> 2) & 1; // m22 is the 1st bit, m2 the 21st
+    let mode = if bit21 == 1 { Rounding::RA } else { Rounding::RZ };
+    let hi = Half::from_f32(v, mode);
+    let lo = Half::from_f64(v as f64 - hi.to_f64(), Rounding::RN);
+    SplitF16 { hi, lo, lo_scaled: false }
+}
+
+/// Markidis-style split but with RZ conversions (the "Truncate-Split"
+/// baseline Feng et al. analyze; also used for Table 2's expectation).
+pub fn split_markidis_rz(v: f32) -> SplitF16 {
+    let hi = Half::from_f32(v, Rounding::RZ);
+    let lo = Half::from_f64(v as f64 - hi.to_f64(), Rounding::RZ);
+    SplitF16 { hi, lo, lo_scaled: false }
+}
+
+/// This paper's tf32tf32 split: RNA conversions (keeps more mantissa than
+/// RZ — §"Expectation of mantissa length"), residual scaled by 2^11.
+pub fn split_ootomo_tf32(v: f32) -> SplitTf32 {
+    let hi = Tf32::from_f32(v, Rounding::RNA);
+    let resid = (v as f64 - hi.to_f64()) * exp2i(SCALE_EXP);
+    let lo = Tf32::from_f64(resid, Rounding::RNA);
+    SplitTf32 { hi, lo }
+}
+
+/// bf16 triple split (TPU-idiomatic extension): `v ≈ b0 + b1/2^8 + b2/2^16`,
+/// each piece a bfloat16 value (stored as the f32 it equals), residuals
+/// scaled by 2^8 per level to dodge underflow exactly like eq. 18.
+pub fn split_bf16_triple(v: f32) -> (f32, f32, f32) {
+    use super::rounding::{round_to_format, Format};
+    let s = exp2i(BF16_SCALE_EXP);
+    let b0 = round_to_format(v as f64, Format::BF16, Rounding::RN);
+    let r1 = (v as f64 - b0) * s;
+    let b1 = round_to_format(r1, Format::BF16, Rounding::RN);
+    let r2 = (r1 - b1) * s;
+    let b2 = round_to_format(r2, Format::BF16, Rounding::RN);
+    (b0 as f32, b1 as f32, b2 as f32)
+}
+
+/// Reconstruct a bf16 triple.
+pub fn reconstruct_bf16_triple(t: (f32, f32, f32)) -> f64 {
+    let s = exp2i(-BF16_SCALE_EXP);
+    t.0 as f64 + (t.1 as f64) * s + (t.2 as f64) * s * s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_f32s(n: usize, seed: u64) -> Vec<f32> {
+        // Uniform(-1,1) plus exponent-spread extremes.
+        let mut out = Vec::with_capacity(n);
+        let mut s = seed | 1;
+        for i in 0..n {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            let u = (s >> 11) as f64 / (1u64 << 53) as f64; // [0,1)
+            let v = match i % 4 {
+                0 => (2.0 * u - 1.0) as f32,
+                1 => ((2.0 * u - 1.0) * 1e-6) as f32,
+                2 => ((2.0 * u - 1.0) * 1e6) as f32,
+                _ => ((2.0 * u - 1.0) * 2f64.powi((i % 61) as i32 - 30)) as f32,
+            };
+            out.push(v);
+        }
+        out
+    }
+
+    #[test]
+    fn markidis_residual_smaller_than_hi_ulp() {
+        for v in sample_f32s(5000, 0xdead) {
+            let s = split_markidis(v);
+            // |v - hi| <= ulp(hi)/2 for RN (absolute ulp floor of 2^-24 in
+            // the subnormal range).
+            if v != 0.0 && !s.hi.is_zero() && !s.hi.is_infinite() {
+                let ulp = (s.hi.to_f64().abs() * exp2i(-10)).max(exp2i(-24));
+                assert!(
+                    (v as f64 - s.hi.to_f64()).abs() <= 0.5 * ulp + 1e-300,
+                    "v={v:e}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ootomo_reconstruction_at_least_as_good_as_markidis() {
+        // Property: with the 2^11 scaling the residual cannot be *less*
+        // accurate than without (underflow only hurts Markidis).
+        for v in sample_f32s(20_000, 0xbeef) {
+            if !v.is_finite() || v.abs() >= 65504.0 {
+                continue;
+            }
+            let em = (split_markidis(v).reconstruct() - v as f64).abs();
+            let eo = (split_ootomo(v).reconstruct() - v as f64).abs();
+            assert!(eo <= em + 1e-300, "v={v:e} markidis_err={em:e} ootomo_err={eo:e}");
+        }
+    }
+
+    #[test]
+    fn ootomo_exact_in_comfortable_range() {
+        // For exponents where 24 bits fit in hi+lo (most of urand(-1,1)),
+        // the scaled split reconstructs v exactly at least 1/4 of the time
+        // (Table 1: P(len=23) = 3/4 and len=23 means exact).
+        let vals = sample_f32s(4000, 7)
+            .into_iter()
+            .filter(|v| v.abs() > 1e-3 && v.abs() < 1e3)
+            .collect::<Vec<_>>();
+        let exact = vals
+            .iter()
+            .filter(|&&v| split_ootomo(v).reconstruct() == v as f64)
+            .count();
+        assert!(
+            exact as f64 / vals.len() as f64 > 0.5,
+            "only {exact}/{} exact",
+            vals.len()
+        );
+    }
+
+    #[test]
+    fn tf32_split_exact_over_wide_exponents() {
+        // tf32tf32 keeps FP32's exponent range: the split must stay accurate
+        // even at exponents where halfhalf is dead (Fig 9 / Fig 11 Type 4).
+        for e in [-120i32, -80, -40, 0, 40, 80, 120] {
+            let v = (1.7182818 * exp2i(e)) as f32;
+            let s = split_ootomo_tf32(v);
+            let err = (s.reconstruct() - v as f64).abs();
+            let rel = err / (v as f64).abs();
+            assert!(rel < exp2i(-21), "e={e} rel={rel:e}");
+            // While halfhalf at e=-40 keeps nothing:
+            if e <= -40 {
+                let h = split_ootomo(v);
+                assert!(h.hi.is_zero(), "halfhalf hi should underflow at e={e}");
+            }
+        }
+    }
+
+    #[test]
+    fn feng_split_is_well_formed() {
+        for v in sample_f32s(5000, 99) {
+            if !v.is_finite() || v.abs() >= 32768.0 {
+                continue;
+            }
+            let s = split_feng(v);
+            // hi within 1 ulp of v (directed rounding), residual representable.
+            if !s.hi.is_zero() && !s.hi.is_infinite() {
+                let ulp = (s.hi.to_f64().abs() * exp2i(-10)).max(exp2i(-24));
+                assert!((v as f64 - s.hi.to_f64()).abs() <= ulp + 1e-300, "v={v:e}");
+            }
+        }
+    }
+
+    #[test]
+    fn scaling_does_not_change_mantissa() {
+        // Eq. 18's claim: multiplying by 2^11 shifts the exponent only.
+        // Where neither path over/underflows, lo(ootomo) == lo(markidis)*2^11.
+        for v in sample_f32s(5000, 0x5eed) {
+            if v.abs() < 1e-2 || v.abs() > 1e2 {
+                continue;
+            }
+            let m = split_markidis(v);
+            let o = split_ootomo(v);
+            if !m.lo.is_zero() && !m.lo.is_subnormal() {
+                assert_eq!(
+                    o.lo.to_f64(),
+                    m.lo.to_f64() * exp2i(SCALE_EXP),
+                    "v={v:e}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_triple_recovers_f32() {
+        // 3×8 = 24 significand bits: reconstruction must be f32-exact for
+        // comfortably-ranged values.
+        for v in sample_f32s(5000, 0xabcd) {
+            if v.abs() < 1e-20 || v.abs() > 1e20 || !v.is_finite() {
+                continue;
+            }
+            let t = split_bf16_triple(v);
+            let r = reconstruct_bf16_triple(t);
+            let rel = ((r - v as f64) / v as f64).abs();
+            assert!(rel < exp2i(-23), "v={v:e} rel={rel:e}");
+        }
+    }
+}

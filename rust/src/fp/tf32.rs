@@ -1,0 +1,99 @@
+//! NVIDIA TF32 (TensorFloat-32).
+//!
+//! TF32 is the Ampere Tensor-Core input type: FP32's 8-bit exponent with a
+//! 10-bit stored mantissa (11 significand bits incl. the implicit one). Every
+//! TF32 value is exactly representable in `f32`, so we store it as an `f32`
+//! constrained to the TF32 grid. The paper converts FP32→TF32 with **RNA**
+//! (more mantissa kept than RZ, see §"Expectation of mantissa length").
+
+use super::rounding::{round_to_format, Format, Rounding};
+
+/// A TF32 value (an `f32` guaranteed to lie on the TF32 grid).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Tf32(f32);
+
+impl Tf32 {
+    pub const ZERO: Tf32 = Tf32(0.0);
+
+    /// Convert from `f32`. Hardware exposes RNA and RZ for this conversion;
+    /// RN is also provided for experiments.
+    pub fn from_f32(x: f32, mode: Rounding) -> Tf32 {
+        Tf32(round_to_format(x as f64, Format::TF32, mode) as f32)
+    }
+
+    pub fn from_f64(x: f64, mode: Rounding) -> Tf32 {
+        Tf32(round_to_format(x, Format::TF32, mode) as f32)
+    }
+
+    /// Exact value (every TF32 is an f32).
+    #[inline]
+    pub fn to_f32(self) -> f32 {
+        self.0
+    }
+
+    #[inline]
+    pub fn to_f64(self) -> f64 {
+        self.0 as f64
+    }
+
+    pub fn is_zero(self) -> bool {
+        self.0 == 0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp::rounding::exp2i;
+
+    #[test]
+    fn grid_is_11_bits() {
+        // 1 + 2^-10 is on the grid; 1 + 2^-11 is exactly halfway.
+        let on = 1.0f32 + 2f32.powi(-10);
+        assert_eq!(Tf32::from_f32(on, Rounding::RZ).to_f32(), on);
+        let tie = 1.0f32 + 2f32.powi(-11);
+        assert_eq!(Tf32::from_f32(tie, Rounding::RNA).to_f64(), 1.0 + exp2i(-10));
+        assert_eq!(Tf32::from_f32(tie, Rounding::RZ).to_f64(), 1.0);
+        assert_eq!(Tf32::from_f32(tie, Rounding::RN).to_f64(), 1.0);
+    }
+
+    #[test]
+    fn full_f32_exponent_range() {
+        // Values across the whole f32 normal exponent range survive.
+        for e in [-126, -100, -37, 0, 100, 127] {
+            let v = exp2i(e) as f32;
+            assert_eq!(Tf32::from_f32(v, Rounding::RNA).to_f64(), v as f64, "e={e}");
+        }
+    }
+
+    #[test]
+    fn idempotent() {
+        let mut state = 42u64;
+        for _ in 0..10_000 {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let x = f32::from_bits((state >> 33) as u32);
+            if !x.is_finite() {
+                continue;
+            }
+            for &mode in &[Rounding::RN, Rounding::RNA, Rounding::RZ] {
+                let t = Tf32::from_f32(x, mode);
+                let t2 = Tf32::from_f32(t.to_f32(), mode);
+                assert_eq!(t.to_f32().to_bits(), t2.to_f32().to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn mantissa_matches_f16_at_unit_scale() {
+        // For values whose exponent is within f16's normal range, TF32 and
+        // f16 share the same 11-bit significand grid (this is why the same
+        // 2^11 residual scaling applies to both paths).
+        use crate::fp::half::Half;
+        let samples = [1.234567f32, 0.77777f32, 3.99999f32, 1.0008f32];
+        for &x in &samples {
+            let t = Tf32::from_f32(x, Rounding::RN).to_f64();
+            let h = Half::from_f32(x, Rounding::RN).to_f64();
+            assert_eq!(t, h, "x={x}");
+        }
+    }
+}

@@ -1,0 +1,593 @@
+//! The GEMM method zoo (Table 4 plus ablations).
+//!
+//! | backend            | stands in for        | split        | accumulation |
+//! |--------------------|----------------------|--------------|--------------|
+//! | `SimtBackend`      | cublas_simt (SGEMM)  | none         | FP32 RN      |
+//! | `TcPlainBackend`   | cublas_fp16tc/tf32tc | hi only      | inside TC, RZ|
+//! | `MarkidisBackend`  | Markidis et al.      | eqs. 2–5     | inside TC, RZ|
+//! | `FengBackend`      | Feng et al. EGEMM-TC | round-split  | inside TC, RZ|
+//! | `OursBackend`      | cutlass_halfhalf /   | eqs. 19–22   | A·B outside  |
+//! |                    | cutlass_tf32tf32     | (×2^11)      | TC (RN), dc  |
+//! |                    |                      |              | inside TC    |
+//!
+//! `OursBackend` exposes ablation switches (`avoid_rz`, `keep_delta2`) so the
+//! benches can isolate each of the paper's design decisions.
+
+use super::tiled::{KernelBackend, TileState, INST_K};
+use crate::fp::{
+    split_feng, split_markidis, split_ootomo, split_ootomo_tf32, Half, Rounding, Tf32,
+};
+use crate::tcsim::{mma_tile_acc, mma_tile_zero_into, MmaConfig};
+
+/// Which low-precision input grid a Tensor-Core path uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Grid {
+    /// FP16 inputs (RN conversion — CUDA default).
+    F16,
+    /// TF32 inputs (RNA conversion — what the paper uses on Ampere).
+    Tf32,
+}
+
+impl Grid {
+    #[inline]
+    fn quantize(self, x: f32) -> f32 {
+        match self {
+            Grid::F16 => Half::from_f32(x, Rounding::RN).to_f32(),
+            Grid::Tf32 => Tf32::from_f32(x, Rounding::RNA).to_f32(),
+        }
+    }
+}
+
+#[inline]
+fn quantize_panel(grid: Grid, src: &[f32], dst: &mut Vec<f32>) {
+    dst.clear();
+    dst.extend(src.iter().map(|&x| grid.quantize(x)));
+}
+
+/// Split a packed panel into hi/lo panels with the given splitter.
+#[inline]
+fn split_panel(src: &[f32], hi: &mut Vec<f32>, lo: &mut Vec<f32>, f: impl Fn(f32) -> (f32, f32)) {
+    hi.clear();
+    lo.clear();
+    for &x in src {
+        let (h, l) = f(x);
+        hi.push(h);
+        lo.push(l);
+    }
+}
+
+/// Iterate `kb` in chunks of the instruction k (8), yielding packed
+/// sub-panels. `a` is tm×kb, `b` is kb×tn; the chunk views need repacking
+/// for `a` (columns) — done into scratch buffers.
+fn for_each_inst_chunk(
+    a: &[f32],
+    b: &[f32],
+    tm: usize,
+    tn: usize,
+    kb: usize,
+    mut f: impl FnMut(&[f32], &[f32], usize),
+) {
+    let mut a_chunk: Vec<f32> = Vec::with_capacity(tm * INST_K);
+    let mut k0 = 0;
+    while k0 < kb {
+        let kc = INST_K.min(kb - k0);
+        a_chunk.clear();
+        for i in 0..tm {
+            a_chunk.extend_from_slice(&a[i * kb + k0..i * kb + k0 + kc]);
+        }
+        let b_chunk = &b[k0 * tn..(k0 + kc) * tn];
+        f(&a_chunk, b_chunk, kc);
+        k0 += kc;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FP32 SIMT (cuBLAS SGEMM stand-in)
+// ---------------------------------------------------------------------------
+
+/// FP32 SIMT GEMM: native f32 FMA chain (RN everywhere).
+pub struct SimtBackend;
+
+impl KernelBackend for SimtBackend {
+    fn name(&self) -> &'static str {
+        "cublas_simt(FP32)"
+    }
+
+    fn process_kblock(&self, st: &mut TileState, a: &[f32], b: &[f32], tm: usize, tn: usize, kb: usize) {
+        for i in 0..tm {
+            for j in 0..tn {
+                let mut acc = st.c[i * tn + j];
+                for l in 0..kb {
+                    acc += a[i * kb + l] * b[l * tn + j];
+                }
+                st.c[i * tn + j] = acc;
+            }
+        }
+    }
+
+    fn finalize(&self, st: TileState, _tm: usize, _tn: usize) -> Vec<f32> {
+        st.c
+    }
+
+    fn tc_term_count(&self) -> usize {
+        0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Plain Tensor-Core (no correction)
+// ---------------------------------------------------------------------------
+
+/// Uncorrected Tensor-Core GEMM: inputs quantized to the grid, accumulator
+/// lives inside the TC (RZ after every k-step) — cublas_fp16tc/tf32tc.
+pub struct TcPlainBackend {
+    pub grid: Grid,
+    pub mma: MmaConfig,
+}
+
+impl TcPlainBackend {
+    pub fn f16() -> Self {
+        TcPlainBackend { grid: Grid::F16, mma: MmaConfig::TENSOR_CORE }
+    }
+    pub fn tf32() -> Self {
+        TcPlainBackend { grid: Grid::Tf32, mma: MmaConfig::TENSOR_CORE }
+    }
+}
+
+impl KernelBackend for TcPlainBackend {
+    fn name(&self) -> &'static str {
+        match self.grid {
+            Grid::F16 => "cublas_fp16tc",
+            Grid::Tf32 => "cublas_tf32tc",
+        }
+    }
+
+    fn process_kblock(&self, st: &mut TileState, a: &[f32], b: &[f32], tm: usize, tn: usize, kb: usize) {
+        let mut aq = Vec::new();
+        let mut bq = Vec::new();
+        quantize_panel(self.grid, a, &mut aq);
+        quantize_panel(self.grid, b, &mut bq);
+        for_each_inst_chunk(&aq, &bq, tm, tn, kb, |ac, bc, kc| {
+            mma_tile_acc(&mut st.c, ac, bc, tm, tn, kc, self.mma);
+        });
+    }
+
+    fn finalize(&self, st: TileState, _tm: usize, _tn: usize) -> Vec<f32> {
+        st.c
+    }
+
+    fn tc_term_count(&self) -> usize {
+        1
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Markidis / Feng error correction (4 terms, all inside the TC)
+// ---------------------------------------------------------------------------
+
+/// Which classic split a 4-term corrected backend uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClassicSplit {
+    Markidis,
+    Feng,
+}
+
+/// Markidis'/Feng's 4-term corrected GEMM exactly as in the paper's Code 2:
+/// `C += ΔA·ΔB + ΔA·B + A·ΔB + A·B`, every term accumulated in the Tensor
+/// Core fragment (RZ), residuals unscaled.
+pub struct ClassicCorrectedBackend {
+    pub split: ClassicSplit,
+    pub mma: MmaConfig,
+}
+
+impl ClassicCorrectedBackend {
+    pub fn markidis() -> Self {
+        ClassicCorrectedBackend { split: ClassicSplit::Markidis, mma: MmaConfig::TENSOR_CORE }
+    }
+    pub fn feng() -> Self {
+        ClassicCorrectedBackend { split: ClassicSplit::Feng, mma: MmaConfig::TENSOR_CORE }
+    }
+    /// The Fig. 5 experiment: Markidis' method on an `mma_rn` device.
+    pub fn markidis_with(mma: MmaConfig) -> Self {
+        ClassicCorrectedBackend { split: ClassicSplit::Markidis, mma }
+    }
+
+    fn do_split(&self, x: f32) -> (f32, f32) {
+        match self.split {
+            ClassicSplit::Markidis => {
+                let s = split_markidis(x);
+                (s.hi.to_f32(), s.lo.to_f32())
+            }
+            ClassicSplit::Feng => {
+                let s = split_feng(x);
+                (s.hi.to_f32(), s.lo.to_f32())
+            }
+        }
+    }
+}
+
+impl KernelBackend for ClassicCorrectedBackend {
+    fn name(&self) -> &'static str {
+        match (self.split, self.mma.acc_rounding) {
+            (ClassicSplit::Markidis, Rounding::RZ) => "markidis",
+            (ClassicSplit::Markidis, _) => "markidis(mma_rn)",
+            (ClassicSplit::Feng, _) => "feng(egemm-tc)",
+        }
+    }
+
+    fn process_kblock(&self, st: &mut TileState, a: &[f32], b: &[f32], tm: usize, tn: usize, kb: usize) {
+        let (mut ah, mut al, mut bh, mut bl) = (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+        split_panel(a, &mut ah, &mut al, |x| self.do_split(x));
+        split_panel(b, &mut bh, &mut bl, |x| self.do_split(x));
+        // Code 2 issue order: ΔA·ΔB, ΔA·B, A·ΔB, A·B — all into frag_c.
+        let terms: [(&[f32], &[f32]); 4] =
+            [(&al, &bl), (&al, &bh), (&ah, &bl), (&ah, &bh)];
+        for (ta, tb) in terms {
+            for_each_inst_chunk(ta, tb, tm, tn, kb, |ac, bc, kc| {
+                mma_tile_acc(&mut st.c, ac, bc, tm, tn, kc, self.mma);
+            });
+        }
+    }
+
+    fn finalize(&self, st: TileState, _tm: usize, _tn: usize) -> Vec<f32> {
+        st.c
+    }
+
+    fn tc_term_count(&self) -> usize {
+        4
+    }
+}
+
+// ---------------------------------------------------------------------------
+// This paper's method (cutlass_halfhalf / cutlass_tf32tf32)
+// ---------------------------------------------------------------------------
+
+/// Ootomo & Yokota's corrected GEMM (Code 3 / eq. 24):
+/// * residuals scaled by 2^11 before conversion (eq. 18),
+/// * `A·B` computed with a **zero C fragment** and accumulated outside the
+///   TC on the FP32 (RN) datapath,
+/// * correction `dc = ΔA·B + A·ΔB` accumulated inside the TC (RZ is
+///   harmless there — the term is 2^11 smaller),
+/// * `ΔA·ΔB` dropped (eq. 24) unless `keep_delta2` (ablation),
+/// * epilogue `C += dc / 2^11` (+ `dc2 / 2^22` if kept).
+pub struct OursBackend {
+    pub grid: Grid,
+    pub mma: MmaConfig,
+    /// Accumulate A·B outside the TC (the paper's RZ-avoidance). Turning
+    /// this off reproduces "scaling only" for ablation.
+    pub avoid_rz: bool,
+    /// Keep the ΔA·ΔB term (4-term ablation; eq. 23 instead of eq. 24).
+    pub keep_delta2: bool,
+}
+
+impl OursBackend {
+    /// cutlass_halfhalf with the paper's defaults.
+    pub fn halfhalf() -> Self {
+        OursBackend {
+            grid: Grid::F16,
+            mma: MmaConfig::TENSOR_CORE,
+            avoid_rz: true,
+            keep_delta2: false,
+        }
+    }
+    /// cutlass_tf32tf32 with the paper's defaults.
+    pub fn tf32tf32() -> Self {
+        OursBackend {
+            grid: Grid::Tf32,
+            mma: MmaConfig::TENSOR_CORE,
+            avoid_rz: true,
+            keep_delta2: false,
+        }
+    }
+
+    fn do_split(&self, x: f32) -> (f32, f32) {
+        match self.grid {
+            Grid::F16 => {
+                let s = split_ootomo(x);
+                (s.hi.to_f32(), s.lo.to_f32())
+            }
+            Grid::Tf32 => {
+                let s = split_ootomo_tf32(x);
+                (s.hi.to_f32(), s.lo.to_f32())
+            }
+        }
+    }
+}
+
+const INV_SCALE: f32 = 1.0 / crate::fp::SCALE; // 2^-11
+const INV_SCALE2: f32 = INV_SCALE * INV_SCALE; // 2^-22
+
+impl KernelBackend for OursBackend {
+    fn name(&self) -> &'static str {
+        match (self.grid, self.avoid_rz, self.keep_delta2) {
+            (Grid::F16, true, false) => "cutlass_halfhalf",
+            (Grid::Tf32, true, false) => "cutlass_tf32tf32",
+            (Grid::F16, false, false) => "halfhalf(no-rz-avoid)",
+            (Grid::Tf32, false, false) => "tf32tf32(no-rz-avoid)",
+            (Grid::F16, true, true) => "halfhalf(4-term)",
+            (Grid::Tf32, true, true) => "tf32tf32(4-term)",
+            (Grid::F16, false, true) => "halfhalf(no-rz-avoid,4-term)",
+            (Grid::Tf32, false, true) => "tf32tf32(no-rz-avoid,4-term)",
+        }
+    }
+
+    fn process_kblock(&self, st: &mut TileState, a: &[f32], b: &[f32], tm: usize, tn: usize, kb: usize) {
+        let (mut ah, mut al, mut bh, mut bl) = (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+        split_panel(a, &mut ah, &mut al, |x| self.do_split(x));
+        split_panel(b, &mut bh, &mut bl, |x| self.do_split(x));
+
+        // Correction terms: frag_dc += ΔA·B ; frag_dc += A·ΔB (inside TC).
+        for (ta, tb) in [(&al, &bh), (&ah, &bl)] {
+            for_each_inst_chunk(ta, tb, tm, tn, kb, |ac, bc, kc| {
+                mma_tile_acc(&mut st.dc, ac, bc, tm, tn, kc, self.mma);
+            });
+        }
+        if self.keep_delta2 {
+            for_each_inst_chunk(&al, &bl, tm, tn, kb, |ac, bc, kc| {
+                mma_tile_acc(&mut st.dc2, ac, bc, tm, tn, kc, self.mma);
+            });
+        }
+
+        // Main term A·B.
+        if self.avoid_rz {
+            // Zero-C MMA per instruction chunk; accumulate on the SIMT path.
+            let mut tmp = vec![0.0f32; tm * tn];
+            for_each_inst_chunk(&ah, &bh, tm, tn, kb, |ac, bc, kc| {
+                mma_tile_zero_into(&mut tmp, ac, bc, tm, tn, kc, self.mma);
+                for (c, t) in st.c.iter_mut().zip(tmp.iter()) {
+                    *c += *t; // FP32 RN add — the paper's Fig. 6 (right)
+                }
+            });
+        } else {
+            for_each_inst_chunk(&ah, &bh, tm, tn, kb, |ac, bc, kc| {
+                mma_tile_acc(&mut st.c, ac, bc, tm, tn, kc, self.mma);
+            });
+        }
+    }
+
+    fn finalize(&self, st: TileState, _tm: usize, _tn: usize) -> Vec<f32> {
+        let mut out = st.c;
+        for (o, d) in out.iter_mut().zip(st.dc.iter()) {
+            *o += *d * INV_SCALE; // eq. 24 epilogue
+        }
+        if self.keep_delta2 {
+            for (o, d2) in out.iter_mut().zip(st.dc2.iter()) {
+                *o += *d2 * INV_SCALE2; // eq. 23's last term
+            }
+        }
+        out
+    }
+
+    fn tc_term_count(&self) -> usize {
+        if self.keep_delta2 {
+            4
+        } else {
+            3
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// bf16 triple-split (TPU-idiomatic extension — DESIGN.md §Hardware-Adaptation)
+// ---------------------------------------------------------------------------
+
+const INV_BF16_SCALE: f32 = 1.0 / 256.0; // 2^-8
+const INV_BF16_SCALE2: f32 = INV_BF16_SCALE * INV_BF16_SCALE; // 2^-16
+
+/// FP32 GEMM from **bfloat16** pieces: `v ≈ b0 + b1/2^8 + b2/2^16`
+/// (3×8 significand bits ≥ FP32's 24). Six product terms recover FP32
+/// accuracy: `C = T00 + (T01+T10)/2^8 + (T11+T02+T20)/2^16`; terms below
+/// 2^-24 are dropped exactly like the paper drops ΔA·ΔB in eq. 24.
+/// bf16 shares FP32's exponent range, so like tf32tf32 this variant has no
+/// Type-4 cliff — it is what the paper's method becomes on hardware whose
+/// matrix unit eats bf16 (TPUs).
+pub struct Bf16TripleBackend {
+    pub mma: MmaConfig,
+}
+
+impl Bf16TripleBackend {
+    pub fn new() -> Self {
+        Bf16TripleBackend { mma: MmaConfig::TENSOR_CORE }
+    }
+}
+
+impl Default for Bf16TripleBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+fn split_panel3(src: &[f32], p0: &mut Vec<f32>, p1: &mut Vec<f32>, p2: &mut Vec<f32>) {
+    p0.clear();
+    p1.clear();
+    p2.clear();
+    for &x in src {
+        let (b0, b1, b2) = crate::fp::split_bf16_triple(x);
+        p0.push(b0);
+        p1.push(b1);
+        p2.push(b2);
+    }
+}
+
+impl KernelBackend for Bf16TripleBackend {
+    fn name(&self) -> &'static str {
+        "ours_bf16x3"
+    }
+
+    fn process_kblock(&self, st: &mut TileState, a: &[f32], b: &[f32], tm: usize, tn: usize, kb: usize) {
+        let (mut a0, mut a1, mut a2) = (Vec::new(), Vec::new(), Vec::new());
+        let (mut b0, mut b1, mut b2) = (Vec::new(), Vec::new(), Vec::new());
+        split_panel3(a, &mut a0, &mut a1, &mut a2);
+        split_panel3(b, &mut b0, &mut b1, &mut b2);
+
+        // Scale-2^-8 correction terms, accumulated in the (simulated) TC.
+        for (ta, tb) in [(&a0, &b1), (&a1, &b0)] {
+            for_each_inst_chunk(ta, tb, tm, tn, kb, |ac, bc, kc| {
+                mma_tile_acc(&mut st.dc, ac, bc, tm, tn, kc, self.mma);
+            });
+        }
+        // Scale-2^-16 correction terms.
+        for (ta, tb) in [(&a1, &b1), (&a0, &b2), (&a2, &b0)] {
+            for_each_inst_chunk(ta, tb, tm, tn, kb, |ac, bc, kc| {
+                mma_tile_acc(&mut st.dc2, ac, bc, tm, tn, kc, self.mma);
+            });
+        }
+        // Main term with the RZ-avoidance pattern (zero C, RN outside).
+        let mut tmp = vec![0.0f32; tm * tn];
+        for_each_inst_chunk(&a0, &b0, tm, tn, kb, |ac, bc, kc| {
+            mma_tile_zero_into(&mut tmp, ac, bc, tm, tn, kc, self.mma);
+            for (c, t) in st.c.iter_mut().zip(tmp.iter()) {
+                *c += *t;
+            }
+        });
+    }
+
+    fn finalize(&self, st: TileState, _tm: usize, _tn: usize) -> Vec<f32> {
+        let mut out = st.c;
+        for ((o, d), d2) in out.iter_mut().zip(st.dc.iter()).zip(st.dc2.iter()) {
+            *o += *d * INV_BF16_SCALE + *d2 * INV_BF16_SCALE2;
+        }
+        out
+    }
+
+    fn tc_term_count(&self) -> usize {
+        6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::error::relative_residual;
+    use crate::gemm::matrix::Mat;
+    use crate::gemm::reference::{gemm_f32_naive, gemm_f64};
+    use crate::gemm::tiled::{gemm_tiled, TileConfig};
+
+    fn urand_mat(rows: usize, cols: usize, seed: u64) -> Mat {
+        let mut s = seed | 1;
+        Mat::from_fn(rows, cols, |_, _| {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            ((s >> 11) as f64 / (1u64 << 53) as f64 * 2.0 - 1.0) as f32
+        })
+    }
+
+    fn residual_of(backend: &dyn KernelBackend, m: usize, n: usize, k: usize, seed: u64) -> f64 {
+        let a = urand_mat(m, k, seed);
+        let b = urand_mat(k, n, seed.wrapping_mul(7919));
+        let c = gemm_tiled(&a, &b, &TileConfig::default(), backend);
+        let r = gemm_f64(&a, &b);
+        relative_residual(&r, &c)
+    }
+
+    #[test]
+    fn simt_tiled_matches_naive_level() {
+        let a = urand_mat(32, 64, 11);
+        let b = urand_mat(64, 32, 12);
+        let c_tiled = gemm_tiled(&a, &b, &TileConfig::default(), &SimtBackend);
+        let c_naive = gemm_f32_naive(&a, &b);
+        let r = gemm_f64(&a, &b);
+        let et = relative_residual(&r, &c_tiled);
+        let en = relative_residual(&r, &c_naive);
+        assert!(et < 1e-6 && en < 1e-6, "{et} {en}");
+    }
+
+    #[test]
+    fn accuracy_ordering_matches_paper_fig1() {
+        // At k = 1024: fp16tc (worst) > markidis > ours ≈ simt.
+        let k = 1024;
+        let e_tc = residual_of(&TcPlainBackend::f16(), 16, 16, k, 21);
+        let e_mark = residual_of(&ClassicCorrectedBackend::markidis(), 16, 16, k, 21);
+        let e_ours = residual_of(&OursBackend::halfhalf(), 16, 16, k, 21);
+        let e_simt = residual_of(&SimtBackend, 16, 16, k, 21);
+        assert!(e_tc > e_mark, "tc {e_tc} vs markidis {e_mark}");
+        assert!(e_mark > e_ours, "markidis {e_mark} vs ours {e_ours}");
+        // "exactly matches FP32": same error level (within 2x).
+        assert!(
+            e_ours <= e_simt * 2.0 + 1e-12,
+            "ours {e_ours} vs simt {e_simt}"
+        );
+    }
+
+    #[test]
+    fn tf32tf32_matches_simt_accuracy() {
+        let e_ours = residual_of(&OursBackend::tf32tf32(), 16, 16, 512, 5);
+        let e_simt = residual_of(&SimtBackend, 16, 16, 512, 5);
+        assert!(e_ours <= e_simt * 2.0 + 1e-12, "ours {e_ours} simt {e_simt}");
+    }
+
+    #[test]
+    fn dropping_delta2_changes_nothing() {
+        // The paper's eq. 24 claim: ΔA·ΔB is below FP32's LSB.
+        let a = urand_mat(16, 256, 31);
+        let b = urand_mat(256, 16, 32);
+        let cfg = TileConfig::default();
+        let c3 = gemm_tiled(&a, &b, &cfg, &OursBackend::halfhalf());
+        let c4 = gemm_tiled(
+            &a,
+            &b,
+            &cfg,
+            &OursBackend { keep_delta2: true, ..OursBackend::halfhalf() },
+        );
+        let r = gemm_f64(&a, &b);
+        let e3 = relative_residual(&r, &c3);
+        let e4 = relative_residual(&r, &c4);
+        assert!(
+            (e3 - e4).abs() <= 0.05 * e3.max(e4),
+            "3-term {e3} vs 4-term {e4}"
+        );
+    }
+
+    #[test]
+    fn rz_avoidance_is_what_fixes_markidis() {
+        // Ablation: ours without RZ-avoid degrades toward Markidis at
+        // large k; with it, matches SIMT (Fig 5's conclusion).
+        let k = 2048;
+        let e_with = residual_of(&OursBackend::halfhalf(), 16, 16, k, 77);
+        let e_without = residual_of(
+            &OursBackend { avoid_rz: false, ..OursBackend::halfhalf() },
+            16,
+            16,
+            k,
+            77,
+        );
+        assert!(e_without > e_with * 2.0, "with {e_with} without {e_without}");
+    }
+
+    #[test]
+    fn feng_does_not_beat_markidis() {
+        // The paper could not reproduce Feng's claimed advantage.
+        let e_feng = residual_of(&ClassicCorrectedBackend::feng(), 16, 16, 1024, 13);
+        let e_mark = residual_of(&ClassicCorrectedBackend::markidis(), 16, 16, 1024, 13);
+        assert!(e_feng > 0.3 * e_mark, "feng {e_feng} markidis {e_mark}");
+    }
+
+    #[test]
+    fn bf16_triple_matches_simt_accuracy() {
+        let e_bf16 = residual_of(&Bf16TripleBackend::new(), 16, 16, 512, 9);
+        let e_simt = residual_of(&SimtBackend, 16, 16, 512, 9);
+        assert!(e_bf16 <= 2.0 * e_simt + 1e-12, "bf16x3 {e_bf16} vs simt {e_simt}");
+    }
+
+    #[test]
+    fn bf16_triple_survives_wide_exponents() {
+        // Like tf32tf32, bf16 keeps FP32's exponent range: no Type-4 cliff.
+        use crate::matgen::exp_rand;
+        let a = exp_rand(24, 48, -100, -36, 17);
+        let b = exp_rand(48, 24, -100, -36, 18);
+        let c = gemm_tiled(&a, &b, &TileConfig::default(), &Bf16TripleBackend::new());
+        let r = gemm_f64(&a, &b);
+        let e = relative_residual(&r, &c);
+        let simt = relative_residual(&r, &gemm_tiled(&a, &b, &TileConfig::default(), &SimtBackend));
+        assert!(e <= 3.0 * simt, "bf16x3 {e} vs simt {simt}");
+    }
+
+    #[test]
+    fn term_counts() {
+        assert_eq!(SimtBackend.tc_term_count(), 0);
+        assert_eq!(TcPlainBackend::f16().tc_term_count(), 1);
+        assert_eq!(ClassicCorrectedBackend::markidis().tc_term_count(), 4);
+        assert_eq!(OursBackend::halfhalf().tc_term_count(), 3);
+    }
+}

@@ -1,0 +1,153 @@
+//! Batched GEMM — the `gemmStridedBatched`-shaped API downstream users
+//! expect (attention heads, blocked solvers, tensor contractions all issue
+//! many small same-shape GEMMs). Composes any [`Method`] and amortizes the
+//! split/conversion machinery across the batch; the coordinator's dynamic
+//! batcher produces exactly these shapes.
+
+use super::matrix::{Mat, MatF64};
+use super::reference::gemm_f64;
+use super::tiled::TileConfig;
+use super::Method;
+
+/// A batch of same-shape operand pairs stored contiguously
+/// (batch-major, each element row-major) — the strided-batched layout.
+#[derive(Debug, Clone)]
+pub struct BatchedOperands {
+    pub batch: usize,
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    /// `batch * m * k` values.
+    pub a: Vec<f32>,
+    /// `batch * k * n` values.
+    pub b: Vec<f32>,
+}
+
+impl BatchedOperands {
+    pub fn new(batch: usize, m: usize, k: usize, n: usize) -> BatchedOperands {
+        BatchedOperands {
+            batch,
+            m,
+            k,
+            n,
+            a: vec![0.0; batch * m * k],
+            b: vec![0.0; batch * k * n],
+        }
+    }
+
+    /// Build from per-element matrices (validates shapes).
+    pub fn from_mats(pairs: &[(Mat, Mat)]) -> BatchedOperands {
+        assert!(!pairs.is_empty());
+        let (m, k) = (pairs[0].0.rows, pairs[0].0.cols);
+        let n = pairs[0].1.cols;
+        let mut out = BatchedOperands::new(pairs.len(), m, k, n);
+        for (i, (a, b)) in pairs.iter().enumerate() {
+            assert_eq!((a.rows, a.cols), (m, k), "batch element {i} shape mismatch");
+            assert_eq!((b.rows, b.cols), (k, n), "batch element {i} shape mismatch");
+            out.a[i * m * k..(i + 1) * m * k].copy_from_slice(&a.data);
+            out.b[i * k * n..(i + 1) * k * n].copy_from_slice(&b.data);
+        }
+        out
+    }
+
+    /// View batch element `i` as (A, B) matrices.
+    pub fn element(&self, i: usize) -> (Mat, Mat) {
+        let (m, k, n) = (self.m, self.k, self.n);
+        (
+            Mat::from_vec(m, k, self.a[i * m * k..(i + 1) * m * k].to_vec()),
+            Mat::from_vec(k, n, self.b[i * k * n..(i + 1) * k * n].to_vec()),
+        )
+    }
+}
+
+/// `C_i = A_i · B_i` for every batch element, on `method`. Output is
+/// batch-major contiguous (`batch * m * n`).
+pub fn gemm_batched(ops: &BatchedOperands, method: Method, cfg: &TileConfig) -> Vec<Mat> {
+    (0..ops.batch)
+        .map(|i| {
+            let (a, b) = ops.element(i);
+            method.run(&a, &b, cfg)
+        })
+        .collect()
+}
+
+/// FP64 references for a whole batch (testing/auditing support).
+pub fn gemm_batched_f64(ops: &BatchedOperands) -> Vec<MatF64> {
+    (0..ops.batch)
+        .map(|i| {
+            let (a, b) = ops.element(i);
+            gemm_f64(&a, &b)
+        })
+        .collect()
+}
+
+/// Worst relative residual across a batch (the audit the e2e driver runs).
+pub fn batched_worst_residual(ops: &BatchedOperands, cs: &[Mat]) -> f64 {
+    let refs = gemm_batched_f64(ops);
+    refs.iter()
+        .zip(cs)
+        .map(|(r, c)| super::error::relative_residual(r, c))
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matgen::urand;
+
+    fn batch(bs: usize, m: usize, k: usize, n: usize, seed: u64) -> BatchedOperands {
+        let pairs: Vec<(Mat, Mat)> = (0..bs)
+            .map(|i| {
+                (
+                    urand(m, k, -1.0, 1.0, seed + i as u64),
+                    urand(k, n, -1.0, 1.0, seed + 100 + i as u64),
+                )
+            })
+            .collect();
+        BatchedOperands::from_mats(&pairs)
+    }
+
+    #[test]
+    fn element_roundtrip() {
+        let ops = batch(3, 4, 5, 6, 1);
+        let (a, b) = ops.element(2);
+        assert_eq!((a.rows, a.cols, b.cols), (4, 5, 6));
+        // Last element's first value matches the packed layout.
+        assert_eq!(a.data[0], ops.a[2 * 4 * 5]);
+        assert_eq!(b.data[0], ops.b[2 * 5 * 6]);
+    }
+
+    #[test]
+    fn batched_equals_per_element() {
+        let ops = batch(4, 8, 16, 8, 7);
+        let cfg = TileConfig::default();
+        let cs = gemm_batched(&ops, Method::OursHalfHalf, &cfg);
+        assert_eq!(cs.len(), 4);
+        for i in 0..4 {
+            let (a, b) = ops.element(i);
+            let direct = Method::OursHalfHalf.run(&a, &b, &cfg);
+            assert_eq!(cs[i].data, direct.data, "element {i} diverged");
+        }
+    }
+
+    #[test]
+    fn batched_accuracy_audit() {
+        let ops = batch(4, 16, 64, 16, 9);
+        let cfg = TileConfig::default();
+        let ec = gemm_batched(&ops, Method::OursHalfHalf, &cfg);
+        let simt = gemm_batched(&ops, Method::Fp32Simt, &cfg);
+        let e_ec = batched_worst_residual(&ops, &ec);
+        let e_simt = batched_worst_residual(&ops, &simt);
+        assert!(e_ec <= 2.5 * e_simt + 1e-12, "{e_ec} vs {e_simt}");
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn rejects_ragged_batches() {
+        let pairs = vec![
+            (urand(4, 4, -1.0, 1.0, 1), urand(4, 4, -1.0, 1.0, 2)),
+            (urand(4, 5, -1.0, 1.0, 3), urand(5, 4, -1.0, 1.0, 4)),
+        ];
+        BatchedOperands::from_mats(&pairs);
+    }
+}

@@ -1,0 +1,188 @@
+//! Complex single-precision GEMM — the qFlex use case the paper motivates
+//! (quantum-circuit tensor contraction uses complex CGEMM; qFlex rejected
+//! FP16 Tensor Cores over exponent range, which tf32tf32 fixes).
+//!
+//! Two algorithms over the real GEMM backends:
+//! * **4M**: `Re = Ar·Br − Ai·Bi`, `Im = Ar·Bi + Ai·Br` — 4 real GEMMs,
+//!   numerically the safest.
+//! * **3M** (Karatsuba-style): `T1 = Ar·Br`, `T2 = Ai·Bi`,
+//!   `T3 = (Ar+Ai)·(Br+Bi)`, `Re = T1 − T2`, `Im = T3 − T1 − T2` —
+//!   25% fewer GEMM flops at the cost of mild cancellation in `Im`
+//!   (bounded; cuBLAS uses the same trick in CGEMM3M).
+
+use super::matrix::{Mat, MatF64};
+use super::reference::gemm_f64;
+use super::tiled::TileConfig;
+use super::Method;
+
+/// A complex matrix as a (re, im) pair of real matrices.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CMat {
+    pub re: Mat,
+    pub im: Mat,
+}
+
+impl CMat {
+    pub fn zeros(rows: usize, cols: usize) -> CMat {
+        CMat { re: Mat::zeros(rows, cols), im: Mat::zeros(rows, cols) }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.re.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.re.cols
+    }
+
+    /// Frobenius norm over both parts.
+    pub fn fro_norm(&self) -> f64 {
+        (self.re.fro_norm().powi(2) + self.im.fro_norm().powi(2)).sqrt()
+    }
+}
+
+/// FP64 complex reference pair.
+pub struct CMatF64 {
+    pub re: MatF64,
+    pub im: MatF64,
+}
+
+/// Which complex decomposition to use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CgemmAlgo {
+    FourM,
+    ThreeM,
+}
+
+/// Complex GEMM `C = X·Y` with each real GEMM run on `method`.
+pub fn cgemm(x: &CMat, y: &CMat, method: Method, algo: CgemmAlgo, cfg: &TileConfig) -> CMat {
+    assert_eq!(x.cols(), y.rows());
+    let (m, n) = (x.rows(), y.cols());
+    match algo {
+        CgemmAlgo::FourM => {
+            let rr = method.run(&x.re, &y.re, cfg);
+            let ii = method.run(&x.im, &y.im, cfg);
+            let ri = method.run(&x.re, &y.im, cfg);
+            let ir = method.run(&x.im, &y.re, cfg);
+            CMat {
+                re: Mat::from_fn(m, n, |i, j| rr.get(i, j) - ii.get(i, j)),
+                im: Mat::from_fn(m, n, |i, j| ri.get(i, j) + ir.get(i, j)),
+            }
+        }
+        CgemmAlgo::ThreeM => {
+            let k = x.cols();
+            let xs = Mat::from_fn(m, k, |i, j| x.re.get(i, j) + x.im.get(i, j));
+            let ys = Mat::from_fn(k, n, |i, j| y.re.get(i, j) + y.im.get(i, j));
+            let t1 = method.run(&x.re, &y.re, cfg);
+            let t2 = method.run(&x.im, &y.im, cfg);
+            let t3 = method.run(&xs, &ys, cfg);
+            CMat {
+                re: Mat::from_fn(m, n, |i, j| t1.get(i, j) - t2.get(i, j)),
+                im: Mat::from_fn(m, n, |i, j| t3.get(i, j) - t1.get(i, j) - t2.get(i, j)),
+            }
+        }
+    }
+}
+
+/// FP64 complex reference.
+pub fn cgemm_f64(x: &CMat, y: &CMat) -> CMatF64 {
+    let rr = gemm_f64(&x.re, &y.re);
+    let ii = gemm_f64(&x.im, &y.im);
+    let ri = gemm_f64(&x.re, &y.im);
+    let ir = gemm_f64(&x.im, &y.re);
+    let (m, n) = (rr.rows, rr.cols);
+    let mut re = MatF64::zeros(m, n);
+    let mut im = MatF64::zeros(m, n);
+    for i in 0..m * n {
+        re.data[i] = rr.data[i] - ii.data[i];
+        im.data[i] = ri.data[i] + ir.data[i];
+    }
+    CMatF64 { re, im }
+}
+
+/// Eq. (7) extended to complex: joint Frobenius relative residual.
+pub fn c_relative_residual(r: &CMatF64, c: &CMat) -> f64 {
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for i in 0..r.re.data.len() {
+        let dr = r.re.data[i] - c.re.data[i] as f64;
+        let di = r.im.data[i] - c.im.data[i] as f64;
+        num += dr * dr + di * di;
+        den += r.re.data[i] * r.re.data[i] + r.im.data[i] * r.im.data[i];
+    }
+    if den == 0.0 {
+        return if num == 0.0 { 0.0 } else { f64::INFINITY };
+    }
+    (num / den).sqrt()
+}
+
+/// GEMM-flop multiplier of the algorithm (for the performance model:
+/// 3M does 3 real GEMMs per complex GEMM instead of 4).
+pub fn real_gemm_count(algo: CgemmAlgo) -> usize {
+    match algo {
+        CgemmAlgo::FourM => 4,
+        CgemmAlgo::ThreeM => 3,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matgen::urand;
+
+    fn cmat(n: usize, seed: u64) -> CMat {
+        CMat { re: urand(n, n, -1.0, 1.0, seed), im: urand(n, n, -1.0, 1.0, seed + 99) }
+    }
+
+    #[test]
+    fn identity_contraction() {
+        // X · I = X in both algorithms, all methods.
+        let n = 16;
+        let x = cmat(n, 1);
+        let eye = CMat {
+            re: Mat::from_fn(n, n, |i, j| (i == j) as u32 as f32),
+            im: Mat::zeros(n, n),
+        };
+        let cfg = TileConfig::default();
+        for algo in [CgemmAlgo::FourM, CgemmAlgo::ThreeM] {
+            let c = cgemm(&x, &eye, Method::Fp32Simt, algo, &cfg);
+            for i in 0..n * n {
+                assert!((c.re.data[i] - x.re.data[i]).abs() < 1e-6);
+                assert!((c.im.data[i] - x.im.data[i]).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn corrected_methods_match_fp32_accuracy_complex() {
+        let cfg = TileConfig::default();
+        let x = cmat(48, 2);
+        let y = cmat(48, 3);
+        let r = cgemm_f64(&x, &y);
+        let simt = c_relative_residual(&r, &cgemm(&x, &y, Method::Fp32Simt, CgemmAlgo::FourM, &cfg));
+        for m in [Method::OursHalfHalf, Method::OursTf32] {
+            for algo in [CgemmAlgo::FourM, CgemmAlgo::ThreeM] {
+                let e = c_relative_residual(&r, &cgemm(&x, &y, m, algo, &cfg));
+                assert!(e <= 3.0 * simt, "{} {algo:?}: {e} vs simt {simt}", m.name());
+            }
+        }
+    }
+
+    #[test]
+    fn three_m_equals_four_m_within_cancellation_bound() {
+        let cfg = TileConfig::default();
+        let x = cmat(32, 4);
+        let y = cmat(32, 5);
+        let r = cgemm_f64(&x, &y);
+        let e4 = c_relative_residual(&r, &cgemm(&x, &y, Method::OursHalfHalf, CgemmAlgo::FourM, &cfg));
+        let e3 = c_relative_residual(&r, &cgemm(&x, &y, Method::OursHalfHalf, CgemmAlgo::ThreeM, &cfg));
+        // 3M's Im cancellation costs at most a small constant factor.
+        assert!(e3 <= 4.0 * e4 + 1e-12, "3M {e3} vs 4M {e4}");
+    }
+
+    #[test]
+    fn flop_accounting() {
+        assert_eq!(real_gemm_count(CgemmAlgo::FourM), 4);
+        assert_eq!(real_gemm_count(CgemmAlgo::ThreeM), 3);
+    }
+}

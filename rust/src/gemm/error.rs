@@ -1,0 +1,71 @@
+//! Accuracy metric — eq. (7):
+//! `RelativeResidual = ||C_FP64 − C_Target||_F / ||C_FP64||_F`.
+
+use super::matrix::{Mat, MatF64};
+
+/// Relative Frobenius residual of `c` against the FP64 oracle `c_ref`.
+pub fn relative_residual(c_ref: &MatF64, c: &Mat) -> f64 {
+    assert_eq!(c_ref.rows, c.rows);
+    assert_eq!(c_ref.cols, c.cols);
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (r, t) in c_ref.data.iter().zip(c.data.iter()) {
+        let d = r - *t as f64;
+        num += d * d;
+        den += r * r;
+    }
+    if den == 0.0 {
+        return if num == 0.0 { 0.0 } else { f64::INFINITY };
+    }
+    (num / den).sqrt()
+}
+
+/// Max elementwise relative error (supplementary diagnostic).
+pub fn max_rel_error(c_ref: &MatF64, c: &Mat) -> f64 {
+    c_ref
+        .data
+        .iter()
+        .zip(c.data.iter())
+        .map(|(r, t)| {
+            if *r == 0.0 {
+                if *t == 0.0 {
+                    0.0
+                } else {
+                    f64::INFINITY
+                }
+            } else {
+                ((r - *t as f64) / r).abs()
+            }
+        })
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_residual_for_exact() {
+        let r = MatF64 { rows: 1, cols: 2, data: vec![1.0, 2.0] };
+        let c = Mat::from_vec(1, 2, vec![1.0, 2.0]);
+        assert_eq!(relative_residual(&r, &c), 0.0);
+        assert_eq!(max_rel_error(&r, &c), 0.0);
+    }
+
+    #[test]
+    fn known_residual() {
+        let r = MatF64 { rows: 1, cols: 2, data: vec![3.0, 4.0] };
+        let c = Mat::from_vec(1, 2, vec![3.0, 5.0]);
+        // ||(0,-1)|| / ||(3,4)|| = 1/5
+        assert!((relative_residual(&r, &c) - 0.2).abs() < 1e-15);
+    }
+
+    #[test]
+    fn zero_reference() {
+        let r = MatF64::zeros(2, 2);
+        let c = Mat::zeros(2, 2);
+        assert_eq!(relative_residual(&r, &c), 0.0);
+        let c2 = Mat::from_vec(2, 2, vec![0.0, 1.0, 0.0, 0.0]);
+        assert_eq!(relative_residual(&r, &c2), f64::INFINITY);
+    }
+}

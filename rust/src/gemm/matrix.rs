@@ -1,0 +1,128 @@
+//! Minimal row-major matrix containers for the GEMM substrate.
+
+/// Row-major `f32` matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Mat { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Mat {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// Copy the `tm × tn` sub-block starting at `(i0, j0)` into `out`
+    /// (row-major, tightly packed). `out` is resized as needed.
+    pub fn copy_sub_into(&self, i0: usize, j0: usize, tm: usize, tn: usize, out: &mut Vec<f32>) {
+        debug_assert!(i0 + tm <= self.rows && j0 + tn <= self.cols);
+        out.clear();
+        out.reserve(tm * tn);
+        for i in 0..tm {
+            let base = (i0 + i) * self.cols + j0;
+            out.extend_from_slice(&self.data[base..base + tn]);
+        }
+    }
+
+    /// Write a packed `tm × tn` tile back at `(i0, j0)`.
+    pub fn write_sub(&mut self, i0: usize, j0: usize, tm: usize, tn: usize, tile: &[f32]) {
+        debug_assert_eq!(tile.len(), tm * tn);
+        for i in 0..tm {
+            let base = (i0 + i) * self.cols + j0;
+            self.data[base..base + tn].copy_from_slice(&tile[i * tn..(i + 1) * tn]);
+        }
+    }
+
+    /// Frobenius norm in f64.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Elementwise map.
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    /// Largest absolute element.
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+}
+
+/// Row-major `f64` matrix (reference results).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MatF64 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl MatF64 {
+    pub fn zeros(rows: usize, cols: usize) -> MatF64 {
+        MatF64 { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.cols + j]
+    }
+
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|&x| x * x).sum::<f64>().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sub_tile_roundtrip() {
+        let m = Mat::from_fn(5, 7, |i, j| (i * 7 + j) as f32);
+        let mut t = Vec::new();
+        m.copy_sub_into(1, 2, 3, 4, &mut t);
+        assert_eq!(t.len(), 12);
+        assert_eq!(t[0], m.get(1, 2));
+        assert_eq!(t[11], m.get(3, 5));
+        let mut m2 = Mat::zeros(5, 7);
+        m2.write_sub(1, 2, 3, 4, &t);
+        assert_eq!(m2.get(2, 3), m.get(2, 3));
+        assert_eq!(m2.get(0, 0), 0.0);
+    }
+
+    #[test]
+    fn fro_norm_simple() {
+        let m = Mat::from_vec(1, 2, vec![3.0, 4.0]);
+        assert!((m.fro_norm() - 5.0).abs() < 1e-12);
+    }
+}

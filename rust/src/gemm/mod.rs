@@ -1,0 +1,182 @@
+//! Single-precision GEMM with Tensor-Core error correction — the paper's
+//! core contribution plus every baseline it compares against.
+
+pub mod backends;
+pub mod batched;
+pub mod complex;
+pub mod error;
+pub mod matrix;
+pub mod ozaki;
+pub mod reference;
+pub mod scaling;
+pub mod tiled;
+
+pub use backends::{
+    Bf16TripleBackend, ClassicCorrectedBackend, ClassicSplit, Grid, OursBackend, SimtBackend,
+    TcPlainBackend,
+};
+pub use batched::{batched_worst_residual, gemm_batched, gemm_batched_f64, BatchedOperands};
+pub use complex::{c_relative_residual, cgemm, cgemm_f64, CgemmAlgo, CMat, CMatF64};
+pub use ozaki::{ozaki_gemm, ozaki_terms, slice_bits, slices_for_fp32};
+pub use scaling::{apply_scale, gemm_scaled, plan_scale, ScalePlan};
+pub use error::{max_rel_error, relative_residual};
+pub use matrix::{Mat, MatF64};
+pub use reference::{gemm_f32_naive, gemm_f64};
+pub use tiled::{gemm_tiled, KernelBackend, TileConfig, TileState, INST_K};
+
+use crate::fp::truncate_f32_mantissa_lsb;
+
+/// Every named method in the evaluation (Table 4 + Figs 1/4/5 extras),
+/// runnable by name from the CLI, benches and the coordinator's router.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Method {
+    /// cuBLAS SGEMM on FP32 SIMT cores.
+    Fp32Simt,
+    /// cuBLAS SGEMM over FP16 Tensor Cores (no correction).
+    Fp16Tc,
+    /// cuBLAS SGEMM over TF32 Tensor Cores (no correction).
+    Tf32Tc,
+    /// Markidis et al. 4-term correction.
+    Markidis,
+    /// Markidis on the paper's `mma_rn` emulated device (Fig. 5).
+    MarkidisMmaRn,
+    /// Feng et al. EGEMM-TC round-split.
+    Feng,
+    /// This paper, FP16 pieces: cutlass_halfhalf.
+    OursHalfHalf,
+    /// This paper, TF32 pieces: cutlass_tf32tf32.
+    OursTf32,
+    /// Ablation: ours without the zero-C/outside-accumulation fix.
+    OursNoRzAvoid,
+    /// Ablation: ours keeping the ΔA·ΔB term (eq. 23).
+    OursFourTerm,
+    /// Fig. 4 control: FP32 SIMT on inputs with the mantissa LSB truncated.
+    Fp32TruncLsb,
+    /// TPU-idiomatic extension: three bfloat16 pieces, six terms
+    /// (DESIGN.md §Hardware-Adaptation).
+    OursBf16Triple,
+    /// halfhalf behind exact exponent pre-scaling (`gemm::scaling`) — the
+    /// paper's prescribed remedy for Fig. 11 Type-3/4 inputs.
+    OursHalfHalfPre,
+}
+
+impl Method {
+    pub const PAPER_FIG1: [Method; 5] =
+        [Method::OursHalfHalf, Method::Feng, Method::Markidis, Method::Fp32Simt, Method::Fp16Tc];
+
+    pub const ALL: [Method; 13] = [
+        Method::Fp32Simt,
+        Method::Fp16Tc,
+        Method::Tf32Tc,
+        Method::Markidis,
+        Method::MarkidisMmaRn,
+        Method::Feng,
+        Method::OursHalfHalf,
+        Method::OursTf32,
+        Method::OursNoRzAvoid,
+        Method::OursFourTerm,
+        Method::Fp32TruncLsb,
+        Method::OursBf16Triple,
+        Method::OursHalfHalfPre,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Fp32Simt => "cublas_simt",
+            Method::Fp16Tc => "cublas_fp16tc",
+            Method::Tf32Tc => "cublas_tf32tc",
+            Method::Markidis => "markidis",
+            Method::MarkidisMmaRn => "markidis_mma_rn",
+            Method::Feng => "feng",
+            Method::OursHalfHalf => "cutlass_halfhalf",
+            Method::OursTf32 => "cutlass_tf32tf32",
+            Method::OursNoRzAvoid => "ours_no_rz_avoid",
+            Method::OursFourTerm => "ours_four_term",
+            Method::Fp32TruncLsb => "fp32_trunc_lsb",
+            Method::OursBf16Triple => "ours_bf16x3",
+            Method::OursHalfHalfPre => "halfhalf_prescale",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Method> {
+        Method::ALL.iter().copied().find(|m| m.name() == s)
+    }
+
+    /// Instantiate the backend and run the tiled GEMM.
+    pub fn run(&self, a: &Mat, b: &Mat, cfg: &TileConfig) -> Mat {
+        match self {
+            Method::Fp32Simt => gemm_tiled(a, b, cfg, &SimtBackend),
+            Method::Fp16Tc => gemm_tiled(a, b, cfg, &TcPlainBackend::f16()),
+            Method::Tf32Tc => gemm_tiled(a, b, cfg, &TcPlainBackend::tf32()),
+            Method::Markidis => gemm_tiled(a, b, cfg, &ClassicCorrectedBackend::markidis()),
+            Method::MarkidisMmaRn => gemm_tiled(
+                a,
+                b,
+                cfg,
+                &ClassicCorrectedBackend::markidis_with(crate::tcsim::MmaConfig::MMA_RN),
+            ),
+            Method::Feng => gemm_tiled(a, b, cfg, &ClassicCorrectedBackend::feng()),
+            Method::OursHalfHalf => gemm_tiled(a, b, cfg, &OursBackend::halfhalf()),
+            Method::OursTf32 => gemm_tiled(a, b, cfg, &OursBackend::tf32tf32()),
+            Method::OursNoRzAvoid => gemm_tiled(
+                a,
+                b,
+                cfg,
+                &OursBackend { avoid_rz: false, ..OursBackend::halfhalf() },
+            ),
+            Method::OursFourTerm => gemm_tiled(
+                a,
+                b,
+                cfg,
+                &OursBackend { keep_delta2: true, ..OursBackend::halfhalf() },
+            ),
+            Method::OursBf16Triple => gemm_tiled(a, b, cfg, &Bf16TripleBackend::new()),
+            Method::OursHalfHalfPre => scaling::gemm_scaled(a, b, Method::OursHalfHalf, cfg),
+            Method::Fp32TruncLsb => {
+                let at = a.map(|x| truncate_f32_mantissa_lsb(x, 1));
+                let bt = b.map(|x| truncate_f32_mantissa_lsb(x, 1));
+                gemm_tiled(&at, &bt, cfg, &SimtBackend)
+            }
+        }
+    }
+
+    /// Tensor-Core low-precision GEMM term count (performance model input).
+    pub fn tc_terms(&self) -> usize {
+        match self {
+            Method::Fp32Simt | Method::Fp32TruncLsb => 0,
+            Method::Fp16Tc | Method::Tf32Tc => 1,
+            Method::Markidis | Method::MarkidisMmaRn | Method::Feng | Method::OursFourTerm => 4,
+            Method::OursHalfHalf
+            | Method::OursTf32
+            | Method::OursNoRzAvoid
+            | Method::OursHalfHalfPre => 3,
+            Method::OursBf16Triple => 6,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_names_roundtrip() {
+        for m in Method::ALL {
+            assert_eq!(Method::parse(m.name()), Some(m));
+        }
+        assert_eq!(Method::parse("nope"), None);
+    }
+
+    #[test]
+    fn all_methods_run_small() {
+        let a = Mat::from_fn(8, 16, |i, j| ((i * 16 + j) as f32).sin());
+        let b = Mat::from_fn(16, 8, |i, j| ((i * 8 + j) as f32).cos());
+        let r = gemm_f64(&a, &b);
+        let cfg = TileConfig::default();
+        for m in Method::ALL {
+            let c = m.run(&a, &b, &cfg);
+            let e = relative_residual(&r, &c);
+            assert!(e < 2e-3, "{}: residual {e}", m.name());
+        }
+    }
+}

@@ -1,0 +1,191 @@
+//! Ozaki-scheme GEMM (Ozaki et al. 2012; Mukunoki et al. 2020 on Tensor
+//! Cores) — the related-work baseline the paper positions against: an
+//! *error-free transformation* that splits operands into slices whose
+//! pairwise products accumulate **exactly** in the Tensor-Core datapath,
+//! recovering FP32 (or better) accuracy at the cost of `s(s+1)/2`
+//! low-precision GEMMs. The paper's point: for FP32, this is slower than
+//! both cuBLAS SGEMM and their 3-term correction — which this module's
+//! term-count model reproduces.
+//!
+//! Slicing: row `i` of A is scaled by `σ_i = 2^(max exponent of the row)`;
+//! each slice keeps `β` significand bits on the grid `σ_i · 2^{-β(j+1)}`,
+//! extracted by truncation so `a = Σ_j s_j` exactly after `s` slices cover
+//! the 24-bit significand. `β` is chosen so a k-long dot product of two
+//! β-bit slices fits the 25-bit TC accumulator **exactly**:
+//! `2β + ceil(log2 k) ≤ 25`. B is sliced column-wise symmetrically.
+
+use super::matrix::Mat;
+use crate::fp::exp2i;
+use crate::fp::mantissa::exponent_of;
+use crate::tcsim::{mma_tile_zero_into, MmaConfig};
+
+/// Largest per-slice significand width β such that slice-pair dot products
+/// of length `k` are exact in the 25-bit Tensor-Core accumulator.
+pub fn slice_bits(k: usize) -> u32 {
+    let logk = (usize::BITS - k.max(1).leading_zeros()) as u32; // ceil(log2 k)+1-ish, safe side
+    ((25u32.saturating_sub(logk)) / 2).clamp(1, 11)
+}
+
+/// Number of slices needed to cover FP32's 24-bit significand at width β.
+pub fn slices_for_fp32(beta: u32) -> usize {
+    ((24 + beta - 1) / beta) as usize
+}
+
+/// Row- (or column-) scaled truncation slicing. Returns `s` matrices whose
+/// sum reconstructs `m` exactly (up to the dropped tail below slice `s`),
+/// plus the per-row (or per-column) scales.
+fn slice_matrix(m: &Mat, beta: u32, s: usize, row_wise: bool) -> (Vec<Mat>, Vec<f64>) {
+    let outer = if row_wise { m.rows } else { m.cols };
+    let mut scales = vec![0.0f64; outer];
+    for o in 0..outer {
+        let mut max_e = i32::MIN;
+        let n_inner = if row_wise { m.cols } else { m.rows };
+        for i in 0..n_inner {
+            let v = if row_wise { m.get(o, i) } else { m.get(i, o) };
+            if v != 0.0 {
+                max_e = max_e.max(exponent_of(v));
+            }
+        }
+        scales[o] = if max_e == i32::MIN { 1.0 } else { exp2i(max_e + 1) };
+    }
+    let mut slices = vec![Mat::zeros(m.rows, m.cols); s];
+    for i in 0..m.rows {
+        for j in 0..m.cols {
+            let o = if row_wise { i } else { j };
+            let sigma = scales[o];
+            let mut r = m.get(i, j) as f64;
+            for (idx, sl) in slices.iter_mut().enumerate() {
+                let g = sigma * exp2i(-((beta as i32) * (idx as i32 + 1)));
+                let q = (r / g).trunc() * g; // truncation toward zero: exact
+                sl.set(i, j, q as f32);
+                r -= q;
+            }
+        }
+    }
+    (slices, scales)
+}
+
+/// Ozaki-scheme GEMM: `C = Σ_{p+q < s} A_p · B_q` with every slice-pair
+/// GEMM run on the (simulated) Tensor Core — each is *exact* by the β
+/// choice, so all error comes from the dropped `p+q ≥ s` tail and the
+/// final FP32 store. `s = slices_for_fp32(slice_bits(k))` recovers full
+/// FP32 accuracy.
+pub fn ozaki_gemm(a: &Mat, b: &Mat, s: usize) -> Mat {
+    assert_eq!(a.cols, b.rows);
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let beta = slice_bits(k);
+    let (a_sl, _) = slice_matrix(a, beta, s, true);
+    let (b_sl, _) = slice_matrix(b, beta, s, false);
+    let mut acc = vec![0.0f64; m * n];
+    let mut tile = vec![0.0f32; m * n];
+    let mut terms = 0usize;
+    for p in 0..s {
+        for q in 0..s {
+            if p + q >= s {
+                continue; // tail below the FP32 LSB, dropped (à la eq. 24)
+            }
+            terms += 1;
+            // Slice values are on a coarse power-of-two grid: the TC GEMM
+            // of a slice pair is exact (validated in tests), so a single
+            // full-k MMA per pair suffices.
+            mma_tile_zero_into(&mut tile, &a_sl[p].data, &b_sl[q].data, m, n, k, MmaConfig::TENSOR_CORE);
+            for (dst, &t) in acc.iter_mut().zip(tile.iter()) {
+                *dst += t as f64; // exact: f64 accumulation across terms
+            }
+        }
+    }
+    debug_assert_eq!(terms, s * (s + 1) / 2);
+    Mat::from_vec(m, n, acc.iter().map(|&x| x as f32).collect())
+}
+
+/// GEMM-term count of the scheme (performance-model input): s(s+1)/2.
+pub fn ozaki_terms(s: usize) -> usize {
+    s * (s + 1) / 2
+}
+
+/// Projected throughput of Ozaki-on-TC for FP32 accuracy (the paper's
+/// related-work claim: slower than cuBLAS SGEMM for FP32): TC peak divided
+/// by the term count, with corrected-kernel-class utilization.
+pub fn projected_tflops_fp32(gpu: &crate::perfmodel::GpuSpec, k: usize) -> f64 {
+    let s = slices_for_fp32(slice_bits(k));
+    gpu.fp16_tc_tflops / ozaki_terms(s) as f64 * 0.45
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::{gemm_f64, relative_residual, Method, TileConfig};
+    use crate::matgen::urand;
+
+    #[test]
+    fn beta_and_slice_counts() {
+        // k = 1024: ceil-ish log2 = 11 -> beta = 7 -> 4 slices for 24 bits.
+        let b = slice_bits(1024);
+        assert!((6..=8).contains(&b), "beta {b}");
+        assert_eq!(slices_for_fp32(6), 4);
+        assert_eq!(slices_for_fp32(8), 3);
+        assert_eq!(ozaki_terms(4), 10);
+    }
+
+    #[test]
+    fn slicing_reconstructs_exactly() {
+        let m = urand(16, 16, -1.0, 1.0, 3);
+        let beta = 6;
+        let s = slices_for_fp32(beta) + 1; // one extra slice: full coverage
+        let (slices, _) = slice_matrix(&m, beta, s, true);
+        for i in 0..16 {
+            for j in 0..16 {
+                let sum: f64 = slices.iter().map(|sl| sl.get(i, j) as f64).sum();
+                let err = (sum - m.get(i, j) as f64).abs();
+                // Remaining tail is below sigma * 2^-(beta*s) <= 2^-29.
+                assert!(err <= m.get(i, j).abs() as f64 * exp2i(-28) + 1e-300, "err {err:e}");
+            }
+        }
+    }
+
+    #[test]
+    fn slice_pair_products_exact_in_tc() {
+        // The scheme's defining invariant: a slice-pair GEMM on the RZ
+        // Tensor Core equals the f64 reference bit-for-bit (no rounding
+        // ever fires inside the accumulator).
+        let k = 256;
+        let a = urand(8, k, -1.0, 1.0, 5);
+        let b = urand(k, 8, -1.0, 1.0, 6);
+        let beta = slice_bits(k);
+        let (a_sl, _) = slice_matrix(&a, beta, 2, true);
+        let (b_sl, _) = slice_matrix(&b, beta, 2, false);
+        let mut d = vec![0.0f32; 64];
+        mma_tile_zero_into(&mut d, &a_sl[0].data, &b_sl[0].data, 8, 8, k, MmaConfig::TENSOR_CORE);
+        let r = gemm_f64(&a_sl[0], &b_sl[0]);
+        for (got, want) in d.iter().zip(r.data.iter()) {
+            assert_eq!(*got as f64, *want, "slice GEMM not exact");
+        }
+    }
+
+    #[test]
+    fn full_scheme_reaches_fp32_accuracy() {
+        let k = 512;
+        let a = urand(16, k, -1.0, 1.0, 7);
+        let b = urand(k, 16, -1.0, 1.0, 8);
+        let r = gemm_f64(&a, &b);
+        let s = slices_for_fp32(slice_bits(k));
+        let c = ozaki_gemm(&a, &b, s);
+        let e = relative_residual(&r, &c);
+        let simt = relative_residual(&r, &Method::Fp32Simt.run(&a, &b, &TileConfig::default()));
+        // Error-free transformation: at least FP32-level (usually better —
+        // only the final store rounds).
+        assert!(e <= simt * 1.5 + 1e-12, "ozaki {e} vs simt {simt}");
+    }
+
+    #[test]
+    fn paper_claim_slower_than_sgemm_for_fp32() {
+        // The reason the paper's method exists: Ozaki-on-TC needs ~10 TC
+        // GEMMs for FP32, landing below both cuBLAS SGEMM and ours.
+        use crate::perfmodel::{peak_tflops, A100};
+        let oz = projected_tflops_fp32(&A100, 4096);
+        let simt = peak_tflops(&A100, Method::Fp32Simt);
+        let ours = peak_tflops(&A100, Method::OursHalfHalf);
+        assert!(oz < simt, "ozaki {oz} vs simt {simt}");
+        assert!(oz < ours / 2.0, "ozaki {oz} vs ours {ours}");
+    }
+}

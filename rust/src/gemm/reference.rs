@@ -1,0 +1,70 @@
+//! Reference GEMMs: the FP64 oracle (eq. 7's `C_FP64`) and the FP32 SIMT
+//! baseline (cuBLAS SGEMM stand-in — every operation rounded to f32 with RN,
+//! which is exactly what native `f32` arithmetic does).
+
+use super::matrix::{Mat, MatF64};
+
+/// `C_FP64 = toFP64(A) · toFP64(B)` — the accuracy oracle of eq. (7).
+pub fn gemm_f64(a: &Mat, b: &Mat) -> MatF64 {
+    assert_eq!(a.cols, b.rows, "inner dimensions must agree");
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = MatF64::zeros(m, n);
+    for i in 0..m {
+        for l in 0..k {
+            let av = a.data[i * k + l] as f64;
+            if av == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                c.data[i * n + j] += av * b.data[l * n + j] as f64;
+            }
+        }
+    }
+    c
+}
+
+/// Naive FP32 GEMM with sequential-k accumulation: the "FP32 SIMT Core"
+/// numerics (RN at every multiply and add).
+pub fn gemm_f32_naive(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.rows);
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = Mat::zeros(m, n);
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for l in 0..k {
+                acc += a.data[i * k + l] * b.data[l * n + j];
+            }
+            c.data[i * n + j] = acc;
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f64_reference_identity() {
+        let a = Mat::from_fn(3, 3, |i, j| if i == j { 1.0 } else { 0.0 });
+        let b = Mat::from_fn(3, 3, |i, j| (i * 3 + j) as f32);
+        let c = gemm_f64(&a, &b);
+        for i in 0..3 {
+            for j in 0..3 {
+                assert_eq!(c.get(i, j), b.get(i, j) as f64);
+            }
+        }
+    }
+
+    #[test]
+    fn f32_matches_f64_on_exact_inputs() {
+        let a = Mat::from_fn(4, 5, |i, j| (i + j) as f32);
+        let b = Mat::from_fn(5, 2, |i, j| (i as f32) - (j as f32));
+        let c32 = gemm_f32_naive(&a, &b);
+        let c64 = gemm_f64(&a, &b);
+        for idx in 0..c32.data.len() {
+            assert_eq!(c32.data[idx] as f64, c64.data[idx]);
+        }
+    }
+}

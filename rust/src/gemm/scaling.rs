@@ -1,0 +1,157 @@
+//! Exponent pre-scaling — the paper's prescribed remedy for Fig. 11's
+//! Type-3/4 inputs: "if all elements in the matrix have very small
+//! exponents, we need to carry out additional scaling before matrix-matrix
+//! multiplication is performed".
+//!
+//! `C = A·B = (A·2^sa)·(B·2^sb) / 2^(sa+sb)`: powers of two are exact in
+//! binary floating point, so pre-scaling each operand so its largest
+//! exponent lands at 0 moves the whole computation into halfhalf's sweet
+//! spot without changing a single mantissa bit. The de-scale is folded into
+//! the FP32 epilogue.
+
+use super::matrix::Mat;
+use super::tiled::TileConfig;
+use super::Method;
+use crate::fp::exp2i;
+use crate::fp::mantissa::exponent_of;
+
+/// The scaling decision for one operand.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ScalePlan {
+    /// Multiply the operand by `2^shift` before the GEMM.
+    pub shift: i32,
+}
+
+/// Plan a shift that brings the operand's largest exponent to 0 (power of
+/// two ⇒ mantissa-exact). Returns shift = 0 for all-zero input.
+pub fn plan_scale(m: &Mat) -> ScalePlan {
+    let mut max_e = i32::MIN;
+    for &v in &m.data {
+        if v != 0.0 && v.is_finite() {
+            max_e = max_e.max(exponent_of(v));
+        }
+    }
+    if max_e == i32::MIN {
+        return ScalePlan { shift: 0 };
+    }
+    // Clamp so the scaled values stay comfortably inside f32 (and the
+    // ×2^11 residual scaling keeps headroom).
+    ScalePlan { shift: (-max_e).clamp(-120, 140) }
+}
+
+/// Apply a plan: exact elementwise ×2^shift.
+pub fn apply_scale(m: &Mat, plan: ScalePlan) -> Mat {
+    if plan.shift == 0 {
+        return m.clone();
+    }
+    // Split huge shifts into two exact factors to avoid f64→f32 overflow
+    // at intermediate steps.
+    let (s1, s2) = if plan.shift > 127 {
+        (127, plan.shift - 127)
+    } else if plan.shift < -126 {
+        (-126, plan.shift + 126)
+    } else {
+        (plan.shift, 0)
+    };
+    let f1 = exp2i(s1) as f32;
+    let f2 = exp2i(s2) as f32;
+    m.map(|x| x * f1 * f2)
+}
+
+/// `C = A·B` with pre-scaling: scale both operands into range, run
+/// `method`, descale the result in the FP32 epilogue.
+///
+/// The combined descale `2^-(sa+sb)` can undershoot f32 for extreme inputs
+/// (e.g. both operands ~2^-90 ⇒ products ~2^-180, unrepresentable — the
+/// *true* C underflows too); the epilogue applies the descale in two exact
+/// steps so everything representable survives.
+pub fn gemm_scaled(a: &Mat, b: &Mat, method: Method, cfg: &TileConfig) -> Mat {
+    let pa = plan_scale(a);
+    let pb = plan_scale(b);
+    let a_s = apply_scale(a, pa);
+    let b_s = apply_scale(b, pb);
+    let c_s = method.run(&a_s, &b_s, cfg);
+    let total = -(pa.shift + pb.shift);
+    // Exact two-step descale (each step a power of two within f32 range).
+    let (s1, s2) = if total > 127 {
+        (127, total - 127)
+    } else if total < -126 {
+        (-126, total + 126)
+    } else {
+        (total, 0)
+    };
+    let f1 = exp2i(s1) as f32;
+    let f2 = exp2i(s2) as f32;
+    c_s.map(|x| x * f1 * f2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::{gemm_f64, relative_residual};
+    use crate::matgen::{exp_rand, urand};
+
+    #[test]
+    fn plan_centers_max_exponent() {
+        let m = exp_rand(16, 16, -100, -36, 1);
+        let p = plan_scale(&m);
+        let scaled = apply_scale(&m, p);
+        let max_e = scaled
+            .data
+            .iter()
+            .filter(|v| **v != 0.0)
+            .map(|&v| exponent_of(v))
+            .max()
+            .unwrap();
+        assert_eq!(max_e, 0);
+        assert_eq!(plan_scale(&Mat::zeros(4, 4)).shift, 0);
+    }
+
+    #[test]
+    fn scaling_is_mantissa_exact() {
+        let m = urand(8, 8, -1.0, 1.0, 2);
+        let p = ScalePlan { shift: 37 };
+        let s = apply_scale(&m, p);
+        for (x, y) in m.data.iter().zip(s.data.iter()) {
+            assert_eq!(x.to_bits() & 0x007f_ffff, y.to_bits() & 0x007f_ffff, "mantissa changed");
+        }
+    }
+
+    #[test]
+    fn type4_rescued_by_scaling() {
+        // Fig. 11 Type 4: halfhalf alone is unusable (residual ~1);
+        // with pre-scaling it matches FP32 SIMT.
+        let cfg = TileConfig::default();
+        let a = exp_rand(48, 48, -100, -36, 3);
+        let b = exp_rand(48, 48, -100, -36, 4);
+        let r = gemm_f64(&a, &b);
+        let raw = relative_residual(&r, &Method::OursHalfHalf.run(&a, &b, &cfg));
+        let scaled = relative_residual(&r, &gemm_scaled(&a, &b, Method::OursHalfHalf, &cfg));
+        let simt = relative_residual(&r, &Method::Fp32Simt.run(&a, &b, &cfg));
+        assert!(raw > 0.9, "raw halfhalf should fail: {raw}");
+        assert!(scaled <= 2.5 * simt, "scaled {scaled} vs simt {simt}");
+    }
+
+    #[test]
+    fn type2_mixed_ranges_also_rescued() {
+        let cfg = TileConfig::default();
+        let a = urand(32, 32, -1.0, 1.0, 5);
+        let b = exp_rand(32, 32, -100, -36, 6);
+        let r = gemm_f64(&a, &b);
+        let scaled = relative_residual(&r, &gemm_scaled(&a, &b, Method::OursHalfHalf, &cfg));
+        let simt = relative_residual(&r, &Method::Fp32Simt.run(&a, &b, &cfg));
+        assert!(scaled <= 2.5 * simt, "scaled {scaled} vs simt {simt}");
+    }
+
+    #[test]
+    fn in_range_inputs_unaffected_quality() {
+        // Scaling an already-fine input must not hurt.
+        let cfg = TileConfig::default();
+        let a = urand(32, 32, -1.0, 1.0, 7);
+        let b = urand(32, 32, -1.0, 1.0, 8);
+        let r = gemm_f64(&a, &b);
+        let plain = relative_residual(&r, &Method::OursHalfHalf.run(&a, &b, &cfg));
+        let scaled = relative_residual(&r, &gemm_scaled(&a, &b, Method::OursHalfHalf, &cfg));
+        assert!(scaled <= 2.0 * plain + 1e-12, "scaled {scaled} vs plain {plain}");
+    }
+}

@@ -1,0 +1,214 @@
+//! CUTLASS-like hierarchical blocked GEMM engine.
+//!
+//! Mirrors the structure the paper builds on (CUTLASS 2.5): threadblock-level
+//! tiles `(bm, bn, bk)`, warp-level tiles `(wm, wn, wk)` and `stages` of
+//! software pipelining (the latter only affects the performance model — it
+//! cannot change numerics). The engine owns the loop nest and panel
+//! packing; a [`KernelBackend`] supplies the per-k-block numerics (plain
+//! Tensor-Core, Markidis, Feng, or this paper's corrected variants).
+//!
+//! Numerically relevant structure faithfully modelled:
+//! * output-element accumulation is chunked by the 8-wide instruction k
+//!   (`mma.m16n8k8`) inside each backend;
+//! * when `wk < bk`, a k-block is partitioned into `bk/wk` *k-slices* with
+//!   independent accumulators that are reduced at tile epilogue in FP32 —
+//!   this is why the paper observes "the order of addition is changed by the
+//!   template parameters of CUTLASS, which slightly affects the error".
+
+use super::matrix::Mat;
+
+/// CUTLASS template parameters (Table 3's search space).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TileConfig {
+    pub bm: usize,
+    pub bn: usize,
+    pub bk: usize,
+    pub wm: usize,
+    pub wn: usize,
+    pub wk: usize,
+    pub stages: usize,
+}
+
+impl Default for TileConfig {
+    fn default() -> Self {
+        TileConfig { bm: 64, bn: 64, bk: 32, wm: 32, wn: 32, wk: 32, stages: 3 }
+    }
+}
+
+impl TileConfig {
+    /// Number of independent k-slices per k-block (split-k within a tile).
+    pub fn k_slices(&self) -> usize {
+        (self.bk + self.wk - 1) / self.wk
+    }
+
+    /// Warps per threadblock (used by the performance model and the
+    /// autotuner's occupancy filter).
+    pub fn warps(&self) -> usize {
+        ((self.bm + self.wm - 1) / self.wm)
+            * ((self.bn + self.wn - 1) / self.wn)
+            * self.k_slices()
+    }
+
+    /// Shared-memory footprint in bytes for FP16 operands (A and B panels,
+    /// hi+lo copies, double-buffered across `stages`). Mirrors the paper's
+    /// "required shared memory exceeds capacity" filter.
+    pub fn smem_bytes_f16(&self) -> usize {
+        // hi+lo halves of both panels: 2 bytes/elt × 2 (hi,lo)
+        self.stages * (self.bm * self.bk + self.bk * self.bn) * 2 * 2
+    }
+
+    /// Shared-memory footprint for TF32 operands (4 bytes/elt, hi+lo).
+    pub fn smem_bytes_tf32(&self) -> usize {
+        self.stages * (self.bm * self.bk + self.bk * self.bn) * 4 * 2
+    }
+}
+
+/// Per-output-tile accumulator state handed to backends.
+///
+/// `c` is the main FP32 accumulator; `dc` the correction-term accumulator
+/// (kept in the Tensor Core, i.e. updated with RZ, in the paper's Code 3);
+/// `dc2` the ΔA·ΔB accumulator used only by 4-term ablations.
+pub struct TileState {
+    pub c: Vec<f32>,
+    pub dc: Vec<f32>,
+    pub dc2: Vec<f32>,
+}
+
+impl TileState {
+    pub fn new(mn: usize) -> TileState {
+        TileState { c: vec![0.0; mn], dc: vec![0.0; mn], dc2: vec![0.0; mn] }
+    }
+}
+
+/// The numerics of one GEMM method, plugged into the tiled engine.
+pub trait KernelBackend: Sync {
+    fn name(&self) -> &'static str;
+
+    /// Fold one packed k-block (`a`: tm×kb, `b`: kb×tn, row-major f32
+    /// *original* data) into the tile state.
+    fn process_kblock(
+        &self,
+        st: &mut TileState,
+        a: &[f32],
+        b: &[f32],
+        tm: usize,
+        tn: usize,
+        kb: usize,
+    );
+
+    /// Tile epilogue for one k-slice: produce the slice's FP32 output tile.
+    fn finalize(&self, st: TileState, tm: usize, tn: usize) -> Vec<f32>;
+
+    /// Tensor-Core MMA-term multiplier (how many low-precision GEMMs of the
+    /// full problem size this method issues): 1 for plain TC, 4 for
+    /// Markidis/Feng, 3 for the paper's eq. (24). 0 for SIMT. Feeds the
+    /// performance model.
+    fn tc_term_count(&self) -> usize;
+}
+
+/// Instruction-level k (mma.m16n8k8).
+pub const INST_K: usize = 8;
+
+/// Run the blocked GEMM `C = A·B` with the given backend and tile config.
+pub fn gemm_tiled(a: &Mat, b: &Mat, cfg: &TileConfig, backend: &dyn KernelBackend) -> Mat {
+    assert_eq!(a.cols, b.rows, "inner dimensions must agree");
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = Mat::zeros(m, n);
+    let n_slices = cfg.k_slices();
+
+    let mut a_panel: Vec<f32> = Vec::new();
+    let mut b_panel: Vec<f32> = Vec::new();
+
+    let mut i0 = 0;
+    while i0 < m {
+        let tm = cfg.bm.min(m - i0);
+        let mut j0 = 0;
+        while j0 < n {
+            let tn = cfg.bn.min(n - j0);
+            let mut states: Vec<TileState> =
+                (0..n_slices).map(|_| TileState::new(tm * tn)).collect();
+            let mut k0 = 0;
+            while k0 < k {
+                let kb_total = cfg.bk.min(k - k0);
+                // Partition the k-block across warp-k slices.
+                let mut s = 0;
+                let mut ks = 0;
+                while ks < kb_total {
+                    let kb = cfg.wk.min(kb_total - ks);
+                    a.copy_sub_into(i0, k0 + ks, tm, kb, &mut a_panel);
+                    b.copy_sub_into(k0 + ks, j0, kb, tn, &mut b_panel);
+                    backend.process_kblock(&mut states[s], &a_panel, &b_panel, tm, tn, kb);
+                    s += 1;
+                    ks += kb;
+                }
+                k0 += kb_total;
+            }
+            // Epilogue: finalize each slice, reduce in FP32 (RN adds).
+            let mut tile = vec![0.0f32; tm * tn];
+            for st in states.drain(..) {
+                let out = backend.finalize(st, tm, tn);
+                for (t, o) in tile.iter_mut().zip(out.iter()) {
+                    *t += *o;
+                }
+            }
+            c.write_sub(i0, j0, tm, tn, &tile);
+            j0 += tn;
+        }
+        i0 += tm;
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::backends::SimtBackend;
+    use crate::gemm::reference::gemm_f64;
+
+    fn rand_mat(rows: usize, cols: usize, seed: u64) -> Mat {
+        let mut s = seed | 1;
+        Mat::from_fn(rows, cols, |_, _| {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            ((s >> 11) as f64 / (1u64 << 53) as f64 * 2.0 - 1.0) as f32
+        })
+    }
+
+    #[test]
+    fn tile_config_derived_quantities() {
+        let cfg = TileConfig { bm: 128, bn: 64, bk: 64, wm: 64, wn: 32, wk: 32, stages: 3 };
+        assert_eq!(cfg.k_slices(), 2);
+        assert_eq!(cfg.warps(), 2 * 2 * 2);
+        assert!(cfg.smem_bytes_f16() > 0);
+        assert!(cfg.smem_bytes_tf32() == cfg.smem_bytes_f16() * 2);
+    }
+
+    #[test]
+    fn ragged_sizes_covered() {
+        // Sizes not divisible by any tile parameter must still be correct.
+        let a = rand_mat(37, 53, 1);
+        let b = rand_mat(53, 29, 2);
+        let cfg = TileConfig { bm: 16, bn: 16, bk: 16, wm: 16, wn: 16, wk: 16, stages: 3 };
+        let c = gemm_tiled(&a, &b, &cfg, &SimtBackend);
+        let r = gemm_f64(&a, &b);
+        let res = crate::gemm::error::relative_residual(&r, &c);
+        assert!(res < 1e-6, "residual {res}");
+    }
+
+    #[test]
+    fn k_slicing_changes_only_summation_order() {
+        let a = rand_mat(24, 96, 3);
+        let b = rand_mat(96, 24, 4);
+        let one_slice = TileConfig { bk: 64, wk: 64, ..TileConfig::default() };
+        let two_slices = TileConfig { bk: 64, wk: 32, ..TileConfig::default() };
+        let c1 = gemm_tiled(&a, &b, &one_slice, &SimtBackend);
+        let c2 = gemm_tiled(&a, &b, &two_slices, &SimtBackend);
+        let r = gemm_f64(&a, &b);
+        let e1 = crate::gemm::error::relative_residual(&r, &c1);
+        let e2 = crate::gemm::error::relative_residual(&r, &c2);
+        assert!(e1 < 1e-6 && e2 < 1e-6);
+        // Different order => (almost certainly) different bits, same level.
+        assert!((e1 / e2.max(1e-300)).log2().abs() < 6.0);
+    }
+}

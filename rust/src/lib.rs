@@ -1,0 +1,33 @@
+//! # tcec — error-corrected Tensor-Core GEMM, reproduced in Rust + JAX + Pallas
+//!
+//! Library reproduction of Ootomo & Yokota (2022), *Recovering single
+//! precision accuracy from Tensor Cores while surpassing the FP32
+//! theoretical peak performance*.
+//!
+//! Layer map (see DESIGN.md):
+//! * [`fp`], [`tcsim`], [`gemm`] — the bit-exact numerical substrate: split
+//!   schemes, the software Tensor Core, and every GEMM method the paper
+//!   evaluates (Table 4 + ablations).
+//! * [`matgen`], [`analysis`] — workload generators (eq. 25, STARS-H-like)
+//!   and the paper's theory (Tables 1–2, Fig. 8, Fig. 9).
+//! * [`perfmodel`], [`autotune`] — the GPU throughput/power/roofline
+//!   projection model (Figs 2/14/15/16, Table 5) and the CUTLASS parameter
+//!   tuner (Table 3).
+//! * [`coordinator`], [`runtime`] — the serving layer: a GEMM service that
+//!   routes requests by precision policy and executes AOT-compiled Pallas
+//!   artifacts through PJRT.
+//! * [`experiments`] — one driver per paper figure/table, shared by the
+//!   bench binaries.
+
+pub mod analysis;
+pub mod autotune;
+pub mod bench_util;
+pub mod cli;
+pub mod coordinator;
+pub mod experiments;
+pub mod fp;
+pub mod gemm;
+pub mod matgen;
+pub mod perfmodel;
+pub mod runtime;
+pub mod tcsim;

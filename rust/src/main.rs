@@ -1,0 +1,247 @@
+//! `tcec` — leader binary: run GEMMs, serve the GEMM service, regenerate
+//! the paper's experiments, and smoke-test AOT artifacts.
+
+use std::sync::Arc;
+use tcec::cli::Args;
+use tcec::coordinator::{GemmService, Policy, ServiceConfig, SimExecutor};
+use tcec::experiments;
+use tcec::gemm::{gemm_f64, relative_residual, Method, TileConfig};
+use tcec::matgen::Workload;
+use tcec::perfmodel::{A100, ALL_GPUS};
+use tcec::runtime::{ArtifactRegistry, PjrtExecutor, PjrtHandle};
+
+const USAGE: &str = "\
+tcec — error-corrected Tensor-Core GEMM (Ootomo & Yokota 2022 reproduction)
+
+USAGE:
+  tcec gemm      [--method M] [--m N --n N --k N] [--workload W] [--seeds S] [--prescale]
+  tcec serve     [--requests N] [--size N] [--workers W] [--batch B] [--artifacts DIR]
+  tcec experiment <fig1|fig4|fig5|fig8|fig9|fig11|fig13|fig14|fig15|fig16|table1_2|table3|table6>
+  tcec artifacts [--dir DIR]
+  tcec analyze   [--exponent E] [--k N]
+  tcec methods
+
+METHODS: cublas_simt cublas_fp16tc cublas_tf32tc markidis markidis_mma_rn
+         feng cutlass_halfhalf cutlass_tf32tf32 ours_no_rz_avoid
+         ours_four_term fp32_trunc_lsb
+WORKLOADS: urand | exprand:<a>:<b> | randtlr | spatial | cauchy
+";
+
+fn parse_workload(s: &str) -> Workload {
+    if s == "urand" {
+        Workload::Urand { lo: -1.0, hi: 1.0 }
+    } else if let Some(rest) = s.strip_prefix("exprand:") {
+        let parts: Vec<i32> = rest.split(':').filter_map(|x| x.parse().ok()).collect();
+        Workload::ExpRand {
+            a: parts.first().copied().unwrap_or(-15),
+            b: parts.get(1).copied().unwrap_or(14),
+        }
+    } else if s == "randtlr" {
+        Workload::RandTlr
+    } else if s == "spatial" {
+        Workload::Spatial
+    } else if s == "cauchy" {
+        Workload::Cauchy
+    } else {
+        eprintln!("unknown workload {s}, using urand(-1,1)");
+        Workload::Urand { lo: -1.0, hi: 1.0 }
+    }
+}
+
+fn cmd_gemm(args: &Args) {
+    let method = args
+        .str_flag("method")
+        .and_then(Method::parse)
+        .unwrap_or(Method::OursHalfHalf);
+    let m = args.usize_flag("m", 16);
+    let n = args.usize_flag("n", 16);
+    let k = args.usize_flag("k", 1024);
+    let seeds = args.u64_flag("seeds", 4);
+    let w = parse_workload(args.str_flag("workload").unwrap_or("urand"));
+    let cfg = TileConfig::default();
+    let prescale = args.bool_flag("prescale");
+    let resid = if prescale {
+        experiments::mean_residual_scaled(method, w, w, m, n, k, seeds, &cfg)
+    } else {
+        experiments::mean_residual(method, w, w, m, n, k, seeds, &cfg)
+    };
+    let simt = experiments::mean_residual(Method::Fp32Simt, w, w, m, n, k, seeds, &cfg);
+    println!("method            : {}{}", method.name(), if prescale { " (+prescale)" } else { "" });
+    println!("problem           : ({m} x {k}) * ({k} x {n}), workload {}", w.name());
+    println!("relative residual : {resid:.3e}  (eq. 7, vs FP64, {seeds} seeds)");
+    println!("cublas_simt ref   : {simt:.3e}");
+    println!("ratio vs FP32     : {:.2}x", resid / simt.max(1e-300));
+}
+
+fn cmd_serve(args: &Args) {
+    let requests = args.usize_flag("requests", 32);
+    let size = args.usize_flag("size", 64);
+    let cfg = ServiceConfig {
+        workers: args.usize_flag("workers", 2),
+        max_batch: args.usize_flag("batch", 4),
+        ..ServiceConfig::default()
+    };
+    let svc = if let Some(dir) = args.str_flag("artifacts") {
+        let handle = PjrtHandle::spawn();
+        let reg = ArtifactRegistry::scan(dir, handle).expect("scan artifacts");
+        println!("artifacts: {:?}", reg.names());
+        GemmService::start(Arc::new(PjrtExecutor::new(reg)), cfg)
+    } else {
+        GemmService::start(Arc::new(SimExecutor::new()), cfg)
+    };
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = (0..requests)
+        .map(|i| {
+            let a = Workload::Urand { lo: -1.0, hi: 1.0 }.generate(size, size, i as u64);
+            let b = Workload::Urand { lo: -1.0, hi: 1.0 }.generate(size, size, 1000 + i as u64);
+            svc.submit(a, b, Policy::Fp32Accuracy).1
+        })
+        .collect();
+    for rx in rxs {
+        rx.recv().expect("response");
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let snap = svc.metrics().snapshot();
+    println!(
+        "completed {} requests in {:.3}s ({:.1} req/s)",
+        snap.completed,
+        dt,
+        snap.completed as f64 / dt
+    );
+    println!(
+        "simulated flops: {} ({:.2} GFlop/s wall)",
+        snap.flops,
+        snap.flops as f64 / dt / 1e9
+    );
+    println!("mean batch size: {:.2}", snap.mean_batch_size);
+    println!("mean latency   : {:?}", snap.mean_latency);
+    for (name, count) in snap.per_method {
+        println!("  {name}: {count}");
+    }
+    svc.shutdown();
+}
+
+fn cmd_experiment(args: &Args) {
+    let which = args.positional.first().map(|s| s.as_str()).unwrap_or("fig1");
+    let table = match which {
+        "fig1" => experiments::fig1(&[16, 64, 256, 1024, 4096], 4),
+        "fig4" => experiments::fig4(&[16, 64, 256, 1024, 4096], 4),
+        "fig5" => experiments::fig5(&[16, 64, 256, 1024, 4096], 4),
+        "fig8" => experiments::fig8(&[-24, -20, -16, -12, -8, -4, 0, 4], 200_000),
+        "fig9" => experiments::fig9(
+            &[-140, -120, -100, -80, -60, -40, -24, -15, -8, 0, 8, 15, 40, 100, 127],
+            4000,
+        ),
+        "fig11" => experiments::fig11(64, 4),
+        "fig13" => experiments::fig13(64, 4),
+        "fig14" => {
+            for gpu in &ALL_GPUS {
+                println!("== {} (projected; see DESIGN.md §2) ==", gpu.name);
+                experiments::fig14(gpu, &[256, 512, 1024, 2048, 4096, 8192, 16384]).print();
+            }
+            return;
+        }
+        "fig15" => experiments::fig15(&A100),
+        "fig16" => {
+            for gpu in &ALL_GPUS {
+                println!("== {} (energy model; see DESIGN.md §2) ==", gpu.name);
+                experiments::fig16(gpu, &[512, 1024, 2048, 4096, 8192]).print();
+            }
+            return;
+        }
+        "table1_2" => experiments::table1_2(500_000),
+        "table3" => experiments::table3(&A100, 16),
+        "table6" => experiments::table6(),
+        other => {
+            eprintln!("unknown experiment {other}");
+            eprintln!("{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    table.print();
+}
+
+fn cmd_artifacts(args: &Args) {
+    let dir = args.str_flag("dir").unwrap_or("artifacts");
+    let handle = PjrtHandle::spawn();
+    let reg = ArtifactRegistry::scan(dir, handle.clone()).expect("scan");
+    let names = reg.names();
+    if names.is_empty() {
+        println!("no artifacts in {dir} — run `make artifacts` first");
+        return;
+    }
+    println!("{} artifact(s) in {dir}:", names.len());
+    for name in &names {
+        print!("  {name} ... ");
+        match reg.ensure_loaded(name) {
+            Ok(_) => println!("compiled OK"),
+            Err(e) => println!("FAILED: {e:#}"),
+        }
+    }
+    // Smoke-run the first ec_gemm artifact against the FP64 oracle.
+    if let Some(name) = names.iter().find(|n| n.starts_with("ec_gemm_")) {
+        let dims: Vec<usize> = name
+            .trim_end_matches(".hlo.txt")
+            .rsplit('_')
+            .next()
+            .unwrap()
+            .split('x')
+            .filter_map(|s| s.parse().ok())
+            .collect();
+        if let [m, k, n] = dims[..] {
+            let a = Workload::Urand { lo: -1.0, hi: 1.0 }.generate(m, k, 1);
+            let b = Workload::Urand { lo: -1.0, hi: 1.0 }.generate(k, n, 2);
+            match reg.handle().execute(name, &a, &b) {
+                Ok(c) => {
+                    let r = gemm_f64(&a, &b);
+                    println!("smoke run {name}: residual {:.3e}", relative_residual(&r, &c));
+                }
+                Err(e) => println!("smoke run failed: {e:#}"),
+            }
+        }
+    }
+    handle.shutdown();
+}
+
+/// Surface the paper's theory modules interactively: mantissa-length
+/// expectations, underflow probability at a given exponent, and error-growth
+/// predictions at a given k.
+fn cmd_analyze(args: &Args) {
+    use tcec::analysis;
+    let e_v = args
+        .str_flag("exponent")
+        .and_then(|s| s.parse::<i32>().ok())
+        .unwrap_or(0);
+    let k = args.usize_flag("k", 1024);
+    println!("-- mantissa kept by hi/lo splits (Tables 1-2) --");
+    println!("E[len] RN split : {:.3} (theory {})", analysis::expected_len(analysis::SplitKind::Rn, 200_000, 1), analysis::THEORY_RN);
+    println!("E[len] RZ split : {:.3} (theory {})", analysis::expected_len(analysis::SplitKind::Rz, 200_000, 2), analysis::THEORY_RZ);
+    println!("-- residual underflow at e_v = {e_v} (Fig. 8) --");
+    let (m_ugu, m_u) = analysis::measure(e_v, 200_000, 3);
+    let (s_ugu, _) = analysis::measure_scaled(e_v, 200_000, 4);
+    println!("P_u+gu theory {:.4e}  measured {m_ugu:.4e}", analysis::p_underflow_or_gradual(e_v));
+    println!("P_u    theory {:.4e}  measured {m_u:.4e}", analysis::p_underflow(e_v));
+    println!("P_u+gu with x2^11 scaling (eq. 18): {s_ugu:.4e}");
+    println!("-- error growth at k = {k} (analysis::error_bound) --");
+    println!("predicted FP32/ours residual (RN, ~0.4*sqrt(k)*u) : {:.3e}", analysis::predicted_rn(k));
+    println!("predicted Markidis residual  (RZ, ~0.5*k*u_acc)   : {:.3e}", analysis::predicted_rz(k));
+}
+
+fn main() {
+    let args = Args::from_env();
+    match args.command.as_deref() {
+        Some("gemm") => cmd_gemm(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("experiment") => cmd_experiment(&args),
+        Some("artifacts") => cmd_artifacts(&args),
+        Some("methods") => {
+            for m in Method::ALL {
+                println!("{}", m.name());
+            }
+        }
+        Some("analyze") => cmd_analyze(&args),
+        _ => {
+            print!("{USAGE}");
+        }
+    }
+}

@@ -1,0 +1,127 @@
+//! Workload (input-matrix) generators for every accuracy experiment.
+
+pub mod rng;
+pub mod starsh;
+
+pub use rng::Rng;
+pub use starsh::{cauchy, randtlr, spatial};
+
+use crate::gemm::Mat;
+
+/// `urand(lo, hi)`: elements i.i.d. uniform in `(lo, hi)` — the Fig. 1 /
+/// Fig. 4 / Fig. 5 workload with `(lo, hi) = (−1, 1)`.
+pub fn urand(rows: usize, cols: usize, lo: f32, hi: f32, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    Mat::from_fn(rows, cols, |_, _| rng.uniform_in(lo as f64, hi as f64) as f32)
+}
+
+/// `exp_rand(a, b)` — eq. (25): exponent uniform in `[a, b]`, significand
+/// uniform in `[1, 2)`, random sign. Used by Fig. 11's Type 1–4 inputs.
+pub fn exp_rand(rows: usize, cols: usize, a: i32, b: i32, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    Mat::from_fn(rows, cols, |_, _| {
+        let e = rng.int_in(a as i64, b as i64) as i32;
+        let m = rng.uniform_in(1.0, 2.0);
+        let s = rng.sign();
+        (s * m * crate::fp::exp2i(e)) as f32
+    })
+}
+
+/// Named generator for CLI / coordinator use.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Workload {
+    Urand { lo: f32, hi: f32 },
+    ExpRand { a: i32, b: i32 },
+    RandTlr,
+    Spatial,
+    Cauchy,
+}
+
+impl Workload {
+    pub fn generate(&self, rows: usize, cols: usize, seed: u64) -> Mat {
+        match *self {
+            Workload::Urand { lo, hi } => urand(rows, cols, lo, hi, seed),
+            Workload::ExpRand { a, b } => exp_rand(rows, cols, a, b, seed),
+            Workload::RandTlr => {
+                assert_eq!(rows, cols, "randtlr is square");
+                randtlr(rows, (rows / 8).max(8), 8.min(rows / 4).max(1), 0.25, seed)
+            }
+            Workload::Spatial => {
+                assert_eq!(rows, cols, "spatial is square");
+                spatial(rows, 0.1, seed)
+            }
+            Workload::Cauchy => {
+                assert_eq!(rows, cols, "cauchy is square");
+                cauchy(rows, seed)
+            }
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match *self {
+            Workload::Urand { lo, hi } => format!("urand({lo},{hi})"),
+            Workload::ExpRand { a, b } => format!("exp_rand({a},{b})"),
+            Workload::RandTlr => "randtlr".into(),
+            Workload::Spatial => "spatial".into(),
+            Workload::Cauchy => "cauchy".into(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp::mantissa::exponent_of;
+
+    #[test]
+    fn urand_bounds() {
+        let m = urand(32, 32, -1.0, 1.0, 123);
+        assert!(m.data.iter().all(|&v| (-1.0..1.0).contains(&v)));
+        let mean: f64 = m.data.iter().map(|&v| v as f64).sum::<f64>() / 1024.0;
+        assert!(mean.abs() < 0.1);
+    }
+
+    #[test]
+    fn exp_rand_exponent_distribution() {
+        let m = exp_rand(64, 64, -15, 14, 99);
+        let mut min_e = i32::MAX;
+        let mut max_e = i32::MIN;
+        for &v in &m.data {
+            let e = exponent_of(v);
+            assert!((-15..=14).contains(&e), "exponent {e}");
+            min_e = min_e.min(e);
+            max_e = max_e.max(e);
+        }
+        assert_eq!(min_e, -15);
+        assert_eq!(max_e, 14);
+        // Signs present on both sides.
+        assert!(m.data.iter().any(|&v| v > 0.0) && m.data.iter().any(|&v| v < 0.0));
+    }
+
+    #[test]
+    fn exp_rand_tiny_range_type4() {
+        // Fig 11 Type 4: exp_rand(-100, -35) is entirely below halfhalf's
+        // representable range.
+        let m = exp_rand(16, 16, -100, -35, 1);
+        for &v in &m.data {
+            assert!(v != 0.0);
+            let s = crate::fp::split_ootomo(v);
+            assert!(s.hi.is_zero(), "hi must underflow for v={v:e}");
+        }
+    }
+
+    #[test]
+    fn workload_names_and_shapes() {
+        for w in [
+            Workload::Urand { lo: -1.0, hi: 1.0 },
+            Workload::ExpRand { a: -15, b: 0 },
+            Workload::RandTlr,
+            Workload::Spatial,
+            Workload::Cauchy,
+        ] {
+            let m = w.generate(24, 24, 5);
+            assert_eq!((m.rows, m.cols), (24, 24), "{}", w.name());
+            assert!(m.data.iter().all(|v| v.is_finite()));
+        }
+    }
+}

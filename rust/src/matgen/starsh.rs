@@ -1,0 +1,128 @@
+//! STARS-H-like dense matrix generators (paper §"Effect of exponent
+//! patterns of the input matrices", Figs 12–13).
+//!
+//! STARS-H itself (ecrc/stars-h) is a hierarchical low-rank benchmark
+//! generator; the paper uses three of its dense kernels purely for their
+//! *exponent patterns*. We implement the same mathematical kernels:
+//!
+//! * `randtlr` — synthetic Tile-Low-Rank matrix: tiles `U_i Σ V_j^T` with
+//!   singular values decaying away from the diagonal, giving the blocky
+//!   exponent texture of Fig. 12 (left).
+//! * `spatial` — exponential covariance kernel `exp(-d/β)` over random 2-D
+//!   points (spatial statistics), smooth decay from the diagonal.
+//! * `cauchy` — `1 / (x_i − y_j)`, broad exponent spread.
+
+use super::rng::Rng;
+use crate::gemm::Mat;
+
+/// Random synthetic TLR matrix (STARS-H `randtlr` analogue).
+///
+/// The matrix is partitioned into `tile`-sized blocks; block `(bi, bj)` is a
+/// rank-`rank` product with magnitude `decay^{|bi−bj|}`, so off-diagonal
+/// exponents fall off geometrically like real TLR test matrices.
+pub fn randtlr(n: usize, tile: usize, rank: usize, decay: f64, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    let nb = (n + tile - 1) / tile;
+    // Per-block-row/column random factors, shared across a row/col of tiles
+    // (this is what makes the matrix globally low-rank-structured).
+    let mut u = vec![0.0f64; n * rank];
+    let mut v = vec![0.0f64; n * rank];
+    for x in u.iter_mut().chain(v.iter_mut()) {
+        *x = rng.normal() / (rank as f64).sqrt();
+    }
+    let mut m = Mat::zeros(n, n);
+    for bi in 0..nb {
+        for bj in 0..nb {
+            let scale = decay.powi((bi as i32 - bj as i32).abs());
+            let i1 = (bi * tile).min(n);
+            let i2 = ((bi + 1) * tile).min(n);
+            let j1 = (bj * tile).min(n);
+            let j2 = ((bj + 1) * tile).min(n);
+            for i in i1..i2 {
+                for j in j1..j2 {
+                    let mut s = 0.0f64;
+                    for r in 0..rank {
+                        s += u[i * rank + r] * v[j * rank + r];
+                    }
+                    m.set(i, j, (s * scale) as f32);
+                }
+            }
+        }
+    }
+    m
+}
+
+/// Exponential kernel for spatial statistics (STARS-H `spatial` analogue):
+/// `K_ij = exp(-||p_i − p_j|| / beta)` over `n` uniform points in the unit
+/// square, plus a small diagonal shift for conditioning (as STARS-H does).
+pub fn spatial(n: usize, beta: f64, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    let pts: Vec<(f64, f64)> = (0..n).map(|_| (rng.uniform(), rng.uniform())).collect();
+    Mat::from_fn(n, n, |i, j| {
+        let dx = pts[i].0 - pts[j].0;
+        let dy = pts[i].1 - pts[j].1;
+        let d = (dx * dx + dy * dy).sqrt();
+        let v = (-d / beta).exp() + if i == j { 1e-4 } else { 0.0 };
+        v as f32
+    })
+}
+
+/// Cauchy matrix: `C_ij = 1 / (x_i − y_j)` with `x`, `y` drawn so the
+/// denominators never vanish.
+pub fn cauchy(n: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    let x: Vec<f64> = (0..n).map(|i| i as f64 + 0.25 + 0.2 * rng.uniform()).collect();
+    let y: Vec<f64> = (0..n).map(|j| j as f64 - 0.25 - 0.2 * rng.uniform()).collect();
+    Mat::from_fn(n, n, |i, j| (1.0 / (x[i] - y[j])) as f32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp::mantissa::exponent_of;
+
+    #[test]
+    fn randtlr_decays_off_diagonal() {
+        let m = randtlr(64, 16, 4, 0.1, 5);
+        // Mean |value| in diagonal tiles >> far-off-diagonal tiles.
+        let mut diag = 0.0f64;
+        let mut far = 0.0f64;
+        let mut nd = 0;
+        let mut nf = 0;
+        for i in 0..64 {
+            for j in 0..64 {
+                let v = m.get(i, j).abs() as f64;
+                if i / 16 == j / 16 {
+                    diag += v;
+                    nd += 1;
+                } else if (i / 16).abs_diff(j / 16) >= 3 {
+                    far += v;
+                    nf += 1;
+                }
+            }
+        }
+        assert!(diag / nd as f64 > 50.0 * (far / nf as f64));
+    }
+
+    #[test]
+    fn spatial_is_symmetric_unit_diagonal() {
+        let m = spatial(32, 0.1, 9);
+        for i in 0..32 {
+            assert!((m.get(i, i) - 1.0001).abs() < 1e-3);
+            for j in 0..32 {
+                assert_eq!(m.get(i, j), m.get(j, i));
+                assert!(m.get(i, j) > 0.0 && m.get(i, j) <= 1.01);
+            }
+        }
+    }
+
+    #[test]
+    fn cauchy_has_wide_exponent_spread() {
+        let m = cauchy(128, 1);
+        let exps: Vec<i32> = m.data.iter().filter(|v| **v != 0.0).map(|&v| exponent_of(v)).collect();
+        let min = *exps.iter().min().unwrap();
+        let max = *exps.iter().max().unwrap();
+        assert!(max - min >= 6, "spread {min}..{max}");
+        assert!(m.data.iter().all(|v| v.is_finite()));
+    }
+}

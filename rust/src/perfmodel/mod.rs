@@ -1,0 +1,16 @@
+//! GPU performance / power / roofline projection model (DESIGN.md §2's
+//! silicon substitute). Regenerates the *shape* of Figs 2, 14, 15, 16 and
+//! Table 5; absolute numbers are projections calibrated to the paper's A100
+//! measurements, clearly labelled as such in every bench output.
+
+pub mod power;
+pub mod roofline;
+pub mod specs;
+pub mod throughput;
+
+pub use power::{avg_power_w, energy_per_gemm_j, gflops_per_watt, peak_gflops_per_watt};
+pub use roofline::{figure15_points, roof, RooflinePoint};
+pub use specs::{GpuSpec, A100, ALL_GPUS, RTX_3090, RTX_A6000};
+pub use throughput::{
+    arithmetic_intensity, compute_ceiling, peak_tflops, projected_tflops, ramp, utilization,
+};

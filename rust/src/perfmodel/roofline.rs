@@ -1,0 +1,73 @@
+//! Roofline analysis (Fig. 15) — Williams et al.'s model applied to the
+//! corrected kernels on the A100, with the Tensor-Core peaks divided by the
+//! term count (the paper approximates the cutlass_* ceilings as peak/3).
+
+use super::specs::GpuSpec;
+use super::throughput::{arithmetic_intensity, projected_tflops};
+use crate::gemm::Method;
+
+/// One plotted implementation point.
+#[derive(Debug, Clone)]
+pub struct RooflinePoint {
+    pub name: String,
+    /// Arithmetic intensity, flop/byte (DRAM).
+    pub ai: f64,
+    /// Achieved (projected) TFlop/s.
+    pub tflops: f64,
+}
+
+/// Roofline ceiling at intensity `ai` for a compute ceiling `peak_tflops`:
+/// `min(BW × ai, peak)`.
+pub fn roof(gpu: &GpuSpec, ai: f64, peak_tflops: f64) -> f64 {
+    (gpu.mem_bw_gbs * ai / 1000.0).min(peak_tflops)
+}
+
+/// Generate the Fig. 15 point set: max- and min-size executions of the two
+/// corrected kernels against their peak/3 ceilings.
+pub fn figure15_points(gpu: &GpuSpec) -> Vec<RooflinePoint> {
+    let mut pts = Vec::new();
+    for (method, label) in [
+        (Method::OursHalfHalf, "cutlass_halfhalf"),
+        (Method::OursTf32, "cutlass_tf32tf32"),
+    ] {
+        for (n, tag) in [(16384usize, "max"), (512usize, "min")] {
+            pts.push(RooflinePoint {
+                name: format!("{label}({tag}, n={n})"),
+                ai: arithmetic_intensity(method, n),
+                tflops: projected_tflops(gpu, method, n),
+            });
+        }
+    }
+    pts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::specs::A100;
+
+    #[test]
+    fn roof_shape() {
+        // Memory-bound region rises linearly, then clips at the peak.
+        let peak = 104.0;
+        assert!(roof(&A100, 1.0, peak) < roof(&A100, 10.0, peak));
+        assert_eq!(roof(&A100, 1e6, peak), peak);
+    }
+
+    #[test]
+    fn implementations_below_their_roofs() {
+        // Fig 15's observation: "our implementations do not reach the
+        // theoretical peak performance and memory bandwidth" — every point
+        // sits strictly under its roof.
+        for p in figure15_points(&A100) {
+            let ceiling = if p.name.contains("halfhalf") {
+                A100.fp16_tc_tflops / 3.0
+            } else {
+                A100.tf32_tc_tflops / 3.0
+            };
+            let r = roof(&A100, p.ai, ceiling);
+            assert!(p.tflops < r, "{}: {} !< {}", p.name, p.tflops, r);
+            assert!(p.tflops > 0.05 * r, "{}: implausibly far below roof", p.name);
+        }
+    }
+}

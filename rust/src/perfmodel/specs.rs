@@ -1,0 +1,93 @@
+//! GPU specifications — the paper's Table 5 plus the host-side constants the
+//! projection model needs. All numbers are from the paper / NVIDIA
+//! whitepapers it cites [19–21].
+
+/// One evaluation GPU.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    /// FP16 Tensor-Core peak, TFlop/s (FP32 accumulate).
+    pub fp16_tc_tflops: f64,
+    /// TF32 Tensor-Core peak, TFlop/s.
+    pub tf32_tc_tflops: f64,
+    /// FP32 SIMT (CUDA core) peak, TFlop/s.
+    pub fp32_tflops: f64,
+    /// HBM/GDDR bandwidth, GB/s.
+    pub mem_bw_gbs: f64,
+    /// L1 / shared memory per SM, KiB.
+    pub l1_kib_per_sm: usize,
+    /// L2 cache, MiB.
+    pub l2_mib: usize,
+    /// Shared-memory capacity usable per threadblock, bytes (the autotune
+    /// filter limit).
+    pub smem_limit_bytes: usize,
+    /// Board power limit, W (TDP) — anchors the power model.
+    pub tdp_w: f64,
+    /// True if FP32 ops can also issue on the integer datapath (GA102:
+    /// RTX 3090 / A6000) — the paper's explanation for why cuBLAS SGEMM is
+    /// relatively strong there and tf32tf32 can lose.
+    pub fp32_dual_issue: bool,
+}
+
+/// NVIDIA A100 40GB SXM4.
+pub const A100: GpuSpec = GpuSpec {
+    name: "A100",
+    fp16_tc_tflops: 312.0,
+    tf32_tc_tflops: 156.0,
+    fp32_tflops: 19.5,
+    mem_bw_gbs: 1555.0,
+    l1_kib_per_sm: 192,
+    l2_mib: 40,
+    smem_limit_bytes: 163 * 1024,
+    tdp_w: 400.0,
+    fp32_dual_issue: false,
+};
+
+/// NVIDIA RTX A6000 (GA102).
+pub const RTX_A6000: GpuSpec = GpuSpec {
+    name: "RTX A6000",
+    fp16_tc_tflops: 309.6,
+    tf32_tc_tflops: 154.8,
+    fp32_tflops: 38.7,
+    mem_bw_gbs: 768.0,
+    l1_kib_per_sm: 128,
+    l2_mib: 6,
+    smem_limit_bytes: 99 * 1024,
+    tdp_w: 300.0,
+    fp32_dual_issue: true,
+};
+
+/// NVIDIA GeForce RTX 3090 (GA102).
+pub const RTX_3090: GpuSpec = GpuSpec {
+    name: "RTX 3090",
+    fp16_tc_tflops: 142.0,
+    tf32_tc_tflops: 71.0,
+    fp32_tflops: 35.58,
+    mem_bw_gbs: 936.0,
+    l1_kib_per_sm: 128,
+    l2_mib: 6,
+    smem_limit_bytes: 99 * 1024,
+    tdp_w: 350.0,
+    fp32_dual_issue: true,
+};
+
+/// The paper's three evaluation GPUs (Fig. 14 / Fig. 16).
+pub const ALL_GPUS: [GpuSpec; 3] = [A100, RTX_A6000, RTX_3090];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table5_ratios() {
+        // FP16-TC = 2× TF32-TC on every evaluated GPU.
+        for g in ALL_GPUS {
+            assert!((g.fp16_tc_tflops / g.tf32_tc_tflops - 2.0).abs() < 0.01, "{}", g.name);
+        }
+        // The paper's headline inequality: halfhalf ceiling (peak/3) beats
+        // the FP32 peak on A100 by >5x.
+        assert!(A100.fp16_tc_tflops / 3.0 > 5.0 * A100.fp32_tflops);
+        // And the RTX 3090 inversion: tf32 ceiling below FP32 peak.
+        assert!(RTX_3090.tf32_tc_tflops / 3.0 < RTX_3090.fp32_tflops);
+    }
+}

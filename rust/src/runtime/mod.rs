@@ -1,0 +1,289 @@
+//! PJRT runtime: loads AOT-compiled artifacts (HLO text produced by
+//! `python/compile/aot.py` from the L2 JAX model + L1 Pallas kernel) and
+//! executes them from the Rust hot path. Python never runs here.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (not `Send`), so the client
+//! and every compiled executable live on one dedicated **engine thread**;
+//! [`PjrtHandle`] is the cheap, cloneable, thread-safe front door. This also
+//! serializes device access, which is what the single-device CPU PJRT
+//! plugin wants anyway.
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 serializes HloModuleProto with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+
+use crate::coordinator::{BatchKey, Executor, GemmRequest, SimExecutor};
+use crate::gemm::{Mat, Method};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Mutex;
+
+/// Artifact naming scheme shared with `python/compile/aot.py`:
+/// `ec_gemm_<variant>_<m>x<k>x<n>.hlo.txt`.
+pub fn artifact_file(method: Method, m: usize, k: usize, n: usize) -> Option<String> {
+    let variant = match method {
+        Method::OursHalfHalf => "halfhalf",
+        Method::OursTf32 => "tf32tf32",
+        Method::Fp32Simt => "fp32",
+        _ => return None,
+    };
+    Some(format!("ec_gemm_{variant}_{m}x{k}x{n}.hlo.txt"))
+}
+
+enum EngineMsg {
+    /// Compile (and cache) the artifact at `path` under `key`.
+    Load { key: String, path: PathBuf, reply: Sender<Result<()>> },
+    /// Execute cached executable `key` with the given inputs; reply with
+    /// row-major output data of `rows × cols`.
+    Execute { key: String, inputs: Vec<Mat>, rows: usize, cols: usize, reply: Sender<Result<Mat>> },
+    /// List cached keys.
+    Loaded { reply: Sender<Vec<String>> },
+    Shutdown,
+}
+
+fn engine_main(rx: std::sync::mpsc::Receiver<EngineMsg>) {
+    // Client creation failure is reported per-request (the thread keeps
+    // serving so callers get errors rather than hangs).
+    let client = xla::PjRtClient::cpu();
+    let mut cache: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+    for msg in rx {
+        match msg {
+            EngineMsg::Load { key, path, reply } => {
+                let r = (|| -> Result<()> {
+                    let client =
+                        client.as_ref().map_err(|e| anyhow!("PJRT client init failed: {e:?}"))?;
+                    if cache.contains_key(&key) {
+                        return Ok(());
+                    }
+                    let proto = xla::HloModuleProto::from_text_file(&path)
+                        .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+                    let comp = xla::XlaComputation::from_proto(&proto);
+                    let exe =
+                        client.compile(&comp).map_err(|e| anyhow!("compile {key}: {e:?}"))?;
+                    cache.insert(key, exe);
+                    Ok(())
+                })();
+                let _ = reply.send(r);
+            }
+            EngineMsg::Execute { key, inputs, rows, cols, reply } => {
+                let r = (|| -> Result<Mat> {
+                    let exe = cache.get(&key).ok_or_else(|| anyhow!("artifact {key} not loaded"))?;
+                    let mut lits = Vec::with_capacity(inputs.len());
+                    for (i, m) in inputs.iter().enumerate() {
+                        lits.push(
+                            xla::Literal::vec1(&m.data)
+                                .reshape(&[m.rows as i64, m.cols as i64])
+                                .map_err(|e| anyhow!("reshape input {i}: {e:?}"))?,
+                        );
+                    }
+                    let bufs =
+                        exe.execute::<xla::Literal>(&lits).map_err(|e| anyhow!("execute: {e:?}"))?;
+                    let lit = bufs[0][0].to_literal_sync().map_err(|e| anyhow!("fetch: {e:?}"))?;
+                    // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+                    let out = lit.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+                    let data = out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+                    if data.len() != rows * cols {
+                        bail!("artifact {key}: got {} elements, want {}x{}", data.len(), rows, cols);
+                    }
+                    Ok(Mat::from_vec(rows, cols, data))
+                })();
+                let _ = reply.send(r);
+            }
+            EngineMsg::Loaded { reply } => {
+                let _ = reply.send(cache.keys().cloned().collect());
+            }
+            EngineMsg::Shutdown => break,
+        }
+    }
+}
+
+/// Thread-safe handle to the PJRT engine thread.
+#[derive(Clone)]
+pub struct PjrtHandle {
+    tx: Sender<EngineMsg>,
+}
+
+impl PjrtHandle {
+    /// Spawn the engine thread. One per process is plenty.
+    pub fn spawn() -> PjrtHandle {
+        let (tx, rx) = channel();
+        std::thread::Builder::new()
+            .name("pjrt-engine".into())
+            .spawn(move || engine_main(rx))
+            .expect("spawn pjrt engine");
+        PjrtHandle { tx }
+    }
+
+    /// Compile and cache an artifact file.
+    pub fn load(&self, key: &str, path: &Path) -> Result<()> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(EngineMsg::Load { key: key.into(), path: path.into(), reply })
+            .context("engine thread gone")?;
+        rx.recv().context("engine thread died")?
+    }
+
+    /// Execute a cached two-input GEMM artifact.
+    pub fn execute(&self, key: &str, a: &Mat, b: &Mat) -> Result<Mat> {
+        self.execute_multi(key, &[a, b], a.rows, b.cols)
+    }
+
+    /// Execute a cached artifact with any number of inputs (e.g. the
+    /// 3-input MLP chain artifact). `rows × cols` is the expected output.
+    pub fn execute_multi(&self, key: &str, inputs: &[&Mat], rows: usize, cols: usize) -> Result<Mat> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(EngineMsg::Execute {
+                key: key.into(),
+                inputs: inputs.iter().map(|m| (*m).clone()).collect(),
+                rows,
+                cols,
+                reply,
+            })
+            .context("engine thread gone")?;
+        rx.recv().context("engine thread died")?
+    }
+
+    pub fn loaded(&self) -> Vec<String> {
+        let (reply, rx) = channel();
+        if self.tx.send(EngineMsg::Loaded { reply }).is_err() {
+            return Vec::new();
+        }
+        rx.recv().unwrap_or_default()
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(EngineMsg::Shutdown);
+    }
+}
+
+/// Artifact registry: scans `artifacts/` and loads what it finds.
+pub struct ArtifactRegistry {
+    pub dir: PathBuf,
+    handle: PjrtHandle,
+    available: Mutex<HashMap<String, PathBuf>>,
+}
+
+impl ArtifactRegistry {
+    /// Scan `dir` for `*.hlo.txt` files (not yet compiled — compilation is
+    /// lazy on first use).
+    pub fn scan(dir: impl Into<PathBuf>, handle: PjrtHandle) -> Result<ArtifactRegistry> {
+        let dir = dir.into();
+        let mut available = HashMap::new();
+        if dir.is_dir() {
+            for entry in std::fs::read_dir(&dir).context("read artifacts dir")? {
+                let p = entry?.path();
+                if let Some(name) = p.file_name().and_then(|s| s.to_str()) {
+                    if name.ends_with(".hlo.txt") {
+                        available.insert(name.to_string(), p.clone());
+                    }
+                }
+            }
+        }
+        Ok(ArtifactRegistry { dir, handle, available: Mutex::new(available) })
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.available.lock().unwrap().keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.available.lock().unwrap().contains_key(name)
+    }
+
+    /// Ensure `name` is compiled; returns an executor key.
+    pub fn ensure_loaded(&self, name: &str) -> Result<String> {
+        let path = self
+            .available
+            .lock()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| anyhow!("no artifact named {name} in {}", self.dir.display()))?;
+        self.handle.load(name, &path)?;
+        Ok(name.to_string())
+    }
+
+    pub fn handle(&self) -> &PjrtHandle {
+        &self.handle
+    }
+}
+
+/// Coordinator executor that runs batches through PJRT artifacts when one
+/// exists for the (method, shape) key, falling back to the bit-exact
+/// simulator otherwise. This is the production wiring: AOT kernels for the
+/// shapes you serve, simulator for the long tail.
+pub struct PjrtExecutor {
+    registry: ArtifactRegistry,
+    fallback: SimExecutor,
+}
+
+impl PjrtExecutor {
+    pub fn new(registry: ArtifactRegistry) -> PjrtExecutor {
+        PjrtExecutor { registry, fallback: SimExecutor::new() }
+    }
+
+    pub fn registry(&self) -> &ArtifactRegistry {
+        &self.registry
+    }
+}
+
+impl Executor for PjrtExecutor {
+    fn execute(&self, key: &BatchKey, reqs: &[GemmRequest]) -> Vec<Mat> {
+        if let Some(name) = artifact_file(key.method, key.m, key.k, key.n) {
+            if self.registry.has(&name) {
+                if let Ok(k) = self.registry.ensure_loaded(&name) {
+                    let mut out = Vec::with_capacity(reqs.len());
+                    let mut ok = true;
+                    for r in reqs {
+                        match self.registry.handle().execute(&k, &r.a, &r.b) {
+                            Ok(c) => out.push(c),
+                            Err(_) => {
+                                ok = false;
+                                break;
+                            }
+                        }
+                    }
+                    if ok {
+                        return out;
+                    }
+                }
+            }
+        }
+        self.fallback.execute(key, reqs)
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt+sim"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_naming() {
+        assert_eq!(
+            artifact_file(Method::OursHalfHalf, 64, 64, 64).unwrap(),
+            "ec_gemm_halfhalf_64x64x64.hlo.txt"
+        );
+        assert_eq!(artifact_file(Method::Markidis, 8, 8, 8), None);
+    }
+
+    #[test]
+    fn registry_scan_missing_dir_is_empty() {
+        let h = PjrtHandle::spawn();
+        let r = ArtifactRegistry::scan("/nonexistent-dir-xyz", h.clone()).unwrap();
+        assert!(r.names().is_empty());
+        assert!(r.ensure_loaded("nope.hlo.txt").is_err());
+        h.shutdown();
+    }
+
+    // Full PJRT round-trip tests live in rust/tests/pjrt_e2e.rs and are
+    // gated on `make artifacts` having produced the HLO files.
+}

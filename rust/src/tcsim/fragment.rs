@@ -1,0 +1,211 @@
+//! `mma.sync.aligned.m16n8k8` fragment ↔ matrix index mapping.
+//!
+//! The paper uses the `mma` PTX instruction (not `wmma`) because each matrix
+//! element lives in exactly one register of one lane — no duplication — and
+//! the memory↔fragment map must therefore be done by hand (PTX ISA, "Warp
+//! Level Matrix Multiply-Accumulate Instructions"). This module reproduces
+//! that layout for the f16 m16n8k8 shape so the simulated kernels move data
+//! the same way the CUDA kernel does, and so tests can prove the map is a
+//! bijection (the property that makes the no-duplication register saving
+//! legal).
+//!
+//! Layout (PTX ISA 7.x, mma.m16n8k8, f16 A/B, f32 C/D), `lane` ∈ 0..32:
+//!
+//! * **A** (16×8, row-major, 4 regs/lane):
+//!   `row = (lane / 4) + 8·(reg / 2)` wait — precisely:
+//!   regs {0,1} cover rows 0–7, regs {2,3} rows 8–15;
+//!   `row = lane/4 + 8·(reg>>1)`, `col = (lane%4)·2 + (reg&1)`.
+//! * **B** (8×8, 2 regs/lane): `row = (lane%4)·2 + reg`, `col = lane/4`.
+//! * **C/D** (16×8 f32, 4 regs/lane): same as A.
+
+pub const M: usize = 16;
+pub const N: usize = 8;
+pub const K: usize = 8;
+pub const LANES: usize = 32;
+pub const A_REGS: usize = 4;
+pub const B_REGS: usize = 2;
+pub const C_REGS: usize = 4;
+
+/// (row, col) of A-fragment register `reg` of `lane`.
+#[inline]
+pub fn a_index(lane: usize, reg: usize) -> (usize, usize) {
+    debug_assert!(lane < LANES && reg < A_REGS);
+    let row = lane / 4 + 8 * (reg >> 1);
+    let col = (lane % 4) * 2 + (reg & 1);
+    (row, col)
+}
+
+/// (row, col) of B-fragment register `reg` of `lane`.
+#[inline]
+pub fn b_index(lane: usize, reg: usize) -> (usize, usize) {
+    debug_assert!(lane < LANES && reg < B_REGS);
+    let row = (lane % 4) * 2 + reg;
+    let col = lane / 4;
+    (row, col)
+}
+
+/// (row, col) of C/D-fragment register `reg` of `lane`.
+#[inline]
+pub fn c_index(lane: usize, reg: usize) -> (usize, usize) {
+    a_index(lane, reg)
+}
+
+/// A warp's A/B/C fragments for one m16n8k8 MMA, as the per-lane register
+/// files. Values are stored as f32 already on the f16/tf32 grid.
+#[derive(Debug, Clone)]
+pub struct WarpFragments {
+    pub a: [[f32; A_REGS]; LANES],
+    pub b: [[f32; B_REGS]; LANES],
+    pub c: [[f32; C_REGS]; LANES],
+}
+
+impl Default for WarpFragments {
+    fn default() -> Self {
+        WarpFragments {
+            a: [[0.0; A_REGS]; LANES],
+            b: [[0.0; B_REGS]; LANES],
+            c: [[0.0; C_REGS]; LANES],
+        }
+    }
+}
+
+impl WarpFragments {
+    /// `load_matrix_sync` equivalent: scatter row-major tiles into lanes.
+    pub fn load(a_tile: &[f32], b_tile: &[f32]) -> WarpFragments {
+        debug_assert_eq!(a_tile.len(), M * K);
+        debug_assert_eq!(b_tile.len(), K * N);
+        let mut w = WarpFragments::default();
+        for lane in 0..LANES {
+            for reg in 0..A_REGS {
+                let (r, c) = a_index(lane, reg);
+                w.a[lane][reg] = a_tile[r * K + c];
+            }
+            for reg in 0..B_REGS {
+                let (r, c) = b_index(lane, reg);
+                w.b[lane][reg] = b_tile[r * N + c];
+            }
+        }
+        w
+    }
+
+    /// Gather the A fragment back to a row-major tile (test support).
+    pub fn gather_a(&self) -> Vec<f32> {
+        let mut t = vec![0.0f32; M * K];
+        for lane in 0..LANES {
+            for reg in 0..A_REGS {
+                let (r, c) = a_index(lane, reg);
+                t[r * K + c] = self.a[lane][reg];
+            }
+        }
+        t
+    }
+
+    /// Gather the B fragment back to a row-major tile.
+    pub fn gather_b(&self) -> Vec<f32> {
+        let mut t = vec![0.0f32; K * N];
+        for lane in 0..LANES {
+            for reg in 0..B_REGS {
+                let (r, c) = b_index(lane, reg);
+                t[r * N + c] = self.b[lane][reg];
+            }
+        }
+        t
+    }
+
+    /// `store_matrix_sync` equivalent for the accumulator.
+    pub fn store_c(&self, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), M * N);
+        for lane in 0..LANES {
+            for reg in 0..C_REGS {
+                let (r, c) = c_index(lane, reg);
+                out[r * N + c] = self.c[lane][reg];
+            }
+        }
+    }
+
+    /// Execute the warp-level MMA through the fragment layout (d = a·b + c),
+    /// using the given simulated-TC config. This is the `mma_sync` analogue;
+    /// it round-trips through the lane mapping so layout bugs break numerics.
+    pub fn mma_sync(&mut self, cfg: super::mma::MmaConfig) {
+        let a = self.gather_a();
+        let b = self.gather_b();
+        let mut c = vec![0.0f32; M * N];
+        self.store_c(&mut c);
+        let mut d = vec![0.0f32; M * N];
+        super::mma::mma_tile(&mut d, &a, &b, &c, M, N, K, cfg);
+        for lane in 0..LANES {
+            for reg in 0..C_REGS {
+                let (r, cc) = c_index(lane, reg);
+                self.c[lane][reg] = d[r * N + cc];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn a_map_is_bijection() {
+        let mut seen = HashSet::new();
+        for lane in 0..LANES {
+            for reg in 0..A_REGS {
+                let rc = a_index(lane, reg);
+                assert!(rc.0 < M && rc.1 < K);
+                assert!(seen.insert(rc), "duplicate {rc:?}");
+            }
+        }
+        assert_eq!(seen.len(), M * K);
+    }
+
+    #[test]
+    fn b_map_is_bijection() {
+        let mut seen = HashSet::new();
+        for lane in 0..LANES {
+            for reg in 0..B_REGS {
+                let rc = b_index(lane, reg);
+                assert!(rc.0 < K && rc.1 < N);
+                assert!(seen.insert(rc), "duplicate {rc:?}");
+            }
+        }
+        assert_eq!(seen.len(), K * N);
+    }
+
+    #[test]
+    fn c_map_is_bijection() {
+        let mut seen = HashSet::new();
+        for lane in 0..LANES {
+            for reg in 0..C_REGS {
+                let rc = c_index(lane, reg);
+                assert!(rc.0 < M && rc.1 < N);
+                assert!(seen.insert(rc), "duplicate {rc:?}");
+            }
+        }
+        assert_eq!(seen.len(), M * N);
+    }
+
+    #[test]
+    fn load_gather_roundtrip() {
+        let a: Vec<f32> = (0..M * K).map(|i| i as f32).collect();
+        let b: Vec<f32> = (0..K * N).map(|i| (i as f32) * 0.5).collect();
+        let w = WarpFragments::load(&a, &b);
+        assert_eq!(w.gather_a(), a);
+        assert_eq!(w.gather_b(), b);
+    }
+
+    #[test]
+    fn fragment_mma_matches_direct_tile_mma() {
+        use crate::tcsim::mma::{mma_tile, MmaConfig};
+        let a: Vec<f32> = (0..M * K).map(|i| ((i * 37 % 19) as f32 - 9.0) * 0.125).collect();
+        let b: Vec<f32> = (0..K * N).map(|i| ((i * 53 % 23) as f32 - 11.0) * 0.25).collect();
+        let mut w = WarpFragments::load(&a, &b);
+        w.mma_sync(MmaConfig::TENSOR_CORE);
+        let mut via_frag = vec![0.0f32; M * N];
+        w.store_c(&mut via_frag);
+        let mut direct = vec![0.0f32; M * N];
+        mma_tile(&mut direct, &a, &b, &vec![0.0; M * N], M, N, K, MmaConfig::TENSOR_CORE);
+        assert_eq!(via_frag, direct);
+    }
+}

@@ -1,0 +1,15 @@
+//! Software Tensor-Core model.
+//!
+//! Substitutes for the NVIDIA Tensor Core hardware this paper targets (see
+//! DESIGN.md §2): exact low-precision products, a 25-bit RZ accumulator
+//! ([`mma::MmaConfig::TENSOR_CORE`]), the paper's `mma_rn`/`mma_rz`
+//! reference devices, and the `mma.m16n8k8` fragment layout.
+
+pub mod fragment;
+pub mod mma;
+
+pub use fragment::WarpFragments;
+pub use mma::{
+    fma_count, mma_into_external_accumulator, mma_tile, mma_tile_acc, mma_tile_zero_c,
+    mma_tile_zero_into, reset_fma_count, MmaConfig,
+};

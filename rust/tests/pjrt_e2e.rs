@@ -1,0 +1,164 @@
+//! PJRT end-to-end tests: the AOT artifacts (Pallas → HLO text) loaded and
+//! executed from Rust, cross-validated against both the FP64 oracle and the
+//! bit-exact Rust simulator. Gated on `make artifacts` having run.
+
+use std::path::Path;
+use std::sync::Arc;
+use tcec::coordinator::{GemmService, Policy, ServiceConfig};
+use tcec::gemm::{gemm_f64, relative_residual, Method, TileConfig};
+use tcec::matgen::{exp_rand, urand};
+use tcec::runtime::{artifact_file, ArtifactRegistry, PjrtExecutor, PjrtHandle};
+
+fn artifacts_dir() -> Option<&'static str> {
+    if Path::new("artifacts/.stamp").exists() {
+        Some("artifacts")
+    } else {
+        None
+    }
+}
+
+#[test]
+fn pjrt_artifacts_compile_and_match_oracle() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipped: run `make artifacts` first");
+        return;
+    };
+    let handle = PjrtHandle::spawn();
+    let reg = ArtifactRegistry::scan(dir, handle.clone()).unwrap();
+    let cfg = TileConfig::default();
+
+    for (variant, method) in [
+        ("halfhalf", Method::OursHalfHalf),
+        ("tf32tf32", Method::OursTf32),
+        ("fp32", Method::Fp32Simt),
+    ] {
+        let name = format!("ec_gemm_{variant}_64x64x64.hlo.txt");
+        assert!(reg.has(&name), "{name} missing — re-run make artifacts");
+        reg.ensure_loaded(&name).unwrap();
+        let a = urand(64, 64, -1.0, 1.0, 11);
+        let b = urand(64, 64, -1.0, 1.0, 12);
+        let c = reg.handle().execute(&name, &a, &b).unwrap();
+        let oracle = gemm_f64(&a, &b);
+        let e_pjrt = relative_residual(&oracle, &c);
+        // Cross-layer consistency: the Pallas kernel's accuracy level must
+        // equal the Rust simulator's for the same method.
+        let e_sim = relative_residual(&oracle, &method.run(&a, &b, &cfg));
+        assert!(e_pjrt < 1e-6, "{name}: residual {e_pjrt}");
+        assert!(
+            e_pjrt <= 3.0 * e_sim + 1e-9 && e_sim <= 3.0 * e_pjrt + 1e-9,
+            "{name}: pjrt {e_pjrt} vs sim {e_sim} diverge"
+        );
+    }
+    handle.shutdown();
+}
+
+#[test]
+fn pjrt_chain_artifact_composes_two_corrected_gemms() {
+    // The 3-input MLP-shaped chain artifact (L2 composition): executed via
+    // execute_multi, checked against the same graph built from two separate
+    // corrected GEMMs + the leaky-relu in Rust.
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipped: run `make artifacts` first");
+        return;
+    };
+    let name = "mlp_chain_halfhalf_64.hlo.txt";
+    let handle = PjrtHandle::spawn();
+    let reg = ArtifactRegistry::scan(dir, handle.clone()).unwrap();
+    if !reg.has(name) {
+        eprintln!("skipped: {name} not built (re-run make artifacts)");
+        handle.shutdown();
+        return;
+    }
+    reg.ensure_loaded(name).unwrap();
+    let n = 64;
+    let a = urand(n, n, -1.0, 1.0, 21);
+    let w1 = urand(n, n, -1.0, 1.0, 22);
+    let w2 = urand(n, n, -1.0, 1.0, 23);
+    let c = reg.handle().execute_multi(name, &[&a, &w1, &w2], n, n).unwrap();
+
+    // Reference: FP32 chain in f64-checked stages.
+    let cfg = TileConfig::default();
+    let h = Method::Fp32Simt.run(&a, &w1, &cfg);
+    let h = tcec::gemm::Mat::from_fn(n, n, |i, j| {
+        let v = h.get(i, j);
+        if v > 0.0 {
+            v
+        } else {
+            0.01 * v
+        }
+    });
+    let want = Method::Fp32Simt.run(&h, &w2, &cfg);
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (x, y) in c.data.iter().zip(want.data.iter()) {
+        let d = *x as f64 - *y as f64;
+        num += d * d;
+        den += (*y as f64) * (*y as f64);
+    }
+    let rel = (num / den).sqrt();
+    assert!(rel < 1e-5, "chain artifact deviates: {rel}");
+    handle.shutdown();
+}
+
+#[test]
+fn pjrt_artifact_naming_agrees_with_python() {
+    // The Rust naming function must produce names the aot.py run created.
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipped: run `make artifacts` first");
+        return;
+    };
+    for (method, m, k, n) in [
+        (Method::OursHalfHalf, 64, 64, 64),
+        (Method::OursHalfHalf, 128, 128, 128),
+        (Method::OursTf32, 16, 256, 16),
+        (Method::Fp32Simt, 64, 64, 64),
+    ] {
+        let name = artifact_file(method, m, k, n).unwrap();
+        assert!(
+            Path::new(dir).join(&name).exists(),
+            "{name} not produced by aot.py — naming schemes diverged"
+        );
+    }
+}
+
+#[test]
+fn pjrt_executor_serves_and_falls_back() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipped: run `make artifacts` first");
+        return;
+    };
+    let handle = PjrtHandle::spawn();
+    let reg = ArtifactRegistry::scan(dir, handle.clone()).unwrap();
+    let svc = GemmService::start(
+        Arc::new(PjrtExecutor::new(reg)),
+        ServiceConfig { workers: 1, max_batch: 2, ..ServiceConfig::default() },
+    );
+
+    // Artifact shape (64x64x64) — served by PJRT.
+    let a = urand(64, 64, -1.0, 1.0, 1);
+    let b = urand(64, 64, -1.0, 1.0, 2);
+    let oracle = gemm_f64(&a, &b);
+    let resp = svc.gemm_blocking(a, b, Policy::Fp32Accuracy);
+    assert_eq!(resp.method, Method::OursHalfHalf);
+    assert!(relative_residual(&oracle, &resp.c) < 1e-6);
+
+    // Non-artifact shape (40x40) — simulator fallback, same accuracy.
+    let a = urand(40, 40, -1.0, 1.0, 3);
+    let b = urand(40, 40, -1.0, 1.0, 4);
+    let oracle = gemm_f64(&a, &b);
+    let resp = svc.gemm_blocking(a, b, Policy::Fp32Accuracy);
+    assert!(relative_residual(&oracle, &resp.c) < 1e-6);
+
+    // Type-4 inputs at an artifact shape — routed to the tf32 artifact.
+    let a = exp_rand(64, 64, -100, -36, 5);
+    let b = urand(64, 64, -1.0, 1.0, 6);
+    let oracle = gemm_f64(&a, &b);
+    let resp = svc.gemm_blocking(a.clone(), b.clone(), Policy::Fp32Accuracy);
+    assert_eq!(resp.method, Method::OursTf32);
+    let e = relative_residual(&oracle, &resp.c);
+    let e_simt = relative_residual(&oracle, &Method::Fp32Simt.run(&a, &b, &TileConfig::default()));
+    assert!(e <= 2.5 * e_simt, "routed tf32: {e} vs simt {e_simt}");
+
+    svc.shutdown();
+    handle.shutdown();
+}

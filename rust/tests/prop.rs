@@ -1,0 +1,230 @@
+//! Property-based tests (seeded random sweeps — proptest is unavailable
+//! offline, DESIGN.md §2). Each test states its invariant, draws thousands
+//! of cases from a seeded generator, and reports the failing case on panic.
+
+use tcec::fp::{
+    round_to_format, split_feng, split_markidis, split_ootomo, split_ootomo_tf32, Format, Half,
+    Rounding,
+};
+use tcec::gemm::{gemm_f64, gemm_tiled, relative_residual, Mat, SimtBackend, TileConfig};
+use tcec::matgen::Rng;
+use tcec::tcsim::{mma_tile, MmaConfig};
+
+fn random_f32(rng: &mut Rng) -> f32 {
+    // Mix of uniform, exponent-spread, and special-ish values.
+    match rng.int_in(0, 9) {
+        0..=3 => rng.uniform_in(-1.0, 1.0) as f32,
+        4..=6 => {
+            let e = rng.int_in(-40, 40) as i32;
+            (rng.sign() * rng.uniform_in(1.0, 2.0) * tcec::fp::exp2i(e)) as f32
+        }
+        7 => 0.0,
+        8 => (rng.sign() * rng.uniform_in(0.9, 1.1) * tcec::fp::exp2i(-14)) as f32,
+        _ => f32::from_bits((rng.next_u64() & 0x7f7f_ffff) as u32), // finite-ish bits
+    }
+}
+
+/// INVARIANT: rounding is correct — the result is representable, and no
+/// representable value lies strictly between x and round(x).
+#[test]
+fn prop_rounding_is_faithful() {
+    let mut rng = Rng::new(0xF00D);
+    for fmt in [Format::F16, Format::TF32, Format::BF16, Format::F32] {
+        for _ in 0..20_000 {
+            let x = random_f32(&mut rng) as f64;
+            if !x.is_finite() {
+                continue;
+            }
+            if x.abs() > fmt.max_finite() {
+                continue; // overflow semantics (inf / RZ-saturate) are unit-tested
+            }
+            for mode in Rounding::ALL {
+                let r = round_to_format(x, fmt, mode);
+                if !r.is_finite() {
+                    continue;
+                }
+                // Representable: re-rounding is a fixed point in every mode.
+                assert_eq!(
+                    round_to_format(r, fmt, mode),
+                    r,
+                    "not idempotent: x={x:e} fmt={fmt:?} mode={mode:?}"
+                );
+                // Faithful: |x - r| < one ulp at x's scale.
+                let ulp = if x == 0.0 {
+                    fmt.min_subnormal()
+                } else {
+                    (x.abs() * tcec::fp::exp2i(1 - fmt.p as i32)).max(fmt.min_subnormal())
+                };
+                // `<=`: for x far below the min subnormal, RA lands exactly
+                // one quantum away and (x - r) rounds to the quantum itself.
+                assert!(
+                    (x - r).abs() <= ulp,
+                    "unfaithful: x={x:e} r={r:e} fmt={fmt:?} mode={mode:?}"
+                );
+                // Directional correctness.
+                match mode {
+                    Rounding::RZ => assert!(r.abs() <= x.abs()),
+                    Rounding::RA => assert!(r.abs() >= x.abs()),
+                    _ => {}
+                }
+            }
+        }
+    }
+}
+
+/// INVARIANT: RN result is always at least as close to x as RZ's.
+#[test]
+fn prop_rn_at_least_as_close_as_rz() {
+    let mut rng = Rng::new(0xBEEF);
+    for _ in 0..30_000 {
+        let x = random_f32(&mut rng) as f64;
+        if !x.is_finite() {
+            continue;
+        }
+        let rn = round_to_format(x, Format::F16, Rounding::RN);
+        let rz = round_to_format(x, Format::F16, Rounding::RZ);
+        if rn.is_finite() && rz.is_finite() {
+            assert!((x - rn).abs() <= (x - rz).abs() + 1e-300, "x={x:e}");
+        }
+    }
+}
+
+/// INVARIANT: every split scheme reconstructs within its advertised bound
+/// for in-range inputs, and the pieces are representable in their format.
+#[test]
+fn prop_splits_reconstruct_within_bounds() {
+    let mut rng = Rng::new(0x5EED);
+    for _ in 0..30_000 {
+        let v = random_f32(&mut rng);
+        if !v.is_finite() || v == 0.0 {
+            continue;
+        }
+        let e = tcec::fp::mantissa::exponent_of(v);
+        // Ootomo halfhalf: near-f32-exact for e in [-14, 14].
+        if (-14..=14).contains(&e) {
+            let s = split_ootomo(v);
+            let err = (s.reconstruct() - v as f64).abs();
+            assert!(
+                err <= v.abs() as f64 * tcec::fp::exp2i(-21),
+                "ootomo v={v:e} err={err:e}"
+            );
+        }
+        // tf32tf32: near-f32-exact across (almost) the whole f32 range.
+        if (-120..=120).contains(&e) {
+            let s = split_ootomo_tf32(v);
+            let err = (s.reconstruct() - v as f64).abs();
+            assert!(
+                err <= v.abs() as f64 * tcec::fp::exp2i(-21),
+                "tf32 v={v:e} err={err:e}"
+            );
+        }
+        // All FP16 pieces must be exactly representable f16 values.
+        if (-10..=10).contains(&e) {
+            for s in [split_markidis(v), split_feng(v), split_ootomo(v)] {
+                for h in [s.hi, s.lo] {
+                    let rt = Half::from_f64(h.to_f64(), Rounding::RN);
+                    assert_eq!(rt.0, h.0, "piece not on f16 grid: v={v:e}");
+                }
+            }
+        }
+    }
+}
+
+/// INVARIANT: the split ordering of the paper holds pointwise —
+/// err(ootomo) <= err(markidis) for every finite in-range input.
+#[test]
+fn prop_ootomo_never_worse_than_markidis() {
+    let mut rng = Rng::new(0xCAFE);
+    for _ in 0..50_000 {
+        let v = random_f32(&mut rng);
+        if !v.is_finite() || v.abs() >= 65504.0 {
+            continue;
+        }
+        let em = (split_markidis(v).reconstruct() - v as f64).abs();
+        let eo = (split_ootomo(v).reconstruct() - v as f64).abs();
+        assert!(eo <= em + 1e-300, "v={v:e} ({:#x}) markidis={em:e} ootomo={eo:e}", v.to_bits());
+    }
+}
+
+/// INVARIANT: mma with an exact-representable problem is exact in every
+/// accumulator config, regardless of shape.
+#[test]
+fn prop_mma_exact_on_integers() {
+    let mut rng = Rng::new(0xABCD);
+    for _ in 0..300 {
+        let m = rng.int_in(1, 8) as usize;
+        let n = rng.int_in(1, 8) as usize;
+        let k = rng.int_in(1, 16) as usize;
+        let a: Vec<f32> = (0..m * k).map(|_| rng.int_in(-8, 8) as f32).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.int_in(-8, 8) as f32).collect();
+        let c: Vec<f32> = (0..m * n).map(|_| rng.int_in(-64, 64) as f32).collect();
+        for cfg in [MmaConfig::TENSOR_CORE, MmaConfig::MMA_RN] {
+            let mut d = vec![0.0f32; m * n];
+            mma_tile(&mut d, &a, &b, &c, m, n, k, cfg);
+            for i in 0..m {
+                for j in 0..n {
+                    let mut exact = c[i * n + j] as f64;
+                    for l in 0..k {
+                        exact += a[i * k + l] as f64 * b[l * n + j] as f64;
+                    }
+                    assert_eq!(d[i * n + j] as f64, exact, "m{m} n{n} k{k}");
+                }
+            }
+        }
+    }
+}
+
+/// INVARIANT: the tiled engine computes the same function as the naive
+/// loop for ANY tile configuration (only summation order may differ).
+#[test]
+fn prop_tiled_engine_correct_for_random_configs() {
+    let mut rng = Rng::new(0x71ED);
+    for round in 0..40 {
+        let m = rng.int_in(1, 70) as usize;
+        let k = rng.int_in(1, 90) as usize;
+        let n = rng.int_in(1, 70) as usize;
+        let pick = |rng: &mut Rng| [8usize, 16, 32, 64][rng.int_in(0, 3) as usize];
+        let (bm, bn, bk) = (pick(&mut rng), pick(&mut rng), pick(&mut rng));
+        let cfg = TileConfig {
+            bm,
+            bn,
+            bk,
+            wm: bm.min(pick(&mut rng)),
+            wn: bn.min(pick(&mut rng)),
+            wk: bk.min(pick(&mut rng)),
+            stages: 3,
+        };
+        let mut s = 1 + round as u64;
+        let mut gen = |r: usize, c: usize| {
+            Mat::from_fn(r, c, |_, _| {
+                s = s.wrapping_mul(6364136223846793005).wrapping_add(1);
+                ((s >> 33) as f64 / (1u64 << 31) as f64 - 0.5) as f32
+            })
+        };
+        let a = gen(m, k);
+        let b = gen(k, n);
+        let c = gemm_tiled(&a, &b, &cfg, &SimtBackend);
+        let r = gemm_f64(&a, &b);
+        let e = relative_residual(&r, &c);
+        assert!(e < 1e-5, "cfg {cfg:?} ({m}x{k}x{n}): residual {e}");
+    }
+}
+
+/// INVARIANT: eq. 7's metric is a metric-ish: 0 iff equal, scale-invariant.
+#[test]
+fn prop_residual_metric_sanity() {
+    let mut rng = Rng::new(0x0DD);
+    for _ in 0..200 {
+        let n = rng.int_in(1, 20) as usize;
+        let mut s = rng.next_u64();
+        let a = Mat::from_fn(n, n, |_, _| {
+            s = s.wrapping_mul(6364136223846793005).wrapping_add(1);
+            ((s >> 33) as f64 / (1u64 << 31) as f64 - 0.5) as f32
+        });
+        let r = gemm_f64(&a, &Mat::from_fn(n, n, |i, j| ((i == j) as u32) as f32));
+        // C == reference => 0.
+        let exact = Mat::from_vec(n, n, r.data.iter().map(|&x| x as f32).collect());
+        // (a is f32-exact here, so the cast loses nothing)
+        assert_eq!(relative_residual(&r, &exact), 0.0);
+    }
+}
