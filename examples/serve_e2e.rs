@@ -43,6 +43,7 @@ fn main() {
             max_batch: 4,
             linger: Duration::from_millis(2),
             force_method: None, // the router decides
+            ..ServiceConfig::default()
         },
     );
 

@@ -1,0 +1,102 @@
+//! Shard-engine scaling bench: wall-clock throughput of one large GEMM as
+//! the work-stealing pool grows from 1 to N workers, plus steal/reduction
+//! telemetry and the bit-identity check against the unsharded run.
+//!
+//! The simulated backends are CPU-bound, so the speedup ceiling is the
+//! machine's core count (printed below) — the *shape* to look for is
+//! monotonic throughput improvement 1 → N and a steal count that rises
+//! with imbalance (ragged edge tiles).
+//!
+//! Run: `cargo bench --bench shard_scaling`
+
+use std::sync::Arc;
+use tcec::bench_util::Table;
+use tcec::coordinator::{Executor, Policy, SimExecutor};
+use tcec::gemm::Method;
+use tcec::matgen::urand;
+use tcec::shard::{plan, sharded_gemm, ShardConfig, WorkerPool};
+
+fn main() {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!("== shard_scaling: sharded GEMM throughput vs worker count ==");
+    println!("   ({cores} host cores — speedup saturates there)\n");
+
+    // Ragged sizes: edge tiles create imbalance for the stealer to fix.
+    let cases = [
+        (Method::Fp32Simt, 560, 560, 256),
+        (Method::OursHalfHalf, 272, 272, 192),
+    ];
+    let worker_counts = [1usize, 2, 4, 8];
+
+    for (method, m, n, k) in cases {
+        let a = urand(m, k, -1.0, 1.0, 11);
+        let b = urand(k, n, -1.0, 1.0, 12);
+        println!("-- {} ({m} x {k}) * ({k} x {n}) --", method.name());
+
+        // Unsharded baseline under the plan's equivalent tile.
+        let probe_cfg = ShardConfig { workers: 1, min_flops: 0, ..ShardConfig::default() };
+        let p = plan(m, n, k, method, &probe_cfg).expect("plan");
+        let t0 = std::time::Instant::now();
+        let want = method.run(&a, &b, &p.equivalent_tile());
+        let base_s = t0.elapsed().as_secs_f64();
+        let flops = 2.0 * m as f64 * n as f64 * k as f64;
+        println!("unsharded: {base_s:.3}s ({:.1} sim MFlop/s)", flops / base_s / 1e6);
+
+        let mut t = Table::new(&[
+            "workers",
+            "shards",
+            "kslices",
+            "time s",
+            "MFlop/s",
+            "speedup",
+            "steals",
+            "bit-identical",
+        ]);
+        let mut prev_time = f64::INFINITY;
+        let mut monotone = true;
+        for &w in &worker_counts {
+            let cfg = ShardConfig { workers: w, min_flops: 0, ..ShardConfig::default() };
+            let p = plan(m, n, k, method, &cfg).expect("plan");
+            let inner: Arc<dyn Executor> = Arc::new(SimExecutor::new());
+            let pool = WorkerPool::new(w);
+            // Warm one run, then measure the best of three.
+            let _ = sharded_gemm(&a, &b, method, Policy::Fp32Accuracy, &p, &inner, &pool);
+            let mut best = f64::INFINITY;
+            let mut last = None;
+            for _ in 0..3 {
+                let t0 = std::time::Instant::now();
+                let (c, stats) =
+                    sharded_gemm(&a, &b, method, Policy::Fp32Accuracy, &p, &inner, &pool);
+                best = best.min(t0.elapsed().as_secs_f64());
+                last = Some((c, stats));
+            }
+            let (c, stats) = last.unwrap();
+            // Both cases keep kslices = 1 for every worker count (the M/N
+            // grid alone covers the target), so one baseline serves all.
+            let probe_tile = plan(m, n, k, method, &probe_cfg).unwrap().equivalent_tile();
+            assert_eq!(p.equivalent_tile(), probe_tile);
+            let identical = c.data == want.data;
+            if w <= cores && best > prev_time * 1.05 {
+                monotone = false;
+            }
+            if w <= cores {
+                prev_time = best;
+            }
+            t.row(&[
+                w.to_string(),
+                p.shard_count().to_string(),
+                p.kslices.to_string(),
+                format!("{best:.3}"),
+                format!("{:.1}", flops / best / 1e6),
+                format!("{:.2}x", base_s / best),
+                stats.steals.to_string(),
+                if identical { "yes".into() } else { "NO — BUG".into() },
+            ]);
+        }
+        t.print();
+        println!(
+            "monotonic 1→min(N,cores): {}\n",
+            if monotone { "yes" } else { "no (noisy host?)" }
+        );
+    }
+}

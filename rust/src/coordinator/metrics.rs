@@ -20,6 +20,11 @@ struct Inner {
     latency_total: Duration,
     batches: u64,
     batched_requests: u64,
+    sharded_gemms: u64,
+    shards_executed: u64,
+    shard_steals: u64,
+    reduction_depth_max: u64,
+    shard_fallbacks: u64,
 }
 
 /// Shared metrics sink.
@@ -38,6 +43,16 @@ pub struct Snapshot {
     pub latency_buckets: [u64; 8],
     pub mean_latency: Duration,
     pub mean_batch_size: f64,
+    /// GEMMs that took the sharded path (see `shard::ShardedExecutor`).
+    pub sharded_gemms: u64,
+    /// Total shards executed across all sharded GEMMs.
+    pub shards_executed: u64,
+    /// Total work-steals observed in the shard pool.
+    pub shard_steals: u64,
+    /// Deepest fixed-order k reduction seen (0 = no k-split yet).
+    pub reduction_depth_max: u64,
+    /// Sharded GEMMs that degraded to one unsharded call (shard failure).
+    pub shard_fallbacks: u64,
 }
 
 impl Metrics {
@@ -64,6 +79,20 @@ impl Metrics {
         }
     }
 
+    /// Record one sharded GEMM: how many shards completed, the work-steals
+    /// it observed, its k-reduction depth, and whether it degraded to the
+    /// unsharded fallback.
+    pub fn on_sharded_gemm(&self, shards: u64, steals: u64, reduction_depth: u64, fell_back: bool) {
+        let mut g = self.inner.lock().unwrap();
+        g.sharded_gemms += 1;
+        g.shards_executed += shards;
+        g.shard_steals += steals;
+        g.reduction_depth_max = g.reduction_depth_max.max(reduction_depth);
+        if fell_back {
+            g.shard_fallbacks += 1;
+        }
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         let g = self.inner.lock().unwrap();
         let mut per_method: Vec<(&'static str, u64)> =
@@ -85,6 +114,11 @@ impl Metrics {
             } else {
                 0.0
             },
+            sharded_gemms: g.sharded_gemms,
+            shards_executed: g.shards_executed,
+            shard_steals: g.shard_steals,
+            reduction_depth_max: g.reduction_depth_max,
+            shard_fallbacks: g.shard_fallbacks,
         }
     }
 }
@@ -108,6 +142,23 @@ mod tests {
         assert_eq!(s.latency_buckets.iter().sum::<u64>(), 2);
         assert!(s.mean_latency > Duration::ZERO);
         assert!((s.mean_batch_size - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shard_counters_accumulate() {
+        let m = Metrics::new();
+        let s = m.snapshot();
+        assert_eq!((s.sharded_gemms, s.shards_executed, s.shard_steals), (0, 0, 0));
+        assert_eq!(s.reduction_depth_max, 0);
+        m.on_sharded_gemm(12, 3, 0, false);
+        m.on_sharded_gemm(8, 0, 3, false);
+        m.on_sharded_gemm(4, 1, 1, true);
+        let s = m.snapshot();
+        assert_eq!(s.sharded_gemms, 3);
+        assert_eq!(s.shards_executed, 24);
+        assert_eq!(s.shard_steals, 4);
+        assert_eq!(s.reduction_depth_max, 3);
+        assert_eq!(s.shard_fallbacks, 1);
     }
 
     #[test]

@@ -73,6 +73,11 @@ pub struct ServiceConfig {
     pub linger: Duration,
     /// Optional method override (bypass the router — used by benches).
     pub force_method: Option<Method>,
+    /// When set, large GEMMs are executed as tile-shard grids over a
+    /// work-stealing pool (`shard::ShardedExecutor` wraps the executor;
+    /// small requests keep the direct path). Shard/steal/reduction counters
+    /// land in this service's [`Metrics`].
+    pub shard: Option<crate::shard::ShardConfig>,
 }
 
 impl Default for ServiceConfig {
@@ -82,6 +87,7 @@ impl Default for ServiceConfig {
             max_batch: 8,
             linger: Duration::from_millis(2),
             force_method: None,
+            shard: None,
         }
     }
 }
@@ -99,6 +105,17 @@ impl GemmService {
     /// Start the dispatcher + worker pool over the given executor.
     pub fn start(executor: Arc<dyn Executor>, cfg: ServiceConfig) -> GemmService {
         let metrics = Arc::new(Metrics::new());
+        // Sharding wraps the executor transparently: below the threshold
+        // `ShardedExecutor` is a pass-through, above it one request fans
+        // out over the shard pool.
+        let executor: Arc<dyn Executor> = match &cfg.shard {
+            Some(sc) => Arc::new(crate::shard::ShardedExecutor::with_metrics(
+                executor,
+                sc.clone(),
+                Arc::clone(&metrics),
+            )),
+            None => executor,
+        };
         let (tx, rx) = channel::<Msg>();
         let (work_tx, work_rx) = channel::<WorkItem>();
         let work_rx = Arc::new(Mutex::new(work_rx));
@@ -300,6 +317,7 @@ mod tests {
                 max_batch: 4,
                 linger: Duration::from_millis(50),
                 force_method: Some(Method::Fp32Simt),
+                ..ServiceConfig::default()
             },
         );
         let rxs: Vec<_> = (0..8)
@@ -374,6 +392,7 @@ mod tests {
                 max_batch: 100,
                 linger: Duration::from_secs(60), // never auto-flush
                 force_method: Some(Method::Fp32Simt),
+                ..ServiceConfig::default()
             },
         );
         let rx = svc.submit(urand(8, 8, -1.0, 1.0, 1), urand(8, 8, -1.0, 1.0, 2), Policy::StrictFp32).1;

@@ -18,7 +18,7 @@ pub use backends::{
 pub use batched::{batched_worst_residual, gemm_batched, gemm_batched_f64, BatchedOperands};
 pub use complex::{c_relative_residual, cgemm, cgemm_f64, CgemmAlgo, CMat, CMatF64};
 pub use ozaki::{ozaki_gemm, ozaki_terms, slice_bits, slices_for_fp32};
-pub use scaling::{apply_scale, gemm_scaled, plan_scale, ScalePlan};
+pub use scaling::{apply_scale, descale_pow2, gemm_scaled, plan_scale, ScalePlan};
 pub use error::{max_rel_error, relative_residual};
 pub use matrix::{Mat, MatF64};
 pub use reference::{gemm_f32_naive, gemm_f64};
@@ -102,6 +102,15 @@ impl Method {
         Method::ALL.iter().copied().find(|m| m.name() == s)
     }
 
+    /// CLI-facing parse: an unknown name is an error listing every valid
+    /// method, never a silent fallback.
+    pub fn parse_or_list(s: &str) -> Result<Method, String> {
+        Method::parse(s).ok_or_else(|| {
+            let names: Vec<&str> = Method::ALL.iter().map(|m| m.name()).collect();
+            format!("unknown method `{s}` — valid methods: {}", names.join(", "))
+        })
+    }
+
     /// Instantiate the backend and run the tiled GEMM.
     pub fn run(&self, a: &Mat, b: &Mat, cfg: &TileConfig) -> Mat {
         match self {
@@ -165,6 +174,16 @@ mod tests {
             assert_eq!(Method::parse(m.name()), Some(m));
         }
         assert_eq!(Method::parse("nope"), None);
+    }
+
+    #[test]
+    fn parse_or_list_reports_all_names() {
+        assert_eq!(Method::parse_or_list("markidis"), Ok(Method::Markidis));
+        let err = Method::parse_or_list("cutlass_typo").unwrap_err();
+        assert!(err.contains("cutlass_typo"));
+        for m in Method::ALL {
+            assert!(err.contains(m.name()), "error must list {}", m.name());
+        }
     }
 
     #[test]

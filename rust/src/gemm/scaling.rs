@@ -58,6 +58,24 @@ pub fn apply_scale(m: &Mat, plan: ScalePlan) -> Mat {
     m.map(|x| x * f1 * f2)
 }
 
+/// Exact two-step descale epilogue: multiply every element by `2^total`,
+/// split into two in-range power-of-two factors so huge shifts survive.
+/// Shared by [`gemm_scaled`] and the shard engine's prescale hoist
+/// (`shard::exec`), whose bit-identity guarantee requires both paths to
+/// apply the *same* factor sequence add-for-add.
+pub fn descale_pow2(c: &Mat, total: i32) -> Mat {
+    let (s1, s2) = if total > 127 {
+        (127, total - 127)
+    } else if total < -126 {
+        (-126, total + 126)
+    } else {
+        (total, 0)
+    };
+    let f1 = exp2i(s1) as f32;
+    let f2 = exp2i(s2) as f32;
+    c.map(|x| x * f1 * f2)
+}
+
 /// `C = A·B` with pre-scaling: scale both operands into range, run
 /// `method`, descale the result in the FP32 epilogue.
 ///
@@ -71,18 +89,7 @@ pub fn gemm_scaled(a: &Mat, b: &Mat, method: Method, cfg: &TileConfig) -> Mat {
     let a_s = apply_scale(a, pa);
     let b_s = apply_scale(b, pb);
     let c_s = method.run(&a_s, &b_s, cfg);
-    let total = -(pa.shift + pb.shift);
-    // Exact two-step descale (each step a power of two within f32 range).
-    let (s1, s2) = if total > 127 {
-        (127, total - 127)
-    } else if total < -126 {
-        (-126, total + 126)
-    } else {
-        (total, 0)
-    };
-    let f1 = exp2i(s1) as f32;
-    let f2 = exp2i(s2) as f32;
-    c_s.map(|x| x * f1 * f2)
+    descale_pow2(&c_s, -(pa.shift + pb.shift))
 }
 
 #[cfg(test)]

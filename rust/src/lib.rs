@@ -16,6 +16,12 @@
 //! * [`coordinator`], [`runtime`] — the serving layer: a GEMM service that
 //!   routes requests by precision policy and executes AOT-compiled Pallas
 //!   artifacts through PJRT.
+//! * [`shard`] — the sharded execution engine between the router and the
+//!   executors: a partition planner (perfmodel/autotune-sized, error-bound
+//!   gated k-splits), a work-stealing worker pool, and a deterministic
+//!   k-split reduction that keeps sharded results bit-identical to
+//!   unsharded for every [`gemm::Method`]. Serving entry:
+//!   [`shard::ShardedExecutor`] via `ServiceConfig::shard`.
 //! * [`experiments`] — one driver per paper figure/table, shared by the
 //!   bench binaries.
 
@@ -30,4 +36,5 @@ pub mod gemm;
 pub mod matgen;
 pub mod perfmodel;
 pub mod runtime;
+pub mod shard;
 pub mod tcsim;

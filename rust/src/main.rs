@@ -2,6 +2,7 @@
 //! the paper's experiments, and smoke-test AOT artifacts.
 
 use std::sync::Arc;
+use tcec::bench_util::Table;
 use tcec::cli::Args;
 use tcec::coordinator::{GemmService, Policy, ServiceConfig, SimExecutor};
 use tcec::experiments;
@@ -9,13 +10,16 @@ use tcec::gemm::{gemm_f64, relative_residual, Method, TileConfig};
 use tcec::matgen::Workload;
 use tcec::perfmodel::{A100, ALL_GPUS};
 use tcec::runtime::{ArtifactRegistry, PjrtExecutor, PjrtHandle};
+use tcec::shard;
 
 const USAGE: &str = "\
 tcec — error-corrected Tensor-Core GEMM (Ootomo & Yokota 2022 reproduction)
 
 USAGE:
   tcec gemm      [--method M] [--m N --n N --k N] [--workload W] [--seeds S] [--prescale]
+  tcec shard     [--method M] [--m N --n N --k N] [--workers W] [--kslices S] [--threshold F]
   tcec serve     [--requests N] [--size N] [--workers W] [--batch B] [--artifacts DIR]
+                 [--shard] [--shard-workers W]
   tcec experiment <fig1|fig4|fig5|fig8|fig9|fig11|fig13|fig14|fig15|fig16|table1_2|table3|table6>
   tcec artifacts [--dir DIR]
   tcec analyze   [--exponent E] [--k N]
@@ -23,9 +27,24 @@ USAGE:
 
 METHODS: cublas_simt cublas_fp16tc cublas_tf32tc markidis markidis_mma_rn
          feng cutlass_halfhalf cutlass_tf32tf32 ours_no_rz_avoid
-         ours_four_term fp32_trunc_lsb
+         ours_four_term fp32_trunc_lsb ours_bf16x3 halfhalf_prescale
 WORKLOADS: urand | exprand:<a>:<b> | randtlr | spatial | cauchy
 ";
+
+/// Strict method flag: unknown names are an error listing every valid
+/// method — never a silent fallback.
+fn parse_method_flag(args: &Args, default: Method) -> Method {
+    match args.str_flag("method") {
+        None => default,
+        Some(s) => match Method::parse_or_list(s) {
+            Ok(m) => m,
+            Err(e) => {
+                eprintln!("{e}");
+                std::process::exit(2);
+            }
+        },
+    }
+}
 
 fn parse_workload(s: &str) -> Workload {
     if s == "urand" {
@@ -49,10 +68,7 @@ fn parse_workload(s: &str) -> Workload {
 }
 
 fn cmd_gemm(args: &Args) {
-    let method = args
-        .str_flag("method")
-        .and_then(Method::parse)
-        .unwrap_or(Method::OursHalfHalf);
+    let method = parse_method_flag(args, Method::OursHalfHalf);
     let m = args.usize_flag("m", 16);
     let n = args.usize_flag("n", 16);
     let k = args.usize_flag("k", 1024);
@@ -73,12 +89,85 @@ fn cmd_gemm(args: &Args) {
     println!("ratio vs FP32     : {:.2}x", resid / simt.max(1e-300));
 }
 
+/// `tcec shard`: plan a shard grid for one large GEMM, execute it over the
+/// work-stealing pool, verify bit-identity against the unsharded run of the
+/// plan's equivalent tile config, and report throughput + pool metrics.
+fn cmd_shard(args: &Args) {
+    let method = parse_method_flag(args, Method::Fp32Simt);
+    let m = args.usize_flag("m", 512);
+    let n = args.usize_flag("n", 512);
+    let k = args.usize_flag("k", 512);
+    let workers = args.usize_flag("workers", 4);
+    let cfg = shard::ShardConfig {
+        workers,
+        max_kslices: args.usize_flag("kslices", 4),
+        min_flops: args.usize_flag("threshold", 0) as u64,
+        ..shard::ShardConfig::default()
+    };
+    let Some(plan) = shard::plan(m, n, k, method, &cfg) else {
+        println!(
+            "({m} x {k}) * ({k} x {n}) with {}: below the sharding threshold — unsharded path",
+            method.name()
+        );
+        return;
+    };
+    println!("plan for ({m} x {k}) * ({k} x {n}), {}:", method.name());
+    let mut t =
+        Table::new(&["grid", "shards", "kslices", "gate s_max", "equivalent tile (bk/wk)"]);
+    let g = plan.equivalent_tile();
+    t.row(&[
+        format!("{} x {}", plan.row_cuts.len(), plan.col_cuts.len()),
+        plan.shard_count().to_string(),
+        plan.kslices.to_string(),
+        shard::max_accuracy_preserving_kslices(method, k).to_string(),
+        format!("{}/{}", g.bk, g.wk),
+    ]);
+    t.print();
+
+    let a = Workload::Urand { lo: -1.0, hi: 1.0 }.generate(m, k, 1);
+    let b = Workload::Urand { lo: -1.0, hi: 1.0 }.generate(k, n, 2);
+    let inner: Arc<dyn tcec::coordinator::Executor> = Arc::new(SimExecutor::new());
+    let pool = shard::WorkerPool::new(workers);
+    let t0 = std::time::Instant::now();
+    let (c, stats) =
+        shard::sharded_gemm(&a, &b, method, Policy::Fp32Accuracy, &plan, &inner, &pool);
+    let dt_sharded = t0.elapsed().as_secs_f64();
+    let t0 = std::time::Instant::now();
+    let want = method.run(&a, &b, &g);
+    let dt_unsharded = t0.elapsed().as_secs_f64();
+
+    let flops = 2.0 * m as f64 * n as f64 * k as f64;
+    println!(
+        "sharded  : {dt_sharded:.3}s  ({:.1} sim MFlop/s, {} workers)",
+        flops / dt_sharded / 1e6,
+        pool.workers()
+    );
+    println!("unsharded: {dt_unsharded:.3}s  ({:.1} sim MFlop/s)", flops / dt_unsharded / 1e6);
+    println!("speedup  : {:.2}x", dt_unsharded / dt_sharded);
+    println!(
+        "shards {} | steals {} | reduction depth {} | fallback {}",
+        stats.shards, stats.steals, stats.reduction_depth, stats.fell_back
+    );
+    println!(
+        "bit-identical to unsharded: {}",
+        if c.data == want.data { "YES" } else { "NO (BUG)" }
+    );
+}
+
 fn cmd_serve(args: &Args) {
     let requests = args.usize_flag("requests", 32);
     let size = args.usize_flag("size", 64);
     let cfg = ServiceConfig {
         workers: args.usize_flag("workers", 2),
         max_batch: args.usize_flag("batch", 4),
+        shard: if args.bool_flag("shard") {
+            Some(shard::ShardConfig {
+                workers: args.usize_flag("shard-workers", 4),
+                ..shard::ShardConfig::default()
+            })
+        } else {
+            None
+        },
         ..ServiceConfig::default()
     };
     let svc = if let Some(dir) = args.str_flag("artifacts") {
@@ -115,6 +204,16 @@ fn cmd_serve(args: &Args) {
     );
     println!("mean batch size: {:.2}", snap.mean_batch_size);
     println!("mean latency   : {:?}", snap.mean_latency);
+    if snap.sharded_gemms > 0 {
+        println!(
+            "sharded gemms  : {} ({} shards, {} steals, max reduction depth {}, {} fallbacks)",
+            snap.sharded_gemms,
+            snap.shards_executed,
+            snap.shard_steals,
+            snap.reduction_depth_max,
+            snap.shard_fallbacks
+        );
+    }
     for (name, count) in snap.per_method {
         println!("  {name}: {count}");
     }
@@ -231,6 +330,7 @@ fn main() {
     let args = Args::from_env();
     match args.command.as_deref() {
         Some("gemm") => cmd_gemm(&args),
+        Some("shard") => cmd_shard(&args),
         Some("serve") => cmd_serve(&args),
         Some("experiment") => cmd_experiment(&args),
         Some("artifacts") => cmd_artifacts(&args),

@@ -11,14 +11,50 @@
 //! Interchange is HLO *text*: jax ≥ 0.5 serializes HloModuleProto with
 //! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
 //! reassigns ids (see /opt/xla-example/README.md).
+//!
+//! **Offline gating (DESIGN.md §2):** the `xla` binding is an external
+//! crate the offline image cannot fetch, so real PJRT execution sits behind
+//! the `pjrt` cargo feature. Without it (the default) the engine thread is
+//! a stub that answers every Load/Execute with an error; every caller on
+//! the serving path ([`PjrtExecutor`]) already falls back to the bit-exact
+//! simulator, so the default build loses no functionality that the offline
+//! testbed could exercise. `anyhow` was replaced by the std-only
+//! [`RuntimeError`] for the same reason.
 
 use crate::coordinator::{BatchKey, Executor, GemmRequest, SimExecutor};
 use crate::gemm::{Mat, Method};
-use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
+use std::fmt;
 use std::path::{Path, PathBuf};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::Mutex;
+
+/// Minimal string-backed error (`anyhow` is unavailable offline).
+#[derive(Debug, Clone)]
+pub struct RuntimeError(String);
+
+impl RuntimeError {
+    pub fn new(msg: impl Into<String>) -> RuntimeError {
+        RuntimeError(msg.into())
+    }
+}
+
+impl fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+impl From<std::io::Error> for RuntimeError {
+    fn from(e: std::io::Error) -> RuntimeError {
+        RuntimeError(e.to_string())
+    }
+}
+
+/// Runtime-layer result.
+pub type Result<T> = std::result::Result<T, RuntimeError>;
 
 /// Artifact naming scheme shared with `python/compile/aot.py`:
 /// `ec_gemm_<variant>_<m>x<k>x<n>.hlo.txt`.
@@ -32,6 +68,7 @@ pub fn artifact_file(method: Method, m: usize, k: usize, n: usize) -> Option<Str
     Some(format!("ec_gemm_{variant}_{m}x{k}x{n}.hlo.txt"))
 }
 
+#[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
 enum EngineMsg {
     /// Compile (and cache) the artifact at `path` under `key`.
     Load { key: String, path: PathBuf, reply: Sender<Result<()>> },
@@ -43,6 +80,7 @@ enum EngineMsg {
     Shutdown,
 }
 
+#[cfg(feature = "pjrt")]
 fn engine_main(rx: std::sync::mpsc::Receiver<EngineMsg>) {
     // Client creation failure is reported per-request (the thread keeps
     // serving so callers get errors rather than hangs).
@@ -52,16 +90,19 @@ fn engine_main(rx: std::sync::mpsc::Receiver<EngineMsg>) {
         match msg {
             EngineMsg::Load { key, path, reply } => {
                 let r = (|| -> Result<()> {
-                    let client =
-                        client.as_ref().map_err(|e| anyhow!("PJRT client init failed: {e:?}"))?;
+                    let client = client
+                        .as_ref()
+                        .map_err(|e| RuntimeError::new(format!("PJRT client init failed: {e:?}")))?;
                     if cache.contains_key(&key) {
                         return Ok(());
                     }
-                    let proto = xla::HloModuleProto::from_text_file(&path)
-                        .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+                    let proto = xla::HloModuleProto::from_text_file(&path).map_err(|e| {
+                        RuntimeError::new(format!("parse {}: {e:?}", path.display()))
+                    })?;
                     let comp = xla::XlaComputation::from_proto(&proto);
-                    let exe =
-                        client.compile(&comp).map_err(|e| anyhow!("compile {key}: {e:?}"))?;
+                    let exe = client
+                        .compile(&comp)
+                        .map_err(|e| RuntimeError::new(format!("compile {key}: {e:?}")))?;
                     cache.insert(key, exe);
                     Ok(())
                 })();
@@ -69,23 +110,37 @@ fn engine_main(rx: std::sync::mpsc::Receiver<EngineMsg>) {
             }
             EngineMsg::Execute { key, inputs, rows, cols, reply } => {
                 let r = (|| -> Result<Mat> {
-                    let exe = cache.get(&key).ok_or_else(|| anyhow!("artifact {key} not loaded"))?;
+                    let exe = cache
+                        .get(&key)
+                        .ok_or_else(|| RuntimeError::new(format!("artifact {key} not loaded")))?;
                     let mut lits = Vec::with_capacity(inputs.len());
                     for (i, m) in inputs.iter().enumerate() {
                         lits.push(
                             xla::Literal::vec1(&m.data)
                                 .reshape(&[m.rows as i64, m.cols as i64])
-                                .map_err(|e| anyhow!("reshape input {i}: {e:?}"))?,
+                                .map_err(|e| {
+                                    RuntimeError::new(format!("reshape input {i}: {e:?}"))
+                                })?,
                         );
                     }
-                    let bufs =
-                        exe.execute::<xla::Literal>(&lits).map_err(|e| anyhow!("execute: {e:?}"))?;
-                    let lit = bufs[0][0].to_literal_sync().map_err(|e| anyhow!("fetch: {e:?}"))?;
+                    let bufs = exe
+                        .execute::<xla::Literal>(&lits)
+                        .map_err(|e| RuntimeError::new(format!("execute: {e:?}")))?;
+                    let lit = bufs[0][0]
+                        .to_literal_sync()
+                        .map_err(|e| RuntimeError::new(format!("fetch: {e:?}")))?;
                     // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
-                    let out = lit.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
-                    let data = out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+                    let out = lit
+                        .to_tuple1()
+                        .map_err(|e| RuntimeError::new(format!("untuple: {e:?}")))?;
+                    let data = out
+                        .to_vec::<f32>()
+                        .map_err(|e| RuntimeError::new(format!("to_vec: {e:?}")))?;
                     if data.len() != rows * cols {
-                        bail!("artifact {key}: got {} elements, want {}x{}", data.len(), rows, cols);
+                        return Err(RuntimeError::new(format!(
+                            "artifact {key}: got {} elements, want {rows}x{cols}",
+                            data.len()
+                        )));
                     }
                     Ok(Mat::from_vec(rows, cols, data))
                 })();
@@ -93,6 +148,28 @@ fn engine_main(rx: std::sync::mpsc::Receiver<EngineMsg>) {
             }
             EngineMsg::Loaded { reply } => {
                 let _ = reply.send(cache.keys().cloned().collect());
+            }
+            EngineMsg::Shutdown => break,
+        }
+    }
+}
+
+/// Stub engine for the default (offline) build: every Load/Execute fails
+/// with a clear message; callers fall back to the simulator.
+#[cfg(not(feature = "pjrt"))]
+fn engine_main(rx: std::sync::mpsc::Receiver<EngineMsg>) {
+    const MSG: &str = "PJRT disabled: build with `--features pjrt` and a vendored `xla` crate \
+                       (offline default runs the bit-exact simulator instead; DESIGN.md §2)";
+    for msg in rx {
+        match msg {
+            EngineMsg::Load { reply, .. } => {
+                let _ = reply.send(Err(RuntimeError::new(MSG)));
+            }
+            EngineMsg::Execute { reply, .. } => {
+                let _ = reply.send(Err(RuntimeError::new(MSG)));
+            }
+            EngineMsg::Loaded { reply } => {
+                let _ = reply.send(Vec::new());
             }
             EngineMsg::Shutdown => break,
         }
@@ -121,8 +198,8 @@ impl PjrtHandle {
         let (reply, rx) = channel();
         self.tx
             .send(EngineMsg::Load { key: key.into(), path: path.into(), reply })
-            .context("engine thread gone")?;
-        rx.recv().context("engine thread died")?
+            .map_err(|_| RuntimeError::new("engine thread gone"))?;
+        rx.recv().map_err(|_| RuntimeError::new("engine thread died"))?
     }
 
     /// Execute a cached two-input GEMM artifact.
@@ -132,7 +209,13 @@ impl PjrtHandle {
 
     /// Execute a cached artifact with any number of inputs (e.g. the
     /// 3-input MLP chain artifact). `rows × cols` is the expected output.
-    pub fn execute_multi(&self, key: &str, inputs: &[&Mat], rows: usize, cols: usize) -> Result<Mat> {
+    pub fn execute_multi(
+        &self,
+        key: &str,
+        inputs: &[&Mat],
+        rows: usize,
+        cols: usize,
+    ) -> Result<Mat> {
         let (reply, rx) = channel();
         self.tx
             .send(EngineMsg::Execute {
@@ -142,8 +225,8 @@ impl PjrtHandle {
                 cols,
                 reply,
             })
-            .context("engine thread gone")?;
-        rx.recv().context("engine thread died")?
+            .map_err(|_| RuntimeError::new("engine thread gone"))?;
+        rx.recv().map_err(|_| RuntimeError::new("engine thread died"))?
     }
 
     pub fn loaded(&self) -> Vec<String> {
@@ -173,7 +256,7 @@ impl ArtifactRegistry {
         let dir = dir.into();
         let mut available = HashMap::new();
         if dir.is_dir() {
-            for entry in std::fs::read_dir(&dir).context("read artifacts dir")? {
+            for entry in std::fs::read_dir(&dir)? {
                 let p = entry?.path();
                 if let Some(name) = p.file_name().and_then(|s| s.to_str()) {
                     if name.ends_with(".hlo.txt") {
@@ -203,7 +286,9 @@ impl ArtifactRegistry {
             .unwrap()
             .get(name)
             .cloned()
-            .ok_or_else(|| anyhow!("no artifact named {name} in {}", self.dir.display()))?;
+            .ok_or_else(|| {
+                RuntimeError::new(format!("no artifact named {name} in {}", self.dir.display()))
+            })?;
         self.handle.load(name, &path)?;
         Ok(name.to_string())
     }
@@ -281,6 +366,16 @@ mod tests {
         let r = ArtifactRegistry::scan("/nonexistent-dir-xyz", h.clone()).unwrap();
         assert!(r.names().is_empty());
         assert!(r.ensure_loaded("nope.hlo.txt").is_err());
+        h.shutdown();
+    }
+
+    #[test]
+    fn stub_engine_reports_errors_not_hangs() {
+        // Whether or not the pjrt feature is on, a missing artifact must be
+        // an error; without the feature, loads of real paths error too.
+        let h = PjrtHandle::spawn();
+        assert!(h.execute("missing", &Mat::zeros(2, 2), &Mat::zeros(2, 2)).is_err());
+        assert!(h.loaded().is_empty());
         h.shutdown();
     }
 

@@ -1,0 +1,371 @@
+//! Sharded GEMM execution: fan a planned shard grid out over the
+//! work-stealing pool, execute every shard through the ordinary
+//! [`Executor`] trait (so the bit-exact simulator and the PJRT runtime both
+//! work unchanged — a shard *is* a plain GEMM over sub-operands), and
+//! reassemble C with the deterministic k reduction.
+//!
+//! [`ShardedExecutor`] is the serving-path wrapper: below the flop
+//! threshold it is a transparent pass-through; above it, one request
+//! becomes `plan.shard_count()` pool jobs. Any shard failure (executor
+//! panic, shape mismatch) degrades to one unsharded `inner.execute` call —
+//! never an error the client can observe.
+
+use super::plan::{plan, ShardConfig, ShardPlan};
+use super::pool::WorkerPool;
+use super::reduce::{assemble, gather_a, gather_b, slice_k_columns};
+use crate::coordinator::{BatchKey, Executor, GemmRequest, Metrics};
+use crate::gemm::{scaling, Mat, Method};
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+
+/// Outcome statistics of one sharded GEMM.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardStats {
+    /// Shards that completed successfully (= the full grid when
+    /// `fell_back` is false; the partial count otherwise).
+    pub shards: usize,
+    /// K-split factor of the plan (1 = output-only sharding).
+    pub kslices: usize,
+    /// Max adds beyond the first partial in the fixed-order k reduction.
+    pub reduction_depth: usize,
+    /// Exact number of this GEMM's shards that were executed by a worker
+    /// other than the one they were queued on.
+    pub steals: u64,
+    /// True when a shard failed and the whole GEMM re-ran unsharded.
+    pub fell_back: bool,
+}
+
+/// Extract the contiguous `rows × a.cols` row band of `a` at `i0`.
+fn row_band(a: &Mat, i0: usize, rows: usize) -> Mat {
+    let mut v = Vec::new();
+    a.copy_sub_into(i0, 0, rows, a.cols, &mut v);
+    Mat::from_vec(rows, a.cols, v)
+}
+
+/// Extract the contiguous `b.rows × cols` column band of `b` at `j0`.
+fn col_band(b: &Mat, j0: usize, cols: usize) -> Mat {
+    let mut v = Vec::new();
+    b.copy_sub_into(0, j0, b.rows, cols, &mut v);
+    Mat::from_vec(b.rows, cols, v)
+}
+
+/// Run one GEMM as the given shard plan over `pool`, executing every shard
+/// through `inner`. Bit-identical to
+/// `method.run(a, b, &plan.equivalent_tile())` when `inner` computes plain
+/// GEMMs under `plan.engine_tile` (e.g. a matching `SimExecutor`) — see
+/// `super::reduce` for the argument.
+pub fn sharded_gemm(
+    a: &Mat,
+    b: &Mat,
+    method: Method,
+    policy: crate::coordinator::Policy,
+    plan: &ShardPlan,
+    inner: &Arc<dyn Executor>,
+    pool: &WorkerPool,
+) -> (Mat, ShardStats) {
+    // Pre-scaled halfhalf must hoist its (global-max-exponent) scaling
+    // above the cut: shard-local scales would disagree with the unsharded
+    // run. Powers of two are exact, so descaling the assembled C afterwards
+    // reproduces `gemm_scaled` bit-for-bit.
+    let (eff_method, scaled, descale) = if method == Method::OursHalfHalfPre {
+        let pa = scaling::plan_scale(a);
+        let pb = scaling::plan_scale(b);
+        (
+            Method::OursHalfHalf,
+            Some((scaling::apply_scale(a, pa), scaling::apply_scale(b, pb))),
+            Some(-(pa.shift + pb.shift)),
+        )
+    } else {
+        (method, None, None)
+    };
+    let (a_eff, b_eff): (&Mat, &Mat) = match &scaled {
+        Some((sa, sb)) => (sa, sb),
+        None => (a, b),
+    };
+
+    // Exact per-request steal attribution: the pool tells each job whether
+    // it was stolen.
+    let steals = Arc::new(std::sync::atomic::AtomicU64::new(0));
+    let (tx, rx) = channel::<(usize, usize, usize, Option<Mat>)>();
+    let kslices = plan.kslices;
+    let bk = plan.engine_tile.bk;
+    let k = plan.k;
+    // Each operand part depends only on (cut, slice), so it is gathered
+    // ONCE here and shared by Arc; the per-shard owned copy `GemmRequest`
+    // needs (jobs must own 'static data) is made INSIDE the job, so the
+    // number of live full-size copies is bounded by the pool width, not by
+    // the grid dimensions.
+    let kcols_per_slice: Vec<Vec<usize>> = if kslices > 1 {
+        (0..kslices).map(|s| slice_k_columns(k, bk, kslices, s)).collect()
+    } else {
+        Vec::new()
+    };
+    let mut a_parts: Vec<Arc<Mat>> = Vec::with_capacity(plan.row_cuts.len() * kslices);
+    for &(i0, rows) in &plan.row_cuts {
+        for s in 0..kslices {
+            a_parts.push(Arc::new(if kslices == 1 {
+                row_band(a_eff, i0, rows)
+            } else {
+                gather_a(a_eff, i0, rows, &kcols_per_slice[s])
+            }));
+        }
+    }
+    let mut b_parts: Vec<Arc<Mat>> = Vec::with_capacity(plan.col_cuts.len() * kslices);
+    for &(j0, cols) in &plan.col_cuts {
+        for s in 0..kslices {
+            b_parts.push(Arc::new(if kslices == 1 {
+                col_band(b_eff, j0, cols)
+            } else {
+                gather_b(b_eff, j0, cols, &kcols_per_slice[s])
+            }));
+        }
+    }
+    for (ri, &(_i0, rows)) in plan.row_cuts.iter().enumerate() {
+        for (ci, &(_j0, cols)) in plan.col_cuts.iter().enumerate() {
+            for s in 0..kslices {
+                let a_part = Arc::clone(&a_parts[ri * kslices + s]);
+                let b_part = Arc::clone(&b_parts[ci * kslices + s]);
+                let inner = Arc::clone(inner);
+                let tx = tx.clone();
+                let steals = Arc::clone(&steals);
+                pool.submit(Box::new(move |stolen| {
+                    if stolen {
+                        steals.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    }
+                    let a_sub = (*a_part).clone();
+                    let b_sub = (*b_part).clone();
+                    let key = BatchKey { m: rows, n: cols, k: a_sub.cols, method: eff_method };
+                    let reqs =
+                        [GemmRequest { id: (ri * 1024 + ci) as u64, a: a_sub, b: b_sub, policy }];
+                    let out = inner.execute(&key, &reqs).into_iter().next();
+                    let ok = matches!(&out, Some(m) if m.rows == rows && m.cols == cols);
+                    let _ = tx.send((ri, ci, s, if ok { out } else { None }));
+                }));
+            }
+        }
+    }
+    drop(tx);
+
+    // Collect; any hole (panicked shard, bad shape) forces the fallback.
+    let expected = plan.shard_count();
+    let mut slots: Vec<Vec<Vec<Option<Mat>>>> = plan
+        .row_cuts
+        .iter()
+        .map(|_| plan.col_cuts.iter().map(|_| (0..kslices).map(|_| None).collect()).collect())
+        .collect();
+    let mut received = 0usize;
+    let mut ok_count = 0usize;
+    while received < expected {
+        match rx.recv() {
+            Ok((ri, ci, s, Some(m))) => {
+                slots[ri][ci][s] = Some(m);
+                ok_count += 1;
+                received += 1;
+            }
+            Ok((_, _, _, None)) => {
+                received += 1;
+            }
+            Err(_) => break,
+        }
+    }
+    let complete = ok_count == expected && slots.iter().flatten().flatten().all(|s| s.is_some());
+
+    let steals = steals.load(std::sync::atomic::Ordering::Relaxed);
+    if !complete {
+        // Degrade to the inner path for the whole problem; correctness over
+        // parallelism. (Uses the original method — prescale un-hoisted.)
+        // `shards` reports only what actually completed, so metrics show
+        // the degradation instead of a healthy-looking grid.
+        let key = BatchKey { m: plan.m, n: plan.n, k: plan.k, method };
+        let reqs = [GemmRequest { id: 0, a: a.clone(), b: b.clone(), policy }];
+        let c = inner
+            .execute(&key, &reqs)
+            .into_iter()
+            .next()
+            .unwrap_or_else(|| Mat::zeros(plan.m, plan.n));
+        let stats = ShardStats {
+            shards: ok_count,
+            kslices,
+            reduction_depth: 0,
+            steals,
+            fell_back: true,
+        };
+        return (c, stats);
+    }
+
+    let partials: Vec<Vec<Vec<Mat>>> = slots
+        .into_iter()
+        .map(|row| {
+            row.into_iter()
+                .map(|cell| cell.into_iter().map(|m| m.unwrap()).collect())
+                .collect()
+        })
+        .collect();
+    let (mut c, depth) = assemble(plan, &partials);
+    if let Some(total) = descale {
+        // Same exact epilogue as `gemm_scaled` — shared so it cannot drift.
+        c = scaling::descale_pow2(&c, total);
+    }
+    let stats =
+        ShardStats { shards: expected, kslices, reduction_depth: depth, steals, fell_back: false };
+    (c, stats)
+}
+
+/// Serving-path executor: shards large GEMMs over a work-stealing pool,
+/// passes small ones straight through. Wrap any [`Executor`] — the shards
+/// it emits are ordinary GEMM batches.
+pub struct ShardedExecutor {
+    inner: Arc<dyn Executor>,
+    cfg: ShardConfig,
+    pool: WorkerPool,
+    metrics: Option<Arc<Metrics>>,
+}
+
+impl ShardedExecutor {
+    pub fn new(inner: Arc<dyn Executor>, cfg: ShardConfig) -> ShardedExecutor {
+        let pool = WorkerPool::new(cfg.workers);
+        ShardedExecutor { inner, cfg, pool, metrics: None }
+    }
+
+    /// Like [`ShardedExecutor::new`], reporting shard/steal/reduction
+    /// counters into the given coordinator metrics sink.
+    pub fn with_metrics(
+        inner: Arc<dyn Executor>,
+        cfg: ShardConfig,
+        metrics: Arc<Metrics>,
+    ) -> ShardedExecutor {
+        let pool = WorkerPool::new(cfg.workers);
+        ShardedExecutor { inner, cfg, pool, metrics: Some(metrics) }
+    }
+
+    pub fn config(&self) -> &ShardConfig {
+        &self.cfg
+    }
+
+    pub fn pool(&self) -> &WorkerPool {
+        &self.pool
+    }
+
+    /// Plan for a given shape under this executor's config.
+    pub fn plan_for(&self, m: usize, n: usize, k: usize, method: Method) -> Option<ShardPlan> {
+        plan(m, n, k, method, &self.cfg)
+    }
+}
+
+impl Executor for ShardedExecutor {
+    fn execute(&self, key: &BatchKey, reqs: &[GemmRequest]) -> Vec<Mat> {
+        match plan(key.m, key.n, key.k, key.method, &self.cfg) {
+            None => self.inner.execute(key, reqs),
+            Some(p) => reqs
+                .iter()
+                .map(|r| {
+                    let (c, stats) =
+                        sharded_gemm(&r.a, &r.b, key.method, r.policy, &p, &self.inner, &self.pool);
+                    if let Some(m) = &self.metrics {
+                        m.on_sharded_gemm(
+                            stats.shards as u64,
+                            stats.steals,
+                            stats.reduction_depth as u64,
+                            stats.fell_back,
+                        );
+                    }
+                    c
+                })
+                .collect(),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "sharded"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Policy, SimExecutor};
+    use crate::gemm::TileConfig;
+    use crate::matgen::urand;
+
+    fn harness(workers: usize) -> (ShardConfig, Arc<dyn Executor>, WorkerPool) {
+        let cfg = ShardConfig { workers, min_flops: 0, ..ShardConfig::default() };
+        let inner: Arc<dyn Executor> = Arc::new(SimExecutor::new());
+        let pool = WorkerPool::new(workers);
+        (cfg, inner, pool)
+    }
+
+    #[test]
+    fn mn_sharding_bit_identical() {
+        let (cfg, inner, pool) = harness(3);
+        let a = urand(200, 96, -1.0, 1.0, 1);
+        let b = urand(96, 150, -1.0, 1.0, 2);
+        let p = plan(200, 150, 96, Method::Fp32Simt, &cfg).expect("plan");
+        assert_eq!(p.kslices, 1);
+        let (c, stats) =
+            sharded_gemm(&a, &b, Method::Fp32Simt, Policy::StrictFp32, &p, &inner, &pool);
+        let want = Method::Fp32Simt.run(&a, &b, &p.equivalent_tile());
+        assert_eq!(c.data, want.data, "M/N sharding changed bits");
+        assert_eq!(stats.shards, p.shard_count());
+        assert!(!stats.fell_back);
+    }
+
+    #[test]
+    fn ksplit_sharding_bit_identical() {
+        // Force a k-split: skinny output, huge k.
+        let (cfg, inner, pool) = harness(4);
+        let a = urand(32, 4096, -1.0, 1.0, 3);
+        let b = urand(4096, 32, -1.0, 1.0, 4);
+        let p = plan(32, 32, 4096, Method::OursHalfHalf, &cfg).expect("plan");
+        assert!(p.kslices > 1, "wanted a k-split plan, got {p:?}");
+        let (c, stats) =
+            sharded_gemm(&a, &b, Method::OursHalfHalf, Policy::Fp32Accuracy, &p, &inner, &pool);
+        let want = Method::OursHalfHalf.run(&a, &b, &p.equivalent_tile());
+        assert_eq!(c.data, want.data, "k-split sharding changed bits");
+        assert_eq!(stats.reduction_depth, p.kslices - 1);
+    }
+
+    #[test]
+    fn executor_passthrough_below_threshold() {
+        let cfg = ShardConfig::default(); // real threshold
+        let ex = ShardedExecutor::new(Arc::new(SimExecutor::new()), cfg);
+        let a = urand(16, 16, -1.0, 1.0, 5);
+        let b = urand(16, 16, -1.0, 1.0, 6);
+        let key = BatchKey { m: 16, n: 16, k: 16, method: Method::OursHalfHalf };
+        let reqs =
+            [GemmRequest { id: 1, a: a.clone(), b: b.clone(), policy: Policy::Fp32Accuracy }];
+        let out = ex.execute(&key, &reqs);
+        let want = Method::OursHalfHalf.run(&a, &b, &TileConfig::default());
+        assert_eq!(out[0].data, want.data);
+    }
+
+    #[test]
+    fn panicking_inner_falls_back_safely() {
+        struct Bomb {
+            fallback: SimExecutor,
+        }
+        impl Executor for Bomb {
+            fn execute(&self, key: &BatchKey, reqs: &[GemmRequest]) -> Vec<Mat> {
+                // Panic on shard-sized problems, serve full ones.
+                if key.m < 100 {
+                    panic!("injected shard failure");
+                }
+                self.fallback.execute(key, reqs)
+            }
+            fn name(&self) -> &'static str {
+                "bomb"
+            }
+        }
+        let cfg = ShardConfig { workers: 2, min_flops: 0, ..ShardConfig::default() };
+        let inner: Arc<dyn Executor> = Arc::new(Bomb { fallback: SimExecutor::new() });
+        let pool = WorkerPool::new(2);
+        let a = urand(128, 64, -1.0, 1.0, 7);
+        let b = urand(64, 128, -1.0, 1.0, 8);
+        let p = plan(128, 128, 64, Method::Fp32Simt, &cfg).expect("plan");
+        let (c, stats) =
+            sharded_gemm(&a, &b, Method::Fp32Simt, Policy::StrictFp32, &p, &inner, &pool);
+        assert!(stats.fell_back);
+        assert_eq!(stats.shards, 0, "no shard completed, none should be reported");
+        let want = Method::Fp32Simt.run(&a, &b, &TileConfig::default());
+        assert_eq!(c.data, want.data);
+    }
+}

@@ -1,0 +1,41 @@
+//! L3.5 shard engine: the layer between the coordinator's router/batcher
+//! and the executors that turns *one large GEMM* into a scheduled grid of
+//! tile-shards.
+//!
+//! The paper's headline — error-corrected Tensor-Core GEMM beating the
+//! FP32 SIMT peak — only holds while the hardware is saturated. A single
+//! monolithic request serializes the whole worker pool; Markidis et al.
+//! (2018) reach peak through tile-level decomposition, and this module does
+//! the same one level up, at serving granularity:
+//!
+//! * [`plan`] — the partition planner: an M×N×K shard grid aligned to the
+//!   engine [`gemm::TileConfig`](crate::gemm::TileConfig) tile boundaries,
+//!   sized with the `perfmodel` GPU projection and the autotune scoring
+//!   rule, with k-splits gated by the `analysis::error_bound` accuracy
+//!   model (splits that would lift the residual above the corrected
+//!   kernel's √k·u floor are refused).
+//! * [`pool`] — a work-stealing worker pool (per-worker deques, steal
+//!   counters) replacing one-batch-per-worker handoff for large requests.
+//! * [`reduce`] — operand gathering for k-slices and the deterministic
+//!   fixed-order k reduction that makes sharded results **bit-identical**
+//!   to the unsharded run of the plan's equivalent tile configuration, for
+//!   every [`gemm::Method`](crate::gemm::Method) (property-tested in
+//!   `rust/tests/prop.rs`).
+//! * [`exec`] — [`ShardedExecutor`], the serving-path wrapper: shards flow
+//!   through the ordinary [`Executor`](crate::coordinator::Executor) trait
+//!   (each shard *is* a plain GEMM over sub-operands), so `SimExecutor` and
+//!   `runtime::PjrtExecutor` work unchanged underneath.
+//!
+//! Wiring: set [`ServiceConfig::shard`](crate::coordinator::ServiceConfig)
+//! to shard large requests transparently inside the GEMM service; shard,
+//! steal and reduction counters surface through `coordinator::metrics`.
+
+pub mod exec;
+pub mod plan;
+pub mod pool;
+pub mod reduce;
+
+pub use exec::{sharded_gemm, ShardStats, ShardedExecutor};
+pub use plan::{max_accuracy_preserving_kslices, plan, ShardConfig, ShardPlan};
+pub use pool::WorkerPool;
+pub use reduce::{assemble, gather_a, gather_b, reduce_block_into, slice_k_columns};

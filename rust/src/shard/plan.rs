@@ -1,0 +1,316 @@
+//! Partition planner: turns one large GEMM into an M×N×K grid of
+//! tile-aligned shards.
+//!
+//! The grid is chosen so that (a) every M/N cut lands on a threadblock-tile
+//! boundary of the engine's [`TileConfig`] — a shard then performs *exactly*
+//! the tile computations the unsharded engine would, so M/N sharding is
+//! bit-exact by construction; and (b) the K dimension is split only along
+//! the engine's warp-k *slice* structure, where the tiled engine already
+//! keeps independent FP32 accumulators that its epilogue reduces in slice
+//! order (see `gemm::tiled`). A k-split shard therefore computes one slice's
+//! finalized output, and the fixed-order reduction in [`super::reduce`]
+//! replays the engine's own epilogue — bit-exact again.
+//!
+//! Accuracy gate: k-splitting with `s` slices changes the summation order
+//! the same way a CUTLASS `bk/wk` template change does, which the paper
+//! notes "slightly affects the error". We only allow a split when the extra
+//! FP32 RN reduction error — at most `0.5·(s−1)·u` relative, one rounding
+//! per partial-sum add — stays below 10% of the method's predicted residual
+//! floor from `analysis::error_bound` (√k·u for RN-accumulated methods,
+//! k·u_acc for RZ-accumulated ones). This keeps the paper's headline
+//! "matches FP32 SGEMM accuracy" claim intact under sharding.
+
+use crate::analysis::{predicted_rn, predicted_rz, U_FP32};
+use crate::autotune::quantization_efficiency;
+use crate::gemm::{Method, TileConfig};
+use crate::perfmodel::{projected_tflops, GpuSpec, A100};
+
+/// Sharding policy for a [`super::ShardedExecutor`].
+#[derive(Debug, Clone)]
+pub struct ShardConfig {
+    /// Worker threads in the shard pool.
+    pub workers: usize,
+    /// GEMMs below this logical flop count (2mnk) keep the unsharded path.
+    pub min_flops: u64,
+    /// Upper bound on k-split slices, on top of the accuracy gate.
+    pub max_kslices: usize,
+    /// Target shards per worker (oversubscription so stealing has slack).
+    pub shards_per_worker: usize,
+    /// The tile configuration the inner executor runs — cuts are aligned to
+    /// its `bm`/`bn` and k-splits to its `bk`. Must match the executor
+    /// (e.g. `SimExecutor::new()` uses `TileConfig::default()`) for the
+    /// bit-exactness guarantee to hold.
+    pub engine_tile: TileConfig,
+    /// GPU model used to size the parallel grain (shards small enough to
+    /// balance, large enough to stay in the compute-bound regime).
+    pub gpu: GpuSpec,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2);
+        ShardConfig {
+            workers: workers.min(8),
+            // 2·256³: the perf model's memory-bound/compute-bound knee on
+            // the A100 sits near n = 256; smaller problems don't amortize
+            // shard dispatch.
+            min_flops: 2 * 256 * 256 * 256,
+            max_kslices: 4,
+            shards_per_worker: 3,
+            engine_tile: TileConfig::default(),
+            gpu: A100,
+        }
+    }
+}
+
+/// One contiguous cut of an output dimension: `(start, len)` in elements.
+pub type Cut = (usize, usize);
+
+/// A fully planned shard grid for one `m×k · k×n` GEMM.
+#[derive(Debug, Clone)]
+pub struct ShardPlan {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    /// Row ranges of C (block-aligned to `engine_tile.bm`).
+    pub row_cuts: Vec<Cut>,
+    /// Column ranges of C (block-aligned to `engine_tile.bn`).
+    pub col_cuts: Vec<Cut>,
+    /// Number of k-split slices (1 = no k-split).
+    pub kslices: usize,
+    /// The executor-side tile configuration shards run under.
+    pub engine_tile: TileConfig,
+}
+
+impl ShardPlan {
+    /// Total number of shard tasks the plan produces.
+    pub fn shard_count(&self) -> usize {
+        self.row_cuts.len() * self.col_cuts.len() * self.kslices
+    }
+
+    /// The tile configuration whose *unsharded* run this plan reproduces
+    /// bit-for-bit: for pure M/N sharding that is the engine tile itself;
+    /// for an `s`-way k-split it is the engine tile widened to `bk·s` with
+    /// warp-k slices of the engine's `bk` — the config whose s independent
+    /// slice accumulators the shards compute one each of.
+    pub fn equivalent_tile(&self) -> TileConfig {
+        if self.kslices == 1 {
+            self.engine_tile
+        } else {
+            TileConfig {
+                bk: self.engine_tile.bk * self.kslices,
+                wk: self.engine_tile.bk,
+                ..self.engine_tile
+            }
+        }
+    }
+
+    /// Levels of the fixed-order k reduction (0 when kslices == 1).
+    pub fn reduction_depth(&self) -> usize {
+        self.kslices.saturating_sub(1)
+    }
+}
+
+/// Largest k-split count whose FP32 reduction provably stays within 10% of
+/// the method's predicted residual floor (see module docs). Methods that
+/// accumulate in RZ inside the Tensor Core sit on a much higher k·u_acc
+/// floor, so they tolerate any practical split; RN-level methods (including
+/// this paper's corrected kernels, whose whole point is the √k·u floor) are
+/// gated by `1 + 0.2·(floor/u)`.
+pub fn max_accuracy_preserving_kslices(method: Method, k: usize) -> usize {
+    if k == 0 {
+        return 1;
+    }
+    let rz_level = matches!(
+        method,
+        Method::Fp16Tc
+            | Method::Tf32Tc
+            | Method::Markidis
+            | Method::Feng
+            | Method::OursNoRzAvoid
+    );
+    let floor = if rz_level { predicted_rz(k) } else { predicted_rn(k) };
+    let s = 1.0 + 0.2 * floor / U_FP32;
+    if s >= 1e6 {
+        1_000_000
+    } else {
+        s as usize
+    }
+}
+
+/// Balanced partition of `blocks` tile-blocks (block size `bs`, total
+/// extent `len`) into `parts` contiguous groups; returns `(start, len)`
+/// element ranges. The last group absorbs the ragged edge.
+fn cut_dimension(len: usize, bs: usize, parts: usize) -> Vec<Cut> {
+    let blocks = (len + bs - 1) / bs;
+    let parts = parts.clamp(1, blocks.max(1));
+    let mut cuts = Vec::with_capacity(parts);
+    for g in 0..parts {
+        let b0 = g * blocks / parts;
+        let b1 = (g + 1) * blocks / parts;
+        let start = b0 * bs;
+        let end = (b1 * bs).min(len);
+        if end > start {
+            cuts.push((start, end - start));
+        }
+    }
+    cuts
+}
+
+/// Score a candidate (p, q) output grid: projected shard throughput on the
+/// configured GPU times the tile-quantization efficiency of the smallest
+/// shard — the autotune scoring rule, applied at shard granularity. Small
+/// slivers fall off the compute roof and score low, so the grid-growth loop
+/// uses this to decide *which* dimension to split next.
+fn grid_score(cfg: &ShardConfig, method: Method, m: usize, n: usize, p: usize, q: usize) -> f64 {
+    let sm = m / p.max(1);
+    let sn = n / q.max(1);
+    let eff_dim = sm.min(sn).max(1);
+    projected_tflops(&cfg.gpu, method, eff_dim)
+        * quantization_efficiency(&cfg.engine_tile, eff_dim)
+}
+
+/// Plan a shard grid for `m×k · k×n` under `method`, or `None` when the
+/// problem should stay on the unsharded path (too small, or no cut is
+/// possible). The planner prefers M/N cuts (embarrassingly parallel, always
+/// bit-exact) and adds a k-split only when the output grid alone cannot
+/// feed every worker AND the accuracy gate allows it.
+pub fn plan(m: usize, n: usize, k: usize, method: Method, cfg: &ShardConfig) -> Option<ShardPlan> {
+    if m == 0 || n == 0 {
+        return None;
+    }
+    let flops = 2u64 * m as u64 * n as u64 * k as u64;
+    if flops < cfg.min_flops {
+        return None;
+    }
+    let bm = cfg.engine_tile.bm;
+    let bn = cfg.engine_tile.bn;
+    let row_blocks = (m + bm - 1) / bm;
+    let col_blocks = (n + bn - 1) / bn;
+    let target = (cfg.workers.max(1) * cfg.shards_per_worker.max(1)).max(1);
+
+    // Grow the output grid toward the target one split at a time, letting
+    // the perf-model score pick the dimension to split (it keeps shards
+    // square-ish — splitting the skinny dimension tanks `min(sm, sn)`),
+    // and never going past one tile-block per group.
+    let mut p = 1usize;
+    let mut q = 1usize;
+    while p * q < target && (p < row_blocks || q < col_blocks) {
+        let split_rows = match (p < row_blocks, q < col_blocks) {
+            (true, false) => true,
+            (false, true) => false,
+            _ => {
+                grid_score(cfg, method, m, n, p + 1, q)
+                    >= grid_score(cfg, method, m, n, p, q + 1)
+            }
+        };
+        if split_rows {
+            p += 1;
+        } else {
+            q += 1;
+        }
+    }
+
+    // K-split only as a last resort, only when the engine tile has a single
+    // warp-k slice (otherwise the slice structure is already taken), and
+    // only within the accuracy gate.
+    let mut kslices = 1usize;
+    if p * q < target && cfg.engine_tile.k_slices() == 1 && k > cfg.engine_tile.bk {
+        let want = (target + p * q - 1) / (p * q);
+        let kblocks = (k + cfg.engine_tile.bk - 1) / cfg.engine_tile.bk;
+        kslices = want
+            .min(cfg.max_kslices)
+            .min(kblocks)
+            .min(max_accuracy_preserving_kslices(method, k))
+            .max(1);
+    }
+
+    let row_cuts = cut_dimension(m, bm, p);
+    let col_cuts = cut_dimension(n, bn, q);
+    if row_cuts.len() * col_cuts.len() * kslices <= 1 {
+        return None;
+    }
+    Some(ShardPlan {
+        m,
+        n,
+        k,
+        row_cuts,
+        col_cuts,
+        kslices,
+        engine_tile: cfg.engine_tile,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_cfg(workers: usize) -> ShardConfig {
+        ShardConfig { workers, min_flops: 0, ..ShardConfig::default() }
+    }
+
+    #[test]
+    fn small_problems_stay_unsharded() {
+        let cfg = ShardConfig::default(); // real threshold
+        assert!(plan(64, 64, 64, Method::OursHalfHalf, &cfg).is_none());
+    }
+
+    #[test]
+    fn cuts_are_block_aligned_and_cover() {
+        let cfg = test_cfg(4);
+        let p = plan(300, 260, 512, Method::OursHalfHalf, &cfg).expect("plan");
+        let bm = cfg.engine_tile.bm;
+        let bn = cfg.engine_tile.bn;
+        let mut covered = 0;
+        for (i, &(start, len)) in p.row_cuts.iter().enumerate() {
+            assert_eq!(start % bm, 0, "row cut {i} not block aligned");
+            assert_eq!(start, covered);
+            covered += len;
+        }
+        assert_eq!(covered, 300);
+        let mut covered = 0;
+        for &(start, len) in &p.col_cuts {
+            assert_eq!(start % bn, 0);
+            assert_eq!(start, covered);
+            covered += len;
+        }
+        assert_eq!(covered, 260);
+        assert!(p.shard_count() > 1);
+    }
+
+    #[test]
+    fn accuracy_gate_blocks_small_k_allows_large_k() {
+        // RN-level methods: s ≤ 1 + 0.08·√k.
+        assert_eq!(max_accuracy_preserving_kslices(Method::OursHalfHalf, 64), 1);
+        assert!(max_accuracy_preserving_kslices(Method::OursHalfHalf, 4096) >= 6);
+        // RZ-level methods sit on a k·u_acc floor: effectively ungated.
+        assert!(max_accuracy_preserving_kslices(Method::Markidis, 4096) > 100);
+    }
+
+    #[test]
+    fn ksplit_only_when_output_grid_exhausted() {
+        // Tall-skinny output with huge k: the output grid cannot feed 8
+        // workers, so the planner k-splits (k = 8192 passes the gate).
+        let cfg = ShardConfig { workers: 8, min_flops: 0, ..ShardConfig::default() };
+        let p = plan(64, 64, 8192, Method::OursHalfHalf, &cfg).expect("plan");
+        assert_eq!(p.row_cuts.len(), 1);
+        assert_eq!(p.col_cuts.len(), 1);
+        assert!(p.kslices > 1, "expected a k-split, got {p:?}");
+        assert!(p.kslices <= cfg.max_kslices);
+        // Wide output: no k-split needed.
+        let p = plan(1024, 1024, 8192, Method::OursHalfHalf, &cfg).expect("plan");
+        assert_eq!(p.kslices, 1);
+    }
+
+    #[test]
+    fn equivalent_tile_encodes_the_ksplit() {
+        let cfg = test_cfg(8);
+        let p = plan(64, 64, 8192, Method::OursHalfHalf, &cfg).expect("plan");
+        let g = p.equivalent_tile();
+        assert_eq!(g.k_slices(), p.kslices);
+        assert_eq!(g.wk, cfg.engine_tile.bk);
+        // No k-split ⇒ the engine tile itself.
+        let p2 = plan(1024, 1024, 256, Method::OursHalfHalf, &cfg).expect("plan");
+        assert_eq!(p2.equivalent_tile(), cfg.engine_tile);
+    }
+}

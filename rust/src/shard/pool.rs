@@ -1,0 +1,234 @@
+//! Work-stealing shard worker pool.
+//!
+//! Replaces the coordinator's one-batch-per-worker handoff for large
+//! requests: shards of a large GEMM are distributed round-robin across
+//! per-worker deques, each worker drains its own deque from the front, and
+//! an idle worker *steals* from the back of the longest other deque. Large
+//! ragged shards (edge tiles, uneven k-slices) therefore cannot serialize
+//! the pool behind one slow worker — the classic Cilk/Chase–Lev argument,
+//! here with a single pool mutex instead of lock-free deques (shard grains
+//! are milliseconds of simulated GEMM, so queue-op contention is noise;
+//! DESIGN.md §Sharded-execution).
+//!
+//! Jobs are opaque closures; panics are caught per job (a poisoned shard
+//! must not take the pool down — mirrors the service worker's policy), and
+//! the submitting side observes the failure as a dropped result channel.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// A pool job. The `bool` argument tells the job whether it was *stolen*
+/// (executed by a worker other than the one it was queued on) — submitters
+/// use it for exact per-request steal attribution.
+type Job = Box<dyn FnOnce(bool) + Send + 'static>;
+
+struct PoolState {
+    queues: Vec<VecDeque<Job>>,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    available: Condvar,
+    /// Per-worker count of jobs taken from *another* worker's deque.
+    steals: Vec<AtomicU64>,
+    /// Per-worker count of jobs executed (own + stolen), counted at
+    /// dequeue — before the job body runs, so anything the job publishes
+    /// (channel sends) happens-after the increment.
+    executed: Vec<AtomicU64>,
+}
+
+/// Fixed-size work-stealing pool executing boxed shard jobs.
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    handles: Vec<JoinHandle<()>>,
+    next: AtomicUsize,
+}
+
+impl WorkerPool {
+    pub fn new(workers: usize) -> WorkerPool {
+        let workers = workers.max(1);
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState {
+                queues: (0..workers).map(|_| VecDeque::new()).collect(),
+                shutdown: false,
+            }),
+            available: Condvar::new(),
+            steals: (0..workers).map(|_| AtomicU64::new(0)).collect(),
+            executed: (0..workers).map(|_| AtomicU64::new(0)).collect(),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("shard-worker-{i}"))
+                    .spawn(move || worker_main(i, shared))
+                    .expect("spawn shard worker")
+            })
+            .collect();
+        WorkerPool { shared, handles, next: AtomicUsize::new(0) }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Enqueue a job on the next deque round-robin. Consecutive submissions
+    /// of one request's shards spread across all workers, so stealing only
+    /// kicks in for imbalance, not for initial distribution.
+    pub fn submit(&self, job: Job) {
+        let w = self.next.fetch_add(1, Ordering::Relaxed) % self.workers();
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.queues[w].push_back(job);
+        }
+        // One job → one wakeup; any woken worker can claim it via the
+        // steal path. (Shutdown uses notify_all in Drop.)
+        self.shared.available.notify_one();
+    }
+
+    /// Total steals across all workers since pool start.
+    pub fn steal_count(&self) -> u64 {
+        self.shared.steals.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Total jobs executed across all workers since pool start.
+    pub fn executed_count(&self) -> u64 {
+        self.shared.executed.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.available.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_main(me: usize, shared: Arc<PoolShared>) {
+    loop {
+        let mut more_work = false;
+        let job: Option<(Job, bool)> = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if let Some(j) = st.queues[me].pop_front() {
+                    more_work = st.queues.iter().any(|q| !q.is_empty());
+                    break Some((j, false));
+                }
+                // Steal from the back of the longest non-empty deque.
+                let victim = (0..st.queues.len())
+                    .filter(|&v| v != me && !st.queues[v].is_empty())
+                    .max_by_key(|&v| st.queues[v].len());
+                if let Some(v) = victim {
+                    if let Some(j) = st.queues[v].pop_back() {
+                        shared.steals[me].fetch_add(1, Ordering::Relaxed);
+                        more_work = st.queues.iter().any(|q| !q.is_empty());
+                        break Some((j, true));
+                    }
+                }
+                if st.shutdown {
+                    break None;
+                }
+                st = shared.available.wait(st).unwrap();
+            }
+        };
+        // Chained wakeup: a `notify_one` from `submit` may land on a worker
+        // that is already awake; re-notify while work remains so sleeping
+        // siblings get pulled in before this job's (long) execution.
+        if more_work {
+            shared.available.notify_one();
+        }
+        match job {
+            Some((j, stolen)) => {
+                // Count first: observers unblocked by the job's own sends
+                // must already see the increment. Shard jobs report failure
+                // by dropping their result sender; a panic must not kill
+                // the worker.
+                shared.executed[me].fetch_add(1, Ordering::Relaxed);
+                let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || j(stolen)));
+            }
+            None => break,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+    use std::time::Duration;
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = WorkerPool::new(3);
+        let (tx, rx) = channel();
+        for i in 0..50u64 {
+            let tx = tx.clone();
+            pool.submit(Box::new(move |_| {
+                let _ = tx.send(i);
+            }));
+        }
+        drop(tx);
+        let mut got: Vec<u64> = rx.iter().collect();
+        got.sort_unstable();
+        assert_eq!(got, (0..50).collect::<Vec<_>>());
+        assert_eq!(pool.executed_count(), 50);
+    }
+
+    #[test]
+    fn stealing_rebalances_a_skewed_load() {
+        // Worker 0 gets one long job; the short jobs queued behind it on
+        // the same deque must be stolen and finish long before it does.
+        let pool = WorkerPool::new(2);
+        let (tx, rx) = channel();
+        // Round-robin: even submissions land on worker 0.
+        let slow_tx = tx.clone();
+        pool.submit(Box::new(move |_| {
+            std::thread::sleep(Duration::from_millis(300));
+            let _ = slow_tx.send("slow");
+        }));
+        let fast_tx = tx.clone();
+        pool.submit(Box::new(move |_| {
+            let _ = fast_tx.send("fast1");
+        }));
+        // Lands behind the slow job on worker 0's deque.
+        let stuck_tx = tx.clone();
+        pool.submit(Box::new(move |_| {
+            let _ = stuck_tx.send("fast2");
+        }));
+        drop(tx);
+        let first = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        let second = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert_ne!(first, "slow", "fast jobs must not wait behind the slow one");
+        assert_ne!(second, "slow");
+        assert_eq!(rx.recv_timeout(Duration::from_secs(10)).unwrap(), "slow");
+        assert!(pool.steal_count() >= 1, "expected at least one steal");
+    }
+
+    #[test]
+    fn panicking_job_does_not_kill_workers() {
+        let pool = WorkerPool::new(1);
+        let (tx, rx) = channel();
+        pool.submit(Box::new(|_| panic!("injected shard failure")));
+        pool.submit(Box::new(move |_| {
+            let _ = tx.send(());
+        }));
+        assert!(rx.recv_timeout(Duration::from_secs(10)).is_ok());
+        assert_eq!(pool.executed_count(), 2);
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = WorkerPool::new(4);
+        assert_eq!(pool.workers(), 4);
+        drop(pool); // must not hang
+    }
+}

@@ -1,0 +1,163 @@
+//! K-slice operand gathering and the deterministic k-split reduction.
+//!
+//! **Why this is bit-exact.** The tiled engine (`gemm::tiled`) holds one
+//! independent FP32 accumulator per warp-k slice of a tile and reduces them
+//! at the epilogue *in ascending slice order* with plain `+=`. A k-split
+//! shard computes exactly one slice's finalized output: slice `s` of an
+//! `s_total`-way split owns the k-columns `[kb0 + s·bk, kb0 + (s+1)·bk)` of
+//! every `bk·s_total`-wide k-block. Gathering those columns of A (and rows
+//! of B) into a contiguous sub-problem and running it under the *engine*
+//! tile (whose `bk = wk` means one slice, and whose k-blocks are exactly the
+//! slice's chunks, in the same order) issues the identical sequence of
+//! `process_kblock` calls the unsharded engine would issue for that slice.
+//! Summing the per-slice partial C blocks in ascending slice order then
+//! replays the engine's epilogue add-for-add, so the sharded result is
+//! bit-identical to the unsharded run of the plan's
+//! [`equivalent_tile`](super::ShardPlan::equivalent_tile).
+//!
+//! (A balanced pairwise tree would be more parallel but would *not* match
+//! the engine's sequential epilogue; determinism and bit-equality win here.
+//! The "tree" is thus a fixed-order left-leaning chain, and
+//! `ShardPlan::reduction_depth` reports its length.)
+
+use super::plan::ShardPlan;
+use crate::gemm::Mat;
+
+/// The k-column indices owned by slice `s` of an `s_total`-way split with
+/// engine k-block width `bk`, in ascending order.
+pub fn slice_k_columns(k: usize, bk: usize, s_total: usize, s: usize) -> Vec<usize> {
+    debug_assert!(s < s_total);
+    let super_block = bk * s_total;
+    let mut cols = Vec::new();
+    let mut kb0 = 0;
+    while kb0 < k {
+        let kb_total = super_block.min(k - kb0);
+        let lo = s * bk;
+        if lo < kb_total {
+            let hi = ((s + 1) * bk).min(kb_total);
+            cols.extend(kb0 + lo..kb0 + hi);
+        }
+        kb0 += kb_total;
+    }
+    cols
+}
+
+/// Gather `rows` rows of `a` starting at `i0`, keeping only the k-columns
+/// in `cols` (in order).
+pub fn gather_a(a: &Mat, i0: usize, rows: usize, cols: &[usize]) -> Mat {
+    let mut data = Vec::with_capacity(rows * cols.len());
+    for i in 0..rows {
+        let base = (i0 + i) * a.cols;
+        for &c in cols {
+            data.push(a.data[base + c]);
+        }
+    }
+    Mat::from_vec(rows, cols.len(), data)
+}
+
+/// Gather `ncols` columns of `b` starting at `j0`, keeping only the k-rows
+/// in `rows` (in order).
+pub fn gather_b(b: &Mat, j0: usize, ncols: usize, rows: &[usize]) -> Mat {
+    let mut data = Vec::with_capacity(rows.len() * ncols);
+    for &r in rows {
+        let base = r * b.cols;
+        data.extend_from_slice(&b.data[base + j0..base + j0 + ncols]);
+    }
+    Mat::from_vec(rows.len(), ncols, data)
+}
+
+/// Reduce one output block's k-slice partials in ascending slice order and
+/// write the block into `c` at `(i0, j0)`. `partials` must hold every slice
+/// (index = slice id). Returns the reduction depth (number of adds beyond
+/// the first partial).
+pub fn reduce_block_into(
+    c: &mut Mat,
+    i0: usize,
+    j0: usize,
+    rows: usize,
+    cols: usize,
+    partials: &[Mat],
+) -> usize {
+    debug_assert!(!partials.is_empty());
+    // acc starts at zero and accumulates slices in order — identical to the
+    // engine's `tile += finalize(slice_s)` epilogue loop.
+    let mut acc = vec![0.0f32; rows * cols];
+    for p in partials {
+        debug_assert_eq!(p.rows, rows);
+        debug_assert_eq!(p.cols, cols);
+        for (a, &x) in acc.iter_mut().zip(p.data.iter()) {
+            *a += x;
+        }
+    }
+    c.write_sub(i0, j0, rows, cols, &acc);
+    partials.len() - 1
+}
+
+/// Assemble the full C from per-(block, slice) partials. `partials` is
+/// indexed `[row_block][col_block][slice]`. Returns the max reduction depth.
+pub fn assemble(plan: &ShardPlan, partials: &[Vec<Vec<Mat>>]) -> (Mat, usize) {
+    let mut c = Mat::zeros(plan.m, plan.n);
+    let mut depth = 0;
+    for (ri, &(i0, rows)) in plan.row_cuts.iter().enumerate() {
+        for (ci, &(j0, cols)) in plan.col_cuts.iter().enumerate() {
+            depth = depth.max(reduce_block_into(&mut c, i0, j0, rows, cols, &partials[ri][ci]));
+        }
+    }
+    (c, depth)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slice_columns_partition_k() {
+        // k = 100, bk = 32, 3 slices: super-blocks [0,96) and ragged [96,100).
+        let k = 100;
+        let all: Vec<Vec<usize>> = (0..3).map(|s| slice_k_columns(k, 32, 3, s)).collect();
+        // Disjoint union covering 0..k.
+        let mut union: Vec<usize> = all.iter().flatten().copied().collect();
+        union.sort_unstable();
+        assert_eq!(union, (0..k).collect::<Vec<_>>());
+        // Slice 0 owns [0,32) and the ragged [96,100).
+        assert_eq!(all[0].len(), 36);
+        assert!(all[0].contains(&96) && all[0].contains(&99));
+        // Slice 2 owns only [64,96).
+        assert_eq!(all[2], (64..96).collect::<Vec<usize>>());
+        // Each slice's columns are ascending.
+        for cols in &all {
+            assert!(cols.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn gather_roundtrip_identity() {
+        let a = Mat::from_fn(6, 10, |i, j| (i * 10 + j) as f32);
+        let cols: Vec<usize> = vec![1, 4, 5, 9];
+        let g = gather_a(&a, 2, 3, &cols);
+        assert_eq!(g.rows, 3);
+        assert_eq!(g.cols, 4);
+        assert_eq!(g.get(0, 0), a.get(2, 1));
+        assert_eq!(g.get(2, 3), a.get(4, 9));
+        let b = Mat::from_fn(10, 6, |i, j| (100 + i * 6 + j) as f32);
+        let gb = gather_b(&b, 1, 4, &cols);
+        assert_eq!(gb.rows, 4);
+        assert_eq!(gb.cols, 4);
+        assert_eq!(gb.get(0, 0), b.get(1, 1));
+        assert_eq!(gb.get(3, 3), b.get(9, 4));
+    }
+
+    #[test]
+    fn reduction_is_fixed_ascending_order() {
+        // Construct partials whose float sum is order-dependent; the result
+        // must equal the explicit ascending-order chain.
+        let p0 = Mat::from_vec(1, 1, vec![1.0e8]);
+        let p1 = Mat::from_vec(1, 1, vec![-1.0e8]);
+        let p2 = Mat::from_vec(1, 1, vec![1.0]);
+        let mut c = Mat::zeros(1, 1);
+        let depth = reduce_block_into(&mut c, 0, 0, 1, 1, &[p0, p1, p2]);
+        assert_eq!(depth, 2);
+        let expect = ((0.0f32 + 1.0e8) + -1.0e8) + 1.0;
+        assert_eq!(c.get(0, 0).to_bits(), expect.to_bits());
+    }
+}

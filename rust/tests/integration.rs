@@ -7,6 +7,7 @@ use tcec::coordinator::{GemmService, Policy, ServiceConfig, SimExecutor};
 use tcec::experiments;
 use tcec::gemm::{gemm_f64, relative_residual, Method, TileConfig};
 use tcec::matgen::{urand, Workload};
+use tcec::shard;
 
 /// Fig. 1's ordering at k = 4096, the paper's most adversarial plotted k.
 #[test]
@@ -128,6 +129,53 @@ fn service_mixed_load_audit() {
     }
     let snap = svc.metrics().snapshot();
     assert_eq!(snap.completed, 24);
+    svc.shutdown();
+}
+
+/// The sharded serving path end to end: a service with `shard` enabled
+/// routes large GEMMs through the shard engine (correct results, shard /
+/// steal / reduction counters in the service metrics) while small GEMMs
+/// keep the direct path (no shard counters).
+#[test]
+fn service_sharded_path_metrics_and_correctness() {
+    let shard_cfg = shard::ShardConfig {
+        workers: 2,
+        // Low threshold so a 128x128x128 GEMM shards in-test.
+        min_flops: 2 * 64 * 64 * 64,
+        ..shard::ShardConfig::default()
+    };
+    let svc = GemmService::start(
+        Arc::new(SimExecutor::new()),
+        ServiceConfig {
+            workers: 2,
+            max_batch: 1,
+            force_method: Some(Method::Fp32Simt),
+            shard: Some(shard_cfg.clone()),
+            ..ServiceConfig::default()
+        },
+    );
+
+    // Small GEMM: direct path — no shard counters.
+    let a = urand(16, 16, -1.0, 1.0, 1);
+    let b = urand(16, 16, -1.0, 1.0, 2);
+    let resp = svc.gemm_blocking(a, b, Policy::StrictFp32);
+    assert_eq!(resp.method, Method::Fp32Simt);
+    assert_eq!(svc.metrics().snapshot().sharded_gemms, 0);
+
+    // Large GEMM: sharded path — bit-identical to the direct run, counters up.
+    let a = urand(192, 128, -1.0, 1.0, 3);
+    let b = urand(128, 160, -1.0, 1.0, 4);
+    let plan = shard::plan(192, 160, 128, Method::Fp32Simt, &shard_cfg).expect("should shard");
+    let want = Method::Fp32Simt.run(&a, &b, &plan.equivalent_tile());
+    let resp = svc.gemm_blocking(a, b, Policy::StrictFp32);
+    assert_eq!(resp.c.data, want.data, "sharded service result differs from direct run");
+
+    let snap = svc.metrics().snapshot();
+    assert_eq!(snap.sharded_gemms, 1);
+    assert_eq!(snap.shards_executed, plan.shard_count() as u64);
+    assert_eq!(snap.reduction_depth_max, plan.reduction_depth() as u64);
+    assert_eq!(snap.shard_fallbacks, 0);
+    assert_eq!(snap.completed, 2);
     svc.shutdown();
 }
 

@@ -2,12 +2,15 @@
 //! offline, DESIGN.md §2). Each test states its invariant, draws thousands
 //! of cases from a seeded generator, and reports the failing case on panic.
 
+use std::sync::Arc;
+use tcec::coordinator::{Executor, Policy, SimExecutor};
 use tcec::fp::{
     round_to_format, split_feng, split_markidis, split_ootomo, split_ootomo_tf32, Format, Half,
     Rounding,
 };
-use tcec::gemm::{gemm_f64, gemm_tiled, relative_residual, Mat, SimtBackend, TileConfig};
+use tcec::gemm::{gemm_f64, gemm_tiled, relative_residual, Mat, Method, SimtBackend, TileConfig};
 use tcec::matgen::Rng;
+use tcec::shard;
 use tcec::tcsim::{mma_tile, MmaConfig};
 
 fn random_f32(rng: &mut Rng) -> f32 {
@@ -207,6 +210,77 @@ fn prop_tiled_engine_correct_for_random_configs() {
         let r = gemm_f64(&a, &b);
         let e = relative_residual(&r, &c);
         assert!(e < 1e-5, "cfg {cfg:?} ({m}x{k}x{n}): residual {e}");
+    }
+}
+
+/// INVARIANT: sharded execution is bit-identical to the unsharded run of
+/// the plan's equivalent tile config, for EVERY `gemm::Method`, across
+/// random shapes including non-divisible edge tiles, for both pure-M/N
+/// plans and forced k-split plans.
+#[test]
+fn prop_sharded_bit_identical_to_unsharded_all_methods() {
+    let inner: Arc<dyn Executor> = Arc::new(SimExecutor::new());
+    let pool = shard::WorkerPool::new(3);
+    let mut rng = Rng::new(0x5AAD);
+    for (round, &method) in Method::ALL.iter().enumerate() {
+        // One ragged M/N-sharded shape and one k-split shape per method.
+        // Odd-ish dims exercise edge tiles (bm = bn = 64, bk = 32 default).
+        let m = 65 + rng.int_in(0, 80) as usize;
+        let n = 65 + rng.int_in(0, 80) as usize;
+        let k = 24 + rng.int_in(0, 70) as usize;
+        let mut s = 1 + round as u64;
+        let mut gen = |r: usize, c: usize| {
+            Mat::from_fn(r, c, |_, _| {
+                s = s.wrapping_mul(6364136223846793005).wrapping_add(1);
+                ((s >> 33) as f64 / (1u64 << 31) as f64 - 0.5) as f32
+            })
+        };
+
+        // M/N sharding (kslices = 1).
+        let cfg = shard::ShardConfig {
+            workers: 3,
+            min_flops: 0,
+            ..shard::ShardConfig::default()
+        };
+        let a = gen(m, k);
+        let b = gen(k, n);
+        let plan = shard::plan(m, n, k, method, &cfg)
+            .unwrap_or_else(|| panic!("{}: no plan for {m}x{k}x{n}", method.name()));
+        let (c, stats) =
+            shard::sharded_gemm(&a, &b, method, Policy::Fp32Accuracy, &plan, &inner, &pool);
+        assert!(!stats.fell_back, "{}: sharded run fell back", method.name());
+        let want = method.run(&a, &b, &plan.equivalent_tile());
+        assert_eq!(
+            c.data,
+            want.data,
+            "{}: M/N-sharded differs from unsharded at {m}x{k}x{n} (plan {plan:?})",
+            method.name()
+        );
+
+        // Forced k-split (skinny output, k large and non-divisible).
+        let kk = 400 + rng.int_in(0, 300) as usize;
+        let a = gen(48, kk);
+        let b = gen(kk, 40);
+        let kplan = shard::ShardPlan {
+            m: 48,
+            n: 40,
+            k: kk,
+            row_cuts: vec![(0, 48)],
+            col_cuts: vec![(0, 40)],
+            kslices: 3,
+            engine_tile: TileConfig::default(),
+        };
+        let (c, stats) =
+            shard::sharded_gemm(&a, &b, method, Policy::Fp32Accuracy, &kplan, &inner, &pool);
+        assert!(!stats.fell_back, "{}: k-split run fell back", method.name());
+        let want = method.run(&a, &b, &kplan.equivalent_tile());
+        assert_eq!(
+            c.data,
+            want.data,
+            "{}: k-split-sharded differs from unsharded at 48x{kk}x40",
+            method.name()
+        );
+        assert_eq!(stats.reduction_depth, 2);
     }
 }
 
