@@ -38,7 +38,9 @@ fn invert_f32(a: &Mat) -> Mat {
         w[i][n + i] = 1.0;
     }
     for col in 0..n {
-        let piv = (col..n).max_by(|&x, &y| w[x][col].abs().partial_cmp(&w[y][col].abs()).unwrap()).unwrap();
+        let piv = (col..n)
+            .max_by(|&x, &y| w[x][col].abs().partial_cmp(&w[y][col].abs()).unwrap())
+            .unwrap();
         w.swap(col, piv);
         let d = w[col][col];
         for j in 0..2 * n {
@@ -97,7 +99,10 @@ fn main() {
 
     println!("iterative refinement on a {n}x{n} system, 8 RHS, {iters} iterations");
     println!("residual GEMM run on each method; update always FP32:\n");
-    println!("{:>4}  {:>14} {:>14} {:>14} {:>14}", "iter", "fp16tc", "markidis", "halfhalf", "fp32_simt");
+    println!(
+        "{:>4}  {:>14} {:>14} {:>14} {:>14}",
+        "iter", "fp16tc", "markidis", "halfhalf", "fp32_simt"
+    );
 
     let runs: Vec<(Method, Vec<f64>)> = [
         Method::Fp16Tc,

@@ -31,8 +31,14 @@ fn main() {
 
     // 3. Why it works: the two error sources the paper identifies.
     println!("\nwhy: (a) Tensor-Core RZ accumulation, (b) residual underflow");
-    println!("  P(gradual underflow) for values ~2^0 without scaling: {:.4}", analysis::p_underflow_or_gradual(0));
-    println!("  ... with the paper's x2^11 scaling (eq. 18):          {:.4}", analysis::measure_scaled(0, 100_000, 7).0);
+    println!(
+        "  P(gradual underflow) for values ~2^0 without scaling: {:.4}",
+        analysis::p_underflow_or_gradual(0)
+    );
+    println!(
+        "  ... with the paper's x2^11 scaling (eq. 18):          {:.4}",
+        analysis::measure_scaled(0, 100_000, 7).0
+    );
 
     // 4. What it buys: projected A100 throughput (calibrated model).
     println!("\nprojected A100 peak throughput (model, DESIGN.md §2):");

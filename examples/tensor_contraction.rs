@@ -37,10 +37,17 @@ fn main() {
     // 2^-30 of the start — exactly the regime qFlex worried about.
     let shrink = 0.125;
     let cfg = TileConfig::default();
-    let methods =
-        [Method::Fp16Tc, Method::OursHalfHalf, Method::OursTf32, Method::OursBf16Triple, Method::Fp32Simt];
+    let methods = [
+        Method::Fp16Tc,
+        Method::OursHalfHalf,
+        Method::OursTf32,
+        Method::OursBf16Triple,
+        Method::Fp32Simt,
+    ];
 
-    println!("contracting {layers} complex {n}x{n} gate layers (3M CGEMM), shrink {shrink}/layer\n");
+    println!(
+        "contracting {layers} complex {n}x{n} gate layers (3M CGEMM), shrink {shrink}/layer\n"
+    );
     println!(
         "{:>5} {:>10} {:>13} {:>13} {:>13} {:>13} {:>13}",
         "layer", "|amp|~2^e", "fp16tc", "halfhalf", "tf32tf32", "bf16x3", "fp32_simt"

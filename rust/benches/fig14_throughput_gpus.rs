@@ -13,7 +13,15 @@ use tcec::perfmodel::ALL_GPUS;
 
 fn main() {
     println!("== Table 5: GPU specifications ==\n");
-    let mut t = Table::new(&["gpu", "FP16-TC TF/s", "TF32-TC TF/s", "FP32 TF/s", "BW GB/s", "L1 KB/SM", "L2 MB"]);
+    let mut t = Table::new(&[
+        "gpu",
+        "FP16-TC TF/s",
+        "TF32-TC TF/s",
+        "FP32 TF/s",
+        "BW GB/s",
+        "L1 KB/SM",
+        "L2 MB",
+    ]);
     for g in &ALL_GPUS {
         t.row(&[
             g.name.to_string(),

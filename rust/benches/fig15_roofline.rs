@@ -14,11 +14,16 @@ fn main() {
     println!("== Figure 15: roofline points (A100, projected) ==\n");
     experiments::fig15(&A100).print();
 
-    println!("\n-- roofline curve (ceiling = fp16-TC peak / 3 = {:.1} TFlop/s) --", A100.fp16_tc_tflops / 3.0);
+    println!(
+        "\n-- roofline curve (ceiling = fp16-TC peak / 3 = {:.1} TFlop/s) --",
+        A100.fp16_tc_tflops / 3.0
+    );
     let mut ai = 0.5f64;
     while ai <= 512.0 {
         let r = roof(&A100, ai, A100.fp16_tc_tflops / 3.0);
-        println!("AI {ai:8.1} flop/B -> {r:7.2} TFlop/s {}", if r >= A100.fp16_tc_tflops / 3.0 - 1e-9 { "(compute roof)" } else { "(memory roof)" });
+        let roofed =
+            if r >= A100.fp16_tc_tflops / 3.0 - 1e-9 { "(compute roof)" } else { "(memory roof)" };
+        println!("AI {ai:8.1} flop/B -> {r:7.2} TFlop/s {roofed}");
         ai *= 2.0;
     }
 }

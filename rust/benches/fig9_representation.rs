@@ -17,5 +17,7 @@ fn main() {
         5, 10, 14, 15, 16, 20, 40, 80, 120, 127,
     ];
     experiments::fig9(&exps, 20_000).print();
-    println!("\n(1.0 ≈ the scheme cannot represent the range at all; FP16 > ~2^15 overflows to inf)");
+    println!(
+        "\n(1.0 ≈ the scheme cannot represent the range at all; FP16 > ~2^15 overflows to inf)"
+    );
 }

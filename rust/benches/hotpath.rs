@@ -9,7 +9,7 @@
 use std::sync::Arc;
 use tcec::bench_util::{bench, Table};
 use tcec::coordinator::{GemmService, Policy, ServiceConfig, SimExecutor};
-use tcec::gemm::{Method, TileConfig};
+use tcec::gemm::{gemm_batched, BatchedOperands, Mat, Method, TileConfig};
 use tcec::matgen::urand;
 use tcec::runtime::{ArtifactRegistry, PjrtHandle};
 
@@ -47,12 +47,56 @@ fn main() {
     }
     t.print();
 
+    println!("\n== split-amortized batched GEMM (shared weight B, same shape) ==\n");
+    let mut t = Table::new(&["method", "batch", "n", "loop ms", "batched ms", "speedup"]);
+    for method in [Method::OursHalfHalf, Method::OursTf32, Method::Markidis] {
+        for batch in [4usize, 8] {
+            let n = 64;
+            let w = urand(n, n, -1.0, 1.0, 7);
+            let pairs: Vec<(Mat, Mat)> =
+                (0..batch).map(|i| (urand(n, n, -1.0, 1.0, 10 + i as u64), w.clone())).collect();
+            let ops = BatchedOperands::from_mats(&pairs);
+            // Per-element loop: every request re-splits both operands.
+            let s_loop = bench(
+                || {
+                    for (a, b) in &pairs {
+                        std::hint::black_box(method.run(a, b, &cfg));
+                    }
+                },
+                1,
+                3,
+                0.3,
+            );
+            // Batched path: each distinct operand (the shared weight in
+            // particular) is split once for the whole batch.
+            let s_batched = bench(
+                || {
+                    std::hint::black_box(gemm_batched(&ops, method, &cfg));
+                },
+                1,
+                3,
+                0.3,
+            );
+            t.row(&[
+                method.name().to_string(),
+                batch.to_string(),
+                n.to_string(),
+                format!("{:.2}", s_loop.median_s * 1e3),
+                format!("{:.2}", s_batched.median_s * 1e3),
+                format!("{:.2}x", s_loop.median_s / s_batched.median_s),
+            ]);
+        }
+    }
+    t.print();
+
     println!("\n== PJRT artifact execution (needs `make artifacts`) ==\n");
     let handle = PjrtHandle::spawn();
     match ArtifactRegistry::scan("artifacts", handle.clone()) {
         Ok(reg) if !reg.names().is_empty() => {
             let mut t = Table::new(&["artifact", "median us", "GFlop/s"]);
-            for name in ["ec_gemm_halfhalf_128x128x128.hlo.txt", "ec_gemm_fp32_128x128x128.hlo.txt"] {
+            let names =
+                ["ec_gemm_halfhalf_128x128x128.hlo.txt", "ec_gemm_fp32_128x128x128.hlo.txt"];
+            for name in names {
                 if !reg.has(name) {
                     continue;
                 }

@@ -109,7 +109,10 @@ mod tests {
             let p_rn = predicted_rn(k);
             let p_rz = predicted_rz(k);
             assert!(simt / p_rn < 5.0 && p_rn / simt < 5.0, "k={k} simt {simt} vs {p_rn}");
-            assert!(markidis / p_rz < 5.0 && p_rz / markidis < 5.0, "k={k} markidis {markidis} vs {p_rz}");
+            assert!(
+                markidis / p_rz < 5.0 && p_rz / markidis < 5.0,
+                "k={k} markidis {markidis} vs {p_rz}"
+            );
         }
     }
 

@@ -27,8 +27,14 @@ pub enum Repr {
 }
 
 impl Repr {
-    pub const ALL: [Repr; 6] =
-        [Repr::Fp32, Repr::Fp16, Repr::Tf32, Repr::HalfHalf, Repr::Tf32Tf32, Repr::MarkidisHalfHalf];
+    pub const ALL: [Repr; 6] = [
+        Repr::Fp32,
+        Repr::Fp16,
+        Repr::Tf32,
+        Repr::HalfHalf,
+        Repr::Tf32Tf32,
+        Repr::MarkidisHalfHalf,
+    ];
 
     pub fn name(&self) -> &'static str {
         match self {

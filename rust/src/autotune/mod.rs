@@ -70,7 +70,11 @@ pub fn structural_filter(cfg: &TileConfig, gpu: &GpuSpec, tf32: bool) -> Result<
 }
 
 /// Accuracy filter (rule 3): run the probe GEMM on the simulator.
-pub fn accuracy_filter(cfg: &TileConfig, backend: &dyn KernelBackend, probe: usize) -> Result<f64, Reject> {
+pub fn accuracy_filter(
+    cfg: &TileConfig,
+    backend: &dyn KernelBackend,
+    probe: usize,
+) -> Result<f64, Reject> {
     let a = urand(probe, probe, -1.0, 1.0, 0x7ab1e3);
     let b = urand(probe, probe, -1.0, 1.0, 0x7ab1e4);
     let c = gemm_tiled(&a, &b, cfg, backend);
@@ -135,8 +139,8 @@ pub fn filter_space(
 /// Tile-quantization efficiency: fraction of launched CTA work that is
 /// useful for an n×n problem (full tiles vs padded edges).
 pub fn quantization_efficiency(cfg: &TileConfig, n: usize) -> f64 {
-    let tiles_m = (n + cfg.bm - 1) / cfg.bm;
-    let tiles_n = (n + cfg.bn - 1) / cfg.bn;
+    let tiles_m = n.div_ceil(cfg.bm);
+    let tiles_n = n.div_ceil(cfg.bn);
     let launched = (tiles_m * cfg.bm) as f64 * (tiles_n * cfg.bn) as f64;
     (n * n) as f64 / launched
 }

@@ -79,6 +79,13 @@ impl DynamicBatcher {
             .collect()
     }
 
+    /// Earliest linger deadline across the pending groups (`None` when
+    /// idle). The dispatcher sizes its recv timeout from this so a steady
+    /// submit stream cannot starve straggler flushes.
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.pending.values().map(|p| p.opened_at + self.linger).min()
+    }
+
     /// Number of queued (not yet emitted) requests.
     pub fn queued(&self) -> usize {
         self.pending.values().map(|p| p.requests.len()).sum()
@@ -144,6 +151,23 @@ mod tests {
     }
 
     #[test]
+    fn next_deadline_tracks_oldest_group() {
+        let linger = Duration::from_millis(50);
+        let mut b = DynamicBatcher::new(10, linger);
+        assert!(b.next_deadline().is_none(), "idle batcher has no deadline");
+        let before = Instant::now();
+        b.push(Method::OursHalfHalf, req(1, 8, 8, 8));
+        let d1 = b.next_deadline().expect("one pending group");
+        assert!(d1 >= before + linger && d1 <= Instant::now() + linger);
+        std::thread::sleep(Duration::from_millis(5));
+        // A later group must not move the earliest deadline forward.
+        b.push(Method::OursTf32, req(2, 4, 4, 4));
+        assert_eq!(b.next_deadline(), Some(d1));
+        b.flush(true);
+        assert!(b.next_deadline().is_none(), "drained batcher has no deadline");
+    }
+
+    #[test]
     fn no_request_lost_or_duplicated_under_load() {
         // Property: every pushed id comes out exactly once.
         let mut b = DynamicBatcher::new(4, Duration::from_secs(100));
@@ -155,7 +179,8 @@ mod tests {
                 1 => (16, 8, 8),
                 _ => (8, 16, 8),
             };
-            let method = if rng.int_in(0, 1) == 0 { Method::OursHalfHalf } else { Method::OursTf32 };
+            let method =
+                if rng.int_in(0, 1) == 0 { Method::OursHalfHalf } else { Method::OursTf32 };
             if let Some(batch) = b.push(method, req(id, m, k, n)) {
                 out.extend(batch.requests.iter().map(|r| r.id));
             }

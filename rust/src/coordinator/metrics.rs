@@ -2,9 +2,10 @@
 //! and a coarse latency histogram. Lock-free reads are not needed at this
 //! scale; a mutexed inner keeps it simple and safe.
 
+use super::splitcache::SplitCache;
 use crate::gemm::Method;
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 /// Latency histogram bucket upper bounds (seconds).
@@ -14,6 +15,7 @@ const BUCKETS: [f64; 8] = [1e-4, 3e-4, 1e-3, 3e-3, 1e-2, 3e-2, 1e-1, f64::INFINI
 struct Inner {
     requests: u64,
     completed: u64,
+    failed: u64,
     flops: u64,
     per_method: HashMap<&'static str, u64>,
     latency_buckets: [u64; 8],
@@ -31,6 +33,9 @@ struct Inner {
 #[derive(Debug, Default)]
 pub struct Metrics {
     inner: Mutex<Inner>,
+    /// The executor's operand split cache, when it has one — registered by
+    /// the service at startup so snapshots can surface hit/miss counters.
+    split_cache: Mutex<Option<Arc<SplitCache>>>,
 }
 
 /// A point-in-time metrics snapshot for reporting.
@@ -38,6 +43,10 @@ pub struct Metrics {
 pub struct Snapshot {
     pub requests: u64,
     pub completed: u64,
+    /// Requests whose batch was dropped by a panicking executor. Every
+    /// submitted request reconciles: `requests == completed + failed`
+    /// once the pipeline drains.
+    pub failed: u64,
     pub flops: u64,
     pub per_method: Vec<(&'static str, u64)>,
     pub latency_buckets: [u64; 8],
@@ -53,6 +62,12 @@ pub struct Snapshot {
     pub reduction_depth_max: u64,
     /// Sharded GEMMs that degraded to one unsharded call (shard failure).
     pub shard_fallbacks: u64,
+    /// Operand splits served from the `SplitCache` (0 when no cache).
+    pub split_cache_hits: u64,
+    /// Operands the `SplitCache` had to prepare (0 when no cache).
+    pub split_cache_misses: u64,
+    /// Prepared operands currently cached (≤ the cache capacity).
+    pub split_cache_entries: u64,
 }
 
 impl Metrics {
@@ -62,6 +77,18 @@ impl Metrics {
 
     pub fn on_submit(&self) {
         self.inner.lock().unwrap().requests += 1;
+    }
+
+    /// Record `n` requests dropped because their batch's executor panicked
+    /// (the clients observe a disconnected channel). Keeps the
+    /// `requests == completed + failed` identity intact.
+    pub fn on_failed(&self, n: usize) {
+        self.inner.lock().unwrap().failed += n as u64;
+    }
+
+    /// Surface a [`SplitCache`]'s hit/miss counters in future snapshots.
+    pub fn register_split_cache(&self, cache: Arc<SplitCache>) {
+        *self.split_cache.lock().unwrap() = Some(cache);
     }
 
     pub fn on_complete(&self, method: Method, flops: u64, latency: Duration, batch_size: usize) {
@@ -94,6 +121,10 @@ impl Metrics {
     }
 
     pub fn snapshot(&self) -> Snapshot {
+        let (sc_hits, sc_misses, sc_entries) = match &*self.split_cache.lock().unwrap() {
+            Some(c) => (c.hits(), c.misses(), c.len() as u64),
+            None => (0, 0, 0),
+        };
         let g = self.inner.lock().unwrap();
         let mut per_method: Vec<(&'static str, u64)> =
             g.per_method.iter().map(|(k, v)| (*k, *v)).collect();
@@ -101,6 +132,7 @@ impl Metrics {
         Snapshot {
             requests: g.requests,
             completed: g.completed,
+            failed: g.failed,
             flops: g.flops,
             per_method,
             latency_buckets: g.latency_buckets,
@@ -119,6 +151,9 @@ impl Metrics {
             shard_steals: g.shard_steals,
             reduction_depth_max: g.reduction_depth_max,
             shard_fallbacks: g.shard_fallbacks,
+            split_cache_hits: sc_hits,
+            split_cache_misses: sc_misses,
+            split_cache_entries: sc_entries,
         }
     }
 }
@@ -142,6 +177,38 @@ mod tests {
         assert_eq!(s.latency_buckets.iter().sum::<u64>(), 2);
         assert!(s.mean_latency > Duration::ZERO);
         assert!((s.mean_batch_size - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn failed_requests_reconcile_with_submits() {
+        let m = Metrics::new();
+        for _ in 0..5 {
+            m.on_submit();
+        }
+        m.on_complete(Method::Fp32Simt, 100, Duration::from_micros(10), 3);
+        m.on_complete(Method::Fp32Simt, 100, Duration::from_micros(10), 3);
+        m.on_complete(Method::Fp32Simt, 100, Duration::from_micros(10), 3);
+        m.on_failed(2); // a dropped 2-request batch
+        let s = m.snapshot();
+        assert_eq!(s.failed, 2);
+        assert_eq!(s.requests, s.completed + s.failed);
+    }
+
+    #[test]
+    fn split_cache_counters_surface_when_registered() {
+        use crate::matgen::urand;
+        let m = Metrics::new();
+        let s = m.snapshot();
+        assert_eq!((s.split_cache_hits, s.split_cache_misses, s.split_cache_entries), (0, 0, 0));
+        let cache = std::sync::Arc::new(SplitCache::new(4));
+        m.register_split_cache(std::sync::Arc::clone(&cache));
+        let w = urand(4, 4, -1.0, 1.0, 1);
+        cache.get_or_prepare(Method::OursHalfHalf, &w);
+        cache.get_or_prepare(Method::OursHalfHalf, &w);
+        let s = m.snapshot();
+        assert_eq!(s.split_cache_hits, 1);
+        assert_eq!(s.split_cache_misses, 1);
+        assert_eq!(s.split_cache_entries, 1);
     }
 
     #[test]

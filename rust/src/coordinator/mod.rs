@@ -1,16 +1,20 @@
 //! L3 coordinator: the GEMM-as-a-service layer (router, dynamic batcher,
-//! worker pool, metrics). The paper's kernel is the payload; this layer is
-//! how a downstream system would actually consume it — including the
-//! exponent-range routing rule that encodes Fig. 11's accuracy cliffs.
+//! split cache, worker pool, metrics). The paper's kernel is the payload;
+//! this layer is how a downstream system would actually consume it —
+//! including the exponent-range routing rule that encodes Fig. 11's
+//! accuracy cliffs and the [`SplitCache`] that amortizes operand splits
+//! across repeated (weight-like) submissions.
 
 pub mod batcher;
 pub mod metrics;
 pub mod policy;
 pub mod request;
 pub mod service;
+pub mod splitcache;
 
 pub use batcher::{Batch, BatchKey, DynamicBatcher};
 pub use metrics::{Metrics, Snapshot};
 pub use policy::{probe, route, Policy, RangeClass};
 pub use request::{GemmRequest, GemmResponse};
 pub use service::{Executor, GemmService, ServiceConfig, SimExecutor};
+pub use splitcache::SplitCache;

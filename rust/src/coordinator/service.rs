@@ -14,9 +14,11 @@ use super::batcher::{Batch, BatchKey, DynamicBatcher};
 use super::metrics::Metrics;
 use super::policy::{route, Policy};
 use super::request::{GemmRequest, GemmResponse};
-use crate::gemm::{Mat, Method, TileConfig};
+use super::splitcache::SplitCache;
+use crate::gemm::prepared::SplitDedup;
+use crate::gemm::{Mat, Method, SplitOperand, TileConfig};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -26,16 +28,76 @@ pub trait Executor: Send + Sync + 'static {
     /// Produce `C_i = A_i · B_i` for every request, in order.
     fn execute(&self, key: &BatchKey, reqs: &[GemmRequest]) -> Vec<Mat>;
     fn name(&self) -> &'static str;
+
+    /// The executor's operand split cache, when it has one. The service
+    /// registers it with its [`Metrics`] so snapshots surface hit/miss
+    /// counters; wrappers (sharding, PJRT fallback) delegate to the inner
+    /// executor.
+    fn split_cache(&self) -> Option<Arc<SplitCache>> {
+        None
+    }
 }
 
-/// Simulator-backed executor: runs the bit-exact tiled GEMM backends.
+/// Simulator-backed executor: runs the bit-exact tiled GEMM backends
+/// through the two-stage split API. A batch splits each **distinct**
+/// operand once and fans its elements across a small scoped-thread chunk;
+/// with a [`SplitCache`] attached, repeated (weight-like) operands are
+/// split exactly once across requests too.
 pub struct SimExecutor {
     pub tile: TileConfig,
+    /// Threads a multi-element batch is fanned across (1 = serial).
+    pub batch_threads: usize,
+    cache: Option<Arc<SplitCache>>,
 }
 
 impl SimExecutor {
     pub fn new() -> SimExecutor {
-        SimExecutor { tile: TileConfig::default() }
+        let batch_threads =
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(4);
+        SimExecutor { tile: TileConfig::default(), batch_threads, cache: None }
+    }
+
+    /// Like [`SimExecutor::new`], reusing operand splits through `cache`
+    /// across batches and requests.
+    pub fn with_cache(cache: Arc<SplitCache>) -> SimExecutor {
+        SimExecutor { cache: Some(cache), ..SimExecutor::new() }
+    }
+
+    /// Prepare one operand: through the cache when one is attached (so a
+    /// repeated weight is split once across requests), otherwise directly.
+    fn prepare_operand(&self, method: Method, m: &Mat) -> Arc<SplitOperand> {
+        match &self.cache {
+            Some(c) => c.get_or_prepare(method, m),
+            None => Arc::new(method.prepare(m)),
+        }
+    }
+
+    /// Prepare all `2·N` operands of a batch, splitting each distinct
+    /// operand exactly once. The in-batch dedup table sits in front of the
+    /// cache so a batch's shared weight is prepared once even when the
+    /// cache is small enough to thrash (an in-batch repeat costs one cheap
+    /// fingerprint, never a re-split); a single-request batch skips the
+    /// table — with no possible in-batch repeat it is pure overhead.
+    fn prepare_batch(
+        &self,
+        method: Method,
+        reqs: &[GemmRequest],
+    ) -> Vec<(Arc<SplitOperand>, Arc<SplitOperand>)> {
+        if let [r] = reqs {
+            return vec![(self.prepare_operand(method, &r.a), self.prepare_operand(method, &r.b))];
+        }
+        let mut dedup = SplitDedup::new();
+        reqs.iter()
+            .map(|r| {
+                let pa = dedup.get_or_prepare(r.a.rows, r.a.cols, &r.a.data, || {
+                    self.prepare_operand(method, &r.a)
+                });
+                let pb = dedup.get_or_prepare(r.b.rows, r.b.cols, &r.b.data, || {
+                    self.prepare_operand(method, &r.b)
+                });
+                (pa, pb)
+            })
+            .collect()
     }
 }
 
@@ -45,13 +107,46 @@ impl Default for SimExecutor {
     }
 }
 
+/// Per-element flop floor below which fanning a batch across threads
+/// costs more in spawn/join than the GEMMs themselves (a 32³ problem is
+/// ~65k flops; thread spawn + scope join is tens of microseconds).
+const MIN_FAN_OUT_FLOPS: u64 = 100_000;
+
 impl Executor for SimExecutor {
     fn execute(&self, key: &BatchKey, reqs: &[GemmRequest]) -> Vec<Mat> {
-        reqs.iter().map(|r| key.method.run(&r.a, &r.b, &self.tile)).collect()
+        let method = key.method;
+        let pairs = self.prepare_batch(method, reqs);
+        let threads = self.batch_threads.clamp(1, reqs.len().max(1));
+        let elem_flops = 2 * key.m as u64 * key.n as u64 * key.k as u64;
+        if threads <= 1 || reqs.len() <= 1 || elem_flops < MIN_FAN_OUT_FLOPS {
+            return pairs.iter().map(|(pa, pb)| method.run_prepared(pa, pb, &self.tile)).collect();
+        }
+        // Fan the batch's elements across a scoped thread chunk: the
+        // prepared splits are shared by reference, each thread fills its
+        // own contiguous slice of the output, and a panic in any element
+        // propagates out of the scope (the worker's catch_unwind handles
+        // it exactly like a serial panic).
+        let mut out: Vec<Option<Mat>> = (0..reqs.len()).map(|_| None).collect();
+        let chunk = reqs.len().div_ceil(threads);
+        let tile = &self.tile;
+        std::thread::scope(|s| {
+            for (out_chunk, pair_chunk) in out.chunks_mut(chunk).zip(pairs.chunks(chunk)) {
+                s.spawn(move || {
+                    for (slot, (pa, pb)) in out_chunk.iter_mut().zip(pair_chunk) {
+                        *slot = Some(method.run_prepared(pa, pb, tile));
+                    }
+                });
+            }
+        });
+        out.into_iter().map(|c| c.expect("every batch element computed")).collect()
     }
 
     fn name(&self) -> &'static str {
         "sim"
+    }
+
+    fn split_cache(&self) -> Option<Arc<SplitCache>> {
+        self.cache.clone()
     }
 }
 
@@ -59,6 +154,9 @@ struct WorkItem {
     batch: Batch,
     responders: Vec<(Sender<GemmResponse>, Instant)>,
 }
+
+/// Dispatcher bookkeeping: request id → (responder, submit time).
+type ResponderMap = std::collections::HashMap<u64, (Sender<GemmResponse>, Instant)>;
 
 enum Msg {
     Submit(GemmRequest, Sender<GemmResponse>, Instant),
@@ -116,6 +214,11 @@ impl GemmService {
             )),
             None => executor,
         };
+        // Surface the executor's split-cache counters (if it has one) in
+        // this service's metrics snapshots.
+        if let Some(cache) = executor.split_cache() {
+            metrics.register_split_cache(cache);
+        }
         let (tx, rx) = channel::<Msg>();
         let (work_tx, work_rx) = channel::<WorkItem>();
         let work_rx = Arc::new(Mutex::new(work_rx));
@@ -143,6 +246,9 @@ impl GemmService {
                             "tcec worker: executor panicked on batch {:?} ({} reqs dropped)",
                             item.batch.key, batch_size
                         );
+                        // Account for every dropped request so the
+                        // `requests == completed + failed` identity holds.
+                        metrics.on_failed(batch_size);
                         continue;
                     };
                     debug_assert_eq!(outs.len(), batch_size);
@@ -150,7 +256,12 @@ impl GemmService {
                         item.batch.requests.iter().zip(outs).zip(item.responders)
                     {
                         let latency = t0.elapsed();
-                        metrics.on_complete(item.batch.key.method, req.flops(), latency, batch_size);
+                        metrics.on_complete(
+                            item.batch.key.method,
+                            req.flops(),
+                            latency,
+                            batch_size,
+                        );
                         // Client may have dropped its receiver; ignore.
                         let _ = resp_tx.send(GemmResponse {
                             id: req.id,
@@ -171,14 +282,8 @@ impl GemmService {
             let max_batch = cfg.max_batch;
             std::thread::spawn(move || {
                 let mut batcher = DynamicBatcher::new(max_batch, linger);
-                // id -> (responder, submit time), aligned by request id.
-                let mut responders: std::collections::HashMap<u64, (Sender<GemmResponse>, Instant)> =
-                    std::collections::HashMap::new();
-                let emit = |batch: Batch,
-                                responders: &mut std::collections::HashMap<
-                    u64,
-                    (Sender<GemmResponse>, Instant),
-                >| {
+                let mut responders: ResponderMap = ResponderMap::new();
+                let emit = |batch: Batch, responders: &mut ResponderMap| {
                     let rs: Vec<_> = batch
                         .requests
                         .iter()
@@ -187,7 +292,17 @@ impl GemmService {
                     let _ = work_tx.send(WorkItem { batch, responders: rs });
                 };
                 loop {
-                    match rx.recv_timeout(linger) {
+                    // Wake exactly when the oldest pending batch's linger
+                    // deadline expires. Deriving the timeout from the
+                    // batcher (not a fixed `linger`) is what prevents
+                    // starvation: a steady submit stream used to keep
+                    // `recv_timeout` from ever timing out, so stragglers
+                    // blew past their deadline unboundedly.
+                    let timeout = batcher
+                        .next_deadline()
+                        .map(|d| d.saturating_duration_since(Instant::now()))
+                        .unwrap_or(linger);
+                    match rx.recv_timeout(timeout) {
                         Ok(Msg::Submit(req, resp_tx, t0)) => {
                             metrics.on_submit();
                             let method = force.unwrap_or_else(|| route(req.policy, &req.a, &req.b));
@@ -196,24 +311,31 @@ impl GemmService {
                                 emit(batch, &mut responders);
                             }
                         }
-                        Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
-                            for batch in batcher.flush(false) {
-                                emit(batch, &mut responders);
-                            }
-                        }
-                        Ok(Msg::Shutdown) | Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                        Err(RecvTimeoutError::Timeout) => {}
+                        Ok(Msg::Shutdown) | Err(RecvTimeoutError::Disconnected) => {
                             for batch in batcher.flush(true) {
                                 emit(batch, &mut responders);
                             }
                             break;
                         }
                     }
+                    // Flush due stragglers on EVERY iteration — message or
+                    // timeout alike.
+                    for batch in batcher.flush(false) {
+                        emit(batch, &mut responders);
+                    }
                 }
                 // work_tx drops here, terminating the workers.
             })
         };
 
-        GemmService { tx, dispatcher: Some(dispatcher), workers, metrics, next_id: AtomicU64::new(1) }
+        GemmService {
+            tx,
+            dispatcher: Some(dispatcher),
+            workers,
+            metrics,
+            next_id: AtomicU64::new(1),
+        }
     }
 
     /// Submit a GEMM; returns the request id and the response receiver.
@@ -305,6 +427,92 @@ mod tests {
         let snap = svc.metrics().snapshot();
         assert_eq!(snap.requests, 20);
         assert_eq!(snap.completed, 20);
+        assert_eq!(snap.failed, 0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn batched_executor_matches_direct_runs() {
+        // A full batch takes SimExecutor's fanned, split-amortized path
+        // (including a shared weight operand); results must be
+        // bit-identical to direct per-request runs. 48³ clears the
+        // MIN_FAN_OUT_FLOPS floor, so the scoped-thread path runs.
+        let tile = TileConfig::default();
+        let exec = SimExecutor::new();
+        let w = urand(48, 48, -1.0, 1.0, 50);
+        let reqs: Vec<GemmRequest> = (0..5)
+            .map(|i| GemmRequest {
+                id: i,
+                a: urand(48, 48, -1.0, 1.0, 60 + i),
+                b: w.clone(),
+                policy: Policy::Fp32Accuracy,
+            })
+            .collect();
+        let key = BatchKey { m: 48, n: 48, k: 48, method: Method::OursHalfHalf };
+        let outs = exec.execute(&key, &reqs);
+        assert_eq!(outs.len(), 5);
+        for (r, c) in reqs.iter().zip(&outs) {
+            let direct = Method::OursHalfHalf.run(&r.a, &r.b, &tile);
+            assert_eq!(c.data, direct.data, "request {} diverged on the batched path", r.id);
+        }
+    }
+
+    #[test]
+    fn straggler_flushed_within_linger_under_sustained_traffic() {
+        // Regression: the dispatcher used to flush stragglers only when
+        // `recv_timeout(linger)` fired, which a steady submit stream
+        // prevents forever. A half-full batch must now be emitted within
+        // ~2x its linger deadline while cross-shaped traffic keeps coming.
+        let linger = Duration::from_millis(50);
+        let svc = GemmService::start(
+            Arc::new(SimExecutor::new()),
+            ServiceConfig {
+                workers: 2,
+                max_batch: 64, // the straggler can never fill a batch
+                linger,
+                force_method: Some(Method::Fp32Simt),
+                ..ServiceConfig::default()
+            },
+        );
+        let stop = std::sync::atomic::AtomicBool::new(false);
+        std::thread::scope(|s| {
+            let svc_ref = &svc;
+            let stop_ref = &stop;
+            // Cross-shaped 16x16 traffic arriving much faster than the
+            // linger, for the whole duration of the test.
+            let traffic = s.spawn(move || {
+                let mut rxs = Vec::new();
+                let mut i = 0u64;
+                while !stop_ref.load(Ordering::Relaxed) {
+                    let rx = svc_ref
+                        .submit(
+                            urand(16, 16, -1.0, 1.0, i),
+                            urand(16, 16, -1.0, 1.0, i + 1),
+                            Policy::StrictFp32,
+                        )
+                        .1;
+                    rxs.push(rx);
+                    i += 1;
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                rxs
+            });
+            // Let the stream establish itself, then submit the straggler:
+            // a unique 8x8 shape that joins an otherwise-empty group.
+            std::thread::sleep(Duration::from_millis(20));
+            let (_, rx) = svc.submit(
+                urand(8, 8, -1.0, 1.0, 999),
+                urand(8, 8, -1.0, 1.0, 998),
+                Policy::StrictFp32,
+            );
+            let resp = rx.recv_timeout(linger * 2);
+            stop.store(true, Ordering::Relaxed);
+            let rxs = traffic.join().unwrap();
+            assert!(resp.is_ok(), "straggler starved past 2x linger under sustained traffic");
+            for rx in rxs {
+                assert!(rx.recv_timeout(Duration::from_secs(30)).is_ok());
+            }
+        });
         svc.shutdown();
     }
 
@@ -322,8 +530,12 @@ mod tests {
         );
         let rxs: Vec<_> = (0..8)
             .map(|i| {
-                svc.submit(urand(8, 8, -1.0, 1.0, i), urand(8, 8, -1.0, 1.0, i + 100), Policy::StrictFp32)
-                    .1
+                svc.submit(
+                    urand(8, 8, -1.0, 1.0, i),
+                    urand(8, 8, -1.0, 1.0, i + 100),
+                    Policy::StrictFp32,
+                )
+                .1
             })
             .collect();
         let mut max_batch_seen = 0;
@@ -372,14 +584,26 @@ mod tests {
             },
         );
         // First request: executor panics; client sees a closed channel.
-        let (_, rx1) = svc.submit(urand(8, 8, -1.0, 1.0, 1), urand(8, 8, -1.0, 1.0, 2), Policy::StrictFp32);
+        let (_, rx1) =
+            svc.submit(urand(8, 8, -1.0, 1.0, 1), urand(8, 8, -1.0, 1.0, 2), Policy::StrictFp32);
         assert!(
             rx1.recv_timeout(Duration::from_secs(30)).is_err(),
             "panicked batch must yield a disconnect, not a result"
         );
         // Second request: the same (sole) worker must still be alive.
-        let resp = svc.gemm_blocking(urand(8, 8, -1.0, 1.0, 3), urand(8, 8, -1.0, 1.0, 4), Policy::StrictFp32);
+        let resp = svc.gemm_blocking(
+            urand(8, 8, -1.0, 1.0, 3),
+            urand(8, 8, -1.0, 1.0, 4),
+            Policy::StrictFp32,
+        );
         assert_eq!(resp.method, Method::Fp32Simt);
+        // The dropped batch must be accounted, not leaked: every submit
+        // reconciles as completed or failed.
+        let snap = svc.metrics().snapshot();
+        assert_eq!(snap.requests, 2);
+        assert_eq!(snap.completed, 1);
+        assert_eq!(snap.failed, 1);
+        assert_eq!(snap.requests, snap.completed + snap.failed);
         svc.shutdown();
     }
 
@@ -395,7 +619,9 @@ mod tests {
                 ..ServiceConfig::default()
             },
         );
-        let rx = svc.submit(urand(8, 8, -1.0, 1.0, 1), urand(8, 8, -1.0, 1.0, 2), Policy::StrictFp32).1;
+        let rx = svc
+            .submit(urand(8, 8, -1.0, 1.0, 1), urand(8, 8, -1.0, 1.0, 2), Policy::StrictFp32)
+            .1;
         svc.shutdown(); // must flush the half-full batch
         assert!(rx.recv_timeout(Duration::from_secs(5)).is_ok());
     }

@@ -1,0 +1,203 @@
+//! Content-addressed cache of prepared operand splits.
+//!
+//! A weight matrix submitted with every request — the attention/inference
+//! pattern `gemm::batched` names — re-pays its FP32→FP16/TF32 split on
+//! every arrival unless someone remembers the split. This cache keys on
+//! (method, shape, 128-bit content fingerprint), verifies candidate hits
+//! bit-for-bit against the stored original (a fingerprint collision can
+//! therefore cost a miss, never a wrong result), and bounds memory with
+//! LRU eviction over a fixed entry capacity. Hit/miss counters surface in
+//! [`Metrics::snapshot`](super::metrics::Metrics::snapshot) when the
+//! executor exposes its cache (`Executor::split_cache`).
+//!
+//! Activations flow through the same cache and naturally churn the LRU
+//! tail; repeated (weight-like) operands stay hot. The lock is dropped
+//! while an operand is being prepared, so two concurrent first requests
+//! for the same weight may both prepare it — both count as misses and the
+//! later insert wins; correctness is unaffected (prepare is deterministic).
+//!
+//! **Sharded serving caveat.** When `ShardedExecutor` wraps a caching
+//! `SimExecutor`, every shard's sub-operand flows through this cache too.
+//! Within one sharded GEMM that is a win (an A row band is reused by every
+//! column cut and hits after its first shard), but across large sharded
+//! GEMMs the unique bands churn the LRU and can evict hot weights — size
+//! `capacity` generously (≥ distinct weights + one GEMM's shard bands)
+//! when combining `--shard` with `--split-cache`, or skip the cache for
+//! shard-heavy traffic; the worst case is the no-cache baseline plus a
+//! lookup, never a wrong result.
+
+use crate::gemm::{bitwise_eq, content_fingerprint, Mat, Method, SplitOperand};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct CacheKey {
+    method: Method,
+    rows: usize,
+    cols: usize,
+    fingerprint: u128,
+}
+
+#[derive(Debug)]
+struct Entry {
+    /// The original operand's data, for exact collision rejection.
+    original: Vec<f32>,
+    prepared: Arc<SplitOperand>,
+    /// LRU stamp (monotone tick of the last touch).
+    last_used: u64,
+}
+
+#[derive(Debug, Default)]
+struct CacheInner {
+    map: HashMap<CacheKey, Entry>,
+    tick: u64,
+}
+
+/// LRU-bounded, content-hash keyed cache of [`SplitOperand`]s.
+#[derive(Debug)]
+pub struct SplitCache {
+    capacity: usize,
+    inner: Mutex<CacheInner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl SplitCache {
+    /// Cache holding at most `capacity` prepared operands (LRU-evicted).
+    pub fn new(capacity: usize) -> SplitCache {
+        assert!(capacity >= 1, "SplitCache capacity must be at least 1");
+        SplitCache {
+            capacity,
+            inner: Mutex::new(CacheInner::default()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Return the cached split of `m` under `method`, preparing and
+    /// inserting it on a miss. The returned split is bit-identical to
+    /// `method.prepare(m)` either way.
+    pub fn get_or_prepare(&self, method: Method, m: &Mat) -> Arc<SplitOperand> {
+        let key = CacheKey {
+            method,
+            rows: m.rows,
+            cols: m.cols,
+            fingerprint: content_fingerprint(&m.data),
+        };
+        {
+            let mut g = self.inner.lock().unwrap();
+            g.tick += 1;
+            let tick = g.tick;
+            if let Some(e) = g.map.get_mut(&key) {
+                if bitwise_eq(&e.original, &m.data) {
+                    e.last_used = tick;
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    return Arc::clone(&e.prepared);
+                }
+            }
+        }
+        // Miss: prepare outside the lock (the split is the expensive part).
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let prepared = Arc::new(method.prepare(m));
+        let mut g = self.inner.lock().unwrap();
+        g.tick += 1;
+        let tick = g.tick;
+        if !g.map.contains_key(&key) && g.map.len() >= self.capacity {
+            // Evict the least-recently-used entry (linear scan is fine at
+            // the bounded capacities this cache runs with).
+            let victim = g.map.iter().min_by_key(|(_, e)| e.last_used).map(|(k, _)| k.clone());
+            if let Some(victim) = victim {
+                g.map.remove(&victim);
+            }
+        }
+        g.map.insert(
+            key,
+            Entry { original: m.data.clone(), prepared: Arc::clone(&prepared), last_used: tick },
+        );
+        prepared
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Number of cached operands (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::TileConfig;
+    use crate::matgen::urand;
+
+    #[test]
+    fn hit_returns_identical_split() {
+        let cache = SplitCache::new(4);
+        let w = urand(8, 8, -1.0, 1.0, 1);
+        let p1 = cache.get_or_prepare(Method::OursHalfHalf, &w);
+        let p2 = cache.get_or_prepare(Method::OursHalfHalf, &w.clone());
+        assert!(Arc::ptr_eq(&p1, &p2), "second lookup must reuse the cached split");
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+        // And the cached split computes the right answer.
+        let a = urand(8, 8, -1.0, 1.0, 2);
+        let pa = cache.get_or_prepare(Method::OursHalfHalf, &a);
+        let cfg = TileConfig::default();
+        let c = Method::OursHalfHalf.run_prepared(&pa, &p2, &cfg);
+        assert_eq!(c.data, Method::OursHalfHalf.run(&a, &w, &cfg).data);
+    }
+
+    #[test]
+    fn method_is_part_of_the_key() {
+        let cache = SplitCache::new(4);
+        let w = urand(8, 8, -1.0, 1.0, 3);
+        cache.get_or_prepare(Method::OursHalfHalf, &w);
+        cache.get_or_prepare(Method::OursTf32, &w);
+        assert_eq!((cache.hits(), cache.misses()), (0, 2));
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn lru_evicts_the_coldest_entry() {
+        let cache = SplitCache::new(2);
+        let w0 = urand(4, 4, -1.0, 1.0, 10);
+        let w1 = urand(4, 4, -1.0, 1.0, 11);
+        let w2 = urand(4, 4, -1.0, 1.0, 12);
+        cache.get_or_prepare(Method::OursHalfHalf, &w0); // miss
+        cache.get_or_prepare(Method::OursHalfHalf, &w1); // miss
+        cache.get_or_prepare(Method::OursHalfHalf, &w0); // hit — w0 now hottest
+        cache.get_or_prepare(Method::OursHalfHalf, &w2); // miss, evicts w1
+        assert_eq!(cache.len(), 2);
+        cache.get_or_prepare(Method::OursHalfHalf, &w0); // still cached
+        assert_eq!(cache.hits(), 2);
+        cache.get_or_prepare(Method::OursHalfHalf, &w1); // evicted → miss
+        assert_eq!(cache.misses(), 4);
+    }
+
+    #[test]
+    fn different_content_same_shape_does_not_collide() {
+        let cache = SplitCache::new(8);
+        let w0 = urand(6, 6, -1.0, 1.0, 20);
+        let mut w1 = w0.clone();
+        w1.data[0] = f32::from_bits(w1.data[0].to_bits() ^ 1);
+        let p0 = cache.get_or_prepare(Method::Markidis, &w0);
+        let p1 = cache.get_or_prepare(Method::Markidis, &w1);
+        assert!(!Arc::ptr_eq(&p0, &p1));
+        assert_eq!(cache.misses(), 2);
+    }
+}

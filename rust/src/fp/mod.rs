@@ -12,7 +12,9 @@ pub mod split;
 pub mod tf32;
 
 pub use half::Half;
-pub use rounding::{exp2i, round_to_format, round_to_precision, truncate_f32_mantissa_lsb, Format, Rounding};
+pub use rounding::{
+    exp2i, round_to_format, round_to_precision, truncate_f32_mantissa_lsb, Format, Rounding,
+};
 pub use split::{
     reconstruct_bf16_triple, split_bf16_triple, split_feng, split_markidis, split_markidis_rz,
     split_ootomo, split_ootomo_tf32, SplitF16, SplitTf32, BF16_SCALE_EXP, SCALE, SCALE_EXP,

@@ -13,7 +13,7 @@
 //! `OursBackend` exposes ablation switches (`avoid_rz`, `keep_delta2`) so the
 //! benches can isolate each of the paper's design decisions.
 
-use super::tiled::{KernelBackend, TileState, INST_K};
+use super::tiled::{KernelBackend, PackedPieces, TileState, INST_K};
 use crate::fp::{
     split_feng, split_markidis, split_ootomo, split_ootomo_tf32, Half, Rounding, Tf32,
 };
@@ -35,24 +35,6 @@ impl Grid {
             Grid::F16 => Half::from_f32(x, Rounding::RN).to_f32(),
             Grid::Tf32 => Tf32::from_f32(x, Rounding::RNA).to_f32(),
         }
-    }
-}
-
-#[inline]
-fn quantize_panel(grid: Grid, src: &[f32], dst: &mut Vec<f32>) {
-    dst.clear();
-    dst.extend(src.iter().map(|&x| grid.quantize(x)));
-}
-
-/// Split a packed panel into hi/lo panels with the given splitter.
-#[inline]
-fn split_panel(src: &[f32], hi: &mut Vec<f32>, lo: &mut Vec<f32>, f: impl Fn(f32) -> (f32, f32)) {
-    hi.clear();
-    lo.clear();
-    for &x in src {
-        let (h, l) = f(x);
-        hi.push(h);
-        lo.push(l);
     }
 }
 
@@ -93,7 +75,24 @@ impl KernelBackend for SimtBackend {
         "cublas_simt(FP32)"
     }
 
-    fn process_kblock(&self, st: &mut TileState, a: &[f32], b: &[f32], tm: usize, tn: usize, kb: usize) {
+    fn piece_count(&self) -> usize {
+        1
+    }
+
+    fn split_element(&self, x: f32) -> [f32; 3] {
+        [x, 0.0, 0.0]
+    }
+
+    fn process_kblock_pieces(
+        &self,
+        st: &mut TileState,
+        a: &PackedPieces,
+        b: &PackedPieces,
+        tm: usize,
+        tn: usize,
+        kb: usize,
+    ) {
+        let (a, b) = (&a.p[0], &b.p[0]);
         for i in 0..tm {
             for j in 0..tn {
                 let mut acc = st.c[i * tn + j];
@@ -142,12 +141,24 @@ impl KernelBackend for TcPlainBackend {
         }
     }
 
-    fn process_kblock(&self, st: &mut TileState, a: &[f32], b: &[f32], tm: usize, tn: usize, kb: usize) {
-        let mut aq = Vec::new();
-        let mut bq = Vec::new();
-        quantize_panel(self.grid, a, &mut aq);
-        quantize_panel(self.grid, b, &mut bq);
-        for_each_inst_chunk(&aq, &bq, tm, tn, kb, |ac, bc, kc| {
+    fn piece_count(&self) -> usize {
+        1
+    }
+
+    fn split_element(&self, x: f32) -> [f32; 3] {
+        [self.grid.quantize(x), 0.0, 0.0]
+    }
+
+    fn process_kblock_pieces(
+        &self,
+        st: &mut TileState,
+        a: &PackedPieces,
+        b: &PackedPieces,
+        tm: usize,
+        tn: usize,
+        kb: usize,
+    ) {
+        for_each_inst_chunk(&a.p[0], &b.p[0], tm, tn, kb, |ac, bc, kc| {
             mma_tile_acc(&mut st.c, ac, bc, tm, tn, kc, self.mma);
         });
     }
@@ -215,13 +226,28 @@ impl KernelBackend for ClassicCorrectedBackend {
         }
     }
 
-    fn process_kblock(&self, st: &mut TileState, a: &[f32], b: &[f32], tm: usize, tn: usize, kb: usize) {
-        let (mut ah, mut al, mut bh, mut bl) = (Vec::new(), Vec::new(), Vec::new(), Vec::new());
-        split_panel(a, &mut ah, &mut al, |x| self.do_split(x));
-        split_panel(b, &mut bh, &mut bl, |x| self.do_split(x));
+    fn piece_count(&self) -> usize {
+        2
+    }
+
+    fn split_element(&self, x: f32) -> [f32; 3] {
+        let (h, l) = self.do_split(x);
+        [h, l, 0.0]
+    }
+
+    fn process_kblock_pieces(
+        &self,
+        st: &mut TileState,
+        a: &PackedPieces,
+        b: &PackedPieces,
+        tm: usize,
+        tn: usize,
+        kb: usize,
+    ) {
+        let (ah, al) = (&a.p[0], &a.p[1]);
+        let (bh, bl) = (&b.p[0], &b.p[1]);
         // Code 2 issue order: ΔA·ΔB, ΔA·B, A·ΔB, A·B — all into frag_c.
-        let terms: [(&[f32], &[f32]); 4] =
-            [(&al, &bl), (&al, &bh), (&ah, &bl), (&ah, &bh)];
+        let terms: [(&[f32], &[f32]); 4] = [(al, bl), (al, bh), (ah, bl), (ah, bh)];
         for (ta, tb) in terms {
             for_each_inst_chunk(ta, tb, tm, tn, kb, |ac, bc, kc| {
                 mma_tile_acc(&mut st.c, ac, bc, tm, tn, kc, self.mma);
@@ -311,19 +337,35 @@ impl KernelBackend for OursBackend {
         }
     }
 
-    fn process_kblock(&self, st: &mut TileState, a: &[f32], b: &[f32], tm: usize, tn: usize, kb: usize) {
-        let (mut ah, mut al, mut bh, mut bl) = (Vec::new(), Vec::new(), Vec::new(), Vec::new());
-        split_panel(a, &mut ah, &mut al, |x| self.do_split(x));
-        split_panel(b, &mut bh, &mut bl, |x| self.do_split(x));
+    fn piece_count(&self) -> usize {
+        2
+    }
+
+    fn split_element(&self, x: f32) -> [f32; 3] {
+        let (h, l) = self.do_split(x);
+        [h, l, 0.0]
+    }
+
+    fn process_kblock_pieces(
+        &self,
+        st: &mut TileState,
+        a: &PackedPieces,
+        b: &PackedPieces,
+        tm: usize,
+        tn: usize,
+        kb: usize,
+    ) {
+        let (ah, al) = (&a.p[0], &a.p[1]);
+        let (bh, bl) = (&b.p[0], &b.p[1]);
 
         // Correction terms: frag_dc += ΔA·B ; frag_dc += A·ΔB (inside TC).
-        for (ta, tb) in [(&al, &bh), (&ah, &bl)] {
+        for (ta, tb) in [(al, bh), (ah, bl)] {
             for_each_inst_chunk(ta, tb, tm, tn, kb, |ac, bc, kc| {
                 mma_tile_acc(&mut st.dc, ac, bc, tm, tn, kc, self.mma);
             });
         }
         if self.keep_delta2 {
-            for_each_inst_chunk(&al, &bl, tm, tn, kb, |ac, bc, kc| {
+            for_each_inst_chunk(al, bl, tm, tn, kb, |ac, bc, kc| {
                 mma_tile_acc(&mut st.dc2, ac, bc, tm, tn, kc, self.mma);
             });
         }
@@ -332,14 +374,14 @@ impl KernelBackend for OursBackend {
         if self.avoid_rz {
             // Zero-C MMA per instruction chunk; accumulate on the SIMT path.
             let mut tmp = vec![0.0f32; tm * tn];
-            for_each_inst_chunk(&ah, &bh, tm, tn, kb, |ac, bc, kc| {
+            for_each_inst_chunk(ah, bh, tm, tn, kb, |ac, bc, kc| {
                 mma_tile_zero_into(&mut tmp, ac, bc, tm, tn, kc, self.mma);
                 for (c, t) in st.c.iter_mut().zip(tmp.iter()) {
                     *c += *t; // FP32 RN add — the paper's Fig. 6 (right)
                 }
             });
         } else {
-            for_each_inst_chunk(&ah, &bh, tm, tn, kb, |ac, bc, kc| {
+            for_each_inst_chunk(ah, bh, tm, tn, kb, |ac, bc, kc| {
                 mma_tile_acc(&mut st.c, ac, bc, tm, tn, kc, self.mma);
             });
         }
@@ -397,44 +439,47 @@ impl Default for Bf16TripleBackend {
     }
 }
 
-fn split_panel3(src: &[f32], p0: &mut Vec<f32>, p1: &mut Vec<f32>, p2: &mut Vec<f32>) {
-    p0.clear();
-    p1.clear();
-    p2.clear();
-    for &x in src {
-        let (b0, b1, b2) = crate::fp::split_bf16_triple(x);
-        p0.push(b0);
-        p1.push(b1);
-        p2.push(b2);
-    }
-}
-
 impl KernelBackend for Bf16TripleBackend {
     fn name(&self) -> &'static str {
         "ours_bf16x3"
     }
 
-    fn process_kblock(&self, st: &mut TileState, a: &[f32], b: &[f32], tm: usize, tn: usize, kb: usize) {
-        let (mut a0, mut a1, mut a2) = (Vec::new(), Vec::new(), Vec::new());
-        let (mut b0, mut b1, mut b2) = (Vec::new(), Vec::new(), Vec::new());
-        split_panel3(a, &mut a0, &mut a1, &mut a2);
-        split_panel3(b, &mut b0, &mut b1, &mut b2);
+    fn piece_count(&self) -> usize {
+        3
+    }
+
+    fn split_element(&self, x: f32) -> [f32; 3] {
+        let (b0, b1, b2) = crate::fp::split_bf16_triple(x);
+        [b0, b1, b2]
+    }
+
+    fn process_kblock_pieces(
+        &self,
+        st: &mut TileState,
+        a: &PackedPieces,
+        b: &PackedPieces,
+        tm: usize,
+        tn: usize,
+        kb: usize,
+    ) {
+        let (a0, a1, a2) = (&a.p[0], &a.p[1], &a.p[2]);
+        let (b0, b1, b2) = (&b.p[0], &b.p[1], &b.p[2]);
 
         // Scale-2^-8 correction terms, accumulated in the (simulated) TC.
-        for (ta, tb) in [(&a0, &b1), (&a1, &b0)] {
+        for (ta, tb) in [(a0, b1), (a1, b0)] {
             for_each_inst_chunk(ta, tb, tm, tn, kb, |ac, bc, kc| {
                 mma_tile_acc(&mut st.dc, ac, bc, tm, tn, kc, self.mma);
             });
         }
         // Scale-2^-16 correction terms.
-        for (ta, tb) in [(&a1, &b1), (&a0, &b2), (&a2, &b0)] {
+        for (ta, tb) in [(a1, b1), (a0, b2), (a2, b0)] {
             for_each_inst_chunk(ta, tb, tm, tn, kb, |ac, bc, kc| {
                 mma_tile_acc(&mut st.dc2, ac, bc, tm, tn, kc, self.mma);
             });
         }
         // Main term with the RZ-avoidance pattern (zero C, RN outside).
         let mut tmp = vec![0.0f32; tm * tn];
-        for_each_inst_chunk(&a0, &b0, tm, tn, kb, |ac, bc, kc| {
+        for_each_inst_chunk(a0, b0, tm, tn, kb, |ac, bc, kc| {
             mma_tile_zero_into(&mut tmp, ac, bc, tm, tn, kc, self.mma);
             for (c, t) in st.c.iter_mut().zip(tmp.iter()) {
                 *c += *t;

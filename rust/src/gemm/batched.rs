@@ -1,13 +1,20 @@
 //! Batched GEMM — the `gemmStridedBatched`-shaped API downstream users
 //! expect (attention heads, blocked solvers, tensor contractions all issue
-//! many small same-shape GEMMs). Composes any [`Method`] and amortizes the
-//! split/conversion machinery across the batch; the coordinator's dynamic
-//! batcher produces exactly these shapes.
+//! many small same-shape GEMMs). Composes any [`Method`] through the
+//! two-stage split API: every **distinct** operand in the batch is
+//! decomposed exactly once (content-fingerprint dedup) and the prepared
+//! pieces are reused across elements, so a weight matrix shared by the
+//! whole batch — the attention/inference pattern — pays for its split
+//! once instead of `batch` times. The coordinator's dynamic batcher
+//! produces exactly these shapes and its `SplitCache` extends the same
+//! amortization across requests.
 
 use super::matrix::{Mat, MatF64};
+use super::prepared::{SplitDedup, SplitOperand};
 use super::reference::gemm_f64;
 use super::tiled::TileConfig;
 use super::Method;
+use std::sync::Arc;
 
 /// A batch of same-shape operand pairs stored contiguously
 /// (batch-major, each element row-major) — the strided-batched layout.
@@ -35,19 +42,51 @@ impl BatchedOperands {
         }
     }
 
-    /// Build from per-element matrices (validates shapes).
-    pub fn from_mats(pairs: &[(Mat, Mat)]) -> BatchedOperands {
-        assert!(!pairs.is_empty());
+    /// Build from per-element matrices, validating every shape: the batch
+    /// must be non-empty, every `A_i` must match `A_0`'s shape, every
+    /// `B_i`'s row count must equal `A_i`'s column count (the shared `k`),
+    /// and every `B_i` must match `B_0`'s column count.
+    pub fn try_from_mats(pairs: &[(Mat, Mat)]) -> Result<BatchedOperands, String> {
+        if pairs.is_empty() {
+            return Err("BatchedOperands: empty batch (need at least one (A, B) pair)".to_string());
+        }
         let (m, k) = (pairs[0].0.rows, pairs[0].0.cols);
         let n = pairs[0].1.cols;
+        for (i, (a, b)) in pairs.iter().enumerate() {
+            if (a.rows, a.cols) != (m, k) {
+                return Err(format!(
+                    "BatchedOperands: batch element {i} shape mismatch — A is {}x{}, expected {m}x{k}",
+                    a.rows, a.cols
+                ));
+            }
+            if b.rows != a.cols {
+                return Err(format!(
+                    "BatchedOperands: batch element {i} k mismatch — A has k={} columns but B has {} rows",
+                    a.cols, b.rows
+                ));
+            }
+            if b.cols != n {
+                return Err(format!(
+                    "BatchedOperands: batch element {i} shape mismatch — B is {}x{}, expected {k}x{n}",
+                    b.rows, b.cols
+                ));
+            }
+        }
         let mut out = BatchedOperands::new(pairs.len(), m, k, n);
         for (i, (a, b)) in pairs.iter().enumerate() {
-            assert_eq!((a.rows, a.cols), (m, k), "batch element {i} shape mismatch");
-            assert_eq!((b.rows, b.cols), (k, n), "batch element {i} shape mismatch");
             out.a[i * m * k..(i + 1) * m * k].copy_from_slice(&a.data);
             out.b[i * k * n..(i + 1) * k * n].copy_from_slice(&b.data);
         }
-        out
+        Ok(out)
+    }
+
+    /// Build from per-element matrices.
+    ///
+    /// # Panics
+    /// On an empty batch or any shape/k mismatch, with the message
+    /// [`try_from_mats`](BatchedOperands::try_from_mats) would return.
+    pub fn from_mats(pairs: &[(Mat, Mat)]) -> BatchedOperands {
+        BatchedOperands::try_from_mats(pairs).unwrap_or_else(|e| panic!("{e}"))
     }
 
     /// View batch element `i` as (A, B) matrices.
@@ -60,15 +99,35 @@ impl BatchedOperands {
     }
 }
 
-/// `C_i = A_i · B_i` for every batch element, on `method`. Output is
-/// batch-major contiguous (`batch * m * n`).
-pub fn gemm_batched(ops: &BatchedOperands, method: Method, cfg: &TileConfig) -> Vec<Mat> {
-    (0..ops.batch)
+/// Prepare one side of a batch, splitting each **distinct** operand once:
+/// elements with bit-identical content share the same prepared split.
+fn prepare_side(
+    batch: usize,
+    rows: usize,
+    cols: usize,
+    data: &[f32],
+    method: Method,
+) -> Vec<Arc<SplitOperand>> {
+    let stride = rows * cols;
+    let mut dedup = SplitDedup::new();
+    (0..batch)
         .map(|i| {
-            let (a, b) = ops.element(i);
-            method.run(&a, &b, cfg)
+            let sl = &data[i * stride..(i + 1) * stride];
+            dedup.get_or_prepare(rows, cols, sl, || {
+                Arc::new(method.prepare(&Mat::from_vec(rows, cols, sl.to_vec())))
+            })
         })
         .collect()
+}
+
+/// `C_i = A_i · B_i` for every batch element, on `method`, splitting each
+/// distinct operand exactly once. Bit-identical to running
+/// [`Method::run`] per element (the dedup only ever reuses splits of
+/// bit-identical operands, and `prepare` is deterministic).
+pub fn gemm_batched(ops: &BatchedOperands, method: Method, cfg: &TileConfig) -> Vec<Mat> {
+    let a_prep = prepare_side(ops.batch, ops.m, ops.k, &ops.a, method);
+    let b_prep = prepare_side(ops.batch, ops.k, ops.n, &ops.b, method);
+    (0..ops.batch).map(|i| method.run_prepared(&a_prep[i], &b_prep[i], cfg)).collect()
 }
 
 /// FP64 references for a whole batch (testing/auditing support).
@@ -131,6 +190,24 @@ mod tests {
     }
 
     #[test]
+    fn shared_weight_batch_splits_once_and_matches() {
+        // The attention/inference pattern: one weight B shared by every
+        // element. The dedup path must stay bit-identical per element.
+        let w = urand(16, 8, -1.0, 1.0, 77);
+        let pairs: Vec<(Mat, Mat)> =
+            (0..6).map(|i| (urand(8, 16, -1.0, 1.0, 200 + i), w.clone())).collect();
+        let ops = BatchedOperands::from_mats(&pairs);
+        let cfg = TileConfig::default();
+        for method in [Method::OursHalfHalf, Method::OursTf32, Method::OursHalfHalfPre] {
+            let cs = gemm_batched(&ops, method, &cfg);
+            for (i, (a, b)) in pairs.iter().enumerate() {
+                let direct = method.run(a, b, &cfg);
+                assert_eq!(cs[i].data, direct.data, "{} element {i} diverged", method.name());
+            }
+        }
+    }
+
+    #[test]
     fn batched_accuracy_audit() {
         let ops = batch(4, 16, 64, 16, 9);
         let cfg = TileConfig::default();
@@ -149,5 +226,23 @@ mod tests {
             (urand(4, 5, -1.0, 1.0, 3), urand(5, 4, -1.0, 1.0, 4)),
         ];
         BatchedOperands::from_mats(&pairs);
+    }
+
+    #[test]
+    fn empty_batch_is_a_clear_error() {
+        let err = BatchedOperands::try_from_mats(&[]).unwrap_err();
+        assert!(err.contains("empty batch"), "unhelpful error: {err}");
+    }
+
+    #[test]
+    fn k_mismatch_is_a_clear_error() {
+        // A_1 matches A_0's shape, but B_1's rows disagree with k.
+        let pairs = vec![
+            (urand(4, 6, -1.0, 1.0, 1), urand(6, 4, -1.0, 1.0, 2)),
+            (urand(4, 6, -1.0, 1.0, 3), urand(5, 4, -1.0, 1.0, 4)),
+        ];
+        let err = BatchedOperands::try_from_mats(&pairs).unwrap_err();
+        assert!(err.contains("k mismatch"), "unhelpful error: {err}");
+        assert!(err.contains("element 1"), "should name the element: {err}");
     }
 }

@@ -159,7 +159,8 @@ mod tests {
         let x = cmat(48, 2);
         let y = cmat(48, 3);
         let r = cgemm_f64(&x, &y);
-        let simt = c_relative_residual(&r, &cgemm(&x, &y, Method::Fp32Simt, CgemmAlgo::FourM, &cfg));
+        let simt =
+            c_relative_residual(&r, &cgemm(&x, &y, Method::Fp32Simt, CgemmAlgo::FourM, &cfg));
         for m in [Method::OursHalfHalf, Method::OursTf32] {
             for algo in [CgemmAlgo::FourM, CgemmAlgo::ThreeM] {
                 let e = c_relative_residual(&r, &cgemm(&x, &y, m, algo, &cfg));
@@ -174,8 +175,10 @@ mod tests {
         let x = cmat(32, 4);
         let y = cmat(32, 5);
         let r = cgemm_f64(&x, &y);
-        let e4 = c_relative_residual(&r, &cgemm(&x, &y, Method::OursHalfHalf, CgemmAlgo::FourM, &cfg));
-        let e3 = c_relative_residual(&r, &cgemm(&x, &y, Method::OursHalfHalf, CgemmAlgo::ThreeM, &cfg));
+        let e4 =
+            c_relative_residual(&r, &cgemm(&x, &y, Method::OursHalfHalf, CgemmAlgo::FourM, &cfg));
+        let e3 =
+            c_relative_residual(&r, &cgemm(&x, &y, Method::OursHalfHalf, CgemmAlgo::ThreeM, &cfg));
         // 3M's Im cancellation costs at most a small constant factor.
         assert!(e3 <= 4.0 * e4 + 1e-12, "3M {e3} vs 4M {e4}");
     }

@@ -7,6 +7,7 @@ pub mod complex;
 pub mod error;
 pub mod matrix;
 pub mod ozaki;
+pub mod prepared;
 pub mod reference;
 pub mod scaling;
 pub mod tiled;
@@ -18,11 +19,12 @@ pub use backends::{
 pub use batched::{batched_worst_residual, gemm_batched, gemm_batched_f64, BatchedOperands};
 pub use complex::{c_relative_residual, cgemm, cgemm_f64, CgemmAlgo, CMat, CMatF64};
 pub use ozaki::{ozaki_gemm, ozaki_terms, slice_bits, slices_for_fp32};
+pub use prepared::{bitwise_eq, content_fingerprint, gemm_tiled_prepared, SplitDedup, SplitOperand};
 pub use scaling::{apply_scale, descale_pow2, gemm_scaled, plan_scale, ScalePlan};
 pub use error::{max_rel_error, relative_residual};
 pub use matrix::{Mat, MatF64};
 pub use reference::{gemm_f32_naive, gemm_f64};
-pub use tiled::{gemm_tiled, KernelBackend, TileConfig, TileState, INST_K};
+pub use tiled::{gemm_tiled, KernelBackend, PackedPieces, TileConfig, TileState, INST_K};
 
 use crate::fp::truncate_f32_mantissa_lsb;
 
@@ -111,42 +113,75 @@ impl Method {
         })
     }
 
-    /// Instantiate the backend and run the tiled GEMM.
-    pub fn run(&self, a: &Mat, b: &Mat, cfg: &TileConfig) -> Mat {
+    /// Instantiate this method's numerics backend. Methods with an
+    /// elementwise pre-map on top of a backend (mantissa truncation,
+    /// exponent pre-scaling) apply it in [`prepare`](Method::prepare).
+    pub fn make_backend(&self) -> Box<dyn KernelBackend> {
         match self {
-            Method::Fp32Simt => gemm_tiled(a, b, cfg, &SimtBackend),
-            Method::Fp16Tc => gemm_tiled(a, b, cfg, &TcPlainBackend::f16()),
-            Method::Tf32Tc => gemm_tiled(a, b, cfg, &TcPlainBackend::tf32()),
-            Method::Markidis => gemm_tiled(a, b, cfg, &ClassicCorrectedBackend::markidis()),
-            Method::MarkidisMmaRn => gemm_tiled(
-                a,
-                b,
-                cfg,
-                &ClassicCorrectedBackend::markidis_with(crate::tcsim::MmaConfig::MMA_RN),
-            ),
-            Method::Feng => gemm_tiled(a, b, cfg, &ClassicCorrectedBackend::feng()),
-            Method::OursHalfHalf => gemm_tiled(a, b, cfg, &OursBackend::halfhalf()),
-            Method::OursTf32 => gemm_tiled(a, b, cfg, &OursBackend::tf32tf32()),
-            Method::OursNoRzAvoid => gemm_tiled(
-                a,
-                b,
-                cfg,
-                &OursBackend { avoid_rz: false, ..OursBackend::halfhalf() },
-            ),
-            Method::OursFourTerm => gemm_tiled(
-                a,
-                b,
-                cfg,
-                &OursBackend { keep_delta2: true, ..OursBackend::halfhalf() },
-            ),
-            Method::OursBf16Triple => gemm_tiled(a, b, cfg, &Bf16TripleBackend::new()),
-            Method::OursHalfHalfPre => scaling::gemm_scaled(a, b, Method::OursHalfHalf, cfg),
-            Method::Fp32TruncLsb => {
-                let at = a.map(|x| truncate_f32_mantissa_lsb(x, 1));
-                let bt = b.map(|x| truncate_f32_mantissa_lsb(x, 1));
-                gemm_tiled(&at, &bt, cfg, &SimtBackend)
+            Method::Fp32Simt | Method::Fp32TruncLsb => Box::new(SimtBackend),
+            Method::Fp16Tc => Box::new(TcPlainBackend::f16()),
+            Method::Tf32Tc => Box::new(TcPlainBackend::tf32()),
+            Method::Markidis => Box::new(ClassicCorrectedBackend::markidis()),
+            Method::MarkidisMmaRn => Box::new(ClassicCorrectedBackend::markidis_with(
+                crate::tcsim::MmaConfig::MMA_RN,
+            )),
+            Method::Feng => Box::new(ClassicCorrectedBackend::feng()),
+            Method::OursHalfHalf | Method::OursHalfHalfPre => Box::new(OursBackend::halfhalf()),
+            Method::OursTf32 => Box::new(OursBackend::tf32tf32()),
+            Method::OursNoRzAvoid => {
+                Box::new(OursBackend { avoid_rz: false, ..OursBackend::halfhalf() })
             }
+            Method::OursFourTerm => {
+                Box::new(OursBackend { keep_delta2: true, ..OursBackend::halfhalf() })
+            }
+            Method::OursBf16Triple => Box::new(Bf16TripleBackend::new()),
         }
+    }
+
+    /// Stage 1 of the two-stage API: decompose one operand into this
+    /// method's low-precision pieces (hi/lo f16 or tf32, quantized grid,
+    /// bf16 triple), applying any elementwise pre-map first — LSB
+    /// truncation for `fp32_trunc_lsb`, the exact exponent pre-scale for
+    /// `halfhalf_prescale`. The result can be reused across every GEMM
+    /// that consumes the same operand.
+    pub fn prepare(&self, m: &Mat) -> SplitOperand {
+        let backend = self.make_backend();
+        match self {
+            Method::Fp32TruncLsb => {
+                let t = m.map(|x| truncate_f32_mantissa_lsb(x, 1));
+                SplitOperand::build(*self, &t, backend.as_ref(), 0)
+            }
+            Method::OursHalfHalfPre => {
+                let p = scaling::plan_scale(m);
+                let s = scaling::apply_scale(m, p);
+                SplitOperand::build(*self, &s, backend.as_ref(), p.shift)
+            }
+            _ => SplitOperand::build(*self, m, backend.as_ref(), 0),
+        }
+    }
+
+    /// Stage 2: run the tiled GEMM over prepared operands. Bit-identical
+    /// to [`run`](Method::run) — property-tested in `rust/tests/prop.rs`.
+    pub fn run_prepared(&self, a: &SplitOperand, b: &SplitOperand, cfg: &TileConfig) -> Mat {
+        assert_eq!(a.method, *self, "operand A was prepared for {:?}", a.method);
+        assert_eq!(b.method, *self, "operand B was prepared for {:?}", b.method);
+        let backend = self.make_backend();
+        let c = prepared::gemm_tiled_prepared(a, b, cfg, backend.as_ref());
+        match self {
+            // Exact two-step descale epilogue — same factor sequence as
+            // `scaling::gemm_scaled`.
+            Method::OursHalfHalfPre => {
+                scaling::descale_pow2(&c, -(a.prescale_shift + b.prescale_shift))
+            }
+            _ => c,
+        }
+    }
+
+    /// Instantiate the backend and run the tiled GEMM: a thin compose of
+    /// [`prepare`](Method::prepare) and [`run_prepared`](Method::run_prepared).
+    pub fn run(&self, a: &Mat, b: &Mat, cfg: &TileConfig) -> Mat {
+        assert_eq!(a.cols, b.rows, "inner dimensions must agree");
+        self.run_prepared(&self.prepare(a), &self.prepare(b), cfg)
     }
 
     /// Tensor-Core low-precision GEMM term count (performance model input).
@@ -183,6 +218,32 @@ mod tests {
         assert!(err.contains("cutlass_typo"));
         for m in Method::ALL {
             assert!(err.contains(m.name()), "error must list {}", m.name());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "prepared for")]
+    fn run_prepared_rejects_mixed_methods() {
+        let a = Mat::from_fn(4, 4, |i, j| (i + 2 * j) as f32);
+        let pa = Method::OursHalfHalf.prepare(&a);
+        let pb = Method::Markidis.prepare(&a);
+        Method::OursHalfHalf.run_prepared(&pa, &pb, &TileConfig::default());
+    }
+
+    #[test]
+    fn prepared_operand_reusable_across_multiplies() {
+        // One weight-like A split once, multiplied against two different Bs:
+        // each product must be bit-identical to the one-shot run.
+        let cfg = TileConfig::default();
+        let a = Mat::from_fn(16, 24, |i, j| ((i * 24 + j) as f32).sin());
+        let b1 = Mat::from_fn(24, 8, |i, j| ((i * 8 + j) as f32).cos());
+        let b2 = Mat::from_fn(24, 8, |i, j| ((3 * i + j) as f32).sin());
+        for m in [Method::OursHalfHalf, Method::OursTf32, Method::OursHalfHalfPre] {
+            let pa = m.prepare(&a);
+            for b in [&b1, &b2] {
+                let via_prepared = m.run_prepared(&pa, &m.prepare(b), &cfg);
+                assert_eq!(via_prepared.data, m.run(&a, b, &cfg).data, "{}", m.name());
+            }
         }
     }
 

@@ -28,7 +28,7 @@ pub fn slice_bits(k: usize) -> u32 {
 
 /// Number of slices needed to cover FP32's 24-bit significand at width β.
 pub fn slices_for_fp32(beta: u32) -> usize {
-    ((24 + beta - 1) / beta) as usize
+    24u32.div_ceil(beta) as usize
 }
 
 /// Row- (or column-) scaled truncation slicing. Returns `s` matrices whose
@@ -88,7 +88,15 @@ pub fn ozaki_gemm(a: &Mat, b: &Mat, s: usize) -> Mat {
             // Slice values are on a coarse power-of-two grid: the TC GEMM
             // of a slice pair is exact (validated in tests), so a single
             // full-k MMA per pair suffices.
-            mma_tile_zero_into(&mut tile, &a_sl[p].data, &b_sl[q].data, m, n, k, MmaConfig::TENSOR_CORE);
+            mma_tile_zero_into(
+                &mut tile,
+                &a_sl[p].data,
+                &b_sl[q].data,
+                m,
+                n,
+                k,
+                MmaConfig::TENSOR_CORE,
+            );
             for (dst, &t) in acc.iter_mut().zip(tile.iter()) {
                 *dst += t as f64; // exact: f64 accumulation across terms
             }

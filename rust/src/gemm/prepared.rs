@@ -1,0 +1,334 @@
+//! The two-stage split API: decompose an operand **once**, multiply it
+//! many times.
+//!
+//! Every backend's operand decomposition (FP16/TF32 hi+lo with the ×2^11
+//! residual scale, plain quantization, the bf16 triple) is a pure
+//! elementwise map, so it commutes with panel packing: splitting a whole
+//! operand up front and packing piece sub-panels produces bit-identical
+//! panels to packing the raw panel and splitting it inside every k-block.
+//! [`gemm_tiled_prepared`] exploits that to run the exact tiled engine loop
+//! of [`gemm_tiled`](super::tiled::gemm_tiled) over pre-split operands —
+//! the amortization the paper's throughput model assumes (splits are O(n²)
+//! against the GEMM's O(n³), but they dominate small batched kernels).
+//!
+//! Entry points: [`Method::prepare`](super::Method::prepare) →
+//! [`SplitOperand`], consumed by
+//! [`Method::run_prepared`](super::Method::run_prepared); the batched
+//! engine (`gemm::batched`) and the coordinator's `SplitCache` reuse
+//! prepared operands across batch elements and requests.
+
+use super::matrix::Mat;
+use super::tiled::{KernelBackend, PackedPieces, TileConfig, TileState};
+use super::Method;
+
+/// A fully prepared (split/quantized/pre-scaled) GEMM operand: the piece
+/// matrices a backend multiplies, plus the exponent pre-scale the
+/// `halfhalf_prescale` method applies before splitting.
+#[derive(Debug, Clone)]
+pub struct SplitOperand {
+    /// The method this operand was prepared for — `run_prepared` refuses a
+    /// mixed pairing.
+    pub method: Method,
+    pub rows: usize,
+    pub cols: usize,
+    /// `2^shift` applied to the operand before splitting
+    /// (`halfhalf_prescale` only; 0 elsewhere). The epilogue descales by
+    /// the sum of both operands' shifts.
+    pub prescale_shift: i32,
+    /// Backend piece matrices (1–3), each the operand's shape.
+    pieces: Vec<Mat>,
+}
+
+impl SplitOperand {
+    /// Split `m` elementwise with `backend`'s decomposition.
+    pub(crate) fn build(
+        method: Method,
+        m: &Mat,
+        backend: &dyn KernelBackend,
+        prescale_shift: i32,
+    ) -> SplitOperand {
+        let n = backend.piece_count();
+        let mut datas: Vec<Vec<f32>> = (0..n).map(|_| Vec::with_capacity(m.data.len())).collect();
+        for &x in &m.data {
+            let e = backend.split_element(x);
+            for (i, d) in datas.iter_mut().enumerate() {
+                d.push(e[i]);
+            }
+        }
+        SplitOperand {
+            method,
+            rows: m.rows,
+            cols: m.cols,
+            prescale_shift,
+            pieces: datas.into_iter().map(|d| Mat::from_vec(m.rows, m.cols, d)).collect(),
+        }
+    }
+
+    pub fn n_pieces(&self) -> usize {
+        self.pieces.len()
+    }
+
+    pub fn pieces(&self) -> &[Mat] {
+        &self.pieces
+    }
+
+    /// Bytes held by the piece matrices (cache accounting).
+    pub fn piece_bytes(&self) -> usize {
+        self.pieces.len() * self.rows * self.cols * std::mem::size_of::<f32>()
+    }
+}
+
+/// 128-bit content fingerprint of an f32 buffer (two independent FNV-style
+/// streams over the raw bit patterns, length folded in). Used as a
+/// dedup/cache key; callers must still verify bit equality on a match —
+/// see [`bitwise_eq`] and the coordinator's `SplitCache`.
+pub fn content_fingerprint(data: &[f32]) -> u128 {
+    let mut h1: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut h2: u64 = 0x9e37_79b9_7f4a_7c15;
+    for &x in data {
+        let b = x.to_bits() as u64;
+        h1 = (h1 ^ b).wrapping_mul(0x0000_0100_0000_01b3);
+        h2 = (h2 ^ b.rotate_left(17)).wrapping_mul(0xc2b2_ae3d_27d4_eb4f);
+    }
+    h1 = (h1 ^ data.len() as u64).wrapping_mul(0x0000_0100_0000_01b3);
+    ((h1 as u128) << 64) | h2 as u128
+}
+
+/// Bit-pattern equality of two f32 buffers (NaN == NaN, 0.0 != -0.0 —
+/// the identity the split machinery actually depends on).
+pub fn bitwise_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+struct DedupEntry<'a> {
+    fingerprint: u128,
+    rows: usize,
+    cols: usize,
+    data: &'a [f32],
+    prepared: std::sync::Arc<SplitOperand>,
+}
+
+/// First-seen dedup table over operand content: fingerprint + shape
+/// pre-filter, exact bitwise verify on candidate matches, so bit-identical
+/// operands share one prepared split and a fingerprint collision can only
+/// cost an extra prepare, never a wrong reuse. Shared by the batched
+/// engine (`gemm::batched`) and the coordinator's batch executor.
+#[derive(Default)]
+pub struct SplitDedup<'a> {
+    seen: Vec<DedupEntry<'a>>,
+}
+
+impl<'a> SplitDedup<'a> {
+    pub fn new() -> SplitDedup<'a> {
+        SplitDedup { seen: Vec::new() }
+    }
+
+    /// Return the split of the `rows × cols` operand stored in `data`,
+    /// calling `prepare` only on this content's first occurrence.
+    pub fn get_or_prepare(
+        &mut self,
+        rows: usize,
+        cols: usize,
+        data: &'a [f32],
+        prepare: impl FnOnce() -> std::sync::Arc<SplitOperand>,
+    ) -> std::sync::Arc<SplitOperand> {
+        let fingerprint = content_fingerprint(data);
+        for e in &self.seen {
+            if e.fingerprint == fingerprint
+                && (e.rows, e.cols) == (rows, cols)
+                && bitwise_eq(e.data, data)
+            {
+                return std::sync::Arc::clone(&e.prepared);
+            }
+        }
+        let prepared = prepare();
+        self.seen.push(DedupEntry {
+            fingerprint,
+            rows,
+            cols,
+            data,
+            prepared: std::sync::Arc::clone(&prepared),
+        });
+        prepared
+    }
+}
+
+/// Run the blocked GEMM `C = A·B` over **pre-split** operands. Bit-identical
+/// to `gemm_tiled(a, b, cfg, backend)` on the raw operands: the loop nest,
+/// panel packing, k-slice accumulators and epilogue are the same; only the
+/// (elementwise, position-independent) split has been hoisted out.
+pub fn gemm_tiled_prepared(
+    pa: &SplitOperand,
+    pb: &SplitOperand,
+    cfg: &TileConfig,
+    backend: &dyn KernelBackend,
+) -> Mat {
+    assert_eq!(pa.cols, pb.rows, "inner dimensions must agree");
+    let np = backend.piece_count();
+    assert_eq!(pa.n_pieces(), np, "operand A was prepared for a different backend");
+    assert_eq!(pb.n_pieces(), np, "operand B was prepared for a different backend");
+    let (m, k, n) = (pa.rows, pa.cols, pb.cols);
+    let mut c = Mat::zeros(m, n);
+    let n_slices = cfg.k_slices();
+
+    let mut a_panels = PackedPieces::default();
+    let mut b_panels = PackedPieces::default();
+    a_panels.n_pieces = np;
+    b_panels.n_pieces = np;
+
+    let mut i0 = 0;
+    while i0 < m {
+        let tm = cfg.bm.min(m - i0);
+        let mut j0 = 0;
+        while j0 < n {
+            let tn = cfg.bn.min(n - j0);
+            let mut states: Vec<TileState> =
+                (0..n_slices).map(|_| TileState::new(tm * tn)).collect();
+            let mut k0 = 0;
+            while k0 < k {
+                let kb_total = cfg.bk.min(k - k0);
+                // Partition the k-block across warp-k slices.
+                let mut s = 0;
+                let mut ks = 0;
+                while ks < kb_total {
+                    let kb = cfg.wk.min(kb_total - ks);
+                    for piece in 0..np {
+                        pa.pieces[piece].copy_sub_into(i0, k0 + ks, tm, kb, &mut a_panels.p[piece]);
+                        pb.pieces[piece].copy_sub_into(k0 + ks, j0, kb, tn, &mut b_panels.p[piece]);
+                    }
+                    backend.process_kblock_pieces(&mut states[s], &a_panels, &b_panels, tm, tn, kb);
+                    s += 1;
+                    ks += kb;
+                }
+                k0 += kb_total;
+            }
+            // Epilogue: finalize each slice, reduce in FP32 (RN adds).
+            let mut tile = vec![0.0f32; tm * tn];
+            for st in states.drain(..) {
+                let out = backend.finalize(st, tm, tn);
+                for (t, o) in tile.iter_mut().zip(out.iter()) {
+                    *t += *o;
+                }
+            }
+            c.write_sub(i0, j0, tm, tn, &tile);
+            j0 += tn;
+        }
+        i0 += tm;
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::backends::{
+        Bf16TripleBackend, ClassicCorrectedBackend, OursBackend, SimtBackend, TcPlainBackend,
+    };
+    use crate::gemm::tiled::gemm_tiled;
+
+    fn rand_mat(rows: usize, cols: usize, seed: u64) -> Mat {
+        let mut s = seed | 1;
+        Mat::from_fn(rows, cols, |_, _| {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            ((s >> 11) as f64 / (1u64 << 53) as f64 * 2.0 - 1.0) as f32
+        })
+    }
+
+    /// The load-bearing invariant of the whole prepared path: the per-panel
+    /// splitting engine and the split-once engine are bit-identical for
+    /// every backend (including ablation variants), across ragged shapes
+    /// and tile configs.
+    #[test]
+    fn prepared_engine_bit_identical_to_panel_split_engine() {
+        let backends: Vec<Box<dyn KernelBackend>> = vec![
+            Box::new(SimtBackend),
+            Box::new(TcPlainBackend::f16()),
+            Box::new(TcPlainBackend::tf32()),
+            Box::new(ClassicCorrectedBackend::markidis()),
+            Box::new(ClassicCorrectedBackend::feng()),
+            Box::new(OursBackend::halfhalf()),
+            Box::new(OursBackend::tf32tf32()),
+            Box::new(OursBackend { avoid_rz: false, ..OursBackend::halfhalf() }),
+            Box::new(OursBackend { keep_delta2: true, ..OursBackend::halfhalf() }),
+            Box::new(Bf16TripleBackend::new()),
+        ];
+        let shapes = [(37usize, 53usize, 29usize), (8, 90, 16), (64, 64, 64)];
+        let cfgs = [
+            TileConfig::default(),
+            TileConfig { bm: 16, bn: 16, bk: 16, wm: 16, wn: 16, wk: 8, stages: 3 },
+        ];
+        for (bi, be) in backends.iter().enumerate() {
+            for &(m, k, n) in &shapes {
+                let a = rand_mat(m, k, 11 + bi as u64);
+                let b = rand_mat(k, n, 97 + bi as u64);
+                // `method` tag is irrelevant at this level; use any.
+                let pa = SplitOperand::build(Method::Fp32Simt, &a, be.as_ref(), 0);
+                let pb = SplitOperand::build(Method::Fp32Simt, &b, be.as_ref(), 0);
+                for cfg in &cfgs {
+                    let direct = gemm_tiled(&a, &b, cfg, be.as_ref());
+                    let prepared = gemm_tiled_prepared(&pa, &pb, cfg, be.as_ref());
+                    assert_eq!(
+                        direct.data,
+                        prepared.data,
+                        "{}: prepared path diverged at {m}x{k}x{n} (cfg {cfg:?})",
+                        be.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn piece_shapes_match_backend() {
+        let m = rand_mat(5, 7, 3);
+        let two = SplitOperand::build(Method::OursHalfHalf, &m, &OursBackend::halfhalf(), 0);
+        assert_eq!(two.n_pieces(), 2);
+        let three = SplitOperand::build(Method::OursBf16Triple, &m, &Bf16TripleBackend::new(), 0);
+        assert_eq!(three.n_pieces(), 3);
+        for p in three.pieces() {
+            assert_eq!((p.rows, p.cols), (5, 7));
+        }
+        assert_eq!(three.piece_bytes(), 3 * 5 * 7 * 4);
+    }
+
+    #[test]
+    fn fingerprint_separates_content() {
+        let a = rand_mat(8, 8, 5);
+        let mut b = a.clone();
+        assert_eq!(content_fingerprint(&a.data), content_fingerprint(&b.data));
+        assert!(bitwise_eq(&a.data, &b.data));
+        // A single flipped LSB must change the fingerprint.
+        b.data[17] = f32::from_bits(b.data[17].to_bits() ^ 1);
+        assert_ne!(content_fingerprint(&a.data), content_fingerprint(&b.data));
+        assert!(!bitwise_eq(&a.data, &b.data));
+        // Length-sensitive: a prefix is not the whole.
+        assert_ne!(content_fingerprint(&a.data[..32]), content_fingerprint(&a.data));
+    }
+
+    #[test]
+    fn bitwise_eq_is_bit_level() {
+        assert!(bitwise_eq(&[f32::NAN], &[f32::NAN]));
+        assert!(!bitwise_eq(&[0.0], &[-0.0]));
+        assert!(!bitwise_eq(&[1.0], &[1.0, 2.0]));
+    }
+
+    #[test]
+    fn split_dedup_reuses_identical_content_only() {
+        use std::sync::Arc;
+        let a = rand_mat(6, 6, 9);
+        let twin = a.clone();
+        let distinct = rand_mat(6, 6, 10);
+        let mut dedup = SplitDedup::new();
+        let p1 =
+            dedup.get_or_prepare(6, 6, &a.data, || Arc::new(Method::OursHalfHalf.prepare(&a)));
+        // Bit-identical content must NOT call prepare again.
+        let p2 = dedup.get_or_prepare(6, 6, &twin.data, || panic!("must reuse the first split"));
+        assert!(Arc::ptr_eq(&p1, &p2));
+        let p3 = dedup.get_or_prepare(6, 6, &distinct.data, || {
+            Arc::new(Method::OursHalfHalf.prepare(&distinct))
+        });
+        assert!(!Arc::ptr_eq(&p1, &p3));
+    }
+}

@@ -38,15 +38,13 @@ impl Default for TileConfig {
 impl TileConfig {
     /// Number of independent k-slices per k-block (split-k within a tile).
     pub fn k_slices(&self) -> usize {
-        (self.bk + self.wk - 1) / self.wk
+        self.bk.div_ceil(self.wk)
     }
 
     /// Warps per threadblock (used by the performance model and the
     /// autotuner's occupancy filter).
     pub fn warps(&self) -> usize {
-        ((self.bm + self.wm - 1) / self.wm)
-            * ((self.bn + self.wn - 1) / self.wn)
-            * self.k_slices()
+        self.bm.div_ceil(self.wm) * self.bn.div_ceil(self.wn) * self.k_slices()
     }
 
     /// Shared-memory footprint in bytes for FP16 operands (A and B panels,
@@ -80,12 +78,68 @@ impl TileState {
     }
 }
 
+/// Packed low-precision pieces of one operand panel — what every backend
+/// actually multiplies. Piece meaning is backend-defined: `[value]` for
+/// FP32 SIMT, `[quantized]` for plain Tensor-Core, `[hi, lo]` for the
+/// split-correction methods, `[b0, b1, b2]` for the bf16 triple. Each
+/// piece panel has the same packed row-major layout as the raw panel.
+#[derive(Debug, Default, Clone)]
+pub struct PackedPieces {
+    pub n_pieces: usize,
+    pub p: [Vec<f32>; 3],
+}
+
+impl PackedPieces {
+    /// Decompose a packed raw panel elementwise into piece panels.
+    pub fn split_from(&mut self, src: &[f32], n_pieces: usize, f: impl Fn(f32) -> [f32; 3]) {
+        self.n_pieces = n_pieces;
+        for p in self.p.iter_mut() {
+            p.clear();
+        }
+        for &x in src {
+            let e = f(x);
+            for i in 0..n_pieces {
+                self.p[i].push(e[i]);
+            }
+        }
+    }
+}
+
 /// The numerics of one GEMM method, plugged into the tiled engine.
+///
+/// The split/quantize step is exposed separately from the multiply step so
+/// an operand can be decomposed **once** and reused across many GEMMs (the
+/// two-stage `Method::prepare` / `Method::run_prepared` API, the batched
+/// engine, and the coordinator's `SplitCache` all build on this). Every
+/// decomposition is a pure elementwise map, so splitting a whole operand
+/// up front and packing piece panels yields bit-identical panels to
+/// packing the raw panel and splitting it per k-block.
 pub trait KernelBackend: Sync {
     fn name(&self) -> &'static str;
 
+    /// How many piece panels this backend's decomposition produces (1–3).
+    fn piece_count(&self) -> usize;
+
+    /// Elementwise decomposition of one operand value into this backend's
+    /// low-precision pieces; entries past [`piece_count`](Self::piece_count)
+    /// are unused and must be 0.
+    fn split_element(&self, x: f32) -> [f32; 3];
+
+    /// Fold one k-block given pre-split packed piece panels (`a`: tm×kb,
+    /// `b`: kb×tn per piece) into the tile state.
+    fn process_kblock_pieces(
+        &self,
+        st: &mut TileState,
+        a: &PackedPieces,
+        b: &PackedPieces,
+        tm: usize,
+        tn: usize,
+        kb: usize,
+    );
+
     /// Fold one packed k-block (`a`: tm×kb, `b`: kb×tn, row-major f32
-    /// *original* data) into the tile state.
+    /// *original* data) into the tile state: split the panels with
+    /// [`split_element`](Self::split_element), then multiply the pieces.
     fn process_kblock(
         &self,
         st: &mut TileState,
@@ -94,7 +148,14 @@ pub trait KernelBackend: Sync {
         tm: usize,
         tn: usize,
         kb: usize,
-    );
+    ) {
+        let n = self.piece_count();
+        let mut pa = PackedPieces::default();
+        let mut pb = PackedPieces::default();
+        pa.split_from(a, n, |x| self.split_element(x));
+        pb.split_from(b, n, |x| self.split_element(x));
+        self.process_kblock_pieces(st, &pa, &pb, tm, tn, kb);
+    }
 
     /// Tile epilogue for one k-slice: produce the slice's FP32 output tile.
     fn finalize(&self, st: TileState, tm: usize, tn: usize) -> Vec<f32>;

@@ -7,14 +7,21 @@
 //! Layer map (see DESIGN.md):
 //! * [`fp`], [`tcsim`], [`gemm`] — the bit-exact numerical substrate: split
 //!   schemes, the software Tensor Core, and every GEMM method the paper
-//!   evaluates (Table 4 + ablations).
+//!   evaluates (Table 4 + ablations). Methods expose a two-stage form —
+//!   [`gemm::Method::prepare`] splits an operand once into a
+//!   [`gemm::SplitOperand`], [`gemm::Method::run_prepared`] multiplies the
+//!   pieces — which the batched engine (`gemm::batched`) and the
+//!   coordinator's split cache amortize across batches and requests
+//!   (DESIGN.md §8).
 //! * [`matgen`], [`analysis`] — workload generators (eq. 25, STARS-H-like)
 //!   and the paper's theory (Tables 1–2, Fig. 8, Fig. 9).
 //! * [`perfmodel`], [`autotune`] — the GPU throughput/power/roofline
 //!   projection model (Figs 2/14/15/16, Table 5) and the CUTLASS parameter
 //!   tuner (Table 3).
 //! * [`coordinator`], [`runtime`] — the serving layer: a GEMM service that
-//!   routes requests by precision policy and executes AOT-compiled Pallas
+//!   routes requests by precision policy, batches same-shape work with
+//!   deadline-driven linger flushing, caches operand splits
+//!   ([`coordinator::SplitCache`]) and executes AOT-compiled Pallas
 //!   artifacts through PJRT.
 //! * [`shard`] — the sharded execution engine between the router and the
 //!   executors: a partition planner (perfmodel/autotune-sized, error-bound

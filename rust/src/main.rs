@@ -4,7 +4,7 @@
 use std::sync::Arc;
 use tcec::bench_util::Table;
 use tcec::cli::Args;
-use tcec::coordinator::{GemmService, Policy, ServiceConfig, SimExecutor};
+use tcec::coordinator::{GemmService, Policy, ServiceConfig, SimExecutor, SplitCache};
 use tcec::experiments;
 use tcec::gemm::{gemm_f64, relative_residual, Method, TileConfig};
 use tcec::matgen::Workload;
@@ -19,7 +19,7 @@ USAGE:
   tcec gemm      [--method M] [--m N --n N --k N] [--workload W] [--seeds S] [--prescale]
   tcec shard     [--method M] [--m N --n N --k N] [--workers W] [--kslices S] [--threshold F]
   tcec serve     [--requests N] [--size N] [--workers W] [--batch B] [--artifacts DIR]
-                 [--shard] [--shard-workers W]
+                 [--shard] [--shard-workers W] [--split-cache N]
   tcec experiment <fig1|fig4|fig5|fig8|fig9|fig11|fig13|fig14|fig15|fig16|table1_2|table3|table6>
   tcec artifacts [--dir DIR]
   tcec analyze   [--exponent E] [--k N]
@@ -171,12 +171,21 @@ fn cmd_serve(args: &Args) {
         ..ServiceConfig::default()
     };
     let svc = if let Some(dir) = args.str_flag("artifacts") {
+        if args.usize_flag("split-cache", 0) > 0 {
+            eprintln!("warning: --split-cache applies only to the simulator path; ignored");
+        }
         let handle = PjrtHandle::spawn();
         let reg = ArtifactRegistry::scan(dir, handle).expect("scan artifacts");
         println!("artifacts: {:?}", reg.names());
         GemmService::start(Arc::new(PjrtExecutor::new(reg)), cfg)
     } else {
-        GemmService::start(Arc::new(SimExecutor::new()), cfg)
+        // `--split-cache N` caches operand splits across requests (N
+        // entries, LRU) — see DESIGN.md §8.
+        let exec = match args.usize_flag("split-cache", 0) {
+            0 => SimExecutor::new(),
+            cap => SimExecutor::with_cache(Arc::new(SplitCache::new(cap))),
+        };
+        GemmService::start(Arc::new(exec), cfg)
     };
     let t0 = std::time::Instant::now();
     let rxs: Vec<_> = (0..requests)
@@ -212,6 +221,12 @@ fn cmd_serve(args: &Args) {
             snap.shard_steals,
             snap.reduction_depth_max,
             snap.shard_fallbacks
+        );
+    }
+    if snap.split_cache_hits + snap.split_cache_misses > 0 {
+        println!(
+            "split cache    : {} hits / {} misses ({} entries)",
+            snap.split_cache_hits, snap.split_cache_misses, snap.split_cache_entries
         );
     }
     for (name, count) in snap.per_method {
@@ -313,8 +328,16 @@ fn cmd_analyze(args: &Args) {
         .unwrap_or(0);
     let k = args.usize_flag("k", 1024);
     println!("-- mantissa kept by hi/lo splits (Tables 1-2) --");
-    println!("E[len] RN split : {:.3} (theory {})", analysis::expected_len(analysis::SplitKind::Rn, 200_000, 1), analysis::THEORY_RN);
-    println!("E[len] RZ split : {:.3} (theory {})", analysis::expected_len(analysis::SplitKind::Rz, 200_000, 2), analysis::THEORY_RZ);
+    println!(
+        "E[len] RN split : {:.3} (theory {})",
+        analysis::expected_len(analysis::SplitKind::Rn, 200_000, 1),
+        analysis::THEORY_RN
+    );
+    println!(
+        "E[len] RZ split : {:.3} (theory {})",
+        analysis::expected_len(analysis::SplitKind::Rz, 200_000, 2),
+        analysis::THEORY_RZ
+    );
     println!("-- residual underflow at e_v = {e_v} (Fig. 8) --");
     let (m_ugu, m_u) = analysis::measure(e_v, 200_000, 3);
     let (s_ugu, _) = analysis::measure_scaled(e_v, 200_000, 4);
@@ -322,8 +345,14 @@ fn cmd_analyze(args: &Args) {
     println!("P_u    theory {:.4e}  measured {m_u:.4e}", analysis::p_underflow(e_v));
     println!("P_u+gu with x2^11 scaling (eq. 18): {s_ugu:.4e}");
     println!("-- error growth at k = {k} (analysis::error_bound) --");
-    println!("predicted FP32/ours residual (RN, ~0.4*sqrt(k)*u) : {:.3e}", analysis::predicted_rn(k));
-    println!("predicted Markidis residual  (RZ, ~0.5*k*u_acc)   : {:.3e}", analysis::predicted_rz(k));
+    println!(
+        "predicted FP32/ours residual (RN, ~0.4*sqrt(k)*u) : {:.3e}",
+        analysis::predicted_rn(k)
+    );
+    println!(
+        "predicted Markidis residual  (RZ, ~0.5*k*u_acc)   : {:.3e}",
+        analysis::predicted_rz(k)
+    );
 }
 
 fn main() {

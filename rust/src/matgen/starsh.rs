@@ -22,7 +22,7 @@ use crate::gemm::Mat;
 /// exponents fall off geometrically like real TLR test matrices.
 pub fn randtlr(n: usize, tile: usize, rank: usize, decay: f64, seed: u64) -> Mat {
     let mut rng = Rng::new(seed);
-    let nb = (n + tile - 1) / tile;
+    let nb = n.div_ceil(tile);
     // Per-block-row/column random factors, shared across a row/col of tiles
     // (this is what makes the matrix globally low-rank-structured).
     let mut u = vec![0.0f64; n * rank];
@@ -119,7 +119,8 @@ mod tests {
     #[test]
     fn cauchy_has_wide_exponent_spread() {
         let m = cauchy(128, 1);
-        let exps: Vec<i32> = m.data.iter().filter(|v| **v != 0.0).map(|&v| exponent_of(v)).collect();
+        let exps: Vec<i32> =
+            m.data.iter().filter(|v| **v != 0.0).map(|&v| exponent_of(v)).collect();
         let min = *exps.iter().min().unwrap();
         let max = *exps.iter().max().unwrap();
         assert!(max - min >= 6, "spread {min}..{max}");

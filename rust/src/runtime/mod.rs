@@ -345,6 +345,10 @@ impl Executor for PjrtExecutor {
     fn name(&self) -> &'static str {
         "pjrt+sim"
     }
+
+    fn split_cache(&self) -> Option<std::sync::Arc<crate::coordinator::SplitCache>> {
+        self.fallback.split_cache()
+    }
 }
 
 #[cfg(test)]

@@ -278,6 +278,10 @@ impl Executor for ShardedExecutor {
     fn name(&self) -> &'static str {
         "sharded"
     }
+
+    fn split_cache(&self) -> Option<Arc<crate::coordinator::SplitCache>> {
+        self.inner.split_cache()
+    }
 }
 
 #[cfg(test)]

@@ -142,7 +142,7 @@ pub fn max_accuracy_preserving_kslices(method: Method, k: usize) -> usize {
 /// extent `len`) into `parts` contiguous groups; returns `(start, len)`
 /// element ranges. The last group absorbs the ragged edge.
 fn cut_dimension(len: usize, bs: usize, parts: usize) -> Vec<Cut> {
-    let blocks = (len + bs - 1) / bs;
+    let blocks = len.div_ceil(bs);
     let parts = parts.clamp(1, blocks.max(1));
     let mut cuts = Vec::with_capacity(parts);
     for g in 0..parts {
@@ -185,8 +185,8 @@ pub fn plan(m: usize, n: usize, k: usize, method: Method, cfg: &ShardConfig) -> 
     }
     let bm = cfg.engine_tile.bm;
     let bn = cfg.engine_tile.bn;
-    let row_blocks = (m + bm - 1) / bm;
-    let col_blocks = (n + bn - 1) / bn;
+    let row_blocks = m.div_ceil(bm);
+    let col_blocks = n.div_ceil(bn);
     let target = (cfg.workers.max(1) * cfg.shards_per_worker.max(1)).max(1);
 
     // Grow the output grid toward the target one split at a time, letting
@@ -216,8 +216,8 @@ pub fn plan(m: usize, n: usize, k: usize, method: Method, cfg: &ShardConfig) -> 
     // only within the accuracy gate.
     let mut kslices = 1usize;
     if p * q < target && cfg.engine_tile.k_slices() == 1 && k > cfg.engine_tile.bk {
-        let want = (target + p * q - 1) / (p * q);
-        let kblocks = (k + cfg.engine_tile.bk - 1) / cfg.engine_tile.bk;
+        let want = target.div_ceil(p * q);
+        let kblocks = k.div_ceil(cfg.engine_tile.bk);
         kslices = want
             .min(cfg.max_kslices)
             .min(kblocks)

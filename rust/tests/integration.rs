@@ -3,7 +3,7 @@
 //! coordinator), at sizes large enough to be meaningful.
 
 use std::sync::Arc;
-use tcec::coordinator::{GemmService, Policy, ServiceConfig, SimExecutor};
+use tcec::coordinator::{GemmService, Policy, ServiceConfig, SimExecutor, SplitCache};
 use tcec::experiments;
 use tcec::gemm::{gemm_f64, relative_residual, Method, TileConfig};
 use tcec::matgen::{urand, Workload};
@@ -109,7 +109,9 @@ fn service_mixed_load_audit() {
     let mut pending = Vec::new();
     for i in 0..24u64 {
         let (wl, policy, expect): (Workload, Policy, Method) = match i % 4 {
-            0 => (Workload::Urand { lo: -1.0, hi: 1.0 }, Policy::Fp32Accuracy, Method::OursHalfHalf),
+            0 => {
+                (Workload::Urand { lo: -1.0, hi: 1.0 }, Policy::Fp32Accuracy, Method::OursHalfHalf)
+            }
             1 => (Workload::ExpRand { a: -100, b: -36 }, Policy::Fp32Accuracy, Method::OursTf32),
             2 => (Workload::Urand { lo: -1.0, hi: 1.0 }, Policy::StrictFp32, Method::Fp32Simt),
             _ => (Workload::Urand { lo: -1.0, hi: 1.0 }, Policy::LowPrecisionOk, Method::Fp16Tc),
@@ -176,6 +178,45 @@ fn service_sharded_path_metrics_and_correctness() {
     assert_eq!(snap.reduction_depth_max, plan.reduction_depth() as u64);
     assert_eq!(snap.shard_fallbacks, 0);
     assert_eq!(snap.completed, 2);
+    svc.shutdown();
+}
+
+/// The SplitCache across requests: a weight matrix submitted with every
+/// request is split exactly once; each distinct activation is a miss.
+/// Results stay bit-identical to direct runs, and the hit/miss counters
+/// surface in the service metrics.
+#[test]
+fn split_cache_amortizes_repeated_weights() {
+    let cache = Arc::new(SplitCache::new(16));
+    let svc = GemmService::start(
+        Arc::new(SimExecutor::with_cache(Arc::clone(&cache))),
+        ServiceConfig {
+            workers: 1,
+            max_batch: 2,
+            force_method: Some(Method::OursHalfHalf),
+            ..ServiceConfig::default()
+        },
+    );
+    let cfg = TileConfig::default();
+    let w = urand(32, 32, -1.0, 1.0, 42); // the weight everyone multiplies by
+    let n_req = 6u64;
+    for i in 0..n_req {
+        let a = urand(32, 32, -1.0, 1.0, 100 + i);
+        // gemm_blocking serializes the requests, so every batch has size 1
+        // and the counters below are deterministic.
+        let resp = svc.gemm_blocking(a.clone(), w.clone(), Policy::Fp32Accuracy);
+        assert_eq!(resp.method, Method::OursHalfHalf);
+        let direct = Method::OursHalfHalf.run(&a, &w, &cfg);
+        assert_eq!(resp.c.data, direct.data, "request {i}: cached split changed bits");
+    }
+    let snap = svc.metrics().snapshot();
+    // The weight misses once then hits on every later request; each
+    // distinct activation is one miss.
+    assert_eq!(snap.split_cache_hits, n_req - 1, "snapshot: {snap:?}");
+    assert_eq!(snap.split_cache_misses, n_req + 1, "snapshot: {snap:?}");
+    assert_eq!(snap.split_cache_entries, n_req + 1);
+    assert_eq!(snap.completed, n_req);
+    assert_eq!(cache.hits(), n_req - 1);
     svc.shutdown();
 }
 

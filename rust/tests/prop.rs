@@ -8,7 +8,10 @@ use tcec::fp::{
     round_to_format, split_feng, split_markidis, split_ootomo, split_ootomo_tf32, Format, Half,
     Rounding,
 };
-use tcec::gemm::{gemm_f64, gemm_tiled, relative_residual, Mat, Method, SimtBackend, TileConfig};
+use tcec::gemm::{
+    apply_scale, descale_pow2, gemm_f64, gemm_tiled, plan_scale, relative_residual, Mat, Method,
+    SimtBackend, TileConfig,
+};
 use tcec::matgen::Rng;
 use tcec::shard;
 use tcec::tcsim::{mma_tile, MmaConfig};
@@ -281,6 +284,97 @@ fn prop_sharded_bit_identical_to_unsharded_all_methods() {
             method.name()
         );
         assert_eq!(stats.reduction_depth, 2);
+    }
+}
+
+/// INVARIANT: the two-stage split API is bit-identical to the one-shot
+/// path for EVERY `gemm::Method`, across ragged shapes, tile configs and
+/// exponent ranges (the prescaled method included) — and a prepared
+/// operand is reusable: splitting A once and multiplying it against
+/// several Bs gives the same bits as re-preparing per multiply.
+#[test]
+fn prop_run_prepared_bit_identical_to_run_all_methods() {
+    let mut rng = Rng::new(0x5711);
+    for (round, &method) in Method::ALL.iter().enumerate() {
+        // Ragged, non-tile-aligned shapes.
+        let m = 1 + rng.int_in(0, 60) as usize;
+        let k = 1 + rng.int_in(0, 90) as usize;
+        let n = 1 + rng.int_in(0, 60) as usize;
+        let pick = |rng: &mut Rng| [8usize, 16, 32, 64][rng.int_in(0, 3) as usize];
+        let (bm, bn, bk) = (pick(&mut rng), pick(&mut rng), pick(&mut rng));
+        let cfg = TileConfig {
+            bm,
+            bn,
+            bk,
+            wm: bm.min(pick(&mut rng)),
+            wn: bn.min(pick(&mut rng)),
+            wk: bk.min(pick(&mut rng)),
+            stages: 3,
+        };
+        let mut s = 0xA5A5 + round as u64;
+        // Mix comfortable and small-exponent values so halfhalf_prescale's
+        // per-operand scale plan actually engages.
+        let mut gen = |r: usize, c: usize, shift: i32| {
+            Mat::from_fn(r, c, |_, _| {
+                s = s.wrapping_mul(6364136223846793005).wrapping_add(1);
+                let u = (s >> 33) as f64 / (1u64 << 31) as f64 - 0.5;
+                (u * tcec::fp::exp2i(shift)) as f32
+            })
+        };
+        let a = gen(m, k, if round % 2 == 0 { 0 } else { -40 });
+        let b = gen(k, n, 0);
+        let b2 = gen(k, n, if round % 3 == 0 { -40 } else { 0 });
+
+        // Independent oracle: the per-panel splitting engine (`gemm_tiled`)
+        // with the method's elementwise pre-map applied by hand — NOT the
+        // prepare/run_prepared compose under test.
+        let oracle = |x: &Mat, y: &Mat| -> Mat {
+            let backend = method.make_backend();
+            match method {
+                Method::OursHalfHalfPre => {
+                    let (px, py) = (plan_scale(x), plan_scale(y));
+                    let c = gemm_tiled(
+                        &apply_scale(x, px),
+                        &apply_scale(y, py),
+                        &cfg,
+                        backend.as_ref(),
+                    );
+                    descale_pow2(&c, -(px.shift + py.shift))
+                }
+                Method::Fp32TruncLsb => {
+                    let xt = x.map(|v| tcec::fp::truncate_f32_mantissa_lsb(v, 1));
+                    let yt = y.map(|v| tcec::fp::truncate_f32_mantissa_lsb(v, 1));
+                    gemm_tiled(&xt, &yt, &cfg, backend.as_ref())
+                }
+                _ => gemm_tiled(x, y, &cfg, backend.as_ref()),
+            }
+        };
+
+        let pa = method.prepare(&a);
+        let pb = method.prepare(&b);
+        let via_prepared = method.run_prepared(&pa, &pb, &cfg);
+        let want = oracle(&a, &b);
+        assert_eq!(
+            via_prepared.data,
+            want.data,
+            "{}: run_prepared != panel-split engine at {m}x{k}x{n} (cfg {cfg:?})",
+            method.name()
+        );
+        let direct = method.run(&a, &b, &cfg);
+        assert_eq!(
+            direct.data,
+            want.data,
+            "{}: run (compose) != panel-split engine at {m}x{k}x{n}",
+            method.name()
+        );
+        // Reuse: the SAME prepared A against a different B.
+        let reused = method.run_prepared(&pa, &method.prepare(&b2), &cfg);
+        assert_eq!(
+            reused.data,
+            oracle(&a, &b2).data,
+            "{}: reused prepared A diverged",
+            method.name()
+        );
     }
 }
 
