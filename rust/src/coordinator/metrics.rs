@@ -36,6 +36,9 @@ pub struct Metrics {
     /// The executor's operand split cache, when it has one — registered by
     /// the service at startup so snapshots can surface hit/miss counters.
     split_cache: Mutex<Option<Arc<SplitCache>>>,
+    /// The service's execution planner, when one is enabled — registered
+    /// at startup so snapshots surface its plan/probe cache counters.
+    planner: Mutex<Option<Arc<crate::planner::Planner>>>,
 }
 
 /// A point-in-time metrics snapshot for reporting.
@@ -68,6 +71,15 @@ pub struct Snapshot {
     pub split_cache_misses: u64,
     /// Prepared operands currently cached (≤ the cache capacity).
     pub split_cache_entries: u64,
+    /// Plans served from the planner's `PlanCache` (0 when no planner).
+    pub plan_cache_hits: u64,
+    /// Plans the planner had to build (0 when no planner).
+    pub plan_cache_misses: u64,
+    /// Operand classifications served from the planner's `ProbeCache` —
+    /// each hit is a full O(mn) exponent scan the dispatcher did NOT run.
+    pub probe_cache_hits: u64,
+    /// Operands the planner actually probed (sampled; 0 when no planner).
+    pub probe_cache_misses: u64,
 }
 
 impl Metrics {
@@ -89,6 +101,11 @@ impl Metrics {
     /// Surface a [`SplitCache`]'s hit/miss counters in future snapshots.
     pub fn register_split_cache(&self, cache: Arc<SplitCache>) {
         *self.split_cache.lock().unwrap() = Some(cache);
+    }
+
+    /// Surface a planner's plan/probe cache counters in future snapshots.
+    pub fn register_planner(&self, planner: Arc<crate::planner::Planner>) {
+        *self.planner.lock().unwrap() = Some(planner);
     }
 
     pub fn on_complete(&self, method: Method, flops: u64, latency: Duration, batch_size: usize) {
@@ -125,6 +142,16 @@ impl Metrics {
             Some(c) => (c.hits(), c.misses(), c.len() as u64),
             None => (0, 0, 0),
         };
+        let (plan_hits, plan_misses, probe_hits, probe_misses) =
+            match &*self.planner.lock().unwrap() {
+                Some(p) => (
+                    p.plan_cache().hits(),
+                    p.plan_cache().misses(),
+                    p.probe_cache().hits(),
+                    p.probe_cache().misses(),
+                ),
+                None => (0, 0, 0, 0),
+            };
         let g = self.inner.lock().unwrap();
         let mut per_method: Vec<(&'static str, u64)> =
             g.per_method.iter().map(|(k, v)| (*k, *v)).collect();
@@ -154,6 +181,10 @@ impl Metrics {
             split_cache_hits: sc_hits,
             split_cache_misses: sc_misses,
             split_cache_entries: sc_entries,
+            plan_cache_hits: plan_hits,
+            plan_cache_misses: plan_misses,
+            probe_cache_hits: probe_hits,
+            probe_cache_misses: probe_misses,
         }
     }
 }
@@ -209,6 +240,25 @@ mod tests {
         assert_eq!(s.split_cache_hits, 1);
         assert_eq!(s.split_cache_misses, 1);
         assert_eq!(s.split_cache_entries, 1);
+    }
+
+    #[test]
+    fn planner_counters_surface_when_registered() {
+        use crate::matgen::urand;
+        use crate::planner::{Planner, PlannerConfig};
+        let m = Metrics::new();
+        let s = m.snapshot();
+        assert_eq!((s.plan_cache_hits, s.plan_cache_misses), (0, 0));
+        assert_eq!((s.probe_cache_hits, s.probe_cache_misses), (0, 0));
+        let planner = std::sync::Arc::new(Planner::new(PlannerConfig::default()));
+        m.register_planner(std::sync::Arc::clone(&planner));
+        let a = urand(8, 8, -1.0, 1.0, 1);
+        let b = urand(8, 8, -1.0, 1.0, 2);
+        planner.plan_request(&a, &b, crate::coordinator::Policy::Fp32Accuracy);
+        planner.plan_request(&a, &b, crate::coordinator::Policy::Fp32Accuracy);
+        let s = m.snapshot();
+        assert_eq!((s.plan_cache_hits, s.plan_cache_misses), (1, 1));
+        assert_eq!((s.probe_cache_hits, s.probe_cache_misses), (2, 2));
     }
 
     #[test]

@@ -12,7 +12,7 @@ use crate::fp::mantissa::exponent_of;
 use crate::gemm::{Mat, Method};
 
 /// What the client asks for.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Policy {
     /// Must match FP32 SGEMM accuracy (the paper's headline use case).
     Fp32Accuracy,
@@ -23,7 +23,7 @@ pub enum Policy {
 }
 
 /// Exponent-range classification of one operand (Fig. 11's input types).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum RangeClass {
     /// All exponents in [-15, 15]: halfhalf represents at full precision.
     HalfHalfExact,
@@ -56,10 +56,17 @@ pub fn probe(m: &Mat) -> RangeClass {
         }
         max_e = max_e.max(exponent_of(v));
     }
+    class_of_max_exponent(max_e)
+}
+
+/// Map the largest nonzero-element exponent of an operand to its Fig. 11
+/// range class (`i32::MIN` = all zeros, exactly representable everywhere).
+/// Shared by the exact [`probe`] and the planner's sampled probe so the
+/// two paths cannot drift.
+pub fn class_of_max_exponent(max_e: i32) -> RangeClass {
     if max_e == i32::MIN {
-        return RangeClass::HalfHalfExact; // all zeros
-    }
-    if max_e > 126 || max_e < -126 {
+        RangeClass::HalfHalfExact // all zeros
+    } else if max_e > 126 || max_e < -126 {
         RangeClass::Extreme
     } else if (-15..=15).contains(&max_e) {
         RangeClass::HalfHalfExact
@@ -72,23 +79,21 @@ pub fn probe(m: &Mat) -> RangeClass {
 
 /// Route a request: combine the policy with the worse of the two operand
 /// classes (the paper's Type 2 case shows one bad operand is enough).
+///
+/// Compat shim over the planner (DESIGN.md §9): the (policy, class) →
+/// method table this function used to hardcode now falls out of
+/// `planner::select_method`'s cost model — admissible methods ranked by
+/// `perfmodel::projected_tflops` on the reference A100, ties broken
+/// toward the accuracy-preference order. The legacy table itself is
+/// pinned against hardcoded expectations across a size sweep in
+/// `planner::tests::select_method_reproduces_legacy_route_table` (the
+/// shim-consistency test here only checks route == planner). Serving
+/// goes through `planner::Planner::plan_request` instead, which caches
+/// these probes and returns the full `ExecPlan`.
 pub fn route(policy: Policy, a: &Mat, b: &Mat) -> Method {
     let class = probe(a).max(probe(b));
-    match policy {
-        Policy::StrictFp32 => Method::Fp32Simt,
-        Policy::LowPrecisionOk => match class {
-            RangeClass::HalfHalfExact | RangeClass::HalfHalfDegraded => Method::Fp16Tc,
-            RangeClass::NeedsWideExponent => Method::Tf32Tc,
-            RangeClass::Extreme => Method::Fp32Simt,
-        },
-        Policy::Fp32Accuracy => match class {
-            RangeClass::HalfHalfExact => Method::OursHalfHalf,
-            // Degraded or wide range: tf32tf32 keeps FP32's exponent range
-            // (Fig. 11: same accuracy as SIMT in all four types).
-            RangeClass::HalfHalfDegraded | RangeClass::NeedsWideExponent => Method::OursTf32,
-            RangeClass::Extreme => Method::Fp32Simt,
-        },
-    }
+    let n_eff = crate::planner::effective_n(a.rows, b.cols, a.cols);
+    crate::planner::select_method(policy, class, &crate::perfmodel::A100, n_eff)
 }
 
 #[cfg(test)]
@@ -134,6 +139,33 @@ mod tests {
         let mut tiny_outlier = urand(4, 4, -1.0, 1.0, 9);
         tiny_outlier.set(0, 0, 1e-30);
         assert_eq!(probe(&tiny_outlier), RangeClass::HalfHalfExact);
+    }
+
+    #[test]
+    fn route_matches_planner_for_every_class() {
+        // The shim contract: `route` and a full `planner::plan` with an
+        // exact probe agree on the method for every (policy, class) pair.
+        use crate::planner::{plan, PlannerConfig};
+        let cfg = PlannerConfig::default();
+        let mats = [
+            exp_rand(8, 8, -15, 14, 70),   // HalfHalfExact
+            exp_rand(8, 8, -35, -16, 71),  // HalfHalfDegraded
+            exp_rand(8, 8, -100, -36, 72), // NeedsWideExponent
+            urand(8, 8, 2.0e38, 3.0e38, 73), // Extreme
+        ];
+        for policy in [Policy::Fp32Accuracy, Policy::LowPrecisionOk, Policy::StrictFp32] {
+            for a in &mats {
+                for b in &mats {
+                    let class = probe(a).max(probe(b));
+                    let p = plan(8, 8, 8, class, policy, &cfg);
+                    assert_eq!(
+                        route(policy, a, b),
+                        p.method,
+                        "{policy:?}/{class:?}: shim diverged from the planner"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

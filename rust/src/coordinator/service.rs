@@ -17,6 +17,8 @@ use super::request::{GemmRequest, GemmResponse};
 use super::splitcache::SplitCache;
 use crate::gemm::prepared::SplitDedup;
 use crate::gemm::{Mat, Method, SplitOperand, TileConfig};
+use crate::planner::{ExecPlan, Planner, PlannerConfig};
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
@@ -28,6 +30,16 @@ pub trait Executor: Send + Sync + 'static {
     /// Produce `C_i = A_i · B_i` for every request, in order.
     fn execute(&self, key: &BatchKey, reqs: &[GemmRequest]) -> Vec<Mat>;
     fn name(&self) -> &'static str;
+
+    /// Execute under a planner-produced [`ExecPlan`] (DESIGN.md §9). The
+    /// default ignores the plan and runs the legacy path — correct for
+    /// executors whose configuration is baked in elsewhere (PJRT artifacts
+    /// compile their tile shapes AOT). `SimExecutor` honors `plan.tile`;
+    /// `shard::ShardedExecutor` honors `plan.shard`.
+    fn execute_planned(&self, plan: &ExecPlan, key: &BatchKey, reqs: &[GemmRequest]) -> Vec<Mat> {
+        let _ = plan;
+        self.execute(key, reqs)
+    }
 
     /// The executor's operand split cache, when it has one. The service
     /// registers it with its [`Metrics`] so snapshots surface hit/miss
@@ -112,14 +124,22 @@ impl Default for SimExecutor {
 /// ~65k flops; thread spawn + scope join is tens of microseconds).
 const MIN_FAN_OUT_FLOPS: u64 = 100_000;
 
-impl Executor for SimExecutor {
-    fn execute(&self, key: &BatchKey, reqs: &[GemmRequest]) -> Vec<Mat> {
+impl SimExecutor {
+    /// The batch execution body, parameterized over the tile configuration
+    /// — `self.tile` on the legacy path, the planner's autotuned
+    /// `plan.tile` on the planned path.
+    fn execute_with_tile(
+        &self,
+        key: &BatchKey,
+        reqs: &[GemmRequest],
+        tile: &TileConfig,
+    ) -> Vec<Mat> {
         let method = key.method;
         let pairs = self.prepare_batch(method, reqs);
         let threads = self.batch_threads.clamp(1, reqs.len().max(1));
         let elem_flops = 2 * key.m as u64 * key.n as u64 * key.k as u64;
         if threads <= 1 || reqs.len() <= 1 || elem_flops < MIN_FAN_OUT_FLOPS {
-            return pairs.iter().map(|(pa, pb)| method.run_prepared(pa, pb, &self.tile)).collect();
+            return pairs.iter().map(|(pa, pb)| method.run_prepared(pa, pb, tile)).collect();
         }
         // Fan the batch's elements across a scoped thread chunk: the
         // prepared splits are shared by reference, each thread fills its
@@ -128,7 +148,6 @@ impl Executor for SimExecutor {
         // it exactly like a serial panic).
         let mut out: Vec<Option<Mat>> = (0..reqs.len()).map(|_| None).collect();
         let chunk = reqs.len().div_ceil(threads);
-        let tile = &self.tile;
         std::thread::scope(|s| {
             for (out_chunk, pair_chunk) in out.chunks_mut(chunk).zip(pairs.chunks(chunk)) {
                 s.spawn(move || {
@@ -139,6 +158,16 @@ impl Executor for SimExecutor {
             }
         });
         out.into_iter().map(|c| c.expect("every batch element computed")).collect()
+    }
+}
+
+impl Executor for SimExecutor {
+    fn execute(&self, key: &BatchKey, reqs: &[GemmRequest]) -> Vec<Mat> {
+        self.execute_with_tile(key, reqs, &self.tile)
+    }
+
+    fn execute_planned(&self, plan: &ExecPlan, key: &BatchKey, reqs: &[GemmRequest]) -> Vec<Mat> {
+        self.execute_with_tile(key, reqs, &plan.tile)
     }
 
     fn name(&self) -> &'static str {
@@ -152,6 +181,14 @@ impl Executor for SimExecutor {
 
 struct WorkItem {
     batch: Batch,
+    /// The dispatcher's execution plan for this batch (planner mode only).
+    /// The batch key pins (shape, method), which pins the tile and the
+    /// prescale — but NOT the shard decision: an Extreme-classified
+    /// request plans unsharded even when a finite same-shape request
+    /// sharing the key would shard. The dispatcher therefore merges
+    /// same-key plans conservatively (unsharded wins), so this plan is
+    /// correct for every request in the batch.
+    plan: Option<Arc<ExecPlan>>,
     responders: Vec<(Sender<GemmResponse>, Instant)>,
 }
 
@@ -176,6 +213,14 @@ pub struct ServiceConfig {
     /// small requests keep the direct path). Shard/steal/reduction counters
     /// land in this service's [`Metrics`].
     pub shard: Option<crate::shard::ShardConfig>,
+    /// When set, the dispatcher routes through a [`Planner`] (DESIGN.md
+    /// §9): sampled + cached exponent probes instead of a full O(mn) scan
+    /// per operand, autotuned tiles from the plan cache, and the shard
+    /// decision folded into the same `ExecPlan`. The planner's shard gate
+    /// is taken from [`ServiceConfig::shard`], so plans only shard when a
+    /// `ShardedExecutor` is actually in front. Plan/probe cache counters
+    /// land in this service's [`Metrics`].
+    pub planner: Option<PlannerConfig>,
 }
 
 impl Default for ServiceConfig {
@@ -186,6 +231,7 @@ impl Default for ServiceConfig {
             linger: Duration::from_millis(2),
             force_method: None,
             shard: None,
+            planner: None,
         }
     }
 }
@@ -219,6 +265,17 @@ impl GemmService {
         if let Some(cache) = executor.split_cache() {
             metrics.register_split_cache(cache);
         }
+        // Planner mode: one Planner per service, shared by reference with
+        // the metrics (counters). Its shard gate mirrors the service's
+        // actual wiring — plans only shard when a ShardedExecutor is in
+        // front to honor them.
+        let planner: Option<Arc<Planner>> = cfg.planner.clone().map(|mut pc| {
+            pc.shard = cfg.shard.clone();
+            Arc::new(Planner::new(pc))
+        });
+        if let Some(p) = &planner {
+            metrics.register_planner(Arc::clone(p));
+        }
         let (tx, rx) = channel::<Msg>();
         let (work_tx, work_rx) = channel::<WorkItem>();
         let work_rx = Arc::new(Mutex::new(work_rx));
@@ -239,7 +296,14 @@ impl GemmService {
                     // with it: catch, drop the batch's responders (clients
                     // observe a disconnected channel, not a hang), carry on.
                     let outs = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                        executor.execute(&item.batch.key, &item.batch.requests)
+                        match &item.plan {
+                            Some(p) => executor.execute_planned(
+                                p,
+                                &item.batch.key,
+                                &item.batch.requests,
+                            ),
+                            None => executor.execute(&item.batch.key, &item.batch.requests),
+                        }
                     }));
                     let Ok(outs) = outs else {
                         eprintln!(
@@ -280,16 +344,25 @@ impl GemmService {
             let force = cfg.force_method;
             let linger = cfg.linger;
             let max_batch = cfg.max_batch;
+            let planner = planner.clone();
             std::thread::spawn(move || {
                 let mut batcher = DynamicBatcher::new(max_batch, linger);
                 let mut responders: ResponderMap = ResponderMap::new();
-                let emit = |batch: Batch, responders: &mut ResponderMap| {
+                // Planner mode: the open batch group's plan, keyed like the
+                // batcher's groups. Same-key requests share one plan (the
+                // plan is a pure function of the key), and emitting a batch
+                // removes the entry; a later same-key group re-inserts it.
+                let mut open_plans: HashMap<BatchKey, Arc<ExecPlan>> = HashMap::new();
+                let emit = |batch: Batch,
+                            responders: &mut ResponderMap,
+                            open_plans: &mut HashMap<BatchKey, Arc<ExecPlan>>| {
                     let rs: Vec<_> = batch
                         .requests
                         .iter()
                         .map(|r| responders.remove(&r.id).expect("responder registered"))
                         .collect();
-                    let _ = work_tx.send(WorkItem { batch, responders: rs });
+                    let plan = open_plans.remove(&batch.key);
+                    let _ = work_tx.send(WorkItem { batch, plan, responders: rs });
                 };
                 loop {
                     // Wake exactly when the oldest pending batch's linger
@@ -305,16 +378,62 @@ impl GemmService {
                     match rx.recv_timeout(timeout) {
                         Ok(Msg::Submit(req, resp_tx, t0)) => {
                             metrics.on_submit();
-                            let method = force.unwrap_or_else(|| route(req.policy, &req.a, &req.b));
+                            // Planner mode: one cached ExecPlan carries the
+                            // method, tile and shard decision (no full
+                            // O(mn) probe for repeated operands). Legacy
+                            // mode: the exact-probe route shim, no plan.
+                            let (method, plan) = match &planner {
+                                Some(p) => {
+                                    let plan = match force {
+                                        Some(mm) => p.plan_for_method(
+                                            mm,
+                                            req.a.rows,
+                                            req.b.cols,
+                                            req.a.cols,
+                                        ),
+                                        None => p.plan_request(&req.a, &req.b, req.policy),
+                                    };
+                                    (plan.method, Some(plan))
+                                }
+                                None => {
+                                    let method = force
+                                        .unwrap_or_else(|| route(req.policy, &req.a, &req.b));
+                                    (method, None)
+                                }
+                            };
                             responders.insert(req.id, (resp_tx, t0));
+                            if let Some(plan) = plan {
+                                let key = BatchKey {
+                                    m: req.a.rows,
+                                    n: req.b.cols,
+                                    k: req.a.cols,
+                                    method,
+                                };
+                                // Same-key plans agree on method/tile/
+                                // prescale but may disagree on sharding
+                                // (an Extreme-classified request plans
+                                // unsharded). Merge conservatively: once
+                                // any request in the open group needs the
+                                // unsharded path, the whole batch takes
+                                // it — correct for every member, and
+                                // extreme inputs never ride a shard grid.
+                                open_plans
+                                    .entry(key)
+                                    .and_modify(|existing| {
+                                        if plan.shard.is_none() {
+                                            *existing = Arc::clone(&plan);
+                                        }
+                                    })
+                                    .or_insert(plan);
+                            }
                             if let Some(batch) = batcher.push(method, req) {
-                                emit(batch, &mut responders);
+                                emit(batch, &mut responders, &mut open_plans);
                             }
                         }
                         Err(RecvTimeoutError::Timeout) => {}
                         Ok(Msg::Shutdown) | Err(RecvTimeoutError::Disconnected) => {
                             for batch in batcher.flush(true) {
-                                emit(batch, &mut responders);
+                                emit(batch, &mut responders, &mut open_plans);
                             }
                             break;
                         }
@@ -322,7 +441,7 @@ impl GemmService {
                     // Flush due stragglers on EVERY iteration — message or
                     // timeout alike.
                     for batch in batcher.flush(false) {
-                        emit(batch, &mut responders);
+                        emit(batch, &mut responders, &mut open_plans);
                     }
                 }
                 // work_tx drops here, terminating the workers.
@@ -398,6 +517,70 @@ mod tests {
         let resp = svc.gemm_blocking(a, b, Policy::Fp32Accuracy);
         assert_eq!(resp.method, Method::OursHalfHalf);
         assert!(relative_residual(&r_ref, &resp.c) < 1e-6);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn planner_mode_single_request_roundtrip() {
+        let svc = GemmService::start(
+            Arc::new(SimExecutor::new()),
+            ServiceConfig { planner: Some(PlannerConfig::default()), ..ServiceConfig::default() },
+        );
+        let a = urand(16, 16, -1.0, 1.0, 1);
+        let b = urand(16, 16, -1.0, 1.0, 2);
+        let r_ref = gemm_f64(&a, &b);
+        let resp = svc.gemm_blocking(a.clone(), b.clone(), Policy::Fp32Accuracy);
+        assert_eq!(resp.method, Method::OursHalfHalf);
+        assert!(relative_residual(&r_ref, &resp.c) < 1e-6);
+        // Bit-identical to a direct run under the planned tile (planning
+        // is deterministic, so a fresh planner reproduces the service's).
+        let ref_planner = Planner::new(PlannerConfig::default());
+        let plan = ref_planner.plan_request(&a, &b, Policy::Fp32Accuracy);
+        assert_eq!(resp.c.data, Method::OursHalfHalf.run(&a, &b, &plan.tile).data);
+        let snap = svc.metrics().snapshot();
+        assert_eq!(snap.plan_cache_misses, 1);
+        assert_eq!(snap.probe_cache_misses, 2);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn planner_mode_mixed_batch_takes_conservative_unsharded_plan() {
+        // Two same-shape requests that both route to Fp32Simt but plan
+        // differently: a finite StrictFp32 request whose plan shards, and
+        // an Extreme (non-finite) Fp32Accuracy request whose plan must
+        // not. They share a BatchKey and get batched together; the merged
+        // plan must be the conservative unsharded one, regardless of
+        // arrival order — the extreme request never rides a shard grid.
+        let svc = GemmService::start(
+            Arc::new(SimExecutor::new()),
+            ServiceConfig {
+                workers: 1,
+                max_batch: 2,
+                linger: Duration::from_secs(60), // batch only fills by count
+                shard: Some(crate::shard::ShardConfig {
+                    workers: 2,
+                    min_flops: 0,
+                    ..crate::shard::ShardConfig::default()
+                }),
+                planner: Some(PlannerConfig::default()),
+                ..ServiceConfig::default()
+            },
+        );
+        let finite_a = urand(192, 64, -1.0, 1.0, 1);
+        let finite_b = urand(64, 192, -1.0, 1.0, 2);
+        let mut inf_a = urand(192, 64, -1.0, 1.0, 3);
+        inf_a.set(0, 0, f32::INFINITY);
+        let inf_b = urand(64, 192, -1.0, 1.0, 4);
+        let (_, rx1) = svc.submit(finite_a, finite_b, Policy::StrictFp32);
+        let (_, rx2) = svc.submit(inf_a, inf_b, Policy::Fp32Accuracy);
+        let r1 = rx1.recv_timeout(Duration::from_secs(60)).expect("finite answered");
+        let r2 = rx2.recv_timeout(Duration::from_secs(60)).expect("extreme answered");
+        assert_eq!(r1.method, Method::Fp32Simt);
+        assert_eq!(r2.method, Method::Fp32Simt);
+        // The batch held both requests, so the merged (unsharded) plan
+        // governed and no shard counters moved.
+        assert_eq!(r1.batch_size, 2, "scenario requires one shared batch");
+        assert_eq!(svc.metrics().snapshot().sharded_gemms, 0);
         svc.shutdown();
     }
 

@@ -145,28 +145,47 @@ impl Method {
     /// `halfhalf_prescale`. The result can be reused across every GEMM
     /// that consumes the same operand.
     pub fn prepare(&self, m: &Mat) -> SplitOperand {
-        let backend = self.make_backend();
+        self.prepare_with(m, self.make_backend().as_ref())
+    }
+
+    /// [`prepare`](Method::prepare) against an already-instantiated
+    /// backend, so callers with several splits to build (both operands of
+    /// a GEMM, a whole batch) pay `make_backend` once instead of per
+    /// operand.
+    pub(crate) fn prepare_with(&self, m: &Mat, backend: &dyn KernelBackend) -> SplitOperand {
         match self {
             Method::Fp32TruncLsb => {
                 let t = m.map(|x| truncate_f32_mantissa_lsb(x, 1));
-                SplitOperand::build(*self, &t, backend.as_ref(), 0)
+                SplitOperand::build(*self, &t, backend, 0)
             }
             Method::OursHalfHalfPre => {
                 let p = scaling::plan_scale(m);
                 let s = scaling::apply_scale(m, p);
-                SplitOperand::build(*self, &s, backend.as_ref(), p.shift)
+                SplitOperand::build(*self, &s, backend, p.shift)
             }
-            _ => SplitOperand::build(*self, m, backend.as_ref(), 0),
+            _ => SplitOperand::build(*self, m, backend, 0),
         }
     }
 
     /// Stage 2: run the tiled GEMM over prepared operands. Bit-identical
     /// to [`run`](Method::run) — property-tested in `rust/tests/prop.rs`.
     pub fn run_prepared(&self, a: &SplitOperand, b: &SplitOperand, cfg: &TileConfig) -> Mat {
+        self.run_prepared_with(a, b, cfg, self.make_backend().as_ref())
+    }
+
+    /// [`run_prepared`](Method::run_prepared) against an
+    /// already-instantiated backend (see [`run`](Method::run), which
+    /// threads one backend through both prepares and the multiply).
+    pub(crate) fn run_prepared_with(
+        &self,
+        a: &SplitOperand,
+        b: &SplitOperand,
+        cfg: &TileConfig,
+        backend: &dyn KernelBackend,
+    ) -> Mat {
         assert_eq!(a.method, *self, "operand A was prepared for {:?}", a.method);
         assert_eq!(b.method, *self, "operand B was prepared for {:?}", b.method);
-        let backend = self.make_backend();
-        let c = prepared::gemm_tiled_prepared(a, b, cfg, backend.as_ref());
+        let c = prepared::gemm_tiled_prepared(a, b, cfg, backend);
         match self {
             // Exact two-step descale epilogue — same factor sequence as
             // `scaling::gemm_scaled`.
@@ -178,10 +197,16 @@ impl Method {
     }
 
     /// Instantiate the backend and run the tiled GEMM: a thin compose of
-    /// [`prepare`](Method::prepare) and [`run_prepared`](Method::run_prepared).
+    /// [`prepare`](Method::prepare) and [`run_prepared`](Method::run_prepared),
+    /// sharing one backend instance across both prepares and the multiply
+    /// (the backends are stateless; building one per stage was pure
+    /// allocation overhead on the per-request hot path).
     pub fn run(&self, a: &Mat, b: &Mat, cfg: &TileConfig) -> Mat {
         assert_eq!(a.cols, b.rows, "inner dimensions must agree");
-        self.run_prepared(&self.prepare(a), &self.prepare(b), cfg)
+        let backend = self.make_backend();
+        let pa = self.prepare_with(a, backend.as_ref());
+        let pb = self.prepare_with(b, backend.as_ref());
+        self.run_prepared_with(&pa, &pb, cfg, backend.as_ref())
     }
 
     /// Tensor-Core low-precision GEMM term count (performance model input).

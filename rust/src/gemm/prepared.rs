@@ -78,20 +78,26 @@ impl SplitOperand {
     }
 }
 
-/// 128-bit content fingerprint of an f32 buffer (two independent FNV-style
-/// streams over the raw bit patterns, length folded in). Used as a
-/// dedup/cache key; callers must still verify bit equality on a match —
-/// see [`bitwise_eq`] and the coordinator's `SplitCache`.
-pub fn content_fingerprint(data: &[f32]) -> u128 {
+/// The fingerprint mixer: two independent FNV-style streams over a
+/// sequence of raw bit patterns, with `len` folded in at the end. Shared
+/// by [`content_fingerprint`] (every element) and the planner's sampled
+/// fingerprint (a strided subset) so the two can never drift structurally.
+pub fn fingerprint_bits(bits: impl Iterator<Item = u64>, len: usize) -> u128 {
     let mut h1: u64 = 0xcbf2_9ce4_8422_2325;
     let mut h2: u64 = 0x9e37_79b9_7f4a_7c15;
-    for &x in data {
-        let b = x.to_bits() as u64;
+    for b in bits {
         h1 = (h1 ^ b).wrapping_mul(0x0000_0100_0000_01b3);
         h2 = (h2 ^ b.rotate_left(17)).wrapping_mul(0xc2b2_ae3d_27d4_eb4f);
     }
-    h1 = (h1 ^ data.len() as u64).wrapping_mul(0x0000_0100_0000_01b3);
+    h1 = (h1 ^ len as u64).wrapping_mul(0x0000_0100_0000_01b3);
     ((h1 as u128) << 64) | h2 as u128
+}
+
+/// 128-bit content fingerprint of an f32 buffer (see [`fingerprint_bits`]).
+/// Used as a dedup/cache key; callers must still verify bit equality on a
+/// match — see [`bitwise_eq`] and the coordinator's `SplitCache`.
+pub fn content_fingerprint(data: &[f32]) -> u128 {
+    fingerprint_bits(data.iter().map(|x| x.to_bits() as u64), data.len())
 }
 
 /// Bit-pattern equality of two f32 buffers (NaN == NaN, 0.0 != -0.0 —

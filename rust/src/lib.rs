@@ -18,11 +18,17 @@
 //! * [`perfmodel`], [`autotune`] — the GPU throughput/power/roofline
 //!   projection model (Figs 2/14/15/16, Table 5) and the CUTLASS parameter
 //!   tuner (Table 3).
+//! * [`planner`] — the unified cost-based execution planner (L2.5): one
+//!   [`planner::ExecPlan`] per request — probe class (sampled + cached) →
+//!   admissible methods → cost tie-break ([`perfmodel`]) → tile memo
+//!   ([`autotune`]) → shard gate ([`shard`]) — cached, explainable
+//!   (`tcec plan`), with `coordinator::policy::route` kept as a compat
+//!   shim over it.
 //! * [`coordinator`], [`runtime`] — the serving layer: a GEMM service that
-//!   routes requests by precision policy, batches same-shape work with
-//!   deadline-driven linger flushing, caches operand splits
-//!   ([`coordinator::SplitCache`]) and executes AOT-compiled Pallas
-//!   artifacts through PJRT.
+//!   routes requests by precision policy (through the planner when
+//!   enabled), batches same-shape work with deadline-driven linger
+//!   flushing, caches operand splits ([`coordinator::SplitCache`]) and
+//!   executes AOT-compiled Pallas artifacts through PJRT.
 //! * [`shard`] — the sharded execution engine between the router and the
 //!   executors: a partition planner (perfmodel/autotune-sized, error-bound
 //!   gated k-splits), a work-stealing worker pool, and a deterministic
@@ -42,6 +48,7 @@ pub mod fp;
 pub mod gemm;
 pub mod matgen;
 pub mod perfmodel;
+pub mod planner;
 pub mod runtime;
 pub mod shard;
 pub mod tcsim;

@@ -4,11 +4,12 @@
 use std::sync::Arc;
 use tcec::bench_util::Table;
 use tcec::cli::Args;
-use tcec::coordinator::{GemmService, Policy, ServiceConfig, SimExecutor, SplitCache};
+use tcec::coordinator::{GemmService, Policy, RangeClass, ServiceConfig, SimExecutor, SplitCache};
 use tcec::experiments;
 use tcec::gemm::{gemm_f64, relative_residual, Method, TileConfig};
 use tcec::matgen::Workload;
 use tcec::perfmodel::{A100, ALL_GPUS};
+use tcec::planner::{Planner, PlannerConfig};
 use tcec::runtime::{ArtifactRegistry, PjrtExecutor, PjrtHandle};
 use tcec::shard;
 
@@ -18,8 +19,10 @@ tcec — error-corrected Tensor-Core GEMM (Ootomo & Yokota 2022 reproduction)
 USAGE:
   tcec gemm      [--method M] [--m N --n N --k N] [--workload W] [--seeds S] [--prescale]
   tcec shard     [--method M] [--m N --n N --k N] [--workers W] [--kslices S] [--threshold F]
+  tcec plan      [--m N --n N --k N] [--policy fp32|low|strict] [--class C | --workload W]
+                 [--shard] [--shard-workers W] [--probe N] [--no-autotune]
   tcec serve     [--requests N] [--size N] [--workers W] [--batch B] [--artifacts DIR]
-                 [--shard] [--shard-workers W] [--split-cache N]
+                 [--shard] [--shard-workers W] [--split-cache N] [--planner]
   tcec experiment <fig1|fig4|fig5|fig8|fig9|fig11|fig13|fig14|fig15|fig16|table1_2|table3|table6>
   tcec artifacts [--dir DIR]
   tcec analyze   [--exponent E] [--k N]
@@ -29,6 +32,7 @@ METHODS: cublas_simt cublas_fp16tc cublas_tf32tc markidis markidis_mma_rn
          feng cutlass_halfhalf cutlass_tf32tf32 ours_no_rz_avoid
          ours_four_term fp32_trunc_lsb ours_bf16x3 halfhalf_prescale
 WORKLOADS: urand | exprand:<a>:<b> | randtlr | spatial | cauchy
+CLASSES:   exact | degraded | wide | extreme   (Fig. 11 input types)
 ";
 
 /// Strict method flag: unknown names are an error listing every valid
@@ -154,6 +158,109 @@ fn cmd_shard(args: &Args) {
     );
 }
 
+/// `--policy` flag: unknown names are an error listing the valid ones.
+fn parse_policy_flag(args: &Args) -> Policy {
+    match args.str_flag("policy").unwrap_or("fp32") {
+        "fp32" | "fp32_accuracy" => Policy::Fp32Accuracy,
+        "low" | "low_precision" => Policy::LowPrecisionOk,
+        "strict" | "strict_fp32" => Policy::StrictFp32,
+        other => {
+            eprintln!("unknown policy `{other}` — valid policies: fp32, low, strict");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// `--class` flag (Fig. 11 input types); strict like `--policy`.
+fn parse_class_flag(args: &Args) -> RangeClass {
+    match args.str_flag("class").unwrap_or("exact") {
+        "exact" => RangeClass::HalfHalfExact,
+        "degraded" => RangeClass::HalfHalfDegraded,
+        "wide" => RangeClass::NeedsWideExponent,
+        "extreme" => RangeClass::Extreme,
+        other => {
+            eprintln!("unknown class `{other}` — valid classes: exact, degraded, wide, extreme");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// `tcec plan`: run the unified planner for one (shape, policy, class) and
+/// print the chosen plan next to every rejected alternative with its
+/// estimated throughput (DESIGN.md §9's explain view).
+fn cmd_plan(args: &Args) {
+    let m = args.usize_flag("m", 1024);
+    let n = args.usize_flag("n", 1024);
+    let k = args.usize_flag("k", 1024);
+    let policy = parse_policy_flag(args);
+    let cfg = PlannerConfig {
+        autotune_tiles: !args.bool_flag("no-autotune"),
+        autotune_probe: args.usize_flag("probe", 0),
+        shard: if args.bool_flag("shard") {
+            Some(shard::ShardConfig {
+                workers: args.usize_flag("shard-workers", 4),
+                ..shard::ShardConfig::default()
+            })
+        } else {
+            None
+        },
+        ..PlannerConfig::default()
+    };
+    let planner = Planner::new(cfg);
+    // Class comes from --class, or from actually probing a --workload draw
+    // through the planner's sampled probe.
+    let class = match args.str_flag("workload") {
+        Some(w) => {
+            let wl = parse_workload(w);
+            let a = wl.generate(m, k, 1);
+            let b = wl.generate(k, n, 2);
+            planner.classify(&a).max(planner.classify(&b))
+        }
+        None => parse_class_flag(args),
+    };
+    let ex = planner.explain(m, n, k, class, policy);
+    let p = &ex.chosen;
+    println!("plan for ({m} x {k}) * ({k} x {n}), policy {policy:?}, class {class:?}:");
+    println!("  method   : {}{}", p.method.name(), if p.prescale { " (+prescale)" } else { "" });
+    let t = p.tile;
+    println!(
+        "  tile     : bm{} bn{} bk{} / wm{} wn{} wk{} stages{}",
+        t.bm, t.bn, t.bk, t.wm, t.wn, t.wk, t.stages
+    );
+    match &p.shard {
+        Some(sp) => println!(
+            "  shard    : {} x {} output grid, {} kslice(s) — {} shards",
+            sp.row_cuts.len(),
+            sp.col_cuts.len(),
+            sp.kslices,
+            sp.shard_count()
+        ),
+        None => println!("  shard    : none (disabled, below threshold, or gated)"),
+    }
+    // Two scales, labelled: the raw projection is what method selection
+    // compares (and what the rejected table shows); the tile-aware score
+    // additionally folds in quantization/reuse efficiency of the chosen
+    // tile, so it is always lower.
+    let n_eff = tcec::planner::effective_n(m, n, k);
+    let proj = tcec::perfmodel::projected_tflops(&planner.config().gpu, p.method, n_eff);
+    println!(
+        "  est cost : projected {proj:.1} TFlop/s (selection metric, {} model); \
+         tile-aware score {:.1}",
+        planner.config().gpu.name,
+        p.est_cost_tflops
+    );
+    println!("rejected alternatives (projected TFlop/s at the same size, vs {proj:.1}):");
+    let mut table = Table::new(&["method", "proj TFlop/s", "verdict"]);
+    for alt in &ex.rejected {
+        table.row(&[
+            alt.method.name().to_string(),
+            format!("{:.1}", alt.projected_tflops),
+            alt.why.clone(),
+        ]);
+    }
+    table.print();
+}
+
 fn cmd_serve(args: &Args) {
     let requests = args.usize_flag("requests", 32);
     let size = args.usize_flag("size", 64);
@@ -168,6 +275,9 @@ fn cmd_serve(args: &Args) {
         } else {
             None
         },
+        // `--planner`: route through the unified planner (sampled+cached
+        // probes, autotuned tiles, shard gate in one ExecPlan) — §9.
+        planner: args.bool_flag("planner").then(PlannerConfig::default),
         ..ServiceConfig::default()
     };
     let svc = if let Some(dir) = args.str_flag("artifacts") {
@@ -227,6 +337,15 @@ fn cmd_serve(args: &Args) {
         println!(
             "split cache    : {} hits / {} misses ({} entries)",
             snap.split_cache_hits, snap.split_cache_misses, snap.split_cache_entries
+        );
+    }
+    if snap.plan_cache_hits + snap.plan_cache_misses > 0 {
+        println!(
+            "planner        : plan cache {} hits / {} misses, probe cache {} hits / {} misses",
+            snap.plan_cache_hits,
+            snap.plan_cache_misses,
+            snap.probe_cache_hits,
+            snap.probe_cache_misses
         );
     }
     for (name, count) in snap.per_method {
@@ -360,6 +479,7 @@ fn main() {
     match args.command.as_deref() {
         Some("gemm") => cmd_gemm(&args),
         Some("shard") => cmd_shard(&args),
+        Some("plan") => cmd_plan(&args),
         Some("serve") => cmd_serve(&args),
         Some("experiment") => cmd_experiment(&args),
         Some("artifacts") => cmd_artifacts(&args),

@@ -1,0 +1,301 @@
+//! The [`PlanCache`]: memoized [`ExecPlan`]s plus the autotuned-tile memo.
+//!
+//! Two maps with different keys and lifetimes:
+//!
+//! * **Plans** — LRU-bounded map from (shape, selector) to a finished
+//!   [`ExecPlan`]. The selector is either the routed (class, policy) pair
+//!   the dispatcher resolved or a forced method, so a steady stream of
+//!   same-shaped requests plans exactly once. Hit/miss counters surface in
+//!   `Metrics::snapshot` when the planner is registered with the service.
+//! * **Tiles** — small unbounded memo from (method, n-bucket, gpu) to the
+//!   autotuned [`TileConfig`]. Tile selection (`autotune::filter_space` +
+//!   `autotune::score`) is the expensive step the old serving path simply
+//!   skipped by hardcoding `TileConfig::default()`; here it runs once per
+//!   bucket. The key space is tiny (13 methods × ~15 power-of-two buckets ×
+//!   one GPU), so no eviction is needed.
+//!
+//! **Poisoned entries never serve.** A tile entry that did not come from
+//! this cache's own autotune pass (see [`PlanCache::prime_tile`], the hook
+//! for external tuners and tests) is re-validated before its first serve:
+//! degenerate dimensions (which would hang the tiled engine's loop nest)
+//! and `autotune::structural_filter` rejections are discarded outright, and
+//! the accuracy rule (`autotune::accuracy_filter` at
+//! `PlannerConfig::verify_probe`) must pass — a tile the accuracy filter
+//! rejects is replaced via [`choose_tile`], which serves the best-scored
+//! candidate that itself passes the same checks (the engine-default tile
+//! is the last resort when no candidate survives).
+
+use super::lru::LruMap;
+use super::{ExecPlan, PlannerConfig};
+use crate::autotune::{accuracy_filter, filter_space, score, structural_filter};
+use crate::coordinator::{Policy, RangeClass};
+use crate::gemm::{Method, TileConfig};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// What resolved the method of a cached plan: the router's (class, policy)
+/// decision, or an explicit method override (`force_method`, shard-internal
+/// sub-plans, benches).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PlanSelector {
+    Routed { class: RangeClass, policy: Policy },
+    Forced { method: Method },
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct PlanKey {
+    m: usize,
+    n: usize,
+    k: usize,
+    sel: PlanSelector,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct TileKey {
+    method: Method,
+    bucket: usize,
+    gpu: &'static str,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct TileEntry {
+    tile: TileConfig,
+    /// False for primed (externally supplied) tiles until they survive
+    /// [`tile_is_safe`]; true for tiles this cache autotuned itself.
+    verified: bool,
+}
+
+/// Memoized execution plans + autotuned tiles (see module docs).
+#[derive(Debug)]
+pub struct PlanCache {
+    plan_capacity: usize,
+    plans: Mutex<LruMap<PlanKey, Arc<ExecPlan>>>,
+    tiles: Mutex<HashMap<TileKey, TileEntry>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+/// True when `tile` may be served: non-degenerate dimensions (zero block
+/// or warp extents would hang the tiled engine's `while` loops), passing
+/// `autotune::structural_filter`, and — when `cfg.verify_probe > 0` —
+/// passing `autotune::accuracy_filter` on the method's backend.
+pub fn tile_is_safe(tile: &TileConfig, method: Method, cfg: &PlannerConfig) -> bool {
+    if tile.bm == 0
+        || tile.bn == 0
+        || tile.bk == 0
+        || tile.wm == 0
+        || tile.wn == 0
+        || tile.wk == 0
+        || tile.stages == 0
+    {
+        return false;
+    }
+    let tf32 = matches!(method, Method::OursTf32 | Method::Tf32Tc);
+    if structural_filter(tile, &cfg.gpu, tf32).is_err() {
+        return false;
+    }
+    if cfg.verify_probe > 0 {
+        let backend = method.make_backend();
+        if accuracy_filter(tile, backend.as_ref(), cfg.verify_probe).is_err() {
+            return false;
+        }
+    }
+    true
+}
+
+/// Autotune a tile for `method` at problem bucket `bucket`: structural
+/// filter over Table 3's space (plus the accuracy rule when
+/// `cfg.autotune_probe > 0`), ranked by `autotune::score`, returning the
+/// best-scored candidate that also passes [`tile_is_safe`] — a rejected
+/// winner falls through to the next-ranked candidate, not straight to the
+/// default. `TileConfig::default()` (the engine's long-tested shape) is
+/// the last resort when tuning is disabled or nothing survives.
+pub fn choose_tile(method: Method, bucket: usize, cfg: &PlannerConfig) -> TileConfig {
+    if !cfg.autotune_tiles {
+        return TileConfig::default();
+    }
+    let tf32 = matches!(method, Method::OursTf32 | Method::Tf32Tc);
+    let backend = (cfg.autotune_probe > 0).then(|| method.make_backend());
+    let (ok, _) = filter_space(&cfg.gpu, tf32, backend.as_deref(), cfg.autotune_probe);
+    let mut scored: Vec<(TileConfig, f64)> =
+        ok.into_iter().map(|c| (c, score(&c, &cfg.gpu, method, bucket))).collect();
+    scored.sort_by(|a, b| b.1.total_cmp(&a.1));
+    scored
+        .into_iter()
+        .map(|(c, _)| c)
+        .find(|c| tile_is_safe(c, method, cfg))
+        .unwrap_or_default()
+}
+
+impl PlanCache {
+    /// Cache holding at most `plan_capacity` finished plans (LRU-evicted);
+    /// the tile memo is unbounded (its key space is tiny).
+    pub fn new(plan_capacity: usize) -> PlanCache {
+        assert!(plan_capacity >= 1, "PlanCache capacity must be at least 1");
+        PlanCache {
+            plan_capacity,
+            plans: Mutex::new(LruMap::new(plan_capacity)),
+            tiles: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Return the cached plan for (shape, selector), building and caching
+    /// it on a miss. `build` runs outside the cache lock.
+    pub fn get_or_plan(
+        &self,
+        m: usize,
+        n: usize,
+        k: usize,
+        sel: PlanSelector,
+        build: impl FnOnce() -> ExecPlan,
+    ) -> Arc<ExecPlan> {
+        let key = PlanKey { m, n, k, sel };
+        if let Some(plan) = self.plans.lock().unwrap().get(&key) {
+            let plan = Arc::clone(plan);
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return plan;
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let plan = Arc::new(build());
+        self.plans.lock().unwrap().insert(key, Arc::clone(&plan));
+        plan
+    }
+
+    /// The memoized tile for (method, bucket, cfg.gpu) — autotuned on first
+    /// use; unverified (primed) entries are validated or replaced before
+    /// they can serve (module docs).
+    pub fn tile_for(&self, method: Method, bucket: usize, cfg: &PlannerConfig) -> TileConfig {
+        let key = TileKey { method, bucket, gpu: cfg.gpu.name };
+        let candidate = {
+            let g = self.tiles.lock().unwrap();
+            g.get(&key).copied()
+        };
+        let tile = match candidate {
+            Some(e) if e.verified => return e.tile,
+            Some(e) if tile_is_safe(&e.tile, method, cfg) => e.tile,
+            // Poisoned prime or cold entry: (re)tune. `choose_tile` only
+            // returns safety-checked tiles.
+            _ => choose_tile(method, bucket, cfg),
+        };
+        self.tiles.lock().unwrap().insert(key, TileEntry { tile, verified: true });
+        tile
+    }
+
+    /// Insert an externally supplied tile for (method, bucket, gpu) —
+    /// e.g. from a hardware tuner run, or a test poisoning the cache. The
+    /// entry is held *unverified* and must pass [`tile_is_safe`] before it
+    /// is ever served.
+    pub fn prime_tile(&self, method: Method, bucket: usize, gpu: &'static str, tile: TileConfig) {
+        let key = TileKey { method, bucket, gpu };
+        self.tiles.lock().unwrap().insert(key, TileEntry { tile, verified: false });
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Number of cached plans (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.plans.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.plans.lock().unwrap().is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.plan_capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> PlannerConfig {
+        PlannerConfig::default()
+    }
+
+    #[test]
+    fn plans_are_cached_per_shape_and_selector() {
+        let pc = PlanCache::new(8);
+        let sel = PlanSelector::Forced { method: Method::Fp32Simt };
+        let build = || super::super::plan_for_method(Method::Fp32Simt, 32, 32, 32, &cfg());
+        let p1 = pc.get_or_plan(32, 32, 32, sel, build);
+        let p2 = pc.get_or_plan(32, 32, 32, sel, || panic!("must hit"));
+        assert!(Arc::ptr_eq(&p1, &p2));
+        assert_eq!((pc.hits(), pc.misses()), (1, 1));
+        // A different selector for the same shape is a distinct plan.
+        let sel2 = PlanSelector::Routed {
+            class: RangeClass::HalfHalfExact,
+            policy: Policy::Fp32Accuracy,
+        };
+        pc.get_or_plan(32, 32, 32, sel2, build);
+        assert_eq!((pc.hits(), pc.misses()), (1, 2));
+        assert_eq!(pc.len(), 2);
+    }
+
+    #[test]
+    fn plan_lru_evicts_coldest() {
+        let pc = PlanCache::new(2);
+        let build = || super::super::plan_for_method(Method::Fp32Simt, 8, 8, 8, &cfg());
+        let sel = PlanSelector::Forced { method: Method::Fp32Simt };
+        pc.get_or_plan(8, 8, 8, sel, build); // miss
+        pc.get_or_plan(16, 16, 16, sel, build); // miss
+        pc.get_or_plan(8, 8, 8, sel, build); // hit — 8³ hottest
+        pc.get_or_plan(24, 24, 24, sel, build); // miss, evicts 16³
+        assert_eq!(pc.len(), 2);
+        pc.get_or_plan(16, 16, 16, sel, build); // evicted → miss
+        assert_eq!((pc.hits(), pc.misses()), (1, 4));
+    }
+
+    #[test]
+    fn poisoned_tile_entries_never_serve() {
+        let c = cfg();
+        let pc = PlanCache::new(4);
+        // Poison 1: degenerate dimensions that would hang the engine.
+        let hang = TileConfig { bm: 64, bn: 64, bk: 0, wm: 32, wn: 32, wk: 0, stages: 3 };
+        pc.prime_tile(Method::OursHalfHalf, 64, c.gpu.name, hang);
+        let served = pc.tile_for(Method::OursHalfHalf, 64, &c);
+        assert_ne!(served, hang, "degenerate poison must not serve");
+        // Poison 2: structurally invalid (warp tile exceeds block tile).
+        let warp = TileConfig { bm: 16, bn: 16, bk: 16, wm: 32, wn: 16, wk: 16, stages: 3 };
+        pc.prime_tile(Method::OursTf32, 64, c.gpu.name, warp);
+        let served = pc.tile_for(Method::OursTf32, 64, &c);
+        assert_ne!(served, warp, "structural poison must not serve");
+        // Whatever replaced the poison passes both autotune filters.
+        let hh_served = pc.tile_for(Method::OursHalfHalf, 64, &c);
+        for (m, t) in [(Method::OursHalfHalf, hh_served), (Method::OursTf32, served)] {
+            let tf32 = matches!(m, Method::OursTf32 | Method::Tf32Tc);
+            assert!(structural_filter(&t, &c.gpu, tf32).is_ok());
+            let be = m.make_backend();
+            assert!(accuracy_filter(&t, be.as_ref(), 16).is_ok(), "{}: {t:?}", m.name());
+        }
+    }
+
+    #[test]
+    fn primed_safe_tile_is_served_after_validation() {
+        let c = cfg();
+        let pc = PlanCache::new(4);
+        let good = TileConfig::default();
+        pc.prime_tile(Method::OursHalfHalf, 128, c.gpu.name, good);
+        assert_eq!(pc.tile_for(Method::OursHalfHalf, 128, &c), good);
+    }
+
+    #[test]
+    fn autotuned_tile_is_stable_and_safe() {
+        let c = cfg();
+        let pc = PlanCache::new(4);
+        let t1 = pc.tile_for(Method::OursHalfHalf, 256, &c);
+        let t2 = pc.tile_for(Method::OursHalfHalf, 256, &c);
+        assert_eq!(t1, t2, "memoized tile must be deterministic");
+        assert!(tile_is_safe(&t1, Method::OursHalfHalf, &c));
+    }
+}

@@ -1,0 +1,96 @@
+//! Tick-stamped LRU map shared by the planner's caches.
+//!
+//! [`ProbeCache`](super::ProbeCache) and [`PlanCache`](super::PlanCache)
+//! both need the same structure — a bounded map whose hits restamp a
+//! monotone tick and whose inserts evict the least-recently-used entry —
+//! so it lives here once instead of twice. (The coordinator's
+//! `SplitCache` predates the planner and keeps its own copy because its
+//! entries carry the original operand for exact collision rejection; a
+//! future unification would migrate it onto this type.) Eviction is a
+//! linear scan, fine at the bounded capacities these caches run with.
+
+use std::collections::HashMap;
+use std::hash::Hash;
+
+#[derive(Debug)]
+struct Entry<V> {
+    value: V,
+    last_used: u64,
+}
+
+/// Bounded map with least-recently-used eviction. Not internally locked —
+/// callers wrap it in their own `Mutex` (so a hit's restamp and a miss's
+/// insert each happen under one lock acquisition).
+#[derive(Debug)]
+pub(crate) struct LruMap<K, V> {
+    capacity: usize,
+    map: HashMap<K, Entry<V>>,
+    tick: u64,
+}
+
+impl<K: Eq + Hash + Clone, V> LruMap<K, V> {
+    pub fn new(capacity: usize) -> LruMap<K, V> {
+        assert!(capacity >= 1, "LRU capacity must be at least 1");
+        LruMap { capacity, map: HashMap::new(), tick: 0 }
+    }
+
+    /// Look up `key`, restamping it most-recently-used on a hit.
+    pub fn get(&mut self, key: &K) -> Option<&V> {
+        self.tick += 1;
+        let tick = self.tick;
+        match self.map.get_mut(key) {
+            Some(e) => {
+                e.last_used = tick;
+                Some(&e.value)
+            }
+            None => None,
+        }
+    }
+
+    /// Insert `key → value`, evicting the least-recently-used entry when
+    /// a new key would exceed capacity.
+    pub fn insert(&mut self, key: K, value: V) {
+        self.tick += 1;
+        let tick = self.tick;
+        if !self.map.contains_key(&key) && self.map.len() >= self.capacity {
+            let victim =
+                self.map.iter().min_by_key(|(_, e)| e.last_used).map(|(k, _)| k.clone());
+            if let Some(victim) = victim {
+                self.map.remove(&victim);
+            }
+        }
+        self.map.insert(key, Entry { value, last_used: tick });
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_restamps_and_eviction_takes_the_coldest() {
+        let mut lru: LruMap<u32, &'static str> = LruMap::new(2);
+        assert!(lru.is_empty());
+        lru.insert(1, "one");
+        lru.insert(2, "two");
+        assert_eq!(lru.get(&1), Some(&"one")); // 1 now hottest
+        lru.insert(3, "three"); // evicts 2
+        assert_eq!(lru.len(), 2);
+        assert_eq!(lru.get(&2), None);
+        assert_eq!(lru.get(&1), Some(&"one"));
+        assert_eq!(lru.get(&3), Some(&"three"));
+        // Re-inserting an existing key must not evict anyone.
+        lru.insert(1, "uno");
+        assert_eq!(lru.len(), 2);
+        assert_eq!(lru.get(&1), Some(&"uno"));
+        assert_eq!(lru.get(&3), Some(&"three"));
+    }
+}

@@ -1,0 +1,531 @@
+//! L2.5: the unified cost-based execution planner (DESIGN.md §9).
+//!
+//! Before this layer existed, the three decisions a GEMM request needs were
+//! made in three unrelated places with three different inputs: the exponent
+//! probe + method choice lived in `coordinator::policy` (a full O(mn) scan
+//! per operand per request, on the dispatcher thread), tile selection was
+//! hardcoded to `TileConfig::default()` in serving (leaving the Table 3
+//! autotuner as dead weight), and `shard::plan` ran *inside* the sharded
+//! executor, blind to what the router had decided. This module fuses them
+//! into one [`ExecPlan`] from a single entry point:
+//!
+//! ```text
+//! probe (sampled + ProbeCache) → admissible methods (policy × Fig. 11
+//! class) → cost tie-break (perfmodel::projected_tflops) → tile memo
+//! (autotune, per (method, n-bucket, gpu)) → shard gate (shard::plan over
+//! the chosen tile) → ExecPlan { method, tile, shard, prescale, est_cost }
+//! ```
+//!
+//! The stateless functions ([`plan`], [`select_method`], [`admissible`])
+//! do one-shot planning; [`Planner`] adds the caches the serving hot path
+//! needs ([`ProbeCache`], [`PlanCache`]) plus [`Planner::explain`], the
+//! `tcec plan` CLI's view of the decision with every rejected alternative
+//! and its estimated throughput. `coordinator::policy::route` is a thin
+//! compat shim over [`select_method`], so legacy callers keep the exact
+//! routing table they had.
+
+pub mod cache;
+mod lru;
+pub mod probe;
+
+pub use cache::{choose_tile, tile_is_safe, PlanCache, PlanSelector};
+pub use probe::{probe_sampled, sampled_fingerprint, ProbeCache};
+
+use crate::autotune::score;
+use crate::coordinator::{Policy, RangeClass};
+use crate::gemm::{Mat, Method, TileConfig};
+use crate::perfmodel::{projected_tflops, GpuSpec, A100};
+use crate::shard::{self, ShardConfig, ShardPlan};
+use std::sync::Arc;
+
+/// Planner policy knobs. `Default` is the serving configuration: autotuned
+/// tiles (structural + score ranking), cached sampled probes, no sharding
+/// (the service injects its own `ShardConfig` when sharding is on).
+#[derive(Debug, Clone)]
+pub struct PlannerConfig {
+    /// GPU model behind every cost estimate (and part of the tile-memo key).
+    pub gpu: GpuSpec,
+    /// Autotune tile shapes per (method, n-bucket); false pins
+    /// `TileConfig::default()` for every plan.
+    pub autotune_tiles: bool,
+    /// Probe size of the autotuner's accuracy rule (Table 3 rule 3);
+    /// 0 = structural filters + score ranking only.
+    pub autotune_probe: usize,
+    /// Probe size used to re-verify primed/cached tiles before first serve
+    /// (`autotune::accuracy_filter`); 0 disables re-verification.
+    pub verify_probe: usize,
+    /// Sampled-probe cap: operands with more elements than this are
+    /// classified (and fingerprinted) from this many strided samples;
+    /// 0 = always exact. See `planner::probe` for the exactness trade.
+    pub probe_samples: usize,
+    /// Entry capacity of the [`ProbeCache`].
+    pub probe_cache_entries: usize,
+    /// Entry capacity of the [`PlanCache`]'s plan map.
+    pub plan_cache_entries: usize,
+    /// Shard planning config; `None` plans everything unsharded. The
+    /// engine tile inside is overridden per-plan with the planned tile.
+    pub shard: Option<ShardConfig>,
+}
+
+impl Default for PlannerConfig {
+    fn default() -> Self {
+        PlannerConfig {
+            gpu: A100,
+            autotune_tiles: true,
+            autotune_probe: 0,
+            verify_probe: 16,
+            probe_samples: 4096,
+            probe_cache_entries: 256,
+            plan_cache_entries: 256,
+            shard: None,
+        }
+    }
+}
+
+/// Everything the execution layers need to run one GEMM request: which
+/// backend, under which tile shape, sharded or not, with the exponent
+/// pre-scale hoisted or not — plus the cost estimate that justified it.
+#[derive(Debug, Clone)]
+pub struct ExecPlan {
+    pub method: Method,
+    /// The tile configuration the engine executes under (autotuned per
+    /// (method, n-bucket, gpu), or `TileConfig::default()`).
+    pub tile: TileConfig,
+    /// Shard grid for large problems (`None` = single-kernel path). Its
+    /// `engine_tile` always equals `tile`.
+    pub shard: Option<ShardPlan>,
+    /// True when the method applies the exact exponent pre-scale before
+    /// splitting (`halfhalf_prescale`); the shard path hoists it above the
+    /// cut.
+    pub prescale: bool,
+    /// Tile-aware projected throughput of (method, tile) at this problem
+    /// size (`autotune::score`, TFlop/s).
+    pub est_cost_tflops: f64,
+}
+
+impl ExecPlan {
+    /// The `TileConfig` whose plain `Method::run` this plan's execution
+    /// reproduces bit-for-bit: the planned tile itself, or — for sharded
+    /// plans — the shard plan's equivalent tile (k-split widening).
+    pub fn equivalent_tile(&self) -> TileConfig {
+        match &self.shard {
+            Some(sp) => sp.equivalent_tile(),
+            None => self.tile,
+        }
+    }
+}
+
+/// Effective square dimension of an `m×k · k×n` problem for the (cubic)
+/// cost model: `cbrt(m·n·k)`, at least 1.
+pub fn effective_n(m: usize, n: usize, k: usize) -> usize {
+    (((m * n * k) as f64).cbrt().round() as usize).max(1)
+}
+
+/// Tile-memo bucket: [`effective_n`] rounded up to a power of two, so the
+/// autotuner runs once per size class instead of once per exact shape.
+pub fn n_bucket(m: usize, n: usize, k: usize) -> usize {
+    effective_n(m, n, k).next_power_of_two()
+}
+
+/// The methods that meet `policy`'s accuracy contract for inputs of
+/// `class`, in accuracy-preference order. The cost model breaks ties
+/// toward earlier entries, which is exactly the legacy `policy::route`
+/// table — `route` is now a shim over [`select_method`] and its tests
+/// pin that equivalence.
+pub fn admissible(policy: Policy, class: RangeClass) -> &'static [Method] {
+    match (policy, class) {
+        // Bit-level FP32 reproducibility: Tensor Cores never admissible.
+        (Policy::StrictFp32, _) => &[Method::Fp32Simt],
+        // Non-finite or split-headroom-free inputs: SIMT only (Fig. 11
+        // Type 4 has no correction story at either precision).
+        (_, RangeClass::Extreme) => &[Method::Fp32Simt],
+        (Policy::LowPrecisionOk, RangeClass::HalfHalfExact | RangeClass::HalfHalfDegraded) => {
+            &[Method::Fp16Tc, Method::Tf32Tc, Method::Fp32Simt]
+        }
+        (Policy::LowPrecisionOk, RangeClass::NeedsWideExponent) => {
+            &[Method::Tf32Tc, Method::Fp32Simt]
+        }
+        (Policy::Fp32Accuracy, RangeClass::HalfHalfExact) => {
+            &[Method::OursHalfHalf, Method::OursTf32, Method::Fp32Simt]
+        }
+        // Degraded or wide range: tf32tf32 keeps FP32's exponent range
+        // (Fig. 11: same accuracy as SIMT in all four types).
+        (
+            Policy::Fp32Accuracy,
+            RangeClass::HalfHalfDegraded | RangeClass::NeedsWideExponent,
+        ) => &[Method::OursTf32, Method::Fp32Simt],
+    }
+}
+
+/// Pick the cheapest admissible method by projected throughput at
+/// effective size `n_eff`, breaking ties toward the accuracy-preference
+/// order of [`admissible`].
+pub fn select_method(policy: Policy, class: RangeClass, gpu: &GpuSpec, n_eff: usize) -> Method {
+    let cands = admissible(policy, class);
+    let mut best = cands[0];
+    let mut best_cost = projected_tflops(gpu, best, n_eff);
+    for &m in &cands[1..] {
+        let c = projected_tflops(gpu, m, n_eff);
+        if c > best_cost {
+            best = m;
+            best_cost = c;
+        }
+    }
+    best
+}
+
+/// Core plan construction once the method is fixed. `extreme` (non-finite
+/// or split-headroom-free inputs) and degenerate shapes force the
+/// unsharded path; degenerate shapes also carry a zero cost estimate
+/// instead of feeding the cost model dimensions it would NaN on.
+fn build_plan(
+    method: Method,
+    m: usize,
+    n: usize,
+    k: usize,
+    extreme: bool,
+    cfg: &PlannerConfig,
+    tiles: Option<&PlanCache>,
+) -> ExecPlan {
+    let n_eff = effective_n(m, n, k);
+    let bucket = n_bucket(m, n, k);
+    let tile = match tiles {
+        Some(pc) => pc.tile_for(method, bucket, cfg),
+        None => choose_tile(method, bucket, cfg),
+    };
+    let degenerate = m == 0 || n == 0 || k == 0;
+    let shard_plan = if extreme || degenerate {
+        None
+    } else {
+        cfg.shard.as_ref().and_then(|sc| {
+            let sc = ShardConfig { engine_tile: tile, gpu: cfg.gpu, ..sc.clone() };
+            shard::plan(m, n, k, method, &sc)
+        })
+    };
+    let est = if degenerate { 0.0 } else { score(&tile, &cfg.gpu, method, n_eff) };
+    ExecPlan {
+        method,
+        tile,
+        shard: shard_plan,
+        prescale: method == Method::OursHalfHalfPre,
+        est_cost_tflops: est,
+    }
+}
+
+/// One-shot planning without a [`Planner`]'s caches: probe class and
+/// policy in, a complete [`ExecPlan`] out. The single entry point behind
+/// which the router, the tile memo and the shard gate were unified —
+/// serving goes through [`Planner::plan_request`] for the cached version.
+pub fn plan(
+    m: usize,
+    n: usize,
+    k: usize,
+    class: RangeClass,
+    policy: Policy,
+    cfg: &PlannerConfig,
+) -> ExecPlan {
+    let method = select_method(policy, class, &cfg.gpu, effective_n(m, n, k));
+    build_plan(method, m, n, k, class == RangeClass::Extreme, cfg, None)
+}
+
+/// One-shot planning with the method pinned (`force_method`, benches,
+/// shard-internal sub-plans): tile memo and shard gate still apply.
+pub fn plan_for_method(
+    method: Method,
+    m: usize,
+    n: usize,
+    k: usize,
+    cfg: &PlannerConfig,
+) -> ExecPlan {
+    build_plan(method, m, n, k, false, cfg, None)
+}
+
+/// One rejected (or tied) candidate in an [`Explain`] report.
+#[derive(Debug, Clone)]
+pub struct Alternative {
+    pub method: Method,
+    /// The cost-model estimate that ranked it (TFlop/s at `effective_n`).
+    pub projected_tflops: f64,
+    /// False when the (policy, class) pair rules the method out before
+    /// cost is even consulted.
+    pub admissible: bool,
+    pub why: String,
+}
+
+/// The `tcec plan` view of one planning decision: the chosen plan plus
+/// every other method with its estimated throughput and rejection reason.
+#[derive(Debug, Clone)]
+pub struct Explain {
+    pub class: RangeClass,
+    pub policy: Policy,
+    pub chosen: Arc<ExecPlan>,
+    /// Every non-chosen method, admissible candidates first, each ranked
+    /// by projected TFlop/s.
+    pub rejected: Vec<Alternative>,
+}
+
+/// The stateful planner: one instance per service, owning the probe and
+/// plan caches. All methods take `&self`; the caches are internally
+/// locked, so a `Planner` can be shared across dispatcher and workers in
+/// an `Arc`.
+#[derive(Debug)]
+pub struct Planner {
+    cfg: PlannerConfig,
+    probes: ProbeCache,
+    plans: PlanCache,
+}
+
+impl Planner {
+    pub fn new(cfg: PlannerConfig) -> Planner {
+        let probes = ProbeCache::new(cfg.probe_cache_entries.max(1), cfg.probe_samples);
+        let plans = PlanCache::new(cfg.plan_cache_entries.max(1));
+        Planner { cfg, probes, plans }
+    }
+
+    pub fn config(&self) -> &PlannerConfig {
+        &self.cfg
+    }
+
+    pub fn probe_cache(&self) -> &ProbeCache {
+        &self.probes
+    }
+
+    pub fn plan_cache(&self) -> &PlanCache {
+        &self.plans
+    }
+
+    /// Classify one operand's exponent range through the probe cache.
+    pub fn classify(&self, m: &Mat) -> RangeClass {
+        self.probes.classify(m)
+    }
+
+    /// The serving entry point: classify both operands (cached, sampled),
+    /// combine with the worse class (one bad operand is enough — the
+    /// paper's Type 2 case), and plan under `policy`.
+    pub fn plan_request(&self, a: &Mat, b: &Mat, policy: Policy) -> Arc<ExecPlan> {
+        let class = self.classify(a).max(self.classify(b));
+        self.plan_routed(a.rows, b.cols, a.cols, class, policy)
+    }
+
+    /// Cached planning for an already-classified request.
+    pub fn plan_routed(
+        &self,
+        m: usize,
+        n: usize,
+        k: usize,
+        class: RangeClass,
+        policy: Policy,
+    ) -> Arc<ExecPlan> {
+        self.plans.get_or_plan(m, n, k, PlanSelector::Routed { class, policy }, || {
+            let method = select_method(policy, class, &self.cfg.gpu, effective_n(m, n, k));
+            build_plan(
+                method,
+                m,
+                n,
+                k,
+                class == RangeClass::Extreme,
+                &self.cfg,
+                Some(&self.plans),
+            )
+        })
+    }
+
+    /// Cached planning with the method pinned (the `force_method` path).
+    pub fn plan_for_method(&self, method: Method, m: usize, n: usize, k: usize) -> Arc<ExecPlan> {
+        self.plans.get_or_plan(m, n, k, PlanSelector::Forced { method }, || {
+            build_plan(method, m, n, k, false, &self.cfg, Some(&self.plans))
+        })
+    }
+
+    /// Explain-style planning: the chosen plan plus every rejected
+    /// alternative with its estimated throughput (the `tcec plan` output).
+    pub fn explain(
+        &self,
+        m: usize,
+        n: usize,
+        k: usize,
+        class: RangeClass,
+        policy: Policy,
+    ) -> Explain {
+        let chosen = self.plan_routed(m, n, k, class, policy);
+        let n_eff = effective_n(m, n, k);
+        let chosen_cost = projected_tflops(&self.cfg.gpu, chosen.method, n_eff);
+        let adm = admissible(policy, class);
+        let mut rejected = Vec::new();
+        for &mm in &Method::ALL {
+            if mm == chosen.method {
+                continue;
+            }
+            let cost = projected_tflops(&self.cfg.gpu, mm, n_eff);
+            let (is_adm, why) = if adm.contains(&mm) {
+                (
+                    true,
+                    format!(
+                        "admissible; projected {cost:.1} TFlop/s does not beat {chosen_cost:.1}"
+                    ),
+                )
+            } else {
+                (false, format!("inadmissible under {policy:?} for {class:?} inputs"))
+            };
+            rejected.push(Alternative {
+                method: mm,
+                projected_tflops: cost,
+                admissible: is_adm,
+                why,
+            });
+        }
+        rejected.sort_by(|x, y| {
+            y.admissible
+                .cmp(&x.admissible)
+                .then(y.projected_tflops.total_cmp(&x.projected_tflops))
+        });
+        Explain { class, policy, chosen, rejected }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matgen::urand;
+
+    #[test]
+    fn select_method_reproduces_legacy_route_table() {
+        // The exact (policy, class) → method table `policy::route`
+        // encoded before it became a shim. Cost ties break toward the
+        // accuracy-preference order, so this holds at every size.
+        use Method::*;
+        use Policy::*;
+        use RangeClass::*;
+        let table = [
+            (Fp32Accuracy, HalfHalfExact, OursHalfHalf),
+            (Fp32Accuracy, HalfHalfDegraded, OursTf32),
+            (Fp32Accuracy, NeedsWideExponent, OursTf32),
+            (Fp32Accuracy, Extreme, Fp32Simt),
+            (LowPrecisionOk, HalfHalfExact, Fp16Tc),
+            (LowPrecisionOk, HalfHalfDegraded, Fp16Tc),
+            (LowPrecisionOk, NeedsWideExponent, Tf32Tc),
+            (LowPrecisionOk, Extreme, Fp32Simt),
+            (StrictFp32, HalfHalfExact, Fp32Simt),
+            (StrictFp32, NeedsWideExponent, Fp32Simt),
+        ];
+        // Every power of two through paper scale, plus odd off-bucket
+        // sizes, so a cost-model crossover at ANY size would be caught —
+        // `policy::route` (the shim) inherits this table verbatim.
+        let sweep = (0..=14).map(|p| 1usize << p).chain([3usize, 37, 100, 1000, 5000]);
+        for n_eff in sweep {
+            for &(policy, class, want) in &table {
+                assert_eq!(
+                    select_method(policy, class, &A100, n_eff),
+                    want,
+                    "({policy:?}, {class:?}) at n_eff {n_eff}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn plan_shards_only_above_threshold_and_with_config() {
+        let unsharded = PlannerConfig::default();
+        let p = plan(512, 512, 512, RangeClass::HalfHalfExact, Policy::Fp32Accuracy, &unsharded);
+        assert!(p.shard.is_none(), "no shard config → no shard plan");
+        let sharded = PlannerConfig {
+            shard: Some(ShardConfig { workers: 4, ..ShardConfig::default() }),
+            ..PlannerConfig::default()
+        };
+        let p = plan(512, 512, 512, RangeClass::HalfHalfExact, Policy::Fp32Accuracy, &sharded);
+        let sp = p.shard.as_ref().expect("512³ clears the default threshold");
+        assert_eq!(sp.engine_tile, p.tile, "shard grid must align to the planned tile");
+        let small = plan(32, 32, 32, RangeClass::HalfHalfExact, Policy::Fp32Accuracy, &sharded);
+        assert!(small.shard.is_none(), "below threshold stays unsharded");
+    }
+
+    #[test]
+    fn extreme_inputs_plan_fp32_simt_unsharded() {
+        // Even with sharding configured and the threshold at zero, extreme
+        // (non-finite / headroom-free) inputs take the conservative path.
+        let cfg = PlannerConfig {
+            shard: Some(ShardConfig { workers: 4, min_flops: 0, ..ShardConfig::default() }),
+            ..PlannerConfig::default()
+        };
+        for policy in [Policy::Fp32Accuracy, Policy::LowPrecisionOk, Policy::StrictFp32] {
+            let p = plan(256, 256, 256, RangeClass::Extreme, policy, &cfg);
+            assert_eq!(p.method, Method::Fp32Simt, "{policy:?}");
+            assert!(p.shard.is_none(), "{policy:?}: extreme inputs must not shard");
+        }
+        // End-to-end: a non-finite operand classifies Extreme through the
+        // planner's sampled probe and lands on the same plan.
+        let planner = Planner::new(cfg);
+        let mut inf = urand(16, 16, -1.0, 1.0, 1);
+        inf.set(3, 3, f32::NEG_INFINITY);
+        let good = urand(16, 16, -1.0, 1.0, 2);
+        let p = planner.plan_request(&inf, &good, Policy::Fp32Accuracy);
+        assert_eq!(p.method, Method::Fp32Simt);
+        assert!(p.shard.is_none());
+        // Huge-magnitude (e = 127) inputs too.
+        let big = urand(16, 16, 2.0e38, 3.0e38, 3);
+        let p = planner.plan_request(&big, &good, Policy::LowPrecisionOk);
+        assert_eq!(p.method, Method::Fp32Simt);
+    }
+
+    #[test]
+    fn degenerate_shapes_plan_without_panicking() {
+        let cfg = PlannerConfig {
+            shard: Some(ShardConfig { workers: 4, min_flops: 0, ..ShardConfig::default() }),
+            ..PlannerConfig::default()
+        };
+        for (m, n, k) in [(0, 16, 16), (16, 0, 16), (16, 16, 0), (0, 0, 0)] {
+            let p = plan(m, n, k, RangeClass::HalfHalfExact, Policy::Fp32Accuracy, &cfg);
+            assert!(p.shard.is_none(), "({m},{n},{k}): trivial plans never shard");
+            assert_eq!(p.est_cost_tflops, 0.0, "({m},{n},{k}): zero work, zero cost");
+            assert!(p.tile.bm > 0 && p.tile.bk > 0, "({m},{n},{k}): tile must stay runnable");
+            // And the planned single-kernel path actually executes.
+            let a = Mat::zeros(m, k);
+            let b = Mat::zeros(k, n);
+            let c = p.method.run(&a, &b, &p.tile);
+            assert_eq!((c.rows, c.cols), (m, n));
+        }
+    }
+
+    #[test]
+    fn planner_caches_plans_and_probes() {
+        let planner = Planner::new(PlannerConfig::default());
+        let w = urand(24, 24, -1.0, 1.0, 40);
+        let a0 = urand(24, 24, -1.0, 1.0, 41);
+        let a1 = urand(24, 24, -1.0, 1.0, 42);
+        let p0 = planner.plan_request(&a0, &w, Policy::Fp32Accuracy);
+        let p1 = planner.plan_request(&a1, &w, Policy::Fp32Accuracy);
+        assert!(Arc::ptr_eq(&p0, &p1), "same shape/class/policy must reuse the plan");
+        // a0, a1 and w each probed once; w hit on the second request.
+        assert_eq!(planner.probe_cache().misses(), 3);
+        assert_eq!(planner.probe_cache().hits(), 1);
+        assert_eq!(planner.plan_cache().misses(), 1);
+        assert_eq!(planner.plan_cache().hits(), 1);
+    }
+
+    #[test]
+    fn explain_reports_rejections_with_costs() {
+        let planner = Planner::new(PlannerConfig::default());
+        let ex =
+            planner.explain(1024, 1024, 1024, RangeClass::HalfHalfExact, Policy::Fp32Accuracy);
+        assert_eq!(ex.chosen.method, Method::OursHalfHalf);
+        // Every other method appears with a cost and a reason.
+        assert_eq!(ex.rejected.len(), Method::ALL.len() - 1);
+        assert!(ex.rejected.iter().all(|r| r.projected_tflops.is_finite()));
+        assert!(ex.rejected.iter().all(|r| !r.why.is_empty()));
+        // Admissible-but-slower candidates rank first.
+        assert!(ex.rejected[0].admissible);
+        assert_eq!(ex.rejected[0].method, Method::OursTf32);
+        let inadmissible = ex.rejected.iter().filter(|r| !r.admissible).count();
+        assert!(inadmissible >= 2, "at least two inadmissible alternatives reported");
+    }
+
+    #[test]
+    fn forced_plans_reuse_the_tile_memo() {
+        let planner = Planner::new(PlannerConfig::default());
+        let routed =
+            planner.plan_routed(64, 64, 64, RangeClass::HalfHalfExact, Policy::Fp32Accuracy);
+        let forced = planner.plan_for_method(Method::OursHalfHalf, 64, 64, 64);
+        assert_eq!(routed.method, forced.method);
+        assert_eq!(routed.tile, forced.tile, "both selectors share the (method, bucket) tile");
+    }
+}

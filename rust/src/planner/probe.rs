@@ -1,0 +1,240 @@
+//! Sampled exponent-range probing and the fingerprint-keyed [`ProbeCache`].
+//!
+//! The legacy router (`coordinator::policy::probe`) scans every element of
+//! both operands on the dispatcher thread, per request — O(mn) per operand
+//! even when the same weight matrix arrives with every request. This module
+//! replaces that hot-path scan with two bounded-cost pieces:
+//!
+//! * [`probe_sampled`] — classify from a deterministic strided sample of at
+//!   most `cap` elements (exact and identical to the full scan for operands
+//!   with ≤ `cap` elements);
+//! * [`ProbeCache`] — an LRU-bounded cache keyed on (shape, sampled content
+//!   fingerprint), mirroring the `SplitCache`, so a repeated weight is
+//!   probed once and every later arrival costs O(cap).
+//!
+//! **Exactness trade, stated plainly.** Both the sampled probe and the
+//! sampled fingerprint can mistake one matrix for another (an outlier
+//! element that no sample lands on; two distinct matrices agreeing on
+//! every sampled element). The common consequence is accuracy headroom:
+//! the class only selects which backend runs, so e.g. halfhalf may serve
+//! a Type-3 input (Fig. 11) at degraded accuracy. The worst case is
+//! sharper and worth knowing: an unsampled *Extreme* element (non-finite,
+//! or at the top of the f32 exponent range) means a split method can be
+//! chosen whose f16/tf32 conversion overflows, so the served result can
+//! carry Inf/NaN where the exact probe would have routed the request to
+//! `Fp32Simt` — deterministic and shape-correct, but not the number a
+//! full scan would have produced. Callers that must not take that risk
+//! (hostile/unvalidated inputs) set `probe_samples = 0` to restore the
+//! exact scan, and callers that need the exact Fig. 11 classification
+//! (the `policy::route` compat shim, offline analysis) keep using the
+//! full scan unconditionally.
+
+use super::lru::LruMap;
+use crate::coordinator::policy::{class_of_max_exponent, RangeClass};
+use crate::fp::mantissa::exponent_of;
+use crate::gemm::prepared::fingerprint_bits;
+use crate::gemm::{content_fingerprint, Mat};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Visit the deterministic sample positions of a `len`-element buffer:
+/// every index when `len <= cap` (or `cap == 0`), otherwise `cap` evenly
+/// strided indices (always including index 0).
+fn for_each_sample(len: usize, cap: usize, mut f: impl FnMut(usize)) {
+    if cap == 0 || len <= cap {
+        for i in 0..len {
+            f(i);
+        }
+    } else {
+        for i in 0..cap {
+            f(i * len / cap);
+        }
+    }
+}
+
+/// Sampled exponent-range probe: identical to
+/// [`coordinator::policy::probe`](crate::coordinator::policy::probe) for
+/// operands with at most `cap` elements (or `cap == 0`); larger operands
+/// are classified from `cap` strided samples (see the module docs for the
+/// exactness trade).
+pub fn probe_sampled(m: &Mat, cap: usize) -> RangeClass {
+    let mut max_e = i32::MIN;
+    let mut extreme = false;
+    for_each_sample(m.data.len(), cap, |i| {
+        let v = m.data[i];
+        if v == 0.0 {
+            return;
+        }
+        if !v.is_finite() {
+            extreme = true;
+            return;
+        }
+        max_e = max_e.max(exponent_of(v));
+    });
+    if extreme {
+        return RangeClass::Extreme;
+    }
+    class_of_max_exponent(max_e)
+}
+
+/// 128-bit content fingerprint over the same strided sample
+/// [`probe_sampled`] reads (the full
+/// [`content_fingerprint`](crate::gemm::content_fingerprint) when the
+/// buffer fits under `cap`), built on the same
+/// [`fingerprint_bits`](crate::gemm::prepared::fingerprint_bits) mixer so
+/// the two can never drift structurally. O(cap) per lookup — this is what
+/// keeps the cache's per-request cost bounded for arbitrarily large
+/// operands.
+pub fn sampled_fingerprint(data: &[f32], cap: usize) -> u128 {
+    if cap == 0 || data.len() <= cap {
+        return content_fingerprint(data);
+    }
+    let len = data.len();
+    fingerprint_bits((0..cap).map(|i| data[i * len / cap].to_bits() as u64), len)
+}
+
+/// (rows, cols, sampled fingerprint).
+type ProbeKey = (usize, usize, u128);
+
+/// LRU-bounded cache of operand range classes, keyed on shape + sampled
+/// content fingerprint. Mirrors the `SplitCache`'s shape (via the shared
+/// `planner::lru::LruMap`): hit/miss counters surface in
+/// `Metrics::snapshot` when a `Planner` is registered with the service
+/// metrics.
+#[derive(Debug)]
+pub struct ProbeCache {
+    capacity: usize,
+    sample_cap: usize,
+    inner: Mutex<LruMap<ProbeKey, RangeClass>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl ProbeCache {
+    /// Cache holding at most `capacity` classifications, probing and
+    /// fingerprinting through at most `sample_cap` elements per operand
+    /// (0 = exact, full-scan).
+    pub fn new(capacity: usize, sample_cap: usize) -> ProbeCache {
+        assert!(capacity >= 1, "ProbeCache capacity must be at least 1");
+        ProbeCache {
+            capacity,
+            sample_cap,
+            inner: Mutex::new(LruMap::new(capacity)),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Classify `m`'s exponent range, probing only on the first sight of
+    /// this (shape, sampled content) — a repeated weight costs one O(cap)
+    /// fingerprint per arrival instead of a full O(mn) scan.
+    pub fn classify(&self, m: &Mat) -> RangeClass {
+        let key = (m.rows, m.cols, sampled_fingerprint(&m.data, self.sample_cap));
+        if let Some(&class) = self.inner.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return class;
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let class = probe_sampled(m, self.sample_cap);
+        self.inner.lock().unwrap().insert(key, class);
+        class
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Number of cached classifications (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inner.lock().unwrap().is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::policy::probe;
+    use crate::matgen::{exp_rand, urand};
+
+    #[test]
+    fn sampled_probe_matches_exact_for_small_operands() {
+        for (mat, _) in [
+            (urand(8, 8, -1.0, 1.0, 1), "urand"),
+            (exp_rand(8, 8, -35, -16, 2), "degraded"),
+            (exp_rand(8, 8, -100, -36, 3), "wide"),
+            (Mat::zeros(4, 4), "zeros"),
+        ] {
+            assert_eq!(probe_sampled(&mat, 4096), probe(&mat));
+            assert_eq!(probe_sampled(&mat, 0), probe(&mat));
+        }
+        // Non-finite data classifies Extreme through the sampled path too.
+        let mut inf = urand(4, 4, -1.0, 1.0, 4);
+        inf.set(1, 1, f32::INFINITY);
+        assert_eq!(probe_sampled(&inf, 4096), RangeClass::Extreme);
+    }
+
+    #[test]
+    fn sampled_probe_classifies_large_uniform_operands() {
+        // 64k elements, cap 1k: every sample sees the same range, so the
+        // class matches the exact scan.
+        let m = exp_rand(256, 256, -35, -16, 5);
+        assert_eq!(probe_sampled(&m, 1024), probe(&m));
+        assert_eq!(probe_sampled(&m, 1024), RangeClass::HalfHalfDegraded);
+    }
+
+    #[test]
+    fn sampled_fingerprint_exact_below_cap_and_stable_above() {
+        let a = urand(16, 16, -1.0, 1.0, 6);
+        assert_eq!(sampled_fingerprint(&a.data, 4096), content_fingerprint(&a.data));
+        let big = urand(128, 128, -1.0, 1.0, 7);
+        let f1 = sampled_fingerprint(&big.data, 512);
+        assert_eq!(f1, sampled_fingerprint(&big.data, 512), "deterministic");
+        assert_ne!(f1, sampled_fingerprint(&big.data, 256), "cap is part of the stream");
+        // Flipping a sampled position (index 0 is always sampled) changes it.
+        let mut flipped = big.clone();
+        flipped.data[0] = f32::from_bits(flipped.data[0].to_bits() ^ 1);
+        assert_ne!(f1, sampled_fingerprint(&flipped.data, 512));
+    }
+
+    #[test]
+    fn cache_probes_repeated_weight_once() {
+        let cache = ProbeCache::new(8, 4096);
+        let w = urand(16, 16, -1.0, 1.0, 10);
+        assert_eq!(cache.classify(&w), RangeClass::HalfHalfExact);
+        assert_eq!(cache.classify(&w.clone()), RangeClass::HalfHalfExact);
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+        assert_eq!(cache.len(), 1);
+        let tiny = exp_rand(16, 16, -100, -36, 11);
+        assert_eq!(cache.classify(&tiny), RangeClass::NeedsWideExponent);
+        assert_eq!((cache.hits(), cache.misses()), (1, 2));
+    }
+
+    #[test]
+    fn cache_lru_evicts_coldest() {
+        let cache = ProbeCache::new(2, 4096);
+        let m0 = urand(4, 4, -1.0, 1.0, 20);
+        let m1 = urand(4, 4, -1.0, 1.0, 21);
+        let m2 = urand(4, 4, -1.0, 1.0, 22);
+        cache.classify(&m0); // miss
+        cache.classify(&m1); // miss
+        cache.classify(&m0); // hit — m0 hottest
+        cache.classify(&m2); // miss, evicts m1
+        assert_eq!(cache.len(), 2);
+        cache.classify(&m0); // still cached
+        assert_eq!(cache.hits(), 2);
+        cache.classify(&m1); // evicted → miss
+        assert_eq!(cache.misses(), 4);
+    }
+}

@@ -14,7 +14,8 @@ use super::plan::{plan, ShardConfig, ShardPlan};
 use super::pool::WorkerPool;
 use super::reduce::{assemble, gather_a, gather_b, slice_k_columns};
 use crate::coordinator::{BatchKey, Executor, GemmRequest, Metrics};
-use crate::gemm::{scaling, Mat, Method};
+use crate::gemm::{scaling, Mat, Method, TileConfig};
+use crate::planner::ExecPlan;
 use std::sync::mpsc::channel;
 use std::sync::Arc;
 
@@ -63,6 +64,26 @@ pub fn sharded_gemm(
     inner: &Arc<dyn Executor>,
     pool: &WorkerPool,
 ) -> (Mat, ShardStats) {
+    sharded_gemm_impl(a, b, method, policy, plan, inner, pool, None)
+}
+
+/// [`sharded_gemm`] with the engine tile threaded explicitly: every shard
+/// (and the unsharded fallback) reaches `inner` through
+/// `Executor::execute_planned` with a sub-plan carrying `engine_tile`, so
+/// a tile-honoring inner executor (`SimExecutor`) is *guaranteed* to run
+/// the tile the shard plan was aligned to — the bit-exactness precondition
+/// that the legacy path only upholds by convention.
+#[allow(clippy::too_many_arguments)]
+fn sharded_gemm_impl(
+    a: &Mat,
+    b: &Mat,
+    method: Method,
+    policy: crate::coordinator::Policy,
+    plan: &ShardPlan,
+    inner: &Arc<dyn Executor>,
+    pool: &WorkerPool,
+    planned_tile: Option<TileConfig>,
+) -> (Mat, ShardStats) {
     // Pre-scaled halfhalf must hoist its (global-max-exponent) scaling
     // above the cut: shard-local scales would disagree with the unsharded
     // run. Powers of two are exact, so descaling the assembled C afterwards
@@ -82,6 +103,20 @@ pub fn sharded_gemm(
         Some((sa, sb)) => (sa, sb),
         None => (a, b),
     };
+
+    // Planned mode: every shard reaches `inner` under an explicit
+    // sub-plan — the effective method (prescale already hoisted above the
+    // cut), the shard plan's engine tile, and no nested sharding.
+    let sub_plan: Option<Arc<ExecPlan>> = planned_tile.map(|tile| {
+        debug_assert_eq!(tile, plan.engine_tile, "planned tile must match the shard grid");
+        Arc::new(ExecPlan {
+            method: eff_method,
+            tile,
+            shard: None,
+            prescale: false,
+            est_cost_tflops: 0.0,
+        })
+    });
 
     // Exact per-request steal attribution: the pool tells each job whether
     // it was stolen.
@@ -128,6 +163,7 @@ pub fn sharded_gemm(
                 let inner = Arc::clone(inner);
                 let tx = tx.clone();
                 let steals = Arc::clone(&steals);
+                let sub_plan = sub_plan.clone();
                 pool.submit(Box::new(move |stolen| {
                     if stolen {
                         steals.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
@@ -137,7 +173,12 @@ pub fn sharded_gemm(
                     let key = BatchKey { m: rows, n: cols, k: a_sub.cols, method: eff_method };
                     let reqs =
                         [GemmRequest { id: (ri * 1024 + ci) as u64, a: a_sub, b: b_sub, policy }];
-                    let out = inner.execute(&key, &reqs).into_iter().next();
+                    let out = match &sub_plan {
+                        Some(p) => inner.execute_planned(p, &key, &reqs),
+                        None => inner.execute(&key, &reqs),
+                    }
+                    .into_iter()
+                    .next();
                     let ok = matches!(&out, Some(m) if m.rows == rows && m.cols == cols);
                     let _ = tx.send((ri, ci, s, if ok { out } else { None }));
                 }));
@@ -178,11 +219,22 @@ pub fn sharded_gemm(
         // the degradation instead of a healthy-looking grid.
         let key = BatchKey { m: plan.m, n: plan.n, k: plan.k, method };
         let reqs = [GemmRequest { id: 0, a: a.clone(), b: b.clone(), policy }];
-        let c = inner
-            .execute(&key, &reqs)
-            .into_iter()
-            .next()
-            .unwrap_or_else(|| Mat::zeros(plan.m, plan.n));
+        let c = match planned_tile {
+            Some(tile) => {
+                let p = ExecPlan {
+                    method,
+                    tile,
+                    shard: None,
+                    prescale: method == Method::OursHalfHalfPre,
+                    est_cost_tflops: 0.0,
+                };
+                inner.execute_planned(&p, &key, &reqs)
+            }
+            None => inner.execute(&key, &reqs),
+        }
+        .into_iter()
+        .next()
+        .unwrap_or_else(|| Mat::zeros(plan.m, plan.n));
         let stats = ShardStats {
             shards: ok_count,
             kslices,
@@ -250,6 +302,17 @@ impl ShardedExecutor {
     pub fn plan_for(&self, m: usize, n: usize, k: usize, method: Method) -> Option<ShardPlan> {
         plan(m, n, k, method, &self.cfg)
     }
+
+    fn record_stats(&self, stats: &ShardStats) {
+        if let Some(m) = &self.metrics {
+            m.on_sharded_gemm(
+                stats.shards as u64,
+                stats.steals,
+                stats.reduction_depth as u64,
+                stats.fell_back,
+            );
+        }
+    }
 }
 
 impl Executor for ShardedExecutor {
@@ -261,14 +324,39 @@ impl Executor for ShardedExecutor {
                 .map(|r| {
                     let (c, stats) =
                         sharded_gemm(&r.a, &r.b, key.method, r.policy, &p, &self.inner, &self.pool);
-                    if let Some(m) = &self.metrics {
-                        m.on_sharded_gemm(
-                            stats.shards as u64,
-                            stats.steals,
-                            stats.reduction_depth as u64,
-                            stats.fell_back,
-                        );
-                    }
+                    self.record_stats(&stats);
+                    c
+                })
+                .collect(),
+        }
+    }
+
+    /// Planner mode (DESIGN.md §9): follow the plan's shard decision
+    /// instead of re-planning internally — the planner already ran
+    /// `shard::plan` over the *planned* tile, so the router, the tile memo
+    /// and the shard gate all saw the same cost model.
+    fn execute_planned(
+        &self,
+        exec_plan: &ExecPlan,
+        key: &BatchKey,
+        reqs: &[GemmRequest],
+    ) -> Vec<Mat> {
+        match &exec_plan.shard {
+            None => self.inner.execute_planned(exec_plan, key, reqs),
+            Some(sp) => reqs
+                .iter()
+                .map(|r| {
+                    let (c, stats) = sharded_gemm_impl(
+                        &r.a,
+                        &r.b,
+                        exec_plan.method,
+                        r.policy,
+                        sp,
+                        &self.inner,
+                        &self.pool,
+                        Some(exec_plan.tile),
+                    );
+                    self.record_stats(&stats);
                     c
                 })
                 .collect(),
@@ -340,6 +428,41 @@ mod tests {
         let out = ex.execute(&key, &reqs);
         let want = Method::OursHalfHalf.run(&a, &b, &TileConfig::default());
         assert_eq!(out[0].data, want.data);
+    }
+
+    #[test]
+    fn execute_planned_follows_the_plan_not_internal_planning() {
+        // The executor's own config would shard everything (min_flops 0),
+        // but in planner mode the ExecPlan is authoritative: a plan
+        // without a shard grid takes the direct path under the planned
+        // tile, and a plan with one runs exactly that grid.
+        let cfg = ShardConfig { workers: 2, min_flops: 0, ..ShardConfig::default() };
+        let ex = ShardedExecutor::new(Arc::new(SimExecutor::new()), cfg.clone());
+        let a = urand(128, 64, -1.0, 1.0, 11);
+        let b = urand(64, 128, -1.0, 1.0, 12);
+        let key = BatchKey { m: 128, n: 128, k: 64, method: Method::Fp32Simt };
+        let reqs =
+            [GemmRequest { id: 1, a: a.clone(), b: b.clone(), policy: Policy::StrictFp32 }];
+        let tile = TileConfig { bm: 32, bn: 32, bk: 32, wm: 32, wn: 32, wk: 32, stages: 3 };
+        let unsharded = ExecPlan {
+            method: Method::Fp32Simt,
+            tile,
+            shard: None,
+            prescale: false,
+            est_cost_tflops: 0.0,
+        };
+        let out = ex.execute_planned(&unsharded, &key, &reqs);
+        assert_eq!(out[0].data, Method::Fp32Simt.run(&a, &b, &tile).data);
+        let sp = plan(128, 128, 64, Method::Fp32Simt, &cfg).expect("plan");
+        let sharded = ExecPlan {
+            method: Method::Fp32Simt,
+            tile: sp.engine_tile,
+            shard: Some(sp.clone()),
+            prescale: false,
+            est_cost_tflops: 0.0,
+        };
+        let out = ex.execute_planned(&sharded, &key, &reqs);
+        assert_eq!(out[0].data, Method::Fp32Simt.run(&a, &b, &sp.equivalent_tile()).data);
     }
 
     #[test]

@@ -220,6 +220,100 @@ fn split_cache_amortizes_repeated_weights() {
     svc.shutdown();
 }
 
+/// Planner-driven serving (DESIGN.md §9): the dispatcher no longer runs a
+/// full O(mn) exponent probe per request for repeated operands — the
+/// repeated weight is probed once and every later arrival is a probe-cache
+/// hit; the (shape, class, policy) plan is built once and every later
+/// request is a plan-cache hit. Counters are pinned exactly
+/// (`gemm_blocking` serializes the stream, so they are deterministic), and
+/// results stay bit-identical to a direct run under the planned tile.
+#[test]
+fn planner_serving_pins_probe_and_plan_cache_counters() {
+    use tcec::planner::{Planner, PlannerConfig};
+    let svc = GemmService::start(
+        Arc::new(SimExecutor::new()),
+        ServiceConfig {
+            workers: 1,
+            max_batch: 2,
+            planner: Some(PlannerConfig::default()),
+            ..ServiceConfig::default()
+        },
+    );
+    let w = urand(32, 32, -1.0, 1.0, 42); // the weight everyone multiplies by
+    // Planning is deterministic: a fresh planner with the same config
+    // reproduces the service's tile choice for the bit-identity check.
+    let ref_planner = Planner::new(PlannerConfig::default());
+    let n_req = 6u64;
+    for i in 0..n_req {
+        let a = urand(32, 32, -1.0, 1.0, 100 + i);
+        let resp = svc.gemm_blocking(a.clone(), w.clone(), Policy::Fp32Accuracy);
+        assert_eq!(resp.method, Method::OursHalfHalf);
+        let plan = ref_planner.plan_for_method(Method::OursHalfHalf, 32, 32, 32);
+        let direct = Method::OursHalfHalf.run(&a, &w, &plan.equivalent_tile());
+        assert_eq!(resp.c.data, direct.data, "request {i}: planned path changed bits");
+    }
+    let snap = svc.metrics().snapshot();
+    // Probe cache: each distinct activation misses once; the weight
+    // misses on the first request and hits on every later one.
+    assert_eq!(snap.probe_cache_hits, n_req - 1, "snapshot: {snap:?}");
+    assert_eq!(snap.probe_cache_misses, n_req + 1, "snapshot: {snap:?}");
+    // Plan cache: one routed plan for the whole stream.
+    assert_eq!(snap.plan_cache_misses, 1, "snapshot: {snap:?}");
+    assert_eq!(snap.plan_cache_hits, n_req - 1, "snapshot: {snap:?}");
+    assert_eq!(snap.completed, n_req);
+    svc.shutdown();
+}
+
+/// Planner + shard together: the plan's shard decision drives the
+/// `ShardedExecutor` (no internal re-planning), results stay bit-identical
+/// to the unsharded run of the plan's equivalent tile, and both the shard
+/// and planner counter families land in the same snapshot.
+#[test]
+fn planner_sharded_serving_end_to_end() {
+    use tcec::planner::{Planner, PlannerConfig};
+    let shard_cfg = shard::ShardConfig {
+        workers: 2,
+        min_flops: 2 * 64 * 64 * 64,
+        ..shard::ShardConfig::default()
+    };
+    let svc = GemmService::start(
+        Arc::new(SimExecutor::new()),
+        ServiceConfig {
+            workers: 1,
+            max_batch: 1,
+            shard: Some(shard_cfg.clone()),
+            planner: Some(PlannerConfig::default()),
+            ..ServiceConfig::default()
+        },
+    );
+    // What the service's planner will decide for this request.
+    let ref_planner = Planner::new(PlannerConfig {
+        shard: Some(shard_cfg),
+        ..PlannerConfig::default()
+    });
+    let a = urand(192, 128, -1.0, 1.0, 3);
+    let b = urand(128, 160, -1.0, 1.0, 4);
+    let resp = svc.gemm_blocking(a.clone(), b.clone(), Policy::Fp32Accuracy);
+    assert_eq!(resp.method, Method::OursHalfHalf);
+    let plan = ref_planner.plan_routed(
+        192,
+        160,
+        128,
+        tcec::coordinator::RangeClass::HalfHalfExact,
+        Policy::Fp32Accuracy,
+    );
+    let sp = plan.shard.as_ref().expect("192x160x128 clears the shard threshold");
+    let want = Method::OursHalfHalf.run(&a, &b, &plan.equivalent_tile());
+    assert_eq!(resp.c.data, want.data, "planned sharded result differs from direct run");
+    let snap = svc.metrics().snapshot();
+    assert_eq!(snap.sharded_gemms, 1);
+    assert_eq!(snap.shards_executed, sp.shard_count() as u64);
+    assert_eq!(snap.shard_fallbacks, 0);
+    assert_eq!(snap.plan_cache_misses, 1);
+    assert_eq!(snap.probe_cache_misses, 2);
+    svc.shutdown();
+}
+
 /// Tile-parameter invariance: accuracy stays at the same level across the
 /// autotuner's surviving configs (the paper's 0.1-threshold rationale).
 #[test]

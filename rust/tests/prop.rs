@@ -287,6 +287,75 @@ fn prop_sharded_bit_identical_to_unsharded_all_methods() {
     }
 }
 
+/// INVARIANT: executing through the planner — `ExecPlan` in,
+/// `Executor::execute_planned` out, with or without a shard grid — is
+/// bit-identical to `Method::run` under the plan's equivalent
+/// `TileConfig`, for EVERY `gemm::Method`. Unsharded plans exercise the
+/// autotuned-tile path; sharded plans reuse the fixed-order-reduction
+/// guarantee (`ExecPlan::equivalent_tile` widens the k-split exactly like
+/// `ShardPlan::equivalent_tile`).
+#[test]
+fn prop_planner_execution_bit_identical_all_methods() {
+    use tcec::coordinator::{BatchKey, GemmRequest};
+    use tcec::planner::{Planner, PlannerConfig};
+    let inner: Arc<dyn Executor> = Arc::new(SimExecutor::new());
+    let exec = shard::ShardedExecutor::new(
+        Arc::clone(&inner),
+        shard::ShardConfig { workers: 3, min_flops: 0, ..shard::ShardConfig::default() },
+    );
+    // Unsharded planner with autotuned tiles; shard-forcing planner with
+    // the default tile (64-blocks, so ~100-wide outputs really do shard).
+    let unsharded = Planner::new(PlannerConfig::default());
+    let sharding = Planner::new(PlannerConfig {
+        autotune_tiles: false,
+        shard: Some(shard::ShardConfig {
+            workers: 3,
+            min_flops: 0,
+            ..shard::ShardConfig::default()
+        }),
+        ..PlannerConfig::default()
+    });
+    let mut rng = Rng::new(0x9A41);
+    for (round, &method) in Method::ALL.iter().enumerate() {
+        let m = 80 + rng.int_in(0, 60) as usize;
+        let n = 80 + rng.int_in(0, 60) as usize;
+        let k = 16 + rng.int_in(0, 60) as usize;
+        let mut s = 0x517E + round as u64;
+        let mut gen = |r: usize, c: usize| {
+            Mat::from_fn(r, c, |_, _| {
+                s = s.wrapping_mul(6364136223846793005).wrapping_add(1);
+                ((s >> 33) as f64 / (1u64 << 31) as f64 - 0.5) as f32
+            })
+        };
+        let a = gen(m, k);
+        let b = gen(k, n);
+        let key = BatchKey { m, n, k, method };
+        let reqs =
+            [GemmRequest { id: 0, a: a.clone(), b: b.clone(), policy: Policy::Fp32Accuracy }];
+        for (planner, want_shard) in [(&unsharded, false), (&sharding, true)] {
+            let plan = planner.plan_for_method(method, m, n, k);
+            assert_eq!(
+                plan.shard.is_some(),
+                want_shard,
+                "{}: unexpected shard decision at {m}x{k}x{n}",
+                method.name()
+            );
+            let out = exec
+                .execute_planned(&plan, &key, &reqs)
+                .into_iter()
+                .next()
+                .expect("one output per request");
+            let want = method.run(&a, &b, &plan.equivalent_tile());
+            assert_eq!(
+                out.data,
+                want.data,
+                "{}: planner path diverged at {m}x{k}x{n} (sharded: {want_shard})",
+                method.name()
+            );
+        }
+    }
+}
+
 /// INVARIANT: the two-stage split API is bit-identical to the one-shot
 /// path for EVERY `gemm::Method`, across ragged shapes, tile configs and
 /// exponent ranges (the prescaled method included) — and a prepared
