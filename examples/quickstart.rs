@@ -2,7 +2,10 @@
 //!
 //! Run: `cargo run --release --example quickstart`
 
+use std::sync::Arc;
+use std::time::Duration;
 use tcec::analysis;
+use tcec::coordinator::{GemmService, Policy, SimExecutor};
 use tcec::gemm::{gemm_f64, relative_residual, Method, TileConfig};
 use tcec::matgen::urand;
 use tcec::perfmodel::{peak_tflops, A100};
@@ -50,4 +53,28 @@ fn main() {
             A100.fp32_tflops
         );
     }
+
+    // 5. Serving it: the versioned client API (DESIGN.md §10). Every
+    //    reply is a Result — rejection, expiry, cancellation and executor
+    //    failure are all typed, never a hang.
+    let client = GemmService::builder()
+        .workers(2)
+        .max_batch(4)
+        .queue_cap(64)
+        .client(Arc::new(SimExecutor::new()));
+    let outcome = client
+        .call(urand(64, 64, -1.0, 1.0, 10), urand(64, 64, -1.0, 1.0, 11))
+        .policy(Policy::Fp32Accuracy)
+        .deadline(Duration::from_secs(30))
+        .tag("quickstart")
+        .wait()
+        .expect("served within the deadline");
+    println!(
+        "\nserved one {} GEMM via api::Client in {:?} (batch of {}, tag {:?})",
+        outcome.method.name(),
+        outcome.latency,
+        outcome.batch_size,
+        outcome.tag.as_deref().unwrap_or("-")
+    );
+    client.shutdown();
 }

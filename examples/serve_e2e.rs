@@ -17,7 +17,8 @@
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
-use tcec::coordinator::{GemmService, Policy, ServiceConfig};
+use tcec::api::Ticket;
+use tcec::coordinator::{GemmService, Policy};
 use tcec::gemm::{gemm_f64, relative_residual, Method, TileConfig};
 use tcec::matgen::Workload;
 use tcec::runtime::{ArtifactRegistry, PjrtExecutor, PjrtHandle};
@@ -36,16 +37,21 @@ fn main() {
         println!("  {n}");
     }
 
-    let svc = GemmService::start(
-        Arc::new(PjrtExecutor::new(reg)),
-        ServiceConfig {
-            workers: 2,
-            max_batch: 4,
-            linger: Duration::from_millis(2),
-            force_method: None, // the router decides
-            ..ServiceConfig::default()
-        },
-    );
+    // The versioned client API (DESIGN.md §10): builder-configured
+    // service, an owning Client, and a Session carrying the stream-wide
+    // defaults (policy, deadline, tag) so each call only states what
+    // differs.
+    let client = GemmService::builder()
+        .workers(2)
+        .max_batch(4)
+        .linger(Duration::from_millis(2))
+        .queue_cap(256)
+        .client(Arc::new(PjrtExecutor::new(reg)));
+    let session = client
+        .session()
+        .policy(Policy::Fp32Accuracy)
+        .deadline(Duration::from_secs(120))
+        .tag("serve_e2e");
 
     // --- submit a mixed request stream at the artifact shape ------------
     let n = 128usize;
@@ -58,7 +64,7 @@ fn main() {
         a: tcec::gemm::Mat,
         b: tcec::gemm::Mat,
         expect: Method,
-        rx: std::sync::mpsc::Receiver<tcec::coordinator::GemmResponse>,
+        ticket: Ticket,
     }
 
     let t0 = Instant::now();
@@ -68,16 +74,17 @@ fn main() {
         let a = if wide { tiny.generate(n, n, i as u64) } else { good.generate(n, n, i as u64) };
         let b = good.generate(n, n, 10_000 + i as u64);
         let expect = if wide { Method::OursTf32 } else { Method::OursHalfHalf };
-        let (_, rx) = svc.submit(a.clone(), b.clone(), Policy::Fp32Accuracy);
-        pending.push(Pending { a, b, expect, rx });
+        let ticket = session.call(a.clone(), b.clone()).submit().expect("admitted");
+        pending.push(Pending { a, b, expect, ticket });
     }
 
     // --- collect + audit -------------------------------------------------
     let mut worst_ratio = 0.0f64;
     let mut max_batch = 0usize;
     for p in pending {
-        let resp = p.rx.recv_timeout(Duration::from_secs(120)).expect("response");
+        let resp = p.ticket.wait().expect("served within the deadline");
         assert_eq!(resp.method, p.expect, "router picked {:?}", resp.method);
+        assert_eq!(resp.tag.as_deref(), Some("serve_e2e"), "session tag echoed");
         max_batch = max_batch.max(resp.batch_size);
         let oracle = gemm_f64(&p.a, &p.b);
         let e = relative_residual(&oracle, &resp.c);
@@ -86,7 +93,7 @@ fn main() {
     }
     let wall = t0.elapsed().as_secs_f64();
 
-    let snap = svc.metrics().snapshot();
+    let snap = client.metrics().snapshot();
     println!("\n== e2e audit ==");
     println!("requests          : {total} ({n}x{n}x{n} each, 25% Type-4 exponent range)");
     println!("wall time         : {wall:.3}s  ({:.1} req/s, {:.2} GFlop/s served)",
@@ -99,7 +106,10 @@ fn main() {
     assert!(max_batch >= 2, "dynamic batching must have engaged");
     assert_eq!(snap.completed as usize, total);
 
-    svc.shutdown();
+    // Drop the session first so the client holds the last service handle
+    // and shutdown() can join the service threads before PJRT goes away.
+    drop(session);
+    client.shutdown();
     handle.shutdown();
     println!("\nOK: Pallas → AOT HLO → PJRT → batcher → router, all at FP32 accuracy.");
 }

@@ -1,0 +1,122 @@
+//! §Perf client-API overhead bench: what the versioned surface
+//! (`call → submit → Ticket → wait`, DESIGN.md §10) costs over the legacy
+//! raw-channel path (`submit → Receiver`), at n = 64 and 256, with and
+//! without background contention. The API adds admission control (one
+//! mutex+condvar hop), a CancelToken allocation, and per-request call
+//! metadata — this table keeps that overhead honest (it should stay well
+//! under the GEMM itself at every size).
+//!
+//! Run: `cargo bench --bench api_overhead`
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use tcec::bench_util::{bench, Table};
+use tcec::coordinator::{GemmService, Policy, SimExecutor};
+use tcec::gemm::Method;
+use tcec::matgen::urand;
+
+/// Requests per measured batch (amortizes clock overhead).
+const REQS: usize = 16;
+
+fn service() -> GemmService {
+    // Fp32Simt forced: the cheapest backend, so the API path is the
+    // largest possible fraction of the measured time.
+    GemmService::builder()
+        .workers(2)
+        .max_batch(8)
+        .queue_cap(4096)
+        .force_method(Method::Fp32Simt)
+        .build(Arc::new(SimExecutor::new()))
+}
+
+/// One measured round on the versioned API: REQS submits, then wait all.
+fn round_api(svc: &GemmService, n: usize, seed: u64) {
+    let tickets: Vec<_> = (0..REQS as u64)
+        .map(|i| {
+            svc.call(urand(n, n, -1.0, 1.0, seed + i), urand(n, n, -1.0, 1.0, seed + i + 500))
+                .policy(Policy::StrictFp32)
+                .submit()
+                .expect("admitted")
+        })
+        .collect();
+    for t in tickets {
+        t.wait().expect("served");
+    }
+}
+
+/// One measured round on the deprecated raw-channel shim.
+#[allow(deprecated)]
+fn round_legacy(svc: &GemmService, n: usize, seed: u64) {
+    let rxs: Vec<_> = (0..REQS as u64)
+        .map(|i| {
+            svc.submit(
+                urand(n, n, -1.0, 1.0, seed + i),
+                urand(n, n, -1.0, 1.0, seed + i + 500),
+                Policy::StrictFp32,
+            )
+            .1
+        })
+        .collect();
+    for rx in rxs {
+        rx.recv().expect("reply").expect("served");
+    }
+}
+
+fn measure(contended: bool) -> Vec<[String; 4]> {
+    let mut rows = Vec::new();
+    for n in [64usize, 256] {
+        let svc = service();
+        // Contended mode: a background thread keeps a steady stream of
+        // same-shape traffic flowing while the measured rounds run, so
+        // the intake lock and the batcher see realistic interleaving.
+        let (s_api, s_legacy) = if contended {
+            let stop = AtomicBool::new(false);
+            std::thread::scope(|scope| {
+                let svc_ref = &svc;
+                let stop_ref = &stop;
+                scope.spawn(move || {
+                    let mut i = 0u64;
+                    while !stop_ref.load(Ordering::Relaxed) {
+                        let _ = svc_ref
+                            .call(urand(n, n, -1.0, 1.0, i), urand(n, n, -1.0, 1.0, i + 9000))
+                            .policy(Policy::StrictFp32)
+                            .wait();
+                        i += 1;
+                    }
+                });
+                let a = bench(|| round_api(&svc, n, 1), 1, 3, 0.3);
+                let l = bench(|| round_legacy(&svc, n, 2), 1, 3, 0.3);
+                stop.store(true, Ordering::Relaxed);
+                (a, l)
+            })
+        } else {
+            let a = bench(|| round_api(&svc, n, 1), 1, 3, 0.3);
+            let l = bench(|| round_legacy(&svc, n, 2), 1, 3, 0.3);
+            (a, l)
+        };
+        svc.shutdown();
+        let per_req_api = s_api.median_s / REQS as f64 * 1e6;
+        let per_req_legacy = s_legacy.median_s / REQS as f64 * 1e6;
+        rows.push([
+            n.to_string(),
+            format!("{per_req_legacy:.1}"),
+            format!("{per_req_api:.1}"),
+            format!("{:+.1}%", (per_req_api / per_req_legacy - 1.0) * 100.0),
+        ]);
+    }
+    rows
+}
+
+fn main() {
+    println!("== client-API overhead: ticket path vs legacy channel path ==");
+    println!("   ({REQS} requests per round, Fp32Simt forced, 2 workers)\n");
+    for contended in [false, true] {
+        println!("-- {} --\n", if contended { "with background contention" } else { "idle" });
+        let mut t = Table::new(&["n", "legacy us/req", "ticket us/req", "delta"]);
+        for row in measure(contended) {
+            t.row(&row);
+        }
+        t.print();
+        println!();
+    }
+}

@@ -8,7 +8,7 @@
 
 use std::sync::Arc;
 use tcec::bench_util::{bench, Table};
-use tcec::coordinator::{GemmService, Policy, ServiceConfig, SimExecutor};
+use tcec::coordinator::{GemmService, Policy, SimExecutor};
 use tcec::gemm::{gemm_batched, BatchedOperands, Mat, Method, TileConfig};
 use tcec::matgen::urand;
 use tcec::runtime::{ArtifactRegistry, PjrtHandle};
@@ -125,24 +125,22 @@ fn main() {
     handle.shutdown();
 
     println!("\n== coordinator request loop (sim executor, 64x64, batched) ==\n");
-    let svc = GemmService::start(
-        Arc::new(SimExecutor::new()),
-        ServiceConfig { workers: 2, max_batch: 8, ..ServiceConfig::default() },
-    );
+    let svc = GemmService::builder()
+        .workers(2)
+        .max_batch(8)
+        .build(Arc::new(SimExecutor::new()));
     let n_req = 64;
     let t0 = std::time::Instant::now();
-    let rxs: Vec<_> = (0..n_req)
+    let tickets: Vec<_> = (0..n_req)
         .map(|i| {
-            svc.submit(
-                urand(64, 64, -1.0, 1.0, i),
-                urand(64, 64, -1.0, 1.0, i + 999),
-                Policy::Fp32Accuracy,
-            )
-            .1
+            svc.call(urand(64, 64, -1.0, 1.0, i), urand(64, 64, -1.0, 1.0, i + 999))
+                .policy(Policy::Fp32Accuracy)
+                .submit()
+                .expect("admitted")
         })
         .collect();
-    for rx in rxs {
-        rx.recv().unwrap();
+    for t in tickets {
+        t.wait().unwrap();
     }
     let dt = t0.elapsed().as_secs_f64();
     let snap = svc.metrics().snapshot();

@@ -1,0 +1,113 @@
+//! [`ServiceBuilder`] — the one supported way to configure and start a
+//! `GemmService` (DESIGN.md §10). Replaces hand-assembling a
+//! `ServiceConfig` literal: every knob has a named setter with its default
+//! documented, and `build` wires the executor, admission control, shard
+//! engine, planner and split cache consistently.
+
+use crate::coordinator::service::{Executor, GemmService, ServiceConfig};
+use crate::gemm::Method;
+use crate::planner::PlannerConfig;
+use crate::shard::ShardConfig;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Builder for a [`GemmService`].
+///
+/// ```
+/// use std::sync::Arc;
+/// use tcec::coordinator::{GemmService, SimExecutor};
+///
+/// let svc = GemmService::builder()
+///     .workers(2)
+///     .max_batch(4)
+///     .queue_cap(256)
+///     .split_cache(16)
+///     .build(Arc::new(SimExecutor::new()));
+/// assert_eq!(svc.metrics().snapshot().requests, 0);
+/// svc.shutdown();
+/// ```
+#[must_use = "a ServiceBuilder does nothing until build()"]
+#[derive(Debug, Clone, Default)]
+pub struct ServiceBuilder {
+    cfg: ServiceConfig,
+}
+
+impl ServiceBuilder {
+    pub fn new() -> ServiceBuilder {
+        ServiceBuilder::default()
+    }
+
+    /// Executor worker threads (default 2; clamped to ≥ 1).
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.cfg.workers = workers;
+        self
+    }
+
+    /// Largest batch the dynamic batcher assembles (default 8).
+    pub fn max_batch(mut self, max_batch: usize) -> Self {
+        self.cfg.max_batch = max_batch;
+        self
+    }
+
+    /// How long a partial batch lingers for company before it is flushed
+    /// (default 2 ms).
+    pub fn linger(mut self, linger: Duration) -> Self {
+        self.cfg.linger = linger;
+        self
+    }
+
+    /// Admission-control bound: the most requests that may be admitted and
+    /// not yet resolved at once (default 1024; clamped to ≥ 1). Submissions
+    /// beyond it are load-shed with `ServiceError::QueueFull`.
+    pub fn queue_cap(mut self, queue_cap: usize) -> Self {
+        self.cfg.queue_cap = queue_cap;
+        self
+    }
+
+    /// Bypass the router and force every request onto one method (benches
+    /// and deterministic tests).
+    pub fn force_method(mut self, method: Method) -> Self {
+        self.cfg.force_method = Some(method);
+        self
+    }
+
+    /// Shard large GEMMs over a work-stealing pool (DESIGN.md §7).
+    pub fn shard(mut self, shard: ShardConfig) -> Self {
+        self.cfg.shard = Some(shard);
+        self
+    }
+
+    /// Route through the unified cost-based planner (DESIGN.md §9).
+    pub fn planner(mut self, planner: PlannerConfig) -> Self {
+        self.cfg.planner = Some(planner);
+        self
+    }
+
+    /// Cache operand splits across requests (DESIGN.md §8): an LRU
+    /// `SplitCache` of `capacity` entries is attached to the executor at
+    /// build time. Ignored (with a log line) by executors that do not
+    /// split operands (e.g. pure PJRT artifact execution).
+    pub fn split_cache(mut self, capacity: usize) -> Self {
+        self.cfg.split_cache = Some(capacity);
+        self
+    }
+
+    /// The assembled configuration (inspectable before building).
+    pub fn config(&self) -> &ServiceConfig {
+        &self.cfg
+    }
+
+    /// Start dispatcher and workers over `executor`.
+    pub fn build(self, executor: Arc<dyn Executor>) -> GemmService {
+        GemmService::start(executor, self.cfg)
+    }
+
+    /// [`ServiceBuilder::build`], wrapped in an owning [`api::Client`]
+    /// handle (the common entry point for callers that only speak the
+    /// versioned API).
+    ///
+    /// [`api::Client`]: crate::api::Client
+    pub fn client(self, executor: Arc<dyn Executor>) -> super::Client {
+        super::Client::new(Arc::new(self.build(executor)))
+    }
+}

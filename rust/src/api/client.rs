@@ -1,0 +1,239 @@
+//! [`Client`], [`Session`] and the [`GemmCall`] builder — the request side
+//! of the versioned API (DESIGN.md §10).
+//!
+//! A [`Client`] shares ownership of a running `GemmService`; a [`Session`]
+//! is a clone-cheap bundle of per-call defaults (policy, deadline,
+//! priority, tag) so a caller serving one tenant or one model configures
+//! the knobs once; a [`GemmCall`] is the per-request builder that admits
+//! the call and returns a [`Ticket`].
+
+use super::error::ServiceError;
+use super::ticket::{GemmResult, Ticket};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::service::GemmService;
+use crate::coordinator::Policy;
+use crate::gemm::Mat;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Which intake lane a request joins. The dispatcher always drains the
+/// high lane before the normal one; admission control (`queue_cap`) is
+/// shared across both.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Priority {
+    /// Latency-sensitive lane, dispatched first.
+    High,
+    /// The default lane.
+    #[default]
+    Normal,
+}
+
+/// Per-call knobs, resolved at submit time. Used as the defaults bundle of
+/// a [`Session`] and the accumulated state of a [`GemmCall`].
+#[derive(Debug, Clone, Default)]
+pub(crate) struct CallOptions {
+    pub(crate) policy: Option<Policy>,
+    pub(crate) deadline: Option<Duration>,
+    pub(crate) priority: Priority,
+    pub(crate) tag: Option<Arc<str>>,
+}
+
+impl CallOptions {
+    /// The effective policy (the service-wide default is FP32 accuracy —
+    /// the paper's headline contract).
+    pub(crate) fn policy_or_default(&self) -> Policy {
+        self.policy.unwrap_or(Policy::Fp32Accuracy)
+    }
+}
+
+/// Shared-ownership handle to a running `GemmService`.
+///
+/// ```
+/// use std::sync::Arc;
+/// use tcec::coordinator::{GemmService, Policy, SimExecutor};
+/// use tcec::matgen::urand;
+///
+/// let client = GemmService::builder()
+///     .workers(1)
+///     .client(Arc::new(SimExecutor::new()));
+/// let out = client
+///     .call(urand(8, 8, -1.0, 1.0, 1), urand(8, 8, -1.0, 1.0, 2))
+///     .policy(Policy::Fp32Accuracy)
+///     .wait()
+///     .expect("served");
+/// assert_eq!((out.c.rows, out.c.cols), (8, 8));
+/// client.shutdown();
+/// ```
+#[derive(Clone)]
+pub struct Client {
+    svc: Arc<GemmService>,
+}
+
+impl Client {
+    /// Wrap an already-running service.
+    pub fn new(svc: Arc<GemmService>) -> Client {
+        Client { svc }
+    }
+
+    /// Start building one GEMM call (`C = A·B`).
+    pub fn call(&self, a: Mat, b: Mat) -> GemmCall<'_> {
+        self.svc.call(a, b)
+    }
+
+    /// A new session over this service with no defaults set.
+    pub fn session(&self) -> Session {
+        Session { svc: Arc::clone(&self.svc), defaults: CallOptions::default() }
+    }
+
+    /// The underlying service handle.
+    pub fn service(&self) -> &GemmService {
+        &self.svc
+    }
+
+    pub fn metrics(&self) -> Arc<Metrics> {
+        self.svc.metrics()
+    }
+
+    /// Stop admitting new requests (in-flight work drains; see
+    /// `GemmService::close`).
+    pub fn close(&self) {
+        self.svc.close();
+    }
+
+    /// Stop admission immediately, then shut the service down if this was
+    /// the last handle to it. When other handles (clones, `Session`s) are
+    /// still alive the service cannot be joined yet — admission is still
+    /// closed here and now, and the threads join when the last owner
+    /// drops (`GemmService` implements `Drop`).
+    pub fn shutdown(self) {
+        self.svc.close();
+        if let Ok(svc) = Arc::try_unwrap(self.svc) {
+            svc.shutdown();
+        }
+    }
+}
+
+/// A bundle of per-call defaults over one service: configure once, then
+/// every [`Session::call`] starts from these instead of the bare service
+/// defaults. Individual calls can still override any knob.
+///
+/// ```
+/// use std::sync::Arc;
+/// use std::time::Duration;
+/// use tcec::api::Priority;
+/// use tcec::coordinator::{GemmService, Policy, SimExecutor};
+/// use tcec::matgen::urand;
+///
+/// let client = GemmService::builder().workers(1).client(Arc::new(SimExecutor::new()));
+/// let session = client
+///     .session()
+///     .policy(Policy::StrictFp32)
+///     .deadline(Duration::from_secs(30))
+///     .priority(Priority::High)
+///     .tag("tenant-42");
+/// let out = session
+///     .call(urand(8, 8, -1.0, 1.0, 1), urand(8, 8, -1.0, 1.0, 2))
+///     .wait()
+///     .expect("served");
+/// assert_eq!(out.tag.as_deref(), Some("tenant-42"));
+/// client.shutdown();
+/// ```
+#[derive(Clone)]
+pub struct Session {
+    svc: Arc<GemmService>,
+    defaults: CallOptions,
+}
+
+impl Session {
+    /// Default accuracy policy for calls of this session.
+    pub fn policy(mut self, policy: Policy) -> Session {
+        self.defaults.policy = Some(policy);
+        self
+    }
+
+    /// Default relative deadline for calls of this session.
+    pub fn deadline(mut self, deadline: Duration) -> Session {
+        self.defaults.deadline = Some(deadline);
+        self
+    }
+
+    /// Default intake lane for calls of this session.
+    pub fn priority(mut self, priority: Priority) -> Session {
+        self.defaults.priority = priority;
+        self
+    }
+
+    /// Default tag (tenant / model / experiment label) echoed back in
+    /// every `GemmOutcome::tag` of this session.
+    pub fn tag(mut self, tag: impl Into<Arc<str>>) -> Session {
+        self.defaults.tag = Some(tag.into());
+        self
+    }
+
+    /// Start building a call seeded with this session's defaults.
+    pub fn call(&self, a: Mat, b: Mat) -> GemmCall<'_> {
+        GemmCall::with_options(&self.svc, a, b, self.defaults.clone())
+    }
+}
+
+/// Builder for one GEMM call. Terminal operations: [`GemmCall::submit`]
+/// (admit, get a [`Ticket`]) or [`GemmCall::wait`] (admit and block).
+#[must_use = "a GemmCall does nothing until submit() or wait()"]
+pub struct GemmCall<'a> {
+    svc: &'a GemmService,
+    a: Mat,
+    b: Mat,
+    opts: CallOptions,
+}
+
+impl<'a> GemmCall<'a> {
+    pub(crate) fn with_options(
+        svc: &'a GemmService,
+        a: Mat,
+        b: Mat,
+        opts: CallOptions,
+    ) -> GemmCall<'a> {
+        GemmCall { svc, a, b, opts }
+    }
+
+    /// Accuracy policy for this call (default: `Policy::Fp32Accuracy`).
+    pub fn policy(mut self, policy: Policy) -> Self {
+        self.opts.policy = Some(policy);
+        self
+    }
+
+    /// Relative deadline. Converted to an absolute instant at submit; once
+    /// it passes, the service drops the request at its next enforcement
+    /// point (intake pop, batch emit, pre-execute) and replies
+    /// [`ServiceError::DeadlineExceeded`] — an expired request is never
+    /// part of an executed batch.
+    pub fn deadline(mut self, deadline: Duration) -> Self {
+        self.opts.deadline = Some(deadline);
+        self
+    }
+
+    /// Intake lane (default: [`Priority::Normal`]).
+    pub fn priority(mut self, priority: Priority) -> Self {
+        self.opts.priority = priority;
+        self
+    }
+
+    /// Free-form label echoed back in `GemmOutcome::tag`.
+    pub fn tag(mut self, tag: impl Into<Arc<str>>) -> Self {
+        self.opts.tag = Some(tag.into());
+        self
+    }
+
+    /// Validate and admit the call. Synchronously returns
+    /// [`ServiceError::InvalidShape`], [`ServiceError::QueueFull`] (load
+    /// shed) or [`ServiceError::ShuttingDown`]; otherwise the call is in
+    /// the service and the [`Ticket`] tracks it.
+    pub fn submit(self) -> Result<Ticket, ServiceError> {
+        self.svc.submit_call(self.a, self.b, self.opts)
+    }
+
+    /// Admit and block for the reply: `submit()` + `Ticket::wait()`.
+    pub fn wait(self) -> GemmResult {
+        self.submit().and_then(|t| t.wait())
+    }
+}

@@ -1,0 +1,119 @@
+//! The client-visible error taxonomy (DESIGN.md §10).
+//!
+//! Every way a submitted GEMM can fail to produce a result has exactly one
+//! variant here, so a transport front-end (HTTP/RPC) can serialize the
+//! failure instead of observing a hung channel or a panic. The variants
+//! partition by *where* the request died:
+//!
+//! * before admission — [`ServiceError::InvalidShape`],
+//!   [`ServiceError::QueueFull`], [`ServiceError::ShuttingDown`];
+//! * between admission and execution — [`ServiceError::DeadlineExceeded`],
+//!   [`ServiceError::Cancelled`];
+//! * during execution — [`ServiceError::ExecutorFailed`].
+
+use std::fmt;
+use std::time::Duration;
+
+/// Why the service did not (or will not) produce a [`GemmOutcome`]
+/// (DESIGN.md §10's error taxonomy).
+///
+/// [`GemmOutcome`]: crate::coordinator::GemmOutcome
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServiceError {
+    /// Admission control shed the request: the service already holds
+    /// `queue_cap` admitted-but-unfinished requests. Retry later, or raise
+    /// the cap with `ServiceBuilder::queue_cap`.
+    QueueFull {
+        /// The bound the service was configured with.
+        queue_cap: usize,
+    },
+    /// The request's deadline passed before it reached an executor. The
+    /// request is guaranteed to have been excluded from any executed batch.
+    DeadlineExceeded {
+        /// How long the request had waited (submit → the enforcement point
+        /// that dropped it) when the service noticed the expiry.
+        waited: Duration,
+    },
+    /// The client cancelled the ticket before the request reached an
+    /// executor. A cancellation that races with execution may instead
+    /// yield the completed result — `Ticket::cancel` is best-effort.
+    Cancelled,
+    /// The executor panicked while running the batch this request rode in.
+    /// Every request of the batch receives this reply (the worker thread
+    /// itself survives).
+    ExecutorFailed {
+        /// Size of the executed batch that failed.
+        batch_size: usize,
+    },
+    /// The service has stopped admitting requests (it is shutting down or
+    /// was closed); in-flight requests still drain.
+    ShuttingDown,
+    /// `A·B` is not defined for the submitted shapes (`a_cols != b_rows`).
+    /// Detected synchronously at submit — the request was never admitted.
+    InvalidShape {
+        a_rows: usize,
+        a_cols: usize,
+        b_rows: usize,
+        b_cols: usize,
+    },
+}
+
+impl fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServiceError::QueueFull { queue_cap } => {
+                write!(f, "queue full: {queue_cap} requests already admitted and unfinished")
+            }
+            ServiceError::DeadlineExceeded { waited } => {
+                write!(f, "deadline exceeded after waiting {waited:?}")
+            }
+            ServiceError::Cancelled => write!(f, "cancelled by the client"),
+            ServiceError::ExecutorFailed { batch_size } => {
+                write!(f, "executor failed (panicked) on a batch of {batch_size} request(s)")
+            }
+            ServiceError::ShuttingDown => write!(f, "service is shutting down"),
+            ServiceError::InvalidShape { a_rows, a_cols, b_rows, b_cols } => write!(
+                f,
+                "invalid shape: ({a_rows} x {a_cols}) * ({b_rows} x {b_cols}) — \
+                 inner dimensions must agree"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ServiceError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_informative() {
+        let cases: Vec<(ServiceError, &str)> = vec![
+            (ServiceError::QueueFull { queue_cap: 8 }, "queue full"),
+            (
+                ServiceError::DeadlineExceeded { waited: Duration::from_millis(5) },
+                "deadline exceeded",
+            ),
+            (ServiceError::Cancelled, "cancelled"),
+            (ServiceError::ExecutorFailed { batch_size: 3 }, "executor failed"),
+            (ServiceError::ShuttingDown, "shutting down"),
+            (
+                ServiceError::InvalidShape { a_rows: 2, a_cols: 3, b_rows: 4, b_cols: 5 },
+                "inner dimensions",
+            ),
+        ];
+        for (e, needle) in cases {
+            let s = e.to_string();
+            assert!(s.contains(needle), "{s:?} should contain {needle:?}");
+        }
+    }
+
+    #[test]
+    fn variants_compare_structurally() {
+        let a = ServiceError::QueueFull { queue_cap: 4 };
+        let b = ServiceError::QueueFull { queue_cap: 4 };
+        assert_eq!(a, b);
+        assert_ne!(ServiceError::Cancelled, ServiceError::ShuttingDown);
+    }
+}

@@ -1,0 +1,71 @@
+//! L3-front: the versioned client API of the GEMM service (DESIGN.md §10).
+//!
+//! This is the **one supported client surface**. Everything a caller can
+//! observe is expressed in the types:
+//!
+//! * [`Client`] / [`Session`] — shared handle over a running service, and
+//!   a per-tenant bundle of call defaults (policy, deadline, priority,
+//!   tag);
+//! * [`GemmCall`] — the per-request builder
+//!   (`.policy() .deadline() .priority() .tag()`), terminating in
+//!   [`GemmCall::submit`] → [`Ticket`];
+//! * [`Ticket`] — the outstanding-call handle:
+//!   [`wait`](Ticket::wait) / [`wait_timeout`](Ticket::wait_timeout) /
+//!   [`try_get`](Ticket::try_get) / [`cancel`](Ticket::cancel);
+//! * [`GemmResult`] = `Result<GemmOutcome, ServiceError>` — every reply is
+//!   fallible, and [`ServiceError`] enumerates exactly how a request can
+//!   die (rejected, expired, cancelled, executor failure, shutdown,
+//!   invalid shape). No hung channels, no panics across the API boundary.
+//! * [`ServiceBuilder`] — the supported way to configure and start the
+//!   service (`GemmService::builder()`).
+//!
+//! The legacy `GemmService::submit` / `gemm_blocking` entry points are
+//! deprecated shims over this layer and will be removed next PR.
+//!
+//! # Example: deadline, cancellation, structured failure
+//!
+//! ```
+//! use std::sync::Arc;
+//! use std::time::Duration;
+//! use tcec::api::ServiceError;
+//! use tcec::coordinator::{GemmService, Policy, SimExecutor};
+//! use tcec::matgen::urand;
+//!
+//! let client = GemmService::builder()
+//!     .workers(1)
+//!     .queue_cap(64)
+//!     .client(Arc::new(SimExecutor::new()));
+//!
+//! // A call that cannot run is rejected synchronously, in the type.
+//! let err = client
+//!     .call(urand(8, 4, -1.0, 1.0, 1), urand(8, 8, -1.0, 1.0, 2))
+//!     .submit()
+//!     .unwrap_err();
+//! assert!(matches!(err, ServiceError::InvalidShape { .. }));
+//!
+//! // A well-formed call: build, submit, wait on the ticket.
+//! let ticket = client
+//!     .call(urand(8, 8, -1.0, 1.0, 1), urand(8, 8, -1.0, 1.0, 2))
+//!     .policy(Policy::Fp32Accuracy)
+//!     .deadline(Duration::from_secs(30))
+//!     .tag("doc-example")
+//!     .submit()
+//!     .expect("admitted");
+//! let outcome = ticket.wait().expect("served within the deadline");
+//! assert_eq!(outcome.tag.as_deref(), Some("doc-example"));
+//! client.shutdown();
+//! ```
+
+pub mod builder;
+pub mod client;
+pub mod error;
+pub mod ticket;
+
+pub use builder::ServiceBuilder;
+pub use client::{Client, GemmCall, Priority, Session};
+pub use error::ServiceError;
+pub use ticket::{CancelToken, GemmResult, Ticket};
+
+// The success payload lives with the coordinator's wire types; re-export it
+// so `api` is self-contained for clients.
+pub use crate::coordinator::request::GemmOutcome;

@@ -1,0 +1,186 @@
+//! The [`Ticket`] handle: one outstanding GEMM call, from admission to its
+//! terminal reply (DESIGN.md §10's lifecycle state machine).
+//!
+//! A ticket is in exactly one of two states: *pending* (the service still
+//! owes a reply) or *resolved* (`Ok(GemmOutcome)` or `Err(ServiceError)`).
+//! The consuming signatures make the state machine un-misusable at compile
+//! time: [`Ticket::wait`] resolves it for good; [`Ticket::try_get`] and
+//! [`Ticket::wait_timeout`] either resolve it or hand the still-pending
+//! ticket back.
+
+use super::error::ServiceError;
+use crate::coordinator::GemmOutcome;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// What every admitted call resolves to: the computed outcome, or the
+/// structured reason there is none (DESIGN.md §10).
+pub type GemmResult = Result<GemmOutcome, ServiceError>;
+
+/// Shared cancellation flag between a [`Ticket`] and the request it tracks
+/// inside the service. Cloning hands out another handle to the *same* flag
+/// (e.g. for cancelling from a thread that does not own the ticket).
+#[derive(Debug, Clone, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    /// Request cancellation. Idempotent; best-effort — see
+    /// [`Ticket::cancel`] for the exact semantics.
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::Release);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::Acquire)
+    }
+}
+
+/// Handle to one admitted GEMM call.
+///
+/// Obtained from `GemmCall::submit`. Dropping a pending ticket abandons the
+/// result (the service still executes and accounts the request unless it
+/// was cancelled first).
+#[must_use = "a Ticket holds the only handle to the call's result"]
+#[derive(Debug)]
+pub struct Ticket {
+    id: u64,
+    rx: Receiver<GemmResult>,
+    cancel: CancelToken,
+    submitted: Instant,
+}
+
+impl Ticket {
+    pub(crate) fn new(
+        id: u64,
+        rx: Receiver<GemmResult>,
+        cancel: CancelToken,
+        submitted: Instant,
+    ) -> Ticket {
+        Ticket { id, rx, cancel, submitted }
+    }
+
+    /// The service-assigned request id (matches `GemmOutcome::id`).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Tear the ticket down to the raw reply channel (the deprecated
+    /// `GemmService::submit` shim's return shape).
+    pub(crate) fn into_raw(self) -> (u64, Receiver<GemmResult>) {
+        (self.id, self.rx)
+    }
+
+    /// When the call was admitted.
+    pub fn submitted_at(&self) -> Instant {
+        self.submitted
+    }
+
+    /// Request cancellation. Best-effort and asynchronous: the service
+    /// checks the flag at its enforcement points (intake pop, batch emit,
+    /// and immediately before execution), so a pending request resolves to
+    /// [`ServiceError::Cancelled`] — but a cancel that arrives after the
+    /// executor picked the batch up loses the race and the completed
+    /// result is delivered instead.
+    pub fn cancel(&self) {
+        self.cancel.cancel();
+    }
+
+    /// A cancellation handle that outlives this ticket — clone of the
+    /// shared flag, usable from another thread while `wait` blocks.
+    pub fn cancel_token(&self) -> CancelToken {
+        self.cancel.clone()
+    }
+
+    /// Block until the service replies. Never panics and never blocks past
+    /// the service's lifetime: every admitted request receives exactly one
+    /// reply (a panicking executor replies [`ServiceError::ExecutorFailed`]),
+    /// and if the service is torn down anyway the dropped channel maps to
+    /// [`ServiceError::ShuttingDown`].
+    pub fn wait(self) -> GemmResult {
+        self.rx.recv().unwrap_or(Err(ServiceError::ShuttingDown))
+    }
+
+    /// Like [`Ticket::wait`] with a local patience bound: `Ok(result)` when
+    /// the service replied within `timeout`, `Err(self)` (the still-pending
+    /// ticket, to keep waiting or cancel) otherwise. The service-side
+    /// deadline (`GemmCall::deadline`) is independent of this bound.
+    pub fn wait_timeout(self, timeout: Duration) -> Result<GemmResult, Ticket> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(r) => Ok(r),
+            Err(RecvTimeoutError::Timeout) => Err(self),
+            Err(RecvTimeoutError::Disconnected) => Ok(Err(ServiceError::ShuttingDown)),
+        }
+    }
+
+    /// Non-blocking poll: `Ok(result)` when the reply already arrived,
+    /// `Err(self)` while still pending.
+    pub fn try_get(self) -> Result<GemmResult, Ticket> {
+        match self.rx.try_recv() {
+            Ok(r) => Ok(r),
+            Err(TryRecvError::Empty) => Err(self),
+            Err(TryRecvError::Disconnected) => Ok(Err(ServiceError::ShuttingDown)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::{Mat, Method};
+    use std::sync::mpsc::channel;
+
+    fn outcome(id: u64) -> GemmOutcome {
+        GemmOutcome {
+            id,
+            c: Mat::zeros(1, 1),
+            method: Method::Fp32Simt,
+            latency: Duration::from_micros(1),
+            batch_size: 1,
+            tag: None,
+        }
+    }
+
+    #[test]
+    fn try_get_pends_then_resolves() {
+        let (tx, rx) = channel();
+        let t = Ticket::new(7, rx, CancelToken::new(), Instant::now());
+        let t = t.try_get().expect_err("no reply yet");
+        tx.send(Ok(outcome(7))).unwrap();
+        let r = t.try_get().expect("reply arrived").expect("ok outcome");
+        assert_eq!(r.id, 7);
+    }
+
+    #[test]
+    fn wait_timeout_returns_ticket_then_result() {
+        let (tx, rx) = channel();
+        let t = Ticket::new(1, rx, CancelToken::new(), Instant::now());
+        let t = t.wait_timeout(Duration::from_millis(5)).expect_err("still pending");
+        tx.send(Err(ServiceError::Cancelled)).unwrap();
+        let r = t.wait_timeout(Duration::from_secs(5)).expect("resolved");
+        assert_eq!(r, Err(ServiceError::Cancelled));
+    }
+
+    #[test]
+    fn dropped_sender_maps_to_shutting_down() {
+        let (tx, rx) = channel::<GemmResult>();
+        drop(tx);
+        let t = Ticket::new(1, rx, CancelToken::new(), Instant::now());
+        assert_eq!(t.wait(), Err(ServiceError::ShuttingDown));
+    }
+
+    #[test]
+    fn cancel_token_is_shared() {
+        let (_tx, rx) = channel::<GemmResult>();
+        let t = Ticket::new(1, rx, CancelToken::new(), Instant::now());
+        let handle = t.cancel_token();
+        assert!(!handle.is_cancelled());
+        t.cancel();
+        assert!(handle.is_cancelled());
+    }
+}

@@ -1,0 +1,227 @@
+//! Bounded two-lane intake queue — the service's admission-control front
+//! door (DESIGN.md §10).
+//!
+//! `admit` is called on the **client's** thread, so rejection is
+//! synchronous and typed (`ServiceError::QueueFull` / `ShuttingDown`)
+//! instead of an unbounded channel silently absorbing load. The bound
+//! (`queue_cap`) covers every *admitted-but-unresolved* request — queued
+//! here, lingering in the batcher, riding the work channel, or executing —
+//! because a cap on the intake queue alone would be vacuous: the
+//! dispatcher drains it into the batcher almost immediately even when
+//! every worker is stuck.
+//!
+//! Two lanes: [`Priority::High`] pops before [`Priority::Normal`], always;
+//! the cap is shared. The dispatcher is the only consumer.
+
+use crate::api::ticket::GemmResult;
+use crate::api::{Priority, ServiceError};
+use crate::coordinator::request::{CallMeta, GemmRequest};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// One admitted request: the compute payload, its client-facing metadata,
+/// and the reply channel the service owes exactly one send on.
+pub(crate) struct Admitted {
+    pub req: GemmRequest,
+    pub meta: CallMeta,
+    pub tx: Sender<GemmResult>,
+}
+
+/// What a blocking pop observed.
+pub(crate) enum Popped {
+    Item(Admitted),
+    Timeout,
+    /// Closed *and* drained — the dispatcher can wind down.
+    Closed,
+}
+
+#[derive(Default)]
+struct Lanes {
+    high: VecDeque<Admitted>,
+    normal: VecDeque<Admitted>,
+    closed: bool,
+}
+
+pub(crate) struct Intake {
+    cap: usize,
+    /// Admitted and not yet resolved (a reply not yet sent). Incremented
+    /// under the lane lock in `admit`, decremented lock-free by
+    /// `finish_one` at every reply site; the transient in between can only
+    /// make admission *stricter* than the cap, never looser.
+    in_flight: AtomicUsize,
+    lanes: Mutex<Lanes>,
+    cv: Condvar,
+}
+
+impl Intake {
+    pub(crate) fn new(queue_cap: usize) -> Intake {
+        Intake {
+            cap: queue_cap.max(1),
+            in_flight: AtomicUsize::new(0),
+            lanes: Mutex::new(Lanes::default()),
+            cv: Condvar::new(),
+        }
+    }
+
+    pub(crate) fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Admit or synchronously reject. On `Ok` the request is owned by the
+    /// service and `in_flight` counts it until a reply is sent.
+    pub(crate) fn admit(&self, adm: Admitted) -> Result<(), ServiceError> {
+        let mut g = self.lanes.lock().unwrap();
+        if g.closed {
+            return Err(ServiceError::ShuttingDown);
+        }
+        if self.in_flight.load(Ordering::Acquire) >= self.cap {
+            return Err(ServiceError::QueueFull { queue_cap: self.cap });
+        }
+        self.in_flight.fetch_add(1, Ordering::AcqRel);
+        match adm.meta.priority {
+            Priority::High => g.high.push_back(adm),
+            Priority::Normal => g.normal.push_back(adm),
+        }
+        drop(g);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Pop the next admitted request, high lane first, waiting up to
+    /// `timeout`. Returns [`Popped::Closed`] only once the queue is both
+    /// closed and empty, so everything admitted before `close` is still
+    /// delivered.
+    pub(crate) fn pop_wait(&self, timeout: Duration) -> Popped {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.lanes.lock().unwrap();
+        loop {
+            let item = match g.high.pop_front() {
+                Some(x) => Some(x),
+                None => g.normal.pop_front(),
+            };
+            if let Some(adm) = item {
+                return Popped::Item(adm);
+            }
+            if g.closed {
+                return Popped::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Popped::Timeout;
+            }
+            let (ng, _) = self.cv.wait_timeout(g, deadline - now).unwrap();
+            g = ng;
+        }
+    }
+
+    /// Stop admitting (idempotent). Queued requests still drain through
+    /// `pop_wait`; the dispatcher sees [`Popped::Closed`] after the last.
+    pub(crate) fn close(&self) {
+        let mut g = self.lanes.lock().unwrap();
+        g.closed = true;
+        drop(g);
+        self.cv.notify_all();
+    }
+
+    /// One admitted request got its reply — free its admission slot.
+    pub(crate) fn finish_one(&self) {
+        self.in_flight.fetch_sub(1, Ordering::AcqRel);
+    }
+
+    #[cfg(test)]
+    fn in_flight(&self) -> usize {
+        self.in_flight.load(Ordering::Acquire)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::CancelToken;
+    use crate::coordinator::Policy;
+    use crate::matgen::urand;
+    use std::sync::mpsc::channel;
+
+    fn admitted(id: u64, priority: Priority) -> Admitted {
+        let now = Instant::now();
+        Admitted {
+            req: GemmRequest {
+                id,
+                a: urand(2, 2, -1.0, 1.0, id),
+                b: urand(2, 2, -1.0, 1.0, id + 1),
+                policy: Policy::Fp32Accuracy,
+            },
+            meta: CallMeta {
+                submitted: now,
+                deadline: None,
+                cancel: CancelToken::new(),
+                priority,
+                tag: None,
+            },
+            tx: channel().0,
+        }
+    }
+
+    #[test]
+    fn high_lane_pops_before_normal_regardless_of_arrival_order() {
+        let q = Intake::new(16);
+        q.admit(admitted(1, Priority::Normal)).unwrap();
+        q.admit(admitted(2, Priority::Normal)).unwrap();
+        q.admit(admitted(3, Priority::High)).unwrap();
+        q.admit(admitted(4, Priority::High)).unwrap();
+        let order: Vec<u64> = (0..4)
+            .map(|_| match q.pop_wait(Duration::from_secs(1)) {
+                Popped::Item(a) => a.req.id,
+                _ => panic!("expected an item"),
+            })
+            .collect();
+        assert_eq!(order, vec![3, 4, 1, 2]);
+    }
+
+    #[test]
+    fn cap_counts_unresolved_not_just_queued() {
+        let q = Intake::new(2);
+        q.admit(admitted(1, Priority::Normal)).unwrap();
+        q.admit(admitted(2, Priority::Normal)).unwrap();
+        // Popping does NOT free the slot — only a reply does.
+        assert!(matches!(q.pop_wait(Duration::from_millis(1)), Popped::Item(_)));
+        let err = q.admit(admitted(3, Priority::Normal)).unwrap_err();
+        assert_eq!(err, ServiceError::QueueFull { queue_cap: 2 });
+        q.finish_one();
+        assert_eq!(q.in_flight(), 1);
+        q.admit(admitted(4, Priority::Normal)).unwrap();
+    }
+
+    #[test]
+    fn close_drains_then_reports_closed() {
+        let q = Intake::new(4);
+        q.admit(admitted(1, Priority::Normal)).unwrap();
+        q.close();
+        let err = q.admit(admitted(2, Priority::Normal)).unwrap_err();
+        assert_eq!(err, ServiceError::ShuttingDown);
+        assert!(matches!(q.pop_wait(Duration::from_millis(1)), Popped::Item(_)));
+        assert!(matches!(q.pop_wait(Duration::from_millis(1)), Popped::Closed));
+        // close is idempotent.
+        q.close();
+        assert!(matches!(q.pop_wait(Duration::from_millis(1)), Popped::Closed));
+    }
+
+    #[test]
+    fn pop_times_out_when_idle() {
+        let q = Intake::new(4);
+        let t0 = Instant::now();
+        assert!(matches!(q.pop_wait(Duration::from_millis(10)), Popped::Timeout));
+        assert!(t0.elapsed() >= Duration::from_millis(10));
+    }
+
+    #[test]
+    fn zero_cap_clamps_to_one() {
+        let q = Intake::new(0);
+        assert_eq!(q.cap(), 1);
+        q.admit(admitted(1, Priority::Normal)).unwrap();
+        assert!(q.admit(admitted(2, Priority::Normal)).is_err());
+    }
+}

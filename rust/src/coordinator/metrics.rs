@@ -16,6 +16,9 @@ struct Inner {
     requests: u64,
     completed: u64,
     failed: u64,
+    rejected: u64,
+    expired: u64,
+    cancelled: u64,
     flops: u64,
     per_method: HashMap<&'static str, u64>,
     latency_buckets: [u64; 8],
@@ -46,10 +49,20 @@ pub struct Metrics {
 pub struct Snapshot {
     pub requests: u64,
     pub completed: u64,
-    /// Requests whose batch was dropped by a panicking executor. Every
-    /// submitted request reconciles: `requests == completed + failed`
-    /// once the pipeline drains.
+    /// Requests whose batch's executor panicked (each replied
+    /// `ServiceError::ExecutorFailed`). Every admitted request reconciles:
+    /// `requests == completed + failed + expired + cancelled` once the
+    /// pipeline drains.
     pub failed: u64,
+    /// Submissions load-shed at admission (`ServiceError::QueueFull`).
+    /// Never admitted, so NOT part of `requests` or the identity above.
+    pub rejected: u64,
+    /// Admitted requests dropped because their deadline passed before
+    /// execution (each replied `ServiceError::DeadlineExceeded`).
+    pub expired: u64,
+    /// Admitted requests dropped because the client cancelled the ticket
+    /// before execution (each replied `ServiceError::Cancelled`).
+    pub cancelled: u64,
     pub flops: u64,
     pub per_method: Vec<(&'static str, u64)>,
     pub latency_buckets: [u64; 8],
@@ -91,11 +104,27 @@ impl Metrics {
         self.inner.lock().unwrap().requests += 1;
     }
 
-    /// Record `n` requests dropped because their batch's executor panicked
-    /// (the clients observe a disconnected channel). Keeps the
-    /// `requests == completed + failed` identity intact.
+    /// Record `n` requests whose batch's executor panicked (each client
+    /// received `ServiceError::ExecutorFailed`). Keeps the
+    /// `requests == completed + failed + expired + cancelled` identity
+    /// intact.
     pub fn on_failed(&self, n: usize) {
         self.inner.lock().unwrap().failed += n as u64;
+    }
+
+    /// Record one submission load-shed at admission (`QueueFull`).
+    pub fn on_rejected(&self) {
+        self.inner.lock().unwrap().rejected += 1;
+    }
+
+    /// Record `n` admitted requests dropped on deadline expiry.
+    pub fn on_expired(&self, n: usize) {
+        self.inner.lock().unwrap().expired += n as u64;
+    }
+
+    /// Record `n` admitted requests dropped on client cancellation.
+    pub fn on_cancelled(&self, n: usize) {
+        self.inner.lock().unwrap().cancelled += n as u64;
     }
 
     /// Surface a [`SplitCache`]'s hit/miss counters in future snapshots.
@@ -160,6 +189,9 @@ impl Metrics {
             requests: g.requests,
             completed: g.completed,
             failed: g.failed,
+            rejected: g.rejected,
+            expired: g.expired,
+            cancelled: g.cancelled,
             flops: g.flops,
             per_method,
             latency_buckets: g.latency_buckets,
@@ -219,10 +251,29 @@ mod tests {
         m.on_complete(Method::Fp32Simt, 100, Duration::from_micros(10), 3);
         m.on_complete(Method::Fp32Simt, 100, Duration::from_micros(10), 3);
         m.on_complete(Method::Fp32Simt, 100, Duration::from_micros(10), 3);
-        m.on_failed(2); // a dropped 2-request batch
+        m.on_failed(2); // a failed 2-request batch
         let s = m.snapshot();
         assert_eq!(s.failed, 2);
         assert_eq!(s.requests, s.completed + s.failed);
+    }
+
+    #[test]
+    fn admission_counters_reconcile() {
+        let m = Metrics::new();
+        for _ in 0..6 {
+            m.on_submit(); // admitted
+        }
+        m.on_rejected(); // load-shed — NOT admitted
+        m.on_complete(Method::Fp32Simt, 100, Duration::from_micros(10), 1);
+        m.on_complete(Method::Fp32Simt, 100, Duration::from_micros(10), 1);
+        m.on_failed(1);
+        m.on_expired(2);
+        m.on_cancelled(1);
+        let s = m.snapshot();
+        assert_eq!(s.rejected, 1);
+        assert_eq!(s.expired, 2);
+        assert_eq!(s.cancelled, 1);
+        assert_eq!(s.requests, s.completed + s.failed + s.expired + s.cancelled);
     }
 
     #[test]

@@ -1,11 +1,15 @@
-//! L3 coordinator: the GEMM-as-a-service layer (router, dynamic batcher,
-//! split cache, worker pool, metrics). The paper's kernel is the payload;
-//! this layer is how a downstream system would actually consume it —
-//! including the exponent-range routing rule that encodes Fig. 11's
-//! accuracy cliffs and the [`SplitCache`] that amortizes operand splits
-//! across repeated (weight-like) submissions.
+//! L3 coordinator: the GEMM-as-a-service layer (admission-controlled
+//! intake, router, dynamic batcher, split cache, worker pool, metrics).
+//! The paper's kernel is the payload; this layer is how a downstream
+//! system would actually consume it — including the exponent-range
+//! routing rule that encodes Fig. 11's accuracy cliffs and the
+//! [`SplitCache`] that amortizes operand splits across repeated
+//! (weight-like) submissions. Clients talk to it through the versioned
+//! [`crate::api`] layer (DESIGN.md §10); every reply is a
+//! `Result<GemmOutcome, api::ServiceError>`.
 
 pub mod batcher;
+pub(crate) mod intake;
 pub mod metrics;
 pub mod policy;
 pub mod request;
@@ -15,6 +19,8 @@ pub mod splitcache;
 pub use batcher::{Batch, BatchKey, DynamicBatcher};
 pub use metrics::{Metrics, Snapshot};
 pub use policy::{probe, route, Policy, RangeClass};
-pub use request::{GemmRequest, GemmResponse};
+pub use request::{GemmOutcome, GemmRequest};
+#[allow(deprecated)]
+pub use request::GemmResponse;
 pub use service::{Executor, GemmService, ServiceConfig, SimExecutor};
 pub use splitcache::SplitCache;

@@ -1,10 +1,15 @@
-//! Request / response types of the GEMM service.
+//! Request / reply wire types of the GEMM service.
 
 use super::policy::Policy;
+use crate::api::{CancelToken, Priority};
 use crate::gemm::{Mat, Method};
-use std::time::Duration;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
-/// A client GEMM request: `C = A·B` under an accuracy policy.
+/// A client GEMM request: `C = A·B` under an accuracy policy. Pure compute
+/// payload — the client-facing call metadata (deadline, cancellation,
+/// priority, tag) rides separately in the crate-private `CallMeta` so
+/// executors and the shard engine never see it.
 #[derive(Debug, Clone)]
 pub struct GemmRequest {
     pub id: u64,
@@ -20,18 +25,48 @@ impl GemmRequest {
     }
 }
 
-/// The service's answer.
-#[derive(Debug)]
-pub struct GemmResponse {
+/// Per-call metadata the service carries alongside a [`GemmRequest`] from
+/// admission to the terminal reply (DESIGN.md §10). Checked at every
+/// enforcement point (intake pop, batch emit, pre-execute) so expired or
+/// cancelled requests never reach an executor.
+#[derive(Debug, Clone)]
+pub(crate) struct CallMeta {
+    /// When the call was admitted (latency and `waited` are measured from
+    /// here).
+    pub submitted: Instant,
+    /// Absolute expiry, if the client set a deadline.
+    pub deadline: Option<Instant>,
+    /// Shared cancellation flag (the client's `Ticket` holds the other
+    /// handle).
+    pub cancel: CancelToken,
+    /// Which intake lane the call joined.
+    pub priority: Priority,
+    /// Client label echoed back in [`GemmOutcome::tag`].
+    pub tag: Option<Arc<str>>,
+}
+
+/// The service's successful reply (`api::GemmResult`'s `Ok` payload).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GemmOutcome {
     pub id: u64,
     pub c: Mat,
     /// Which backend the router picked.
     pub method: Method,
-    /// Queue + execute wall time.
+    /// Admission → reply wall time.
     pub latency: Duration,
-    /// How many requests shared the executed batch.
+    /// How many requests shared the **executed** batch (expired/cancelled
+    /// stragglers are filtered out before execution and do not count).
     pub batch_size: usize,
+    /// The `tag` the call was submitted with, if any.
+    pub tag: Option<Arc<str>>,
 }
+
+/// The pre-PR-4 name of [`GemmOutcome`].
+#[deprecated(
+    note = "renamed to GemmOutcome; the supported client surface is api::Client, \
+            whose replies are Result<GemmOutcome, ServiceError>"
+)]
+pub type GemmResponse = GemmOutcome;
 
 #[cfg(test)]
 mod tests {

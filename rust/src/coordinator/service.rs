@@ -1,27 +1,36 @@
-//! The GEMM service: router → dynamic batcher → worker pool.
+//! The GEMM service: admission control → dispatcher → dynamic batcher →
+//! worker pool (DESIGN.md §4, §10).
 //!
 //! Shaped like a miniature serving router (vllm-project/router): clients
-//! `submit` requests and receive a per-request response channel; a
-//! dispatcher thread routes (policy × exponent probe), batches same-shape
-//! work, and hands full or timed-out batches to a worker pool that executes
-//! them through an [`Executor`] — either the bit-exact simulator backends or
-//! the PJRT runtime executing AOT-compiled Pallas artifacts (see
-//! `runtime::PjrtExecutor`). Python is never on this path.
+//! go through the versioned `api` layer (`GemmService::call` /
+//! `api::Client`), which admits requests into a bounded two-lane intake
+//! queue; a dispatcher thread routes (policy × exponent probe, or the
+//! planner), batches same-shape work, and hands full or timed-out batches
+//! to a worker pool that executes them through an [`Executor`] — either
+//! the bit-exact simulator backends or the PJRT runtime executing
+//! AOT-compiled Pallas artifacts (see `runtime::PjrtExecutor`). Every
+//! admitted request resolves to exactly one `Result<GemmOutcome,
+//! ServiceError>` reply: load-shed, expiry, cancellation and executor
+//! panics are all typed, never a hung or dropped channel.
 //!
 //! std::thread + mpsc substitute for tokio (offline image; DESIGN.md §2).
 
 use super::batcher::{Batch, BatchKey, DynamicBatcher};
+use super::intake::{Admitted, Intake, Popped};
 use super::metrics::Metrics;
 use super::policy::{route, Policy};
-use super::request::{GemmRequest, GemmResponse};
+use super::request::{CallMeta, GemmOutcome, GemmRequest};
 use super::splitcache::SplitCache;
+use crate::api::client::CallOptions;
+use crate::api::ticket::GemmResult;
+use crate::api::{CancelToken, GemmCall, ServiceBuilder, ServiceError, Ticket};
 use crate::gemm::prepared::SplitDedup;
 use crate::gemm::{Mat, Method, SplitOperand, TileConfig};
 use crate::planner::{ExecPlan, Planner, PlannerConfig};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -48,6 +57,16 @@ pub trait Executor: Send + Sync + 'static {
     fn split_cache(&self) -> Option<Arc<SplitCache>> {
         None
     }
+
+    /// Offer an operand split cache to attach (DESIGN.md §8; wired by
+    /// `ServiceBuilder::split_cache`). Returns `true` when accepted. The
+    /// default declines — executors that never split operands have
+    /// nothing to cache — and an executor that already holds a cache
+    /// declines a second one. Wrappers forward to their inner executor.
+    fn attach_split_cache(&self, cache: Arc<SplitCache>) -> bool {
+        let _ = cache;
+        false
+    }
 }
 
 /// Simulator-backed executor: runs the bit-exact tiled GEMM backends
@@ -59,26 +78,30 @@ pub struct SimExecutor {
     pub tile: TileConfig,
     /// Threads a multi-element batch is fanned across (1 = serial).
     pub batch_threads: usize,
-    cache: Option<Arc<SplitCache>>,
+    /// Set at most once — at construction (`with_cache`) or by the
+    /// service builder through [`Executor::attach_split_cache`].
+    cache: OnceLock<Arc<SplitCache>>,
 }
 
 impl SimExecutor {
     pub fn new() -> SimExecutor {
         let batch_threads =
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(4);
-        SimExecutor { tile: TileConfig::default(), batch_threads, cache: None }
+        SimExecutor { tile: TileConfig::default(), batch_threads, cache: OnceLock::new() }
     }
 
     /// Like [`SimExecutor::new`], reusing operand splits through `cache`
     /// across batches and requests.
     pub fn with_cache(cache: Arc<SplitCache>) -> SimExecutor {
-        SimExecutor { cache: Some(cache), ..SimExecutor::new() }
+        let slot = OnceLock::new();
+        let _ = slot.set(cache);
+        SimExecutor { cache: slot, ..SimExecutor::new() }
     }
 
     /// Prepare one operand: through the cache when one is attached (so a
     /// repeated weight is split once across requests), otherwise directly.
     fn prepare_operand(&self, method: Method, m: &Mat) -> Arc<SplitOperand> {
-        match &self.cache {
+        match self.cache.get() {
             Some(c) => c.get_or_prepare(method, m),
             None => Arc::new(method.prepare(m)),
         }
@@ -175,12 +198,25 @@ impl Executor for SimExecutor {
     }
 
     fn split_cache(&self) -> Option<Arc<SplitCache>> {
-        self.cache.clone()
+        self.cache.get().cloned()
+    }
+
+    fn attach_split_cache(&self, cache: Arc<SplitCache>) -> bool {
+        self.cache.set(cache).is_ok()
     }
 }
 
+/// One admitted request's reply channel + call metadata, carried alongside
+/// its [`GemmRequest`] from the dispatcher to the worker that resolves it.
+struct Responder {
+    tx: Sender<GemmResult>,
+    meta: CallMeta,
+}
+
 struct WorkItem {
-    batch: Batch,
+    key: BatchKey,
+    /// The batch's requests; `responders[i]` resolves `requests[i]`.
+    requests: Vec<GemmRequest>,
     /// The dispatcher's execution plan for this batch (planner mode only).
     /// The batch key pins (shape, method), which pins the tile and the
     /// prescale — but NOT the shard decision: an Extreme-classified
@@ -189,18 +225,74 @@ struct WorkItem {
     /// same-key plans conservatively (unsharded wins), so this plan is
     /// correct for every request in the batch.
     plan: Option<Arc<ExecPlan>>,
-    responders: Vec<(Sender<GemmResponse>, Instant)>,
+    responders: Vec<Responder>,
 }
 
-/// Dispatcher bookkeeping: request id → (responder, submit time).
-type ResponderMap = std::collections::HashMap<u64, (Sender<GemmResponse>, Instant)>;
+/// Dispatcher bookkeeping: request id → its responder, while the request
+/// sits in the batcher.
+type ResponderMap = HashMap<u64, Responder>;
 
-enum Msg {
-    Submit(GemmRequest, Sender<GemmResponse>, Instant),
-    Shutdown,
+/// The reply owed to a not-yet-executed request at instant `now`, if it
+/// can no longer run. Cancellation wins over expiry when both hold.
+fn drop_verdict(meta: &CallMeta, now: Instant) -> Option<ServiceError> {
+    if meta.cancel.is_cancelled() {
+        return Some(ServiceError::Cancelled);
+    }
+    match meta.deadline {
+        Some(d) if now >= d => Some(ServiceError::DeadlineExceeded {
+            waited: now.saturating_duration_since(meta.submitted),
+        }),
+        _ => None,
+    }
 }
 
-/// Service configuration.
+/// Send the terminal reply and release the admission slot — the one way a
+/// request leaves the service. The client may have dropped its receiver;
+/// the send result is deliberately ignored.
+fn resolve(intake: &Intake, tx: &Sender<GemmResult>, reply: GemmResult) {
+    let _ = tx.send(reply);
+    intake.finish_one();
+}
+
+/// [`resolve`] for a triaged drop, bumping the matching metric.
+fn resolve_dropped(intake: &Intake, metrics: &Metrics, tx: &Sender<GemmResult>, err: ServiceError) {
+    match &err {
+        ServiceError::Cancelled => metrics.on_cancelled(1),
+        ServiceError::DeadlineExceeded { .. } => metrics.on_expired(1),
+        _ => {}
+    }
+    resolve(intake, tx, Err(err));
+}
+
+/// Partition an assembled batch into runnable requests and their
+/// responders, resolving (and counting) everything cancelled or expired
+/// right now. The single implementation behind BOTH post-assembly
+/// enforcement points — batch emit and worker pre-execute — so a new
+/// drop reason cannot reach one and silently miss the other.
+fn triage(
+    requests: Vec<GemmRequest>,
+    responders: Vec<Responder>,
+    intake: &Intake,
+    metrics: &Metrics,
+) -> (Vec<GemmRequest>, Vec<Responder>) {
+    let now = Instant::now();
+    let mut live_reqs = Vec::with_capacity(requests.len());
+    let mut live_rs = Vec::with_capacity(responders.len());
+    for (req, r) in requests.into_iter().zip(responders) {
+        match drop_verdict(&r.meta, now) {
+            Some(err) => resolve_dropped(intake, metrics, &r.tx, err),
+            None => {
+                live_reqs.push(req);
+                live_rs.push(r);
+            }
+        }
+    }
+    (live_reqs, live_rs)
+}
+
+/// Service configuration. Prefer assembling it through
+/// [`GemmService::builder`] (`api::ServiceBuilder`) — the struct stays
+/// public for introspection and `..Default::default()` updates.
 #[derive(Debug, Clone)]
 pub struct ServiceConfig {
     pub workers: usize,
@@ -208,6 +300,15 @@ pub struct ServiceConfig {
     pub linger: Duration,
     /// Optional method override (bypass the router — used by benches).
     pub force_method: Option<Method>,
+    /// Admission-control bound (DESIGN.md §10): the most requests that may
+    /// be admitted and not yet resolved at once — queued, batched, riding
+    /// the work channel, or executing. Submissions beyond it are load-shed
+    /// synchronously with `ServiceError::QueueFull`. Clamped to ≥ 1.
+    pub queue_cap: usize,
+    /// Attach an operand [`SplitCache`] of this capacity to the executor
+    /// at startup (DESIGN.md §8). Executors that never split operands
+    /// decline it (a log line notes the ignored knob).
+    pub split_cache: Option<usize>,
     /// When set, large GEMMs are executed as tile-shard grids over a
     /// work-stealing pool (`shard::ShardedExecutor` wraps the executor;
     /// small requests keep the direct path). Shard/steal/reduction counters
@@ -230,6 +331,8 @@ impl Default for ServiceConfig {
             max_batch: 8,
             linger: Duration::from_millis(2),
             force_method: None,
+            queue_cap: 1024,
+            split_cache: None,
             shard: None,
             planner: None,
         }
@@ -237,8 +340,15 @@ impl Default for ServiceConfig {
 }
 
 /// Handle to a running GEMM service.
+///
+/// Clients speak the versioned API: [`GemmService::call`] (or
+/// `api::Client` / `api::Session` over an `Arc` of this) builds a request,
+/// admission control accepts or load-sheds it, and the returned
+/// [`Ticket`] resolves to a `Result<GemmOutcome, ServiceError>`. Dropping
+/// the service without calling [`GemmService::shutdown`] still closes the
+/// intake and joins every thread (`Drop` runs the same path).
 pub struct GemmService {
-    tx: Sender<Msg>,
+    intake: Arc<Intake>,
     dispatcher: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
     metrics: Arc<Metrics>,
@@ -246,9 +356,27 @@ pub struct GemmService {
 }
 
 impl GemmService {
+    /// The supported way to configure a service (DESIGN.md §10).
+    pub fn builder() -> ServiceBuilder {
+        ServiceBuilder::new()
+    }
+
     /// Start the dispatcher + worker pool over the given executor.
     pub fn start(executor: Arc<dyn Executor>, cfg: ServiceConfig) -> GemmService {
         let metrics = Arc::new(Metrics::new());
+        // Builder-requested split cache: offered to the raw executor
+        // before any wrapping, so `SimExecutor` (and the PJRT fallback
+        // path through it) accepts while pure artifact execution declines.
+        if let Some(cap) = cfg.split_cache {
+            if executor.split_cache().is_none()
+                && !executor.attach_split_cache(Arc::new(SplitCache::new(cap)))
+            {
+                eprintln!(
+                    "tcec service: executor `{}` does not split operands; split_cache ignored",
+                    executor.name()
+                );
+            }
+        }
         // Sharding wraps the executor transparently: below the threshold
         // `ShardedExecutor` is a pass-through, above it one request fans
         // out over the shard pool.
@@ -276,7 +404,7 @@ impl GemmService {
         if let Some(p) = &planner {
             metrics.register_planner(Arc::clone(p));
         }
-        let (tx, rx) = channel::<Msg>();
+        let intake = Arc::new(Intake::new(cfg.queue_cap));
         let (work_tx, work_rx) = channel::<WorkItem>();
         let work_rx = Arc::new(Mutex::new(work_rx));
 
@@ -285,55 +413,62 @@ impl GemmService {
                 let work_rx = Arc::clone(&work_rx);
                 let executor = Arc::clone(&executor);
                 let metrics = Arc::clone(&metrics);
+                let intake = Arc::clone(&intake);
                 std::thread::spawn(move || loop {
                     let item = {
                         let guard = work_rx.lock().unwrap();
                         guard.recv()
                     };
                     let Ok(item) = item else { break };
-                    let batch_size = item.batch.requests.len();
+                    // Last-chance triage: a cancellation or expiry that
+                    // landed while the batch rode the work queue. Filtered
+                    // here, immediately before execution, so the executed
+                    // batch — and the `batch_size` it reports — provably
+                    // excludes dropped requests.
+                    let (reqs, responders) =
+                        triage(item.requests, item.responders, &intake, &metrics);
+                    if reqs.is_empty() {
+                        continue;
+                    }
+                    let batch_size = reqs.len();
                     // A panicking executor must not take the worker down
-                    // with it: catch, drop the batch's responders (clients
-                    // observe a disconnected channel, not a hang), carry on.
+                    // with it, and must not strand its clients: catch,
+                    // reply `ExecutorFailed` to every request of the
+                    // batch, carry on.
                     let outs = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                         match &item.plan {
-                            Some(p) => executor.execute_planned(
-                                p,
-                                &item.batch.key,
-                                &item.batch.requests,
-                            ),
-                            None => executor.execute(&item.batch.key, &item.batch.requests),
+                            Some(p) => executor.execute_planned(p, &item.key, &reqs),
+                            None => executor.execute(&item.key, &reqs),
                         }
                     }));
                     let Ok(outs) = outs else {
                         eprintln!(
-                            "tcec worker: executor panicked on batch {:?} ({} reqs dropped)",
-                            item.batch.key, batch_size
+                            "tcec worker: executor panicked on batch {:?} ({} reqs failed)",
+                            item.key, batch_size
                         );
-                        // Account for every dropped request so the
-                        // `requests == completed + failed` identity holds.
+                        // Account for every affected request so the
+                        // `requests == completed + failed + expired +
+                        // cancelled` identity holds.
                         metrics.on_failed(batch_size);
+                        for r in &responders {
+                            let err = ServiceError::ExecutorFailed { batch_size };
+                            resolve(&intake, &r.tx, Err(err));
+                        }
                         continue;
                     };
                     debug_assert_eq!(outs.len(), batch_size);
-                    for ((req, c), (resp_tx, t0)) in
-                        item.batch.requests.iter().zip(outs).zip(item.responders)
-                    {
-                        let latency = t0.elapsed();
-                        metrics.on_complete(
-                            item.batch.key.method,
-                            req.flops(),
-                            latency,
-                            batch_size,
-                        );
-                        // Client may have dropped its receiver; ignore.
-                        let _ = resp_tx.send(GemmResponse {
+                    for ((req, c), r) in reqs.iter().zip(outs).zip(responders) {
+                        let latency = r.meta.submitted.elapsed();
+                        metrics.on_complete(item.key.method, req.flops(), latency, batch_size);
+                        let outcome = GemmOutcome {
                             id: req.id,
                             c,
-                            method: item.batch.key.method,
+                            method: item.key.method,
                             latency,
                             batch_size,
-                        });
+                            tag: r.meta.tag.clone(),
+                        };
+                        resolve(&intake, &r.tx, Ok(outcome));
                     }
                 })
             })
@@ -341,6 +476,7 @@ impl GemmService {
 
         let dispatcher = {
             let metrics = Arc::clone(&metrics);
+            let intake = Arc::clone(&intake);
             let force = cfg.force_method;
             let linger = cfg.linger;
             let max_batch = cfg.max_batch;
@@ -356,89 +492,109 @@ impl GemmService {
                 let emit = |batch: Batch,
                             responders: &mut ResponderMap,
                             open_plans: &mut HashMap<BatchKey, Arc<ExecPlan>>| {
-                    let rs: Vec<_> = batch
+                    let plan = open_plans.remove(&batch.key);
+                    // Emit-time triage (via the shared `triage`): a request
+                    // whose deadline expired (or whose ticket was
+                    // cancelled) while it lingered in the batcher is
+                    // dropped HERE, before the batch reaches a worker — a
+                    // stale straggler never rides, or poisons the latency
+                    // of, the fresh batch it was grouped with.
+                    let rs: Vec<Responder> = batch
                         .requests
                         .iter()
                         .map(|r| responders.remove(&r.id).expect("responder registered"))
                         .collect();
-                    let plan = open_plans.remove(&batch.key);
-                    let _ = work_tx.send(WorkItem { batch, plan, responders: rs });
+                    let (reqs, rs) = triage(batch.requests, rs, &intake, &metrics);
+                    if !reqs.is_empty() {
+                        let item =
+                            WorkItem { key: batch.key, requests: reqs, plan, responders: rs };
+                        let _ = work_tx.send(item);
+                    }
                 };
                 loop {
                     // Wake exactly when the oldest pending batch's linger
                     // deadline expires. Deriving the timeout from the
                     // batcher (not a fixed `linger`) is what prevents
                     // starvation: a steady submit stream used to keep
-                    // `recv_timeout` from ever timing out, so stragglers
+                    // the recv timeout from ever firing, so stragglers
                     // blew past their deadline unboundedly.
                     let timeout = batcher
                         .next_deadline()
                         .map(|d| d.saturating_duration_since(Instant::now()))
                         .unwrap_or(linger);
-                    match rx.recv_timeout(timeout) {
-                        Ok(Msg::Submit(req, resp_tx, t0)) => {
-                            metrics.on_submit();
-                            // Planner mode: one cached ExecPlan carries the
-                            // method, tile and shard decision (no full
-                            // O(mn) probe for repeated operands). Legacy
-                            // mode: the exact-probe route shim, no plan.
-                            let (method, plan) = match &planner {
-                                Some(p) => {
-                                    let plan = match force {
-                                        Some(mm) => p.plan_for_method(
-                                            mm,
-                                            req.a.rows,
-                                            req.b.cols,
-                                            req.a.cols,
-                                        ),
-                                        None => p.plan_request(&req.a, &req.b, req.policy),
-                                    };
-                                    (plan.method, Some(plan))
-                                }
-                                None => {
-                                    let method = force
-                                        .unwrap_or_else(|| route(req.policy, &req.a, &req.b));
-                                    (method, None)
-                                }
-                            };
-                            responders.insert(req.id, (resp_tx, t0));
-                            if let Some(plan) = plan {
-                                let key = BatchKey {
-                                    m: req.a.rows,
-                                    n: req.b.cols,
-                                    k: req.a.cols,
-                                    method,
+                    match intake.pop_wait(timeout) {
+                        Popped::Item(Admitted { req, meta, tx }) => {
+                            // Pre-batch triage: an already-expired or
+                            // already-cancelled request never enters the
+                            // batcher (and never pays for routing).
+                            if let Some(err) = drop_verdict(&meta, Instant::now()) {
+                                resolve_dropped(&intake, &metrics, &tx, err);
+                            } else {
+                                // Planner mode: one cached ExecPlan carries
+                                // the method, tile and shard decision (no
+                                // full O(mn) probe for repeated operands).
+                                // Legacy mode: the exact-probe route shim,
+                                // no plan.
+                                let (method, plan) = match &planner {
+                                    Some(p) => {
+                                        let plan = match force {
+                                            Some(mm) => p.plan_for_method(
+                                                mm,
+                                                req.a.rows,
+                                                req.b.cols,
+                                                req.a.cols,
+                                            ),
+                                            None => p.plan_request(&req.a, &req.b, req.policy),
+                                        };
+                                        (plan.method, Some(plan))
+                                    }
+                                    None => {
+                                        let method = force
+                                            .unwrap_or_else(|| route(req.policy, &req.a, &req.b));
+                                        (method, None)
+                                    }
                                 };
-                                // Same-key plans agree on method/tile/
-                                // prescale but may disagree on sharding
-                                // (an Extreme-classified request plans
-                                // unsharded). Merge conservatively: once
-                                // any request in the open group needs the
-                                // unsharded path, the whole batch takes
-                                // it — correct for every member, and
-                                // extreme inputs never ride a shard grid.
-                                open_plans
-                                    .entry(key)
-                                    .and_modify(|existing| {
-                                        if plan.shard.is_none() {
-                                            *existing = Arc::clone(&plan);
-                                        }
-                                    })
-                                    .or_insert(plan);
-                            }
-                            if let Some(batch) = batcher.push(method, req) {
-                                emit(batch, &mut responders, &mut open_plans);
+                                responders.insert(req.id, Responder { tx, meta });
+                                if let Some(plan) = plan {
+                                    let key = BatchKey {
+                                        m: req.a.rows,
+                                        n: req.b.cols,
+                                        k: req.a.cols,
+                                        method,
+                                    };
+                                    // Same-key plans agree on method/tile/
+                                    // prescale but may disagree on sharding
+                                    // (an Extreme-classified request plans
+                                    // unsharded). Merge conservatively: once
+                                    // any request in the open group needs the
+                                    // unsharded path, the whole batch takes
+                                    // it — correct for every member, and
+                                    // extreme inputs never ride a shard grid.
+                                    open_plans
+                                        .entry(key)
+                                        .and_modify(|existing| {
+                                            if plan.shard.is_none() {
+                                                *existing = Arc::clone(&plan);
+                                            }
+                                        })
+                                        .or_insert(plan);
+                                }
+                                if let Some(batch) = batcher.push(method, req) {
+                                    emit(batch, &mut responders, &mut open_plans);
+                                }
                             }
                         }
-                        Err(RecvTimeoutError::Timeout) => {}
-                        Ok(Msg::Shutdown) | Err(RecvTimeoutError::Disconnected) => {
+                        Popped::Timeout => {}
+                        Popped::Closed => {
+                            // Intake closed AND drained: flush what the
+                            // batcher still holds, then wind down.
                             for batch in batcher.flush(true) {
                                 emit(batch, &mut responders, &mut open_plans);
                             }
                             break;
                         }
                     }
-                    // Flush due stragglers on EVERY iteration — message or
+                    // Flush due stragglers on EVERY iteration — item or
                     // timeout alike.
                     for batch in batcher.flush(false) {
                         emit(batch, &mut responders, &mut open_plans);
@@ -449,7 +605,7 @@ impl GemmService {
         };
 
         GemmService {
-            tx,
+            intake,
             dispatcher: Some(dispatcher),
             workers,
             metrics,
@@ -457,30 +613,104 @@ impl GemmService {
         }
     }
 
-    /// Submit a GEMM; returns the request id and the response receiver.
-    pub fn submit(&self, a: Mat, b: Mat, policy: Policy) -> (u64, Receiver<GemmResponse>) {
-        assert_eq!(a.cols, b.rows, "inner dimensions must agree");
+    /// Start building one GEMM call (`C = A·B`) — the entry point of the
+    /// versioned API (`api::GemmCall`). Terminates in `.submit()` (a
+    /// [`Ticket`]) or `.wait()` (block for the `GemmResult`).
+    pub fn call(&self, a: Mat, b: Mat) -> GemmCall<'_> {
+        GemmCall::with_options(self, a, b, CallOptions::default())
+    }
+
+    /// Validate, admit and track one call (the `GemmCall::submit` body).
+    pub(crate) fn submit_call(
+        &self,
+        a: Mat,
+        b: Mat,
+        opts: CallOptions,
+    ) -> Result<Ticket, ServiceError> {
+        if a.cols != b.rows {
+            return Err(ServiceError::InvalidShape {
+                a_rows: a.rows,
+                a_cols: a.cols,
+                b_rows: b.rows,
+                b_cols: b.cols,
+            });
+        }
+        let now = Instant::now();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let (resp_tx, resp_rx) = channel();
-        self.tx
-            .send(Msg::Submit(GemmRequest { id, a, b, policy }, resp_tx, Instant::now()))
-            .expect("service running");
-        (id, resp_rx)
+        let (tx, rx) = channel();
+        let cancel = CancelToken::new();
+        let policy = opts.policy_or_default();
+        let meta = CallMeta {
+            submitted: now,
+            // A deadline too far out to represent saturates to "none".
+            deadline: opts.deadline.and_then(|d| now.checked_add(d)),
+            cancel: cancel.clone(),
+            priority: opts.priority,
+            tag: opts.tag,
+        };
+        let req = GemmRequest { id, a, b, policy };
+        match self.intake.admit(Admitted { req, meta, tx }) {
+            Ok(()) => {
+                self.metrics.on_submit();
+                Ok(Ticket::new(id, rx, cancel, now))
+            }
+            Err(err) => {
+                if matches!(err, ServiceError::QueueFull { .. }) {
+                    self.metrics.on_rejected();
+                }
+                Err(err)
+            }
+        }
+    }
+
+    /// Submit a GEMM; returns the request id and the raw reply receiver.
+    #[deprecated(
+        note = "use GemmService::call / api::Client — builders with deadlines, priorities and \
+                cancellable Tickets; replies are Result<GemmOutcome, ServiceError>"
+    )]
+    pub fn submit(&self, a: Mat, b: Mat, policy: Policy) -> (u64, Receiver<GemmResult>) {
+        let opts = CallOptions { policy: Some(policy), ..CallOptions::default() };
+        match self.submit_call(a, b, opts) {
+            Ok(ticket) => ticket.into_raw(),
+            Err(err) => {
+                // Preserve the shim's infallible signature: the rejection
+                // arrives as the only reply on the returned channel (id 0
+                // — the request was never admitted).
+                let (tx, rx) = channel();
+                let _ = tx.send(Err(err));
+                (0, rx)
+            }
+        }
     }
 
     /// Convenience: submit and wait.
-    pub fn gemm_blocking(&self, a: Mat, b: Mat, policy: Policy) -> GemmResponse {
-        let (_, rx) = self.submit(a, b, policy);
-        rx.recv().expect("service answered")
+    #[deprecated(note = "use GemmService::call(a, b).policy(p).wait() / api::Client")]
+    pub fn gemm_blocking(&self, a: Mat, b: Mat, policy: Policy) -> GemmResult {
+        self.call(a, b).policy(policy).wait()
     }
 
     pub fn metrics(&self) -> Arc<Metrics> {
         Arc::clone(&self.metrics)
     }
 
-    /// Graceful shutdown: drain queues, join all threads.
-    pub fn shutdown(mut self) {
-        let _ = self.tx.send(Msg::Shutdown);
+    /// Admission-control bound this service runs with.
+    pub fn queue_cap(&self) -> usize {
+        self.intake.cap()
+    }
+
+    /// Stop admitting new requests — `call`/`submit` return
+    /// [`ServiceError::ShuttingDown`] from now on — while everything
+    /// already admitted still drains. [`GemmService::shutdown`] (or
+    /// dropping the service) closes and then joins.
+    pub fn close(&self) {
+        self.intake.close();
+    }
+
+    /// The close-and-join path shared by [`GemmService::shutdown`] and
+    /// `Drop` — idempotent, so an explicit shutdown followed by the
+    /// implicit drop is a no-op the second time.
+    fn shutdown_impl(&mut self) {
+        self.intake.close();
         if let Some(d) = self.dispatcher.take() {
             let _ = d.join();
         }
@@ -488,17 +718,16 @@ impl GemmService {
             let _ = w.join();
         }
     }
+
+    /// Graceful shutdown: stop admissions, drain queues, join all threads.
+    pub fn shutdown(mut self) {
+        self.shutdown_impl();
+    }
 }
 
 impl Drop for GemmService {
     fn drop(&mut self) {
-        let _ = self.tx.send(Msg::Shutdown);
-        if let Some(d) = self.dispatcher.take() {
-            let _ = d.join();
-        }
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
+        self.shutdown_impl();
     }
 }
 
@@ -510,11 +739,15 @@ mod tests {
 
     #[test]
     fn single_request_roundtrip() {
-        let svc = GemmService::start(Arc::new(SimExecutor::new()), ServiceConfig::default());
+        let svc = GemmService::builder().build(Arc::new(SimExecutor::new()));
         let a = urand(16, 16, -1.0, 1.0, 1);
         let b = urand(16, 16, -1.0, 1.0, 2);
         let r_ref = gemm_f64(&a, &b);
-        let resp = svc.gemm_blocking(a, b, Policy::Fp32Accuracy);
+        let resp = svc
+            .call(a, b)
+            .policy(Policy::Fp32Accuracy)
+            .wait()
+            .expect("served");
         assert_eq!(resp.method, Method::OursHalfHalf);
         assert!(relative_residual(&r_ref, &resp.c) < 1e-6);
         svc.shutdown();
@@ -522,14 +755,17 @@ mod tests {
 
     #[test]
     fn planner_mode_single_request_roundtrip() {
-        let svc = GemmService::start(
-            Arc::new(SimExecutor::new()),
-            ServiceConfig { planner: Some(PlannerConfig::default()), ..ServiceConfig::default() },
-        );
+        let svc = GemmService::builder()
+            .planner(PlannerConfig::default())
+            .build(Arc::new(SimExecutor::new()));
         let a = urand(16, 16, -1.0, 1.0, 1);
         let b = urand(16, 16, -1.0, 1.0, 2);
         let r_ref = gemm_f64(&a, &b);
-        let resp = svc.gemm_blocking(a.clone(), b.clone(), Policy::Fp32Accuracy);
+        let resp = svc
+            .call(a.clone(), b.clone())
+            .policy(Policy::Fp32Accuracy)
+            .wait()
+            .expect("served");
         assert_eq!(resp.method, Method::OursHalfHalf);
         assert!(relative_residual(&r_ref, &resp.c) < 1e-6);
         // Bit-identical to a direct run under the planned tile (planning
@@ -551,30 +787,34 @@ mod tests {
         // not. They share a BatchKey and get batched together; the merged
         // plan must be the conservative unsharded one, regardless of
         // arrival order — the extreme request never rides a shard grid.
-        let svc = GemmService::start(
-            Arc::new(SimExecutor::new()),
-            ServiceConfig {
-                workers: 1,
-                max_batch: 2,
-                linger: Duration::from_secs(60), // batch only fills by count
-                shard: Some(crate::shard::ShardConfig {
-                    workers: 2,
-                    min_flops: 0,
-                    ..crate::shard::ShardConfig::default()
-                }),
-                planner: Some(PlannerConfig::default()),
-                ..ServiceConfig::default()
-            },
-        );
+        let svc = GemmService::builder()
+            .workers(1)
+            .max_batch(2)
+            .linger(Duration::from_secs(60)) // batch only fills by count
+            .shard(crate::shard::ShardConfig {
+                workers: 2,
+                min_flops: 0,
+                ..crate::shard::ShardConfig::default()
+            })
+            .planner(PlannerConfig::default())
+            .build(Arc::new(SimExecutor::new()));
         let finite_a = urand(192, 64, -1.0, 1.0, 1);
         let finite_b = urand(64, 192, -1.0, 1.0, 2);
         let mut inf_a = urand(192, 64, -1.0, 1.0, 3);
         inf_a.set(0, 0, f32::INFINITY);
         let inf_b = urand(64, 192, -1.0, 1.0, 4);
-        let (_, rx1) = svc.submit(finite_a, finite_b, Policy::StrictFp32);
-        let (_, rx2) = svc.submit(inf_a, inf_b, Policy::Fp32Accuracy);
-        let r1 = rx1.recv_timeout(Duration::from_secs(60)).expect("finite answered");
-        let r2 = rx2.recv_timeout(Duration::from_secs(60)).expect("extreme answered");
+        let t1 = svc
+            .call(finite_a, finite_b)
+            .policy(Policy::StrictFp32)
+            .submit()
+            .unwrap();
+        let t2 = svc
+            .call(inf_a, inf_b)
+            .policy(Policy::Fp32Accuracy)
+            .submit()
+            .unwrap();
+        let r1 = t1.wait().expect("finite answered");
+        let r2 = t2.wait().expect("extreme answered");
         assert_eq!(r1.method, Method::Fp32Simt);
         assert_eq!(r2.method, Method::Fp32Simt);
         // The batch held both requests, so the merged (unsharded) plan
@@ -586,21 +826,26 @@ mod tests {
 
     #[test]
     fn many_requests_all_answered_correctly_routed() {
-        let svc = GemmService::start(
-            Arc::new(SimExecutor::new()),
-            ServiceConfig { workers: 2, max_batch: 4, ..ServiceConfig::default() },
-        );
-        let mut rxs = Vec::new();
+        let svc = GemmService::builder()
+            .workers(2)
+            .max_batch(4)
+            .build(Arc::new(SimExecutor::new()));
+        let mut tickets = Vec::new();
         for i in 0..20u64 {
-            let (a, b, policy) = if i % 3 == 0 {
-                (exp_rand(8, 8, -100, -36, i), urand(8, 8, -1.0, 1.0, i), Policy::Fp32Accuracy)
+            let (a, b) = if i % 3 == 0 {
+                (exp_rand(8, 8, -100, -36, i), urand(8, 8, -1.0, 1.0, i))
             } else {
-                (urand(8, 8, -1.0, 1.0, i), urand(8, 8, -1.0, 1.0, i + 1), Policy::Fp32Accuracy)
+                (urand(8, 8, -1.0, 1.0, i), urand(8, 8, -1.0, 1.0, i + 1))
             };
-            rxs.push((i % 3 == 0, svc.submit(a, b, policy)));
+            let t = svc
+                .call(a, b)
+                .policy(Policy::Fp32Accuracy)
+                .submit()
+                .expect("admitted");
+            tickets.push((i % 3 == 0, t));
         }
-        for (wide, (_, rx)) in rxs {
-            let resp = rx.recv_timeout(Duration::from_secs(30)).expect("response");
+        for (wide, t) in tickets {
+            let resp = t.wait().expect("response");
             if wide {
                 assert_eq!(resp.method, Method::OursTf32);
             } else {
@@ -643,20 +888,16 @@ mod tests {
     #[test]
     fn straggler_flushed_within_linger_under_sustained_traffic() {
         // Regression: the dispatcher used to flush stragglers only when
-        // `recv_timeout(linger)` fired, which a steady submit stream
-        // prevents forever. A half-full batch must now be emitted within
-        // ~2x its linger deadline while cross-shaped traffic keeps coming.
+        // its recv timeout fired, which a steady submit stream prevents
+        // forever. A half-full batch must now be emitted within ~2x its
+        // linger deadline while cross-shaped traffic keeps coming.
         let linger = Duration::from_millis(50);
-        let svc = GemmService::start(
-            Arc::new(SimExecutor::new()),
-            ServiceConfig {
-                workers: 2,
-                max_batch: 64, // the straggler can never fill a batch
-                linger,
-                force_method: Some(Method::Fp32Simt),
-                ..ServiceConfig::default()
-            },
-        );
+        let svc = GemmService::builder()
+            .workers(2)
+            .max_batch(64) // the straggler can never fill a batch
+            .linger(linger)
+            .force_method(Method::Fp32Simt)
+            .build(Arc::new(SimExecutor::new()));
         let stop = std::sync::atomic::AtomicBool::new(false);
         std::thread::scope(|s| {
             let svc_ref = &svc;
@@ -664,36 +905,35 @@ mod tests {
             // Cross-shaped 16x16 traffic arriving much faster than the
             // linger, for the whole duration of the test.
             let traffic = s.spawn(move || {
-                let mut rxs = Vec::new();
+                let mut tickets = Vec::new();
                 let mut i = 0u64;
                 while !stop_ref.load(Ordering::Relaxed) {
-                    let rx = svc_ref
-                        .submit(
-                            urand(16, 16, -1.0, 1.0, i),
-                            urand(16, 16, -1.0, 1.0, i + 1),
-                            Policy::StrictFp32,
-                        )
-                        .1;
-                    rxs.push(rx);
+                    let t = svc_ref
+                        .call(urand(16, 16, -1.0, 1.0, i), urand(16, 16, -1.0, 1.0, i + 1))
+                        .policy(Policy::StrictFp32)
+                        .submit()
+                        .expect("admitted");
+                    tickets.push(t);
                     i += 1;
                     std::thread::sleep(Duration::from_millis(2));
                 }
-                rxs
+                tickets
             });
             // Let the stream establish itself, then submit the straggler:
             // a unique 8x8 shape that joins an otherwise-empty group.
             std::thread::sleep(Duration::from_millis(20));
-            let (_, rx) = svc.submit(
-                urand(8, 8, -1.0, 1.0, 999),
-                urand(8, 8, -1.0, 1.0, 998),
-                Policy::StrictFp32,
-            );
-            let resp = rx.recv_timeout(linger * 2);
+            let t = svc
+                .call(urand(8, 8, -1.0, 1.0, 999), urand(8, 8, -1.0, 1.0, 998))
+                .policy(Policy::StrictFp32)
+                .submit()
+                .expect("admitted");
+            let resp = t.wait_timeout(linger * 2);
             stop.store(true, Ordering::Relaxed);
-            let rxs = traffic.join().unwrap();
+            let tickets = traffic.join().unwrap();
             assert!(resp.is_ok(), "straggler starved past 2x linger under sustained traffic");
-            for rx in rxs {
-                assert!(rx.recv_timeout(Duration::from_secs(30)).is_ok());
+            for t in tickets {
+                let r = t.wait_timeout(Duration::from_secs(30)).expect("answered in time");
+                assert!(r.is_ok(), "traffic request failed: {r:?}");
             }
         });
         svc.shutdown();
@@ -701,87 +941,78 @@ mod tests {
 
     #[test]
     fn batching_happens() {
-        let svc = GemmService::start(
-            Arc::new(SimExecutor::new()),
-            ServiceConfig {
-                workers: 1,
-                max_batch: 4,
-                linger: Duration::from_millis(50),
-                force_method: Some(Method::Fp32Simt),
-                ..ServiceConfig::default()
-            },
-        );
-        let rxs: Vec<_> = (0..8)
+        let svc = GemmService::builder()
+            .workers(1)
+            .max_batch(4)
+            .linger(Duration::from_millis(50))
+            .force_method(Method::Fp32Simt)
+            .build(Arc::new(SimExecutor::new()));
+        let tickets: Vec<_> = (0..8)
             .map(|i| {
-                svc.submit(
-                    urand(8, 8, -1.0, 1.0, i),
-                    urand(8, 8, -1.0, 1.0, i + 100),
-                    Policy::StrictFp32,
-                )
-                .1
+                svc.call(urand(8, 8, -1.0, 1.0, i), urand(8, 8, -1.0, 1.0, i + 100))
+                    .policy(Policy::StrictFp32)
+                    .submit()
+                    .expect("admitted")
             })
             .collect();
         let mut max_batch_seen = 0;
-        for rx in rxs {
-            let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        for t in tickets {
+            let resp = t.wait().expect("served");
             max_batch_seen = max_batch_seen.max(resp.batch_size);
         }
         assert!(max_batch_seen >= 2, "expected batching, saw max {max_batch_seen}");
         svc.shutdown();
     }
 
+    /// Executor that panics on its first batch, then behaves.
+    struct FlakyExecutor {
+        panicked: std::sync::atomic::AtomicBool,
+        inner: SimExecutor,
+    }
+    impl Executor for FlakyExecutor {
+        fn execute(&self, key: &BatchKey, reqs: &[GemmRequest]) -> Vec<Mat> {
+            if !self.panicked.swap(true, std::sync::atomic::Ordering::SeqCst) {
+                panic!("injected executor failure");
+            }
+            self.inner.execute(key, reqs)
+        }
+        fn name(&self) -> &'static str {
+            "flaky"
+        }
+    }
+    fn flaky() -> Arc<FlakyExecutor> {
+        Arc::new(FlakyExecutor {
+            panicked: std::sync::atomic::AtomicBool::new(false),
+            inner: SimExecutor::new(),
+        })
+    }
+
     #[test]
     fn worker_survives_panicking_executor() {
-        // Failure injection: an executor that panics on the first batch.
-        // The affected client gets a disconnect (not a hang) and the
-        // service keeps serving subsequent requests on the same worker.
-        struct FlakyExecutor {
-            panicked: std::sync::atomic::AtomicBool,
-            inner: SimExecutor,
-        }
-        impl Executor for FlakyExecutor {
-            fn execute(
-                &self,
-                key: &crate::coordinator::BatchKey,
-                reqs: &[crate::coordinator::GemmRequest],
-            ) -> Vec<Mat> {
-                if !self.panicked.swap(true, std::sync::atomic::Ordering::SeqCst) {
-                    panic!("injected executor failure");
-                }
-                self.inner.execute(key, reqs)
-            }
-            fn name(&self) -> &'static str {
-                "flaky"
-            }
-        }
-        let svc = GemmService::start(
-            Arc::new(FlakyExecutor {
-                panicked: std::sync::atomic::AtomicBool::new(false),
-                inner: SimExecutor::new(),
-            }),
-            ServiceConfig {
-                workers: 1,
-                max_batch: 1,
-                force_method: Some(Method::Fp32Simt),
-                ..ServiceConfig::default()
-            },
-        );
-        // First request: executor panics; client sees a closed channel.
-        let (_, rx1) =
-            svc.submit(urand(8, 8, -1.0, 1.0, 1), urand(8, 8, -1.0, 1.0, 2), Policy::StrictFp32);
-        assert!(
-            rx1.recv_timeout(Duration::from_secs(30)).is_err(),
-            "panicked batch must yield a disconnect, not a result"
-        );
+        // Failure injection: the executor panics on the first batch. The
+        // affected client gets a typed `ExecutorFailed` reply (not a hang,
+        // not a disconnect) and the service keeps serving subsequent
+        // requests on the same worker.
+        let svc = GemmService::builder()
+            .workers(1)
+            .max_batch(1)
+            .force_method(Method::Fp32Simt)
+            .build(flaky());
+        let t1 = svc
+            .call(urand(8, 8, -1.0, 1.0, 1), urand(8, 8, -1.0, 1.0, 2))
+            .policy(Policy::StrictFp32)
+            .submit()
+            .expect("admitted");
+        assert_eq!(t1.wait(), Err(ServiceError::ExecutorFailed { batch_size: 1 }));
         // Second request: the same (sole) worker must still be alive.
-        let resp = svc.gemm_blocking(
-            urand(8, 8, -1.0, 1.0, 3),
-            urand(8, 8, -1.0, 1.0, 4),
-            Policy::StrictFp32,
-        );
+        let resp = svc
+            .call(urand(8, 8, -1.0, 1.0, 3), urand(8, 8, -1.0, 1.0, 4))
+            .policy(Policy::StrictFp32)
+            .wait()
+            .expect("served after the panic");
         assert_eq!(resp.method, Method::Fp32Simt);
-        // The dropped batch must be accounted, not leaked: every submit
-        // reconciles as completed or failed.
+        // The failed batch must be accounted, not leaked: every admitted
+        // request reconciles as completed or failed.
         let snap = svc.metrics().snapshot();
         assert_eq!(snap.requests, 2);
         assert_eq!(snap.completed, 1);
@@ -791,21 +1022,92 @@ mod tests {
     }
 
     #[test]
-    fn shutdown_drains_stragglers() {
-        let svc = GemmService::start(
-            Arc::new(SimExecutor::new()),
-            ServiceConfig {
-                workers: 1,
-                max_batch: 100,
-                linger: Duration::from_secs(60), // never auto-flush
-                force_method: Some(Method::Fp32Simt),
-                ..ServiceConfig::default()
-            },
+    #[allow(deprecated)]
+    fn legacy_blocking_shim_returns_executor_failed() {
+        // Regression (ISSUE 4): `gemm_blocking` on a panicked-executor
+        // batch used to unwrap a dropped channel and panic the caller; it
+        // must return `ExecutorFailed` and keep the identity intact.
+        let svc = GemmService::builder()
+            .workers(1)
+            .max_batch(1)
+            .force_method(Method::Fp32Simt)
+            .build(flaky());
+        let r = svc.gemm_blocking(
+            urand(8, 8, -1.0, 1.0, 1),
+            urand(8, 8, -1.0, 1.0, 2),
+            Policy::StrictFp32,
         );
-        let rx = svc
-            .submit(urand(8, 8, -1.0, 1.0, 1), urand(8, 8, -1.0, 1.0, 2), Policy::StrictFp32)
-            .1;
+        assert_eq!(r, Err(ServiceError::ExecutorFailed { batch_size: 1 }));
+        // The legacy submit shim also carries typed replies now.
+        let (_, rx) = svc.submit(
+            urand(8, 8, -1.0, 1.0, 3),
+            urand(8, 8, -1.0, 1.0, 4),
+            Policy::StrictFp32,
+        );
+        let r = rx.recv().expect("one reply per admitted request");
+        assert!(r.is_ok(), "post-panic request must succeed: {r:?}");
+        let snap = svc.metrics().snapshot();
+        assert_eq!(snap.requests, snap.completed + snap.failed);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn close_stops_admission_but_drains_in_flight() {
+        let svc = GemmService::builder()
+            .workers(1)
+            .max_batch(100)
+            .linger(Duration::from_secs(60)) // never auto-flush
+            .force_method(Method::Fp32Simt)
+            .build(Arc::new(SimExecutor::new()));
+        let t = svc
+            .call(urand(8, 8, -1.0, 1.0, 1), urand(8, 8, -1.0, 1.0, 2))
+            .policy(Policy::StrictFp32)
+            .submit()
+            .expect("admitted");
+        svc.close();
+        let err = svc
+            .call(urand(8, 8, -1.0, 1.0, 3), urand(8, 8, -1.0, 1.0, 4))
+            .submit()
+            .expect_err("closed service must not admit");
+        assert_eq!(err, ServiceError::ShuttingDown);
+        svc.shutdown(); // joins; the admitted straggler must have drained
+        assert!(t.wait().is_ok());
+    }
+
+    #[test]
+    fn shutdown_drains_stragglers() {
+        let svc = GemmService::builder()
+            .workers(1)
+            .max_batch(100)
+            .linger(Duration::from_secs(60)) // never auto-flush
+            .force_method(Method::Fp32Simt)
+            .build(Arc::new(SimExecutor::new()));
+        let t = svc
+            .call(urand(8, 8, -1.0, 1.0, 1), urand(8, 8, -1.0, 1.0, 2))
+            .policy(Policy::StrictFp32)
+            .submit()
+            .expect("admitted");
         svc.shutdown(); // must flush the half-full batch
-        assert!(rx.recv_timeout(Duration::from_secs(5)).is_ok());
+        assert!(matches!(t.wait_timeout(Duration::from_secs(5)), Ok(Ok(_))));
+    }
+
+    #[test]
+    fn drop_without_shutdown_drains_and_joins() {
+        // ISSUE 4 satellite: a service dropped without `shutdown()` must
+        // join its dispatcher/workers (and therefore resolve in-flight
+        // work) instead of leaking threads.
+        let svc = GemmService::builder()
+            .workers(1)
+            .max_batch(100)
+            .linger(Duration::from_secs(60))
+            .force_method(Method::Fp32Simt)
+            .build(Arc::new(SimExecutor::new()));
+        let t = svc
+            .call(urand(8, 8, -1.0, 1.0, 1), urand(8, 8, -1.0, 1.0, 2))
+            .policy(Policy::StrictFp32)
+            .submit()
+            .expect("admitted");
+        drop(svc); // Drop path == shutdown path
+        assert!(matches!(t.try_get(), Ok(Ok(_))), "drop must have drained the straggler");
     }
 }

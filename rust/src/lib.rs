@@ -24,11 +24,20 @@
 //!   ([`autotune`]) → shard gate ([`shard`]) — cached, explainable
 //!   (`tcec plan`), with `coordinator::policy::route` kept as a compat
 //!   shim over it.
+//! * [`api`] — L3-front, the **one supported client surface** (DESIGN.md
+//!   §10): [`api::Client`]/[`api::Session`] over a running service, the
+//!   [`api::GemmCall`] builder (policy / deadline / priority / tag), the
+//!   [`api::Ticket`] handle (wait / wait_timeout / try_get / cancel), and
+//!   the structured [`api::ServiceError`] taxonomy — every reply is a
+//!   `Result<GemmOutcome, ServiceError>`. Services are configured through
+//!   [`api::ServiceBuilder`] (`GemmService::builder()`).
 //! * [`coordinator`], [`runtime`] — the serving layer: a GEMM service that
-//!   routes requests by precision policy (through the planner when
-//!   enabled), batches same-shape work with deadline-driven linger
-//!   flushing, caches operand splits ([`coordinator::SplitCache`]) and
-//!   executes AOT-compiled Pallas artifacts through PJRT.
+//!   admission-controls intake (bounded two-lane queue, load-shed,
+//!   deadline/cancellation enforcement), routes requests by precision
+//!   policy (through the planner when enabled), batches same-shape work
+//!   with deadline-driven linger flushing, caches operand splits
+//!   ([`coordinator::SplitCache`]) and executes AOT-compiled Pallas
+//!   artifacts through PJRT.
 //! * [`shard`] — the sharded execution engine between the router and the
 //!   executors: a partition planner (perfmodel/autotune-sized, error-bound
 //!   gated k-splits), a work-stealing worker pool, and a deterministic
@@ -39,6 +48,7 @@
 //!   bench binaries.
 
 pub mod analysis;
+pub mod api;
 pub mod autotune;
 pub mod bench_util;
 pub mod cli;

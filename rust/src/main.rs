@@ -2,9 +2,10 @@
 //! the paper's experiments, and smoke-test AOT artifacts.
 
 use std::sync::Arc;
+use std::time::Duration;
 use tcec::bench_util::Table;
 use tcec::cli::Args;
-use tcec::coordinator::{GemmService, Policy, RangeClass, ServiceConfig, SimExecutor, SplitCache};
+use tcec::coordinator::{GemmService, Policy, RangeClass, SimExecutor};
 use tcec::experiments;
 use tcec::gemm::{gemm_f64, relative_residual, Method, TileConfig};
 use tcec::matgen::Workload;
@@ -23,6 +24,7 @@ USAGE:
                  [--shard] [--shard-workers W] [--probe N] [--no-autotune]
   tcec serve     [--requests N] [--size N] [--workers W] [--batch B] [--artifacts DIR]
                  [--shard] [--shard-workers W] [--split-cache N] [--planner]
+                 [--queue-cap N] [--deadline-ms D] [--reject-stats]
   tcec experiment <fig1|fig4|fig5|fig8|fig9|fig11|fig13|fig14|fig15|fig16|table1_2|table3|table6>
   tcec artifacts [--dir DIR]
   tcec analyze   [--exponent E] [--k N]
@@ -264,52 +266,74 @@ fn cmd_plan(args: &Args) {
 fn cmd_serve(args: &Args) {
     let requests = args.usize_flag("requests", 32);
     let size = args.usize_flag("size", 64);
-    let cfg = ServiceConfig {
-        workers: args.usize_flag("workers", 2),
-        max_batch: args.usize_flag("batch", 4),
-        shard: if args.bool_flag("shard") {
-            Some(shard::ShardConfig {
-                workers: args.usize_flag("shard-workers", 4),
-                ..shard::ShardConfig::default()
-            })
-        } else {
-            None
-        },
-        // `--planner`: route through the unified planner (sampled+cached
-        // probes, autotuned tiles, shard gate in one ExecPlan) — §9.
-        planner: args.bool_flag("planner").then(PlannerConfig::default),
-        ..ServiceConfig::default()
-    };
-    let svc = if let Some(dir) = args.str_flag("artifacts") {
+    // `--deadline-ms D`: per-request deadline; expired requests are shed
+    // before execution and replied `DeadlineExceeded` (DESIGN.md §10).
+    let deadline = args
+        .str_flag("deadline-ms")
+        .and_then(|s| s.parse::<u64>().ok())
+        .map(Duration::from_millis);
+    let mut builder = GemmService::builder()
+        .workers(args.usize_flag("workers", 2))
+        .max_batch(args.usize_flag("batch", 4))
+        // `--queue-cap N`: admission-control bound; beyond it submissions
+        // are load-shed with `QueueFull` instead of buffered unboundedly.
+        .queue_cap(args.usize_flag("queue-cap", 1024));
+    if args.bool_flag("shard") {
+        builder = builder.shard(shard::ShardConfig {
+            workers: args.usize_flag("shard-workers", 4),
+            ..shard::ShardConfig::default()
+        });
+    }
+    // `--planner`: route through the unified planner (sampled+cached
+    // probes, autotuned tiles, shard gate in one ExecPlan) — §9.
+    if args.bool_flag("planner") {
+        builder = builder.planner(PlannerConfig::default());
+    }
+    let client = if let Some(dir) = args.str_flag("artifacts") {
         if args.usize_flag("split-cache", 0) > 0 {
             eprintln!("warning: --split-cache applies only to the simulator path; ignored");
         }
         let handle = PjrtHandle::spawn();
         let reg = ArtifactRegistry::scan(dir, handle).expect("scan artifacts");
         println!("artifacts: {:?}", reg.names());
-        GemmService::start(Arc::new(PjrtExecutor::new(reg)), cfg)
+        builder.client(Arc::new(PjrtExecutor::new(reg)))
     } else {
         // `--split-cache N` caches operand splits across requests (N
-        // entries, LRU) — see DESIGN.md §8.
-        let exec = match args.usize_flag("split-cache", 0) {
-            0 => SimExecutor::new(),
-            cap => SimExecutor::with_cache(Arc::new(SplitCache::new(cap))),
-        };
-        GemmService::start(Arc::new(exec), cfg)
+        // entries, LRU) — see DESIGN.md §8; the builder attaches it.
+        let cap = args.usize_flag("split-cache", 0);
+        if cap > 0 {
+            builder = builder.split_cache(cap);
+        }
+        builder.client(Arc::new(SimExecutor::new()))
     };
     let t0 = std::time::Instant::now();
-    let rxs: Vec<_> = (0..requests)
-        .map(|i| {
-            let a = Workload::Urand { lo: -1.0, hi: 1.0 }.generate(size, size, i as u64);
-            let b = Workload::Urand { lo: -1.0, hi: 1.0 }.generate(size, size, 1000 + i as u64);
-            svc.submit(a, b, Policy::Fp32Accuracy).1
-        })
-        .collect();
-    for rx in rxs {
-        rx.recv().expect("response");
+    let mut tickets = Vec::with_capacity(requests);
+    let mut shed = 0usize;
+    for i in 0..requests {
+        let a = Workload::Urand { lo: -1.0, hi: 1.0 }.generate(size, size, i as u64);
+        let b = Workload::Urand { lo: -1.0, hi: 1.0 }.generate(size, size, 1000 + i as u64);
+        let mut call = client.call(a, b).policy(Policy::Fp32Accuracy);
+        if let Some(d) = deadline {
+            call = call.deadline(d);
+        }
+        match call.submit() {
+            Ok(t) => tickets.push(t),
+            Err(e) => {
+                shed += 1;
+                eprintln!("request {i} not admitted: {e}");
+            }
+        }
+    }
+    let mut reply_errors = 0usize;
+    for t in tickets {
+        let id = t.id();
+        if let Err(e) = t.wait() {
+            reply_errors += 1;
+            eprintln!("request {id} failed: {e}");
+        }
     }
     let dt = t0.elapsed().as_secs_f64();
-    let snap = svc.metrics().snapshot();
+    let snap = client.metrics().snapshot();
     println!(
         "completed {} requests in {:.3}s ({:.1} req/s)",
         snap.completed,
@@ -348,10 +372,19 @@ fn cmd_serve(args: &Args) {
             snap.probe_cache_misses
         );
     }
+    // `--reject-stats` (or any admission event) surfaces the §10 counters.
+    let shed_total = snap.rejected + snap.expired + snap.cancelled;
+    if args.bool_flag("reject-stats") || shed_total > 0 || reply_errors > 0 {
+        println!(
+            "admission      : {} rejected (queue full), {} expired, {} cancelled, {} failed \
+             ({} shed at submit, {} error replies)",
+            snap.rejected, snap.expired, snap.cancelled, snap.failed, shed, reply_errors
+        );
+    }
     for (name, count) in snap.per_method {
         println!("  {name}: {count}");
     }
-    svc.shutdown();
+    client.shutdown();
 }
 
 fn cmd_experiment(args: &Args) {

@@ -356,6 +356,12 @@ impl Executor for PjrtExecutor {
     fn split_cache(&self) -> Option<std::sync::Arc<crate::coordinator::SplitCache>> {
         self.fallback.split_cache()
     }
+
+    fn attach_split_cache(&self, cache: std::sync::Arc<crate::coordinator::SplitCache>) -> bool {
+        // Splits only happen on the simulator fallback path; the cache
+        // helps exactly there.
+        self.fallback.attach_split_cache(cache)
+    }
 }
 
 #[cfg(test)]

@@ -370,6 +370,10 @@ impl Executor for ShardedExecutor {
     fn split_cache(&self) -> Option<Arc<crate::coordinator::SplitCache>> {
         self.inner.split_cache()
     }
+
+    fn attach_split_cache(&self, cache: Arc<crate::coordinator::SplitCache>) -> bool {
+        self.inner.attach_split_cache(cache)
+    }
 }
 
 #[cfg(test)]

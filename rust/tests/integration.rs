@@ -3,9 +3,12 @@
 //! coordinator), at sizes large enough to be meaningful.
 
 use std::sync::Arc;
-use tcec::coordinator::{GemmService, Policy, ServiceConfig, SimExecutor, SplitCache};
+use tcec::api::ServiceError;
+use tcec::coordinator::{
+    BatchKey, Executor, GemmRequest, GemmService, Policy, SimExecutor, SplitCache,
+};
 use tcec::experiments;
-use tcec::gemm::{gemm_f64, relative_residual, Method, TileConfig};
+use tcec::gemm::{gemm_f64, relative_residual, Mat, Method, TileConfig};
 use tcec::matgen::{urand, Workload};
 use tcec::shard;
 
@@ -101,10 +104,10 @@ fn four_term_ablation_across_workloads() {
 /// shapes, range classes) — no lost/duplicated/misrouted responses.
 #[test]
 fn service_mixed_load_audit() {
-    let svc = GemmService::start(
-        Arc::new(SimExecutor::new()),
-        ServiceConfig { workers: 2, max_batch: 3, ..ServiceConfig::default() },
-    );
+    let svc = GemmService::builder()
+        .workers(2)
+        .max_batch(3)
+        .build(Arc::new(SimExecutor::new()));
     let cfg = TileConfig::default();
     let mut pending = Vec::new();
     for i in 0..24u64 {
@@ -119,11 +122,15 @@ fn service_mixed_load_audit() {
         let size = if i % 2 == 0 { 24 } else { 32 };
         let a = wl.generate(size, size, i);
         let b = Workload::Urand { lo: -1.0, hi: 1.0 }.generate(size, size, 500 + i);
-        let (_, rx) = svc.submit(a.clone(), b.clone(), policy);
-        pending.push((a, b, expect, rx));
+        let t = svc
+            .call(a.clone(), b.clone())
+            .policy(policy)
+            .submit()
+            .expect("admitted");
+        pending.push((a, b, expect, t));
     }
-    for (a, b, expect, rx) in pending {
-        let resp = rx.recv_timeout(std::time::Duration::from_secs(60)).expect("answered");
+    for (a, b, expect, t) in pending {
+        let resp = t.wait().expect("answered");
         assert_eq!(resp.method, expect);
         // Response must equal running the routed method directly.
         let direct = expect.run(&a, &b, &cfg);
@@ -131,6 +138,91 @@ fn service_mixed_load_audit() {
     }
     let snap = svc.metrics().snapshot();
     assert_eq!(snap.completed, 24);
+    svc.shutdown();
+}
+
+/// Manually-opened gate + stalling executor (mirrors the standalone
+/// `StallExecutor` in `tests/api.rs` — integration tests cannot share
+/// test-binary modules without a common crate): the sole worker parks
+/// inside `execute` until the test opens the gate, making
+/// admission/cancel/expiry windows deterministic.
+struct GatedExecutor {
+    gate: Arc<(std::sync::Mutex<bool>, std::sync::Condvar)>,
+    inner: SimExecutor,
+}
+
+impl GatedExecutor {
+    fn new() -> (Arc<(std::sync::Mutex<bool>, std::sync::Condvar)>, Arc<GatedExecutor>) {
+        let gate = Arc::new((std::sync::Mutex::new(false), std::sync::Condvar::new()));
+        let exec = Arc::new(GatedExecutor { gate: Arc::clone(&gate), inner: SimExecutor::new() });
+        (gate, exec)
+    }
+
+    fn open(gate: &(std::sync::Mutex<bool>, std::sync::Condvar)) {
+        *gate.0.lock().unwrap() = true;
+        gate.1.notify_all();
+    }
+}
+
+impl Executor for GatedExecutor {
+    fn execute(&self, key: &BatchKey, reqs: &[GemmRequest]) -> Vec<Mat> {
+        let (m, cv) = &*self.gate;
+        let mut open = m.lock().unwrap();
+        while !*open {
+            open = cv.wait(open).unwrap();
+        }
+        drop(open);
+        self.inner.execute(key, reqs)
+    }
+
+    fn name(&self) -> &'static str {
+        "gated"
+    }
+}
+
+/// The new admission counters (`rejected` / `expired` / `cancelled`) in
+/// `Metrics::snapshot`, pinned exactly through the full service: one
+/// request completes, one is cancelled after dispatch, one expires while
+/// queued, one is load-shed at the cap — and every admitted request
+/// reconciles (`requests == completed + failed + expired + cancelled`).
+#[test]
+fn admission_control_counters_pinned_end_to_end() {
+    let (gate, exec) = GatedExecutor::new();
+    let svc = GemmService::builder()
+        .workers(1)
+        .max_batch(1)
+        .queue_cap(3)
+        .force_method(Method::Fp32Simt)
+        .build(exec);
+    let call = |s: u64| {
+        svc.call(urand(8, 8, -1.0, 1.0, s), urand(8, 8, -1.0, 1.0, s + 1))
+            .policy(Policy::StrictFp32)
+    };
+    // Slot 1 occupies the (gated) worker; slots 2 and 3 queue behind it.
+    let t1 = call(1).submit().expect("slot 1");
+    let t2 = call(3).submit().expect("slot 2");
+    let t3 = call(5)
+        .deadline(std::time::Duration::from_millis(50))
+        .submit()
+        .expect("slot 3");
+    // Cap reached: the fourth submission is load-shed synchronously.
+    let err = call(7).submit().expect_err("over queue_cap");
+    assert_eq!(err, ServiceError::QueueFull { queue_cap: 3 });
+    // Cancel t2 and let t3's deadline lapse while the worker is stalled.
+    t2.cancel();
+    std::thread::sleep(std::time::Duration::from_millis(150));
+    GatedExecutor::open(&gate);
+    assert!(t1.wait().is_ok());
+    assert_eq!(t2.wait(), Err(ServiceError::Cancelled));
+    assert!(matches!(t3.wait(), Err(ServiceError::DeadlineExceeded { .. })));
+    let snap = svc.metrics().snapshot();
+    assert_eq!(snap.requests, 3, "snapshot: {snap:?}");
+    assert_eq!(snap.completed, 1, "snapshot: {snap:?}");
+    assert_eq!(snap.cancelled, 1, "snapshot: {snap:?}");
+    assert_eq!(snap.expired, 1, "snapshot: {snap:?}");
+    assert_eq!(snap.rejected, 1, "snapshot: {snap:?}");
+    assert_eq!(snap.failed, 0, "snapshot: {snap:?}");
+    assert_eq!(snap.requests, snap.completed + snap.failed + snap.expired + snap.cancelled);
     svc.shutdown();
 }
 
@@ -146,21 +238,21 @@ fn service_sharded_path_metrics_and_correctness() {
         min_flops: 2 * 64 * 64 * 64,
         ..shard::ShardConfig::default()
     };
-    let svc = GemmService::start(
-        Arc::new(SimExecutor::new()),
-        ServiceConfig {
-            workers: 2,
-            max_batch: 1,
-            force_method: Some(Method::Fp32Simt),
-            shard: Some(shard_cfg.clone()),
-            ..ServiceConfig::default()
-        },
-    );
+    let svc = GemmService::builder()
+        .workers(2)
+        .max_batch(1)
+        .force_method(Method::Fp32Simt)
+        .shard(shard_cfg.clone())
+        .build(Arc::new(SimExecutor::new()));
 
     // Small GEMM: direct path — no shard counters.
     let a = urand(16, 16, -1.0, 1.0, 1);
     let b = urand(16, 16, -1.0, 1.0, 2);
-    let resp = svc.gemm_blocking(a, b, Policy::StrictFp32);
+    let resp = svc
+        .call(a, b)
+        .policy(Policy::StrictFp32)
+        .wait()
+        .expect("served");
     assert_eq!(resp.method, Method::Fp32Simt);
     assert_eq!(svc.metrics().snapshot().sharded_gemms, 0);
 
@@ -169,7 +261,11 @@ fn service_sharded_path_metrics_and_correctness() {
     let b = urand(128, 160, -1.0, 1.0, 4);
     let plan = shard::plan(192, 160, 128, Method::Fp32Simt, &shard_cfg).expect("should shard");
     let want = Method::Fp32Simt.run(&a, &b, &plan.equivalent_tile());
-    let resp = svc.gemm_blocking(a, b, Policy::StrictFp32);
+    let resp = svc
+        .call(a, b)
+        .policy(Policy::StrictFp32)
+        .wait()
+        .expect("served");
     assert_eq!(resp.c.data, want.data, "sharded service result differs from direct run");
 
     let snap = svc.metrics().snapshot();
@@ -188,23 +284,23 @@ fn service_sharded_path_metrics_and_correctness() {
 #[test]
 fn split_cache_amortizes_repeated_weights() {
     let cache = Arc::new(SplitCache::new(16));
-    let svc = GemmService::start(
-        Arc::new(SimExecutor::with_cache(Arc::clone(&cache))),
-        ServiceConfig {
-            workers: 1,
-            max_batch: 2,
-            force_method: Some(Method::OursHalfHalf),
-            ..ServiceConfig::default()
-        },
-    );
+    let svc = GemmService::builder()
+        .workers(1)
+        .max_batch(2)
+        .force_method(Method::OursHalfHalf)
+        .build(Arc::new(SimExecutor::with_cache(Arc::clone(&cache))));
     let cfg = TileConfig::default();
     let w = urand(32, 32, -1.0, 1.0, 42); // the weight everyone multiplies by
     let n_req = 6u64;
     for i in 0..n_req {
         let a = urand(32, 32, -1.0, 1.0, 100 + i);
-        // gemm_blocking serializes the requests, so every batch has size 1
-        // and the counters below are deterministic.
-        let resp = svc.gemm_blocking(a.clone(), w.clone(), Policy::Fp32Accuracy);
+        // The blocking wait serializes the requests, so every batch has
+        // size 1 and the counters below are deterministic.
+        let resp = svc
+            .call(a.clone(), w.clone())
+            .policy(Policy::Fp32Accuracy)
+            .wait()
+            .unwrap();
         assert_eq!(resp.method, Method::OursHalfHalf);
         let direct = Method::OursHalfHalf.run(&a, &w, &cfg);
         assert_eq!(resp.c.data, direct.data, "request {i}: cached split changed bits");
@@ -225,20 +321,16 @@ fn split_cache_amortizes_repeated_weights() {
 /// repeated weight is probed once and every later arrival is a probe-cache
 /// hit; the (shape, class, policy) plan is built once and every later
 /// request is a plan-cache hit. Counters are pinned exactly
-/// (`gemm_blocking` serializes the stream, so they are deterministic), and
+/// (the blocking wait serializes the stream, so they are deterministic), and
 /// results stay bit-identical to a direct run under the planned tile.
 #[test]
 fn planner_serving_pins_probe_and_plan_cache_counters() {
     use tcec::planner::{Planner, PlannerConfig};
-    let svc = GemmService::start(
-        Arc::new(SimExecutor::new()),
-        ServiceConfig {
-            workers: 1,
-            max_batch: 2,
-            planner: Some(PlannerConfig::default()),
-            ..ServiceConfig::default()
-        },
-    );
+    let svc = GemmService::builder()
+        .workers(1)
+        .max_batch(2)
+        .planner(PlannerConfig::default())
+        .build(Arc::new(SimExecutor::new()));
     let w = urand(32, 32, -1.0, 1.0, 42); // the weight everyone multiplies by
     // Planning is deterministic: a fresh planner with the same config
     // reproduces the service's tile choice for the bit-identity check.
@@ -246,7 +338,11 @@ fn planner_serving_pins_probe_and_plan_cache_counters() {
     let n_req = 6u64;
     for i in 0..n_req {
         let a = urand(32, 32, -1.0, 1.0, 100 + i);
-        let resp = svc.gemm_blocking(a.clone(), w.clone(), Policy::Fp32Accuracy);
+        let resp = svc
+            .call(a.clone(), w.clone())
+            .policy(Policy::Fp32Accuracy)
+            .wait()
+            .unwrap();
         assert_eq!(resp.method, Method::OursHalfHalf);
         let plan = ref_planner.plan_for_method(Method::OursHalfHalf, 32, 32, 32);
         let direct = Method::OursHalfHalf.run(&a, &w, &plan.equivalent_tile());
@@ -276,16 +372,12 @@ fn planner_sharded_serving_end_to_end() {
         min_flops: 2 * 64 * 64 * 64,
         ..shard::ShardConfig::default()
     };
-    let svc = GemmService::start(
-        Arc::new(SimExecutor::new()),
-        ServiceConfig {
-            workers: 1,
-            max_batch: 1,
-            shard: Some(shard_cfg.clone()),
-            planner: Some(PlannerConfig::default()),
-            ..ServiceConfig::default()
-        },
-    );
+    let svc = GemmService::builder()
+        .workers(1)
+        .max_batch(1)
+        .shard(shard_cfg.clone())
+        .planner(PlannerConfig::default())
+        .build(Arc::new(SimExecutor::new()));
     // What the service's planner will decide for this request.
     let ref_planner = Planner::new(PlannerConfig {
         shard: Some(shard_cfg),
@@ -293,7 +385,11 @@ fn planner_sharded_serving_end_to_end() {
     });
     let a = urand(192, 128, -1.0, 1.0, 3);
     let b = urand(128, 160, -1.0, 1.0, 4);
-    let resp = svc.gemm_blocking(a.clone(), b.clone(), Policy::Fp32Accuracy);
+    let resp = svc
+        .call(a.clone(), b.clone())
+        .policy(Policy::Fp32Accuracy)
+        .wait()
+        .unwrap();
     assert_eq!(resp.method, Method::OursHalfHalf);
     let plan = ref_planner.plan_routed(
         192,

@@ -4,7 +4,7 @@
 
 use std::path::Path;
 use std::sync::Arc;
-use tcec::coordinator::{GemmService, Policy, ServiceConfig};
+use tcec::coordinator::{GemmService, Policy};
 use tcec::gemm::{gemm_f64, relative_residual, Method, TileConfig};
 use tcec::matgen::{exp_rand, urand};
 use tcec::runtime::{artifact_file, ArtifactRegistry, PjrtExecutor, PjrtHandle};
@@ -129,16 +129,20 @@ fn pjrt_executor_serves_and_falls_back() {
     };
     let handle = PjrtHandle::spawn();
     let reg = ArtifactRegistry::scan(dir, handle.clone()).unwrap();
-    let svc = GemmService::start(
-        Arc::new(PjrtExecutor::new(reg)),
-        ServiceConfig { workers: 1, max_batch: 2, ..ServiceConfig::default() },
-    );
+    let svc = GemmService::builder()
+        .workers(1)
+        .max_batch(2)
+        .build(Arc::new(PjrtExecutor::new(reg)));
 
     // Artifact shape (64x64x64) — served by PJRT.
     let a = urand(64, 64, -1.0, 1.0, 1);
     let b = urand(64, 64, -1.0, 1.0, 2);
     let oracle = gemm_f64(&a, &b);
-    let resp = svc.gemm_blocking(a, b, Policy::Fp32Accuracy);
+    let resp = svc
+        .call(a, b)
+        .policy(Policy::Fp32Accuracy)
+        .wait()
+        .expect("served");
     assert_eq!(resp.method, Method::OursHalfHalf);
     assert!(relative_residual(&oracle, &resp.c) < 1e-6);
 
@@ -146,14 +150,22 @@ fn pjrt_executor_serves_and_falls_back() {
     let a = urand(40, 40, -1.0, 1.0, 3);
     let b = urand(40, 40, -1.0, 1.0, 4);
     let oracle = gemm_f64(&a, &b);
-    let resp = svc.gemm_blocking(a, b, Policy::Fp32Accuracy);
+    let resp = svc
+        .call(a, b)
+        .policy(Policy::Fp32Accuracy)
+        .wait()
+        .expect("served");
     assert!(relative_residual(&oracle, &resp.c) < 1e-6);
 
     // Type-4 inputs at an artifact shape — routed to the tf32 artifact.
     let a = exp_rand(64, 64, -100, -36, 5);
     let b = urand(64, 64, -1.0, 1.0, 6);
     let oracle = gemm_f64(&a, &b);
-    let resp = svc.gemm_blocking(a.clone(), b.clone(), Policy::Fp32Accuracy);
+    let resp = svc
+        .call(a.clone(), b.clone())
+        .policy(Policy::Fp32Accuracy)
+        .wait()
+        .expect("served");
     assert_eq!(resp.method, Method::OursTf32);
     let e = relative_residual(&oracle, &resp.c);
     let e_simt = relative_residual(&oracle, &Method::Fp32Simt.run(&a, &b, &TileConfig::default()));
