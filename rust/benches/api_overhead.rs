@@ -1,17 +1,19 @@
 //! §Perf client-API overhead bench: what the versioned surface
-//! (`call → submit → Ticket → wait`, DESIGN.md §10) costs over the legacy
-//! raw-channel path (`submit → Receiver`), at n = 64 and 256, with and
-//! without background contention. The API adds admission control (one
-//! mutex+condvar hop), a CancelToken allocation, and per-request call
-//! metadata — this table keeps that overhead honest (it should stay well
-//! under the GEMM itself at every size).
+//! (`call → submit → Ticket → wait`, DESIGN.md §10) costs over invoking
+//! the executor directly in-process (no intake, no batcher, no worker
+//! hop), at n = 64 and 256, with and without background contention. The
+//! service adds admission control (one mutex+condvar hop), dispatch,
+//! batching and a reply channel per request — this table keeps that
+//! overhead honest (it should stay well under the GEMM itself at every
+//! size).
 //!
-//! Run: `cargo bench --bench api_overhead`
+//! Run: `cargo bench --bench api_overhead` (`-- --smoke` for the CI smoke
+//! lane).
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
-use tcec::bench_util::{bench, Table};
-use tcec::coordinator::{GemmService, Policy, SimExecutor};
+use tcec::bench_util::{bench, bench_params, smoke, Table};
+use tcec::coordinator::{BatchKey, Executor, GemmRequest, GemmService, Policy, SimExecutor};
 use tcec::gemm::Method;
 use tcec::matgen::urand;
 
@@ -44,32 +46,31 @@ fn round_api(svc: &GemmService, n: usize, seed: u64) {
     }
 }
 
-/// One measured round on the deprecated raw-channel shim.
-#[allow(deprecated)]
-fn round_legacy(svc: &GemmService, n: usize, seed: u64) {
-    let rxs: Vec<_> = (0..REQS as u64)
-        .map(|i| {
-            svc.submit(
-                urand(n, n, -1.0, 1.0, seed + i),
-                urand(n, n, -1.0, 1.0, seed + i + 500),
-                Policy::StrictFp32,
-            )
-            .1
-        })
-        .collect();
-    for rx in rxs {
-        rx.recv().expect("reply").expect("served");
+/// The floor: the same REQS GEMMs executed directly on the executor, no
+/// service in between.
+fn round_direct(exec: &SimExecutor, n: usize, seed: u64) {
+    let key = BatchKey { m: n, n, k: n, method: Method::Fp32Simt };
+    for i in 0..REQS as u64 {
+        let reqs = [GemmRequest {
+            id: i,
+            a: urand(n, n, -1.0, 1.0, seed + i),
+            b: urand(n, n, -1.0, 1.0, seed + i + 500),
+            policy: Policy::StrictFp32,
+        }];
+        std::hint::black_box(exec.execute(&key, &reqs));
     }
 }
 
-fn measure(contended: bool) -> Vec<[String; 4]> {
+fn measure(contended: bool, sizes: &[usize]) -> Vec<[String; 4]> {
+    let (wu, mi, mt) = bench_params(1, 3, 0.3);
     let mut rows = Vec::new();
-    for n in [64usize, 256] {
+    for &n in sizes {
+        let exec = SimExecutor::new();
         let svc = service();
         // Contended mode: a background thread keeps a steady stream of
         // same-shape traffic flowing while the measured rounds run, so
         // the intake lock and the batcher see realistic interleaving.
-        let (s_api, s_legacy) = if contended {
+        let (s_api, s_direct) = if contended {
             let stop = AtomicBool::new(false);
             std::thread::scope(|scope| {
                 let svc_ref = &svc;
@@ -84,36 +85,37 @@ fn measure(contended: bool) -> Vec<[String; 4]> {
                         i += 1;
                     }
                 });
-                let a = bench(|| round_api(&svc, n, 1), 1, 3, 0.3);
-                let l = bench(|| round_legacy(&svc, n, 2), 1, 3, 0.3);
+                let a = bench(|| round_api(&svc, n, 1), wu, mi, mt);
+                let d = bench(|| round_direct(&exec, n, 2), wu, mi, mt);
                 stop.store(true, Ordering::Relaxed);
-                (a, l)
+                (a, d)
             })
         } else {
-            let a = bench(|| round_api(&svc, n, 1), 1, 3, 0.3);
-            let l = bench(|| round_legacy(&svc, n, 2), 1, 3, 0.3);
-            (a, l)
+            let a = bench(|| round_api(&svc, n, 1), wu, mi, mt);
+            let d = bench(|| round_direct(&exec, n, 2), wu, mi, mt);
+            (a, d)
         };
         svc.shutdown();
         let per_req_api = s_api.median_s / REQS as f64 * 1e6;
-        let per_req_legacy = s_legacy.median_s / REQS as f64 * 1e6;
+        let per_req_direct = s_direct.median_s / REQS as f64 * 1e6;
         rows.push([
             n.to_string(),
-            format!("{per_req_legacy:.1}"),
+            format!("{per_req_direct:.1}"),
             format!("{per_req_api:.1}"),
-            format!("{:+.1}%", (per_req_api / per_req_legacy - 1.0) * 100.0),
+            format!("{:+.1}%", (per_req_api / per_req_direct - 1.0) * 100.0),
         ]);
     }
     rows
 }
 
 fn main() {
-    println!("== client-API overhead: ticket path vs legacy channel path ==");
+    let sizes: &[usize] = if smoke() { &[16] } else { &[64, 256] };
+    println!("== client-API overhead: ticket path vs direct executor call ==");
     println!("   ({REQS} requests per round, Fp32Simt forced, 2 workers)\n");
     for contended in [false, true] {
         println!("-- {} --\n", if contended { "with background contention" } else { "idle" });
-        let mut t = Table::new(&["n", "legacy us/req", "ticket us/req", "delta"]);
-        for row in measure(contended) {
+        let mut t = Table::new(&["n", "direct us/req", "ticket us/req", "delta"]);
+        for row in measure(contended, sizes) {
             t.row(&row);
         }
         t.print();

@@ -7,11 +7,13 @@
 //!
 //! Run: `cargo bench --bench fig11_exponent_range`
 
+use tcec::bench_util::smoke;
 use tcec::experiments;
 
 fn main() {
-    println!("== Figure 11: exponent-range Types 1-4 (exp_rand combos), n=128 ==\n");
-    experiments::fig11(128, 8).print();
+    let (n, seeds) = if smoke() { (32, 1) } else { (128, 8) };
+    println!("== Figure 11: exponent-range Types 1-4 (exp_rand combos), n={n} ==\n");
+    experiments::fig11(n, seeds).print();
     println!("\nType1: both exp_rand(-15,14)   Type2: exp_rand(-15,14) x exp_rand(-100,-35)");
     println!("Type3: both exp_rand(-35,-15)  Type4: both exp_rand(-100,-35)");
 }

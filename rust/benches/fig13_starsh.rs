@@ -6,10 +6,12 @@
 //!
 //! Run: `cargo bench --bench fig13_starsh`
 
+use tcec::bench_util::smoke;
 use tcec::experiments;
 
 fn main() {
-    println!("== Figure 13: STARS-H matrix patterns, n=128 ==\n");
-    experiments::fig13(128, 8).print();
+    let (n, seeds) = if smoke() { (32, 1) } else { (128, 8) };
+    println!("== Figure 13: STARS-H matrix patterns, n={n} ==\n");
+    experiments::fig13(n, seeds).print();
     println!("\nExpected: all three columns at the same error level per row.");
 }

@@ -35,7 +35,11 @@ fn main() {
     }
     t.print();
 
-    let sizes = [256, 512, 1024, 2048, 4096, 8192, 16384];
+    let sizes: Vec<usize> = if tcec::bench_util::smoke() {
+        vec![256, 4096]
+    } else {
+        vec![256, 512, 1024, 2048, 4096, 8192, 16384]
+    };
     for gpu in &ALL_GPUS {
         println!("\n== Figure 14 ({}): projected TFlop/s (model, DESIGN.md §2) ==\n", gpu.name);
         experiments::fig14(gpu, &sizes).print();

@@ -18,8 +18,11 @@ fn main() {
         "\n-- roofline curve (ceiling = fp16-TC peak / 3 = {:.1} TFlop/s) --",
         A100.fp16_tc_tflops / 3.0
     );
+    // Pure-model bench: --smoke only shortens the printed curve.
+    let smoke = tcec::bench_util::smoke();
+    let ai_max = if smoke { 4.0 } else { 512.0 };
     let mut ai = 0.5f64;
-    while ai <= 512.0 {
+    while ai <= ai_max {
         let r = roof(&A100, ai, A100.fp16_tc_tflops / 3.0);
         let roofed =
             if r >= A100.fp16_tc_tflops / 3.0 - 1e-9 { "(compute roof)" } else { "(memory roof)" };

@@ -13,7 +13,11 @@ use tcec::gemm::Method;
 use tcec::perfmodel::{peak_gflops_per_watt, ALL_GPUS};
 
 fn main() {
-    let sizes = [512, 1024, 2048, 4096, 8192, 16384];
+    let sizes: Vec<usize> = if tcec::bench_util::smoke() {
+        vec![512, 4096]
+    } else {
+        vec![512, 1024, 2048, 4096, 8192, 16384]
+    };
     for gpu in &ALL_GPUS {
         println!("== Figure 16 ({}): energy per GEMM / efficiency (model) ==\n", gpu.name);
         experiments::fig16(gpu, &sizes).print();

@@ -12,8 +12,12 @@ use tcec::experiments;
 fn main() {
     println!("== Figure 1: relative residual (eq. 7) vs k, urand(-1,1), 16xk * kx16 ==");
     println!("(bit-exact simulation; 8 seeds averaged — paper protocol)\n");
-    let ks: Vec<usize> = (4..=13).map(|p| 1usize << p).collect();
-    let t = experiments::fig1(&ks, 8);
+    let (ks, seeds): (Vec<usize>, u64) = if tcec::bench_util::smoke() {
+        (vec![16, 64], 1)
+    } else {
+        ((4..=13).map(|p| 1usize << p).collect(), 8)
+    };
+    let t = experiments::fig1(&ks, seeds);
     t.print();
     println!("\nExpected shape: halfhalf tracks cublas_simt; markidis/feng sit between");
     println!("simt and fp16tc and converge toward fp16tc as k grows.");

@@ -14,8 +14,13 @@ use tcec::gemm::{Method, TileConfig};
 use tcec::perfmodel::{projected_tflops, A100};
 
 fn main() {
+    let smoke = tcec::bench_util::smoke();
     println!("== Figure 2: A100 projected TFlop/s vs matrix size ==\n");
-    let sizes = [256, 512, 1024, 2048, 4096, 8192, 16384];
+    let sizes: Vec<usize> = if smoke {
+        vec![256, 1024]
+    } else {
+        vec![256, 512, 1024, 2048, 4096, 8192, 16384]
+    };
     let mut t = Table::new(&[
         "n",
         "cutlass_halfhalf",
@@ -43,8 +48,9 @@ fn main() {
     println!("\n-- measured CPU wall-clock of the bit-exact simulator (not a GPU number) --");
     let cfg = TileConfig::default();
     let mut t2 = Table::new(&["method", "n", "sim GFlop/s (CPU)"]);
+    let measured: &[usize] = if smoke { &[32] } else { &[128, 256] };
     for m in [Method::OursHalfHalf, Method::Fp32Simt] {
-        for n in [128usize, 256] {
+        for &n in measured {
             let g = experiments::measured_sim_gflops(m, n, &cfg);
             t2.row(&[m.name().to_string(), n.to_string(), format!("{g:.3}")]);
         }

@@ -11,8 +11,12 @@ use tcec::experiments;
 
 fn main() {
     println!("== Figure 4: markidis vs FP32 vs LSB-truncated FP32, urand(-1,1) ==\n");
-    let ks: Vec<usize> = (4..=13).map(|p| 1usize << p).collect();
-    experiments::fig4(&ks, 8).print();
+    let (ks, seeds): (Vec<usize>, u64) = if tcec::bench_util::smoke() {
+        (vec![16, 64], 1)
+    } else {
+        ((4..=13).map(|p| 1usize << p).collect(), 8)
+    };
+    experiments::fig4(&ks, seeds).print();
     println!("\nExpected: fp32_trunc_lsb ≈ cublas_simt at all k (mantissa loss harmless);");
     println!("markidis above both and growing with k (RZ accumulation dominates).");
 }

@@ -12,7 +12,11 @@ use tcec::experiments;
 
 fn main() {
     println!("== Figure 5: Markidis correction under mma_rn vs mma_rz ==\n");
-    let ks: Vec<usize> = (4..=13).map(|p| 1usize << p).collect();
-    experiments::fig5(&ks, 8).print();
+    let (ks, seeds): (Vec<usize>, u64) = if tcec::bench_util::smoke() {
+        (vec![16, 64], 1)
+    } else {
+        ((4..=13).map(|p| 1usize << p).collect(), 8)
+    };
+    experiments::fig5(&ks, seeds).print();
     println!("\nExpected: mma_rn column == cublas_simt column; mma_rz column above both.");
 }

@@ -12,11 +12,18 @@ use tcec::experiments;
 
 fn main() {
     println!("== Figure 9: mean relative representation error vs exponent ==\n");
-    let exps: Vec<i32> = vec![
-        -140, -126, -120, -100, -80, -60, -45, -40, -35, -30, -25, -20, -15, -10, -5, -2, 0,
-        5, 10, 14, 15, 16, 20, 40, 80, 120, 127,
-    ];
-    experiments::fig9(&exps, 20_000).print();
+    let (exps, samples): (Vec<i32>, usize) = if tcec::bench_util::smoke() {
+        (vec![-15, 0, 14], 2_000)
+    } else {
+        (
+            vec![
+                -140, -126, -120, -100, -80, -60, -45, -40, -35, -30, -25, -20, -15, -10, -5,
+                -2, 0, 5, 10, 14, 15, 16, 20, 40, 80, 120, 127,
+            ],
+            20_000,
+        )
+    };
+    experiments::fig9(&exps, samples).print();
     println!(
         "\n(1.0 ≈ the scheme cannot represent the range at all; FP16 > ~2^15 overflows to inf)"
     );

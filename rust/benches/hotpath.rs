@@ -7,7 +7,7 @@
 //! Run: `cargo bench --bench hotpath`
 
 use std::sync::Arc;
-use tcec::bench_util::{bench, Table};
+use tcec::bench_util::{bench, bench_params, smoke, Table};
 use tcec::coordinator::{GemmService, Policy, SimExecutor};
 use tcec::gemm::{gemm_batched, BatchedOperands, Mat, Method, TileConfig};
 use tcec::matgen::urand;
@@ -15,6 +15,9 @@ use tcec::runtime::{ArtifactRegistry, PjrtHandle};
 
 fn main() {
     let cfg = TileConfig::default();
+    let smoke = smoke();
+    let (wu, mi, mt) = bench_params(1, 3, 0.3);
+    let backend_sizes: &[usize] = if smoke { &[16] } else { &[64, 128] };
 
     println!("== simulated GEMM backends (CPU wall-clock) ==\n");
     let mut t = Table::new(&["method", "n", "median ms", "sim MFlop/s"]);
@@ -25,16 +28,16 @@ fn main() {
         Method::OursHalfHalf,
         Method::OursTf32,
     ] {
-        for n in [64usize, 128] {
+        for &n in backend_sizes {
             let a = urand(n, n, -1.0, 1.0, 1);
             let b = urand(n, n, -1.0, 1.0, 2);
             let s = bench(
                 || {
                     std::hint::black_box(method.run(&a, &b, &cfg));
                 },
-                1,
-                3,
-                0.3,
+                wu,
+                mi,
+                mt,
             );
             let mflops = 2.0 * (n as f64).powi(3) / s.median_s / 1e6;
             t.row(&[
@@ -49,9 +52,10 @@ fn main() {
 
     println!("\n== split-amortized batched GEMM (shared weight B, same shape) ==\n");
     let mut t = Table::new(&["method", "batch", "n", "loop ms", "batched ms", "speedup"]);
+    let batches: &[usize] = if smoke { &[2] } else { &[4, 8] };
     for method in [Method::OursHalfHalf, Method::OursTf32, Method::Markidis] {
-        for batch in [4usize, 8] {
-            let n = 64;
+        for &batch in batches {
+            let n = if smoke { 16 } else { 64 };
             let w = urand(n, n, -1.0, 1.0, 7);
             let pairs: Vec<(Mat, Mat)> =
                 (0..batch).map(|i| (urand(n, n, -1.0, 1.0, 10 + i as u64), w.clone())).collect();
@@ -63,9 +67,9 @@ fn main() {
                         std::hint::black_box(method.run(a, b, &cfg));
                     }
                 },
-                1,
-                3,
-                0.3,
+                wu,
+                mi,
+                mt,
             );
             // Batched path: each distinct operand (the shared weight in
             // particular) is split once for the whole batch.
@@ -73,9 +77,9 @@ fn main() {
                 || {
                     std::hint::black_box(gemm_batched(&ops, method, &cfg));
                 },
-                1,
-                3,
-                0.3,
+                wu,
+                mi,
+                mt,
             );
             t.row(&[
                 method.name().to_string(),
@@ -124,16 +128,19 @@ fn main() {
     }
     handle.shutdown();
 
-    println!("\n== coordinator request loop (sim executor, 64x64, batched) ==\n");
+    let loop_n = if smoke { 16 } else { 64 };
+    println!("\n== coordinator request loop (sim executor, {loop_n}x{loop_n}, batched) ==\n");
     let svc = GemmService::builder()
         .workers(2)
         .max_batch(8)
         .build(Arc::new(SimExecutor::new()));
-    let n_req = 64;
+    let n_req: u64 = if smoke { 8 } else { 64 };
     let t0 = std::time::Instant::now();
     let tickets: Vec<_> = (0..n_req)
         .map(|i| {
-            svc.call(urand(64, 64, -1.0, 1.0, i), urand(64, 64, -1.0, 1.0, i + 999))
+            let a = urand(loop_n, loop_n, -1.0, 1.0, i);
+            let b = urand(loop_n, loop_n, -1.0, 1.0, i + 999);
+            svc.call(a, b)
                 .policy(Policy::Fp32Accuracy)
                 .submit()
                 .expect("admitted")

@@ -17,7 +17,7 @@
 //!
 //! Run: `cargo bench --bench planner_overhead`
 
-use tcec::bench_util::{bench, Table};
+use tcec::bench_util::{bench, bench_params, smoke, Table};
 use tcec::coordinator::{route, Policy};
 use tcec::matgen::urand;
 use tcec::planner::{Planner, PlannerConfig};
@@ -26,9 +26,11 @@ const STREAM: usize = 64;
 
 fn main() {
     let policy = Policy::Fp32Accuracy;
+    let (wu, mi, mt) = bench_params(1, 3, 0.2);
+    let sizes: &[usize] = if smoke() { &[64] } else { &[64, 256, 512] };
     println!("== per-request dispatch decision cost (route vs planner) ==\n");
     let mut t = Table::new(&["stream", "n", "route us/req", "planner us/req", "speedup"]);
-    for &n in &[64usize, 256, 512] {
+    for &n in sizes {
         let w = urand(n, n, -1.0, 1.0, 7);
         let acts: Vec<_> = (0..STREAM).map(|i| urand(n, n, -1.0, 1.0, 100 + i as u64)).collect();
         let pairs: Vec<_> = (0..STREAM)
@@ -45,9 +47,9 @@ fn main() {
                     std::hint::black_box(route(policy, a, &w));
                 }
             },
-            1,
-            3,
-            0.2,
+            wu,
+            mi,
+            mt,
         );
         let planner = Planner::new(PlannerConfig::default());
         let s_plan = bench(
@@ -56,9 +58,9 @@ fn main() {
                     std::hint::black_box(planner.plan_request(a, &w, policy));
                 }
             },
-            1,
-            3,
-            0.2,
+            wu,
+            mi,
+            mt,
         );
         t.row(&[
             "repeated-weight".to_string(),
@@ -76,9 +78,9 @@ fn main() {
                     std::hint::black_box(route(policy, a, b));
                 }
             },
-            1,
-            3,
-            0.2,
+            wu,
+            mi,
+            mt,
         );
         let planner =
             Planner::new(PlannerConfig { probe_cache_entries: 1, ..PlannerConfig::default() });
@@ -88,9 +90,9 @@ fn main() {
                     std::hint::black_box(planner.plan_request(a, b, policy));
                 }
             },
-            1,
-            3,
-            0.2,
+            wu,
+            mi,
+            mt,
         );
         t.row(&[
             "all-distinct".to_string(),

@@ -17,16 +17,18 @@ use tcec::matgen::urand;
 use tcec::shard::{plan, sharded_gemm, ShardConfig, WorkerPool};
 
 fn main() {
+    let smoke = tcec::bench_util::smoke();
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     println!("== shard_scaling: sharded GEMM throughput vs worker count ==");
     println!("   ({cores} host cores — speedup saturates there)\n");
 
     // Ragged sizes: edge tiles create imbalance for the stealer to fix.
-    let cases = [
-        (Method::Fp32Simt, 560, 560, 256),
-        (Method::OursHalfHalf, 272, 272, 192),
-    ];
-    let worker_counts = [1usize, 2, 4, 8];
+    let cases = if smoke {
+        [(Method::Fp32Simt, 136, 136, 48), (Method::OursHalfHalf, 80, 80, 32)]
+    } else {
+        [(Method::Fp32Simt, 560, 560, 256), (Method::OursHalfHalf, 272, 272, 192)]
+    };
+    let worker_counts: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4, 8] };
 
     for (method, m, n, k) in cases {
         let a = urand(m, k, -1.0, 1.0, 11);
@@ -54,7 +56,7 @@ fn main() {
         ]);
         let mut prev_time = f64::INFINITY;
         let mut monotone = true;
-        for &w in &worker_counts {
+        for &w in worker_counts {
             let cfg = ShardConfig { workers: w, min_flops: 0, ..ShardConfig::default() };
             let p = plan(m, n, k, method, &cfg).expect("plan");
             let inner: Arc<dyn Executor> = Arc::new(SimExecutor::new());

@@ -11,8 +11,10 @@ use tcec::analysis::trunc_lsb_expected_len;
 use tcec::experiments;
 
 fn main() {
-    println!("== Tables 1-2: kept-mantissa-length distribution (1e6 samples) ==\n");
-    experiments::table1_2(1_000_000).print();
+    let smoke = tcec::bench_util::smoke();
+    let samples = if smoke { 20_000 } else { 1_000_000 };
+    println!("== Tables 1-2: kept-mantissa-length distribution ({samples} samples) ==\n");
+    experiments::table1_2(samples).print();
     println!("\n-- LSB-truncation control (Fig. 4) closed form --");
     for n in 0..4 {
         println!("truncate last {n} bit(s): E[len] = {}", trunc_lsb_expected_len(n));

@@ -15,12 +15,13 @@ use tcec::gemm::{Method, OursBackend};
 use tcec::perfmodel::A100;
 
 fn main() {
-    println!("== Table 3: filter census (A100; accuracy probe 16x16x16) ==\n");
-    experiments::table3(&A100, 16).print();
+    let probe = if tcec::bench_util::smoke() { 2 } else { 16 };
+    println!("== Table 3: filter census (A100; accuracy probe {probe}x{probe}x{probe}) ==\n");
+    experiments::table3(&A100, probe).print();
 
     println!("\n== top-10 configs for matmul-(1024,1024,1024), halfhalf ==\n");
     let be = OursBackend::halfhalf();
-    let best = autotune::autotune(&A100, Method::OursHalfHalf, &be, 1024, 16, 10);
+    let best = autotune::autotune(&A100, Method::OursHalfHalf, &be, 1024, probe, 10);
     let mut t = Table::new(&["bm", "bn", "bk", "wm", "wn", "wk", "stages", "score"]);
     for (c, s) in best {
         t.row(&[

@@ -19,8 +19,9 @@
 //! * [`ServiceBuilder`] — the supported way to configure and start the
 //!   service (`GemmService::builder()`).
 //!
-//! The legacy `GemmService::submit` / `gemm_blocking` entry points are
-//! deprecated shims over this layer and will be removed next PR.
+//! (The pre-PR-4 `GemmService::submit` / `gemm_blocking` raw-channel
+//! shims and the `GemmResponse` alias are gone — this layer is the only
+//! way in.)
 //!
 //! # Example: deadline, cancellation, structured failure
 //!

@@ -70,12 +70,6 @@ impl Ticket {
         self.id
     }
 
-    /// Tear the ticket down to the raw reply channel (the deprecated
-    /// `GemmService::submit` shim's return shape).
-    pub(crate) fn into_raw(self) -> (u64, Receiver<GemmResult>) {
-        (self.id, self.rx)
-    }
-
     /// When the call was admitted.
     pub fn submitted_at(&self) -> Instant {
         self.submitted

@@ -50,6 +50,24 @@ pub fn time_once<F: FnOnce()>(f: F) -> f64 {
     t0.elapsed().as_secs_f64()
 }
 
+/// True when the binary was invoked with `--smoke`: the CI smoke lane
+/// (every `harness = false` bench binary shrinks to tiny parameters and
+/// asserts a clean run, so the bench code cannot silently rot).
+pub fn smoke() -> bool {
+    std::env::args().any(|a| a == "--smoke")
+}
+
+/// `bench()` parameters for the current mode: `(warmup, min_iters,
+/// min_time_s)` — one measured iteration under `--smoke`, the given
+/// settings otherwise.
+pub fn bench_params(warmup: usize, min_iters: usize, min_time_s: f64) -> (usize, usize, f64) {
+    if smoke() {
+        (0, 1, 0.0)
+    } else {
+        (warmup, min_iters, min_time_s)
+    }
+}
+
 /// Aligned text table writer for bench/report output.
 pub struct Table {
     headers: Vec<String>,

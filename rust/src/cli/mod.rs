@@ -48,6 +48,10 @@ impl Args {
         self.flags.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    pub fn f64_flag(&self, name: &str, default: f64) -> f64 {
+        self.flags.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
     pub fn bool_flag(&self, name: &str) -> bool {
         matches!(self.flags.get(name).map(|s| s.as_str()), Some("true") | Some("1") | Some("yes"))
     }
@@ -75,6 +79,14 @@ mod tests {
         assert!(a.bool_flag("verbose"));
         assert_eq!(a.str_flag("method"), Some("cutlass_halfhalf"));
         assert_eq!(a.usize_flag("missing", 7), 7);
+    }
+
+    #[test]
+    fn f64_flags_parse() {
+        let a = parse("solve --cond 1e4 --tol 0.5");
+        assert_eq!(a.f64_flag("cond", 1.0), 1e4);
+        assert_eq!(a.f64_flag("tol", 1.0), 0.5);
+        assert_eq!(a.f64_flag("missing", 2.5), 2.5);
     }
 
     #[test]

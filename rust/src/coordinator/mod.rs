@@ -20,7 +20,5 @@ pub use batcher::{Batch, BatchKey, DynamicBatcher};
 pub use metrics::{Metrics, Snapshot};
 pub use policy::{probe, route, Policy, RangeClass};
 pub use request::{GemmOutcome, GemmRequest};
-#[allow(deprecated)]
-pub use request::GemmResponse;
 pub use service::{Executor, GemmService, ServiceConfig, SimExecutor};
 pub use splitcache::SplitCache;

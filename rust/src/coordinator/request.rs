@@ -61,13 +61,6 @@ pub struct GemmOutcome {
     pub tag: Option<Arc<str>>,
 }
 
-/// The pre-PR-4 name of [`GemmOutcome`].
-#[deprecated(
-    note = "renamed to GemmOutcome; the supported client surface is api::Client, \
-            whose replies are Result<GemmOutcome, ServiceError>"
-)]
-pub type GemmResponse = GemmOutcome;
-
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -18,7 +18,7 @@
 use super::batcher::{Batch, BatchKey, DynamicBatcher};
 use super::intake::{Admitted, Intake, Popped};
 use super::metrics::Metrics;
-use super::policy::{route, Policy};
+use super::policy::route;
 use super::request::{CallMeta, GemmOutcome, GemmRequest};
 use super::splitcache::SplitCache;
 use crate::api::client::CallOptions;
@@ -29,7 +29,7 @@ use crate::gemm::{Mat, Method, SplitOperand, TileConfig};
 use crate::planner::{ExecPlan, Planner, PlannerConfig};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Mutex, OnceLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -663,32 +663,6 @@ impl GemmService {
         }
     }
 
-    /// Submit a GEMM; returns the request id and the raw reply receiver.
-    #[deprecated(
-        note = "use GemmService::call / api::Client — builders with deadlines, priorities and \
-                cancellable Tickets; replies are Result<GemmOutcome, ServiceError>"
-    )]
-    pub fn submit(&self, a: Mat, b: Mat, policy: Policy) -> (u64, Receiver<GemmResult>) {
-        let opts = CallOptions { policy: Some(policy), ..CallOptions::default() };
-        match self.submit_call(a, b, opts) {
-            Ok(ticket) => ticket.into_raw(),
-            Err(err) => {
-                // Preserve the shim's infallible signature: the rejection
-                // arrives as the only reply on the returned channel (id 0
-                // — the request was never admitted).
-                let (tx, rx) = channel();
-                let _ = tx.send(Err(err));
-                (0, rx)
-            }
-        }
-    }
-
-    /// Convenience: submit and wait.
-    #[deprecated(note = "use GemmService::call(a, b).policy(p).wait() / api::Client")]
-    pub fn gemm_blocking(&self, a: Mat, b: Mat, policy: Policy) -> GemmResult {
-        self.call(a, b).policy(policy).wait()
-    }
-
     pub fn metrics(&self) -> Arc<Metrics> {
         Arc::clone(&self.metrics)
     }
@@ -734,6 +708,7 @@ impl Drop for GemmService {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::Policy;
     use crate::gemm::{gemm_f64, relative_residual};
     use crate::matgen::{exp_rand, urand};
 
@@ -1022,29 +997,25 @@ mod tests {
     }
 
     #[test]
-    #[allow(deprecated)]
-    fn legacy_blocking_shim_returns_executor_failed() {
-        // Regression (ISSUE 4): `gemm_blocking` on a panicked-executor
-        // batch used to unwrap a dropped channel and panic the caller; it
-        // must return `ExecutorFailed` and keep the identity intact.
+    fn blocking_wait_on_panicked_batch_returns_executor_failed() {
+        // Regression (ISSUE 4, kept after the shim removal): a blocking
+        // wait on a panicked-executor batch must return `ExecutorFailed`
+        // — never unwrap a dropped channel — and keep the identity
+        // intact.
         let svc = GemmService::builder()
             .workers(1)
             .max_batch(1)
             .force_method(Method::Fp32Simt)
             .build(flaky());
-        let r = svc.gemm_blocking(
-            urand(8, 8, -1.0, 1.0, 1),
-            urand(8, 8, -1.0, 1.0, 2),
-            Policy::StrictFp32,
-        );
+        let r = svc
+            .call(urand(8, 8, -1.0, 1.0, 1), urand(8, 8, -1.0, 1.0, 2))
+            .policy(Policy::StrictFp32)
+            .wait();
         assert_eq!(r, Err(ServiceError::ExecutorFailed { batch_size: 1 }));
-        // The legacy submit shim also carries typed replies now.
-        let (_, rx) = svc.submit(
-            urand(8, 8, -1.0, 1.0, 3),
-            urand(8, 8, -1.0, 1.0, 4),
-            Policy::StrictFp32,
-        );
-        let r = rx.recv().expect("one reply per admitted request");
+        let r = svc
+            .call(urand(8, 8, -1.0, 1.0, 3), urand(8, 8, -1.0, 1.0, 4))
+            .policy(Policy::StrictFp32)
+            .wait();
         assert!(r.is_ok(), "post-panic request must succeed: {r:?}");
         let snap = svc.metrics().snapshot();
         assert_eq!(snap.requests, snap.completed + snap.failed);

@@ -100,6 +100,24 @@ impl MatF64 {
     pub fn fro_norm(&self) -> f64 {
         self.data.iter().map(|&x| x * x).sum::<f64>().sqrt()
     }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// Largest absolute element; any NaN makes the result NaN, which
+    /// callers treat as non-finite.
+    pub fn max_abs(&self) -> f64 {
+        let mut m = 0.0f64;
+        for &x in &self.data {
+            if x.is_nan() {
+                return f64::NAN;
+            }
+            m = m.max(x.abs());
+        }
+        m
+    }
 }
 
 #[cfg(test)]

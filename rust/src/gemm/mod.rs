@@ -100,8 +100,24 @@ impl Method {
         }
     }
 
+    /// Shorthand alias (the solver workload's Fig.-1-style labels),
+    /// accepted anywhere a method name is parsed.
+    pub fn alias(&self) -> Option<&'static str> {
+        match self {
+            Method::Fp32Simt => Some("fp32simt"),
+            Method::Fp16Tc => Some("fp16tc"),
+            Method::Tf32Tc => Some("tf32tc"),
+            Method::OursHalfHalf => Some("ours_f16tc"),
+            Method::OursTf32 => Some("ours_tf32tc"),
+            _ => None,
+        }
+    }
+
     pub fn parse(s: &str) -> Option<Method> {
-        Method::ALL.iter().copied().find(|m| m.name() == s)
+        Method::ALL
+            .iter()
+            .copied()
+            .find(|m| m.name() == s || m.alias() == Some(s))
     }
 
     /// CLI-facing parse: an unknown name is an error listing every valid
@@ -109,7 +125,12 @@ impl Method {
     pub fn parse_or_list(s: &str) -> Result<Method, String> {
         Method::parse(s).ok_or_else(|| {
             let names: Vec<&str> = Method::ALL.iter().map(|m| m.name()).collect();
-            format!("unknown method `{s}` — valid methods: {}", names.join(", "))
+            let aliases: Vec<&str> = Method::ALL.iter().filter_map(|m| m.alias()).collect();
+            format!(
+                "unknown method `{s}` — valid methods: {} (aliases: {})",
+                names.join(", "),
+                aliases.join(", ")
+            )
         })
     }
 
@@ -232,8 +253,16 @@ mod tests {
     fn method_names_roundtrip() {
         for m in Method::ALL {
             assert_eq!(Method::parse(m.name()), Some(m));
+            if let Some(a) = m.alias() {
+                assert_eq!(Method::parse(a), Some(m), "alias {a}");
+            }
         }
         assert_eq!(Method::parse("nope"), None);
+        // The acceptance-criterion spellings.
+        assert_eq!(Method::parse("ours_f16tc"), Some(Method::OursHalfHalf));
+        assert_eq!(Method::parse("ours_tf32tc"), Some(Method::OursTf32));
+        assert_eq!(Method::parse("fp16tc"), Some(Method::Fp16Tc));
+        assert_eq!(Method::parse("fp32simt"), Some(Method::Fp32Simt));
     }
 
     #[test]

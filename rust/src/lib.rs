@@ -24,6 +24,13 @@
 //!   ([`autotune`]) → shard gate ([`shard`]) — cached, explainable
 //!   (`tcec plan`), with `coordinator::policy::route` kept as a compat
 //!   shim over it.
+//! * [`solver`] — L2.7, the mixed-precision iterative solver workload
+//!   (DESIGN.md §11): block CG and Jacobi iterative refinement over a
+//!   [`solver::Backend`] that runs each matvec either in-process
+//!   ([`solver::DirectBackend`]) or through the full service
+//!   ([`solver::ServiceBackend`] — planner, shard engine and SplitCache
+//!   engaged), with bit-identical trajectories across the two paths (the
+//!   deepest whole-stack determinism test; `tcec solve`).
 //! * [`api`] — L3-front, the **one supported client surface** (DESIGN.md
 //!   §10): [`api::Client`]/[`api::Session`] over a running service, the
 //!   [`api::GemmCall`] builder (policy / deadline / priority / tag), the
@@ -61,4 +68,5 @@ pub mod perfmodel;
 pub mod planner;
 pub mod runtime;
 pub mod shard;
+pub mod solver;
 pub mod tcsim;

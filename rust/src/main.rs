@@ -22,10 +22,14 @@ USAGE:
   tcec shard     [--method M] [--m N --n N --k N] [--workers W] [--kslices S] [--threshold F]
   tcec plan      [--m N --n N --k N] [--policy fp32|low|strict] [--class C | --workload W]
                  [--shard] [--shard-workers W] [--probe N] [--no-autotune]
+  tcec solve     [--algo cg|ir] [--n N] [--nrhs R] [--method M] [--cond C] [--tol T]
+                 [--max-iters I] [--seed S] [--trajectory] [--service] [--workers W]
+                 [--shard] [--shard-workers W] [--split-cache N]   (--help for examples)
   tcec serve     [--requests N] [--size N] [--workers W] [--batch B] [--artifacts DIR]
                  [--shard] [--shard-workers W] [--split-cache N] [--planner]
                  [--queue-cap N] [--deadline-ms D] [--reject-stats]
-  tcec experiment <fig1|fig4|fig5|fig8|fig9|fig11|fig13|fig14|fig15|fig16|table1_2|table3|table6>
+  tcec experiment <fig1|fig4|fig5|fig8|fig9|fig11|fig13|fig14|fig15|fig16|table1_2|table3
+                  |table6|solver>
   tcec artifacts [--dir DIR]
   tcec analyze   [--exponent E] [--k N]
   tcec methods
@@ -33,8 +37,39 @@ USAGE:
 METHODS: cublas_simt cublas_fp16tc cublas_tf32tc markidis markidis_mma_rn
          feng cutlass_halfhalf cutlass_tf32tf32 ours_no_rz_avoid
          ours_four_term fp32_trunc_lsb ours_bf16x3 halfhalf_prescale
+         (aliases: fp32simt fp16tc tf32tc ours_f16tc ours_tf32tc)
 WORKLOADS: urand | exprand:<a>:<b> | randtlr | spatial | cauchy
 CLASSES:   exact | degraded | wide | extreme   (Fig. 11 input types)
+";
+
+const SOLVE_USAGE: &str = "\
+tcec solve — mixed-precision iterative solve of A·X = B (DESIGN.md §11)
+
+  --algo cg|ir       cg = block conjugate gradients on an SPD system (default);
+                     ir = Jacobi-preconditioned iterative refinement on a
+                     diagonally-dominant system
+  --n N --nrhs R     system size (default 128) and right-hand-side block width
+                     (default 8) — the inner op is a real (N x N)·(N x R) GEMM
+  --method M         GEMM method for the matvec (default ours_f16tc); fp16tc
+                     shows the stall the corrected methods fix
+  --cond C           SPD condition number (cg only; default 1e3)
+  --tol T            relative-residual target (default 1e-6)
+  --max-iters I      iteration cap (default 500)
+  --seed S           system seed (default 7)
+  --trajectory       print the per-iteration residual table
+  --service          ALSO run the solve through the full GEMM service
+                     (planner + optional shard engine + SplitCache) and verify
+                     the trajectory is bit-identical to the direct run
+  --workers W        service workers (default 2)
+  --shard            shard service matvecs over a work-stealing pool
+  --shard-workers W  shard pool size (default 4)
+  --split-cache N    service split-cache entries (default 8)
+
+EXAMPLES:
+  tcec solve --n 256 --nrhs 8 --method ours_f16tc --service
+  tcec solve --method fp16tc --cond 1e4 --trajectory     # watch the stall
+  tcec solve --algo ir --method ours_tf32tc --tol 1e-5   # 1e-6 sits at the
+                                                         # f32 matvec floor
 ";
 
 /// Strict method flag: unknown names are an error listing every valid
@@ -263,6 +298,145 @@ fn cmd_plan(args: &Args) {
     table.print();
 }
 
+/// `tcec solve`: mixed-precision iterative solve (DESIGN.md §11) — block
+/// CG or Jacobi IR with the matvec on any GEMM method, in-process or
+/// through the full service, with the bit-identity check between the two.
+fn cmd_solve(args: &Args) {
+    use tcec::matgen::{jacobi_system, spd_system};
+    use tcec::solver::{solve, Algo, DirectBackend, ServiceBackend, SolveReport, SolverConfig};
+
+    if args.bool_flag("help") {
+        print!("{SOLVE_USAGE}");
+        return;
+    }
+    let algo = match Algo::parse_or_list(args.str_flag("algo").unwrap_or("cg")) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    let n = args.usize_flag("n", 128);
+    let nrhs = args.usize_flag("nrhs", 8);
+    let method = parse_method_flag(args, Method::OursHalfHalf);
+    let cond = args.f64_flag("cond", 1e3);
+    let cfg = SolverConfig {
+        tol: args.f64_flag("tol", 1e-6),
+        max_iters: args.usize_flag("max-iters", 500),
+    };
+    let seed = args.u64_flag("seed", 7);
+    let (a, _x_true, b) = match algo {
+        Algo::Cg => spd_system(n, nrhs, cond, seed),
+        Algo::JacobiIr => jacobi_system(n, nrhs, 0.45, seed),
+    };
+    let service = args.bool_flag("service");
+    let shard_cfg = if args.bool_flag("shard") {
+        Some(shard::ShardConfig {
+            workers: args.usize_flag("shard-workers", 4),
+            ..shard::ShardConfig::default()
+        })
+    } else {
+        None
+    };
+    // The direct run must execute under the tile the service's planner
+    // will pick for the matvec shape (n x n · n x nrhs) — that is the
+    // precondition of the bit-identity check.
+    let tile = if service {
+        let pc = PlannerConfig { shard: shard_cfg.clone(), ..PlannerConfig::default() };
+        Planner::new(pc).plan_for_method(method, n, nrhs, n).equivalent_tile()
+    } else {
+        TileConfig::default()
+    };
+
+    println!(
+        "solve {} : ({n} x {n}) A · X = B ({n} x {nrhs}), method {}{}",
+        algo.name(),
+        method.name(),
+        match algo {
+            Algo::Cg => format!(", cond {cond:.1e}"),
+            Algo::JacobiIr => ", dominance 0.45".to_string(),
+        }
+    );
+    println!("tol {:.1e}, max {} iterations, seed {seed}\n", cfg.tol, cfg.max_iters);
+
+    let print_report = |label: &str, rep: &SolveReport, secs: f64| {
+        let state = if rep.converged {
+            "converged"
+        } else if rep.stalled {
+            "STALLED"
+        } else {
+            "max-iters"
+        };
+        println!(
+            "{label:>8}: {state} after {} iter(s) in {secs:.3}s — solver resid {:.3e}, \
+             FP64-verified {:.3e} ({} matvecs)",
+            rep.iters,
+            rep.final_resid(),
+            rep.final_true_resid(),
+            rep.matvecs
+        );
+    };
+    fn fail(e: tcec::solver::SolveError) -> ! {
+        eprintln!("{e}");
+        std::process::exit(1);
+    }
+
+    let direct = DirectBackend::with_tile(method, tile);
+    let t0 = std::time::Instant::now();
+    let rep = solve(algo, &a, &b, &direct, &cfg).unwrap_or_else(|e| fail(e));
+    print_report("direct", &rep, t0.elapsed().as_secs_f64());
+    println!(
+        "          split cache: {} hits / {} misses (A split once, reused every iteration)",
+        direct.split_cache().hits(),
+        direct.split_cache().misses()
+    );
+
+    if args.bool_flag("trajectory") {
+        let mut t = Table::new(&["iter", "solver resid", "FP64-verified"]);
+        for (i, (r, tr)) in rep.resid.iter().zip(&rep.true_resid).enumerate() {
+            t.row(&[(i + 1).to_string(), format!("{r:.6e}"), format!("{tr:.6e}")]);
+        }
+        t.print();
+    }
+
+    if service {
+        let mut builder = GemmService::builder()
+            .workers(args.usize_flag("workers", 2))
+            .force_method(method)
+            .planner(PlannerConfig::default())
+            .split_cache(args.usize_flag("split-cache", 8));
+        if let Some(sc) = shard_cfg {
+            builder = builder.shard(sc);
+        }
+        let client = builder.client(Arc::new(SimExecutor::new()));
+        let backend = ServiceBackend::new(client.session().tag("tcec-solve"));
+        let t0 = std::time::Instant::now();
+        let srep = solve(algo, &a, &b, &backend, &cfg).unwrap_or_else(|e| fail(e));
+        print_report("service", &srep, t0.elapsed().as_secs_f64());
+        let snap = client.metrics().snapshot();
+        println!(
+            "          split cache: {} hits / {} misses ({} entries); plan cache {} hits / \
+             {} misses",
+            snap.split_cache_hits,
+            snap.split_cache_misses,
+            snap.split_cache_entries,
+            snap.plan_cache_hits,
+            snap.plan_cache_misses
+        );
+        if snap.sharded_gemms > 0 {
+            println!(
+                "          sharded matvecs: {} ({} shards, {} steals)",
+                snap.sharded_gemms, snap.shards_executed, snap.shard_steals
+            );
+        }
+        println!(
+            "trajectory bit-identical to direct: {}",
+            if rep.bit_identical(&srep) { "YES" } else { "NO (BUG)" }
+        );
+        client.shutdown();
+    }
+}
+
 fn cmd_serve(args: &Args) {
     let requests = args.usize_flag("requests", 32);
     let size = args.usize_flag("size", 64);
@@ -418,6 +592,11 @@ fn cmd_experiment(args: &Args) {
         "table1_2" => experiments::table1_2(500_000),
         "table3" => experiments::table3(&A100, 16),
         "table6" => experiments::table6(),
+        "solver" => {
+            println!("== solver workload: CG true-residual trajectories (DESIGN.md §11) ==");
+            println!("(64x64 SPD, cond 1e4, 8 RHS — fp16tc stalls, corrected track fp32)\n");
+            experiments::solver_residual(64, 8, 1e4, 60, 7)
+        }
         other => {
             eprintln!("unknown experiment {other}");
             eprintln!("{USAGE}");
@@ -513,6 +692,7 @@ fn main() {
         Some("gemm") => cmd_gemm(&args),
         Some("shard") => cmd_shard(&args),
         Some("plan") => cmd_plan(&args),
+        Some("solve") => cmd_solve(&args),
         Some("serve") => cmd_serve(&args),
         Some("experiment") => cmd_experiment(&args),
         Some("artifacts") => cmd_artifacts(&args),

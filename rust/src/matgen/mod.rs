@@ -1,9 +1,11 @@
 //! Workload (input-matrix) generators for every accuracy experiment.
 
 pub mod rng;
+pub mod solver;
 pub mod starsh;
 
 pub use rng::Rng;
+pub use solver::{diag_dominant, jacobi_system, spd, spd_system};
 pub use starsh::{cauchy, randtlr, spatial};
 
 use crate::gemm::Mat;

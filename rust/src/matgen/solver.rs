@@ -1,0 +1,211 @@
+//! Linear-system generators for the solver workload (DESIGN.md §11):
+//! seeded, condition-number-controlled SPD matrices for CG and
+//! provably diagonally-dominant matrices for Jacobi iterative refinement.
+//!
+//! Systems come as `(A, X_true, B)` with `B = A·X_true` computed in f64
+//! and rounded once to f32. Building `B` from a bounded random `X_true`
+//! (instead of drawing `B` directly) keeps `‖A‖·‖X‖ / ‖B‖` at O(1), so a
+//! solver's attainable *true* residual is set by the GEMM accuracy, not
+//! inflated by `cond(A)` — which is exactly what makes fp16-vs-corrected
+//! trajectories comparable across condition numbers.
+
+use super::rng::Rng;
+use super::urand;
+use crate::gemm::{gemm_f64, Mat};
+
+/// Symmetric positive definite `n×n` matrix with eigenvalues log-spaced
+/// in `[1/cond, 1]`: `A = H₂H₁ · diag(λ) · H₁H₂` with two random
+/// Householder reflections (exactly orthogonal in exact arithmetic),
+/// built in f64, symmetrized, rounded once to f32.
+///
+/// The f32 rounding perturbs eigenvalues by at most ~`n·u_f32`, so keep
+/// `cond ≲ 1e5` at these sizes for the matrix to stay safely SPD.
+pub fn spd(n: usize, cond: f64, seed: u64) -> Mat {
+    assert!(n >= 1);
+    assert!(cond >= 1.0, "condition number must be >= 1");
+    let mut rng = Rng::new(seed);
+    // diag(λ), λ log-spaced from 1 down to 1/cond.
+    let mut w = vec![0.0f64; n * n];
+    for i in 0..n {
+        let t = if n == 1 {
+            0.0
+        } else {
+            i as f64 / (n - 1) as f64
+        };
+        w[i * n + i] = cond.powf(-t);
+    }
+    // Two Householder conjugations W ← H W H, H = I − 2vvᵀ.
+    for _ in 0..2 {
+        let mut v = vec![0.0f64; n];
+        let mut norm2 = 0.0;
+        while norm2 < 1e-12 {
+            for x in v.iter_mut() {
+                *x = rng.uniform() - 0.5;
+            }
+            norm2 = v.iter().map(|x| x * x).sum();
+        }
+        let inv = 1.0 / norm2.sqrt();
+        for x in v.iter_mut() {
+            *x *= inv;
+        }
+        // Left: W ← W − 2 v (vᵀ W).
+        for j in 0..n {
+            let s: f64 = (0..n).map(|i| v[i] * w[i * n + j]).sum();
+            for i in 0..n {
+                w[i * n + j] -= 2.0 * v[i] * s;
+            }
+        }
+        // Right: W ← W − 2 (W v) vᵀ.
+        for i in 0..n {
+            let t: f64 = (0..n).map(|j| w[i * n + j] * v[j]).sum();
+            for j in 0..n {
+                w[i * n + j] -= 2.0 * t * v[j];
+            }
+        }
+    }
+    // Symmetrize (kills asymmetric rounding drift), then round to f32
+    // once — both triangles from the same f64, so a_ij == a_ji exactly.
+    Mat::from_fn(n, n, |i, j| (0.5 * (w[i * n + j] + w[j * n + i])) as f32)
+}
+
+/// Strictly diagonally dominant `n×n` matrix with Jacobi contraction
+/// ratio ≤ `rho`: off-diagonal entries uniform in (−0.25, 0.25), one
+/// shared diagonal `d = max_i Σ_{j≠i}|a_ij| / rho`. The shared `d` makes
+/// the Jacobi *residual* iteration matrix equal the error iteration
+/// matrix `I − A/d`, so the per-step residual contraction ≤ ~ρ is
+/// provable, not just asymptotic (see `solver::ir`).
+pub fn diag_dominant(n: usize, rho: f64, seed: u64) -> Mat {
+    assert!(n >= 1);
+    assert!(rho > 0.0 && rho < 1.0, "dominance ratio must be in (0, 1)");
+    let mut rng = Rng::new(seed);
+    let mut w = vec![0.0f64; n * n];
+    let mut max_rowsum = 0.0f64;
+    for i in 0..n {
+        let mut rowsum = 0.0;
+        for j in 0..n {
+            if i != j {
+                let v = rng.uniform_in(-0.25, 0.25);
+                w[i * n + j] = v;
+                rowsum += v.abs();
+            }
+        }
+        max_rowsum = max_rowsum.max(rowsum);
+    }
+    let d = if max_rowsum > 0.0 {
+        max_rowsum / rho
+    } else {
+        1.0
+    };
+    for i in 0..n {
+        w[i * n + i] = d;
+    }
+    Mat::from_fn(n, n, |i, j| w[i * n + j] as f32)
+}
+
+/// `B = A·X_true` in f64, rounded once to f32.
+fn rhs_for(a: &Mat, x_true: &Mat) -> Mat {
+    let b64 = gemm_f64(a, x_true);
+    Mat::from_vec(b64.rows, b64.cols, b64.data.iter().map(|&v| v as f32).collect())
+}
+
+/// SPD system for CG: `(A, X_true, B)` with [`spd`]'s `A` and a bounded
+/// random block solution.
+pub fn spd_system(n: usize, nrhs: usize, cond: f64, seed: u64) -> (Mat, Mat, Mat) {
+    let a = spd(n, cond, seed);
+    let x_true = urand(n, nrhs, -1.0, 1.0, seed ^ 0x50D5_EED5);
+    let b = rhs_for(&a, &x_true);
+    (a, x_true, b)
+}
+
+/// Diagonally-dominant system for Jacobi IR: `(A, X_true, B)` with
+/// [`diag_dominant`]'s `A`.
+pub fn jacobi_system(n: usize, nrhs: usize, rho: f64, seed: u64) -> (Mat, Mat, Mat) {
+    let a = diag_dominant(n, rho, seed);
+    let x_true = urand(n, nrhs, -1.0, 1.0, seed ^ 0x1ACB_15EED);
+    let b = rhs_for(&a, &x_true);
+    (a, x_true, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spd_is_symmetric_and_positive_definite() {
+        let n = 24;
+        let a = spd(n, 1e3, 42);
+        for i in 0..n {
+            for j in 0..n {
+                assert_eq!(a.get(i, j).to_bits(), a.get(j, i).to_bits(), "({i},{j})");
+            }
+        }
+        // Rayleigh quotients of random vectors sit inside [λmin, λmax].
+        let mut rng = Rng::new(7);
+        for _ in 0..16 {
+            let x: Vec<f64> = (0..n).map(|_| rng.uniform() - 0.5).collect();
+            let mut quad = 0.0;
+            let mut nx = 0.0;
+            for i in 0..n {
+                nx += x[i] * x[i];
+                for j in 0..n {
+                    quad += x[i] * a.get(i, j) as f64 * x[j];
+                }
+            }
+            let rayleigh = quad / nx;
+            assert!(rayleigh > 0.5e-3, "not positive definite enough: {rayleigh}");
+            assert!(rayleigh < 1.0 + 1e-3, "above λmax: {rayleigh}");
+        }
+    }
+
+    #[test]
+    fn spd_spectrum_matches_the_target() {
+        // Householder conjugation preserves trace and Frobenius norm; the
+        // f32 rounding perturbs both at the 1e-7 level.
+        let n = 32;
+        let cond = 1e4;
+        let a = spd(n, cond, 3);
+        let lambda: Vec<f64> =
+            (0..n).map(|i| cond.powf(-(i as f64) / (n - 1) as f64)).collect();
+        let trace: f64 = (0..n).map(|i| a.get(i, i) as f64).sum();
+        let want_trace: f64 = lambda.iter().sum();
+        assert!((trace - want_trace).abs() < 1e-3 * want_trace, "{trace} vs {want_trace}");
+        let want_fro: f64 = lambda.iter().map(|l| l * l).sum::<f64>().sqrt();
+        assert!((a.fro_norm() - want_fro).abs() < 1e-3 * want_fro);
+    }
+
+    #[test]
+    fn diag_dominant_honors_the_ratio() {
+        let n = 24;
+        let rho = 0.45;
+        let a = diag_dominant(n, rho, 9);
+        let d = a.get(0, 0);
+        let mut tightest = 0.0f64;
+        for i in 0..n {
+            assert_eq!(a.get(i, i), d, "shared diagonal");
+            let off: f64 = (0..n)
+                .filter(|&j| j != i)
+                .map(|j| a.get(i, j).abs() as f64)
+                .sum();
+            let ratio = off / d as f64;
+            assert!(ratio <= rho + 1e-5, "row {i}: ratio {ratio}");
+            tightest = tightest.max(ratio);
+        }
+        // The bound is tight: some row sits at ρ.
+        assert!(tightest > rho - 1e-3, "tightest {tightest}");
+    }
+
+    #[test]
+    fn systems_have_small_true_residual_at_x_true() {
+        for (a, x_true, b) in [spd_system(16, 3, 100.0, 1), jacobi_system(16, 3, 0.4, 2)] {
+            let r = gemm_f64(&a, &x_true);
+            let mut num = 0.0;
+            let mut den = 0.0;
+            for (rv, bv) in r.data.iter().zip(&b.data) {
+                num += (rv - *bv as f64) * (rv - *bv as f64);
+                den += *bv as f64 * *bv as f64;
+            }
+            // Only B's f32 store rounds.
+            assert!((num / den).sqrt() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,166 @@
+//! [`Backend`] — the execution seam of the solver layer: one f32 GEMM,
+//! abstracted over *where* it runs.
+//!
+//! * [`DirectBackend`] runs `gemm::Method` in-process under a fixed
+//!   [`TileConfig`], with a small [`SplitCache`] so the solve's constant
+//!   operand `A` is split exactly once across the whole trajectory (the
+//!   repeated-weight pattern DESIGN.md §8 names).
+//! * [`ServiceBackend`] submits every GEMM through an
+//!   [`crate::api::Session`] —
+//!   admission control, the planner, the shard engine and the service's
+//!   own SplitCache all engage.
+//!
+//! The bit-identity contract: a service built with
+//! `force_method(m)` + `planner(...)` (+ optional `shard(...)`) executes
+//! each GEMM bit-identically to `m.run(a, b, plan.equivalent_tile())`
+//! (property-tested in `rust/tests/prop.rs`), so a [`DirectBackend`]
+//! constructed with that equivalent tile makes whole solves bit-identical
+//! across the two backends — `rust/tests/solver.rs` pins it.
+
+use super::SolveError;
+use crate::api::Session;
+use crate::coordinator::SplitCache;
+use crate::gemm::{Mat, Method, TileConfig};
+
+/// One f32 GEMM (`C = A·B`) through some execution path. Implementations
+/// must be deterministic: the same operands always produce the same bits.
+pub trait Backend {
+    fn gemm(&self, a: &Mat, b: &Mat) -> Result<Mat, SolveError>;
+    /// Human-readable label for reports.
+    fn label(&self) -> String;
+}
+
+/// Number of prepared operands a [`DirectBackend`] keeps: the solve's
+/// constant `A` plus a few recent right-hand operands. `A` is touched on
+/// every call, so LRU keeps it resident for the whole trajectory.
+const DIRECT_CACHE_CAP: usize = 4;
+
+/// In-process backend: `method.run_prepared` under a fixed tile, with the
+/// two-stage split API amortizing the constant operand.
+pub struct DirectBackend {
+    method: Method,
+    tile: TileConfig,
+    cache: SplitCache,
+}
+
+impl DirectBackend {
+    /// Backend over the default engine tile — bit-identical to a default
+    /// (no planner, no shard) service running the same method.
+    pub fn new(method: Method) -> DirectBackend {
+        DirectBackend::with_tile(method, TileConfig::default())
+    }
+
+    /// Backend over an explicit tile. To mirror a planner-routed service,
+    /// pass the plan's `equivalent_tile()` for the solve's GEMM shape.
+    pub fn with_tile(method: Method, tile: TileConfig) -> DirectBackend {
+        DirectBackend { method, tile, cache: SplitCache::new(DIRECT_CACHE_CAP) }
+    }
+
+    pub fn method(&self) -> Method {
+        self.method
+    }
+
+    pub fn tile(&self) -> &TileConfig {
+        &self.tile
+    }
+
+    /// The operand-split cache (hit/miss counters pin the amortization:
+    /// an N-iteration solve splits `A` once and hits N−1 times).
+    pub fn split_cache(&self) -> &SplitCache {
+        &self.cache
+    }
+}
+
+impl Backend for DirectBackend {
+    fn gemm(&self, a: &Mat, b: &Mat) -> Result<Mat, SolveError> {
+        let pa = self.cache.get_or_prepare(self.method, a);
+        let pb = self.cache.get_or_prepare(self.method, b);
+        Ok(self.method.run_prepared(&pa, &pb, &self.tile))
+    }
+
+    fn label(&self) -> String {
+        format!("direct:{}", self.method.name())
+    }
+}
+
+/// Service-path backend: every GEMM is one call on an [`api::Session`].
+///
+/// Build the underlying service with `force_method` so the whole
+/// trajectory runs one method (policy routing would otherwise be free to
+/// change its choice between iterations); the session's own defaults
+/// (policy, deadline, priority, tag) apply to every call.
+pub struct ServiceBackend {
+    session: Session,
+}
+
+impl ServiceBackend {
+    pub fn new(session: Session) -> ServiceBackend {
+        ServiceBackend { session }
+    }
+}
+
+impl Backend for ServiceBackend {
+    fn gemm(&self, a: &Mat, b: &Mat) -> Result<Mat, SolveError> {
+        self.session
+            .call(a.clone(), b.clone())
+            .wait()
+            .map(|outcome| outcome.c)
+            .map_err(|e| SolveError::Backend(e.to_string()))
+    }
+
+    fn label(&self) -> String {
+        "service".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{GemmService, SimExecutor};
+    use crate::matgen::urand;
+    use std::sync::Arc;
+
+    #[test]
+    fn direct_backend_matches_method_run_and_caches_the_weight() {
+        let be = DirectBackend::new(Method::OursHalfHalf);
+        let a = urand(24, 24, -1.0, 1.0, 1);
+        let cfg = TileConfig::default();
+        for i in 0..3u64 {
+            let p = urand(24, 4, -1.0, 1.0, 10 + i);
+            let c = be.gemm(&a, &p).unwrap();
+            assert_eq!(c.data, Method::OursHalfHalf.run(&a, &p, &cfg).data);
+        }
+        // A split once (1 miss, 2 hits); each P a distinct miss.
+        assert_eq!(be.split_cache().hits(), 2);
+        assert_eq!(be.split_cache().misses(), 4);
+    }
+
+    #[test]
+    fn service_backend_is_bit_identical_to_direct() {
+        let client = GemmService::builder()
+            .workers(1)
+            .force_method(Method::OursTf32)
+            .client(Arc::new(SimExecutor::new()));
+        let be_svc = ServiceBackend::new(client.session().tag("solver-test"));
+        let be_dir = DirectBackend::new(Method::OursTf32);
+        let a = urand(16, 16, -1.0, 1.0, 2);
+        let p = urand(16, 8, -1.0, 1.0, 3);
+        let via_svc = be_svc.gemm(&a, &p).unwrap();
+        let via_dir = be_dir.gemm(&a, &p).unwrap();
+        assert_eq!(via_svc.data, via_dir.data);
+        client.shutdown();
+    }
+
+    #[test]
+    fn service_backend_surfaces_service_errors() {
+        let client = GemmService::builder().workers(1).client(Arc::new(SimExecutor::new()));
+        client.close();
+        let be = ServiceBackend::new(client.session());
+        let err = be
+            .gemm(&urand(8, 8, -1.0, 1.0, 1), &urand(8, 8, -1.0, 1.0, 2))
+            .unwrap_err();
+        let SolveError::Backend(msg) = err;
+        assert!(msg.contains("shut"), "unexpected message: {msg}");
+        client.shutdown();
+    }
+}

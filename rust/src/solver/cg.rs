@@ -1,0 +1,205 @@
+//! Block conjugate gradients for SPD `A·X = B` with the matvec on a
+//! [`Backend`] (DESIGN.md §11).
+//!
+//! The `nrhs` right-hand sides iterate in lockstep — each column carries
+//! its own `α_j`/`β_j` scalars, but the per-iteration matvec `Q = A·P`
+//! is one real `n×n · n×nrhs` GEMM, which is exactly the shape the
+//! serving stack batches, caches and shards. Host state is f64; the
+//! matvec is normalized/rounded to f32 through [`matvec_f32`]. A column
+//! whose recurrence residual reaches exactly zero is frozen (its `α`/`β`
+//! become 0) instead of poisoning the others with a 0/0.
+//!
+//! Stall semantics: a non-finite iterate or a non-positive curvature
+//! `pᵀA p` (which an inaccurate matvec can fabricate — fp16 regularly
+//! does) ends the iteration with `stalled = true`; the trajectory
+//! recorded so far IS the experiment's artifact.
+
+use super::backend::Backend;
+use super::mixed::{matvec_f32, residual_f64, Matvec};
+use super::{SolveError, SolveReport, SolverConfig};
+use crate::gemm::{Mat, MatF64};
+
+/// Per-column dot products `⟨U_j, V_j⟩` of two equal-shape f64 blocks.
+fn col_dots(u: &MatF64, v: &MatF64) -> Vec<f64> {
+    let (n, nrhs) = (u.rows, u.cols);
+    let mut out = vec![0.0f64; nrhs];
+    for i in 0..n {
+        for (j, o) in out.iter_mut().enumerate() {
+            *o += u.get(i, j) * v.get(i, j);
+        }
+    }
+    out
+}
+
+/// Conjugate gradients; see the module docs. `A` must be symmetric
+/// positive definite for the method's theory to apply — the iteration
+/// itself only requires the shapes to agree.
+pub fn solve_cg(
+    a: &Mat,
+    b: &Mat,
+    backend: &dyn Backend,
+    cfg: &SolverConfig,
+) -> Result<SolveReport, SolveError> {
+    assert_eq!(a.rows, a.cols, "CG needs a square system");
+    assert_eq!(a.cols, b.rows, "A and B shapes must agree");
+    let (n, nrhs) = (a.rows, b.cols);
+    let norm_b = b.fro_norm();
+
+    let mut x = MatF64::zeros(n, nrhs);
+    // X₀ = 0 ⇒ R₀ = B exactly.
+    let mut r = MatF64 {
+        rows: n,
+        cols: nrhs,
+        data: b.data.iter().map(|&v| v as f64).collect(),
+    };
+    let mut p = r.clone();
+    let mut rho = col_dots(&r, &r);
+
+    let mut report = SolveReport {
+        x: MatF64::zeros(0, 0),
+        resid: Vec::new(),
+        true_resid: Vec::new(),
+        iters: 0,
+        converged: false,
+        stalled: false,
+        matvecs: 0,
+    };
+    if norm_b == 0.0 {
+        // B = 0 ⇒ X = 0 is exact.
+        report.x = x;
+        report.converged = true;
+        return Ok(report);
+    }
+
+    for _ in 1..=cfg.max_iters {
+        let q = match matvec_f32(backend, a, &p)? {
+            Matvec::Out(q) => q,
+            // P = 0 means every column froze; the residual test below
+            // already said "not converged", so this is a stall.
+            Matvec::ZeroInput | Matvec::NonFinite => {
+                report.stalled = true;
+                break;
+            }
+        };
+        report.matvecs += 1;
+
+        // α_j = ρ_j / ⟨P_j, Q_j⟩; frozen columns (ρ_j = 0) keep α_j = 0.
+        let pq = col_dots(&p, &q);
+        let mut alpha = vec![0.0f64; nrhs];
+        let mut lost_direction = false;
+        for j in 0..nrhs {
+            if rho[j] == 0.0 {
+                continue;
+            }
+            let usable = pq[j].is_finite() && pq[j] > 0.0;
+            if !usable {
+                lost_direction = true;
+                break;
+            }
+            alpha[j] = rho[j] / pq[j];
+        }
+        if lost_direction {
+            report.stalled = true;
+            break;
+        }
+
+        // X += P·diag(α);  R -= Q·diag(α).
+        for i in 0..n {
+            for j in 0..nrhs {
+                x.set(i, j, x.get(i, j) + alpha[j] * p.get(i, j));
+                r.set(i, j, r.get(i, j) - alpha[j] * q.get(i, j));
+            }
+        }
+        report.iters += 1;
+
+        // Both trajectories: the recurrence (drives `tol`) and the
+        // FP64-verified truth (the stall detector).
+        let rec = r.fro_norm() / norm_b;
+        let (_, truth) = residual_f64(a, &x, b);
+        report.resid.push(rec);
+        report.true_resid.push(truth);
+        if !rec.is_finite() {
+            report.stalled = true;
+            break;
+        }
+        if rec <= cfg.tol {
+            report.converged = true;
+            break;
+        }
+
+        // β_j = ρ'_j / ρ_j;  P = R + P·diag(β). Frozen columns stay 0.
+        let rho_new = col_dots(&r, &r);
+        let mut beta = vec![0.0f64; nrhs];
+        for j in 0..nrhs {
+            if rho[j] > 0.0 {
+                beta[j] = rho_new[j] / rho[j];
+            }
+        }
+        for i in 0..n {
+            for j in 0..nrhs {
+                p.set(i, j, r.get(i, j) + beta[j] * p.get(i, j));
+            }
+        }
+        rho = rho_new;
+    }
+
+    report.x = x;
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::Method;
+    use crate::matgen::spd_system;
+    use crate::solver::DirectBackend;
+
+    #[test]
+    fn cg_converges_on_a_well_conditioned_spd_system() {
+        let (a, _xt, b) = spd_system(32, 3, 100.0, 7);
+        let be = DirectBackend::new(Method::Fp32Simt);
+        let cfg = SolverConfig { tol: 1e-6, max_iters: 200 };
+        let rep = solve_cg(&a, &b, &be, &cfg).unwrap();
+        assert!(rep.converged, "final resid {}", rep.final_resid());
+        assert!(!rep.stalled);
+        assert!(rep.final_resid() <= 1e-6);
+        // The verified residual agrees with the recurrence at this
+        // accuracy level (well above the f32 matvec floor).
+        assert!(rep.final_true_resid() < 1e-4, "true {}", rep.final_true_resid());
+        assert_eq!(rep.matvecs, rep.iters);
+        // Trajectories are per-iteration.
+        assert_eq!(rep.resid.len(), rep.iters);
+        assert_eq!(rep.true_resid.len(), rep.iters);
+    }
+
+    #[test]
+    fn cg_trajectory_is_reproducible() {
+        let (a, _xt, b) = spd_system(24, 2, 50.0, 9);
+        let cfg = SolverConfig { tol: 1e-6, max_iters: 60 };
+        let r1 = solve_cg(&a, &b, &DirectBackend::new(Method::OursHalfHalf), &cfg).unwrap();
+        let r2 = solve_cg(&a, &b, &DirectBackend::new(Method::OursHalfHalf), &cfg).unwrap();
+        assert!(r1.bit_identical(&r2));
+    }
+
+    #[test]
+    fn cg_zero_rhs_is_trivially_exact() {
+        let (a, _xt, _b) = spd_system(8, 2, 10.0, 1);
+        let be = DirectBackend::new(Method::Fp32Simt);
+        let rep = solve_cg(&a, &Mat::zeros(8, 2), &be, &SolverConfig::default()).unwrap();
+        assert!(rep.converged);
+        assert_eq!(rep.iters, 0);
+        assert!(rep.x.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn cg_fixed_iteration_count_with_zero_tol() {
+        let (a, _xt, b) = spd_system(16, 2, 10.0, 3);
+        let be = DirectBackend::new(Method::OursHalfHalf);
+        let cfg = SolverConfig { tol: 0.0, max_iters: 5 };
+        let rep = solve_cg(&a, &b, &be, &cfg).unwrap();
+        assert_eq!(rep.iters, 5);
+        assert_eq!(rep.matvecs, 5);
+        assert!(!rep.converged);
+        assert!(!rep.stalled);
+    }
+}

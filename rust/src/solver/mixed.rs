@@ -1,0 +1,181 @@
+//! The mixed-precision seam: f64 host state in, one f32 backend GEMM out,
+//! with an exact power-of-two normalization in between.
+//!
+//! As an iterative solve converges, its search directions shrink by orders
+//! of magnitude — a late-iteration CG direction on a 1e-6 trajectory has
+//! entries around 2^-20, squarely in halfhalf's *degraded/dead* exponent
+//! range (Fig. 11 Types 3–4) even though the problem itself is perfectly
+//! conditioned for the method. The fix is the paper's own prescaling
+//! observation: scaling by a power of two is exact in both f32 and f64, so
+//! [`matvec_f32`] scales the operand so its largest magnitude lands in
+//! `[1, 2)`, rounds to f32 (the one genuinely lossy step — it IS the
+//! backend's input precision), runs the backend GEMM, and descales the f64
+//! result exactly. Every corrected method then sees its comfortable
+//! exponent range for the whole trajectory, and because the shift is a
+//! deterministic function of the operand, the scheme preserves the
+//! bit-identity contract across execution paths.
+
+use super::backend::Backend;
+use super::SolveError;
+use crate::fp::exp2i;
+use crate::gemm::{Mat, MatF64};
+
+/// `floor(log2(x))` for finite positive `x`, via the exponent bits
+/// (exact, no libm rounding ambiguity). Subnormals fall back to the
+/// smallest normal exponent — values that tiny only occur long past any
+/// meaningful residual level, and the fallback keeps the scaled operand
+/// finite.
+fn floor_log2(x: f64) -> i32 {
+    debug_assert!(x.is_finite() && x > 0.0);
+    let e = ((x.to_bits() >> 52) & 0x7ff) as i32;
+    if e == 0 { -1022 } else { e - 1023 }
+}
+
+/// What one normalized matvec produced.
+pub enum Matvec {
+    /// `A·P`, descaled back to f64.
+    Out(MatF64),
+    /// `P` was exactly zero — the product is zero, no backend call made.
+    ZeroInput,
+    /// `P` contained a non-finite value; the iteration should stall.
+    NonFinite,
+}
+
+/// `Q = A·P` with `P` in f64: normalize `P` by an exact power of two so
+/// its max magnitude is in `[1, 2)`, round to f32, run the backend GEMM,
+/// descale the f64 result exactly. See the module docs for why.
+pub fn matvec_f32(backend: &dyn Backend, a: &Mat, p: &MatF64) -> Result<Matvec, SolveError> {
+    let m = p.max_abs();
+    if m == 0.0 {
+        return Ok(Matvec::ZeroInput);
+    }
+    if !m.is_finite() {
+        return Ok(Matvec::NonFinite);
+    }
+    let e = floor_log2(m);
+    // An iterate at 2^1023 is a blow-up in all but name (a diverging fp16
+    // trajectory can get here while still finite): normalizing it would
+    // need 2^-1023, outside `exp2i`'s exact domain — stall instead.
+    if e >= 1023 {
+        return Ok(Matvec::NonFinite);
+    }
+    let shift = -e;
+    let up = exp2i(shift);
+    let down = exp2i(-shift);
+    let scaled =
+        Mat::from_vec(p.rows, p.cols, p.data.iter().map(|&v| (v * up) as f32).collect());
+    let q = backend.gemm(a, &scaled)?;
+    let out = MatF64 {
+        rows: q.rows,
+        cols: q.cols,
+        data: q.data.iter().map(|&v| v as f64 * down).collect(),
+    };
+    if out.data.iter().any(|v| !v.is_finite()) {
+        return Ok(Matvec::NonFinite);
+    }
+    Ok(Matvec::Out(out))
+}
+
+/// `R = B − A·X` and `‖R‖_F / ‖B‖_F`, computed entirely in f64 on the
+/// host from the exact f32 problem data — the verification oracle of
+/// every trajectory (`SolveReport::true_resid`).
+pub fn residual_f64(a: &Mat, x: &MatF64, b: &Mat) -> (MatF64, f64) {
+    assert_eq!(a.cols, x.rows);
+    assert_eq!((a.rows, x.cols), (b.rows, b.cols));
+    let (n, nrhs, k) = (a.rows, x.cols, a.cols);
+    let mut r = MatF64::zeros(n, nrhs);
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for i in 0..n {
+        for j in 0..nrhs {
+            let mut acc = 0.0f64;
+            for l in 0..k {
+                acc += a.get(i, l) as f64 * x.get(l, j);
+            }
+            let rv = b.get(i, j) as f64 - acc;
+            r.set(i, j, rv);
+            num += rv * rv;
+        }
+    }
+    for &bv in &b.data {
+        den += bv as f64 * bv as f64;
+    }
+    let rel = if den == 0.0 {
+        if num == 0.0 { 0.0 } else { f64::INFINITY }
+    } else {
+        (num / den).sqrt()
+    };
+    (r, rel)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::{Method, TileConfig};
+    use crate::matgen::urand;
+    use crate::solver::DirectBackend;
+
+    #[test]
+    fn floor_log2_matches_exponent() {
+        for (x, e) in [(1.0, 0), (1.99, 0), (2.0, 1), (0.5, -1), (3e-20, -65)] {
+            assert_eq!(floor_log2(x), e, "x={x}");
+        }
+    }
+
+    #[test]
+    fn matvec_scaling_is_exact_for_pow2_scaled_inputs() {
+        // A matvec of P and of P·2^-40 must give results that differ by
+        // exactly 2^-40 bit-for-bit: the normalization makes the backend
+        // see the identical f32 operand.
+        let be = DirectBackend::with_tile(Method::OursHalfHalf, TileConfig::default());
+        let a = urand(16, 16, -1.0, 1.0, 1);
+        let p = urand(16, 4, -1.0, 1.0, 2);
+        let p64 = MatF64 {
+            rows: 16,
+            cols: 4,
+            data: p.data.iter().map(|&v| v as f64).collect(),
+        };
+        let tiny = MatF64 {
+            rows: 16,
+            cols: 4,
+            data: p64.data.iter().map(|&v| v * exp2i(-40)).collect(),
+        };
+        let Ok(Matvec::Out(q)) = matvec_f32(&be, &a, &p64) else { panic!("matvec failed") };
+        let Ok(Matvec::Out(qt)) = matvec_f32(&be, &a, &tiny) else { panic!("matvec failed") };
+        for (x, y) in q.data.iter().zip(&qt.data) {
+            assert_eq!(x.to_bits(), (y * exp2i(40)).to_bits());
+        }
+    }
+
+    #[test]
+    fn matvec_zero_and_nonfinite_inputs() {
+        let be = DirectBackend::new(Method::Fp32Simt);
+        let a = urand(8, 8, -1.0, 1.0, 3);
+        let zero = MatF64::zeros(8, 2);
+        assert!(matches!(matvec_f32(&be, &a, &zero), Ok(Matvec::ZeroInput)));
+        let mut bad = MatF64::zeros(8, 2);
+        bad.set(0, 0, f64::NAN);
+        assert!(matches!(matvec_f32(&be, &a, &bad), Ok(Matvec::NonFinite)));
+        // Finite but at f64's top exponent: a blow-up in all but name —
+        // must stall, not panic exp2i's domain assert (or silently zero).
+        let mut huge = MatF64::zeros(8, 2);
+        huge.set(0, 0, f64::MAX); // exponent 1023: shifting back needs 2^-1023
+        assert!(matches!(matvec_f32(&be, &a, &huge), Ok(Matvec::NonFinite)));
+    }
+
+    #[test]
+    fn residual_of_exact_solution_is_tiny() {
+        let a = urand(12, 12, -1.0, 1.0, 4);
+        let x = urand(12, 3, -1.0, 1.0, 5);
+        let bx = crate::gemm::gemm_f64(&a, &x);
+        let b = Mat::from_vec(12, 3, bx.data.iter().map(|&v| v as f32).collect());
+        let x64 = MatF64 {
+            rows: 12,
+            cols: 3,
+            data: x.data.iter().map(|&v| v as f64).collect(),
+        };
+        let (_, rel) = residual_f64(&a, &x64, &b);
+        // Only B's f32 store rounds; the residual sits at that level.
+        assert!(rel < 1e-6, "rel {rel}");
+    }
+}

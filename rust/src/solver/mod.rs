@@ -1,0 +1,226 @@
+//! L2.7: mixed-precision iterative solvers over the GEMM substrate — the
+//! paper's headline application ("preconditioners for iterative solvers …
+//! can exploit these Tensor Cores") made end-to-end runnable.
+//!
+//! Two dense block solvers for `A·X = B` (`B` an `n×nrhs` block, so the
+//! inner operation is a real GEMM, not a GEMV):
+//!
+//! * [`solve_cg`] — conjugate gradients for SPD systems. Solver state
+//!   (X, R, P) lives in **f64 on the host**; the one heavy operation per
+//!   iteration — the matvec `Q = A·P` — runs in f32 through a
+//!   [`Backend`]. The residual is tracked by the standard CG recurrence
+//!   (`R -= α·Q`), and every iteration additionally records the
+//!   FP64-verified true residual `‖B − A·X‖_F / ‖B‖_F` — the honest
+//!   Fig.-1-style convergence metric that exposes where an inaccurate
+//!   matvec stalls even when the recurrence keeps shrinking.
+//! * [`solve_jacobi`] — Jacobi-preconditioned iterative refinement
+//!   (Richardson iteration `X += D⁻¹·(B − A·X)`) for diagonally-dominant
+//!   systems, with the residual GEMM `A·X` on the backend. Converges at
+//!   rate ≤ ρ per iteration for [`crate::matgen::diag_dominant`]'s
+//!   dominance ratio ρ, down to the backend's accuracy floor.
+//!
+//! The [`Backend`] abstraction is the point: the *same* solve runs
+//! in-process ([`DirectBackend`] over [`crate::gemm::Method`]) or through
+//! the full service ([`ServiceBackend`] over an [`crate::api::Session`] —
+//! planner, shard engine and SplitCache engaged). The simulator is
+//! bit-exact, so the two trajectories must be **bit-identical**
+//! ([`SolveReport::bit_identical`]) — the solver is the deepest
+//! whole-stack determinism test in the repo (DESIGN.md §11;
+//! `rust/tests/solver.rs`).
+//!
+//! Why corrected methods matter here (Markidis et al. 2018; Ootomo &
+//! Yokota 2022): a plain FP16-Tensor-Core matvec carries a ~1e-3-level
+//! relative error into every Krylov direction, and the *true* residual of
+//! CG can never fall below that contamination — `cublas_fp16tc` stalls
+//! around 1e-2..1e-3 where `ours_f16tc` (= `cutlass_halfhalf`) tracks
+//! `cublas_simt` to its 1e-6..1e-7 floor. `tcec solve` and
+//! `experiments::solver_residual` reproduce the contrast.
+
+pub mod backend;
+pub mod cg;
+pub mod ir;
+pub mod mixed;
+
+pub use backend::{Backend, DirectBackend, ServiceBackend};
+pub use cg::solve_cg;
+pub use ir::solve_jacobi;
+pub use mixed::{matvec_f32, residual_f64};
+
+use crate::gemm::{Mat, MatF64};
+
+/// Which solver [`solve`] runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algo {
+    /// Conjugate gradients (SPD systems).
+    Cg,
+    /// Jacobi-preconditioned iterative refinement (diagonally-dominant
+    /// systems).
+    JacobiIr,
+}
+
+impl Algo {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algo::Cg => "cg",
+            Algo::JacobiIr => "jacobi_ir",
+        }
+    }
+
+    /// CLI-facing parse; unknown names list the valid ones.
+    pub fn parse_or_list(s: &str) -> Result<Algo, String> {
+        match s {
+            "cg" => Ok(Algo::Cg),
+            "ir" | "jacobi" | "jacobi_ir" => Ok(Algo::JacobiIr),
+            other => Err(format!("unknown algo `{other}` — valid: cg, ir")),
+        }
+    }
+}
+
+/// Solver knobs. `tol` applies to the residual the algorithm itself tracks
+/// (CG recurrence / IR's backend residual) — the FP64-verified trajectory
+/// is recorded alongside either way.
+#[derive(Debug, Clone, Copy)]
+pub struct SolverConfig {
+    /// Relative-residual convergence target (`‖r‖_F / ‖b‖_F`). `0.0`
+    /// never converges — useful to pin an exact iteration count.
+    pub tol: f64,
+    /// Iteration cap; hitting it leaves `converged == false`.
+    pub max_iters: usize,
+}
+
+impl Default for SolverConfig {
+    fn default() -> Self {
+        SolverConfig { tol: 1e-6, max_iters: 500 }
+    }
+}
+
+/// How a solve can fail *structurally*. Numerical breakdown (a non-finite
+/// iterate, a lost search direction) is NOT an error — it ends the
+/// iteration with [`SolveReport::stalled`] set, because a stalling
+/// trajectory is exactly the artifact the fp16 baseline produces.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SolveError {
+    /// The execution backend refused or failed a GEMM (service rejection,
+    /// deadline, executor failure …).
+    Backend(String),
+}
+
+impl std::fmt::Display for SolveError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SolveError::Backend(e) => write!(f, "solver backend error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for SolveError {}
+
+/// One finished solve: the f64 iterate plus both residual trajectories.
+#[derive(Debug, Clone)]
+pub struct SolveReport {
+    /// The final iterate (host-precision f64).
+    pub x: MatF64,
+    /// Per-iteration residual as the *solver* sees it: the CG recurrence
+    /// `‖R‖_F/‖B‖_F` after each update, or IR's backend-computed
+    /// `‖B − A·X‖_F/‖B‖_F` of each measured iterate (entry 1 is the
+    /// initial residual, exactly 1 at X₀ = 0). Drives the `tol` stopping
+    /// test; `resid[i]` and `true_resid[i]` always describe the same X.
+    pub resid: Vec<f64>,
+    /// Per-iteration FP64-verified true residual `‖B − A·X‖_F/‖B‖_F`,
+    /// computed on the host from the exact f32 problem data. For accurate
+    /// backends the two trajectories agree; for fp16 this one exposes the
+    /// stall.
+    pub true_resid: Vec<f64>,
+    /// Iterations performed.
+    pub iters: usize,
+    /// `resid` reached `tol`.
+    pub converged: bool,
+    /// The iteration broke down (non-finite iterate or lost direction)
+    /// before `max_iters`/`tol`.
+    pub stalled: bool,
+    /// Backend GEMM calls issued (one per iteration unless the input of a
+    /// matvec was exactly zero).
+    pub matvecs: usize,
+}
+
+impl SolveReport {
+    /// Final solver-view residual (`f64::INFINITY` when no iteration ran).
+    pub fn final_resid(&self) -> f64 {
+        self.resid.last().copied().unwrap_or(f64::INFINITY)
+    }
+
+    /// Final FP64-verified residual.
+    pub fn final_true_resid(&self) -> f64 {
+        self.true_resid.last().copied().unwrap_or(f64::INFINITY)
+    }
+
+    /// Smallest FP64-verified residual seen anywhere in the trajectory —
+    /// the stall-floor metric (a stalled solve may bounce around it).
+    pub fn best_true_resid(&self) -> f64 {
+        self.true_resid.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    /// Bit-level equality of two solves: same iteration count and flags,
+    /// and both trajectories *and* the final iterate identical bit for
+    /// bit. This is the whole-stack determinism oracle: the same solve
+    /// run through [`DirectBackend`] and through the full service
+    /// (planner + shard + SplitCache) must satisfy it.
+    pub fn bit_identical(&self, other: &SolveReport) -> bool {
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        self.iters == other.iters
+            && self.converged == other.converged
+            && self.stalled == other.stalled
+            && self.matvecs == other.matvecs
+            && bits(&self.resid) == bits(&other.resid)
+            && bits(&self.true_resid) == bits(&other.true_resid)
+            && (self.x.rows, self.x.cols) == (other.x.rows, other.x.cols)
+            && bits(&self.x.data) == bits(&other.x.data)
+    }
+}
+
+/// Run `algo` on `A·X = B` over `backend`.
+pub fn solve(
+    algo: Algo,
+    a: &Mat,
+    b: &Mat,
+    backend: &dyn Backend,
+    cfg: &SolverConfig,
+) -> Result<SolveReport, SolveError> {
+    match algo {
+        Algo::Cg => solve_cg(a, b, backend, cfg),
+        Algo::JacobiIr => solve_jacobi(a, b, backend, cfg),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn algo_names_parse() {
+        assert_eq!(Algo::parse_or_list("cg"), Ok(Algo::Cg));
+        assert_eq!(Algo::parse_or_list("ir"), Ok(Algo::JacobiIr));
+        assert_eq!(Algo::parse_or_list("jacobi"), Ok(Algo::JacobiIr));
+        assert!(Algo::parse_or_list("gmres").unwrap_err().contains("cg"));
+    }
+
+    #[test]
+    fn report_helpers() {
+        let r = SolveReport {
+            x: MatF64::zeros(1, 1),
+            resid: vec![0.5, 1e-7],
+            true_resid: vec![0.6, 2e-7],
+            iters: 2,
+            converged: true,
+            stalled: false,
+            matvecs: 2,
+        };
+        assert_eq!(r.final_resid(), 1e-7);
+        assert_eq!(r.final_true_resid(), 2e-7);
+        assert_eq!(r.best_true_resid(), 2e-7);
+        assert!(r.bit_identical(&r.clone()));
+        let mut other = r.clone();
+        other.true_resid[1] = 2.0000001e-7;
+        assert!(!r.bit_identical(&other));
+    }
+}

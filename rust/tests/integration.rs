@@ -142,10 +142,11 @@ fn service_mixed_load_audit() {
 }
 
 /// Manually-opened gate + stalling executor (mirrors the standalone
-/// `StallExecutor` in `tests/api.rs` — integration tests cannot share
-/// test-binary modules without a common crate): the sole worker parks
-/// inside `execute` until the test opens the gate, making
-/// admission/cancel/expiry windows deterministic.
+/// `StallExecutor` in `tests/api.rs`; the two copies could be merged via
+/// the `tests/common/mod.rs` pattern — left duplicated for now to keep
+/// each test binary self-contained): the sole worker parks inside
+/// `execute` until the test opens the gate, making admission/cancel/
+/// expiry windows deterministic.
 struct GatedExecutor {
     gate: Arc<(std::sync::Mutex<bool>, std::sync::Condvar)>,
     inner: SimExecutor,

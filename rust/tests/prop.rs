@@ -9,8 +9,9 @@ use tcec::fp::{
     Rounding,
 };
 use tcec::gemm::{
-    apply_scale, descale_pow2, gemm_f64, gemm_tiled, plan_scale, relative_residual, Mat, Method,
-    SimtBackend, TileConfig,
+    apply_scale, c_relative_residual, cgemm, cgemm_f64, descale_pow2, gemm_f64, gemm_tiled,
+    ozaki_gemm, plan_scale, relative_residual, slice_bits, slices_for_fp32, CMat, CgemmAlgo, Mat,
+    Method, SimtBackend, TileConfig,
 };
 use tcec::matgen::Rng;
 use tcec::shard;
@@ -443,6 +444,122 @@ fn prop_run_prepared_bit_identical_to_run_all_methods() {
             oracle(&a, &b2).data,
             "{}: reused prepared A diverged",
             method.name()
+        );
+    }
+}
+
+/// INVARIANT (split-complex CGEMM): on small-integer inputs every
+/// arithmetic step of both decompositions is exact — the splits, the
+/// Tensor-Core accumulations (integers far below the 25-bit accumulator),
+/// and the final adds — so 3M and 4M must agree BIT FOR BIT for EVERY
+/// method. On random real inputs, 3M's Karatsuba cancellation costs at
+/// most a small constant factor over 4M, and both corrected methods stay
+/// at the FP32 error level.
+#[test]
+fn prop_cgemm_3m_vs_4m_bit_identity_and_error_bounds() {
+    let cfg = TileConfig::default();
+    let mut rng = Rng::new(0xC03A);
+    // Part 1: integer inputs → bit identity, all 13 methods.
+    for (round, &method) in Method::ALL.iter().enumerate() {
+        let m = 1 + rng.int_in(0, 11) as usize;
+        let k = 1 + rng.int_in(0, 15) as usize;
+        let n = 1 + rng.int_in(0, 11) as usize;
+        let mut s = 0x1AB + round as u64;
+        let mut int_mat = |r: usize, c: usize| {
+            Mat::from_fn(r, c, |_, _| {
+                s = s.wrapping_mul(6364136223846793005).wrapping_add(1);
+                ((s >> 33) % 9) as f32 - 4.0 // integers in [-4, 4]
+            })
+        };
+        let x = CMat { re: int_mat(m, k), im: int_mat(m, k) };
+        let y = CMat { re: int_mat(k, n), im: int_mat(k, n) };
+        let c4 = cgemm(&x, &y, method, CgemmAlgo::FourM, &cfg);
+        let c3 = cgemm(&x, &y, method, CgemmAlgo::ThreeM, &cfg);
+        assert_eq!(
+            c4.re.data,
+            c3.re.data,
+            "{}: Re(3M) != Re(4M) on exact inputs at {m}x{k}x{n}",
+            method.name()
+        );
+        assert_eq!(
+            c4.im.data,
+            c3.im.data,
+            "{}: Im(3M) != Im(4M) on exact inputs at {m}x{k}x{n}",
+            method.name()
+        );
+    }
+    // Part 2: random inputs → bounded 3M cancellation, FP32-level
+    // accuracy for the corrected methods.
+    for round in 0..6u64 {
+        let nn = 16 + 8 * (round as usize % 3);
+        let cmat = |seed: u64| CMat {
+            re: tcec::matgen::urand(nn, nn, -1.0, 1.0, seed),
+            im: tcec::matgen::urand(nn, nn, -1.0, 1.0, seed + 77),
+        };
+        let x = cmat(1000 + round);
+        let y = cmat(2000 + round);
+        let r = cgemm_f64(&x, &y);
+        let simt =
+            c_relative_residual(&r, &cgemm(&x, &y, Method::Fp32Simt, CgemmAlgo::FourM, &cfg));
+        for method in [Method::OursHalfHalf, Method::OursTf32, Method::Markidis] {
+            let e4 = c_relative_residual(&r, &cgemm(&x, &y, method, CgemmAlgo::FourM, &cfg));
+            let e3 = c_relative_residual(&r, &cgemm(&x, &y, method, CgemmAlgo::ThreeM, &cfg));
+            assert!(
+                e3 <= 4.0 * e4 + 1e-12,
+                "{}: 3M {e3} vs 4M {e4} at n={nn} (cancellation bound)",
+                method.name()
+            );
+            if method != Method::Markidis {
+                assert!(
+                    e4 <= 3.0 * simt && e3 <= 4.0 * simt,
+                    "{}: 4M {e4} / 3M {e3} vs simt {simt}",
+                    method.name()
+                );
+            }
+        }
+    }
+}
+
+/// INVARIANT (Ozaki scheme): the slice count trades exactness for GEMM
+/// terms. With the full `slices_for_fp32(slice_bits(k))` count the scheme
+/// is an error-free transformation down to the final FP32 store (≤ the
+/// SGEMM residual level); each added slice shrinks the dropped tail by
+/// 2^-β so the error never grows (up to store-rounding jitter); and one
+/// slice alone is orders of magnitude worse than the full count.
+#[test]
+fn prop_ozaki_slice_count_vs_exactness() {
+    let cfg = TileConfig::default();
+    let mut rng = Rng::new(0x02A7);
+    for &k in &[64usize, 256, 777] {
+        let m = 4 + rng.int_in(0, 8) as usize;
+        let n = 4 + rng.int_in(0, 8) as usize;
+        let a = tcec::matgen::urand(m, k, -1.0, 1.0, 3000 + k as u64);
+        let b = tcec::matgen::urand(k, n, -1.0, 1.0, 4000 + k as u64);
+        let r = gemm_f64(&a, &b);
+        let beta = slice_bits(k);
+        let s_full = slices_for_fp32(beta);
+        assert!(s_full >= 2, "k={k}: β={beta} must need multiple slices for FP32");
+        let errs: Vec<f64> = (1..=s_full + 1)
+            .map(|s| relative_residual(&r, &ozaki_gemm(&a, &b, s)))
+            .collect();
+        // Full slice count: error-free transformation, at/below SGEMM.
+        let simt = relative_residual(&r, &Method::Fp32Simt.run(&a, &b, &cfg));
+        assert!(
+            errs[s_full - 1] <= 1.5 * simt + 1e-12,
+            "k={k}: full {} slices give {} vs simt {simt}",
+            s_full,
+            errs[s_full - 1]
+        );
+        // More slices never hurt (slack covers the f32 store floor).
+        for w in errs.windows(2) {
+            assert!(w[1] <= w[0] + 1e-7, "k={k}: error grew {} -> {}", w[0], w[1]);
+        }
+        // One slice is a coarse 2^-β quantization — orders worse.
+        assert!(
+            errs[0] > 20.0 * errs[s_full - 1].max(1e-9),
+            "k={k}: 1 slice {} vs full {}",
+            errs[0],
+            errs[s_full - 1]
         );
     }
 }
