@@ -9,6 +9,12 @@
 //!
 //! Run: `cargo bench --bench api_overhead` (`-- --smoke` for the CI smoke
 //! lane).
+//!
+//! Note on the contended mode: `Metrics` tallies are plain relaxed
+//! `AtomicU64`s (a mutex guards only the composite per-method map and
+//! registered handles), so the background-traffic thread no longer
+//! serializes with the measured rounds on a metrics lock — the contended
+//! delta here reflects intake/batcher interleaving, not counter updates.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;

@@ -1,0 +1,72 @@
+//! §Perf telemetry overhead bench: what full observability (stage-span
+//! tracing into the ring + the numerical-health counters, DESIGN.md §12)
+//! costs on the served request path versus the same service with
+//! telemetry off. The instrumented path adds a handful of `Instant`
+//! reads, relaxed atomic bumps and one short ring-mutex hold per stage —
+//! the target is under 5% per request at n = 256 (printed, not
+//! asserted: CI boxes are noisy).
+//!
+//! Run: `cargo bench --bench telemetry_overhead` (`-- --smoke` for the
+//! CI smoke lane).
+
+use std::sync::Arc;
+use tcec::bench_util::{bench, bench_params, smoke, Table};
+use tcec::coordinator::{GemmService, Policy, SimExecutor};
+use tcec::gemm::Method;
+use tcec::telemetry::TelemetryConfig;
+
+/// Requests per measured batch (amortizes clock overhead).
+const REQS: usize = 16;
+
+fn service(telemetry: TelemetryConfig) -> GemmService {
+    // Fp32Simt forced: the cheapest backend, so the per-request telemetry
+    // cost is the largest possible fraction of the measured time.
+    GemmService::builder()
+        .workers(2)
+        .max_batch(8)
+        .queue_cap(4096)
+        .force_method(Method::Fp32Simt)
+        .telemetry(telemetry)
+        .build(Arc::new(SimExecutor::new()))
+}
+
+/// One measured round: REQS submits, then wait all.
+fn round(svc: &GemmService, n: usize, seed: u64) {
+    use tcec::matgen::urand;
+    let tickets: Vec<_> = (0..REQS as u64)
+        .map(|i| {
+            svc.call(urand(n, n, -1.0, 1.0, seed + i), urand(n, n, -1.0, 1.0, seed + i + 500))
+                .policy(Policy::StrictFp32)
+                .submit()
+                .expect("admitted")
+        })
+        .collect();
+    for t in tickets {
+        t.wait().expect("served");
+    }
+}
+
+fn main() {
+    let sizes: &[usize] = if smoke() { &[16] } else { &[64, 256] };
+    let (wu, mi, mt) = bench_params(1, 3, 0.3);
+    println!("== telemetry overhead: tracing+counters on vs off ==");
+    println!("   ({REQS} requests per round, Fp32Simt forced, 2 workers; target < 5% at n=256)\n");
+    let mut t = Table::new(&["n", "off us/req", "on us/req", "delta"]);
+    for &n in sizes {
+        let svc_off = service(TelemetryConfig::default());
+        let s_off = bench(|| round(&svc_off, n, 1), wu, mi, mt);
+        svc_off.shutdown();
+        let svc_on = service(TelemetryConfig::full());
+        let s_on = bench(|| round(&svc_on, n, 1), wu, mi, mt);
+        svc_on.shutdown();
+        let off = s_off.median_s / REQS as f64 * 1e6;
+        let on = s_on.median_s / REQS as f64 * 1e6;
+        t.row(&[
+            n.to_string(),
+            format!("{off:.1}"),
+            format!("{on:.1}"),
+            format!("{:+.1}%", (on / off - 1.0) * 100.0),
+        ]);
+    }
+    t.print();
+}

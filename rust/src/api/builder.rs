@@ -8,6 +8,7 @@ use crate::coordinator::service::{Executor, GemmService, ServiceConfig};
 use crate::gemm::Method;
 use crate::planner::PlannerConfig;
 use crate::shard::ShardConfig;
+use crate::telemetry::TelemetryConfig;
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -89,6 +90,15 @@ impl ServiceBuilder {
     /// split operands (e.g. pure PJRT artifact execution).
     pub fn split_cache(mut self, capacity: usize) -> Self {
         self.cfg.split_cache = Some(capacity);
+        self
+    }
+
+    /// Observability (DESIGN.md §12): request tracing into a bounded span
+    /// ring and/or the numerical-health counters. Off by default;
+    /// `TelemetryConfig::full()` turns everything on. Guaranteed not to
+    /// change a single output bit either way.
+    pub fn telemetry(mut self, telemetry: TelemetryConfig) -> Self {
+        self.cfg.telemetry = telemetry;
         self
     }
 

@@ -1,47 +1,89 @@
-//! Service metrics: request counts, per-backend tallies, flop throughput
-//! and a coarse latency histogram. Lock-free reads are not needed at this
-//! scale; a mutexed inner keeps it simple and safe.
+//! Service metrics: request counts, per-backend tallies, flop throughput,
+//! a log-spaced latency histogram, per-stage span statistics and the
+//! numerical-health counters (DESIGN.md §12).
+//!
+//! Monotone tallies are plain relaxed [`AtomicU64`]s — the serving hot
+//! path (`on_submit`, `on_complete`, `on_batch`) never takes a lock, which
+//! is what keeps the metrics overhead invisible under worker contention
+//! (see `benches/api_overhead.rs --contended`). The mutex survives only
+//! for genuine composites: the per-method map and the registered
+//! cache/planner/tracer handles, all off the per-request path or touched
+//! once per snapshot.
 
+use super::policy::RangeClass;
 use super::splitcache::SplitCache;
 use crate::gemm::Method;
+use crate::telemetry::numeric::NumericSnapshot;
+use crate::telemetry::{HistogramSnapshot, LogHistogram, Stage, StageStats, Tracer, NUM_STAGES};
 use std::collections::HashMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-/// Latency histogram bucket upper bounds (seconds).
-const BUCKETS: [f64; 8] = [1e-4, 3e-4, 1e-3, 3e-3, 1e-2, 3e-2, 1e-1, f64::INFINITY];
+/// Exposition labels for the four [`RangeClass`]es, in tally order.
+pub const RANGE_CLASS_NAMES: [&str; 4] =
+    ["halfhalf_exact", "halfhalf_degraded", "needs_wide_exponent", "extreme"];
 
+fn class_idx(c: RangeClass) -> usize {
+    match c {
+        RangeClass::HalfHalfExact => 0,
+        RangeClass::HalfHalfDegraded => 1,
+        RangeClass::NeedsWideExponent => 2,
+        RangeClass::Extreme => 3,
+    }
+}
+
+/// The monotone counters. Every field only ever increases (or, for
+/// `reduction_depth_max`, ratchets via `fetch_max`), so relaxed ordering
+/// is sufficient: a snapshot is a set of independently-read tallies, not
+/// a consistent cut.
 #[derive(Debug, Default)]
-struct Inner {
-    requests: u64,
-    completed: u64,
-    failed: u64,
-    rejected: u64,
-    expired: u64,
-    cancelled: u64,
-    flops: u64,
-    per_method: HashMap<&'static str, u64>,
-    latency_buckets: [u64; 8],
-    latency_total: Duration,
-    batches: u64,
-    batched_requests: u64,
-    sharded_gemms: u64,
-    shards_executed: u64,
-    shard_steals: u64,
-    reduction_depth_max: u64,
-    shard_fallbacks: u64,
+struct Counters {
+    requests: AtomicU64,
+    completed: AtomicU64,
+    failed: AtomicU64,
+    rejected: AtomicU64,
+    expired: AtomicU64,
+    cancelled: AtomicU64,
+    flops: AtomicU64,
+    batches: AtomicU64,
+    batched_requests: AtomicU64,
+    sharded_gemms: AtomicU64,
+    shards_executed: AtomicU64,
+    shard_steals: AtomicU64,
+    reduction_depth_max: AtomicU64,
+    shard_fallbacks: AtomicU64,
+    range_classes: [AtomicU64; 4],
 }
 
 /// Shared metrics sink.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct Metrics {
-    inner: Mutex<Inner>,
+    c: Counters,
+    /// End-to-end request latency in nanoseconds, log-spaced (replaces the
+    /// old coarse 8-bucket seconds histogram).
+    latency: LogHistogram,
+    per_method: Mutex<HashMap<&'static str, u64>>,
     /// The executor's operand split cache, when it has one — registered by
     /// the service at startup so snapshots can surface hit/miss counters.
     split_cache: Mutex<Option<Arc<SplitCache>>>,
     /// The service's execution planner, when one is enabled — registered
     /// at startup so snapshots surface its plan/probe cache counters.
     planner: Mutex<Option<Arc<crate::planner::Planner>>>,
+    /// The service's request tracer, when tracing is enabled — registered
+    /// at startup so snapshots surface per-stage span statistics.
+    tracer: Mutex<Option<Arc<Tracer>>>,
+    /// Baseline of the process-global numeric counters, captured when the
+    /// service enables numeric telemetry; snapshots report the delta since
+    /// then (the sink is shared by every enabled service in the process).
+    numeric_base: Mutex<Option<NumericSnapshot>>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics::new()
+    }
 }
 
 /// A point-in-time metrics snapshot for reporting.
@@ -65,9 +107,21 @@ pub struct Snapshot {
     pub cancelled: u64,
     pub flops: u64,
     pub per_method: Vec<(&'static str, u64)>,
-    pub latency_buckets: [u64; 8],
+    /// End-to-end request latency, log-spaced in nanoseconds. Quantiles
+    /// are conservative bucket upper bounds (≤ 2x; `telemetry::hist`).
+    pub latency: HistogramSnapshot,
     pub mean_latency: Duration,
+    /// Batches handed to a worker for execution.
+    pub batches: u64,
+    /// Requests those batches carried (`batched_requests / batches` is the
+    /// true mean executed batch size).
+    pub batched_requests: u64,
+    /// Mean executed batch size: requests per emitted batch, each batch
+    /// counted ONCE (`on_batch`), not once per member request.
     pub mean_batch_size: f64,
+    /// Requests per combined probe [`RangeClass`], indexed like
+    /// [`RANGE_CLASS_NAMES`] (planner mode only; all zero otherwise).
+    pub range_classes: [u64; 4],
     /// GEMMs that took the sharded path (see `shard::ShardedExecutor`).
     pub sharded_gemms: u64,
     /// Total shards executed across all sharded GEMMs.
@@ -93,15 +147,34 @@ pub struct Snapshot {
     pub probe_cache_hits: u64,
     /// Operands the planner actually probed (sampled; 0 when no planner).
     pub probe_cache_misses: u64,
+    /// Spans recorded per [`Stage`] (includes ring-evicted spans; all zero
+    /// when tracing is off).
+    pub stage_spans: [u64; NUM_STAGES],
+    /// Count + p50/p95/p99 for every stage that recorded at least one
+    /// span (empty when tracing is off).
+    pub stage_stats: Vec<StageStats>,
+    /// Spans evicted from the bounded trace ring (0 = full history kept).
+    pub dropped_spans: u64,
+    /// Numerical-health counters accumulated since the service enabled
+    /// numeric telemetry (`None` when it never did).
+    pub numeric: Option<NumericSnapshot>,
 }
 
 impl Metrics {
     pub fn new() -> Metrics {
-        Metrics::default()
+        Metrics {
+            c: Counters::default(),
+            latency: LogHistogram::new(),
+            per_method: Mutex::new(HashMap::new()),
+            split_cache: Mutex::new(None),
+            planner: Mutex::new(None),
+            tracer: Mutex::new(None),
+            numeric_base: Mutex::new(None),
+        }
     }
 
     pub fn on_submit(&self) {
-        self.inner.lock().unwrap().requests += 1;
+        self.c.requests.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record `n` requests whose batch's executor panicked (each client
@@ -109,22 +182,22 @@ impl Metrics {
     /// `requests == completed + failed + expired + cancelled` identity
     /// intact.
     pub fn on_failed(&self, n: usize) {
-        self.inner.lock().unwrap().failed += n as u64;
+        self.c.failed.fetch_add(n as u64, Ordering::Relaxed);
     }
 
     /// Record one submission load-shed at admission (`QueueFull`).
     pub fn on_rejected(&self) {
-        self.inner.lock().unwrap().rejected += 1;
+        self.c.rejected.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record `n` admitted requests dropped on deadline expiry.
     pub fn on_expired(&self, n: usize) {
-        self.inner.lock().unwrap().expired += n as u64;
+        self.c.expired.fetch_add(n as u64, Ordering::Relaxed);
     }
 
     /// Record `n` admitted requests dropped on client cancellation.
     pub fn on_cancelled(&self, n: usize) {
-        self.inner.lock().unwrap().cancelled += n as u64;
+        self.c.cancelled.fetch_add(n as u64, Ordering::Relaxed);
     }
 
     /// Surface a [`SplitCache`]'s hit/miss counters in future snapshots.
@@ -137,32 +210,53 @@ impl Metrics {
         *self.planner.lock().unwrap() = Some(planner);
     }
 
-    pub fn on_complete(&self, method: Method, flops: u64, latency: Duration, batch_size: usize) {
-        let mut g = self.inner.lock().unwrap();
-        g.completed += 1;
-        g.flops += flops;
-        *g.per_method.entry(method.name()).or_default() += 1;
-        let s = latency.as_secs_f64();
-        let idx = BUCKETS.iter().position(|&b| s <= b).unwrap_or(BUCKETS.len() - 1);
-        g.latency_buckets[idx] += 1;
-        g.latency_total += latency;
-        g.batched_requests += batch_size as u64;
-        if batch_size > 0 {
-            g.batches += 1;
-        }
+    /// Surface a tracer's per-stage span statistics in future snapshots.
+    pub fn register_tracer(&self, tracer: Arc<Tracer>) {
+        *self.tracer.lock().unwrap() = Some(tracer);
+    }
+
+    /// Start reporting the process-global numerical-health counters as a
+    /// delta from this instant (called by the service when numeric
+    /// telemetry is enabled).
+    pub fn enable_numeric(&self) {
+        *self.numeric_base.lock().unwrap() = Some(NumericSnapshot::capture());
+    }
+
+    /// Record one completed request. Batch membership is accounted
+    /// separately ([`Metrics::on_batch`]) — a request contributes here
+    /// exactly once regardless of how it was batched.
+    pub fn on_complete(&self, method: Method, flops: u64, latency: Duration) {
+        self.c.completed.fetch_add(1, Ordering::Relaxed);
+        self.c.flops.fetch_add(flops, Ordering::Relaxed);
+        self.latency.record(latency.as_nanos().min(u64::MAX as u128) as u64);
+        *self.per_method.lock().unwrap().entry(method.name()).or_default() += 1;
+    }
+
+    /// Record one batch of `n` requests handed to a worker for execution
+    /// — called ONCE per batch, which is what makes
+    /// `Snapshot::mean_batch_size` the true requests-per-batch mean (the
+    /// old accounting bumped the batch count once per member request,
+    /// weighting the mean toward large batches).
+    pub fn on_batch(&self, n: usize) {
+        self.c.batches.fetch_add(1, Ordering::Relaxed);
+        self.c.batched_requests.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    /// Record one request's combined probe classification (planner mode).
+    pub fn on_range_class(&self, class: RangeClass) {
+        self.c.range_classes[class_idx(class)].fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record one sharded GEMM: how many shards completed, the work-steals
     /// it observed, its k-reduction depth, and whether it degraded to the
     /// unsharded fallback.
     pub fn on_sharded_gemm(&self, shards: u64, steals: u64, reduction_depth: u64, fell_back: bool) {
-        let mut g = self.inner.lock().unwrap();
-        g.sharded_gemms += 1;
-        g.shards_executed += shards;
-        g.shard_steals += steals;
-        g.reduction_depth_max = g.reduction_depth_max.max(reduction_depth);
+        self.c.sharded_gemms.fetch_add(1, Ordering::Relaxed);
+        self.c.shards_executed.fetch_add(shards, Ordering::Relaxed);
+        self.c.shard_steals.fetch_add(steals, Ordering::Relaxed);
+        self.c.reduction_depth_max.fetch_max(reduction_depth, Ordering::Relaxed);
         if fell_back {
-            g.shard_fallbacks += 1;
+            self.c.shard_fallbacks.fetch_add(1, Ordering::Relaxed);
         }
     }
 
@@ -181,35 +275,61 @@ impl Metrics {
                 ),
                 None => (0, 0, 0, 0),
             };
-        let g = self.inner.lock().unwrap();
+        let (stage_spans, stage_stats, dropped_spans) = match &*self.tracer.lock().unwrap() {
+            Some(t) => {
+                let mut counts = [0u64; NUM_STAGES];
+                for s in Stage::ALL {
+                    counts[s as usize] = t.span_count(s);
+                }
+                (counts, t.stage_stats(), t.dropped())
+            }
+            None => ([0; NUM_STAGES], Vec::new(), 0),
+        };
+        let numeric = self
+            .numeric_base
+            .lock()
+            .unwrap()
+            .as_ref()
+            .map(|base| NumericSnapshot::capture().delta(base));
         let mut per_method: Vec<(&'static str, u64)> =
-            g.per_method.iter().map(|(k, v)| (*k, *v)).collect();
+            self.per_method.lock().unwrap().iter().map(|(k, v)| (*k, *v)).collect();
         per_method.sort();
+        let latency = self.latency.snapshot();
+        let completed = self.c.completed.load(Ordering::Relaxed);
+        let batches = self.c.batches.load(Ordering::Relaxed);
+        let batched_requests = self.c.batched_requests.load(Ordering::Relaxed);
+        let mut range_classes = [0u64; 4];
+        for (dst, src) in range_classes.iter_mut().zip(&self.c.range_classes) {
+            *dst = src.load(Ordering::Relaxed);
+        }
         Snapshot {
-            requests: g.requests,
-            completed: g.completed,
-            failed: g.failed,
-            rejected: g.rejected,
-            expired: g.expired,
-            cancelled: g.cancelled,
-            flops: g.flops,
+            requests: self.c.requests.load(Ordering::Relaxed),
+            completed,
+            failed: self.c.failed.load(Ordering::Relaxed),
+            rejected: self.c.rejected.load(Ordering::Relaxed),
+            expired: self.c.expired.load(Ordering::Relaxed),
+            cancelled: self.c.cancelled.load(Ordering::Relaxed),
+            flops: self.c.flops.load(Ordering::Relaxed),
             per_method,
-            latency_buckets: g.latency_buckets,
-            mean_latency: if g.completed > 0 {
-                g.latency_total / g.completed as u32
+            mean_latency: if latency.count > 0 {
+                Duration::from_nanos(latency.sum / latency.count)
             } else {
                 Duration::ZERO
             },
-            mean_batch_size: if g.batches > 0 {
-                g.batched_requests as f64 / g.batches as f64
+            latency,
+            batches,
+            batched_requests,
+            mean_batch_size: if batches > 0 {
+                batched_requests as f64 / batches as f64
             } else {
                 0.0
             },
-            sharded_gemms: g.sharded_gemms,
-            shards_executed: g.shards_executed,
-            shard_steals: g.shard_steals,
-            reduction_depth_max: g.reduction_depth_max,
-            shard_fallbacks: g.shard_fallbacks,
+            range_classes,
+            sharded_gemms: self.c.sharded_gemms.load(Ordering::Relaxed),
+            shards_executed: self.c.shards_executed.load(Ordering::Relaxed),
+            shard_steals: self.c.shard_steals.load(Ordering::Relaxed),
+            reduction_depth_max: self.c.reduction_depth_max.load(Ordering::Relaxed),
+            shard_fallbacks: self.c.shard_fallbacks.load(Ordering::Relaxed),
             split_cache_hits: sc_hits,
             split_cache_misses: sc_misses,
             split_cache_entries: sc_entries,
@@ -217,7 +337,256 @@ impl Metrics {
             plan_cache_misses: plan_misses,
             probe_cache_hits: probe_hits,
             probe_cache_misses: probe_misses,
+            stage_spans,
+            stage_stats,
+            dropped_spans,
+            numeric,
         }
+    }
+}
+
+/// Nanoseconds → seconds with fixed 9-decimal formatting (deterministic
+/// for the golden exposition test).
+fn secs(ns: u64) -> String {
+    format!("{:.9}", ns as f64 / 1e9)
+}
+
+/// Append one `# HELP` + `# TYPE` header pair.
+fn header(out: &mut String, name: &str, kind: &str, help: &str) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} {kind}");
+}
+
+/// Append a whole single-sample metric family.
+fn family(out: &mut String, name: &str, kind: &str, help: &str, value: impl std::fmt::Display) {
+    header(out, name, kind, help);
+    let _ = writeln!(out, "{name} {value}");
+}
+
+impl Snapshot {
+    /// Render this snapshot in the Prometheus text exposition format.
+    ///
+    /// Metric names and label keys are STABLE — they are pinned by the
+    /// golden test in `tests/telemetry.rs` and scraped by the CI smoke
+    /// step, so renames are breaking changes. Families with fixed label
+    /// sets (range classes, stages) always emit every series, zero or
+    /// not, to keep the scrape schema independent of traffic.
+    pub fn render_prometheus(&self) -> String {
+        let mut o = String::with_capacity(4096);
+        family(&mut o, "tcec_requests_total", "counter", "Requests admitted.", self.requests);
+        family(&mut o, "tcec_completed_total", "counter", "Requests completed.", self.completed);
+        family(
+            &mut o,
+            "tcec_failed_total",
+            "counter",
+            "Requests failed by an executor panic.",
+            self.failed,
+        );
+        family(
+            &mut o,
+            "tcec_rejected_total",
+            "counter",
+            "Submissions load-shed at admission.",
+            self.rejected,
+        );
+        family(
+            &mut o,
+            "tcec_expired_total",
+            "counter",
+            "Admitted requests dropped on deadline expiry.",
+            self.expired,
+        );
+        family(
+            &mut o,
+            "tcec_cancelled_total",
+            "counter",
+            "Admitted requests dropped on cancellation.",
+            self.cancelled,
+        );
+        family(&mut o, "tcec_flops_total", "counter", "Useful flops completed.", self.flops);
+        family(
+            &mut o,
+            "tcec_batches_total",
+            "counter",
+            "Batches handed to a worker.",
+            self.batches,
+        );
+        family(
+            &mut o,
+            "tcec_batched_requests_total",
+            "counter",
+            "Requests carried by those batches.",
+            self.batched_requests,
+        );
+        family(
+            &mut o,
+            "tcec_mean_batch_size",
+            "gauge",
+            "Mean executed batch size (requests per batch).",
+            format!("{:.6}", self.mean_batch_size),
+        );
+        header(
+            &mut o,
+            "tcec_latency_seconds",
+            "summary",
+            "End-to-end request latency (quantiles are log-bucket upper bounds).",
+        );
+        for q in [0.5, 0.95, 0.99] {
+            let v = if self.latency.count > 0 { self.latency.quantile(q) } else { 0 };
+            let _ = writeln!(o, "tcec_latency_seconds{{quantile=\"{q}\"}} {}", secs(v));
+        }
+        let _ = writeln!(o, "tcec_latency_seconds_sum {}", secs(self.latency.sum));
+        let _ = writeln!(o, "tcec_latency_seconds_count {}", self.latency.count);
+        header(
+            &mut o,
+            "tcec_method_requests_total",
+            "counter",
+            "Completed requests per GEMM method.",
+        );
+        for (name, count) in &self.per_method {
+            let _ = writeln!(o, "tcec_method_requests_total{{method=\"{name}\"}} {count}");
+        }
+        header(
+            &mut o,
+            "tcec_range_class_requests_total",
+            "counter",
+            "Requests per combined probe exponent-range class (planner mode).",
+        );
+        for (name, count) in RANGE_CLASS_NAMES.iter().zip(&self.range_classes) {
+            let _ = writeln!(o, "tcec_range_class_requests_total{{class=\"{name}\"}} {count}");
+        }
+        family(
+            &mut o,
+            "tcec_sharded_gemms_total",
+            "counter",
+            "GEMMs executed as shard grids.",
+            self.sharded_gemms,
+        );
+        family(
+            &mut o,
+            "tcec_shards_executed_total",
+            "counter",
+            "Shards executed across all sharded GEMMs.",
+            self.shards_executed,
+        );
+        family(
+            &mut o,
+            "tcec_shard_steals_total",
+            "counter",
+            "Work-steals observed in the shard pool.",
+            self.shard_steals,
+        );
+        family(
+            &mut o,
+            "tcec_shard_fallbacks_total",
+            "counter",
+            "Sharded GEMMs degraded to one unsharded call.",
+            self.shard_fallbacks,
+        );
+        family(
+            &mut o,
+            "tcec_reduction_depth_max",
+            "gauge",
+            "Deepest fixed-order k reduction seen.",
+            self.reduction_depth_max,
+        );
+        family(
+            &mut o,
+            "tcec_split_cache_hits_total",
+            "counter",
+            "Operand splits served from the cache.",
+            self.split_cache_hits,
+        );
+        family(
+            &mut o,
+            "tcec_split_cache_misses_total",
+            "counter",
+            "Operand splits the cache had to prepare.",
+            self.split_cache_misses,
+        );
+        family(
+            &mut o,
+            "tcec_split_cache_entries",
+            "gauge",
+            "Prepared operands currently cached.",
+            self.split_cache_entries,
+        );
+        family(
+            &mut o,
+            "tcec_plan_cache_hits_total",
+            "counter",
+            "Plans served from the plan cache.",
+            self.plan_cache_hits,
+        );
+        family(
+            &mut o,
+            "tcec_plan_cache_misses_total",
+            "counter",
+            "Plans the planner had to build.",
+            self.plan_cache_misses,
+        );
+        family(
+            &mut o,
+            "tcec_probe_cache_hits_total",
+            "counter",
+            "Classifications served from the probe cache.",
+            self.probe_cache_hits,
+        );
+        family(
+            &mut o,
+            "tcec_probe_cache_misses_total",
+            "counter",
+            "Operands actually probed (sampled).",
+            self.probe_cache_misses,
+        );
+        header(&mut o, "tcec_stage_spans_total", "counter", "Spans recorded per request stage.");
+        for s in Stage::ALL {
+            let _ = writeln!(
+                o,
+                "tcec_stage_spans_total{{stage=\"{}\"}} {}",
+                s.name(),
+                self.stage_spans[s as usize]
+            );
+        }
+        header(
+            &mut o,
+            "tcec_stage_latency_seconds",
+            "summary",
+            "Per-stage latency (quantiles are log-bucket upper bounds).",
+        );
+        for st in &self.stage_stats {
+            for (q, v) in [(0.5, st.p50_ns), (0.95, st.p95_ns), (0.99, st.p99_ns)] {
+                let _ = writeln!(
+                    o,
+                    "tcec_stage_latency_seconds{{stage=\"{}\",quantile=\"{q}\"}} {}",
+                    st.stage.name(),
+                    secs(v)
+                );
+            }
+        }
+        family(
+            &mut o,
+            "tcec_trace_dropped_spans_total",
+            "counter",
+            "Spans evicted from the bounded trace ring.",
+            self.dropped_spans,
+        );
+        header(
+            &mut o,
+            "tcec_numeric_events_total",
+            "counter",
+            "Numerical-health events per method (underflow, prescale, rounding).",
+        );
+        if let Some(n) = &self.numeric {
+            for (method, counter, v) in n.nonzero() {
+                let _ = writeln!(
+                    o,
+                    "tcec_numeric_events_total{{method=\"{method}\",counter=\"{}\"}} {v}",
+                    counter.name()
+                );
+            }
+        }
+        o
     }
 }
 
@@ -230,16 +599,37 @@ mod tests {
         let m = Metrics::new();
         m.on_submit();
         m.on_submit();
-        m.on_complete(Method::OursHalfHalf, 1000, Duration::from_millis(2), 2);
-        m.on_complete(Method::Fp32Simt, 500, Duration::from_micros(50), 1);
+        m.on_batch(2);
+        m.on_complete(Method::OursHalfHalf, 1000, Duration::from_millis(2));
+        m.on_complete(Method::Fp32Simt, 500, Duration::from_micros(50));
+        m.on_batch(1);
         let s = m.snapshot();
         assert_eq!(s.requests, 2);
         assert_eq!(s.completed, 2);
         assert_eq!(s.flops, 1500);
         assert_eq!(s.per_method.len(), 2);
-        assert_eq!(s.latency_buckets.iter().sum::<u64>(), 2);
+        assert_eq!(s.latency.count, 2);
         assert!(s.mean_latency > Duration::ZERO);
         assert!((s.mean_batch_size - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mean_batch_size_counts_each_batch_once() {
+        // Regression (ISSUE 6 satellite): the old accounting bumped the
+        // batch count once per *member request*, so one 4-batch plus one
+        // 1-batch read as 5 requests / 5 batches = 1.0 instead of the true
+        // 5 / 2 = 2.5 requests per batch.
+        let m = Metrics::new();
+        m.on_batch(4);
+        for _ in 0..4 {
+            m.on_complete(Method::Fp32Simt, 10, Duration::from_micros(5));
+        }
+        m.on_batch(1);
+        m.on_complete(Method::Fp32Simt, 10, Duration::from_micros(5));
+        let s = m.snapshot();
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.batched_requests, 5);
+        assert!((s.mean_batch_size - 2.5).abs() < 1e-9);
     }
 
     #[test]
@@ -248,9 +638,9 @@ mod tests {
         for _ in 0..5 {
             m.on_submit();
         }
-        m.on_complete(Method::Fp32Simt, 100, Duration::from_micros(10), 3);
-        m.on_complete(Method::Fp32Simt, 100, Duration::from_micros(10), 3);
-        m.on_complete(Method::Fp32Simt, 100, Duration::from_micros(10), 3);
+        m.on_complete(Method::Fp32Simt, 100, Duration::from_micros(10));
+        m.on_complete(Method::Fp32Simt, 100, Duration::from_micros(10));
+        m.on_complete(Method::Fp32Simt, 100, Duration::from_micros(10));
         m.on_failed(2); // a failed 2-request batch
         let s = m.snapshot();
         assert_eq!(s.failed, 2);
@@ -264,8 +654,8 @@ mod tests {
             m.on_submit(); // admitted
         }
         m.on_rejected(); // load-shed — NOT admitted
-        m.on_complete(Method::Fp32Simt, 100, Duration::from_micros(10), 1);
-        m.on_complete(Method::Fp32Simt, 100, Duration::from_micros(10), 1);
+        m.on_complete(Method::Fp32Simt, 100, Duration::from_micros(10));
+        m.on_complete(Method::Fp32Simt, 100, Duration::from_micros(10));
         m.on_failed(1);
         m.on_expired(2);
         m.on_cancelled(1);
@@ -274,6 +664,16 @@ mod tests {
         assert_eq!(s.expired, 2);
         assert_eq!(s.cancelled, 1);
         assert_eq!(s.requests, s.completed + s.failed + s.expired + s.cancelled);
+    }
+
+    #[test]
+    fn range_class_tallies_accumulate() {
+        let m = Metrics::new();
+        m.on_range_class(RangeClass::HalfHalfExact);
+        m.on_range_class(RangeClass::HalfHalfExact);
+        m.on_range_class(RangeClass::Extreme);
+        let s = m.snapshot();
+        assert_eq!(s.range_classes, [2, 0, 0, 1]);
     }
 
     #[test]
@@ -313,6 +713,24 @@ mod tests {
     }
 
     #[test]
+    fn tracer_stats_surface_when_registered() {
+        use std::time::Instant;
+        let m = Metrics::new();
+        let s = m.snapshot();
+        assert_eq!(s.stage_spans, [0; NUM_STAGES]);
+        assert!(s.stage_stats.is_empty());
+        let t = std::sync::Arc::new(Tracer::new(16));
+        m.register_tracer(std::sync::Arc::clone(&t));
+        let t0 = Instant::now();
+        t.record(1, Stage::Execute, t0, t0 + Duration::from_micros(10));
+        t.record(1, Stage::Reply, t0, t0 + Duration::from_micros(1));
+        let s = m.snapshot();
+        assert_eq!(s.stage_spans[Stage::Execute as usize], 1);
+        assert_eq!(s.stage_spans[Stage::Reply as usize], 1);
+        assert_eq!(s.stage_stats.len(), 2);
+    }
+
+    #[test]
     fn shard_counters_accumulate() {
         let m = Metrics::new();
         let s = m.snapshot();
@@ -330,6 +748,31 @@ mod tests {
     }
 
     #[test]
+    fn prometheus_exposition_contains_stable_names() {
+        // The full-text golden lives in tests/telemetry.rs; this pins the
+        // schema basics: every family renders, labels are well-formed, and
+        // fixed-label families emit all series even at zero.
+        let m = Metrics::new();
+        m.on_submit();
+        m.on_batch(1);
+        m.on_complete(Method::OursHalfHalf, 42, Duration::from_micros(100));
+        let text = m.snapshot().render_prometheus();
+        for name in [
+            "tcec_requests_total 1",
+            "tcec_completed_total 1",
+            "tcec_method_requests_total{method=\"cutlass_halfhalf\"} 1",
+            "tcec_range_class_requests_total{class=\"extreme\"} 0",
+            "tcec_stage_spans_total{stage=\"intake_admit\"} 0",
+            "tcec_latency_seconds_count 1",
+            "tcec_trace_dropped_spans_total 0",
+        ] {
+            assert!(text.contains(name), "missing `{name}` in:\n{text}");
+        }
+        // A summary quantile line with deterministic bucket-bound value.
+        assert!(text.contains("tcec_latency_seconds{quantile=\"0.5\"} "));
+    }
+
+    #[test]
     fn thread_safe() {
         let m = std::sync::Arc::new(Metrics::new());
         let handles: Vec<_> = (0..4)
@@ -338,7 +781,7 @@ mod tests {
                 std::thread::spawn(move || {
                     for _ in 0..1000 {
                         m.on_submit();
-                        m.on_complete(Method::OursHalfHalf, 1, Duration::from_nanos(10), 1);
+                        m.on_complete(Method::OursHalfHalf, 1, Duration::from_nanos(10));
                     }
                 })
             })

@@ -17,7 +17,7 @@ pub mod service;
 pub mod splitcache;
 
 pub use batcher::{Batch, BatchKey, DynamicBatcher};
-pub use metrics::{Metrics, Snapshot};
+pub use metrics::{Metrics, Snapshot, RANGE_CLASS_NAMES};
 pub use policy::{probe, route, Policy, RangeClass};
 pub use request::{GemmOutcome, GemmRequest};
 pub use service::{Executor, GemmService, ServiceConfig, SimExecutor};

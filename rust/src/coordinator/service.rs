@@ -27,6 +27,7 @@ use crate::api::{CancelToken, GemmCall, ServiceBuilder, ServiceError, Ticket};
 use crate::gemm::prepared::SplitDedup;
 use crate::gemm::{Mat, Method, SplitOperand, TileConfig};
 use crate::planner::{ExecPlan, Planner, PlannerConfig};
+use crate::telemetry::{numeric, Stage, TelemetryConfig, Tracer};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Sender};
@@ -67,6 +68,17 @@ pub trait Executor: Send + Sync + 'static {
         let _ = cache;
         false
     }
+
+    /// Offer a request [`Tracer`] to attach (DESIGN.md §12; wired by
+    /// `ServiceBuilder::telemetry`). Returns `true` when accepted. The
+    /// default declines — coordinator-level stages are still traced, the
+    /// executor just contributes no split/shard spans. Wrappers forward to
+    /// their inner executor (and may also keep a handle, as
+    /// `shard::ShardedExecutor` does for its per-shard spans).
+    fn attach_tracer(&self, tracer: Arc<Tracer>) -> bool {
+        let _ = tracer;
+        false
+    }
 }
 
 /// Simulator-backed executor: runs the bit-exact tiled GEMM backends
@@ -81,13 +93,21 @@ pub struct SimExecutor {
     /// Set at most once — at construction (`with_cache`) or by the
     /// service builder through [`Executor::attach_split_cache`].
     cache: OnceLock<Arc<SplitCache>>,
+    /// Set at most once by [`Executor::attach_tracer`]; when present,
+    /// batch split preparation is recorded as [`Stage::Split`] spans.
+    tracer: OnceLock<Arc<Tracer>>,
 }
 
 impl SimExecutor {
     pub fn new() -> SimExecutor {
         let batch_threads =
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(4);
-        SimExecutor { tile: TileConfig::default(), batch_threads, cache: OnceLock::new() }
+        SimExecutor {
+            tile: TileConfig::default(),
+            batch_threads,
+            cache: OnceLock::new(),
+            tracer: OnceLock::new(),
+        }
     }
 
     /// Like [`SimExecutor::new`], reusing operand splits through `cache`
@@ -114,6 +134,20 @@ impl SimExecutor {
     /// fingerprint, never a re-split); a single-request batch skips the
     /// table — with no possible in-batch repeat it is pure overhead.
     fn prepare_batch(
+        &self,
+        method: Method,
+        reqs: &[GemmRequest],
+    ) -> Vec<(Arc<SplitOperand>, Arc<SplitOperand>)> {
+        let t0 = Instant::now();
+        let pairs = self.prepare_batch_inner(method, reqs);
+        if let Some(t) = self.tracer.get() {
+            // One batch-level span, tagged with the first request's id.
+            t.record_since(reqs.first().map(|r| r.id).unwrap_or(0), Stage::Split, t0);
+        }
+        pairs
+    }
+
+    fn prepare_batch_inner(
         &self,
         method: Method,
         reqs: &[GemmRequest],
@@ -204,6 +238,10 @@ impl Executor for SimExecutor {
     fn attach_split_cache(&self, cache: Arc<SplitCache>) -> bool {
         self.cache.set(cache).is_ok()
     }
+
+    fn attach_tracer(&self, tracer: Arc<Tracer>) -> bool {
+        self.tracer.set(tracer).is_ok()
+    }
 }
 
 /// One admitted request's reply channel + call metadata, carried alongside
@@ -211,6 +249,9 @@ impl Executor for SimExecutor {
 struct Responder {
     tx: Sender<GemmResult>,
     meta: CallMeta,
+    /// When the dispatcher registered the request into the batcher —
+    /// start of its [`Stage::BatchLinger`] span.
+    enqueued: Instant,
 }
 
 struct WorkItem {
@@ -322,6 +363,11 @@ pub struct ServiceConfig {
     /// `ShardedExecutor` is actually in front. Plan/probe cache counters
     /// land in this service's [`Metrics`].
     pub planner: Option<PlannerConfig>,
+    /// Observability (DESIGN.md §12): request tracing into a bounded span
+    /// ring and/or the process-global numerical-health counters. Both off
+    /// by default — the disabled cost is one relaxed atomic load per
+    /// counter site and no tracer allocations at all.
+    pub telemetry: TelemetryConfig,
 }
 
 impl Default for ServiceConfig {
@@ -335,6 +381,7 @@ impl Default for ServiceConfig {
             split_cache: None,
             shard: None,
             planner: None,
+            telemetry: TelemetryConfig::default(),
         }
     }
 }
@@ -353,6 +400,11 @@ pub struct GemmService {
     workers: Vec<JoinHandle<()>>,
     metrics: Arc<Metrics>,
     next_id: AtomicU64,
+    /// The request tracer, when `telemetry.tracing` is on.
+    tracer: Option<Arc<Tracer>>,
+    /// Whether this service holds one refcount on the process-global
+    /// numeric-counter switch (released exactly once at shutdown).
+    numeric_enabled: bool,
 }
 
 impl GemmService {
@@ -393,6 +445,24 @@ impl GemmService {
         if let Some(cache) = executor.split_cache() {
             metrics.register_split_cache(cache);
         }
+        // Telemetry (DESIGN.md §12). Tracing: one Tracer per service,
+        // offered to the (already wrapped) executor so the shard layer and
+        // the simulator contribute shard/reduce/split spans; coordinator
+        // stages are recorded by the dispatcher/workers directly. Numeric:
+        // take one refcount on the process-global counter switch and
+        // baseline the metrics so snapshots report this service's delta.
+        let tracer: Option<Arc<Tracer>> = if cfg.telemetry.tracing {
+            let t = Arc::new(Tracer::new(cfg.telemetry.ring_capacity()));
+            metrics.register_tracer(Arc::clone(&t));
+            executor.attach_tracer(Arc::clone(&t));
+            Some(t)
+        } else {
+            None
+        };
+        if cfg.telemetry.numeric {
+            metrics.enable_numeric();
+            numeric::enable();
+        }
         // Planner mode: one Planner per service, shared by reference with
         // the metrics (counters). Its shard gate mirrors the service's
         // actual wiring — plans only shard when a ShardedExecutor is in
@@ -414,6 +484,7 @@ impl GemmService {
                 let executor = Arc::clone(&executor);
                 let metrics = Arc::clone(&metrics);
                 let intake = Arc::clone(&intake);
+                let tracer = tracer.clone();
                 std::thread::spawn(move || loop {
                     let item = {
                         let guard = work_rx.lock().unwrap();
@@ -431,6 +502,11 @@ impl GemmService {
                         continue;
                     }
                     let batch_size = reqs.len();
+                    // One executed batch (counted whether or not the
+                    // executor survives it — its requests are accounted
+                    // either way).
+                    metrics.on_batch(batch_size);
+                    let exec_t0 = Instant::now();
                     // A panicking executor must not take the worker down
                     // with it, and must not strand its clients: catch,
                     // reply `ExecutorFailed` to every request of the
@@ -457,9 +533,16 @@ impl GemmService {
                         continue;
                     };
                     debug_assert_eq!(outs.len(), batch_size);
+                    if let Some(t) = &tracer {
+                        // Batch-level span, tagged with the first request's
+                        // id (successful batches only — a panicked batch
+                        // has no completed execute stage to time).
+                        t.record_since(reqs[0].id, Stage::Execute, exec_t0);
+                    }
                     for ((req, c), r) in reqs.iter().zip(outs).zip(responders) {
                         let latency = r.meta.submitted.elapsed();
-                        metrics.on_complete(item.key.method, req.flops(), latency, batch_size);
+                        metrics.on_complete(item.key.method, req.flops(), latency);
+                        let reply_t0 = Instant::now();
                         let outcome = GemmOutcome {
                             id: req.id,
                             c,
@@ -469,6 +552,9 @@ impl GemmService {
                             tag: r.meta.tag.clone(),
                         };
                         resolve(&intake, &r.tx, Ok(outcome));
+                        if let Some(t) = &tracer {
+                            t.record_since(req.id, Stage::Reply, reply_t0);
+                        }
                     }
                 })
             })
@@ -481,6 +567,7 @@ impl GemmService {
             let linger = cfg.linger;
             let max_batch = cfg.max_batch;
             let planner = planner.clone();
+            let tracer = tracer.clone();
             std::thread::spawn(move || {
                 let mut batcher = DynamicBatcher::new(max_batch, linger);
                 let mut responders: ResponderMap = ResponderMap::new();
@@ -505,6 +592,13 @@ impl GemmService {
                         .map(|r| responders.remove(&r.id).expect("responder registered"))
                         .collect();
                     let (reqs, rs) = triage(batch.requests, rs, &intake, &metrics);
+                    if let Some(t) = &tracer {
+                        // Per-request batching cost: registered → emitted.
+                        let now = Instant::now();
+                        for (req, r) in reqs.iter().zip(&rs) {
+                            t.record(req.id, Stage::BatchLinger, r.enqueued, now);
+                        }
+                    }
                     if !reqs.is_empty() {
                         let item =
                             WorkItem { key: batch.key, requests: reqs, plan, responders: rs };
@@ -535,6 +629,7 @@ impl GemmService {
                                 // full O(mn) probe for repeated operands).
                                 // Legacy mode: the exact-probe route shim,
                                 // no plan.
+                                let plan_t0 = Instant::now();
                                 let (method, plan) = match &planner {
                                     Some(p) => {
                                         let plan = match force {
@@ -554,7 +649,17 @@ impl GemmService {
                                         (method, None)
                                     }
                                 };
-                                responders.insert(req.id, Responder { tx, meta });
+                                if let Some(t) = &tracer {
+                                    t.record_since(req.id, Stage::Plan, plan_t0);
+                                }
+                                // Per-request exponent-range class, from
+                                // the planner's combined probe (forced
+                                // plans carry none).
+                                if let Some(c) = plan.as_ref().and_then(|p| p.class) {
+                                    metrics.on_range_class(c);
+                                }
+                                let enqueued = Instant::now();
+                                responders.insert(req.id, Responder { tx, meta, enqueued });
                                 if let Some(plan) = plan {
                                     let key = BatchKey {
                                         m: req.a.rows,
@@ -610,6 +715,8 @@ impl GemmService {
             workers,
             metrics,
             next_id: AtomicU64::new(1),
+            tracer,
+            numeric_enabled: cfg.telemetry.numeric,
         }
     }
 
@@ -652,6 +759,9 @@ impl GemmService {
         match self.intake.admit(Admitted { req, meta, tx }) {
             Ok(()) => {
                 self.metrics.on_submit();
+                if let Some(t) = &self.tracer {
+                    t.record_since(id, Stage::IntakeAdmit, now);
+                }
                 Ok(Ticket::new(id, rx, cancel, now))
             }
             Err(err) => {
@@ -665,6 +775,13 @@ impl GemmService {
 
     pub fn metrics(&self) -> Arc<Metrics> {
         Arc::clone(&self.metrics)
+    }
+
+    /// The service's request tracer — `Some` iff the service was built
+    /// with `telemetry.tracing` on. Used by `tcec serve --trace` / `tcec
+    /// trace` to dump stage statistics and Chrome trace JSON.
+    pub fn tracer(&self) -> Option<Arc<Tracer>> {
+        self.tracer.clone()
     }
 
     /// Admission-control bound this service runs with.
@@ -690,6 +807,12 @@ impl GemmService {
         }
         for w in self.workers.drain(..) {
             let _ = w.join();
+        }
+        // Release this service's refcount on the process-global numeric
+        // counters exactly once (shutdown_impl runs again from Drop).
+        if self.numeric_enabled {
+            numeric::disable();
+            self.numeric_enabled = false;
         }
     }
 

@@ -23,6 +23,38 @@
 use super::half::Half;
 use super::rounding::{exp2i, Rounding};
 use super::tf32::Tf32;
+use crate::telemetry::numeric::{self, Counter};
+
+/// Telemetry classification of a low piece (the paper's Fig. 8 hazard):
+/// a *nonzero* residual whose low-precision conversion flushed to ±0 is
+/// a total underflow; one that landed in the subnormal range kept some
+/// mantissa but lost precision gradually. Pure observation — the split
+/// itself is never altered, so enabling telemetry cannot perturb a bit.
+#[inline]
+fn count_f16_underflow(resid: f64, lo: Half) {
+    if !numeric::enabled() || resid == 0.0 {
+        return;
+    }
+    if lo.is_zero() {
+        numeric::record(Counter::SplitFlushed, 1);
+    } else if lo.is_subnormal() {
+        numeric::record(Counter::SplitSubnormal, 1);
+    }
+}
+
+/// [`count_f16_underflow`] for TF32 pieces (and bf16 pieces stored as
+/// f32): both share f32's exponent range, so subnormal-ness is f32's.
+#[inline]
+fn count_f32_graded_underflow(resid: f64, lo: f32) {
+    if !numeric::enabled() || resid == 0.0 {
+        return;
+    }
+    if lo == 0.0 {
+        numeric::record(Counter::SplitFlushed, 1);
+    } else if lo.is_subnormal() {
+        numeric::record(Counter::SplitSubnormal, 1);
+    }
+}
 
 /// The residual scaling exponent: `l_F16 + 1 = 11`, i.e. ×2048 (eq. 18).
 pub const SCALE_EXP: i32 = 11;
@@ -66,7 +98,9 @@ impl SplitTf32 {
 /// Markidis et al. split (eqs. 2–5): RN conversions, unscaled residual.
 pub fn split_markidis(v: f32) -> SplitF16 {
     let hi = Half::from_f32(v, Rounding::RN);
-    let lo = Half::from_f64(v as f64 - hi.to_f64(), Rounding::RN);
+    let resid = v as f64 - hi.to_f64();
+    let lo = Half::from_f64(resid, Rounding::RN);
+    count_f16_underflow(resid, lo);
     SplitF16 { hi, lo, lo_scaled: false }
 }
 
@@ -76,6 +110,7 @@ pub fn split_ootomo(v: f32) -> SplitF16 {
     let hi = Half::from_f32(v, Rounding::RN);
     let resid = (v as f64 - hi.to_f64()) * exp2i(SCALE_EXP);
     let lo = Half::from_f64(resid, Rounding::RN);
+    count_f16_underflow(resid, lo);
     SplitF16 { hi, lo, lo_scaled: true }
 }
 
@@ -88,7 +123,9 @@ pub fn split_feng(v: f32) -> SplitF16 {
     let bit21 = (m >> 2) & 1; // m22 is the 1st bit, m2 the 21st
     let mode = if bit21 == 1 { Rounding::RA } else { Rounding::RZ };
     let hi = Half::from_f32(v, mode);
-    let lo = Half::from_f64(v as f64 - hi.to_f64(), Rounding::RN);
+    let resid = v as f64 - hi.to_f64();
+    let lo = Half::from_f64(resid, Rounding::RN);
+    count_f16_underflow(resid, lo);
     SplitF16 { hi, lo, lo_scaled: false }
 }
 
@@ -96,7 +133,9 @@ pub fn split_feng(v: f32) -> SplitF16 {
 /// baseline Feng et al. analyze; also used for Table 2's expectation).
 pub fn split_markidis_rz(v: f32) -> SplitF16 {
     let hi = Half::from_f32(v, Rounding::RZ);
-    let lo = Half::from_f64(v as f64 - hi.to_f64(), Rounding::RZ);
+    let resid = v as f64 - hi.to_f64();
+    let lo = Half::from_f64(resid, Rounding::RZ);
+    count_f16_underflow(resid, lo);
     SplitF16 { hi, lo, lo_scaled: false }
 }
 
@@ -106,6 +145,7 @@ pub fn split_ootomo_tf32(v: f32) -> SplitTf32 {
     let hi = Tf32::from_f32(v, Rounding::RNA);
     let resid = (v as f64 - hi.to_f64()) * exp2i(SCALE_EXP);
     let lo = Tf32::from_f64(resid, Rounding::RNA);
+    count_f32_graded_underflow(resid, lo.to_f32());
     SplitTf32 { hi, lo }
 }
 
@@ -120,6 +160,8 @@ pub fn split_bf16_triple(v: f32) -> (f32, f32, f32) {
     let b1 = round_to_format(r1, Format::BF16, Rounding::RN);
     let r2 = (r1 - b1) * s;
     let b2 = round_to_format(r2, Format::BF16, Rounding::RN);
+    count_f32_graded_underflow(r1, b1 as f32);
+    count_f32_graded_underflow(r2, b2 as f32);
     (b0 as f32, b1 as f32, b2 as f32)
 }
 

@@ -18,6 +18,7 @@ use crate::fp::{
     split_feng, split_markidis, split_ootomo, split_ootomo_tf32, Half, Rounding, Tf32,
 };
 use crate::tcsim::{mma_tile_acc, mma_tile_zero_into, MmaConfig};
+use crate::telemetry::numeric::{record as record_telemetry, Counter};
 
 /// Which low-precision input grid a Tensor-Core path uses.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -379,6 +380,7 @@ impl KernelBackend for OursBackend {
                 for (c, t) in st.c.iter_mut().zip(tmp.iter()) {
                     *c += *t; // FP32 RN add — the paper's Fig. 6 (right)
                 }
+                record_telemetry(Counter::ExtRnAdds, (tm * tn) as u64);
             });
         } else {
             for_each_inst_chunk(ah, bh, tm, tn, kb, |ac, bc, kc| {
@@ -484,6 +486,7 @@ impl KernelBackend for Bf16TripleBackend {
             for (c, t) in st.c.iter_mut().zip(tmp.iter()) {
                 *c += *t;
             }
+            record_telemetry(Counter::ExtRnAdds, (tm * tn) as u64);
         });
     }
 

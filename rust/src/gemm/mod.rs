@@ -174,6 +174,9 @@ impl Method {
     /// a GEMM, a whole batch) pay `make_backend` once instead of per
     /// operand.
     pub(crate) fn prepare_with(&self, m: &Mat, backend: &dyn KernelBackend) -> SplitOperand {
+        // Telemetry frame: counter increments below (split underflow,
+        // prescale) are attributed to this method. `None` when disabled.
+        let _ctx = crate::telemetry::numeric::MethodCtx::enter(*self);
         match self {
             Method::Fp32TruncLsb => {
                 let t = m.map(|x| truncate_f32_mantissa_lsb(x, 1));
@@ -182,6 +185,12 @@ impl Method {
             Method::OursHalfHalfPre => {
                 let p = scaling::plan_scale(m);
                 let s = scaling::apply_scale(m, p);
+                if p.shift != 0 {
+                    crate::telemetry::numeric::record(
+                        crate::telemetry::numeric::Counter::PrescaleApplied,
+                        1,
+                    );
+                }
                 SplitOperand::build(*self, &s, backend, p.shift)
             }
             _ => SplitOperand::build(*self, m, backend, 0),
@@ -206,6 +215,9 @@ impl Method {
     ) -> Mat {
         assert_eq!(a.method, *self, "operand A was prepared for {:?}", a.method);
         assert_eq!(b.method, *self, "operand B was prepared for {:?}", b.method);
+        // Telemetry frame: MMA rounding-step and external-RN-add counts
+        // from the tiled multiply are attributed to this method.
+        let _ctx = crate::telemetry::numeric::MethodCtx::enter(*self);
         let c = prepared::gemm_tiled_prepared(a, b, cfg, backend);
         match self {
             // Exact two-step descale epilogue — same factor sequence as

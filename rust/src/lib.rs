@@ -51,6 +51,14 @@
 //!   k-split reduction that keeps sharded results bit-identical to
 //!   unsharded for every [`gemm::Method`]. Serving entry:
 //!   [`shard::ShardedExecutor`] via `ServiceConfig::shard`.
+//! * [`telemetry`] — L3.5, observability: per-request stage spans into a
+//!   bounded [`telemetry::TraceRing`] with per-stage log-spaced latency
+//!   histograms (p50/p95/p99) and Chrome `trace_event` export, plus
+//!   numerical-health counters (correction-term underflow, prescale
+//!   applications, RZ-vs-RN accumulator rounding steps) threaded through
+//!   [`fp`]/[`tcsim`]/[`gemm`] and surfaced per method in
+//!   `coordinator::Snapshot::render_prometheus`. Zero-cost when disabled
+//!   and guaranteed not to perturb a single output bit (DESIGN.md §12).
 //! * [`experiments`] — one driver per paper figure/table, shared by the
 //!   bench binaries.
 
@@ -70,3 +78,4 @@ pub mod runtime;
 pub mod shard;
 pub mod solver;
 pub mod tcsim;
+pub mod telemetry;

@@ -13,6 +13,7 @@ use tcec::perfmodel::{A100, ALL_GPUS};
 use tcec::planner::{Planner, PlannerConfig};
 use tcec::runtime::{ArtifactRegistry, PjrtExecutor, PjrtHandle};
 use tcec::shard;
+use tcec::telemetry::TelemetryConfig;
 
 const USAGE: &str = "\
 tcec — error-corrected Tensor-Core GEMM (Ootomo & Yokota 2022 reproduction)
@@ -28,6 +29,9 @@ USAGE:
   tcec serve     [--requests N] [--size N] [--workers W] [--batch B] [--artifacts DIR]
                  [--shard] [--shard-workers W] [--split-cache N] [--planner]
                  [--queue-cap N] [--deadline-ms D] [--reject-stats]
+                 [--telemetry] [--trace N] [--metrics-format prometheus]
+  tcec trace     [--out FILE] [--requests N] [--size N] [--workers W] [--batch B]
+                 [--shard] [--shard-workers W]
   tcec experiment <fig1|fig4|fig5|fig8|fig9|fig11|fig13|fig14|fig15|fig16|table1_2|table3
                   |table6|solver>
   tcec artifacts [--dir DIR]
@@ -463,6 +467,20 @@ fn cmd_serve(args: &Args) {
     if args.bool_flag("planner") {
         builder = builder.planner(PlannerConfig::default());
     }
+    // `--trace N`: record per-request stage spans into an N-entry ring and
+    // print the per-stage latency table; `--telemetry` turns on the
+    // numerical-health counters without tracing (DESIGN.md §12). Neither
+    // changes a single output bit.
+    let tracing = args.flags.contains_key("trace");
+    if tracing || args.bool_flag("telemetry") {
+        builder = builder.telemetry(TelemetryConfig {
+            tracing,
+            // Bare `--trace` parses as usize 0; ring_capacity() maps 0 to
+            // the default ring size.
+            trace_capacity: args.usize_flag("trace", 0),
+            numeric: true,
+        });
+    }
     let client = if let Some(dir) = args.str_flag("artifacts") {
         if args.usize_flag("split-cache", 0) > 0 {
             eprintln!("warning: --split-cache applies only to the simulator path; ignored");
@@ -508,6 +526,13 @@ fn cmd_serve(args: &Args) {
     }
     let dt = t0.elapsed().as_secs_f64();
     let snap = client.metrics().snapshot();
+    // `--metrics-format prometheus`: dump the machine-readable exposition
+    // instead of the human summary (metric names are a stable contract).
+    if args.str_flag("metrics-format") == Some("prometheus") {
+        print!("{}", snap.render_prometheus());
+        client.shutdown();
+        return;
+    }
     println!(
         "completed {} requests in {:.3}s ({:.1} req/s)",
         snap.completed,
@@ -555,10 +580,99 @@ fn cmd_serve(args: &Args) {
             snap.rejected, snap.expired, snap.cancelled, snap.failed, shed, reply_errors
         );
     }
+    if !snap.stage_stats.is_empty() {
+        println!("stage latencies:");
+        for st in &snap.stage_stats {
+            println!(
+                "  {:<13} {:>6} spans  p50 {:?}  p95 {:?}  p99 {:?}",
+                st.stage.name(),
+                st.count,
+                Duration::from_nanos(st.p50_ns),
+                Duration::from_nanos(st.p95_ns),
+                Duration::from_nanos(st.p99_ns)
+            );
+        }
+        if snap.dropped_spans > 0 {
+            println!("  ({} spans evicted from the trace ring)", snap.dropped_spans);
+        }
+    }
+    if let Some(numeric) = &snap.numeric {
+        let events = numeric.nonzero();
+        if !events.is_empty() {
+            println!("numeric health :");
+            for (method, counter, n) in events {
+                println!("  {method}/{}: {n}", counter.name());
+            }
+        }
+    }
     for (name, count) in snap.per_method {
         println!("  {name}: {count}");
     }
     client.shutdown();
+}
+
+/// `tcec trace`: run a small scripted workload through the service with
+/// full telemetry and dump the spans as Chrome `trace_event` JSON (load
+/// the file in `chrome://tracing` or Perfetto). DESIGN.md §12.
+fn cmd_trace(args: &Args) {
+    let requests = args.usize_flag("requests", 8);
+    let size = args.usize_flag("size", 64);
+    let out = args.str_flag("out").unwrap_or("tcec-trace.json");
+    let mut builder = GemmService::builder()
+        .workers(args.usize_flag("workers", 2))
+        .max_batch(args.usize_flag("batch", 4))
+        .telemetry(TelemetryConfig::full());
+    if args.bool_flag("shard") {
+        // min_flops 0 so even this small scripted workload exercises the
+        // Shard/Reduce spans.
+        builder = builder.shard(shard::ShardConfig {
+            workers: args.usize_flag("shard-workers", 4),
+            min_flops: 0,
+            ..shard::ShardConfig::default()
+        });
+    }
+    let client = builder.client(Arc::new(SimExecutor::new()));
+    let tracer = client.service().tracer().expect("tracing was enabled at build time");
+    let mut tickets = Vec::with_capacity(requests);
+    for i in 0..requests {
+        let a = Workload::Urand { lo: -1.0, hi: 1.0 }.generate(size, size, i as u64);
+        let b = Workload::Urand { lo: -1.0, hi: 1.0 }.generate(size, size, 1000 + i as u64);
+        match client.call(a, b).policy(Policy::Fp32Accuracy).submit() {
+            Ok(t) => tickets.push(t),
+            Err(e) => eprintln!("request {i} not admitted: {e}"),
+        }
+    }
+    for t in tickets {
+        let id = t.id();
+        if let Err(e) = t.wait() {
+            eprintln!("request {id} failed: {e}");
+        }
+    }
+    // Join the workers before exporting so trailing Reply spans are in.
+    client.shutdown();
+    println!("stage latencies:");
+    for st in tracer.stage_stats() {
+        println!(
+            "  {:<13} {:>6} spans  p50 {:?}  p95 {:?}  p99 {:?}",
+            st.stage.name(),
+            st.count,
+            Duration::from_nanos(st.p50_ns),
+            Duration::from_nanos(st.p95_ns),
+            Duration::from_nanos(st.p99_ns)
+        );
+    }
+    let json = tracer.export_chrome_json();
+    match std::fs::write(out, &json) {
+        Ok(()) => println!(
+            "wrote {} spans ({} evicted) to {out}",
+            tracer.spans().len(),
+            tracer.dropped()
+        ),
+        Err(e) => {
+            eprintln!("error: could not write {out}: {e}");
+            std::process::exit(1);
+        }
+    }
 }
 
 fn cmd_experiment(args: &Args) {
@@ -694,6 +808,7 @@ fn main() {
         Some("plan") => cmd_plan(&args),
         Some("solve") => cmd_solve(&args),
         Some("serve") => cmd_serve(&args),
+        Some("trace") => cmd_trace(&args),
         Some("experiment") => cmd_experiment(&args),
         Some("artifacts") => cmd_artifacts(&args),
         Some("methods") => {

@@ -101,6 +101,11 @@ pub struct ExecPlan {
     /// Tile-aware projected throughput of (method, tile) at this problem
     /// size (`autotune::score`, TFlop/s).
     pub est_cost_tflops: f64,
+    /// The combined exponent-range class the probe assigned this request
+    /// (Fig. 11) — `None` on forced-method plans, which skip the probe.
+    /// Surfaced so the service can tally per-class traffic in `Metrics`
+    /// (the telemetry layer's `range_class` counter).
+    pub class: Option<RangeClass>,
 }
 
 impl ExecPlan {
@@ -183,10 +188,11 @@ fn build_plan(
     m: usize,
     n: usize,
     k: usize,
-    extreme: bool,
+    class: Option<RangeClass>,
     cfg: &PlannerConfig,
     tiles: Option<&PlanCache>,
 ) -> ExecPlan {
+    let extreme = class == Some(RangeClass::Extreme);
     let n_eff = effective_n(m, n, k);
     let bucket = n_bucket(m, n, k);
     let tile = match tiles {
@@ -209,6 +215,7 @@ fn build_plan(
         shard: shard_plan,
         prescale: method == Method::OursHalfHalfPre,
         est_cost_tflops: est,
+        class,
     }
 }
 
@@ -225,7 +232,7 @@ pub fn plan(
     cfg: &PlannerConfig,
 ) -> ExecPlan {
     let method = select_method(policy, class, &cfg.gpu, effective_n(m, n, k));
-    build_plan(method, m, n, k, class == RangeClass::Extreme, cfg, None)
+    build_plan(method, m, n, k, Some(class), cfg, None)
 }
 
 /// One-shot planning with the method pinned (`force_method`, benches,
@@ -237,7 +244,7 @@ pub fn plan_for_method(
     k: usize,
     cfg: &PlannerConfig,
 ) -> ExecPlan {
-    build_plan(method, m, n, k, false, cfg, None)
+    build_plan(method, m, n, k, None, cfg, None)
 }
 
 /// One rejected (or tied) candidate in an [`Explain`] report.
@@ -318,22 +325,14 @@ impl Planner {
     ) -> Arc<ExecPlan> {
         self.plans.get_or_plan(m, n, k, PlanSelector::Routed { class, policy }, || {
             let method = select_method(policy, class, &self.cfg.gpu, effective_n(m, n, k));
-            build_plan(
-                method,
-                m,
-                n,
-                k,
-                class == RangeClass::Extreme,
-                &self.cfg,
-                Some(&self.plans),
-            )
+            build_plan(method, m, n, k, Some(class), &self.cfg, Some(&self.plans))
         })
     }
 
     /// Cached planning with the method pinned (the `force_method` path).
     pub fn plan_for_method(&self, method: Method, m: usize, n: usize, k: usize) -> Arc<ExecPlan> {
         self.plans.get_or_plan(m, n, k, PlanSelector::Forced { method }, || {
-            build_plan(method, m, n, k, false, &self.cfg, Some(&self.plans))
+            build_plan(method, m, n, k, None, &self.cfg, Some(&self.plans))
         })
     }
 

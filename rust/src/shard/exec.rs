@@ -16,8 +16,10 @@ use super::reduce::{assemble, gather_a, gather_b, slice_k_columns};
 use crate::coordinator::{BatchKey, Executor, GemmRequest, Metrics};
 use crate::gemm::{scaling, Mat, Method, TileConfig};
 use crate::planner::ExecPlan;
+use crate::telemetry::{Stage, Tracer};
 use std::sync::mpsc::channel;
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
+use std::time::Instant;
 
 /// Outcome statistics of one sharded GEMM.
 #[derive(Debug, Clone, Copy)]
@@ -64,7 +66,7 @@ pub fn sharded_gemm(
     inner: &Arc<dyn Executor>,
     pool: &WorkerPool,
 ) -> (Mat, ShardStats) {
-    sharded_gemm_impl(a, b, method, policy, plan, inner, pool, None)
+    sharded_gemm_impl(a, b, method, policy, plan, inner, pool, None, None)
 }
 
 /// [`sharded_gemm`] with the engine tile threaded explicitly: every shard
@@ -83,6 +85,7 @@ fn sharded_gemm_impl(
     inner: &Arc<dyn Executor>,
     pool: &WorkerPool,
     planned_tile: Option<TileConfig>,
+    trace: Option<(&Arc<Tracer>, u64)>,
 ) -> (Mat, ShardStats) {
     // Pre-scaled halfhalf must hoist its (global-max-exponent) scaling
     // above the cut: shard-local scales would disagree with the unsharded
@@ -114,6 +117,7 @@ fn sharded_gemm_impl(
             tile,
             shard: None,
             prescale: false,
+            class: None,
             est_cost_tflops: 0.0,
         })
     });
@@ -121,6 +125,9 @@ fn sharded_gemm_impl(
     // Exact per-request steal attribution: the pool tells each job whether
     // it was stolen.
     let steals = Arc::new(std::sync::atomic::AtomicU64::new(0));
+    // Owned (Arc, id) copy the 'static pool jobs can capture for per-shard
+    // [`Stage::Shard`] spans.
+    let shard_trace: Option<(Arc<Tracer>, u64)> = trace.map(|(t, id)| (Arc::clone(t), id));
     let (tx, rx) = channel::<(usize, usize, usize, Option<Mat>)>();
     let kslices = plan.kslices;
     let bk = plan.engine_tile.bk;
@@ -164,10 +171,12 @@ fn sharded_gemm_impl(
                 let tx = tx.clone();
                 let steals = Arc::clone(&steals);
                 let sub_plan = sub_plan.clone();
+                let shard_trace = shard_trace.clone();
                 pool.submit(Box::new(move |stolen| {
                     if stolen {
                         steals.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                     }
+                    let t0 = Instant::now();
                     let a_sub = (*a_part).clone();
                     let b_sub = (*b_part).clone();
                     let key = BatchKey { m: rows, n: cols, k: a_sub.cols, method: eff_method };
@@ -179,6 +188,9 @@ fn sharded_gemm_impl(
                     }
                     .into_iter()
                     .next();
+                    if let Some((t, id)) = &shard_trace {
+                        t.record_since(*id, Stage::Shard, t0);
+                    }
                     let ok = matches!(&out, Some(m) if m.rows == rows && m.cols == cols);
                     let _ = tx.send((ri, ci, s, if ok { out } else { None }));
                 }));
@@ -226,6 +238,7 @@ fn sharded_gemm_impl(
                     tile,
                     shard: None,
                     prescale: method == Method::OursHalfHalfPre,
+                    class: None,
                     est_cost_tflops: 0.0,
                 };
                 inner.execute_planned(&p, &key, &reqs)
@@ -253,7 +266,11 @@ fn sharded_gemm_impl(
                 .collect()
         })
         .collect();
+    let reduce_t0 = Instant::now();
     let (mut c, depth) = assemble(plan, &partials);
+    if let Some((t, id)) = trace {
+        t.record_since(id, Stage::Reduce, reduce_t0);
+    }
     if let Some(total) = descale {
         // Same exact epilogue as `gemm_scaled` — shared so it cannot drift.
         c = scaling::descale_pow2(&c, total);
@@ -271,12 +288,13 @@ pub struct ShardedExecutor {
     cfg: ShardConfig,
     pool: WorkerPool,
     metrics: Option<Arc<Metrics>>,
+    tracer: OnceLock<Arc<Tracer>>,
 }
 
 impl ShardedExecutor {
     pub fn new(inner: Arc<dyn Executor>, cfg: ShardConfig) -> ShardedExecutor {
         let pool = WorkerPool::new(cfg.workers);
-        ShardedExecutor { inner, cfg, pool, metrics: None }
+        ShardedExecutor { inner, cfg, pool, metrics: None, tracer: OnceLock::new() }
     }
 
     /// Like [`ShardedExecutor::new`], reporting shard/steal/reduction
@@ -287,7 +305,7 @@ impl ShardedExecutor {
         metrics: Arc<Metrics>,
     ) -> ShardedExecutor {
         let pool = WorkerPool::new(cfg.workers);
-        ShardedExecutor { inner, cfg, pool, metrics: Some(metrics) }
+        ShardedExecutor { inner, cfg, pool, metrics: Some(metrics), tracer: OnceLock::new() }
     }
 
     pub fn config(&self) -> &ShardConfig {
@@ -322,8 +340,17 @@ impl Executor for ShardedExecutor {
             Some(p) => reqs
                 .iter()
                 .map(|r| {
-                    let (c, stats) =
-                        sharded_gemm(&r.a, &r.b, key.method, r.policy, &p, &self.inner, &self.pool);
+                    let (c, stats) = sharded_gemm_impl(
+                        &r.a,
+                        &r.b,
+                        key.method,
+                        r.policy,
+                        &p,
+                        &self.inner,
+                        &self.pool,
+                        None,
+                        self.tracer.get().map(|t| (t, r.id)),
+                    );
                     self.record_stats(&stats);
                     c
                 })
@@ -355,6 +382,7 @@ impl Executor for ShardedExecutor {
                         &self.inner,
                         &self.pool,
                         Some(exec_plan.tile),
+                        self.tracer.get().map(|t| (t, r.id)),
                     );
                     self.record_stats(&stats);
                     c
@@ -373,6 +401,14 @@ impl Executor for ShardedExecutor {
 
     fn attach_split_cache(&self, cache: Arc<crate::coordinator::SplitCache>) -> bool {
         self.inner.attach_split_cache(cache)
+    }
+
+    fn attach_tracer(&self, tracer: Arc<Tracer>) -> bool {
+        // Keep a handle for per-shard/reduce spans AND forward to the inner
+        // executor so it can record the split stage.
+        let _ = self.tracer.set(Arc::clone(&tracer));
+        self.inner.attach_tracer(tracer);
+        true
     }
 }
 
@@ -453,6 +489,7 @@ mod tests {
             tile,
             shard: None,
             prescale: false,
+            class: None,
             est_cost_tflops: 0.0,
         };
         let out = ex.execute_planned(&unsharded, &key, &reqs);
@@ -463,6 +500,7 @@ mod tests {
             tile: sp.engine_tile,
             shard: Some(sp.clone()),
             prescale: false,
+            class: None,
             est_cost_tflops: 0.0,
         };
         let out = ex.execute_planned(&sharded, &key, &reqs);

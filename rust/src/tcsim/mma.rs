@@ -52,6 +52,18 @@ pub fn fma_count() -> u64 {
     MMA_FMA_COUNT.with(|c| c.get())
 }
 
+/// Telemetry: attribute `steps` accumulator rounding steps to the RZ or
+/// RN counter family (Fig. 5 — the rounding mode, not the width, is what
+/// separates hardware Tensor Cores from the paper's `mma_rn` device).
+/// One gated call per tile, never per element, so the simulator hot loop
+/// is untouched. No-op when telemetry is disabled.
+#[inline]
+fn record_rounding_steps(mode: Rounding, steps: u64) {
+    use crate::telemetry::numeric::{record, Counter};
+    let c = if mode == Rounding::RZ { Counter::MmaStepsRz } else { Counter::MmaStepsRn };
+    record(c, steps);
+}
+
 /// `d = a×b + c` over row-major tiles: `a` is m×k, `b` is k×n, `c`/`d` m×n.
 ///
 /// `a` and `b` must already hold values on the input grid (f16 or TF32
@@ -149,6 +161,7 @@ pub fn mma_tile_acc(
         }
     }
     MMA_FMA_COUNT.with(|cnt| cnt.set(cnt.get() + (m * n * k) as u64));
+    record_rounding_steps(mode, (m * n * k) as u64);
 }
 
 /// RZ-specialized inner loop (see [`mma_tile_acc`] §Perf iteration 5).
@@ -192,6 +205,7 @@ fn mma_tile_acc_rz(d: &mut [f32], a: &[f32], b: &[f32], m: usize, n: usize, k: u
         }
     }
     MMA_FMA_COUNT.with(|cnt| cnt.set(cnt.get() + (m * n * k) as u64));
+    record_rounding_steps(Rounding::RZ, (m * n * k) as u64);
 }
 
 /// `d = a×b` with an implicit zero C fragment (the RZ-avoidance pattern) —
@@ -241,6 +255,10 @@ pub fn mma_into_external_accumulator(
     for (dst, t) in acc.iter_mut().zip(tmp.iter()) {
         *dst += *t; // native f32 add = RN = the FP32 SIMT core
     }
+    crate::telemetry::numeric::record(
+        crate::telemetry::numeric::Counter::ExtRnAdds,
+        (m * n) as u64,
+    );
 }
 
 #[cfg(test)]

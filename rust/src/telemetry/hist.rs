@@ -1,0 +1,200 @@
+//! Lock-free log-spaced histograms with percentile derivation.
+//!
+//! One power-of-two bucket per binary order of magnitude (64 buckets covers
+//! the whole `u64` range), recorded with relaxed atomic adds so the hot
+//! path never takes a lock. This replaces the single coarse 8-bucket
+//! request-latency histogram the service shipped before the telemetry
+//! layer: every traced stage gets its own histogram, and p50/p95/p99 are
+//! derived from the bucket counts (quantiles are upper bounds of the
+//! containing bucket, so they are conservative by at most 2x — the price
+//! of log spacing, stated plainly).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of log2 buckets; bucket `i` holds values in `[2^i, 2^(i+1))`
+/// (bucket 0 additionally holds 0).
+pub const HIST_BUCKETS: usize = 64;
+
+/// Bucket index of `v`: `floor(log2(max(v, 1)))`.
+#[inline]
+pub fn bucket_of(v: u64) -> usize {
+    (63 - (v | 1).leading_zeros()) as usize
+}
+
+/// Inclusive upper bound of bucket `i` — the value a quantile query
+/// reports for a rank that lands in this bucket.
+#[inline]
+pub fn bucket_bound(i: usize) -> u64 {
+    if i >= 63 {
+        u64::MAX
+    } else {
+        (1u64 << (i + 1)) - 1
+    }
+}
+
+/// A log2-spaced histogram over `u64` samples (nanoseconds, counts, …).
+/// `record` is wait-free (three relaxed atomic adds); readers take a
+/// consistent-enough snapshot bucket by bucket (monotone counters, so a
+/// concurrent snapshot can only lag, never invent samples).
+#[derive(Debug)]
+pub struct LogHistogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram::new()
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> LogHistogram {
+        LogHistogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one sample.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Point-in-time copy for quantile queries and rendering.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            buckets: std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed)),
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Plain-data copy of a [`LogHistogram`] with quantile derivation.
+#[derive(Debug, Clone)]
+pub struct HistogramSnapshot {
+    pub buckets: [u64; HIST_BUCKETS],
+    pub count: u64,
+    pub sum: u64,
+}
+
+impl HistogramSnapshot {
+    pub fn empty() -> HistogramSnapshot {
+        HistogramSnapshot { buckets: [0; HIST_BUCKETS], count: 0, sum: 0 }
+    }
+
+    /// The q-quantile (q in [0, 1]) as the upper bound of the bucket the
+    /// rank lands in; 0 when the histogram is empty.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (i, &b) in self.buckets.iter().enumerate() {
+            cum += b;
+            if cum >= rank {
+                return bucket_bound(i);
+            }
+        }
+        bucket_bound(HIST_BUCKETS - 1)
+    }
+
+    /// Exact arithmetic mean of the recorded samples (not bucketed).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_edges() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 0);
+        assert_eq!(bucket_of(2), 1);
+        assert_eq!(bucket_of(3), 1);
+        assert_eq!(bucket_of(4), 2);
+        assert_eq!(bucket_of(1023), 9);
+        assert_eq!(bucket_of(1024), 10);
+        assert_eq!(bucket_of(u64::MAX), 63);
+        assert_eq!(bucket_bound(0), 1);
+        assert_eq!(bucket_bound(9), 2047);
+        assert_eq!(bucket_bound(63), u64::MAX);
+    }
+
+    #[test]
+    fn quantiles_are_conservative_upper_bounds() {
+        let h = LogHistogram::new();
+        for v in [10u64, 20, 30, 1000, 5000] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 5);
+        // p50 lands on the 30-sample's bucket [16,32) → bound 31.
+        assert_eq!(s.quantile(0.5), 31);
+        // p99 lands on the 5000-sample's bucket [4096,8192) → bound 8191.
+        assert_eq!(s.quantile(0.99), 8191);
+        // Every quantile is >= the true value it covers.
+        assert!(s.quantile(0.2) >= 10);
+        assert!((s.mean() - 1212.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_histogram_reports_zero() {
+        let s = LogHistogram::new().snapshot();
+        assert_eq!(s.quantile(0.5), 0);
+        assert_eq!(s.mean(), 0.0);
+    }
+
+    #[test]
+    fn quantile_monotone_in_q() {
+        let h = LogHistogram::new();
+        for i in 0..1000u64 {
+            h.record(i * i);
+        }
+        let s = h.snapshot();
+        let mut last = 0;
+        for q in [0.0, 0.1, 0.5, 0.9, 0.95, 0.99, 1.0] {
+            let v = s.quantile(q);
+            assert!(v >= last, "quantile({q}) regressed");
+            last = v;
+        }
+    }
+
+    #[test]
+    fn concurrent_records_all_land() {
+        let h = std::sync::Arc::new(LogHistogram::new());
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                let h = h.clone();
+                std::thread::spawn(move || {
+                    for i in 0..1000u64 {
+                        h.record(t * 1000 + i);
+                    }
+                })
+            })
+            .collect();
+        for j in handles {
+            j.join().unwrap();
+        }
+        assert_eq!(h.snapshot().count, 4000);
+        assert_eq!(h.snapshot().buckets.iter().sum::<u64>(), 4000);
+    }
+}

@@ -1,0 +1,87 @@
+//! L3.5 — observability: request tracing and numerical-health telemetry.
+//!
+//! The paper's accuracy story hinges on runtime phenomena that are
+//! invisible from outside a GEMM: rounding inside the Tensor-Core
+//! accumulator (Fig. 5) and underflow of the correction term ΔA·ΔB
+//! (Fig. 8). A serving stack that routes between thirteen methods by
+//! accuracy class needs those signals online. This layer provides them
+//! in two pillars, both std-only:
+//!
+//! * [`trace`] — per-request stage spans (intake-admit → plan →
+//!   batch-linger → split → execute → shard → reduce → reply) into a
+//!   bounded drop-oldest [`TraceRing`], per-stage log-spaced latency
+//!   histograms with p50/p95/p99, and Chrome `trace_event` export
+//!   (`tcec trace --out`, `tcec serve --trace N`).
+//! * [`numeric`] — counters for correction-term underflow, prescale
+//!   applications, RZ-vs-RN accumulator rounding steps and external RN
+//!   accumulation, attributed per method and surfaced through
+//!   `Metrics::snapshot` / `Snapshot::render_prometheus`.
+//!
+//! Two invariants are pinned by tests (`rust/tests/telemetry.rs`):
+//! instrumentation is zero-cost-when-disabled (one relaxed load per
+//! site; overhead measured by `benches/telemetry_overhead.rs`), and
+//! enabling it perturbs no output bit — every method's result is
+//! bitwise identical with telemetry fully on.
+
+pub mod hist;
+pub mod numeric;
+pub mod trace;
+
+pub use hist::{HistogramSnapshot, LogHistogram, HIST_BUCKETS};
+pub use numeric::{Counter, MethodCtx, NumericSnapshot, NUM_COUNTERS};
+pub use trace::{Span, Stage, StageStats, TraceRing, Tracer, NUM_STAGES};
+
+/// What a service switches on, set via `ServiceBuilder::telemetry`.
+/// Default is everything off — the zero-cost path.
+#[derive(Debug, Clone)]
+pub struct TelemetryConfig {
+    /// Record stage spans into a per-service [`Tracer`].
+    pub tracing: bool,
+    /// Span-ring capacity when `tracing` is on (0 → default 4096).
+    pub trace_capacity: usize,
+    /// Enable the process-global numerical-health counters for the
+    /// service's lifetime (refcounted: see [`numeric::enable`]).
+    pub numeric: bool,
+}
+
+impl Default for TelemetryConfig {
+    fn default() -> Self {
+        TelemetryConfig { tracing: false, trace_capacity: 4096, numeric: false }
+    }
+}
+
+impl TelemetryConfig {
+    /// Everything on, default ring capacity.
+    pub fn full() -> TelemetryConfig {
+        TelemetryConfig { tracing: true, trace_capacity: 4096, numeric: true }
+    }
+
+    /// Effective ring capacity (the 0-means-default rule).
+    pub fn ring_capacity(&self) -> usize {
+        if self.trace_capacity == 0 {
+            4096
+        } else {
+            self.trace_capacity
+        }
+    }
+
+    pub fn any_enabled(&self) -> bool {
+        self.tracing || self.numeric
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_defaults_off() {
+        let c = TelemetryConfig::default();
+        assert!(!c.any_enabled());
+        assert_eq!(c.ring_capacity(), 4096);
+        let f = TelemetryConfig::full();
+        assert!(f.tracing && f.numeric && f.any_enabled());
+        let zero = TelemetryConfig { trace_capacity: 0, ..TelemetryConfig::full() };
+        assert_eq!(zero.ring_capacity(), 4096);
+    }
+}

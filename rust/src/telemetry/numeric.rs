@@ -1,0 +1,387 @@
+//! Numerical-health counters: the runtime events the paper shows decide
+//! mixed-precision accuracy, surfaced live instead of only in offline
+//! experiments.
+//!
+//! Four event families are counted (see [`Counter`]): correction-term
+//! underflow during the ΔA/ΔB conversion (the Fig. 8 hazard — elements
+//! flushed to zero or landing subnormal), prescale-shift applications
+//! (the `OursHalfHalfPre` mitigation), accumulator rounding steps in the
+//! simulated MMA split by RZ vs RN (Fig. 5), and FP32 RN accumulation
+//! steps taken *outside* the simulated Tensor Core (the paper's
+//! RZ-avoidance trick).
+//!
+//! # Zero-cost-when-disabled
+//!
+//! All counting is gated on a process-global refcount ([`enable`] /
+//! [`disable`], flipped by services whose `TelemetryConfig` asks for
+//! numeric telemetry). When disabled, every instrumentation site costs
+//! exactly one relaxed atomic load and a predictable branch — no
+//! thread-local access, no atomic writes. Counting never inspects or
+//! alters a value on the compute path beyond classifying it, so enabling
+//! telemetry cannot perturb a single output bit (pinned by
+//! `tests/telemetry.rs`).
+//!
+//! # Per-method attribution
+//!
+//! Counts are attributed to the [`Method`](crate::gemm::Method) whose
+//! `prepare_with` / `run_prepared_with` frame is active on the current
+//! thread (a [`MethodCtx`] guard, entered at those two choke points).
+//! While a guard is live, increments accumulate in thread-local cells and
+//! flush to the global per-method sink when the guard drops — one atomic
+//! add per (counter, frame) instead of per element. Increments outside
+//! any guard go to an `untagged` slot directly.
+//!
+//! The sink is process-global (the counters are threaded through free
+//! functions in `fp::split` and `tcsim::mma` that have no service
+//! handle). `Metrics` captures a [`NumericSnapshot`] baseline when its
+//! service starts and reports deltas, so two sequential services don't
+//! see each other's counts; two *concurrent* services in one process do
+//! share the sink — a stated limitation, not a bug.
+
+use crate::gemm::Method;
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// The counted event families, in sink-slot order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Counter {
+    /// Correction-term elements whose nonzero residual flushed to ±0 in
+    /// the low-precision conversion (total underflow — Fig. 8).
+    SplitFlushed = 0,
+    /// Correction-term elements that landed in the subnormal range
+    /// (gradual underflow: representable, but with reduced precision).
+    SplitSubnormal = 1,
+    /// Operands prescaled by a nonzero power-of-two shift before
+    /// splitting (`OursHalfHalfPre`).
+    PrescaleApplied = 2,
+    /// Simulated-MMA accumulator rounding steps under round-toward-zero.
+    MmaStepsRz = 3,
+    /// Simulated-MMA accumulator rounding steps under round-to-nearest
+    /// (any non-RZ mode).
+    MmaStepsRn = 4,
+    /// FP32 round-to-nearest accumulation steps taken outside the
+    /// simulated Tensor Core (the zero-C RZ-avoidance path).
+    ExtRnAdds = 5,
+}
+
+pub const NUM_COUNTERS: usize = 6;
+
+impl Counter {
+    pub const ALL: [Counter; NUM_COUNTERS] = [
+        Counter::SplitFlushed,
+        Counter::SplitSubnormal,
+        Counter::PrescaleApplied,
+        Counter::MmaStepsRz,
+        Counter::MmaStepsRn,
+        Counter::ExtRnAdds,
+    ];
+
+    /// Stable metric-name stem (the Prometheus exposition contract).
+    pub fn name(self) -> &'static str {
+        match self {
+            Counter::SplitFlushed => "split_underflow_flushed",
+            Counter::SplitSubnormal => "split_underflow_subnormal",
+            Counter::PrescaleApplied => "prescale_applied",
+            Counter::MmaStepsRz => "mma_steps_rz",
+            Counter::MmaStepsRn => "mma_steps_rn",
+            Counter::ExtRnAdds => "external_rn_adds",
+        }
+    }
+}
+
+/// One attribution slot per method plus the trailing `untagged` slot.
+pub const NUM_SLOTS: usize = Method::ALL.len() + 1;
+const UNTAGGED: usize = NUM_SLOTS - 1;
+const NO_CTX: usize = usize::MAX;
+
+static ENABLED: AtomicU64 = AtomicU64::new(0);
+
+// Flat [slot][counter] sink. A const item is the portable way to
+// const-init an atomic array; the interior-mutability lint does not apply
+// (the const is only a repeat seed, never borrowed).
+#[allow(clippy::declare_interior_mutable_const)]
+const ATOMIC_ZERO: AtomicU64 = AtomicU64::new(0);
+static SINK: [AtomicU64; NUM_SLOTS * NUM_COUNTERS] = [ATOMIC_ZERO; NUM_SLOTS * NUM_COUNTERS];
+
+thread_local! {
+    static CTX: Cell<usize> = const { Cell::new(NO_CTX) };
+    static PENDING: [Cell<u64>; NUM_COUNTERS] = const {
+        [Cell::new(0), Cell::new(0), Cell::new(0), Cell::new(0), Cell::new(0), Cell::new(0)]
+    };
+}
+
+#[inline]
+fn sink(slot: usize, c: Counter) -> &'static AtomicU64 {
+    &SINK[slot * NUM_COUNTERS + c as usize]
+}
+
+fn slot_of(m: Method) -> usize {
+    Method::ALL.iter().position(|&x| x == m).unwrap_or(UNTAGGED)
+}
+
+/// Whether numeric telemetry is currently enabled. One relaxed load —
+/// this is the entire disabled-mode cost of every instrumentation site.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed) != 0
+}
+
+/// Enable numeric counting (refcounted; services call this at start).
+pub fn enable() {
+    ENABLED.fetch_add(1, Ordering::SeqCst);
+}
+
+/// Undo one [`enable`]. Saturates at zero, so a stray extra call cannot
+/// wedge the flag negative.
+pub fn disable() {
+    let _ = ENABLED.fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| v.checked_sub(1));
+}
+
+/// Record `n` events of kind `c`, attributed to the active [`MethodCtx`]
+/// (or `untagged` when none). No-op when disabled or `n == 0`.
+#[inline]
+pub fn record(c: Counter, n: u64) {
+    if n == 0 || !enabled() {
+        return;
+    }
+    record_enabled(c, n);
+}
+
+fn record_enabled(c: Counter, n: u64) {
+    if CTX.with(|ctx| ctx.get()) == NO_CTX {
+        sink(UNTAGGED, c).fetch_add(n, Ordering::Relaxed);
+    } else {
+        PENDING.with(|p| {
+            let cell = &p[c as usize];
+            cell.set(cell.get() + n);
+        });
+    }
+}
+
+/// Drain this thread's pending deltas into the given slot.
+fn flush_pending(slot: usize) {
+    PENDING.with(|p| {
+        for (i, cell) in p.iter().enumerate() {
+            let v = cell.take();
+            if v != 0 {
+                SINK[slot * NUM_COUNTERS + i].fetch_add(v, Ordering::Relaxed);
+            }
+        }
+    });
+}
+
+/// RAII frame attributing this thread's counter increments to `method`
+/// until dropped. Entered by `Method::prepare_with` and
+/// `Method::run_prepared_with` — the two points every compute path
+/// (direct, batched, sharded, solver) passes through. Nesting-safe: a
+/// new frame first flushes outstanding deltas to the frame it interrupts.
+#[must_use = "the context attributes counts only while alive"]
+#[derive(Debug)]
+pub struct MethodCtx {
+    slot: usize,
+    prev: usize,
+}
+
+impl MethodCtx {
+    /// Enter a method frame; `None` (and no cost beyond the enabled
+    /// check) when telemetry is disabled.
+    pub fn enter(method: Method) -> Option<MethodCtx> {
+        if !enabled() {
+            return None;
+        }
+        let slot = slot_of(method);
+        let prev = CTX.with(|c| c.replace(slot));
+        if prev != NO_CTX {
+            // Attribute what the interrupted frame accrued before
+            // handing the pending cells to this frame.
+            flush_pending(prev);
+        }
+        Some(MethodCtx { slot, prev })
+    }
+}
+
+impl Drop for MethodCtx {
+    fn drop(&mut self) {
+        flush_pending(self.slot);
+        CTX.with(|c| c.set(self.prev));
+    }
+}
+
+/// Point-in-time copy of the whole sink. `capture` sees only deltas that
+/// have been flushed (a live `MethodCtx` on another thread still holds
+/// its frame's counts); frames always flush before their result is
+/// returned, so a quiesced pipeline is fully visible.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NumericSnapshot {
+    counts: [u64; NUM_SLOTS * NUM_COUNTERS],
+}
+
+impl Default for NumericSnapshot {
+    fn default() -> Self {
+        NumericSnapshot { counts: [0; NUM_SLOTS * NUM_COUNTERS] }
+    }
+}
+
+impl NumericSnapshot {
+    pub fn capture() -> NumericSnapshot {
+        NumericSnapshot {
+            counts: std::array::from_fn(|i| SINK[i].load(Ordering::Relaxed)),
+        }
+    }
+
+    /// Per-entry difference `self - since` (wrapping; counters are
+    /// monotone so a genuine capture pair never wraps).
+    pub fn delta(&self, since: &NumericSnapshot) -> NumericSnapshot {
+        NumericSnapshot {
+            counts: std::array::from_fn(|i| self.counts[i].wrapping_sub(since.counts[i])),
+        }
+    }
+
+    /// Total of counter `c` across every method and the untagged slot.
+    pub fn total(&self, c: Counter) -> u64 {
+        (0..NUM_SLOTS).map(|s| self.counts[s * NUM_COUNTERS + c as usize]).sum()
+    }
+
+    /// Counter `c` attributed to `method`.
+    pub fn by_method(&self, method: Method, c: Counter) -> u64 {
+        self.counts[slot_of(method) * NUM_COUNTERS + c as usize]
+    }
+
+    /// Counter `c` recorded outside any method frame.
+    pub fn untagged(&self, c: Counter) -> u64 {
+        self.counts[UNTAGGED * NUM_COUNTERS + c as usize]
+    }
+
+    /// Iterate nonzero (method-name-or-"untagged", counter, value)
+    /// triples, in stable slot order — the exposition render order.
+    pub fn nonzero(&self) -> Vec<(&'static str, Counter, u64)> {
+        let mut out = Vec::new();
+        for slot in 0..NUM_SLOTS {
+            let name =
+                if slot == UNTAGGED { "untagged" } else { Method::ALL[slot].name() };
+            for c in Counter::ALL {
+                let v = self.counts[slot * NUM_COUNTERS + c as usize];
+                if v != 0 {
+                    out.push((name, c, v));
+                }
+            }
+        }
+        out
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.counts.iter().all(|&v| v == 0)
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod test_support {
+    use std::sync::Mutex;
+
+    /// Serializes every unit test that flips the global enable flag or
+    /// asserts on sink deltas (the sink is process-global). Lock with
+    /// `lock().unwrap_or_else(|e| e.into_inner())` so one panicking test
+    /// cannot poison the rest.
+    pub static GATE: Mutex<()> = Mutex::new(());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gate() -> std::sync::MutexGuard<'static, ()> {
+        test_support::GATE.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn disabled_records_nothing() {
+        let _g = gate();
+        let before = NumericSnapshot::capture();
+        record(Counter::SplitFlushed, 5);
+        assert_eq!(NumericSnapshot::capture().delta(&before).total(Counter::SplitFlushed), 0);
+    }
+
+    #[test]
+    fn untagged_records_go_direct() {
+        let _g = gate();
+        enable();
+        let before = NumericSnapshot::capture();
+        record(Counter::MmaStepsRz, 7);
+        let d = NumericSnapshot::capture().delta(&before);
+        disable();
+        assert_eq!(d.untagged(Counter::MmaStepsRz), 7);
+        assert_eq!(d.total(Counter::MmaStepsRz), 7);
+    }
+
+    #[test]
+    fn method_ctx_attributes_and_flushes_on_drop() {
+        let _g = gate();
+        enable();
+        let before = NumericSnapshot::capture();
+        {
+            let _ctx = MethodCtx::enter(Method::OursHalfHalf);
+            record(Counter::SplitFlushed, 3);
+            // Not yet flushed: still pending in the thread-local cells.
+            let mid = NumericSnapshot::capture().delta(&before);
+            assert_eq!(mid.total(Counter::SplitFlushed), 0);
+        }
+        let d = NumericSnapshot::capture().delta(&before);
+        disable();
+        assert_eq!(d.by_method(Method::OursHalfHalf, Counter::SplitFlushed), 3);
+        assert_eq!(d.untagged(Counter::SplitFlushed), 0);
+    }
+
+    #[test]
+    fn nested_ctx_splits_attribution() {
+        let _g = gate();
+        enable();
+        let before = NumericSnapshot::capture();
+        {
+            let _outer = MethodCtx::enter(Method::OursHalfHalf);
+            record(Counter::ExtRnAdds, 2);
+            {
+                let _inner = MethodCtx::enter(Method::Fp32Simt);
+                record(Counter::ExtRnAdds, 10);
+            }
+            record(Counter::ExtRnAdds, 1);
+        }
+        let d = NumericSnapshot::capture().delta(&before);
+        disable();
+        assert_eq!(d.by_method(Method::OursHalfHalf, Counter::ExtRnAdds), 3);
+        assert_eq!(d.by_method(Method::Fp32Simt, Counter::ExtRnAdds), 10);
+    }
+
+    #[test]
+    fn enable_is_refcounted_and_disable_saturates() {
+        let _g = gate();
+        assert!(!enabled());
+        enable();
+        enable();
+        disable();
+        assert!(enabled(), "second enable still holds");
+        disable();
+        assert!(!enabled());
+        disable(); // stray extra disable is a no-op
+        assert!(!enabled());
+        enable();
+        assert!(enabled(), "flag not wedged by the stray disable");
+        disable();
+    }
+
+    #[test]
+    fn snapshot_nonzero_lists_in_slot_order() {
+        let _g = gate();
+        enable();
+        let before = NumericSnapshot::capture();
+        {
+            let _ctx = MethodCtx::enter(Method::Markidis);
+            record(Counter::PrescaleApplied, 1);
+        }
+        record(Counter::MmaStepsRn, 4);
+        let d = NumericSnapshot::capture().delta(&before);
+        disable();
+        let nz = d.nonzero();
+        assert!(nz.contains(&(Method::Markidis.name(), Counter::PrescaleApplied, 1)));
+        assert!(nz.contains(&("untagged", Counter::MmaStepsRn, 4)));
+    }
+}

@@ -1,0 +1,337 @@
+//! Request tracing: per-stage spans, a bounded drop-oldest ring, and
+//! Chrome `trace_event` export.
+//!
+//! A request's life through the service is decomposed into the fixed
+//! [`Stage`] taxonomy (DESIGN.md §12). Each completed stage is recorded
+//! as a [`Span`] — `(trace_id, stage, start, duration)` against the
+//! tracer's own monotonic epoch — into two sinks at once:
+//!
+//! * a per-stage [`LogHistogram`] (wait-free; feeds p50/p95/p99 in the
+//!   metrics exposition), and
+//! * a bounded [`TraceRing`] holding the newest spans for export.
+//!
+//! The ring is "lock-free-ish": pushes take a mutex, but the critical
+//! section is a pre-allocated O(1) deque rotation with no allocation in
+//! steady state, so the lock is held for tens of nanoseconds. When the
+//! ring is full the *oldest* span is dropped and the drop is counted —
+//! a trace dump always says how much history it is missing.
+//!
+//! Export is Chrome `trace_event` JSON (`ph: "X"` complete events, one
+//! track per trace id), loadable in `chrome://tracing` / Perfetto.
+
+use super::hist::{HistogramSnapshot, LogHistogram};
+use std::collections::VecDeque;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// The span taxonomy, in pipeline order. Names are part of the
+/// exposition contract (metric labels and trace-event names).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Admission: shape validation + queue reservation in `submit_call`.
+    IntakeAdmit = 0,
+    /// Planner probe + plan lookup on the dispatcher thread.
+    Plan = 1,
+    /// Time a request sat in the `DynamicBatcher` before its batch
+    /// emitted (per request; the batching latency cost).
+    BatchLinger = 2,
+    /// Operand split / cache lookup inside the executor (per batch).
+    Split = 3,
+    /// The executor's multiply, end to end (per batch; includes shard
+    /// fan-out when the sharded path runs).
+    Execute = 4,
+    /// One shard's GEMM on a pool worker (per shard).
+    Shard = 5,
+    /// Deterministic k-reduction + tile assembly of shard partials.
+    Reduce = 6,
+    /// Result delivery back to the client channel (per request).
+    Reply = 7,
+}
+
+pub const NUM_STAGES: usize = 8;
+
+impl Stage {
+    pub const ALL: [Stage; NUM_STAGES] = [
+        Stage::IntakeAdmit,
+        Stage::Plan,
+        Stage::BatchLinger,
+        Stage::Split,
+        Stage::Execute,
+        Stage::Shard,
+        Stage::Reduce,
+        Stage::Reply,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::IntakeAdmit => "intake_admit",
+            Stage::Plan => "plan",
+            Stage::BatchLinger => "batch_linger",
+            Stage::Split => "split",
+            Stage::Execute => "execute",
+            Stage::Shard => "shard",
+            Stage::Reduce => "reduce",
+            Stage::Reply => "reply",
+        }
+    }
+}
+
+/// One completed stage of one request, timed against the tracer's epoch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Span {
+    /// The request id whose life this span belongs to (batch-level spans
+    /// carry the first request id of the batch).
+    pub trace_id: u64,
+    pub stage: Stage,
+    /// Start offset from the tracer epoch, nanoseconds.
+    pub start_ns: u64,
+    pub dur_ns: u64,
+}
+
+/// Bounded drop-oldest span buffer. Capacity is fixed at construction;
+/// a push over capacity evicts the oldest span and increments the
+/// dropped count, so consumers can tell a quiet system from a saturated
+/// ring.
+#[derive(Debug)]
+pub struct TraceRing {
+    cap: usize,
+    buf: VecDeque<Span>,
+    dropped: u64,
+}
+
+impl TraceRing {
+    pub fn new(capacity: usize) -> TraceRing {
+        let cap = capacity.max(1);
+        TraceRing { cap, buf: VecDeque::with_capacity(cap), dropped: 0 }
+    }
+
+    pub fn push(&mut self, span: Span) {
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+            self.dropped += 1;
+        }
+        self.buf.push_back(span);
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Spans evicted to make room (total since construction).
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Oldest-first copy of the retained spans.
+    pub fn to_vec(&self) -> Vec<Span> {
+        self.buf.iter().copied().collect()
+    }
+}
+
+/// Per-stage latency distribution summary (nanoseconds).
+#[derive(Debug, Clone)]
+pub struct StageStats {
+    pub stage: Stage,
+    pub count: u64,
+    pub p50_ns: u64,
+    pub p95_ns: u64,
+    pub p99_ns: u64,
+}
+
+/// The per-service span sink: ring + per-stage histograms behind one
+/// shared handle. Attached to executors via `Executor::attach_tracer`
+/// and threaded through the coordinator; absence of a tracer *is* the
+/// disabled state, so untraced services pay nothing.
+#[derive(Debug)]
+pub struct Tracer {
+    epoch: Instant,
+    ring: Mutex<TraceRing>,
+    hists: [LogHistogram; NUM_STAGES],
+}
+
+impl Tracer {
+    pub fn new(capacity: usize) -> Tracer {
+        Tracer {
+            epoch: Instant::now(),
+            ring: Mutex::new(TraceRing::new(capacity)),
+            hists: std::array::from_fn(|_| LogHistogram::new()),
+        }
+    }
+
+    /// Record one completed stage spanning `start..end`. Both instants
+    /// must come from the same process (they always do: callers capture
+    /// them around the work they time).
+    pub fn record(&self, trace_id: u64, stage: Stage, start: Instant, end: Instant) {
+        let start_ns = start.saturating_duration_since(self.epoch).as_nanos() as u64;
+        let dur_ns = end.saturating_duration_since(start).as_nanos() as u64;
+        self.hists[stage as usize].record(dur_ns);
+        self.ring.lock().unwrap().push(Span { trace_id, stage, start_ns, dur_ns });
+    }
+
+    /// Convenience: record a stage that started at `start` and ends now.
+    pub fn record_since(&self, trace_id: u64, stage: Stage, start: Instant) {
+        self.record(trace_id, stage, start, Instant::now());
+    }
+
+    /// Total spans recorded for `stage` (histogram count — includes
+    /// spans later evicted from the ring).
+    pub fn span_count(&self, stage: Stage) -> u64 {
+        self.hists[stage as usize].count()
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.ring.lock().unwrap().dropped()
+    }
+
+    /// Oldest-first copy of the retained spans.
+    pub fn spans(&self) -> Vec<Span> {
+        self.ring.lock().unwrap().to_vec()
+    }
+
+    /// Per-stage latency histogram snapshot (for the exposition).
+    pub fn stage_histogram(&self, stage: Stage) -> HistogramSnapshot {
+        self.hists[stage as usize].snapshot()
+    }
+
+    /// p50/p95/p99 summary for every stage with at least one span.
+    pub fn stage_stats(&self) -> Vec<StageStats> {
+        Stage::ALL
+            .iter()
+            .filter_map(|&stage| {
+                let s = self.hists[stage as usize].snapshot();
+                if s.count == 0 {
+                    return None;
+                }
+                Some(StageStats {
+                    stage,
+                    count: s.count,
+                    p50_ns: s.quantile(0.50),
+                    p95_ns: s.quantile(0.95),
+                    p99_ns: s.quantile(0.99),
+                })
+            })
+            .collect()
+    }
+
+    /// Render the retained spans as Chrome `trace_event` JSON: one
+    /// complete (`ph: "X"`) event per span, microsecond timestamps, one
+    /// `tid` track per trace id.
+    pub fn export_chrome_json(&self) -> String {
+        let spans = self.spans();
+        let dropped = self.dropped();
+        let mut out = String::with_capacity(64 + spans.len() * 96);
+        out.push_str("{\"traceEvents\":[");
+        for (i, s) in spans.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "{{\"name\":\"{}\",\"cat\":\"tcec\",\"ph\":\"X\",\"pid\":1,\"tid\":{},\
+                 \"ts\":{:.3},\"dur\":{:.3}}}",
+                s.stage.name(),
+                s.trace_id,
+                s.start_ns as f64 / 1000.0,
+                s.dur_ns as f64 / 1000.0,
+            ));
+        }
+        out.push_str(&format!(
+            "],\"otherData\":{{\"dropped_spans\":\"{dropped}\"}},\"displayTimeUnit\":\"ns\"}}"
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn span(id: u64) -> Span {
+        Span { trace_id: id, stage: Stage::Execute, start_ns: id, dur_ns: 1 }
+    }
+
+    #[test]
+    fn ring_drops_oldest_and_counts() {
+        let mut r = TraceRing::new(3);
+        assert_eq!(r.capacity(), 3);
+        for i in 0..3 {
+            r.push(span(i));
+        }
+        assert_eq!((r.len(), r.dropped()), (3, 0));
+        r.push(span(3));
+        r.push(span(4));
+        assert_eq!((r.len(), r.dropped()), (3, 2));
+        let ids: Vec<u64> = r.to_vec().iter().map(|s| s.trace_id).collect();
+        assert_eq!(ids, vec![2, 3, 4], "oldest evicted first, order preserved");
+    }
+
+    #[test]
+    fn ring_capacity_floor_is_one() {
+        let mut r = TraceRing::new(0);
+        r.push(span(1));
+        r.push(span(2));
+        assert_eq!((r.len(), r.dropped()), (1, 1));
+    }
+
+    #[test]
+    fn tracer_records_counts_and_stats() {
+        let t = Tracer::new(16);
+        let t0 = Instant::now();
+        t.record(1, Stage::Split, t0, t0 + Duration::from_micros(50));
+        t.record(1, Stage::Execute, t0, t0 + Duration::from_micros(400));
+        t.record(2, Stage::Execute, t0, t0 + Duration::from_micros(300));
+        assert_eq!(t.span_count(Stage::Split), 1);
+        assert_eq!(t.span_count(Stage::Execute), 2);
+        assert_eq!(t.span_count(Stage::Reduce), 0);
+        let stats = t.stage_stats();
+        assert_eq!(stats.len(), 2, "only stages with spans are listed");
+        let exec = stats.iter().find(|s| s.stage == Stage::Execute).unwrap();
+        assert_eq!(exec.count, 2);
+        assert!(exec.p50_ns >= 300_000 / 2, "log-bucket bound covers the sample");
+        assert!(exec.p99_ns >= exec.p50_ns);
+    }
+
+    #[test]
+    fn chrome_export_shape() {
+        let t = Tracer::new(2);
+        let t0 = Instant::now();
+        t.record(7, Stage::Plan, t0, t0 + Duration::from_micros(10));
+        t.record(7, Stage::Execute, t0, t0 + Duration::from_micros(20));
+        t.record(8, Stage::Execute, t0, t0 + Duration::from_micros(20));
+        let j = t.export_chrome_json();
+        assert!(j.starts_with("{\"traceEvents\":["));
+        assert!(j.contains("\"ph\":\"X\""));
+        assert!(j.contains("\"name\":\"execute\""));
+        assert!(j.contains("\"tid\":8"));
+        // Ring cap 2 → the plan span was evicted and counted.
+        assert!(!j.contains("\"name\":\"plan\""));
+        assert!(j.contains("\"dropped_spans\":\"1\""));
+        assert!(j.ends_with('}'));
+    }
+
+    #[test]
+    fn stage_names_stable() {
+        let names: Vec<&str> = Stage::ALL.iter().map(|s| s.name()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "intake_admit",
+                "plan",
+                "batch_linger",
+                "split",
+                "execute",
+                "shard",
+                "reduce",
+                "reply"
+            ]
+        );
+    }
+}

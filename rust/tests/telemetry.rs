@@ -1,0 +1,370 @@
+//! Telemetry integration tests (DESIGN.md §12): the golden Prometheus
+//! exposition, the trace-ring wraparound contract, the correction-term
+//! underflow counters on a Fig.-8 operand, bitwise output identity with
+//! telemetry fully on, and a scripted end-to-end serve run with pinned
+//! span counts.
+//!
+//! The numeric counters live in a process-global sink and services
+//! refcount a process-global enable flag, so every test in this binary
+//! that enables telemetry or asserts on counter deltas serializes on the
+//! local [`GATE`] mutex (cargo runs integration tests in one process).
+
+use std::sync::Mutex;
+use std::time::Duration;
+use tcec::coordinator::{GemmService, Policy, SimExecutor, Snapshot};
+use tcec::gemm::{Mat, Method, TileConfig};
+use tcec::matgen::urand;
+use tcec::telemetry::numeric::{self, NumericSnapshot};
+use tcec::telemetry::{
+    Counter, LogHistogram, MethodCtx, Span, Stage, StageStats, TelemetryConfig, TraceRing, Tracer,
+};
+
+static GATE: Mutex<()> = Mutex::new(());
+
+fn gate() -> std::sync::MutexGuard<'static, ()> {
+    GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// A deterministic numeric-counter delta, produced through the public
+/// instrumentation API (the sink's internals are private by design).
+/// Caller must hold the gate.
+fn numeric_fixture() -> NumericSnapshot {
+    numeric::enable();
+    let before = NumericSnapshot::capture();
+    {
+        let _ctx = MethodCtx::enter(Method::OursHalfHalf);
+        numeric::record(Counter::SplitFlushed, 7);
+        numeric::record(Counter::ExtRnAdds, 4096);
+    }
+    let delta = NumericSnapshot::capture().delta(&before);
+    numeric::disable();
+    delta
+}
+
+#[test]
+fn prometheus_exposition_matches_golden() {
+    let _g = gate();
+    // Hand-assembled snapshot: every family populated, fully
+    // deterministic (no service, no clock). The golden file is the
+    // exposition schema contract — names, label keys, number formatting.
+    let latency = {
+        let h = LogHistogram::new();
+        for ns in [1_000u64, 1_000, 30_000, 2_000_000] {
+            h.record(ns);
+        }
+        h.snapshot()
+    };
+    let snap = Snapshot {
+        requests: 5,
+        completed: 4,
+        failed: 1,
+        rejected: 2,
+        expired: 0,
+        cancelled: 0,
+        flops: 123_456,
+        per_method: vec![(Method::Fp32Simt.name(), 1), (Method::OursHalfHalf.name(), 3)],
+        mean_latency: Duration::from_nanos(508_000),
+        latency,
+        batches: 2,
+        batched_requests: 4,
+        mean_batch_size: 2.0,
+        range_classes: [3, 1, 0, 0],
+        sharded_gemms: 1,
+        shards_executed: 12,
+        shard_steals: 2,
+        reduction_depth_max: 2,
+        shard_fallbacks: 0,
+        split_cache_hits: 5,
+        split_cache_misses: 3,
+        split_cache_entries: 3,
+        plan_cache_hits: 4,
+        plan_cache_misses: 2,
+        probe_cache_hits: 6,
+        probe_cache_misses: 2,
+        stage_spans: [4, 4, 4, 2, 2, 12, 1, 4],
+        stage_stats: vec![
+            StageStats {
+                stage: Stage::Execute,
+                count: 2,
+                p50_ns: 1_023,
+                p95_ns: 32_767,
+                p99_ns: 2_097_151,
+            },
+            StageStats {
+                stage: Stage::Reply,
+                count: 2,
+                p50_ns: 1_023,
+                p95_ns: 1_023,
+                p99_ns: 1_023,
+            },
+        ],
+        dropped_spans: 3,
+        numeric: Some(numeric_fixture()),
+    };
+    let rendered = snap.render_prometheus();
+    let golden = include_str!("golden/metrics.prom");
+    assert_eq!(
+        rendered, golden,
+        "Prometheus exposition drifted from tests/golden/metrics.prom — \
+         metric names and formats are a stable contract; update the golden \
+         only for a deliberate, documented schema change"
+    );
+}
+
+#[test]
+fn trace_ring_wraps_dropping_oldest() {
+    let mut r = TraceRing::new(4);
+    for i in 0..6u64 {
+        r.push(Span { trace_id: i, stage: Stage::Execute, start_ns: i, dur_ns: 1 });
+    }
+    assert_eq!(r.len(), 4);
+    assert_eq!(r.dropped(), 2);
+    let ids: Vec<u64> = r.to_vec().iter().map(|s| s.trace_id).collect();
+    assert_eq!(ids, vec![2, 3, 4, 5], "oldest spans evicted first, order kept");
+
+    // Same contract through a Tracer: histogram counts keep the evicted
+    // spans, the export declares how much history is missing.
+    let t = Tracer::new(2);
+    let t0 = std::time::Instant::now();
+    for i in 0..5 {
+        t.record(i, Stage::Reply, t0, t0 + Duration::from_micros(1));
+    }
+    assert_eq!(t.span_count(Stage::Reply), 5, "histogram keeps evicted spans");
+    assert_eq!(t.spans().len(), 2);
+    assert_eq!(t.dropped(), 3);
+    assert!(t.export_chrome_json().contains("\"dropped_spans\":\"3\""));
+}
+
+/// A matrix whose elements all carry exponent `e_v` (the Fig. 8 harness:
+/// the hi/lo split residual of such values lands deep in the FP16
+/// subnormal range even after the paper's 2^11 scaling).
+fn exponent_pinned(n: usize, e_v: i32) -> Mat {
+    Mat::from_fn(n, n, |i, j| {
+        // Fixed mixing of the indices into a 23-bit mantissa — a
+        // deterministic stand-in for the RNG in analysis::underflow.
+        let m = ((i as u32).wrapping_mul(2_654_435_761) ^ (j as u32).wrapping_mul(40_503))
+            & 0x007f_ffff;
+        f32::from_bits(((e_v + 127) as u32) << 23 | m)
+    })
+}
+
+#[test]
+fn underflow_counters_fire_on_subnormal_residual() {
+    let _g = gate();
+    let a = exponent_pinned(32, -20);
+    let b = urand(32, 32, -1.0, 1.0, 7);
+    numeric::enable();
+    let before = NumericSnapshot::capture();
+    let _c = Method::OursHalfHalf.run(&a, &b, &TileConfig::default());
+    let delta = NumericSnapshot::capture().delta(&before);
+    numeric::disable();
+    // At e_v = -20 the scaled residual sits near 2^-20..2^-23 — below the
+    // FP16 normal floor (2^-14), so essentially every nonzero residual of
+    // A either flushes or lands subnormal.
+    let flushed = delta.by_method(Method::OursHalfHalf, Counter::SplitFlushed);
+    let subnormal = delta.by_method(Method::OursHalfHalf, Counter::SplitSubnormal);
+    assert!(
+        flushed + subnormal > 0,
+        "no correction-term underflow recorded (flushed {flushed}, subnormal {subnormal})"
+    );
+}
+
+#[test]
+fn telemetry_perturbs_no_output_bit() {
+    let _g = gate();
+    let cfg = TileConfig::default();
+    let a = urand(48, 48, -1.0, 1.0, 11);
+    let b = urand(48, 48, -1.0, 1.0, 12);
+    for m in Method::ALL {
+        let off = m.run(&a, &b, &cfg);
+        numeric::enable();
+        let on = m.run(&a, &b, &cfg);
+        numeric::disable();
+        let off_bits: Vec<u32> = off.data.iter().map(|v| v.to_bits()).collect();
+        let on_bits: Vec<u32> = on.data.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(off_bits, on_bits, "{}: counters changed an output bit", m.name());
+    }
+}
+
+#[test]
+fn traced_service_output_identical_to_untraced() {
+    let _g = gate();
+    let run = |telemetry: TelemetryConfig| -> Vec<u32> {
+        let client = GemmService::builder()
+            .workers(1)
+            .max_batch(2)
+            .force_method(Method::OursHalfHalf)
+            .telemetry(telemetry)
+            .client(std::sync::Arc::new(SimExecutor::new()));
+        let out = client
+            .call(urand(24, 24, -1.0, 1.0, 21), urand(24, 24, -1.0, 1.0, 22))
+            .policy(Policy::Fp32Accuracy)
+            .wait()
+            .expect("served");
+        client.shutdown();
+        out.c.data.iter().map(|v| v.to_bits()).collect()
+    };
+    assert_eq!(
+        run(TelemetryConfig::default()),
+        run(TelemetryConfig::full()),
+        "full telemetry changed a served output bit"
+    );
+}
+
+#[test]
+fn scripted_serve_pins_span_counts() {
+    let _g = gate();
+    // workers=1, max_batch=1, sequential submit→wait: a fully
+    // deterministic pipeline shape, so the span counts are exact.
+    let client = GemmService::builder()
+        .workers(1)
+        .max_batch(1)
+        .force_method(Method::Fp32Simt)
+        .telemetry(TelemetryConfig::full())
+        .client(std::sync::Arc::new(SimExecutor::new()));
+    let metrics = client.metrics();
+    for i in 0..3u64 {
+        client
+            .call(urand(16, 16, -1.0, 1.0, i), urand(16, 16, -1.0, 1.0, i + 100))
+            .policy(Policy::Fp32Accuracy)
+            .wait()
+            .expect("served");
+    }
+    // Shutdown joins the workers, so trailing Reply spans are recorded
+    // before the snapshot (the reply span lands after the client's wait
+    // returns).
+    client.shutdown();
+    let snap = metrics.snapshot();
+    let expect = |stage: Stage, n: u64| {
+        assert_eq!(
+            snap.stage_spans[stage as usize],
+            n,
+            "stage {} expected {n} spans, got {} (all: {:?})",
+            stage.name(),
+            snap.stage_spans[stage as usize],
+            snap.stage_spans
+        );
+    };
+    expect(Stage::IntakeAdmit, 3);
+    expect(Stage::Plan, 3);
+    expect(Stage::BatchLinger, 3);
+    expect(Stage::Split, 3);
+    expect(Stage::Execute, 3);
+    expect(Stage::Shard, 0);
+    expect(Stage::Reduce, 0);
+    expect(Stage::Reply, 3);
+    assert_eq!(snap.dropped_spans, 0);
+    assert_eq!(snap.batches, 3);
+    assert!((snap.mean_batch_size - 1.0).abs() < 1e-9);
+    assert_eq!(snap.stage_stats.len(), 6, "exactly the six active stages report stats");
+}
+
+#[test]
+fn sharded_serve_records_shard_and_reduce_spans() {
+    let _g = gate();
+    let client = GemmService::builder()
+        .workers(1)
+        .max_batch(1)
+        .force_method(Method::Fp32Simt)
+        .shard(tcec::shard::ShardConfig {
+            workers: 2,
+            min_flops: 0,
+            ..tcec::shard::ShardConfig::default()
+        })
+        .telemetry(TelemetryConfig::full())
+        .client(std::sync::Arc::new(SimExecutor::new()));
+    let metrics = client.metrics();
+    client
+        .call(urand(192, 192, -1.0, 1.0, 31), urand(192, 192, -1.0, 1.0, 32))
+        .policy(Policy::Fp32Accuracy)
+        .wait()
+        .expect("served");
+    client.shutdown();
+    let snap = metrics.snapshot();
+    assert!(snap.sharded_gemms >= 1, "shard path not taken: {snap:?}");
+    assert!(
+        snap.stage_spans[Stage::Shard as usize] >= 1,
+        "no shard spans: {:?}",
+        snap.stage_spans
+    );
+    assert!(
+        snap.stage_spans[Stage::Reduce as usize] >= 1,
+        "no reduce spans: {:?}",
+        snap.stage_spans
+    );
+    assert_eq!(
+        snap.stage_spans[Stage::Shard as usize],
+        snap.shards_executed,
+        "one span per executed shard"
+    );
+}
+
+#[test]
+fn range_class_tallies_flow_from_planner_probe() {
+    let _g = gate();
+    // Planner mode routes through the combined probe; urand [-1, 1]
+    // operands classify HalfHalfExact, and the per-request class lands in
+    // the snapshot tallies (one per completed request).
+    let client = GemmService::builder()
+        .workers(1)
+        .max_batch(1)
+        .planner(tcec::planner::PlannerConfig::default())
+        .telemetry(TelemetryConfig::full())
+        .client(std::sync::Arc::new(SimExecutor::new()));
+    let metrics = client.metrics();
+    for i in 0..2u64 {
+        client
+            .call(urand(24, 24, -1.0, 1.0, i + 41), urand(24, 24, -1.0, 1.0, i + 141))
+            .policy(Policy::Fp32Accuracy)
+            .wait()
+            .expect("served");
+    }
+    client.shutdown();
+    let snap = metrics.snapshot();
+    let total: u64 = snap.range_classes.iter().sum();
+    assert_eq!(total, 2, "one class tally per planned request: {:?}", snap.range_classes);
+    assert_eq!(snap.range_classes[0], 2, "urand [-1,1] classifies halfhalf_exact");
+}
+
+#[test]
+fn chrome_export_from_traced_service_is_loadable_shape() {
+    let _g = gate();
+    let client = GemmService::builder()
+        .workers(1)
+        .max_batch(1)
+        .force_method(Method::Fp32Simt)
+        .telemetry(TelemetryConfig::full())
+        .client(std::sync::Arc::new(SimExecutor::new()));
+    let tracer = client.service().tracer().expect("tracing enabled");
+    client
+        .call(urand(16, 16, -1.0, 1.0, 51), urand(16, 16, -1.0, 1.0, 52))
+        .policy(Policy::Fp32Accuracy)
+        .wait()
+        .expect("served");
+    client.shutdown();
+    let json = tracer.export_chrome_json();
+    assert!(json.starts_with("{\"traceEvents\":["));
+    assert!(json.ends_with('}'));
+    for stage in ["intake_admit", "plan", "batch_linger", "split", "execute", "reply"] {
+        assert!(json.contains(&format!("\"name\":\"{stage}\"")), "missing {stage} in {json}");
+    }
+    assert!(json.contains("\"dropped_spans\":\"0\""));
+}
+
+#[test]
+fn zero_value_snapshot_renders_full_schema() {
+    // A fresh service's snapshot must still emit every metric family
+    // (scrape schema is traffic-independent) — this is what the CI
+    // exposition smoke step relies on.
+    let client = GemmService::builder().workers(1).client(std::sync::Arc::new(SimExecutor::new()));
+    let text = client.metrics().snapshot().render_prometheus();
+    client.shutdown();
+    let golden = include_str!("golden/metrics.prom");
+    let names = |s: &str| -> Vec<String> {
+        s.lines()
+            .filter(|l| l.starts_with("# TYPE "))
+            .map(|l| l.split_whitespace().nth(2).unwrap().to_string())
+            .collect()
+    };
+    assert_eq!(names(&text), names(golden), "family set drifted from the golden");
+}
