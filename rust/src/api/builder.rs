@@ -34,6 +34,7 @@ pub struct ServiceBuilder {
 }
 
 impl ServiceBuilder {
+    /// A builder with every knob at its library default (identical to `ServiceBuilder::default()`).
     pub fn new() -> ServiceBuilder {
         ServiceBuilder::default()
     }

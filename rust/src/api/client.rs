@@ -90,6 +90,7 @@ impl Client {
         &self.svc
     }
 
+    /// Shared metrics handle of the underlying service.
     pub fn metrics(&self) -> Arc<Metrics> {
         self.svc.metrics()
     }

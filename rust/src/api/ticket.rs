@@ -26,6 +26,7 @@ pub type GemmResult = Result<GemmOutcome, ServiceError>;
 pub struct CancelToken(Arc<AtomicBool>);
 
 impl CancelToken {
+    /// A fresh, un-cancelled token.
     pub fn new() -> CancelToken {
         CancelToken::default()
     }
@@ -36,6 +37,7 @@ impl CancelToken {
         self.0.store(true, Ordering::Release);
     }
 
+    /// Whether [`cancel`](CancelToken::cancel) has been requested.
     pub fn is_cancelled(&self) -> bool {
         self.0.load(Ordering::Acquire)
     }

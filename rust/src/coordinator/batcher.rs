@@ -55,8 +55,7 @@ impl DynamicBatcher {
             .or_insert_with(|| Pending { requests: Vec::new(), opened_at: Instant::now() });
         entry.requests.push(req);
         if entry.requests.len() >= self.max_batch {
-            let p = self.pending.remove(&key).unwrap();
-            Some(Batch { key, requests: p.requests })
+            self.pending.remove(&key).map(|p| Batch { key, requests: p.requests })
         } else {
             None
         }
@@ -72,9 +71,8 @@ impl DynamicBatcher {
             .map(|(k, _)| *k)
             .collect();
         due.into_iter()
-            .map(|key| {
-                let p = self.pending.remove(&key).unwrap();
-                Batch { key, requests: p.requests }
+            .filter_map(|key| {
+                self.pending.remove(&key).map(|p| Batch { key, requests: p.requests })
             })
             .collect()
     }

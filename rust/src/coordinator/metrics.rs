@@ -38,6 +38,28 @@ fn class_idx(c: RangeClass) -> usize {
 /// `reduction_depth_max`, ratchets via `fetch_max`), so relaxed ordering
 /// is sufficient: a snapshot is a set of independently-read tallies, not
 /// a consistent cut.
+///
+/// Per-counter snapshot-consistency audit (the `relaxed-ordering` tclint
+/// suppressions for this file are backed by this table). "Pairing" names
+/// the identity a reader might check across counters, and why Relaxed
+/// cannot break it *permanently* — a snapshot may catch the identity
+/// mid-update, but every counter is monotone, so any later snapshot taken
+/// after the pipeline drains reconciles (pinned by
+/// `prometheus_render_matches_golden_shape` and the service drain tests):
+///
+/// | counter                  | pairing / identity                        |
+/// |--------------------------|-------------------------------------------|
+/// | `requests`               | `== completed+failed+expired+cancelled` at drain; bumped first, so a cut can only under-count the right side |
+/// | `completed`, `failed`, `expired`, `cancelled` | terminal states, disjoint per request — each request bumps exactly one, once |
+/// | `rejected`               | independent (never admitted; outside the identity) |
+/// | `flops`                  | paired with `completed` (bumped together in `on_complete`); a cut may see one without the other for < one request |
+/// | `batches`, `batched_requests` | bumped together in `on_batch`; mean-batch-size reads may lag one batch |
+/// | `sharded_gemms`, `shards_executed`, `shard_steals`, `shard_fallbacks` | bumped together in `on_sharded_gemm`; same one-call skew bound |
+/// | `reduction_depth_max`    | `fetch_max` ratchet — order-free by construction |
+/// | `range_classes[..]`      | one bump per planned request, no cross-class identity |
+///
+/// No counter is read-modify-written based on another's value, which is
+/// the case Relaxed would actually miscompile.
 #[derive(Debug, Default)]
 struct Counters {
     requests: AtomicU64,
@@ -285,12 +307,10 @@ impl Metrics {
             }
             None => ([0; NUM_STAGES], Vec::new(), 0),
         };
-        let numeric = self
-            .numeric_base
-            .lock()
-            .unwrap()
-            .as_ref()
-            .map(|base| NumericSnapshot::capture().delta(base));
+        let numeric = {
+            let base = self.numeric_base.lock().unwrap();
+            base.as_ref().map(|b| NumericSnapshot::capture().delta(b))
+        };
         let mut per_method: Vec<(&'static str, u64)> =
             self.per_method.lock().unwrap().iter().map(|(k, v)| (*k, *v)).collect();
         per_method.sort();

@@ -214,6 +214,7 @@ impl SimExecutor {
                 });
             }
         });
+        // tclint: allow(hot-unwrap) -- scope join propagates worker panics first; every slot was filled by its chunk loop
         out.into_iter().map(|c| c.expect("every batch element computed")).collect()
     }
 }
@@ -488,6 +489,7 @@ impl GemmService {
                 std::thread::spawn(move || loop {
                     let item = {
                         let guard = work_rx.lock().unwrap();
+                        // tclint: allow(lock-held-io) -- the Mutex guards the Receiver itself; holding it across recv IS the shared-consumer handoff protocol
                         guard.recv()
                     };
                     let Ok(item) = item else { break };
@@ -533,11 +535,11 @@ impl GemmService {
                         continue;
                     };
                     debug_assert_eq!(outs.len(), batch_size);
-                    if let Some(t) = &tracer {
-                        // Batch-level span, tagged with the first request's
-                        // id (successful batches only — a panicked batch
-                        // has no completed execute stage to time).
-                        t.record_since(reqs[0].id, Stage::Execute, exec_t0);
+                    // Batch-level span, tagged with the first request's
+                    // id (successful batches only — a panicked batch
+                    // has no completed execute stage to time).
+                    if let (Some(t), Some(first)) = (&tracer, reqs.first()) {
+                        t.record_since(first.id, Stage::Execute, exec_t0);
                     }
                     for ((req, c), r) in reqs.iter().zip(outs).zip(responders) {
                         let latency = r.meta.submitted.elapsed();
@@ -586,12 +588,28 @@ impl GemmService {
                     // dropped HERE, before the batch reaches a worker — a
                     // stale straggler never rides, or poisons the latency
                     // of, the fresh batch it was grouped with.
-                    let rs: Vec<Responder> = batch
-                        .requests
-                        .iter()
-                        .map(|r| responders.remove(&r.id).expect("responder registered"))
-                        .collect();
-                    let (reqs, rs) = triage(batch.requests, rs, &intake, &metrics);
+                    // Pairing by filter_map (not indexed expect) keeps a
+                    // request and its responder moving together: a missing
+                    // registration — impossible today, registration always
+                    // precedes the batcher push — would drop that request
+                    // alone instead of panicking the dispatcher.
+                    let mut paired_reqs = Vec::with_capacity(batch.requests.len());
+                    let mut rs = Vec::with_capacity(batch.requests.len());
+                    for r in batch.requests {
+                        match responders.remove(&r.id) {
+                            Some(resp) => {
+                                paired_reqs.push(r);
+                                rs.push(resp);
+                            }
+                            None => {
+                                eprintln!(
+                                    "tcec dispatcher: no responder for request {} (dropped)",
+                                    r.id
+                                );
+                            }
+                        }
+                    }
+                    let (reqs, rs) = triage(paired_reqs, rs, &intake, &metrics);
                     if let Some(t) = &tracer {
                         // Per-request batching cost: registered → emitted.
                         let now = Instant::now();

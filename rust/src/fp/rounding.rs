@@ -250,6 +250,20 @@ pub fn round_to_precision(x: f64, p: u32, mode: Rounding) -> f64 {
     f64::from_bits(base + if inc { 1u64 << drop } else { 0 })
 }
 
+/// The sanctioned `f64 → f32` narrowing site (round-to-nearest-even).
+///
+/// This is the crate's **single-rounding-site policy**, enforced by
+/// tclint's `lossy-cast` rule: a lossy `as f32` outside `fp/` is a
+/// potential second rounding step hiding in module code, so every
+/// deliberate narrowing routes through this one function where the
+/// rounding it performs is named and auditable. (Exact casts — integer
+/// powers of two, values already on a 24-bit grid — are individually
+/// allowlisted instead, with the exactness argument as the reason.)
+#[inline]
+pub fn narrow_to_f32(x: f64) -> f32 {
+    x as f32
+}
+
 /// Truncate the last `n` mantissa bits of an `f32` (used by Fig 4's
 /// "truncate the LSB of the FP32 mantissa" experiment).
 #[inline]

@@ -75,6 +75,7 @@ impl Mat {
 
     /// Largest absolute element.
     pub fn max_abs(&self) -> f32 {
+        // tclint: allow(float-fold) -- max is an order-independent reduction (f32::max absorbs NaN symmetrically); no rounding accumulates
         self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
     }
 }

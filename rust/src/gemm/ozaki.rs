@@ -17,6 +17,7 @@
 use super::matrix::Mat;
 use crate::fp::exp2i;
 use crate::fp::mantissa::exponent_of;
+use crate::fp::rounding::narrow_to_f32;
 use crate::tcsim::{mma_tile_zero_into, MmaConfig};
 
 /// Largest per-slice significand width β such that slice-pair dot products
@@ -57,6 +58,7 @@ fn slice_matrix(m: &Mat, beta: u32, s: usize, row_wise: bool) -> (Vec<Mat>, Vec<
             for (idx, sl) in slices.iter_mut().enumerate() {
                 let g = sigma * exp2i(-((beta as i32) * (idx as i32 + 1)));
                 let q = (r / g).trunc() * g; // truncation toward zero: exact
+                // tclint: allow(lossy-cast) -- q sits on the beta-bit slice grid by construction, so the cast is exact
                 sl.set(i, j, q as f32);
                 r -= q;
             }
@@ -103,7 +105,9 @@ pub fn ozaki_gemm(a: &Mat, b: &Mat, s: usize) -> Mat {
         }
     }
     debug_assert_eq!(terms, s * (s + 1) / 2);
-    Mat::from_vec(m, n, acc.iter().map(|&x| x as f32).collect())
+    // The one genuinely lossy step (the "final FP32 store" above), routed
+    // through the sanctioned fp:: narrowing site.
+    Mat::from_vec(m, n, acc.iter().map(|&x| narrow_to_f32(x)).collect())
 }
 
 /// GEMM-term count of the scheme (performance-model input): s(s+1)/2.

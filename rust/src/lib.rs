@@ -61,6 +61,12 @@
 //!   and guaranteed not to perturb a single output bit (DESIGN.md §12).
 //! * [`experiments`] — one driver per paper figure/table, shared by the
 //!   bench binaries.
+//!
+//! The layering above is itself a checked contract: `tools/tclint` (a
+//! sibling workspace member, DESIGN.md §13) lints `rust/src/**` for
+//! bit-exactness, panic-safety, lock-discipline and contract-drift
+//! violations — including that this module list matches the directory
+//! tree — and runs as a blocking CI step.
 
 pub mod analysis;
 pub mod api;

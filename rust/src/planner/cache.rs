@@ -193,10 +193,12 @@ impl PlanCache {
         self.tiles.lock().unwrap().insert(key, TileEntry { tile, verified: false });
     }
 
+    /// Plan-cache hits since construction.
     pub fn hits(&self) -> u64 {
         self.hits.load(Ordering::Relaxed)
     }
 
+    /// Plan-cache misses since construction.
     pub fn misses(&self) -> u64 {
         self.misses.load(Ordering::Relaxed)
     }
@@ -206,10 +208,12 @@ impl PlanCache {
         self.plans.lock().unwrap().len()
     }
 
+    /// Whether no plans are cached.
     pub fn is_empty(&self) -> bool {
         self.plans.lock().unwrap().is_empty()
     }
 
+    /// Maximum number of cached plans.
     pub fn capacity(&self) -> usize {
         self.plan_capacity
     }

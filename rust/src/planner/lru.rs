@@ -29,6 +29,7 @@ pub(crate) struct LruMap<K, V> {
 }
 
 impl<K: Eq + Hash + Clone, V> LruMap<K, V> {
+    /// An empty map holding at most `capacity` entries (panics if `capacity == 0`).
     pub fn new(capacity: usize) -> LruMap<K, V> {
         assert!(capacity >= 1, "LRU capacity must be at least 1");
         LruMap { capacity, map: HashMap::new(), tick: 0 }
@@ -62,10 +63,12 @@ impl<K: Eq + Hash + Clone, V> LruMap<K, V> {
         self.map.insert(key, Entry { value, last_used: tick });
     }
 
+    /// Number of entries currently held.
     pub fn len(&self) -> usize {
         self.map.len()
     }
 
+    /// Whether the map holds no entries.
     pub fn is_empty(&self) -> bool {
         self.map.is_empty()
     }

@@ -283,20 +283,24 @@ pub struct Planner {
 }
 
 impl Planner {
+    /// A planner with freshly constructed (empty) probe and plan caches.
     pub fn new(cfg: PlannerConfig) -> Planner {
         let probes = ProbeCache::new(cfg.probe_cache_entries.max(1), cfg.probe_samples);
         let plans = PlanCache::new(cfg.plan_cache_entries.max(1));
         Planner { cfg, probes, plans }
     }
 
+    /// The configuration this planner was built with.
     pub fn config(&self) -> &PlannerConfig {
         &self.cfg
     }
 
+    /// The shape-classification cache (exposed for metrics and tests).
     pub fn probe_cache(&self) -> &ProbeCache {
         &self.probes
     }
 
+    /// The tile-plan cache (exposed for metrics and tests).
     pub fn plan_cache(&self) -> &PlanCache {
         &self.plans
     }

@@ -140,10 +140,12 @@ impl ProbeCache {
         class
     }
 
+    /// Classification hits since construction.
     pub fn hits(&self) -> u64 {
         self.hits.load(Ordering::Relaxed)
     }
 
+    /// Classification misses since construction.
     pub fn misses(&self) -> u64 {
         self.misses.load(Ordering::Relaxed)
     }
@@ -153,10 +155,12 @@ impl ProbeCache {
         self.inner.lock().unwrap().len()
     }
 
+    /// Whether no classifications are cached.
     pub fn is_empty(&self) -> bool {
         self.inner.lock().unwrap().is_empty()
     }
 
+    /// Maximum number of cached classifications.
     pub fn capacity(&self) -> usize {
         self.capacity
     }

@@ -211,8 +211,15 @@ fn sharded_gemm_impl(
     while received < expected {
         match rx.recv() {
             Ok((ri, ci, s, Some(m))) => {
-                slots[ri][ci][s] = Some(m);
-                ok_count += 1;
+                // Checked insert: worker indices come from the plan's own
+                // grid, so a miss is impossible — but an impossible miss
+                // degrades to the fallback below instead of panicking.
+                if let Some(slot) =
+                    slots.get_mut(ri).and_then(|r| r.get_mut(ci)).and_then(|c| c.get_mut(s))
+                {
+                    *slot = Some(m);
+                    ok_count += 1;
+                }
                 received += 1;
             }
             Ok((_, _, _, None)) => {
@@ -221,10 +228,24 @@ fn sharded_gemm_impl(
             Err(_) => break,
         }
     }
-    let complete = ok_count == expected && slots.iter().flatten().flatten().all(|s| s.is_some());
+    // Completeness and extraction in one step: collecting the grid through
+    // `Option` yields `None` on any hole (panicked shard, bad shape,
+    // out-of-range index), which forces the fallback — no unwrap needed.
+    let partials: Option<Vec<Vec<Vec<Mat>>>> = if ok_count == expected {
+        slots
+            .into_iter()
+            .map(|row| {
+                row.into_iter()
+                    .map(|cell| cell.into_iter().collect::<Option<Vec<Mat>>>())
+                    .collect::<Option<Vec<Vec<Mat>>>>()
+            })
+            .collect()
+    } else {
+        None
+    };
 
     let steals = steals.load(std::sync::atomic::Ordering::Relaxed);
-    if !complete {
+    let Some(partials) = partials else {
         // Degrade to the inner path for the whole problem; correctness over
         // parallelism. (Uses the original method — prescale un-hoisted.)
         // `shards` reports only what actually completed, so metrics show
@@ -256,16 +277,8 @@ fn sharded_gemm_impl(
             fell_back: true,
         };
         return (c, stats);
-    }
+    };
 
-    let partials: Vec<Vec<Vec<Mat>>> = slots
-        .into_iter()
-        .map(|row| {
-            row.into_iter()
-                .map(|cell| cell.into_iter().map(|m| m.unwrap()).collect())
-                .collect()
-        })
-        .collect();
     let reduce_t0 = Instant::now();
     let (mut c, depth) = assemble(plan, &partials);
     if let Some((t, id)) = trace {

@@ -65,6 +65,7 @@ impl WorkerPool {
                 std::thread::Builder::new()
                     .name(format!("shard-worker-{i}"))
                     .spawn(move || worker_main(i, shared))
+                    // tclint: allow(hot-unwrap) -- construction-time spawn, before any request is admitted; failing to build the pool should abort startup
                     .expect("spawn shard worker")
             })
             .collect();

@@ -18,6 +18,7 @@
 use super::backend::Backend;
 use super::SolveError;
 use crate::fp::exp2i;
+use crate::fp::rounding::narrow_to_f32;
 use crate::gemm::{Mat, MatF64};
 
 /// `floor(log2(x))` for finite positive `x`, via the exponent bits
@@ -62,8 +63,14 @@ pub fn matvec_f32(backend: &dyn Backend, a: &Mat, p: &MatF64) -> Result<Matvec, 
     let shift = -e;
     let up = exp2i(shift);
     let down = exp2i(-shift);
-    let scaled =
-        Mat::from_vec(p.rows, p.cols, p.data.iter().map(|&v| (v * up) as f32).collect());
+    // THE designated rounding site of the solver loop (module docs):
+    // `v * up` is exact (power-of-two scale), the narrowing here is the
+    // only lossy step — routed through the sanctioned fp:: helper.
+    let scaled = Mat::from_vec(
+        p.rows,
+        p.cols,
+        p.data.iter().map(|&v| narrow_to_f32(v * up)).collect(),
+    );
     let q = backend.gemm(a, &scaled)?;
     let out = MatF64 {
         rows: q.rows,

@@ -8,6 +8,20 @@
 //! derived from the bucket counts (quantiles are upper bounds of the
 //! containing bucket, so they are conservative by at most 2x — the price
 //! of log spacing, stated plainly).
+//!
+//! # `Ordering::Relaxed` audit (tclint `relaxed-ordering`)
+//!
+//! Every atomic in this module is a monotonic statistical counter.
+//! `record` bumps bucket/count/sum with three independent relaxed adds;
+//! `snapshot` reads them with independent relaxed loads. A reader racing
+//! a writer can therefore observe `count` without the matching `sum` or
+//! bucket increment — a snapshot may be "torn" by up to the number of
+//! in-flight `record` calls. That is acceptable by design: snapshots
+//! feed quantile *estimates* that are already conservative to 2x, no
+//! control-flow decision branches on exact equality between `count`,
+//! `sum`, and the bucket totals, and each individual counter is still
+//! exact over its own timeline. Nothing here orders publication of
+//! non-atomic data, so no Acquire/Release pairing is needed.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -50,6 +64,7 @@ impl Default for LogHistogram {
 }
 
 impl LogHistogram {
+    /// An empty histogram (all buckets zero).
     pub fn new() -> LogHistogram {
         LogHistogram {
             buckets: std::array::from_fn(|_| AtomicU64::new(0)),
@@ -66,6 +81,7 @@ impl LogHistogram {
         self.sum.fetch_add(v, Ordering::Relaxed);
     }
 
+    /// Total samples recorded.
     pub fn count(&self) -> u64 {
         self.count.load(Ordering::Relaxed)
     }
@@ -89,6 +105,7 @@ pub struct HistogramSnapshot {
 }
 
 impl HistogramSnapshot {
+    /// A snapshot with no samples.
     pub fn empty() -> HistogramSnapshot {
         HistogramSnapshot { buckets: [0; HIST_BUCKETS], count: 0, sum: 0 }
     }

@@ -65,6 +65,7 @@ impl TelemetryConfig {
         }
     }
 
+    /// Whether any telemetry subsystem (tracing or numeric counters) is on.
     pub fn any_enabled(&self) -> bool {
         self.tracing || self.numeric
     }

@@ -37,6 +37,20 @@
 //! service starts and reports deltas, so two sequential services don't
 //! see each other's counts; two *concurrent* services in one process do
 //! share the sink — a stated limitation, not a bug.
+//!
+//! # `Ordering::Relaxed` audit (tclint `relaxed-ordering`)
+//!
+//! The enable refcount and every sink slot are relaxed on purpose. The
+//! refcount only gates *whether* events are counted — a racing enable can
+//! miss events already in flight, which only shifts where the baseline
+//! snapshot lands, never a computed value. Sink slots are independent
+//! monotonic event counters: flushes add to each slot separately, and
+//! [`NumericSnapshot::capture`] reads them with independent relaxed
+//! loads, so a snapshot racing a guard-drop flush can see one counter of
+//! a frame without its siblings. Consumers (`delta`, the metrics
+//! exposition) treat each counter as its own timeline and never branch
+//! on cross-counter equality, so torn snapshots are benign. No slot
+//! publishes non-atomic data, so no Acquire/Release pairing is needed.
 
 use crate::gemm::Method;
 use std::cell::Cell;
@@ -64,9 +78,11 @@ pub enum Counter {
     ExtRnAdds = 5,
 }
 
+/// Number of [`Counter`] variants.
 pub const NUM_COUNTERS: usize = 6;
 
 impl Counter {
+    /// Every counter, in discriminant order.
     pub const ALL: [Counter; NUM_COUNTERS] = [
         Counter::SplitFlushed,
         Counter::SplitSubnormal,
@@ -223,6 +239,7 @@ impl Default for NumericSnapshot {
 }
 
 impl NumericSnapshot {
+    /// Read every per-slot counter (Relaxed loads; see the module docs on snapshot consistency).
     pub fn capture() -> NumericSnapshot {
         NumericSnapshot {
             counts: std::array::from_fn(|i| SINK[i].load(Ordering::Relaxed)),
@@ -269,6 +286,7 @@ impl NumericSnapshot {
         out
     }
 
+    /// Whether every per-slot counter entry is zero.
     pub fn is_zero(&self) -> bool {
         self.counts.iter().all(|&v| v == 0)
     }

@@ -48,9 +48,11 @@ pub enum Stage {
     Reply = 7,
 }
 
+/// Number of [`Stage`] variants.
 pub const NUM_STAGES: usize = 8;
 
 impl Stage {
+    /// Every stage, in pipeline order.
     pub const ALL: [Stage; NUM_STAGES] = [
         Stage::IntakeAdmit,
         Stage::Plan,
@@ -62,6 +64,7 @@ impl Stage {
         Stage::Reply,
     ];
 
+    /// Stable snake_case label used in metrics exposition.
     pub fn name(self) -> &'static str {
         match self {
             Stage::IntakeAdmit => "intake_admit",
@@ -100,11 +103,13 @@ pub struct TraceRing {
 }
 
 impl TraceRing {
+    /// An empty ring retaining at most `capacity` spans (minimum 1).
     pub fn new(capacity: usize) -> TraceRing {
         let cap = capacity.max(1);
         TraceRing { cap, buf: VecDeque::with_capacity(cap), dropped: 0 }
     }
 
+    /// Append a span, evicting the oldest when full.
     pub fn push(&mut self, span: Span) {
         if self.buf.len() == self.cap {
             self.buf.pop_front();
@@ -113,14 +118,17 @@ impl TraceRing {
         self.buf.push_back(span);
     }
 
+    /// Number of retained spans.
     pub fn len(&self) -> usize {
         self.buf.len()
     }
 
+    /// Whether no spans are retained.
     pub fn is_empty(&self) -> bool {
         self.buf.is_empty()
     }
 
+    /// Maximum number of retained spans.
     pub fn capacity(&self) -> usize {
         self.cap
     }
@@ -158,6 +166,7 @@ pub struct Tracer {
 }
 
 impl Tracer {
+    /// A tracer with an empty span ring of the given capacity and zeroed per-stage histograms.
     pub fn new(capacity: usize) -> Tracer {
         Tracer {
             epoch: Instant::now(),
@@ -187,6 +196,7 @@ impl Tracer {
         self.hists[stage as usize].count()
     }
 
+    /// Total spans evicted from the ring since construction.
     pub fn dropped(&self) -> u64 {
         self.ring.lock().unwrap().dropped()
     }

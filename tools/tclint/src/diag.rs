@@ -1,0 +1,123 @@
+//! Rule identifiers, severities, and the finding record.
+
+use std::fmt;
+
+/// Every rule tclint knows, one stable kebab-case id each. The ids are the
+/// public contract: inline `// tclint: allow(...)` directives and
+/// `allow.list` entries name rules by these strings.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub enum RuleId {
+    /// `HashMap`/`HashSet` in a bit-exact module — unordered iteration
+    /// must not feed numeric results.
+    HashContainer,
+    /// f32 accumulation via `.fold(0.0f32, ..)` / `.sum::<f32>()` — the
+    /// reduction order must be proven fixed or order-independent.
+    FloatFold,
+    /// `mul_add` fuses its rounding, diverging from the modeled hardware.
+    MulAdd,
+    /// Bare `==`/`!=` against a non-zero float literal (zero compares are
+    /// exact and allowed); use `to_bits` helpers for identity checks.
+    FloatCmp,
+    /// `as f32` narrowing outside `fp/` — the single-rounding-site policy.
+    LossyCast,
+    /// `unwrap`/`expect` on the serving hot path; route through
+    /// `ServiceError` instead.
+    HotUnwrap,
+    /// `panic!`-family macro on the serving hot path.
+    HotPanic,
+    /// Bare slice indexing on the serving hot path; use checked access.
+    HotIndex,
+    /// Lock-acquisition order forms a cycle across the codebase.
+    LockOrder,
+    /// A lock guard held across a channel `send`/`recv` or a foreign
+    /// `Condvar` wait — the PR-4 intake/dispatcher deadlock shapes.
+    LockHeldIo,
+    /// `pub` item in `planner/`/`api/`/`telemetry/` without a doc comment.
+    PubDoc,
+    /// `tcec_*` metric literal in `telemetry/` absent from the golden
+    /// Prometheus fixture.
+    MetricName,
+    /// `lib.rs` layer-map module list disagrees with the directory tree.
+    LayerMap,
+    /// `Ordering::Relaxed` in the metrics/telemetry counters — each use
+    /// must carry a documented snapshot-consistency argument.
+    RelaxedOrdering,
+}
+
+impl RuleId {
+    /// All rules, in reporting order.
+    pub const ALL: [RuleId; 14] = [
+        RuleId::HashContainer,
+        RuleId::FloatFold,
+        RuleId::MulAdd,
+        RuleId::FloatCmp,
+        RuleId::LossyCast,
+        RuleId::HotUnwrap,
+        RuleId::HotPanic,
+        RuleId::HotIndex,
+        RuleId::LockOrder,
+        RuleId::LockHeldIo,
+        RuleId::PubDoc,
+        RuleId::MetricName,
+        RuleId::LayerMap,
+        RuleId::RelaxedOrdering,
+    ];
+
+    /// The stable kebab-case id.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            RuleId::HashContainer => "hash-container",
+            RuleId::FloatFold => "float-fold",
+            RuleId::MulAdd => "mul-add",
+            RuleId::FloatCmp => "float-cmp",
+            RuleId::LossyCast => "lossy-cast",
+            RuleId::HotUnwrap => "hot-unwrap",
+            RuleId::HotPanic => "hot-panic",
+            RuleId::HotIndex => "hot-index",
+            RuleId::LockOrder => "lock-order",
+            RuleId::LockHeldIo => "lock-held-io",
+            RuleId::PubDoc => "pub-doc",
+            RuleId::MetricName => "metric-name",
+            RuleId::LayerMap => "layer-map",
+            RuleId::RelaxedOrdering => "relaxed-ordering",
+        }
+    }
+
+    /// Parse a kebab-case id back to a rule.
+    pub fn parse(s: &str) -> Option<RuleId> {
+        RuleId::ALL.into_iter().find(|r| r.as_str() == s)
+    }
+
+    /// Whether the rule denies by default. Warn-level rules (`pub-doc`,
+    /// `relaxed-ordering`) deny only under `--deny-all` — they encode
+    /// contracts that degrade, not invariants that break bits.
+    pub fn default_deny(self) -> bool {
+        !matches!(self, RuleId::PubDoc | RuleId::RelaxedOrdering)
+    }
+}
+
+impl fmt::Display for RuleId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// One diagnostic: a rule fired at a source line.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub rule: RuleId,
+    pub path: String,
+    /// 1-based line.
+    pub line: usize,
+    pub message: String,
+    /// Raw text of the line, used for allowlist substring matching.
+    pub src_line: String,
+}
+
+impl Finding {
+    /// Render as `path:line: level[rule-id] message`.
+    pub fn render(&self, deny_all: bool) -> String {
+        let level = if deny_all || self.rule.default_deny() { "deny" } else { "warn" };
+        format!("{}:{}: {}[{}] {}", self.path, self.line, level, self.rule, self.message)
+    }
+}

@@ -1,0 +1,54 @@
+//! Rule driver: runs every family over a set of lexed files and returns
+//! the raw (pre-suppression) findings, deduplicated and ordered.
+
+use crate::diag::Finding;
+use crate::lexer::FileModel;
+use crate::rules;
+
+/// Cross-file inputs some rules need. Fixtures construct this directly;
+/// the CLI derives it from the scan root.
+pub struct Context {
+    /// Contents of `rust/tests/golden/metrics.prom` (None disables the
+    /// metric-name rule).
+    pub golden_metrics: Option<String>,
+    /// Module names present on disk next to `lib.rs` (None disables the
+    /// layer-map rule).
+    pub disk_mods: Option<Vec<String>>,
+}
+
+impl Context {
+    /// A context with every cross-file rule disabled.
+    pub fn empty() -> Context {
+        Context { golden_metrics: None, disk_mods: None }
+    }
+}
+
+/// Run all rules over `files`. Findings come back sorted by
+/// (path, line, rule) with per-line duplicates collapsed.
+pub fn run(files: &[FileModel], ctx: &Context) -> Vec<Finding> {
+    let mut out: Vec<Finding> = Vec::new();
+    for fm in files {
+        if rules::in_exact_scope(&fm.path) {
+            rules::bitexact::run(fm, &mut out);
+        }
+        if rules::in_hot_scope(&fm.path) {
+            rules::panicpath::run(fm, &mut out);
+        }
+        if rules::in_contract_scope(&fm.path) {
+            rules::contract::run_pub_doc(fm, &mut out);
+        }
+        if fm.path.contains("/telemetry/") {
+            rules::contract::run_metric_name(fm, ctx, &mut out);
+        }
+        if rules::in_relaxed_scope(&fm.path) {
+            rules::contract::run_relaxed(fm, &mut out);
+        }
+    }
+    rules::locks::run(files, &mut out);
+    rules::contract::run_layer_map(files, ctx, &mut out);
+    out.sort_by(|a, b| {
+        (&a.path, a.line, a.rule).cmp(&(&b.path, b.line, b.rule))
+    });
+    out.dedup_by(|a, b| a.path == b.path && a.line == b.line && a.rule == b.rule);
+    out
+}

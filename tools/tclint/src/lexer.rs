@@ -1,0 +1,266 @@
+//! Comment/string-aware line scanner — the lexical substrate every rule
+//! reads instead of raw source text.
+//!
+//! This is deliberately **not** a parser. The scanner classifies each byte
+//! of a Rust source file as code, comment, or literal, and exposes three
+//! per-file views:
+//!
+//! * *code lines* — comments removed and string/char literal **contents**
+//!   blanked (delimiters kept), so substring rules never trip on
+//!   `".lock()"` inside a log message;
+//! * *line comments*, which is where `// tclint: allow(...)` directives
+//!   live;
+//! * *string literals* with their line numbers, for the metric-name
+//!   contract check.
+//!
+//! It also computes a `#[cfg(test)]` / `#[test]` mask by brace matching so
+//! every rule skips test code uniformly, and a per-line brace depth used
+//! by the lock-discipline rules to bound guard lifetimes.
+//!
+//! Handled literal forms: `"..."` with escapes, `'c'` / `'\n'` char
+//! literals (lifetimes like `'a` are passed through as code), raw strings
+//! `r"..."` / `r#"..."#`, and nested `/* /* */ */` block comments. Byte
+//! strings reduce to the plain-string case (`b` scans as code).
+
+/// Lexical model of one source file. Lines are 1-based everywhere.
+pub struct FileModel {
+    /// Path as given to the scanner (virtual for fixtures). Always uses
+    /// `/` separators.
+    pub path: String,
+    /// Original source, split on `\n`.
+    pub raw_lines: Vec<String>,
+    /// Comment-free, literal-blanked view of each line.
+    pub code_lines: Vec<String>,
+    /// `(line, text)` of every `//` comment (text excludes the slashes).
+    pub comments: Vec<(usize, String)>,
+    /// `(start_line, content)` of every string literal.
+    pub strings: Vec<(usize, String)>,
+    /// True for lines inside a `#[cfg(test)]` or `#[test]` item.
+    test_mask: Vec<bool>,
+}
+
+impl FileModel {
+    /// Whether `line` (1-based) is inside test-only code.
+    pub fn is_test_line(&self, line: usize) -> bool {
+        self.test_mask.get(line.wrapping_sub(1)).copied().unwrap_or(false)
+    }
+
+    /// Comment-free view of `line` (1-based; empty string out of range).
+    pub fn code(&self, line: usize) -> &str {
+        self.code_lines.get(line.wrapping_sub(1)).map_or("", String::as_str)
+    }
+
+    /// Raw text of `line` (1-based; empty string out of range).
+    pub fn raw(&self, line: usize) -> &str {
+        self.raw_lines.get(line.wrapping_sub(1)).map_or("", String::as_str)
+    }
+
+    /// Number of lines in the file.
+    pub fn line_count(&self) -> usize {
+        self.code_lines.len()
+    }
+}
+
+enum Mode {
+    Code,
+    LineComment,
+    BlockComment(u32),
+    Str,
+    RawStr(u32),
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Scan `src` into a [`FileModel`].
+pub fn lex(path: &str, src: &str) -> FileModel {
+    let bytes = src.as_bytes();
+    let n = bytes.len();
+    let mut code_lines: Vec<String> = Vec::new();
+    let mut comments: Vec<(usize, String)> = Vec::new();
+    let mut strings: Vec<(usize, String)> = Vec::new();
+    let mut cur: Vec<u8> = Vec::new();
+    let mut combuf: Vec<u8> = Vec::new();
+    let mut strbuf: Vec<u8> = Vec::new();
+    let mut str_line = 0usize;
+    let mut line = 1usize;
+    let mut mode = Mode::Code;
+    let mut i = 0usize;
+    while i < n {
+        let c = bytes[i];
+        if c == b'\n' {
+            if matches!(mode, Mode::LineComment) {
+                comments.push((line, String::from_utf8_lossy(&combuf).into_owned()));
+                combuf.clear();
+                mode = Mode::Code;
+            }
+            code_lines.push(String::from_utf8_lossy(&cur).into_owned());
+            cur.clear();
+            line += 1;
+            i += 1;
+            continue;
+        }
+        match mode {
+            Mode::Code => {
+                if c == b'/' && bytes.get(i + 1) == Some(&b'/') {
+                    mode = Mode::LineComment;
+                    combuf.clear();
+                    i += 2;
+                } else if c == b'/' && bytes.get(i + 1) == Some(&b'*') {
+                    mode = Mode::BlockComment(1);
+                    cur.extend_from_slice(b"  ");
+                    i += 2;
+                } else if c == b'"' {
+                    mode = Mode::Str;
+                    strbuf.clear();
+                    str_line = line;
+                    cur.push(b'"');
+                    i += 1;
+                } else if c == b'r'
+                    && (i == 0 || !is_ident_byte(bytes[i - 1]))
+                    && matches!(bytes.get(i + 1), Some(b'"') | Some(b'#'))
+                {
+                    let mut j = i + 1;
+                    let mut hashes = 0u32;
+                    while bytes.get(j) == Some(&b'#') {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if bytes.get(j) == Some(&b'"') {
+                        mode = Mode::RawStr(hashes);
+                        strbuf.clear();
+                        str_line = line;
+                        cur.extend_from_slice(b"r\"");
+                        i = j + 1;
+                    } else {
+                        cur.push(c);
+                        i += 1;
+                    }
+                } else if c == b'\'' {
+                    // Char literal vs lifetime: `'\x'`-style and `'c'` are
+                    // chars (blanked); anything else is a lifetime tick.
+                    if bytes.get(i + 1) == Some(&b'\\') {
+                        let mut j = i + 2;
+                        if j < n {
+                            j += 1; // the escaped byte
+                            if bytes.get(j) == Some(&b'\'') {
+                                j += 1;
+                            }
+                        }
+                        cur.extend_from_slice(b"' '");
+                        i = j;
+                    } else if i + 2 < n && bytes[i + 2] == b'\'' {
+                        cur.extend_from_slice(b"' '");
+                        i += 3;
+                    } else {
+                        cur.push(b'\'');
+                        i += 1;
+                    }
+                } else {
+                    cur.push(c);
+                    i += 1;
+                }
+            }
+            Mode::LineComment => {
+                combuf.push(c);
+                i += 1;
+            }
+            Mode::BlockComment(depth) => {
+                if c == b'/' && bytes.get(i + 1) == Some(&b'*') {
+                    mode = Mode::BlockComment(depth + 1);
+                    i += 2;
+                } else if c == b'*' && bytes.get(i + 1) == Some(&b'/') {
+                    mode = if depth == 1 { Mode::Code } else { Mode::BlockComment(depth - 1) };
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            Mode::Str => {
+                if c == b'\\' {
+                    strbuf.push(b' ');
+                    i += 2;
+                } else if c == b'"' {
+                    strings.push((str_line, String::from_utf8_lossy(&strbuf).into_owned()));
+                    cur.push(b'"');
+                    mode = Mode::Code;
+                    i += 1;
+                } else {
+                    strbuf.push(c);
+                    i += 1;
+                }
+            }
+            Mode::RawStr(hashes) => {
+                if c == b'"' {
+                    let mut j = i + 1;
+                    let mut h = 0u32;
+                    while h < hashes && bytes.get(j) == Some(&b'#') {
+                        h += 1;
+                        j += 1;
+                    }
+                    if h == hashes {
+                        strings.push((str_line, String::from_utf8_lossy(&strbuf).into_owned()));
+                        cur.push(b'"');
+                        mode = Mode::Code;
+                        i = j;
+                    } else {
+                        strbuf.push(c);
+                        i += 1;
+                    }
+                } else {
+                    strbuf.push(c);
+                    i += 1;
+                }
+            }
+        }
+    }
+    if matches!(mode, Mode::LineComment) {
+        comments.push((line, String::from_utf8_lossy(&combuf).into_owned()));
+    }
+    code_lines.push(String::from_utf8_lossy(&cur).into_owned());
+
+    let test_mask = test_regions(&code_lines);
+    FileModel {
+        path: path.replace('\\', "/"),
+        raw_lines: src.split('\n').map(str::to_string).collect(),
+        code_lines,
+        comments,
+        strings,
+        test_mask,
+    }
+}
+
+/// Mark every line belonging to a `#[cfg(test)]` or `#[test]` item by
+/// brace-matching from the attribute to the item's closing brace.
+fn test_regions(code_lines: &[String]) -> Vec<bool> {
+    let mut mask = vec![false; code_lines.len()];
+    let mut i = 0usize;
+    while i < code_lines.len() {
+        let l = &code_lines[i];
+        if !(l.contains("#[cfg(test)]") || l.contains("#[test]")) {
+            i += 1;
+            continue;
+        }
+        let mut depth: i64 = 0;
+        let mut started = false;
+        let mut j = i;
+        while j < code_lines.len() {
+            for b in code_lines[j].bytes() {
+                if b == b'{' {
+                    depth += 1;
+                    started = true;
+                } else if b == b'}' {
+                    depth -= 1;
+                }
+            }
+            mask[j] = true;
+            if started && depth <= 0 {
+                break;
+            }
+            j += 1;
+        }
+        i = j + 1;
+    }
+    mask
+}

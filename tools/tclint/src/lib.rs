@@ -1,0 +1,101 @@
+//! tclint — the repo's own static analysis pass (DESIGN.md §13).
+//!
+//! A comment/string-aware token scanner plus a rule engine that walks
+//! `rust/src/**` and mechanically enforces the invariants the paper
+//! reproduction rests on: bit-exactness (single rounding site, fixed-order
+//! reductions, no unordered containers feeding numerics), panic-safety on
+//! the serving hot path (`ServiceError` instead of `unwrap`), lock
+//! discipline (acquisition-order cycles, guards held across channel
+//! traffic), and contract drift (docs, metric names, the `lib.rs` layer
+//! map).
+//!
+//! The library exposes the full pipeline so both the CLI and the fixture /
+//! real-tree tests drive the exact same code: [`lexer::lex`] →
+//! [`engine::run`] → [`analyze`] (suppression matching + staleness).
+
+pub mod diag;
+pub mod engine;
+pub mod lexer;
+pub mod report;
+pub mod rules;
+pub mod suppress;
+
+use diag::Finding;
+use engine::Context;
+use lexer::FileModel;
+use suppress::{inline_allows, parse_allowlist};
+
+/// Result of a full analysis pass.
+pub struct Outcome {
+    /// Findings no suppression matched, in (path, line, rule) order.
+    pub unsuppressed: Vec<Finding>,
+    /// Suppressed findings with the reason that excused each.
+    pub suppressed: Vec<(Finding, String)>,
+    /// Suppression-machinery errors: malformed directives, missing
+    /// reasons, and stale allows. Always fatal — a broken suppression is a
+    /// hole in the contract.
+    pub errors: Vec<String>,
+}
+
+/// Lex + rule + suppression pipeline over in-memory sources.
+pub fn analyze(files: &[FileModel], ctx: &Context, allowlist_text: Option<&str>) -> Outcome {
+    let findings = engine::run(files, ctx);
+    let mut errors: Vec<String> = Vec::new();
+
+    let mut inline: Vec<(usize, suppress::InlineAllow, bool)> = Vec::new();
+    for (fi, fm) in files.iter().enumerate() {
+        let (allows, errs) = inline_allows(fm);
+        errors.extend(errs);
+        inline.extend(allows.into_iter().map(|a| (fi, a, false)));
+    }
+    let (entries, errs) = parse_allowlist(allowlist_text.unwrap_or(""));
+    errors.extend(errs);
+    let mut entry_used = vec![false; entries.len()];
+
+    let mut unsuppressed = Vec::new();
+    let mut suppressed = Vec::new();
+    'findings: for f in findings {
+        for (fi, a, used) in inline.iter_mut() {
+            if files[*fi].path == f.path && a.target == f.line && a.rules.contains(&f.rule) {
+                *used = true;
+                suppressed.push((f, a.reason.clone()));
+                continue 'findings;
+            }
+        }
+        for (ei, e) in entries.iter().enumerate() {
+            if e.matches(&f) {
+                entry_used[ei] = true;
+                suppressed.push((f, e.reason.clone()));
+                continue 'findings;
+            }
+        }
+        unsuppressed.push(f);
+    }
+
+    for (fi, a, used) in &inline {
+        if !used {
+            errors.push(format!(
+                "{}:{}: stale suppression — allow({}) matches no finding",
+                files[*fi].path,
+                a.line,
+                a.rules.iter().map(|r| r.as_str()).collect::<Vec<_>>().join(", ")
+            ));
+        }
+    }
+    for (ei, e) in entries.iter().enumerate() {
+        if !entry_used[ei] {
+            errors.push(format!(
+                "allow.list:{}: stale suppression — `{} | {} | {}` matches no finding",
+                e.line_no, e.rule, e.path_sub, e.line_sub
+            ));
+        }
+    }
+    Outcome { unsuppressed, suppressed, errors }
+}
+
+/// Whether the outcome should fail the run. Warn-level findings gate only
+/// under `deny_all`; suppression errors always gate.
+pub fn should_fail(outcome: &Outcome, deny_all: bool) -> bool {
+    !outcome.errors.is_empty()
+        || outcome.unsuppressed.iter().any(|f| deny_all || f.rule.default_deny())
+}

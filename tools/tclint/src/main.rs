@@ -1,0 +1,177 @@
+//! CLI entry point. Usage:
+//!
+//! ```text
+//! tclint [--deny-all] [--report] [--allowlist PATH] [ROOT...]
+//! ```
+//!
+//! Walks every `.rs` file under the given roots (default `rust/src`),
+//! runs the rule engine, applies inline and central suppressions, prints
+//! `path:line: level[rule-id] message` diagnostics, and exits non-zero on
+//! any unsuppressed deny-level finding or suppression error. CI runs
+//! `cargo run -p tclint -- --deny-all rust/src` as a blocking step.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use tclint::engine::Context;
+use tclint::lexer::{lex, FileModel};
+use tclint::{analyze, report, should_fail};
+
+fn main() -> ExitCode {
+    let mut deny_all = false;
+    let mut report_mode = false;
+    let mut allowlist_path: Option<String> = None;
+    let mut roots: Vec<String> = Vec::new();
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--deny-all" => deny_all = true,
+            "--report" => report_mode = true,
+            "--allowlist" => match args.next() {
+                Some(p) => allowlist_path = Some(p),
+                None => {
+                    eprintln!("tclint: --allowlist needs a path");
+                    return ExitCode::FAILURE;
+                }
+            },
+            "--help" | "-h" => {
+                println!("usage: tclint [--deny-all] [--report] [--allowlist PATH] [ROOT...]");
+                return ExitCode::SUCCESS;
+            }
+            other if other.starts_with('-') => {
+                eprintln!("tclint: unknown flag {other}");
+                return ExitCode::FAILURE;
+            }
+            other => roots.push(other.to_string()),
+        }
+    }
+    if roots.is_empty() {
+        roots.push("rust/src".to_string());
+    }
+
+    let mut files: Vec<FileModel> = Vec::new();
+    for root in &roots {
+        let mut paths = Vec::new();
+        collect_rs(Path::new(root), &mut paths);
+        paths.sort();
+        for p in paths {
+            match fs::read_to_string(&p) {
+                Ok(src) => files.push(lex(&p.to_string_lossy().replace('\\', "/"), &src)),
+                Err(e) => {
+                    eprintln!("tclint: cannot read {}: {e}", p.display());
+                    return ExitCode::FAILURE;
+                }
+            }
+        }
+    }
+    if files.is_empty() {
+        eprintln!("tclint: no .rs files under {roots:?}");
+        return ExitCode::FAILURE;
+    }
+
+    let ctx = Context {
+        golden_metrics: golden_for(&roots[0]),
+        disk_mods: disk_mods_for(&roots[0]),
+    };
+    let allowlist_text = match load_allowlist(allowlist_path.as_deref(), &roots[0]) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("tclint: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+
+    let outcome = analyze(&files, &ctx, allowlist_text.as_deref());
+
+    if report_mode {
+        print!("{}", report::render(&outcome));
+    } else {
+        for f in &outcome.unsuppressed {
+            println!("{}", f.render(deny_all));
+        }
+    }
+    for e in &outcome.errors {
+        println!("error: {e}");
+    }
+    println!(
+        "tclint: {} file(s), {} finding(s) ({} suppressed), {} suppression error(s)",
+        files.len(),
+        outcome.unsuppressed.len() + outcome.suppressed.len(),
+        outcome.suppressed.len(),
+        outcome.errors.len()
+    );
+    if should_fail(&outcome, deny_all) {
+        ExitCode::FAILURE
+    } else {
+        ExitCode::SUCCESS
+    }
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+    if dir.is_file() {
+        if dir.extension().is_some_and(|e| e == "rs") {
+            out.push(dir.to_path_buf());
+        }
+        return;
+    }
+    let Ok(entries) = fs::read_dir(dir) else { return };
+    for entry in entries.flatten() {
+        let p = entry.path();
+        if p.is_dir() {
+            if p.file_name().is_some_and(|n| n == "target") {
+                continue;
+            }
+            collect_rs(&p, out);
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+}
+
+/// Golden Prometheus fixture: `<root>/../tests/golden/metrics.prom`
+/// (i.e. `rust/tests/...` when scanning `rust/src`).
+fn golden_for(root: &str) -> Option<String> {
+    let candidates =
+        [Path::new(root).join("../tests/golden/metrics.prom"),
+         PathBuf::from("rust/tests/golden/metrics.prom")];
+    candidates.iter().find_map(|p| fs::read_to_string(p).ok())
+}
+
+/// Module names on disk next to `<root>/lib.rs`: `X.rs` files and `X/`
+/// directories containing `mod.rs`.
+fn disk_mods_for(root: &str) -> Option<Vec<String>> {
+    let root = Path::new(root);
+    if !root.join("lib.rs").is_file() {
+        return None;
+    }
+    let mut mods = Vec::new();
+    for entry in fs::read_dir(root).ok()?.flatten() {
+        let p = entry.path();
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if p.is_dir() && p.join("mod.rs").is_file() {
+            mods.push(name);
+        } else if let Some(stem) = name.strip_suffix(".rs") {
+            if stem != "lib" && stem != "main" {
+                mods.push(stem.to_string());
+            }
+        }
+    }
+    mods.sort();
+    Some(mods)
+}
+
+/// Central allowlist: an explicit `--allowlist` path must exist; otherwise
+/// the default locations are optional.
+fn load_allowlist(explicit: Option<&str>, root: &str) -> Result<Option<String>, String> {
+    if let Some(p) = explicit {
+        return fs::read_to_string(p)
+            .map(Some)
+            .map_err(|e| format!("cannot read allowlist {p}: {e}"));
+    }
+    let candidates = [
+        PathBuf::from("tools/tclint/allow.list"),
+        Path::new(root).join("../../tools/tclint/allow.list"),
+    ];
+    Ok(candidates.iter().find_map(|p| fs::read_to_string(p).ok()))
+}

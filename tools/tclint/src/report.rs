@@ -1,0 +1,62 @@
+//! `--report` mode: a per-module findings/suppressions summary, plus a
+//! per-rule suppression tally. Meant for humans auditing the allowlist,
+//! not for CI gating (the plain run does that).
+
+use crate::diag::RuleId;
+use crate::Outcome;
+use std::collections::BTreeMap;
+
+/// Top-level module of a path like `rust/src/coordinator/service.rs`
+/// (`coordinator`), falling back to the file stem for root files.
+fn module_of(path: &str) -> String {
+    let marker = "src/";
+    let rel = match path.rfind(marker) {
+        Some(pos) => &path[pos + marker.len()..],
+        None => path,
+    };
+    match rel.split_once('/') {
+        Some((dir, _)) => dir.to_string(),
+        None => rel.trim_end_matches(".rs").to_string(),
+    }
+}
+
+/// Render the summary tables.
+pub fn render(outcome: &Outcome) -> String {
+    let mut per_module: BTreeMap<String, (usize, usize)> = BTreeMap::new();
+    for f in &outcome.unsuppressed {
+        per_module.entry(module_of(&f.path)).or_default().0 += 1;
+    }
+    for (f, _) in &outcome.suppressed {
+        per_module.entry(module_of(&f.path)).or_default().1 += 1;
+    }
+    let mut per_rule: BTreeMap<&'static str, (usize, usize)> = BTreeMap::new();
+    for f in &outcome.unsuppressed {
+        per_rule.entry(f.rule.as_str()).or_default().0 += 1;
+    }
+    for (f, _) in &outcome.suppressed {
+        per_rule.entry(f.rule.as_str()).or_default().1 += 1;
+    }
+
+    let mut s = String::new();
+    s.push_str("tclint report — findings by module\n");
+    s.push_str(&format!("{:<16} {:>12} {:>12}\n", "module", "unsuppressed", "suppressed"));
+    let (mut tu, mut ts) = (0usize, 0usize);
+    for (m, (u, sup)) in &per_module {
+        s.push_str(&format!("{m:<16} {u:>12} {sup:>12}\n"));
+        tu += u;
+        ts += sup;
+    }
+    s.push_str(&format!("{:<16} {tu:>12} {ts:>12}\n\n", "total"));
+
+    s.push_str("findings by rule\n");
+    s.push_str(&format!("{:<18} {:>12} {:>12}\n", "rule", "unsuppressed", "suppressed"));
+    for rule in RuleId::ALL {
+        if let Some((u, sup)) = per_rule.get(rule.as_str()) {
+            s.push_str(&format!("{:<18} {u:>12} {sup:>12}\n", rule.as_str()));
+        }
+    }
+    if !outcome.errors.is_empty() {
+        s.push_str(&format!("\nsuppression errors: {}\n", outcome.errors.len()));
+    }
+    s
+}

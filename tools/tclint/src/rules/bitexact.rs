@@ -1,0 +1,175 @@
+//! Bit-exactness rules. These encode the invariants that make the
+//! corrected Tensor-Core GEMM bit-identical to its oracles: a single
+//! sanctioned rounding site, fixed-order reductions, and no float
+//! nondeterminism sneaking in through containers or fused ops.
+
+use crate::diag::{Finding, RuleId};
+use crate::lexer::FileModel;
+
+/// Run the per-line bit-exactness rules over one in-scope file.
+pub fn run(fm: &FileModel, out: &mut Vec<Finding>) {
+    let in_fp = fm.path.contains("/fp/");
+    for idx in 0..fm.line_count() {
+        let line = idx + 1;
+        if fm.is_test_line(line) {
+            continue;
+        }
+        let code = fm.code(line);
+        if contains_word(code, "HashMap") || contains_word(code, "HashSet") {
+            push(out, fm, RuleId::HashContainer, line,
+                "unordered container in a bit-exact module; iteration order feeds numerics — \
+                 use BTreeMap/Vec or sort explicitly");
+        }
+        if has_f32_fold(code) || code.contains(".sum::<f32>") {
+            push(out, fm, RuleId::FloatFold, line,
+                "f32 accumulation via fold/sum; prove the reduction order fixed or \
+                 order-independent, or rewrite as an indexed loop");
+        }
+        if code.contains(".mul_add(") {
+            push(out, fm, RuleId::MulAdd, line,
+                "mul_add fuses its rounding step and diverges from the modeled \
+                 multiply-then-add hardware path");
+        }
+        if has_nonzero_float_cmp(code) {
+            push(out, fm, RuleId::FloatCmp, line,
+                "bare ==/!= against a non-zero float literal; compare via to_bits or an \
+                 explicit tolerance");
+        }
+        if !in_fp && has_as_f32(code) {
+            push(out, fm, RuleId::LossyCast, line,
+                "`as f32` narrowing outside fp/ violates the single-rounding-site policy; \
+                 route through fp::rounding");
+        }
+    }
+}
+
+fn push(out: &mut Vec<Finding>, fm: &FileModel, rule: RuleId, line: usize, msg: &str) {
+    out.push(Finding {
+        rule,
+        path: fm.path.clone(),
+        line,
+        message: msg.to_string(),
+        src_line: fm.raw(line).to_string(),
+    });
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// `needle` present with non-identifier bytes on both sides.
+fn contains_word(code: &str, needle: &str) -> bool {
+    let bytes = code.as_bytes();
+    let mut start = 0;
+    while let Some(pos) = code[start..].find(needle) {
+        let at = start + pos;
+        let before_ok = at == 0 || !is_ident(bytes[at - 1]);
+        let end = at + needle.len();
+        let after_ok = end >= bytes.len() || !is_ident(bytes[end]);
+        if before_ok && after_ok {
+            return true;
+        }
+        start = at + 1;
+    }
+    false
+}
+
+/// `.fold(` whose first argument is an f32-suffixed zero literal
+/// (`0.0f32`, `0f32`, `0.0_f32`, ...).
+fn has_f32_fold(code: &str) -> bool {
+    let mut start = 0;
+    while let Some(pos) = code[start..].find(".fold(") {
+        let rest = code[start + pos + ".fold(".len()..].trim_start();
+        for form in ["0.0f32", "0f32", "0.0_f32", "0_f32"] {
+            if rest.starts_with(form) {
+                return true;
+            }
+        }
+        start += pos + 1;
+    }
+    false
+}
+
+/// ` as f32` with a non-identifier byte after the `f32`.
+fn has_as_f32(code: &str) -> bool {
+    let mut start = 0;
+    while let Some(pos) = code[start..].find(" as f32") {
+        let end = start + pos + " as f32".len();
+        if end >= code.len() || !is_ident(code.as_bytes()[end]) {
+            return true;
+        }
+        start += pos + 1;
+    }
+    false
+}
+
+/// `==`/`!=` with a non-zero float literal on either side. Comparisons to
+/// `0.0` are exact (no rounding can hide there) and deliberately allowed —
+/// the tree uses them for zero-operand short-circuits.
+fn has_nonzero_float_cmp(code: &str) -> bool {
+    let bytes = code.as_bytes();
+    for i in 0..bytes.len().saturating_sub(1) {
+        let two = &bytes[i..i + 2];
+        if two != b"==" && two != b"!=" {
+            continue;
+        }
+        // Skip `<=`, `>=`, `=>`-adjacent and `===`-like shapes (not Rust,
+        // but cheap to exclude).
+        if i > 0 && matches!(bytes[i - 1], b'<' | b'>' | b'=' | b'!') {
+            continue;
+        }
+        if bytes.get(i + 2) == Some(&b'=') {
+            continue;
+        }
+        let left = token_before(code, i);
+        let right = token_after(code, i + 2);
+        if is_nonzero_float_literal(&left) || is_nonzero_float_literal(&right) {
+            return true;
+        }
+    }
+    false
+}
+
+fn token_before(code: &str, end: usize) -> String {
+    let bytes = code.as_bytes();
+    let mut s = end;
+    while s > 0 && bytes[s - 1] == b' ' {
+        s -= 1;
+    }
+    let stop = s;
+    while s > 0 && (is_ident(bytes[s - 1]) || matches!(bytes[s - 1], b'.' | b'-')) {
+        s -= 1;
+    }
+    code[s..stop].to_string()
+}
+
+fn token_after(code: &str, start: usize) -> String {
+    let bytes = code.as_bytes();
+    let mut s = start;
+    while s < bytes.len() && bytes[s] == b' ' {
+        s += 1;
+    }
+    let begin = s;
+    if s < bytes.len() && bytes[s] == b'-' {
+        s += 1;
+    }
+    while s < bytes.len() && (is_ident(bytes[s]) || bytes[s] == b'.') {
+        s += 1;
+    }
+    code[begin..s].to_string()
+}
+
+/// A decimal float literal containing a dot (optional exponent,
+/// `_`/`f32`/`f64` suffix, sign) with non-zero value.
+fn is_nonzero_float_literal(tok: &str) -> bool {
+    let t = tok.strip_prefix('-').unwrap_or(tok);
+    let t = t.strip_suffix("f64").or_else(|| t.strip_suffix("f32")).unwrap_or(t);
+    let t = t.strip_suffix('_').unwrap_or(t);
+    if t.is_empty() || !t.as_bytes()[0].is_ascii_digit() || !t.contains('.') {
+        return false;
+    }
+    if !t.bytes().all(|b| b.is_ascii_digit() || matches!(b, b'.' | b'e' | b'E' | b'-' | b'_')) {
+        return false;
+    }
+    t.replace('_', "").parse::<f64>().map(|v| v != 0.0).unwrap_or(false)
+}

@@ -1,0 +1,157 @@
+//! Contract-drift rules: the checks that keep documentation, metric
+//! names, and the `lib.rs` layer map from silently diverging from the
+//! code they describe.
+
+use crate::diag::{Finding, RuleId};
+use crate::engine::Context;
+use crate::lexer::FileModel;
+
+const PUB_ITEM_KINDS: [&str; 7] =
+    ["fn ", "struct ", "enum ", "trait ", "type ", "const ", "static "];
+
+/// Per-file `pub-doc` pass: every `pub` fn/struct/enum/trait/type/const/
+/// static in the contract scope needs a doc comment. `pub mod` is exempt —
+/// module docs live in the module file's own `//!` header.
+pub fn run_pub_doc(fm: &FileModel, out: &mut Vec<Finding>) {
+    for idx in 0..fm.line_count() {
+        let line = idx + 1;
+        if fm.is_test_line(line) {
+            continue;
+        }
+        let trimmed = fm.code(line).trim_start();
+        let Some(rest) = trimmed.strip_prefix("pub ") else { continue };
+        let Some(kind) = PUB_ITEM_KINDS.iter().find(|k| rest.starts_with(**k)) else {
+            continue;
+        };
+        if !is_documented(fm, idx) {
+            out.push(Finding {
+                rule: RuleId::PubDoc,
+                path: fm.path.clone(),
+                line,
+                message: format!(
+                    "undocumented pub {} in an API-contract module; add a doc comment",
+                    kind.trim_end()
+                ),
+                src_line: fm.raw(line).to_string(),
+            });
+        }
+    }
+}
+
+/// Walk upward from the item over its attributes looking for `///` or
+/// `#[doc...]`. A blank line or a plain `//` comment ends the search.
+fn is_documented(fm: &FileModel, item_idx: usize) -> bool {
+    let mut j = item_idx;
+    while j > 0 {
+        j -= 1;
+        let raw = fm.raw(j + 1).trim();
+        if raw.starts_with("///") {
+            return true;
+        }
+        if raw.starts_with("#[") || raw.starts_with("#![") {
+            if raw.contains("doc") {
+                return true;
+            }
+            continue;
+        }
+        if raw.ends_with(")]") {
+            // Tail of a multi-line attribute (e.g. a wrapped #[derive(...)]);
+            // keep walking toward the doc comment above it.
+            continue;
+        }
+        return false;
+    }
+    false
+}
+
+/// Per-file `metric-name` pass: every `tcec_*` metric-shaped string
+/// literal in `telemetry/` must appear in the golden Prometheus fixture —
+/// an unexported metric name is either a typo or a missing golden update.
+pub fn run_metric_name(fm: &FileModel, ctx: &Context, out: &mut Vec<Finding>) {
+    let Some(golden) = &ctx.golden_metrics else { return };
+    for (line, s) in &fm.strings {
+        if fm.is_test_line(*line) {
+            continue;
+        }
+        let metric_shaped = s.starts_with("tcec_")
+            && s.bytes().all(|b| b.is_ascii_lowercase() || b.is_ascii_digit() || b == b'_');
+        if metric_shaped && !golden.contains(s.as_str()) {
+            out.push(Finding {
+                rule: RuleId::MetricName,
+                path: fm.path.clone(),
+                line: *line,
+                message: format!(
+                    "metric literal `{s}` not present in rust/tests/golden/metrics.prom"
+                ),
+                src_line: fm.raw(*line).to_string(),
+            });
+        }
+    }
+}
+
+/// Whole-tree `layer-map` pass: `pub mod` declarations in `lib.rs` must
+/// match the modules on disk, both directions.
+pub fn run_layer_map(files: &[FileModel], ctx: &Context, out: &mut Vec<Finding>) {
+    let Some(disk) = &ctx.disk_mods else { return };
+    let Some(lib) = files.iter().find(|f| f.path.ends_with("lib.rs")) else { return };
+    let mut declared: Vec<(usize, String)> = Vec::new();
+    for idx in 0..lib.line_count() {
+        let line = idx + 1;
+        if lib.is_test_line(line) {
+            continue;
+        }
+        let trimmed = lib.code(line).trim();
+        if let Some(rest) = trimmed.strip_prefix("pub mod ") {
+            if let Some(name) = rest.strip_suffix(';') {
+                declared.push((line, name.trim().to_string()));
+            }
+        }
+    }
+    for (line, name) in &declared {
+        if !disk.iter().any(|d| d == name) {
+            out.push(Finding {
+                rule: RuleId::LayerMap,
+                path: lib.path.clone(),
+                line: *line,
+                message: format!("lib.rs declares `pub mod {name}` but no such module on disk"),
+                src_line: lib.raw(*line).to_string(),
+            });
+        }
+    }
+    for name in disk {
+        if !declared.iter().any(|(_, d)| d == name) {
+            out.push(Finding {
+                rule: RuleId::LayerMap,
+                path: lib.path.clone(),
+                line: 1,
+                message: format!(
+                    "module `{name}` exists on disk but lib.rs has no `pub mod {name}`"
+                ),
+                src_line: lib.raw(1).to_string(),
+            });
+        }
+    }
+}
+
+/// Per-file `relaxed-ordering` pass (warn level): each `Ordering::Relaxed`
+/// in the metrics/telemetry counters must carry a reviewed
+/// snapshot-consistency justification, encoded as a suppression.
+pub fn run_relaxed(fm: &FileModel, out: &mut Vec<Finding>) {
+    for idx in 0..fm.line_count() {
+        let line = idx + 1;
+        if fm.is_test_line(line) {
+            continue;
+        }
+        if fm.code(line).contains("Ordering::Relaxed") {
+            out.push(Finding {
+                rule: RuleId::RelaxedOrdering,
+                path: fm.path.clone(),
+                line,
+                message: "Relaxed atomic in the metrics path; document the per-counter \
+                          snapshot-consistency argument and suppress"
+                    .to_string(),
+                src_line: fm.raw(line).to_string(),
+            });
+        }
+    }
+}

@@ -1,0 +1,217 @@
+//! Lock-discipline rules — the PR-4 intake/dispatcher deadlock shapes,
+//! made mechanical.
+//!
+//! The model is lexical but sound for this codebase's idiom: guards are
+//! `let`-bound from terminal `.lock().unwrap()`-style expressions, live
+//! until their binding's brace scope closes (or an explicit `drop(guard)`),
+//! and identified by the receiver's final path component (`self.shared
+//! .state.lock()` → `state`). From guard liveness we derive:
+//!
+//! * **lock-order** — a directed acquisition graph (edge `a → b` when `b`
+//!   is acquired while `a` is held, anywhere in the tree); any edge on a
+//!   cycle is a deadlock candidate and is flagged at its acquisition site.
+//! * **lock-held-io** — a channel `send`/`recv` or a `Condvar` wait while
+//!   any guard is live. The one blessed shape is a wait that *consumes*
+//!   the guard it releases (`g = cv.wait(g)` / `cv.wait_timeout(g, ..)`),
+//!   which is exactly how a Condvar is meant to be used.
+//!
+//! Known limits (accepted, see DESIGN.md §13): guards bound by
+//! destructuring or through method-chain temporaries are not tracked, and
+//! lock identity is textual — two different fields with the same name
+//! alias. Both err toward false negatives on liveness and false positives
+//! on aliasing; the tree currently has no nested acquisitions at all.
+
+use crate::diag::{Finding, RuleId};
+use crate::lexer::FileModel;
+use std::collections::BTreeMap;
+
+struct Guard {
+    name: String,
+    lock: String,
+    born_depth: i64,
+}
+
+const CHANNEL_OPS: [&str; 5] =
+    [".send(", ".recv()", ".try_recv()", ".recv_timeout(", ".recv_deadline("];
+const WAIT_OPS: [&str; 2] = [".wait(", ".wait_timeout("];
+
+/// Run the whole-tree lock analysis.
+pub fn run(files: &[FileModel], out: &mut Vec<Finding>) {
+    // (held, acquired) -> first acquisition site.
+    let mut edges: BTreeMap<(String, String), (String, usize)> = BTreeMap::new();
+    for fm in files {
+        scan_file(fm, &mut edges, out);
+    }
+    for ((a, b), (path, line)) in &edges {
+        if reaches(&edges, b, a) {
+            out.push(Finding {
+                rule: RuleId::LockOrder,
+                path: path.clone(),
+                line: *line,
+                message: format!(
+                    "acquiring `{b}` while holding `{a}` closes a lock-order cycle \
+                     ({b} is also held somewhere while waiting on {a})"
+                ),
+                src_line: String::new(),
+            });
+        }
+    }
+}
+
+/// Whether `from` reaches `to` in the acquisition graph.
+fn reaches(edges: &BTreeMap<(String, String), (String, usize)>, from: &str, to: &str) -> bool {
+    let mut stack = vec![from.to_string()];
+    let mut seen = vec![from.to_string()];
+    while let Some(node) = stack.pop() {
+        if node == to {
+            return true;
+        }
+        for (a, b) in edges.keys() {
+            if *a == node && !seen.contains(b) {
+                seen.push(b.clone());
+                stack.push(b.clone());
+            }
+        }
+    }
+    false
+}
+
+fn scan_file(
+    fm: &FileModel,
+    edges: &mut BTreeMap<(String, String), (String, usize)>,
+    out: &mut Vec<Finding>,
+) {
+    let mut depth: i64 = 0;
+    let mut guards: Vec<Guard> = Vec::new();
+    for idx in 0..fm.line_count() {
+        let line = idx + 1;
+        let code = fm.code(line);
+        if fm.is_test_line(line) {
+            // Keep depth bookkeeping through test regions so guard scopes
+            // around them stay correct; track nothing inside.
+            depth += brace_delta(code);
+            guards.retain(|g| g.born_depth <= depth);
+            continue;
+        }
+        // 1. Channel ops / waits against the guards live *before* this line.
+        if !guards.is_empty() {
+            if let Some(op) = CHANNEL_OPS.iter().find(|op| code.contains(**op)) {
+                out.push(io_finding(fm, line, op, &guards[0].lock));
+            }
+            for op in WAIT_OPS {
+                if let Some(pos) = code.find(op) {
+                    let arg = code[pos + op.len()..].trim_start();
+                    if !guards.iter().any(|g| consumes_guard(arg, &g.name)) {
+                        out.push(io_finding(fm, line, op, &guards[0].lock));
+                    }
+                }
+            }
+        }
+        // 2. Explicit drops end liveness early.
+        guards.retain(|g| !code.contains(&format!("drop({})", g.name)));
+        // 3. Acquisitions: edges from every live guard, then new guard.
+        for pos in lock_sites(code) {
+            let lock = receiver_of(code, pos);
+            if lock.is_empty() {
+                continue;
+            }
+            for g in &guards {
+                edges
+                    .entry((g.lock.clone(), lock.clone()))
+                    .or_insert_with(|| (fm.path.clone(), line));
+            }
+            if let Some(name) = guard_binding(code, pos) {
+                guards.push(Guard { name, lock, born_depth: depth });
+            }
+        }
+        // 4. Scope bookkeeping.
+        depth += brace_delta(code);
+        guards.retain(|g| g.born_depth <= depth);
+    }
+}
+
+fn io_finding(fm: &FileModel, line: usize, op: &str, held: &str) -> Finding {
+    Finding {
+        rule: RuleId::LockHeldIo,
+        path: fm.path.clone(),
+        line,
+        message: format!(
+            "`{}` while holding lock `{held}` — blocking channel/condvar traffic under a \
+             guard is the intake/dispatcher deadlock shape",
+            op.trim_start_matches('.').trim_end_matches('('),
+        ),
+        src_line: fm.raw(line).to_string(),
+    }
+}
+
+fn brace_delta(code: &str) -> i64 {
+    let mut d = 0i64;
+    for b in code.bytes() {
+        if b == b'{' {
+            d += 1;
+        } else if b == b'}' {
+            d -= 1;
+        }
+    }
+    d
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Byte offsets of every `.lock()` call on the line.
+fn lock_sites(code: &str) -> Vec<usize> {
+    let mut v = Vec::new();
+    let mut start = 0;
+    while let Some(pos) = code[start..].find(".lock()") {
+        v.push(start + pos);
+        start += pos + 1;
+    }
+    v
+}
+
+/// Final path component of the receiver ending at `pos` (the dot of
+/// `.lock()`): `self.shared.state` → `state`.
+fn receiver_of(code: &str, pos: usize) -> String {
+    let bytes = code.as_bytes();
+    let mut s = pos;
+    while s > 0 && (is_ident(bytes[s - 1]) || matches!(bytes[s - 1], b'.' | b':')) {
+        s -= 1;
+    }
+    let recv = &code[s..pos];
+    recv.rsplit(['.', ':']).next().unwrap_or(recv).to_string()
+}
+
+/// `cv.wait(g)`-style argument list that starts with guard `name`.
+fn consumes_guard(arg: &str, name: &str) -> bool {
+    arg.strip_prefix(name)
+        .is_some_and(|rest| rest.starts_with(',') || rest.starts_with(')'))
+}
+
+/// If the line is `let [mut] name = <recv>.lock()<terminal>`, the bound
+/// guard name. The remainder after `.lock()` must be terminal
+/// (`.unwrap()`, `.expect(..)`, `.unwrap_or_else(..)`, or nothing) so a
+/// chain like `.lock().unwrap().keys()...collect()` — which drops its
+/// guard at statement end — is not mistaken for a live binding.
+fn guard_binding(code: &str, lock_pos: usize) -> Option<String> {
+    let trimmed = code.trim_start();
+    let rest = trimmed.strip_prefix("let ")?;
+    let rest = rest.strip_prefix("mut ").unwrap_or(rest);
+    let end = rest.bytes().position(|b| !is_ident(b)).unwrap_or(rest.len());
+    let name = &rest[..end];
+    if name.is_empty() || !rest[end..].trim_start().starts_with('=') {
+        return None;
+    }
+    let after = &code[lock_pos + ".lock()".len()..];
+    let after = after.strip_prefix(".unwrap()").unwrap_or(after);
+    let terminal = after.trim() == ";"
+        || after.trim().is_empty()
+        || after.starts_with(".expect(")
+        || after.starts_with(".unwrap_or_else(");
+    if terminal {
+        Some(name.to_string())
+    } else {
+        None
+    }
+}

@@ -1,0 +1,38 @@
+//! The four rule families and their scoping helpers.
+//!
+//! Scopes are path-based: tclint's whole premise is that the repo's
+//! layering (DESIGN.md) is visible in the directory tree, so "bit-exact
+//! module" and "serving hot path" are decidable from the file path alone.
+
+pub mod bitexact;
+pub mod contract;
+pub mod locks;
+pub mod panicpath;
+
+/// Bit-exact scope: the numerical substrate plus the solver's designated
+/// mixed-precision kernel. Everything here feeds bit-identity oracles.
+pub fn in_exact_scope(path: &str) -> bool {
+    path.contains("/fp/")
+        || path.contains("/gemm/")
+        || path.contains("/shard/")
+        || path.contains("/tcsim/")
+        || path.ends_with("solver/mixed.rs")
+}
+
+/// Serving hot path: panics here take down workers mid-request instead of
+/// resolving tickets through the `ServiceError` taxonomy.
+pub fn in_hot_scope(path: &str) -> bool {
+    path.contains("/coordinator/") || path.contains("/api/") || path.contains("/shard/")
+}
+
+/// Contract scope for `pub-doc`: the layers whose public surface is the
+/// user-facing API contract.
+pub fn in_contract_scope(path: &str) -> bool {
+    path.contains("/planner/") || path.contains("/api/") || path.contains("/telemetry/")
+}
+
+/// Scope of the PR-6 relaxed-atomics audit: the service metrics and the
+/// telemetry counters.
+pub fn in_relaxed_scope(path: &str) -> bool {
+    path.ends_with("coordinator/metrics.rs") || path.contains("/telemetry/")
+}

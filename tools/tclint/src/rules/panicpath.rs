@@ -1,0 +1,64 @@
+//! Panic-path rules. A panic on the serving hot path takes a worker down
+//! mid-request and strands every ticket behind it; the repo's contract is
+//! that requests leave the service exactly once, through the
+//! `ServiceError` taxonomy (api/error.rs). These rules make that contract
+//! mechanical: every `unwrap`, `expect`, `panic!`-macro, and bare slice
+//! index in `coordinator/`, `api/`, and `shard/` must either be removed or
+//! carry a reviewed justification (lock-poison propagation, in-bounds by
+//! construction, ...).
+
+use crate::diag::{Finding, RuleId};
+use crate::lexer::FileModel;
+
+const PANIC_MACROS: [&str; 4] = ["panic!(", "unreachable!(", "todo!(", "unimplemented!("];
+
+/// Run the per-line panic-path rules over one hot-scope file.
+pub fn run(fm: &FileModel, out: &mut Vec<Finding>) {
+    for idx in 0..fm.line_count() {
+        let line = idx + 1;
+        if fm.is_test_line(line) {
+            continue;
+        }
+        let code = fm.code(line);
+        if code.contains(".unwrap()") || code.contains(".expect(") {
+            push(out, fm, RuleId::HotUnwrap, line,
+                "unwrap/expect on the serving hot path; return a ServiceError (or justify: \
+                 poison propagation, spawn-time, scope-join)");
+        }
+        if PANIC_MACROS.iter().any(|m| code.contains(m)) {
+            push(out, fm, RuleId::HotPanic, line,
+                "panic-family macro on the serving hot path; route through ServiceError");
+        }
+        if has_bare_index(code) {
+            push(out, fm, RuleId::HotIndex, line,
+                "bare slice indexing on the serving hot path; use get()/first() or justify \
+                 in-bounds by construction");
+        }
+    }
+}
+
+fn push(out: &mut Vec<Finding>, fm: &FileModel, rule: RuleId, line: usize, msg: &str) {
+    out.push(Finding {
+        rule,
+        path: fm.path.clone(),
+        line,
+        message: msg.to_string(),
+        src_line: fm.raw(line).to_string(),
+    });
+}
+
+/// `[` directly preceded by an identifier byte, `)`, or `]` — an index
+/// expression rather than an attribute (`#[...]`), macro (`vec![...]`),
+/// slice literal (`&[...]`), or array type (`: [T; N]`). Attribute lines
+/// are skipped wholesale.
+fn has_bare_index(code: &str) -> bool {
+    if code.trim_start().starts_with('#') {
+        return false;
+    }
+    let bytes = code.as_bytes();
+    (1..bytes.len()).any(|i| {
+        bytes[i] == b'['
+            && (bytes[i - 1].is_ascii_alphanumeric()
+                || matches!(bytes[i - 1], b'_' | b')' | b']'))
+    })
+}

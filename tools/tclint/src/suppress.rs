@@ -1,0 +1,175 @@
+//! Suppression machinery: inline `// tclint: allow(...)` directives and
+//! the central `allow.list` file.
+//!
+//! Both forms **require a reason** — a suppression is a reviewed claim
+//! ("this unwrap is poison propagation", "this cast is exact"), and a
+//! reasonless one is indistinguishable from lint fatigue. Both forms are
+//! also checked for staleness: an allow that matches no finding fails the
+//! run, so suppressions cannot outlive the code they excused.
+
+use crate::diag::{Finding, RuleId};
+use crate::lexer::FileModel;
+
+/// One inline directive: `// tclint: allow(rule-a, rule-b) -- reason`.
+///
+/// A directive on a code line covers that line; a directive on its own
+/// line covers the next line carrying code.
+#[derive(Debug)]
+pub struct InlineAllow {
+    /// Line the comment sits on (1-based).
+    pub line: usize,
+    /// Line the directive covers.
+    pub target: usize,
+    pub rules: Vec<RuleId>,
+    pub reason: String,
+}
+
+/// Extract inline directives from a file. Malformed directives (unknown
+/// rule id, missing `--`, empty reason) are reported as errors, never
+/// silently ignored — a typo must not become an accidental suppression.
+pub fn inline_allows(fm: &FileModel) -> (Vec<InlineAllow>, Vec<String>) {
+    let mut allows = Vec::new();
+    let mut errors = Vec::new();
+    for (line, text) in &fm.comments {
+        let Some(rest) = text.trim().strip_prefix("tclint:") else { continue };
+        if fm.is_test_line(*line) {
+            continue;
+        }
+        let rest = rest.trim();
+        let Some(rest) = rest.strip_prefix("allow(") else {
+            errors.push(format!(
+                "{}:{}: malformed tclint directive (expected `tclint: allow(rule) -- reason`)",
+                fm.path, line
+            ));
+            continue;
+        };
+        let Some(close) = rest.find(')') else {
+            errors.push(format!("{}:{}: unterminated allow( in tclint directive", fm.path, line));
+            continue;
+        };
+        let mut rules = Vec::new();
+        let mut bad = false;
+        for id in rest[..close].split(',') {
+            let id = id.trim();
+            match RuleId::parse(id) {
+                Some(r) => rules.push(r),
+                None => {
+                    errors.push(format!(
+                        "{}:{}: unknown rule id `{id}` in tclint directive",
+                        fm.path, line
+                    ));
+                    bad = true;
+                }
+            }
+        }
+        let tail = rest[close + 1..].trim();
+        let reason = match tail.strip_prefix("--") {
+            Some(r) => r.trim(),
+            None => {
+                errors.push(format!(
+                    "{}:{}: tclint allow without `-- reason` (reasons are mandatory)",
+                    fm.path, line
+                ));
+                continue;
+            }
+        };
+        if reason.is_empty() {
+            errors.push(format!("{}:{}: tclint allow with empty reason", fm.path, line));
+            continue;
+        }
+        if bad || rules.is_empty() {
+            continue;
+        }
+        allows.push(InlineAllow {
+            line: *line,
+            target: directive_target(fm, *line),
+            rules,
+            reason: reason.to_string(),
+        });
+    }
+    (allows, errors)
+}
+
+/// A comment-only line covers the next line carrying code; a trailing
+/// comment covers its own line.
+fn directive_target(fm: &FileModel, line: usize) -> usize {
+    if !fm.code(line).trim().is_empty() {
+        return line;
+    }
+    let mut l = line + 1;
+    while l <= fm.line_count() {
+        if !fm.code(l).trim().is_empty() {
+            return l;
+        }
+        l += 1;
+    }
+    line
+}
+
+/// One `allow.list` entry: `rule-id | path-substring | line-substring | reason`.
+///
+/// A finding is suppressed when the rule matches, `path-substring` occurs
+/// in its path, and `line-substring` occurs in the flagged source line
+/// (`*` matches any line). Substring matching keeps entries stable across
+/// line-number churn while still pinning them to real code.
+#[derive(Debug)]
+pub struct AllowEntry {
+    /// 1-based line in the allowlist file (for stale reporting).
+    pub line_no: usize,
+    pub rule: RuleId,
+    pub path_sub: String,
+    pub line_sub: String,
+    pub reason: String,
+}
+
+impl AllowEntry {
+    /// Whether this entry suppresses `f`.
+    pub fn matches(&self, f: &Finding) -> bool {
+        self.rule == f.rule
+            && f.path.contains(&self.path_sub)
+            && (self.line_sub == "*" || f.src_line.contains(&self.line_sub))
+    }
+}
+
+/// Parse the central allowlist. `#` starts a comment; blank lines are
+/// skipped; every entry needs all four `|`-separated fields.
+pub fn parse_allowlist(text: &str) -> (Vec<AllowEntry>, Vec<String>) {
+    let mut entries = Vec::new();
+    let mut errors = Vec::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let line_no = idx + 1;
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let parts: Vec<&str> = line.splitn(4, '|').map(str::trim).collect();
+        if parts.len() != 4 {
+            errors.push(format!(
+                "allow.list:{line_no}: expected `rule | path-sub | line-sub | reason`"
+            ));
+            continue;
+        }
+        let Some(rule) = RuleId::parse(parts[0]) else {
+            errors.push(format!("allow.list:{line_no}: unknown rule id `{}`", parts[0]));
+            continue;
+        };
+        if parts[1].is_empty() || parts[2].is_empty() {
+            errors.push(format!("allow.list:{line_no}: empty path/line pattern"));
+            continue;
+        }
+        if parts[3].is_empty() {
+            errors.push(format!(
+                "allow.list:{line_no}: entry without a reason (reasons are mandatory)"
+            ));
+            continue;
+        }
+        entries.push(AllowEntry {
+            line_no,
+            rule,
+            path_sub: parts[1].to_string(),
+            line_sub: parts[2].to_string(),
+            reason: parts[3].to_string(),
+        });
+    }
+    (entries, errors)
+}

@@ -1,0 +1,11 @@
+// tclint-fixture-path: rust/src/fp/fx_cmp.rs
+fn classify(x: f32) -> bool {
+    if x == 0.0 {
+        return false;
+    }
+    x == 1.5
+}
+
+fn near(x: f32) -> bool {
+    x >= 2.5 && x != 0.25
+}

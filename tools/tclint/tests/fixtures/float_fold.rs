@@ -1,0 +1,12 @@
+// tclint-fixture-path: rust/src/gemm/fx_fold.rs
+fn bad_fold(xs: &[f32]) -> f32 {
+    xs.iter().fold(0.0f32, |a, &b| a + b)
+}
+
+fn bad_sum(xs: &[f32]) -> f32 {
+    xs.iter().copied().sum::<f32>()
+}
+
+fn ok_f64(xs: &[f64]) -> f64 {
+    xs.iter().fold(0.0f64, |a, &b| a + b)
+}

@@ -1,0 +1,17 @@
+// tclint-fixture-path: rust/src/gemm/fx_hash.rs
+use std::collections::HashMap;
+
+fn accumulate(vals: &HashMap<u64, f32>) -> Vec<f32> {
+    vals.values().copied().collect()
+}
+
+struct NotAHashMapKind;
+
+#[cfg(test)]
+mod tests {
+    use std::collections::HashMap;
+
+    fn in_tests_is_fine() -> HashMap<u64, f32> {
+        HashMap::new()
+    }
+}

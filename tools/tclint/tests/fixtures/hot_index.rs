@@ -1,0 +1,13 @@
+// tclint-fixture-path: rust/src/shard/fx_index.rs
+#[derive(Debug)]
+struct Grid(Vec<u32>);
+
+fn pick(v: &[u32], i: usize) -> u32 {
+    v[i]
+}
+
+fn safe(v: &[u32]) -> Option<&u32> {
+    let ws = vec![1u32];
+    let _ = &ws;
+    v.first()
+}

@@ -1,0 +1,7 @@
+// tclint-fixture-path: rust/src/api/fx_panic.rs
+fn boom(flag: bool) {
+    if flag {
+        panic!("no");
+    }
+    unreachable!()
+}

@@ -1,0 +1,12 @@
+// tclint-fixture-path: rust/src/coordinator/fx_unwrap.rs
+fn take(v: Option<u32>) -> u32 {
+    v.unwrap()
+}
+
+fn must(v: Option<u32>) -> u32 {
+    v.expect("present")
+}
+
+fn checked(v: Option<u32>) -> u32 {
+    v.unwrap_or(0)
+}

@@ -1,0 +1,4 @@
+// tclint-fixture-path: rust/src/lib.rs
+// tclint-fixture-disk: alpha, beta
+pub mod alpha;
+pub mod gamma;

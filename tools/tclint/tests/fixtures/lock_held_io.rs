@@ -1,0 +1,22 @@
+// tclint-fixture-path: rust/src/runtime/fx_io.rs
+use std::sync::mpsc::Sender;
+use std::sync::{Condvar, Mutex};
+
+fn bad(m: &Mutex<u32>, tx: &Sender<u32>) {
+    let g = m.lock().unwrap();
+    tx.send(*g).ok();
+}
+
+fn blessed(m: &Mutex<u32>, cv: &Condvar) {
+    let mut g = m.lock().unwrap();
+    while *g == 0 {
+        g = cv.wait(g).unwrap();
+    }
+}
+
+fn dropped(m: &Mutex<u32>, tx: &Sender<u32>) {
+    let g = m.lock().unwrap();
+    let v = *g;
+    drop(g);
+    tx.send(v).ok();
+}

@@ -1,0 +1,23 @@
+// tclint-fixture-path: rust/src/runtime/fx_locks.rs
+use std::sync::Mutex;
+
+struct S {
+    a: Mutex<u32>,
+    b: Mutex<u32>,
+}
+
+impl S {
+    fn forward(&self) {
+        let g = self.a.lock().unwrap();
+        let h = self.b.lock().unwrap();
+        drop(h);
+        drop(g);
+    }
+
+    fn backward(&self) {
+        let g = self.b.lock().unwrap();
+        let h = self.a.lock().unwrap();
+        drop(h);
+        drop(g);
+    }
+}

@@ -1,0 +1,8 @@
+// tclint-fixture-path: rust/src/gemm/fx_cast.rs
+fn narrow(x: f64) -> f32 {
+    x as f32
+}
+
+fn widen(x: f32) -> f64 {
+    x as f64
+}

@@ -1,0 +1,4 @@
+// tclint-fixture-path: rust/src/fp/fx_cast.rs
+fn narrow(x: f64) -> f32 {
+    x as f32
+}

@@ -1,0 +1,6 @@
+// tclint-fixture-path: rust/src/telemetry/fx_metric.rs
+// tclint-fixture-golden: tcec_requests_total tcec_flops_total
+/// Exported metric names.
+pub fn names() -> [&'static str; 3] {
+    ["tcec_requests_total", "tcec_bogus_metric", "not_a_metric"]
+}

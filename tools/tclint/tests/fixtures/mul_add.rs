@@ -1,0 +1,8 @@
+// tclint-fixture-path: rust/src/tcsim/fx_fma.rs
+fn fused(a: f32, b: f32, c: f32) -> f32 {
+    a.mul_add(b, c)
+}
+
+fn unfused(a: f32, b: f32, c: f32) -> f32 {
+    a * b + c
+}

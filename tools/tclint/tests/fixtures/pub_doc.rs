@@ -1,0 +1,15 @@
+// tclint-fixture-path: rust/src/api/fx_doc.rs
+pub fn naked() -> u32 {
+    7
+}
+
+/// Documented.
+pub fn covered() -> u32 {
+    9
+}
+
+/// Documented through an attribute stack.
+#[derive(Debug)]
+pub struct Wrapped;
+
+pub mod plumbing {}

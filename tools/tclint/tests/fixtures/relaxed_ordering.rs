@@ -1,0 +1,7 @@
+// tclint-fixture-path: rust/src/telemetry/fx_relaxed.rs
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Bump the counter.
+pub fn bump(c: &AtomicU64) {
+    c.fetch_add(1, Ordering::Relaxed);
+}

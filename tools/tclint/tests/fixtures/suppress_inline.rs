@@ -1,0 +1,9 @@
+// tclint-fixture-path: rust/src/coordinator/fx_allow.rs
+fn own_line(v: Option<u32>) -> u32 {
+    // tclint: allow(hot-unwrap) -- fixture: a directive on its own line covers the next code line
+    v.unwrap()
+}
+
+fn trailing(v: Option<u32>) -> u32 {
+    v.unwrap() // tclint: allow(hot-unwrap) -- fixture: a trailing directive covers its own line
+}

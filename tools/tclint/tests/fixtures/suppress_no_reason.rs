@@ -1,0 +1,10 @@
+// tclint-fixture-path: rust/src/coordinator/fx_noreason.rs
+fn take(v: Option<u32>) -> u32 {
+    // tclint: allow(hot-unwrap)
+    v.unwrap()
+}
+
+fn other(v: Option<u32>) -> u32 {
+    // tclint: allow(bogus-rule) -- not a rule
+    v.unwrap()
+}

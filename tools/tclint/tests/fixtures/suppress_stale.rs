@@ -1,0 +1,5 @@
+// tclint-fixture-path: rust/src/coordinator/fx_stale.rs
+fn fine(v: Option<u32>) -> u32 {
+    // tclint: allow(hot-unwrap) -- fixture: nothing to suppress here
+    v.unwrap_or(0)
+}

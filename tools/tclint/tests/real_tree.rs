@@ -1,0 +1,113 @@
+//! The meta-test (ISSUE satellite 3): run the full tclint pipeline over
+//! the real `rust/src` tree with the real central allowlist and assert
+//!
+//! 1. zero unsuppressed findings, at **deny-all** strictness (warn-level
+//!    rules included), and
+//! 2. zero suppression errors — in particular, zero *stale* suppressions:
+//!    every inline directive and every `allow.list` entry still matches a
+//!    live finding.
+//!
+//! This is the contract CI's `cargo run -p tclint -- --deny-all rust/src`
+//! step enforces, pinned as a plain `cargo test` so it also runs anywhere
+//! the workspace tests run.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use tclint::engine::Context;
+use tclint::lexer::{lex, FileModel};
+use tclint::{analyze, should_fail};
+
+fn repo_root() -> PathBuf {
+    // tools/tclint -> tools -> repo root.
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../..")
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+    let entries = fs::read_dir(dir).expect("readable source dir");
+    for entry in entries.flatten() {
+        let p = entry.path();
+        if p.is_dir() {
+            collect_rs(&p, out);
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+}
+
+/// Mirror of the CLI's disk-module derivation: `X.rs` files and `X/`
+/// directories containing `mod.rs`, next to `lib.rs`.
+fn disk_mods(src_root: &Path) -> Vec<String> {
+    let mut mods = Vec::new();
+    for entry in fs::read_dir(src_root).expect("src root").flatten() {
+        let p = entry.path();
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if p.is_dir() && p.join("mod.rs").is_file() {
+            mods.push(name);
+        } else if let Some(stem) = name.strip_suffix(".rs") {
+            if stem != "lib" && stem != "main" {
+                mods.push(stem.to_string());
+            }
+        }
+    }
+    mods.sort();
+    mods
+}
+
+#[test]
+fn real_tree_is_clean_under_deny_all_with_no_stale_suppressions() {
+    let root = repo_root();
+    let src_root = root.join("rust/src");
+    assert!(src_root.is_dir(), "rust/src not found at {}", src_root.display());
+
+    let mut paths = Vec::new();
+    collect_rs(&src_root, &mut paths);
+    paths.sort();
+    assert!(paths.len() > 10, "suspiciously few sources: {}", paths.len());
+
+    let files: Vec<FileModel> = paths
+        .iter()
+        .map(|p| {
+            let src = fs::read_to_string(p).expect("readable source file");
+            let rel = p
+                .strip_prefix(&root)
+                .unwrap_or(p)
+                .to_string_lossy()
+                .replace('\\', "/");
+            lex(&rel, &src)
+        })
+        .collect();
+
+    let ctx = Context {
+        golden_metrics: Some(
+            fs::read_to_string(root.join("rust/tests/golden/metrics.prom"))
+                .expect("golden metrics fixture"),
+        ),
+        disk_mods: Some(disk_mods(&src_root)),
+    };
+    let allow =
+        fs::read_to_string(root.join("tools/tclint/allow.list")).expect("central allowlist");
+
+    let outcome = analyze(&files, &ctx, Some(&allow));
+
+    let mut msg = String::new();
+    for f in &outcome.unsuppressed {
+        msg.push_str(&format!("  {}\n", f.render(true)));
+    }
+    for e in &outcome.errors {
+        msg.push_str(&format!("  error: {e}\n"));
+    }
+    assert!(
+        outcome.unsuppressed.is_empty(),
+        "unsuppressed findings on the real tree:\n{msg}"
+    );
+    assert!(
+        outcome.errors.is_empty(),
+        "suppression errors (stale allows?) on the real tree:\n{msg}"
+    );
+    assert!(!should_fail(&outcome, true), "should_fail disagrees with empty outcome");
+    assert!(
+        !outcome.suppressed.is_empty(),
+        "zero suppressed findings — the allowlist should be exercised"
+    );
+}

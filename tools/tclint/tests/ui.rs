@@ -1,0 +1,145 @@
+//! Fixture-based UI tests: each `tests/fixtures/NAME.rs` is lexed under a
+//! virtual path (its `// tclint-fixture-path:` header), run through the
+//! full analyze pipeline, and the rendered diagnostics are compared
+//! byte-for-byte against `tests/fixtures/NAME.expected`. Deleting any one
+//! rule's implementation breaks at least one of these.
+//!
+//! Optional headers: `// tclint-fixture-golden: <text>` feeds the
+//! metric-name rule; `// tclint-fixture-disk: a, b` feeds the layer-map
+//! rule. Headers are plain comments, so the lexer ignores them and line
+//! numbers in `.expected` files refer to the fixture file as-is.
+
+use std::fs;
+use std::path::PathBuf;
+
+use tclint::engine::Context;
+use tclint::lexer::lex;
+use tclint::{analyze, report, Outcome};
+
+fn fixtures_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures")
+}
+
+fn run_fixture(name: &str) -> Outcome {
+    let src_path = fixtures_dir().join(format!("{name}.rs"));
+    let src = fs::read_to_string(&src_path)
+        .unwrap_or_else(|e| panic!("read {}: {e}", src_path.display()));
+    let mut vpath: Option<String> = None;
+    let mut golden: Option<String> = None;
+    let mut disk: Option<Vec<String>> = None;
+    for line in src.lines() {
+        let t = line.trim();
+        if let Some(r) = t.strip_prefix("// tclint-fixture-path:") {
+            vpath = Some(r.trim().to_string());
+        } else if let Some(r) = t.strip_prefix("// tclint-fixture-golden:") {
+            golden = Some(r.trim().to_string());
+        } else if let Some(r) = t.strip_prefix("// tclint-fixture-disk:") {
+            disk = Some(r.split(',').map(|s| s.trim().to_string()).collect());
+        }
+    }
+    let vpath = vpath.unwrap_or_else(|| panic!("{name}.rs lacks a tclint-fixture-path header"));
+    let fm = lex(&vpath, &src);
+    let ctx = Context { golden_metrics: golden, disk_mods: disk };
+    analyze(&[fm], &ctx, None)
+}
+
+fn check(name: &str) {
+    let outcome = run_fixture(name);
+    let mut lines: Vec<String> =
+        outcome.unsuppressed.iter().map(|f| f.render(false)).collect();
+    lines.extend(outcome.errors.iter().map(|e| format!("error: {e}")));
+    let actual =
+        if lines.is_empty() { String::new() } else { format!("{}\n", lines.join("\n")) };
+    let exp_path = fixtures_dir().join(format!("{name}.expected"));
+    let expected = fs::read_to_string(&exp_path)
+        .unwrap_or_else(|e| panic!("read {}: {e}", exp_path.display()));
+    assert_eq!(
+        actual, expected,
+        "fixture `{name}` diverged\n--- actual ---\n{actual}--- expected ---\n{expected}"
+    );
+}
+
+macro_rules! ui_tests {
+    ($($name:ident),* $(,)?) => {
+        $(#[test] fn $name() { check(stringify!($name)); })*
+
+        /// Every fixture on disk must be wired to a test above — a fixture
+        /// without a test is dead weight that silently stops guarding.
+        #[test]
+        fn every_fixture_has_a_test() {
+            let wired: &[&str] = &[$(stringify!($name)),*];
+            let mut on_disk: Vec<String> = fs::read_dir(fixtures_dir())
+                .expect("fixtures dir")
+                .flatten()
+                .filter_map(|e| {
+                    let n = e.file_name().to_string_lossy().into_owned();
+                    n.strip_suffix(".rs").map(str::to_string)
+                })
+                .collect();
+            on_disk.sort();
+            let mut wired_sorted: Vec<String> =
+                wired.iter().map(|s| s.to_string()).collect();
+            wired_sorted.sort();
+            assert_eq!(on_disk, wired_sorted, "fixture files and ui tests diverged");
+        }
+    };
+}
+
+ui_tests!(
+    hash_container,
+    float_fold,
+    mul_add,
+    float_cmp,
+    lossy_cast,
+    lossy_cast_fp_ok,
+    hot_unwrap,
+    hot_panic,
+    hot_index,
+    lock_order,
+    lock_held_io,
+    pub_doc,
+    metric_name,
+    layer_map,
+    relaxed_ordering,
+    suppress_inline,
+    suppress_stale,
+    suppress_no_reason,
+);
+
+/// Suppressed findings carry the directive's reason through to the outcome.
+#[test]
+fn suppression_reasons_are_preserved() {
+    let outcome = run_fixture("suppress_inline");
+    assert_eq!(outcome.suppressed.len(), 2, "both directives should match");
+    for (_, reason) in &outcome.suppressed {
+        assert!(reason.starts_with("fixture:"), "reason lost: {reason}");
+    }
+}
+
+/// A central allowlist entry that matches nothing is a fatal stale error,
+/// and one that matches is consumed with its reason.
+#[test]
+fn allowlist_stale_and_match() {
+    let src = "fn f(v: Option<u32>) -> u32 {\n    v.unwrap()\n}\n";
+    let fm = lex("rust/src/coordinator/al.rs", src);
+    let allow = "hot-unwrap | coordinator/ | .unwrap() | test reason\n\
+                 hot-panic | coordinator/ | * | never fires\n";
+    let outcome = analyze(&[fm], &Context::empty(), Some(allow));
+    assert!(outcome.unsuppressed.is_empty(), "finding should be suppressed");
+    assert_eq!(outcome.suppressed.len(), 1);
+    assert_eq!(outcome.suppressed[0].1, "test reason");
+    assert_eq!(outcome.errors.len(), 1, "stale entry must error: {:?}", outcome.errors);
+    assert!(outcome.errors[0].contains("allow.list:2"), "{}", outcome.errors[0]);
+    assert!(outcome.errors[0].contains("stale suppression"), "{}", outcome.errors[0]);
+}
+
+/// `--report` rendering smoke test: module and rule tables both show up.
+#[test]
+fn report_renders_tables() {
+    let outcome = run_fixture("hot_unwrap");
+    let r = report::render(&outcome);
+    assert!(r.contains("findings by module"), "{r}");
+    assert!(r.contains("coordinator"), "{r}");
+    assert!(r.contains("findings by rule"), "{r}");
+    assert!(r.contains("hot-unwrap"), "{r}");
+}
