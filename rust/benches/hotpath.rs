@@ -1,25 +1,114 @@
-//! §Perf hot-path bench: measured CPU wall-clock of (a) the bit-exact
-//! simulated GEMM backends, (b) the PJRT artifact execution path, and
-//! (c) the coordinator request loop. These are the numbers the performance
-//! pass in EXPERIMENTS.md §Perf optimizes — real measurements, not GPU
-//! projections.
+//! §Perf hot-path bench: measured CPU wall-clock of (a) the solver matvec
+//! hot path — reference simulator vs production engine (DESIGN.md §14) —
+//! (b) the bit-exact simulated GEMM backends, (c) the split-amortized
+//! batched path, (d) the PJRT artifact execution path, and (e) the
+//! coordinator request loop. These are the numbers the performance pass in
+//! EXPERIMENTS.md §Perf optimizes — real measurements, not GPU projections.
 //!
-//! Run: `cargo bench --bench hotpath`
+//! Run:  `cargo bench --bench hotpath`
+//! JSON: `cargo bench --bench hotpath -- --json > BENCH_hotpath.json`
+//!
+//! The matvec section is also a correctness gate: it asserts the engine
+//! path was actually selected (`engine_runs()` advanced) and that its
+//! output is bit-identical to the reference simulator — under `--smoke
+//! --json` this is what CI's perf-smoke step runs.
 
 use std::sync::Arc;
-use tcec::bench_util::{bench, bench_params, smoke, Table};
+use tcec::bench_util::{bench, bench_params, json_array, json_mode, smoke, JsonObj, Table};
 use tcec::coordinator::{GemmService, Policy, SimExecutor};
-use tcec::gemm::{gemm_batched, BatchedOperands, Mat, Method, TileConfig};
+use tcec::gemm::{engine_runs, gemm_batched, BatchedOperands, Mat, Method, TileConfig, ENGINE_ID};
 use tcec::matgen::urand;
 use tcec::runtime::{ArtifactRegistry, PjrtHandle};
+
+/// Bit-level equality (distinguishes -0.0 from +0.0; NaN bits compare
+/// equal to themselves) — the engine's contract is bit-identity, not
+/// numeric equality.
+fn bits_eq(x: &Mat, y: &Mat) -> bool {
+    x.rows == y.rows
+        && x.cols == y.cols
+        && x.data.iter().zip(&y.data).all(|(a, b)| a.to_bits() == b.to_bits())
+}
 
 fn main() {
     let cfg = TileConfig::default();
     let smoke = smoke();
+    let json = json_mode();
     let (wu, mi, mt) = bench_params(1, 3, 0.3);
-    let backend_sizes: &[usize] = if smoke { &[16] } else { &[64, 128] };
 
-    println!("== simulated GEMM backends (CPU wall-clock) ==\n");
+    // -- (a) solver matvec: reference simulator vs production engine -----
+    //
+    // The solver's per-iteration cost is one A (n x n) · p (n x 1) matvec
+    // over prepared operands (the split is a cache hit after iteration
+    // one — solver::DirectBackend), so both paths are timed from the same
+    // prepared operands: this isolates the execution-core win the engine
+    // claims (pack-once panels, arenas, hoisted dispatch).
+    let matvec_sizes: &[usize] = if smoke { &[32] } else { &[256, 512] };
+    let matvec_methods =
+        [Method::OursHalfHalf, Method::OursTf32, Method::Fp32Simt, Method::OursBf16Triple];
+    let mut matvec_rows: Vec<String> = Vec::new();
+    if !json {
+        println!("== solver matvec: reference simulator vs engine ({ENGINE_ID}) ==\n");
+    }
+    let mut t = Table::new(&["method", "n", "reference ms", "engine ms", "speedup", "bits"]);
+    for method in matvec_methods {
+        for &n in matvec_sizes {
+            let a = urand(n, n, -1.0, 1.0, 21);
+            let p = urand(n, 1, -1.0, 1.0, 22);
+            let pa = method.prepare(&a);
+            let pb = method.prepare(&p);
+            let runs0 = engine_runs();
+            let c_eng = method.run_prepared(&pa, &pb, &cfg);
+            assert!(engine_runs() > runs0, "production engine path was not selected");
+            let c_ref = method.run_prepared_reference(&pa, &pb, &cfg);
+            let identical = bits_eq(&c_eng, &c_ref);
+            assert!(identical, "engine output diverged from reference: {} n={n}", method.name());
+            let s_ref = bench(
+                || {
+                    std::hint::black_box(method.run_prepared_reference(&pa, &pb, &cfg));
+                },
+                wu,
+                mi,
+                mt,
+            );
+            let s_eng = bench(
+                || {
+                    std::hint::black_box(method.run_prepared(&pa, &pb, &cfg));
+                },
+                wu,
+                mi,
+                mt,
+            );
+            let speedup = s_ref.median_s / s_eng.median_s;
+            t.row(&[
+                method.name().to_string(),
+                n.to_string(),
+                format!("{:.3}", s_ref.median_s * 1e3),
+                format!("{:.3}", s_eng.median_s * 1e3),
+                format!("{speedup:.2}x"),
+                "identical".to_string(),
+            ]);
+            matvec_rows.push(
+                JsonObj::new()
+                    .str("method", method.name())
+                    .int("n", n as u64)
+                    .num("reference_ms", s_ref.median_s * 1e3)
+                    .num("engine_ms", s_eng.median_s * 1e3)
+                    .num("speedup", speedup)
+                    .bool("bit_identical", identical)
+                    .finish(),
+            );
+        }
+    }
+    if !json {
+        t.print();
+    }
+
+    // -- (b) full-run backends (split + multiply, square operands) -------
+    let backend_sizes: &[usize] = if smoke { &[16] } else { &[64, 128] };
+    let mut backend_rows: Vec<String> = Vec::new();
+    if !json {
+        println!("\n== simulated GEMM backends (CPU wall-clock) ==\n");
+    }
     let mut t = Table::new(&["method", "n", "median ms", "sim MFlop/s"]);
     for method in [
         Method::Fp32Simt,
@@ -46,11 +135,25 @@ fn main() {
                 format!("{:.2}", s.median_s * 1e3),
                 format!("{mflops:.1}"),
             ]);
+            backend_rows.push(
+                JsonObj::new()
+                    .str("method", method.name())
+                    .int("n", n as u64)
+                    .num("median_ms", s.median_s * 1e3)
+                    .num("sim_mflops", mflops)
+                    .finish(),
+            );
         }
     }
-    t.print();
+    if !json {
+        t.print();
+    }
 
-    println!("\n== split-amortized batched GEMM (shared weight B, same shape) ==\n");
+    // -- (c) split-amortized batched GEMM (shared weight B) --------------
+    let mut batched_rows: Vec<String> = Vec::new();
+    if !json {
+        println!("\n== split-amortized batched GEMM (shared weight B, same shape) ==\n");
+    }
     let mut t = Table::new(&["method", "batch", "n", "loop ms", "batched ms", "speedup"]);
     let batches: &[usize] = if smoke { &[2] } else { &[4, 8] };
     for method in [Method::OursHalfHalf, Method::OursTf32, Method::Markidis] {
@@ -89,10 +192,41 @@ fn main() {
                 format!("{:.2}", s_batched.median_s * 1e3),
                 format!("{:.2}x", s_loop.median_s / s_batched.median_s),
             ]);
+            batched_rows.push(
+                JsonObj::new()
+                    .str("method", method.name())
+                    .int("batch", batch as u64)
+                    .int("n", n as u64)
+                    .num("loop_ms", s_loop.median_s * 1e3)
+                    .num("batched_ms", s_batched.median_s * 1e3)
+                    .num("speedup", s_loop.median_s / s_batched.median_s)
+                    .finish(),
+            );
         }
     }
-    t.print();
+    if !json {
+        t.print();
+    }
 
+    if json {
+        // One machine-readable document, nothing else on stdout.
+        println!(
+            "{}",
+            JsonObj::new()
+                .str("bench", "hotpath")
+                .str("engine_id", ENGINE_ID)
+                .bool("smoke", smoke)
+                .bool("engine_selected", true)
+                .bool("bit_identical", true)
+                .raw("solver_matvec", &json_array(&matvec_rows))
+                .raw("backends", &json_array(&backend_rows))
+                .raw("batched", &json_array(&batched_rows))
+                .finish()
+        );
+        return;
+    }
+
+    // -- (d) PJRT artifact execution (table mode only) -------------------
     println!("\n== PJRT artifact execution (needs `make artifacts`) ==\n");
     let handle = PjrtHandle::spawn();
     match ArtifactRegistry::scan("artifacts", handle.clone()) {
@@ -128,6 +262,7 @@ fn main() {
     }
     handle.shutdown();
 
+    // -- (e) coordinator request loop (table mode only) ------------------
     let loop_n = if smoke { 16 } else { 64 };
     println!("\n== coordinator request loop (sim executor, {loop_n}x{loop_n}, batched) ==\n");
     let svc = GemmService::builder()

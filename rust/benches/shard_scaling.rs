@@ -7,10 +7,11 @@
 //! monotonic throughput improvement 1 → N and a steal count that rises
 //! with imbalance (ragged edge tiles).
 //!
-//! Run: `cargo bench --bench shard_scaling`
+//! Run:  `cargo bench --bench shard_scaling`
+//! JSON: `cargo bench --bench shard_scaling -- --json > BENCH_shard_scaling.json`
 
 use std::sync::Arc;
-use tcec::bench_util::Table;
+use tcec::bench_util::{json_array, json_mode, JsonObj, Table};
 use tcec::coordinator::{Executor, Policy, SimExecutor};
 use tcec::gemm::Method;
 use tcec::matgen::urand;
@@ -18,9 +19,12 @@ use tcec::shard::{plan, sharded_gemm, ShardConfig, WorkerPool};
 
 fn main() {
     let smoke = tcec::bench_util::smoke();
+    let json = json_mode();
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    println!("== shard_scaling: sharded GEMM throughput vs worker count ==");
-    println!("   ({cores} host cores — speedup saturates there)\n");
+    if !json {
+        println!("== shard_scaling: sharded GEMM throughput vs worker count ==");
+        println!("   ({cores} host cores — speedup saturates there)\n");
+    }
 
     // Ragged sizes: edge tiles create imbalance for the stealer to fix.
     let cases = if smoke {
@@ -30,10 +34,13 @@ fn main() {
     };
     let worker_counts: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4, 8] };
 
+    let mut case_rows: Vec<String> = Vec::new();
     for (method, m, n, k) in cases {
         let a = urand(m, k, -1.0, 1.0, 11);
         let b = urand(k, n, -1.0, 1.0, 12);
-        println!("-- {} ({m} x {k}) * ({k} x {n}) --", method.name());
+        if !json {
+            println!("-- {} ({m} x {k}) * ({k} x {n}) --", method.name());
+        }
 
         // Unsharded baseline under the plan's equivalent tile.
         let probe_cfg = ShardConfig { workers: 1, min_flops: 0, ..ShardConfig::default() };
@@ -42,7 +49,9 @@ fn main() {
         let want = method.run(&a, &b, &p.equivalent_tile());
         let base_s = t0.elapsed().as_secs_f64();
         let flops = 2.0 * m as f64 * n as f64 * k as f64;
-        println!("unsharded: {base_s:.3}s ({:.1} sim MFlop/s)", flops / base_s / 1e6);
+        if !json {
+            println!("unsharded: {base_s:.3}s ({:.1} sim MFlop/s)", flops / base_s / 1e6);
+        }
 
         let mut t = Table::new(&[
             "workers",
@@ -54,6 +63,7 @@ fn main() {
             "steals",
             "bit-identical",
         ]);
+        let mut worker_rows: Vec<String> = Vec::new();
         let mut prev_time = f64::INFINITY;
         let mut monotone = true;
         for &w in worker_counts {
@@ -94,11 +104,47 @@ fn main() {
                 stats.steals.to_string(),
                 if identical { "yes".into() } else { "NO — BUG".into() },
             ]);
+            worker_rows.push(
+                JsonObj::new()
+                    .int("workers", w as u64)
+                    .int("shards", p.shard_count() as u64)
+                    .int("kslices", p.kslices as u64)
+                    .num("time_s", best)
+                    .num("mflops", flops / best / 1e6)
+                    .num("speedup", base_s / best)
+                    .int("steals", stats.steals)
+                    .bool("bit_identical", identical)
+                    .finish(),
+            );
         }
-        t.print();
+        if !json {
+            t.print();
+            println!(
+                "monotonic 1→min(N,cores): {}\n",
+                if monotone { "yes" } else { "no (noisy host?)" }
+            );
+        }
+        case_rows.push(
+            JsonObj::new()
+                .str("method", method.name())
+                .int("m", m as u64)
+                .int("n", n as u64)
+                .int("k", k as u64)
+                .num("unsharded_s", base_s)
+                .bool("monotone", monotone)
+                .raw("scaling", &json_array(&worker_rows))
+                .finish(),
+        );
+    }
+    if json {
         println!(
-            "monotonic 1→min(N,cores): {}\n",
-            if monotone { "yes" } else { "no (noisy host?)" }
+            "{}",
+            JsonObj::new()
+                .str("bench", "shard_scaling")
+                .bool("smoke", smoke)
+                .int("host_cores", cores as u64)
+                .raw("cases", &json_array(&case_rows))
+                .finish()
         );
     }
 }

@@ -68,6 +68,109 @@ pub fn bench_params(warmup: usize, min_iters: usize, min_time_s: f64) -> (usize,
     }
 }
 
+/// True when the binary was invoked with `--json`: bench binaries emit one
+/// machine-readable JSON document on stdout instead of the aligned tables,
+/// so results can be landed as `BENCH_*.json` files and asserted by CI
+/// (`cargo bench --bench hotpath -- --smoke --json`).
+pub fn json_mode() -> bool {
+    std::env::args().any(|a| a == "--json")
+}
+
+/// Escape a string for a JSON string literal.
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Minimal JSON object builder (serde is unavailable offline — DESIGN.md
+/// §2 toolchain substitutions). Fields render in insertion order;
+/// non-finite numbers are emitted as `null` per JSON's grammar.
+pub struct JsonObj {
+    buf: String,
+}
+
+impl JsonObj {
+    pub fn new() -> JsonObj {
+        JsonObj { buf: String::from("{") }
+    }
+
+    fn key(&mut self, k: &str) {
+        if self.buf.len() > 1 {
+            self.buf.push(',');
+        }
+        self.buf.push('"');
+        self.buf.push_str(&json_escape(k));
+        self.buf.push_str("\":");
+    }
+
+    pub fn str(mut self, k: &str, v: &str) -> JsonObj {
+        self.key(k);
+        self.buf.push('"');
+        self.buf.push_str(&json_escape(v));
+        self.buf.push('"');
+        self
+    }
+
+    pub fn num(mut self, k: &str, v: f64) -> JsonObj {
+        self.key(k);
+        if v.is_finite() {
+            self.buf.push_str(&format!("{v}"));
+        } else {
+            self.buf.push_str("null");
+        }
+        self
+    }
+
+    pub fn int(mut self, k: &str, v: u64) -> JsonObj {
+        self.key(k);
+        self.buf.push_str(&v.to_string());
+        self
+    }
+
+    pub fn bool(mut self, k: &str, v: bool) -> JsonObj {
+        self.key(k);
+        self.buf.push_str(if v { "true" } else { "false" });
+        self
+    }
+
+    /// Insert pre-rendered JSON (a nested object or array) verbatim.
+    pub fn raw(mut self, k: &str, v: &str) -> JsonObj {
+        self.key(k);
+        self.buf.push_str(v);
+        self
+    }
+
+    pub fn finish(mut self) -> String {
+        self.buf.push('}');
+        self.buf
+    }
+}
+
+impl Default for JsonObj {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Render a slice of pre-rendered JSON values as a JSON array.
+pub fn json_array(items: &[String]) -> String {
+    let mut out = String::from("[");
+    out.push_str(&items.join(","));
+    out.push(']');
+    out
+}
+
 /// Aligned text table writer for bench/report output.
 pub struct Table {
     headers: Vec<String>,

@@ -202,7 +202,9 @@ impl SimExecutor {
         // prepared splits are shared by reference, each thread fills its
         // own contiguous slice of the output, and a panic in any element
         // propagates out of the scope (the worker's catch_unwind handles
-        // it exactly like a serial panic).
+        // it exactly like a serial panic). Each thread's chunk runs out of
+        // one engine arena (`gemm::engine`), so scratch is allocated once
+        // per chunk, not once per element.
         let mut out: Vec<Option<Mat>> = (0..reqs.len()).map(|_| None).collect();
         let chunk = reqs.len().div_ceil(threads);
         std::thread::scope(|s| {

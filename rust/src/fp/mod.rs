@@ -13,10 +13,13 @@ pub mod tf32;
 
 pub use half::Half;
 pub use rounding::{
-    exp2i, round_to_format, round_to_precision, truncate_f32_mantissa_lsb, Format, Rounding,
+    exp2i, round_panel_to_format, round_to_format, round_to_precision, truncate_f32_mantissa_lsb,
+    Format, Rounding,
 };
 pub use split::{
-    reconstruct_bf16_triple, split_bf16_triple, split_feng, split_markidis, split_markidis_rz,
-    split_ootomo, split_ootomo_tf32, SplitF16, SplitTf32, BF16_SCALE_EXP, SCALE, SCALE_EXP,
+    quantize_panel_f16, quantize_panel_tf32, reconstruct_bf16_triple, split_bf16_triple,
+    split_feng, split_markidis, split_markidis_rz, split_ootomo, split_ootomo_tf32,
+    split_panel_bf16_triple, split_panel_feng, split_panel_markidis, split_panel_ootomo,
+    split_panel_ootomo_tf32, SplitF16, SplitTf32, BF16_SCALE_EXP, SCALE, SCALE_EXP,
 };
 pub use tf32::Tf32;

@@ -250,6 +250,23 @@ pub fn round_to_precision(x: f64, p: u32, mode: Rounding) -> f64 {
     f64::from_bits(base + if inc { 1u64 << drop } else { 0 })
 }
 
+/// Whole-panel batched rounding: round every element of `src` into `fmt`
+/// under `mode`, refilling `dst` (capacity reused across calls).
+///
+/// One pass per panel instead of one [`round_to_format`] call per element
+/// at every use site — the per-element kernel is *the same function*, so
+/// the batched form is bit-identical to an elementwise loop by
+/// construction; only the surrounding call structure is amortized. This
+/// is the plane-at-a-time primitive behind the `fp::split` panel
+/// splitters and the production engine's split stage (DESIGN.md §14).
+pub fn round_panel_to_format(src: &[f64], fmt: Format, mode: Rounding, dst: &mut Vec<f64>) {
+    dst.clear();
+    dst.reserve(src.len());
+    for &x in src {
+        dst.push(round_to_format(x, fmt, mode));
+    }
+}
+
 /// The sanctioned `f64 → f32` narrowing site (round-to-nearest-even).
 ///
 /// This is the crate's **single-rounding-site policy**, enforced by
@@ -436,6 +453,40 @@ mod tests {
         assert_eq!(truncate_f32_mantissa_lsb(1.0, 1), 1.0);
         let y = f32::from_bits(0x3f800003);
         assert_eq!(truncate_f32_mantissa_lsb(y, 2).to_bits(), 0x3f800000);
+    }
+
+    #[test]
+    fn panel_rounding_matches_elementwise() {
+        // The batched panel pass must agree bit-for-bit with per-element
+        // calls — including non-finite and subnormal-range inputs.
+        let src: Vec<f64> = vec![
+            0.0,
+            -0.0,
+            1.0 + exp2i(-11),
+            -(1.0 + exp2i(-11)),
+            65520.0,
+            -1e6,
+            exp2i(-25),
+            0.49 * exp2i(-24),
+            f64::NAN,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            1.2345678901234,
+        ];
+        let mut dst = Vec::new();
+        for fmt in [Format::F16, Format::TF32, Format::BF16, Format::F32] {
+            for mode in Rounding::ALL {
+                round_panel_to_format(&src, fmt, mode, &mut dst);
+                assert_eq!(dst.len(), src.len());
+                for (i, &x) in src.iter().enumerate() {
+                    assert_eq!(
+                        dst[i].to_bits(),
+                        round_to_format(x, fmt, mode).to_bits(),
+                        "i={i} fmt={fmt:?} mode={mode:?}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

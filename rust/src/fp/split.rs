@@ -171,6 +171,225 @@ pub fn reconstruct_bf16_triple(t: (f32, f32, f32)) -> f64 {
     t.0 as f64 + (t.1 as f64) * s + (t.2 as f64) * s * s
 }
 
+// ---------------------------------------------------------------------------
+// Whole-panel (SoA) splitters — the production engine's split stage
+// ---------------------------------------------------------------------------
+//
+// Each panel function performs the *same per-element kernel* as its scalar
+// counterpart above (same `Half`/`Tf32`/`round_to_format` calls, same
+// operation order per element), restructured as one rounding pass per
+// plane over a contiguous panel (structure-of-arrays: the hi plane and lo
+// plane are separate contiguous buffers instead of per-element pairs).
+// Because every split is a pure elementwise map, the pass structure cannot
+// change a bit — pinned by `panel_splits_bit_identical_to_scalar` below
+// and by the engine-vs-reference property suite. Underflow telemetry is
+// tallied locally and recorded once per panel (identical totals to the
+// per-element helpers; the enabled flag is read once per panel instead of
+// once per element).
+
+/// Local tally of the Fig. 8 underflow classification for one panel,
+/// recorded in one [`numeric::record`] call per counter on `record()`.
+struct UnderflowTally {
+    on: bool,
+    flushed: u64,
+    subnormal: u64,
+}
+
+impl UnderflowTally {
+    fn new() -> UnderflowTally {
+        UnderflowTally { on: numeric::enabled(), flushed: 0, subnormal: 0 }
+    }
+
+    /// Classification of [`count_f16_underflow`], tallied instead of recorded.
+    #[inline]
+    fn f16(&mut self, resid: f64, lo: Half) {
+        if !self.on || resid == 0.0 {
+            return;
+        }
+        if lo.is_zero() {
+            self.flushed += 1;
+        } else if lo.is_subnormal() {
+            self.subnormal += 1;
+        }
+    }
+
+    /// Classification of [`count_f32_graded_underflow`], tallied.
+    #[inline]
+    fn f32_graded(&mut self, resid: f64, lo: f32) {
+        if !self.on || resid == 0.0 {
+            return;
+        }
+        if lo == 0.0 {
+            self.flushed += 1;
+        } else if lo.is_subnormal() {
+            self.subnormal += 1;
+        }
+    }
+
+    fn record(self) {
+        // `record` is a no-op for n == 0, so a clean panel costs nothing.
+        numeric::record(Counter::SplitFlushed, self.flushed);
+        numeric::record(Counter::SplitSubnormal, self.subnormal);
+    }
+}
+
+/// Refill `hi`/`lo` (and the f64 residual scratch) for a hi-pass over
+/// `src` with per-element rounding mode chosen by `mode_of`, residuals
+/// scaled by `2^scale_exp`. Shared by the three f16 panel splitters —
+/// they differ only in the hi rounding mode and the residual scale.
+#[inline]
+fn f16_hi_pass(
+    src: &[f32],
+    scale_exp: i32,
+    mode_of: impl Fn(f32) -> Rounding,
+    hi: &mut Vec<f32>,
+    resid: &mut Vec<f64>,
+) {
+    hi.clear();
+    hi.reserve(src.len());
+    resid.clear();
+    resid.reserve(src.len());
+    let scale = exp2i(scale_exp);
+    for &v in src {
+        let h = Half::from_f32(v, mode_of(v));
+        resid.push((v as f64 - h.to_f64()) * scale);
+        hi.push(h.to_f32());
+    }
+}
+
+/// Batched lo-pass: one FP16 rounding sweep over the residual panel,
+/// with the per-panel underflow tally.
+#[inline]
+fn f16_lo_pass(resid: &[f64], lo: &mut Vec<f32>) {
+    lo.clear();
+    lo.reserve(resid.len());
+    let mut tally = UnderflowTally::new();
+    for &r in resid {
+        let l = Half::from_f64(r, Rounding::RN);
+        tally.f16(r, l);
+        lo.push(l.to_f32());
+    }
+    tally.record();
+}
+
+/// Whole-panel [`split_markidis`]: fills contiguous hi/lo planes.
+pub fn split_panel_markidis(src: &[f32], hi: &mut Vec<f32>, lo: &mut Vec<f32>) {
+    let mut resid = Vec::new();
+    f16_hi_pass(src, 0, |_| Rounding::RN, hi, &mut resid);
+    f16_lo_pass(&resid, lo);
+}
+
+/// Whole-panel [`split_ootomo`]: residuals scaled by 2^11 before the
+/// batched FP16 rounding pass (eq. 18).
+pub fn split_panel_ootomo(src: &[f32], hi: &mut Vec<f32>, lo: &mut Vec<f32>) {
+    let mut resid = Vec::new();
+    f16_hi_pass(src, SCALE_EXP, |_| Rounding::RN, hi, &mut resid);
+    f16_lo_pass(&resid, lo);
+}
+
+/// Whole-panel [`split_feng`]: the hi rounding direction is chosen
+/// per element by the 21st mantissa bit, exactly as in the scalar kernel.
+pub fn split_panel_feng(src: &[f32], hi: &mut Vec<f32>, lo: &mut Vec<f32>) {
+    let mut resid = Vec::new();
+    let mode_of = |v: f32| {
+        let m = v.to_bits() & 0x7f_ffff;
+        if (m >> 2) & 1 == 1 { Rounding::RA } else { Rounding::RZ }
+    };
+    f16_hi_pass(src, 0, mode_of, hi, &mut resid);
+    f16_lo_pass(&resid, lo);
+}
+
+/// Whole-panel [`split_ootomo_tf32`]: RNA conversions, 2^11 residual
+/// scale, TF32 pieces stored as the f32 values they equal.
+pub fn split_panel_ootomo_tf32(src: &[f32], hi: &mut Vec<f32>, lo: &mut Vec<f32>) {
+    hi.clear();
+    hi.reserve(src.len());
+    lo.clear();
+    lo.reserve(src.len());
+    let mut resid = Vec::with_capacity(src.len());
+    let scale = exp2i(SCALE_EXP);
+    for &v in src {
+        let h = Tf32::from_f32(v, Rounding::RNA);
+        resid.push((v as f64 - h.to_f64()) * scale);
+        hi.push(h.to_f32());
+    }
+    let mut tally = UnderflowTally::new();
+    for &r in resid.iter() {
+        let l = Tf32::from_f64(r, Rounding::RNA);
+        tally.f32_graded(r, l.to_f32());
+        lo.push(l.to_f32());
+    }
+    tally.record();
+}
+
+/// Whole-panel [`split_bf16_triple`]: three plane-at-a-time batched
+/// rounding passes ([`round_panel_to_format`]) with the inter-plane
+/// residual/scale arithmetic done on whole panels in between — the same
+/// per-element f64 operation sequence as the scalar kernel.
+pub fn split_panel_bf16_triple(
+    src: &[f32],
+    b0: &mut Vec<f32>,
+    b1: &mut Vec<f32>,
+    b2: &mut Vec<f32>,
+) {
+    use super::rounding::{round_panel_to_format, Format};
+    let s = exp2i(BF16_SCALE_EXP);
+    let n = src.len();
+    // Widen once; `w` then carries the running residual panel.
+    let mut w: Vec<f64> = Vec::with_capacity(n);
+    for &v in src {
+        w.push(v as f64);
+    }
+    let mut p0 = Vec::new();
+    let mut p1 = Vec::new();
+    let mut p2 = Vec::new();
+    round_panel_to_format(&w, Format::BF16, Rounding::RN, &mut p0);
+    for i in 0..n {
+        w[i] = (w[i] - p0[i]) * s; // r1 panel
+    }
+    round_panel_to_format(&w, Format::BF16, Rounding::RN, &mut p1);
+    let mut tally = UnderflowTally::new();
+    b0.clear();
+    b0.reserve(n);
+    b1.clear();
+    b1.reserve(n);
+    b2.clear();
+    b2.reserve(n);
+    for i in 0..n {
+        let v1 = p1[i] as f32;
+        tally.f32_graded(w[i], v1);
+        b0.push(p0[i] as f32);
+        b1.push(v1);
+        w[i] = (w[i] - p1[i]) * s; // r2 panel
+    }
+    round_panel_to_format(&w, Format::BF16, Rounding::RN, &mut p2);
+    for i in 0..n {
+        let v2 = p2[i] as f32;
+        tally.f32_graded(w[i], v2);
+        b2.push(v2);
+    }
+    tally.record();
+}
+
+/// Whole-panel FP16 quantization (RN) — the plain-Tensor-Core grid pass
+/// (`Grid::F16` in `gemm::backends`).
+pub fn quantize_panel_f16(src: &[f32], dst: &mut Vec<f32>) {
+    dst.clear();
+    dst.reserve(src.len());
+    for &v in src {
+        dst.push(Half::from_f32(v, Rounding::RN).to_f32());
+    }
+}
+
+/// Whole-panel TF32 quantization (RNA) — the `Grid::Tf32` pass.
+pub fn quantize_panel_tf32(src: &[f32], dst: &mut Vec<f32>) {
+    dst.clear();
+    dst.reserve(src.len());
+    for &v in src {
+        dst.push(Tf32::from_f32(v, Rounding::RNA).to_f32());
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -296,6 +515,113 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// Adversarial inputs for the panel-vs-scalar pinning test: ±0,
+    /// subnormal-heavy values (the Fig. 8 hazard), f16-overflow range,
+    /// non-finite operands, and an exponent sweep.
+    fn adversarial_f32s() -> Vec<f32> {
+        let mut vals = vec![
+            0.0,
+            -0.0,
+            1.0,
+            -1.0,
+            65504.0,
+            65520.0,
+            -1e30,
+            f32::MAX,
+            f32::MIN_POSITIVE,
+            -f32::MIN_POSITIVE,
+            f32::NAN,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::from_bits(1),           // min f32 subnormal
+            f32::from_bits(0x8000_0001), // -min subnormal
+            exp2i(-24) as f32,           // min f16 subnormal
+            exp2i(-25) as f32,           // half of it
+            (1.5 * exp2i(-24)) as f32,
+        ];
+        for v in sample_f32s(2000, 0xfeed) {
+            vals.push(v);
+        }
+        // Subnormal-residual generators: hi lands normal, residual deep
+        // below the f16 normal range.
+        for e in -30..-10 {
+            vals.push(((1.0 + exp2i(-12)) * exp2i(e)) as f32);
+        }
+        vals
+    }
+
+    #[test]
+    fn panel_splits_bit_identical_to_scalar() {
+        let src = adversarial_f32s();
+        let (mut hi, mut lo) = (Vec::new(), Vec::new());
+
+        split_panel_markidis(&src, &mut hi, &mut lo);
+        for (i, &v) in src.iter().enumerate() {
+            let s = split_markidis(v);
+            assert_eq!(hi[i].to_bits(), s.hi.to_f32().to_bits(), "markidis hi v={v:e}");
+            assert_eq!(lo[i].to_bits(), s.lo.to_f32().to_bits(), "markidis lo v={v:e}");
+        }
+
+        split_panel_ootomo(&src, &mut hi, &mut lo);
+        for (i, &v) in src.iter().enumerate() {
+            let s = split_ootomo(v);
+            assert_eq!(hi[i].to_bits(), s.hi.to_f32().to_bits(), "ootomo hi v={v:e}");
+            assert_eq!(lo[i].to_bits(), s.lo.to_f32().to_bits(), "ootomo lo v={v:e}");
+        }
+
+        split_panel_feng(&src, &mut hi, &mut lo);
+        for (i, &v) in src.iter().enumerate() {
+            let s = split_feng(v);
+            assert_eq!(hi[i].to_bits(), s.hi.to_f32().to_bits(), "feng hi v={v:e}");
+            assert_eq!(lo[i].to_bits(), s.lo.to_f32().to_bits(), "feng lo v={v:e}");
+        }
+
+        split_panel_ootomo_tf32(&src, &mut hi, &mut lo);
+        for (i, &v) in src.iter().enumerate() {
+            let s = split_ootomo_tf32(v);
+            assert_eq!(hi[i].to_bits(), s.hi.to_f32().to_bits(), "tf32 hi v={v:e}");
+            assert_eq!(lo[i].to_bits(), s.lo.to_f32().to_bits(), "tf32 lo v={v:e}");
+        }
+
+        let (mut b0, mut b1, mut b2) = (Vec::new(), Vec::new(), Vec::new());
+        split_panel_bf16_triple(&src, &mut b0, &mut b1, &mut b2);
+        for (i, &v) in src.iter().enumerate() {
+            let (s0, s1, s2) = split_bf16_triple(v);
+            assert_eq!(b0[i].to_bits(), s0.to_bits(), "bf16 b0 v={v:e}");
+            assert_eq!(b1[i].to_bits(), s1.to_bits(), "bf16 b1 v={v:e}");
+            assert_eq!(b2[i].to_bits(), s2.to_bits(), "bf16 b2 v={v:e}");
+        }
+    }
+
+    #[test]
+    fn panel_quantize_bit_identical_to_scalar() {
+        use super::super::rounding::Rounding;
+        let src = adversarial_f32s();
+        let mut dst = Vec::new();
+        quantize_panel_f16(&src, &mut dst);
+        for (i, &v) in src.iter().enumerate() {
+            let q = Half::from_f32(v, Rounding::RN).to_f32();
+            assert_eq!(dst[i].to_bits(), q.to_bits(), "f16 v={v:e}");
+        }
+        quantize_panel_tf32(&src, &mut dst);
+        for (i, &v) in src.iter().enumerate() {
+            let q = Tf32::from_f32(v, Rounding::RNA).to_f32();
+            assert_eq!(dst[i].to_bits(), q.to_bits(), "tf32 v={v:e}");
+        }
+    }
+
+    #[test]
+    fn panel_splits_reuse_capacity_and_clear() {
+        // Stale contents of the destination planes must never leak.
+        let (mut hi, mut lo) = (vec![9.0f32; 100], vec![9.0f32; 100]);
+        split_panel_ootomo(&[1.0, 2.0], &mut hi, &mut lo);
+        assert_eq!(hi.len(), 2);
+        assert_eq!(lo.len(), 2);
+        assert_eq!(hi[0], 1.0);
+        split_panel_ootomo(&[], &mut hi, &mut lo);
+        assert!(hi.is_empty() && lo.is_empty());
     }
 
     #[test]

@@ -321,8 +321,8 @@ impl OursBackend {
     }
 }
 
-const INV_SCALE: f32 = 1.0 / crate::fp::SCALE; // 2^-11
-const INV_SCALE2: f32 = INV_SCALE * INV_SCALE; // 2^-22
+pub(crate) const INV_SCALE: f32 = 1.0 / crate::fp::SCALE; // 2^-11
+pub(crate) const INV_SCALE2: f32 = INV_SCALE * INV_SCALE; // 2^-22
 
 impl KernelBackend for OursBackend {
     fn name(&self) -> &'static str {
@@ -415,8 +415,8 @@ impl KernelBackend for OursBackend {
 // bf16 triple-split (TPU-idiomatic extension — DESIGN.md §Hardware-Adaptation)
 // ---------------------------------------------------------------------------
 
-const INV_BF16_SCALE: f32 = 1.0 / 256.0; // 2^-8
-const INV_BF16_SCALE2: f32 = INV_BF16_SCALE * INV_BF16_SCALE; // 2^-16
+pub(crate) const INV_BF16_SCALE: f32 = 1.0 / 256.0; // 2^-8
+pub(crate) const INV_BF16_SCALE2: f32 = INV_BF16_SCALE * INV_BF16_SCALE; // 2^-16
 
 /// FP32 GEMM from **bfloat16** pieces: `v ≈ b0 + b1/2^8 + b2/2^16`
 /// (3×8 significand bits ≥ FP32's 24). Six product terms recover FP32

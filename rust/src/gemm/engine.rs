@@ -1,0 +1,660 @@
+//! The production GEMM engine — bit-identical to the reference simulator,
+//! integer-factor faster on the solver's matvec hot path.
+//!
+//! The reference path ([`gemm_tiled`](super::tiled::gemm_tiled) /
+//! [`gemm_tiled_prepared`](super::prepared::gemm_tiled_prepared) over a
+//! `dyn KernelBackend`) is the repo's *simulator*: per-element splits,
+//! per-term panel repacks, per-call `Vec` churn, and a virtual dispatch in
+//! the k-loop. It stays exactly as written — it is the oracle every
+//! optimization here is property-tested against (DESIGN.md §14).
+//!
+//! This module is the *engine*: the same arithmetic, restructured.
+//! * **Hoisted dispatch** — the method is resolved **once** per GEMM into a
+//!   [`KernelSpec`], and the tile walk is monomorphized per kernel
+//!   ([`run_tiles`] is generic over the inner kernel), so the k-loop body
+//!   is static calls instead of `dyn` indirection.
+//! * **Pack-once panels** — the A panel is packed into the instruction-
+//!   chunk-major layout the MMA walkers consume **once per k-block** and
+//!   shared across every product term; the reference repacks it per term
+//!   per chunk. B panels are packed straight from the piece matrices.
+//! * **Arena reuse** — all scratch (piece panels, k-slice accumulator
+//!   planes, the zero-C temporary, the output tile) lives in a
+//!   thread-local [`EngineArena`], so a worker thread (shard pool,
+//!   coordinator batcher, solver loop) allocates on its first GEMM and
+//!   then runs allocation-free.
+//! * **Fused epilogue** — slice accumulators are folded into the output
+//!   tile per element with the exact reference operation sequence, instead
+//!   of materializing a per-slice `out` vector.
+//!
+//! Every transform is bit-preserving *by construction*: the engine issues
+//! the same `mma_tile_acc` / zero-C calls over the same operand slices in
+//! the same order, and the epilogue performs the same f32 additions —
+//! moving f32 values through memory or registers never re-rounds them.
+//! `rust/tests/prop.rs` pins engine == reference for every [`Method`],
+//! including adversarial (subnormal-heavy, non-finite, degenerate-shape)
+//! inputs, both directly and through the full service.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::backends::{INV_BF16_SCALE, INV_BF16_SCALE2, INV_SCALE, INV_SCALE2};
+use super::matrix::Mat;
+use super::prepared::SplitOperand;
+use super::tiled::{TileConfig, INST_K};
+use super::Method;
+use crate::tcsim::{mma_external_acc_chunked, mma_tile_acc_chunked, MmaConfig};
+
+/// Engine identifier, stamped into bench JSON so CI can assert the
+/// production path (not the reference simulator) produced the numbers.
+pub const ENGINE_ID: &str = "soa-hoisted-v1";
+
+/// Process-wide count of GEMMs executed by the production engine.
+/// Monotonic; used by benches and the CI perf-smoke gate to assert the
+/// engine path was actually selected.
+static ENGINE_RUNS: AtomicU64 = AtomicU64::new(0);
+
+pub fn engine_runs() -> u64 {
+    ENGINE_RUNS.load(Ordering::SeqCst)
+}
+
+// ---------------------------------------------------------------------------
+// Per-method dispatch tables, resolved before the tile walk
+// ---------------------------------------------------------------------------
+
+/// Which panel splitter [`SplitOperand::build_batched`] runs for a method —
+/// the split side of the per-method dispatch table. Resolved once per
+/// `prepare`, never inside an element loop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SplitPlan {
+    /// FP32 SIMT: the operand itself is the single piece (any elementwise
+    /// pre-map — LSB truncation, exponent pre-scale — happens in
+    /// `Method::prepare` before the split).
+    Identity,
+    /// Quantize to the f16 grid (plain FP16 Tensor-Core).
+    QuantF16,
+    /// Quantize to the TF32 grid (plain TF32 Tensor-Core).
+    QuantTf32,
+    /// Markidis hi/lo: unscaled residual, RN both conversions.
+    Markidis,
+    /// Feng round-split: mantissa-bit-directed RA/RZ hi conversion.
+    Feng,
+    /// Ootomo hi/lo on f16 with the ×2^11 residual scale (eq. 18).
+    Ootomo,
+    /// Ootomo hi/lo on TF32 (RNA conversions).
+    OotomoTf32,
+    /// bf16 triple split `v ≈ b0 + b1/2^8 + b2/2^16`.
+    Bf16Triple,
+}
+
+impl SplitPlan {
+    pub fn of(method: Method) -> SplitPlan {
+        match method {
+            Method::Fp32Simt | Method::Fp32TruncLsb => SplitPlan::Identity,
+            Method::Fp16Tc => SplitPlan::QuantF16,
+            Method::Tf32Tc => SplitPlan::QuantTf32,
+            Method::Markidis | Method::MarkidisMmaRn => SplitPlan::Markidis,
+            Method::Feng => SplitPlan::Feng,
+            Method::OursHalfHalf
+            | Method::OursNoRzAvoid
+            | Method::OursFourTerm
+            | Method::OursHalfHalfPre => SplitPlan::Ootomo,
+            Method::OursTf32 => SplitPlan::OotomoTf32,
+            Method::OursBf16Triple => SplitPlan::Bf16Triple,
+        }
+    }
+
+    /// How many piece planes the splitter produces (1–3).
+    pub fn piece_count(self) -> usize {
+        match self {
+            SplitPlan::Identity | SplitPlan::QuantF16 | SplitPlan::QuantTf32 => 1,
+            SplitPlan::Markidis | SplitPlan::Feng | SplitPlan::Ootomo | SplitPlan::OotomoTf32 => 2,
+            SplitPlan::Bf16Triple => 3,
+        }
+    }
+}
+
+/// Which inner kernel the tile walk runs for a method — the multiply side
+/// of the per-method dispatch table. Resolved once per GEMM by
+/// [`gemm_engine`]; the k-loop itself is monomorphized and dispatch-free.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelSpec {
+    /// Native f32 FMA chain (cuBLAS SGEMM stand-in).
+    Simt,
+    /// Uncorrected Tensor-Core accumulation of the single quantized piece.
+    TcPlain { mma: MmaConfig },
+    /// Markidis/Feng 4-term correction, every term inside the TC.
+    Classic { mma: MmaConfig },
+    /// This paper's corrected GEMM (Code 3 / eq. 24) and its ablations.
+    Ours { mma: MmaConfig, avoid_rz: bool, keep_delta2: bool },
+    /// bf16 triple split, six terms.
+    Bf16Triple { mma: MmaConfig },
+}
+
+impl KernelSpec {
+    pub fn of(method: Method) -> KernelSpec {
+        match method {
+            Method::Fp32Simt | Method::Fp32TruncLsb => KernelSpec::Simt,
+            Method::Fp16Tc | Method::Tf32Tc => {
+                KernelSpec::TcPlain { mma: MmaConfig::TENSOR_CORE }
+            }
+            Method::Markidis | Method::Feng => {
+                KernelSpec::Classic { mma: MmaConfig::TENSOR_CORE }
+            }
+            Method::MarkidisMmaRn => KernelSpec::Classic { mma: MmaConfig::MMA_RN },
+            Method::OursHalfHalf | Method::OursTf32 | Method::OursHalfHalfPre => KernelSpec::Ours {
+                mma: MmaConfig::TENSOR_CORE,
+                avoid_rz: true,
+                keep_delta2: false,
+            },
+            Method::OursNoRzAvoid => KernelSpec::Ours {
+                mma: MmaConfig::TENSOR_CORE,
+                avoid_rz: false,
+                keep_delta2: false,
+            },
+            Method::OursFourTerm => KernelSpec::Ours {
+                mma: MmaConfig::TENSOR_CORE,
+                avoid_rz: true,
+                keep_delta2: true,
+            },
+            Method::OursBf16Triple => KernelSpec::Bf16Triple { mma: MmaConfig::TENSOR_CORE },
+        }
+    }
+
+    pub fn piece_count(self) -> usize {
+        match self {
+            KernelSpec::Simt | KernelSpec::TcPlain { .. } => 1,
+            KernelSpec::Classic { .. } | KernelSpec::Ours { .. } => 2,
+            KernelSpec::Bf16Triple { .. } => 3,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-worker arena
+// ---------------------------------------------------------------------------
+
+/// Reusable per-thread scratch: piece panels (`a` chunk-major or row-major,
+/// `b` row-major), flat k-slice accumulator planes, the zero-C temporary
+/// and the output tile. Replaces the reference's per-tile `TileState`
+/// vectors and per-k-block / per-chunk allocations.
+#[derive(Default)]
+struct EngineArena {
+    a_pan: [Vec<f32>; 3],
+    b_pan: [Vec<f32>; 3],
+    /// `n_slices × (tm*tn)` planes, slice-major.
+    acc_c: Vec<f32>,
+    acc_dc: Vec<f32>,
+    acc_dc2: Vec<f32>,
+    tmp: Vec<f32>,
+    tile: Vec<f32>,
+}
+
+thread_local! {
+    static ARENA: RefCell<EngineArena> = RefCell::new(EngineArena::default());
+}
+
+fn reset(v: &mut Vec<f32>, len: usize) {
+    v.clear();
+    v.resize(len, 0.0);
+}
+
+/// Pack the `tm × kb` sub-panel of `src` at `(i0, k0)` into the
+/// instruction-chunk-major layout of
+/// [`mma_tile_acc_chunked`](crate::tcsim::mma_tile_acc_chunked): for each
+/// `INST_K`-wide chunk, the `tm × kc` block row-major. Identical values in
+/// identical order to the reference's per-term, per-chunk repack — packed
+/// once here and shared across all terms.
+fn pack_a_chunk_major(src: &Mat, i0: usize, k0: usize, tm: usize, kb: usize, out: &mut Vec<f32>) {
+    debug_assert!(i0 + tm <= src.rows && k0 + kb <= src.cols);
+    out.clear();
+    out.reserve(tm * kb);
+    let mut ks = 0;
+    while ks < kb {
+        let kc = INST_K.min(kb - ks);
+        for i in 0..tm {
+            let base = (i0 + i) * src.cols + k0 + ks;
+            out.extend_from_slice(&src.data[base..base + kc]);
+        }
+        ks += kc;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Inner kernels (monomorphized)
+// ---------------------------------------------------------------------------
+
+/// One k-slice's accumulator views plus the shared zero-C scratch.
+/// Unneeded planes are empty slices.
+struct Acc<'a> {
+    c: &'a mut [f32],
+    dc: &'a mut [f32],
+    dc2: &'a mut [f32],
+    tmp: &'a mut [f32],
+}
+
+/// One k-block's packed piece panels (`a` in this kernel's A layout,
+/// `b` row-major `kb × tn`).
+struct Panels<'a> {
+    a: [&'a [f32]; 3],
+    b: [&'a [f32]; 3],
+    tm: usize,
+    tn: usize,
+    kb: usize,
+}
+
+/// The static counterpart of `dyn KernelBackend`: same numerics, resolved
+/// at dispatch time. `finalize_into` fuses the reference's
+/// finalize-then-reduce into one pass over the tile — per element it
+/// performs the identical f32 operation sequence.
+trait InnerKernel {
+    /// Piece planes consumed (1–3).
+    fn pieces(&self) -> usize;
+    /// Whether the A panel is packed chunk-major (TC kernels) or row-major
+    /// (SIMT, whose inner loop walks rows).
+    fn packs_chunk_major(&self) -> bool {
+        true
+    }
+    fn needs_dc(&self) -> bool {
+        false
+    }
+    fn needs_dc2(&self) -> bool {
+        false
+    }
+    fn needs_tmp(&self) -> bool {
+        false
+    }
+    fn process_kblock(&self, acc: Acc<'_>, p: &Panels<'_>);
+    fn finalize_into(&self, tile: &mut [f32], c: &[f32], dc: &[f32], dc2: &[f32]);
+}
+
+struct SimtKernel;
+
+impl InnerKernel for SimtKernel {
+    fn pieces(&self) -> usize {
+        1
+    }
+    fn packs_chunk_major(&self) -> bool {
+        false
+    }
+    fn process_kblock(&self, acc: Acc<'_>, p: &Panels<'_>) {
+        let (a, b) = (p.a[0], p.b[0]);
+        let (tm, tn, kb) = (p.tm, p.tn, p.kb);
+        for i in 0..tm {
+            for j in 0..tn {
+                let mut v = acc.c[i * tn + j];
+                for l in 0..kb {
+                    v += a[i * kb + l] * b[l * tn + j];
+                }
+                acc.c[i * tn + j] = v;
+            }
+        }
+    }
+    fn finalize_into(&self, tile: &mut [f32], c: &[f32], _dc: &[f32], _dc2: &[f32]) {
+        for (t, &cv) in tile.iter_mut().zip(c) {
+            *t += cv;
+        }
+    }
+}
+
+struct TcPlainKernel {
+    mma: MmaConfig,
+}
+
+impl InnerKernel for TcPlainKernel {
+    fn pieces(&self) -> usize {
+        1
+    }
+    fn process_kblock(&self, acc: Acc<'_>, p: &Panels<'_>) {
+        mma_tile_acc_chunked(acc.c, p.a[0], p.b[0], p.tm, p.tn, p.kb, INST_K, self.mma);
+    }
+    fn finalize_into(&self, tile: &mut [f32], c: &[f32], _dc: &[f32], _dc2: &[f32]) {
+        for (t, &cv) in tile.iter_mut().zip(c) {
+            *t += cv;
+        }
+    }
+}
+
+struct ClassicKernel {
+    mma: MmaConfig,
+}
+
+impl InnerKernel for ClassicKernel {
+    fn pieces(&self) -> usize {
+        2
+    }
+    fn process_kblock(&self, acc: Acc<'_>, p: &Panels<'_>) {
+        // Code 2 issue order: ΔA·ΔB, ΔA·B, A·ΔB, A·B — all into frag_c.
+        // Piece plane 0 is hi, plane 1 is lo.
+        for (ia, ib) in [(1, 1), (1, 0), (0, 1), (0, 0)] {
+            mma_tile_acc_chunked(acc.c, p.a[ia], p.b[ib], p.tm, p.tn, p.kb, INST_K, self.mma);
+        }
+    }
+    fn finalize_into(&self, tile: &mut [f32], c: &[f32], _dc: &[f32], _dc2: &[f32]) {
+        for (t, &cv) in tile.iter_mut().zip(c) {
+            *t += cv;
+        }
+    }
+}
+
+struct OursKernel {
+    mma: MmaConfig,
+    avoid_rz: bool,
+    keep_delta2: bool,
+}
+
+impl InnerKernel for OursKernel {
+    fn pieces(&self) -> usize {
+        2
+    }
+    fn needs_dc(&self) -> bool {
+        true
+    }
+    fn needs_dc2(&self) -> bool {
+        self.keep_delta2
+    }
+    fn needs_tmp(&self) -> bool {
+        self.avoid_rz
+    }
+    fn process_kblock(&self, acc: Acc<'_>, p: &Panels<'_>) {
+        let (tm, tn, kb) = (p.tm, p.tn, p.kb);
+        // Correction terms: frag_dc += ΔA·B ; frag_dc += A·ΔB (inside TC).
+        for (ia, ib) in [(1, 0), (0, 1)] {
+            mma_tile_acc_chunked(acc.dc, p.a[ia], p.b[ib], tm, tn, kb, INST_K, self.mma);
+        }
+        if self.keep_delta2 {
+            mma_tile_acc_chunked(acc.dc2, p.a[1], p.b[1], tm, tn, kb, INST_K, self.mma);
+        }
+        // Main term A·B.
+        if self.avoid_rz {
+            mma_external_acc_chunked(acc.c, acc.tmp, p.a[0], p.b[0], tm, tn, kb, INST_K, self.mma);
+        } else {
+            mma_tile_acc_chunked(acc.c, p.a[0], p.b[0], tm, tn, kb, INST_K, self.mma);
+        }
+    }
+    fn finalize_into(&self, tile: &mut [f32], c: &[f32], dc: &[f32], dc2: &[f32]) {
+        // Reference epilogue, fused per element: out = c; out += dc/2^11;
+        // (out += dc2/2^22;) tile += out. Same f32 ops, same order.
+        if self.keep_delta2 {
+            for (((t, &cv), &dv), &d2v) in tile.iter_mut().zip(c).zip(dc).zip(dc2) {
+                let mut o = cv;
+                o += dv * INV_SCALE; // eq. 24 epilogue
+                o += d2v * INV_SCALE2; // eq. 23's last term
+                *t += o;
+            }
+        } else {
+            for ((t, &cv), &dv) in tile.iter_mut().zip(c).zip(dc) {
+                let mut o = cv;
+                o += dv * INV_SCALE; // eq. 24 epilogue
+                *t += o;
+            }
+        }
+    }
+}
+
+struct Bf16Kernel {
+    mma: MmaConfig,
+}
+
+impl InnerKernel for Bf16Kernel {
+    fn pieces(&self) -> usize {
+        3
+    }
+    fn needs_dc(&self) -> bool {
+        true
+    }
+    fn needs_dc2(&self) -> bool {
+        true
+    }
+    fn needs_tmp(&self) -> bool {
+        true
+    }
+    fn process_kblock(&self, acc: Acc<'_>, p: &Panels<'_>) {
+        let (tm, tn, kb) = (p.tm, p.tn, p.kb);
+        // Scale-2^-8 correction terms, accumulated in the (simulated) TC.
+        for (ia, ib) in [(0, 1), (1, 0)] {
+            mma_tile_acc_chunked(acc.dc, p.a[ia], p.b[ib], tm, tn, kb, INST_K, self.mma);
+        }
+        // Scale-2^-16 correction terms.
+        for (ia, ib) in [(1, 1), (0, 2), (2, 0)] {
+            mma_tile_acc_chunked(acc.dc2, p.a[ia], p.b[ib], tm, tn, kb, INST_K, self.mma);
+        }
+        // Main term with the RZ-avoidance pattern (zero C, RN outside).
+        mma_external_acc_chunked(acc.c, acc.tmp, p.a[0], p.b[0], tm, tn, kb, INST_K, self.mma);
+    }
+    fn finalize_into(&self, tile: &mut [f32], c: &[f32], dc: &[f32], dc2: &[f32]) {
+        // Reference: out = c; out += dc/2^8 + dc2/2^16 (one fused
+        // expression); tile += out. The parenthesization matters.
+        for (((t, &cv), &dv), &d2v) in tile.iter_mut().zip(c).zip(dc).zip(dc2) {
+            *t += cv + (dv * INV_BF16_SCALE + d2v * INV_BF16_SCALE2);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The tile walk
+// ---------------------------------------------------------------------------
+
+/// The blocked loop nest of the reference, monomorphized over one inner
+/// kernel and running entirely out of the thread-local arena.
+fn run_tiles<K: InnerKernel>(
+    kern: &K,
+    pa: &SplitOperand,
+    pb: &SplitOperand,
+    cfg: &TileConfig,
+) -> Mat {
+    let (m, k, n) = (pa.rows, pa.cols, pb.cols);
+    let mut c = Mat::zeros(m, n);
+    let n_slices = cfg.k_slices();
+    let np = kern.pieces();
+
+    ARENA.with(|cell| {
+        let arena = &mut *cell.borrow_mut();
+        let EngineArena { a_pan, b_pan, acc_c, acc_dc, acc_dc2, tmp, tile } = arena;
+
+        let mut i0 = 0;
+        while i0 < m {
+            let tm = cfg.bm.min(m - i0);
+            let mut j0 = 0;
+            while j0 < n {
+                let tn = cfg.bn.min(n - j0);
+                let mn = tm * tn;
+                reset(acc_c, n_slices * mn);
+                if kern.needs_dc() {
+                    reset(acc_dc, n_slices * mn);
+                }
+                if kern.needs_dc2() {
+                    reset(acc_dc2, n_slices * mn);
+                }
+                if kern.needs_tmp() {
+                    reset(tmp, mn);
+                }
+                let mut k0 = 0;
+                while k0 < k {
+                    let kb_total = cfg.bk.min(k - k0);
+                    // Partition the k-block across warp-k slices.
+                    let mut s = 0;
+                    let mut ks = 0;
+                    while ks < kb_total {
+                        let kb = cfg.wk.min(kb_total - ks);
+                        for piece in 0..np {
+                            if kern.packs_chunk_major() {
+                                pack_a_chunk_major(
+                                    &pa.pieces()[piece],
+                                    i0,
+                                    k0 + ks,
+                                    tm,
+                                    kb,
+                                    &mut a_pan[piece],
+                                );
+                            } else {
+                                pa.pieces()[piece]
+                                    .copy_sub_into(i0, k0 + ks, tm, kb, &mut a_pan[piece]);
+                            }
+                            pb.pieces()[piece]
+                                .copy_sub_into(k0 + ks, j0, kb, tn, &mut b_pan[piece]);
+                        }
+                        let panels = Panels {
+                            a: [a_pan[0].as_slice(), a_pan[1].as_slice(), a_pan[2].as_slice()],
+                            b: [b_pan[0].as_slice(), b_pan[1].as_slice(), b_pan[2].as_slice()],
+                            tm,
+                            tn,
+                            kb,
+                        };
+                        let acc = Acc {
+                            c: &mut acc_c[s * mn..(s + 1) * mn],
+                            dc: if kern.needs_dc() {
+                                &mut acc_dc[s * mn..(s + 1) * mn]
+                            } else {
+                                &mut []
+                            },
+                            dc2: if kern.needs_dc2() {
+                                &mut acc_dc2[s * mn..(s + 1) * mn]
+                            } else {
+                                &mut []
+                            },
+                            tmp: if kern.needs_tmp() { &mut tmp[..mn] } else { &mut [] },
+                        };
+                        kern.process_kblock(acc, &panels);
+                        s += 1;
+                        ks += kb;
+                    }
+                    k0 += kb_total;
+                }
+                // Epilogue: fold every k-slice into the tile in FP32 (RN),
+                // slice 0 included — `0.0 + (-0.0)` is `+0.0`, so even the
+                // first fold is not an identity.
+                reset(tile, mn);
+                for s in 0..n_slices {
+                    let c_s = &acc_c[s * mn..(s + 1) * mn];
+                    let dc_s: &[f32] =
+                        if kern.needs_dc() { &acc_dc[s * mn..(s + 1) * mn] } else { &[] };
+                    let dc2_s: &[f32] =
+                        if kern.needs_dc2() { &acc_dc2[s * mn..(s + 1) * mn] } else { &[] };
+                    kern.finalize_into(tile, c_s, dc_s, dc2_s);
+                }
+                c.write_sub(i0, j0, tm, tn, tile);
+                j0 += tn;
+            }
+            i0 += tm;
+        }
+    });
+    ENGINE_RUNS.fetch_add(1, Ordering::SeqCst);
+    c
+}
+
+/// Run the production engine over prepared operands. Bit-identical to
+/// [`gemm_tiled_prepared`](super::prepared::gemm_tiled_prepared) with the
+/// method's reference backend — property-tested in `rust/tests/prop.rs`
+/// and in this module's tests.
+pub fn gemm_engine(
+    pa: &SplitOperand,
+    pb: &SplitOperand,
+    cfg: &TileConfig,
+    spec: KernelSpec,
+) -> Mat {
+    assert_eq!(pa.cols, pb.rows, "inner dimensions must agree");
+    let np = spec.piece_count();
+    assert_eq!(pa.n_pieces(), np, "operand A was prepared for a different kernel");
+    assert_eq!(pb.n_pieces(), np, "operand B was prepared for a different kernel");
+    match spec {
+        KernelSpec::Simt => run_tiles(&SimtKernel, pa, pb, cfg),
+        KernelSpec::TcPlain { mma } => run_tiles(&TcPlainKernel { mma }, pa, pb, cfg),
+        KernelSpec::Classic { mma } => run_tiles(&ClassicKernel { mma }, pa, pb, cfg),
+        KernelSpec::Ours { mma, avoid_rz, keep_delta2 } => {
+            run_tiles(&OursKernel { mma, avoid_rz, keep_delta2 }, pa, pb, cfg)
+        }
+        KernelSpec::Bf16Triple { mma } => run_tiles(&Bf16Kernel { mma }, pa, pb, cfg),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::prepared::gemm_tiled_prepared;
+    use crate::gemm::{bitwise_eq, TileConfig};
+
+    fn rand_mat(rows: usize, cols: usize, seed: u64) -> Mat {
+        let mut s = seed | 1;
+        Mat::from_fn(rows, cols, |_, _| {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            ((s >> 11) as f64 / (1u64 << 53) as f64 * 2.0 - 1.0) as f32
+        })
+    }
+
+    /// The tentpole invariant at module level: for every method, the
+    /// monomorphized arena engine equals the reference simulator bit for
+    /// bit, across ragged shapes and both tile configs (wk == bk single
+    /// slice and wk < bk multi-slice epilogue reduction).
+    #[test]
+    fn engine_bit_identical_to_reference_all_methods() {
+        let shapes = [(37usize, 53usize, 29usize), (8, 90, 16), (64, 64, 1)];
+        let cfgs = [
+            TileConfig::default(),
+            TileConfig { bm: 16, bn: 16, bk: 16, wm: 16, wn: 16, wk: 8, stages: 3 },
+        ];
+        for (mi, method) in Method::ALL.iter().enumerate() {
+            let backend = method.make_backend();
+            for &(m, k, n) in &shapes {
+                let a = rand_mat(m, k, 11 + mi as u64);
+                let b = rand_mat(k, n, 97 + mi as u64);
+                let pa = method.prepare(&a);
+                let pb = method.prepare(&b);
+                for cfg in &cfgs {
+                    let reference = gemm_tiled_prepared(&pa, &pb, cfg, backend.as_ref());
+                    let engine = gemm_engine(&pa, &pb, cfg, KernelSpec::of(*method));
+                    assert!(
+                        bitwise_eq(&reference.data, &engine.data),
+                        "{}: engine diverged at {m}x{k}x{n} (cfg {cfg:?})",
+                        method.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn engine_run_counter_advances() {
+        let a = rand_mat(4, 8, 3);
+        let pa = Method::OursHalfHalf.prepare(&a);
+        let pb = Method::OursHalfHalf.prepare(&rand_mat(8, 4, 5));
+        let before = engine_runs();
+        let _ = gemm_engine(&pa, &pb, &TileConfig::default(), KernelSpec::of(Method::OursHalfHalf));
+        assert!(engine_runs() > before);
+    }
+
+    #[test]
+    fn degenerate_shapes_match_reference() {
+        let cfg = TileConfig::default();
+        for &(m, k, n) in &[(0usize, 4usize, 4usize), (4, 0, 4), (4, 4, 0), (1, 1, 1), (0, 0, 0)] {
+            for method in [Method::OursHalfHalf, Method::Fp32Simt, Method::OursBf16Triple] {
+                let a = rand_mat(m, k, 7);
+                let b = rand_mat(k, n, 9);
+                let pa = method.prepare(&a);
+                let pb = method.prepare(&b);
+                let reference =
+                    gemm_tiled_prepared(&pa, &pb, &cfg, method.make_backend().as_ref());
+                let engine = gemm_engine(&pa, &pb, &cfg, KernelSpec::of(method));
+                assert!(
+                    bitwise_eq(&reference.data, &engine.data),
+                    "{}: {m}x{k}x{n}",
+                    method.name()
+                );
+                assert_eq!((engine.rows, engine.cols), (m, n));
+            }
+        }
+    }
+
+    #[test]
+    fn split_plan_piece_counts_match_kernel_spec() {
+        for method in Method::ALL {
+            assert_eq!(
+                SplitPlan::of(method).piece_count(),
+                KernelSpec::of(method).piece_count(),
+                "{}",
+                method.name()
+            );
+        }
+    }
+}

@@ -44,6 +44,14 @@ impl Mat {
         debug_assert!(i0 + tm <= self.rows && j0 + tn <= self.cols);
         out.clear();
         out.reserve(tm * tn);
+        if tn == self.cols {
+            // Full-width band (j0 == 0): the sub-block is already contiguous
+            // in row-major storage — one copy instead of `tm`. This is every
+            // B panel of the solver's n=1 matvec and every row band the shard
+            // splitter extracts.
+            out.extend_from_slice(&self.data[i0 * self.cols..(i0 + tm) * self.cols]);
+            return;
+        }
         for i in 0..tm {
             let base = (i0 + i) * self.cols + j0;
             out.extend_from_slice(&self.data[base..base + tn]);

@@ -4,6 +4,7 @@
 pub mod backends;
 pub mod batched;
 pub mod complex;
+pub mod engine;
 pub mod error;
 pub mod matrix;
 pub mod ozaki;
@@ -18,6 +19,7 @@ pub use backends::{
 };
 pub use batched::{batched_worst_residual, gemm_batched, gemm_batched_f64, BatchedOperands};
 pub use complex::{c_relative_residual, cgemm, cgemm_f64, CgemmAlgo, CMat, CMatF64};
+pub use engine::{engine_runs, gemm_engine, KernelSpec, SplitPlan, ENGINE_ID};
 pub use ozaki::{ozaki_gemm, ozaki_terms, slice_bits, slices_for_fp32};
 pub use prepared::{bitwise_eq, content_fingerprint, gemm_tiled_prepared, SplitDedup, SplitOperand};
 pub use scaling::{apply_scale, descale_pow2, gemm_scaled, plan_scale, ScalePlan};
@@ -165,22 +167,18 @@ impl Method {
     /// truncation for `fp32_trunc_lsb`, the exact exponent pre-scale for
     /// `halfhalf_prescale`. The result can be reused across every GEMM
     /// that consumes the same operand.
+    ///
+    /// Runs the production engine's whole-panel (SoA) splitters
+    /// ([`SplitOperand::build_batched`]) — bit-identical to the
+    /// per-element reference split ([`prepare_reference`](Method::prepare_reference)).
     pub fn prepare(&self, m: &Mat) -> SplitOperand {
-        self.prepare_with(m, self.make_backend().as_ref())
-    }
-
-    /// [`prepare`](Method::prepare) against an already-instantiated
-    /// backend, so callers with several splits to build (both operands of
-    /// a GEMM, a whole batch) pay `make_backend` once instead of per
-    /// operand.
-    pub(crate) fn prepare_with(&self, m: &Mat, backend: &dyn KernelBackend) -> SplitOperand {
         // Telemetry frame: counter increments below (split underflow,
         // prescale) are attributed to this method. `None` when disabled.
         let _ctx = crate::telemetry::numeric::MethodCtx::enter(*self);
         match self {
             Method::Fp32TruncLsb => {
                 let t = m.map(|x| truncate_f32_mantissa_lsb(x, 1));
-                SplitOperand::build(*self, &t, backend, 0)
+                SplitOperand::build_batched(*self, &t, 0)
             }
             Method::OursHalfHalfPre => {
                 let p = scaling::plan_scale(m);
@@ -191,37 +189,76 @@ impl Method {
                         1,
                     );
                 }
-                SplitOperand::build(*self, &s, backend, p.shift)
+                SplitOperand::build_batched(*self, &s, p.shift)
             }
-            _ => SplitOperand::build(*self, m, backend, 0),
+            _ => SplitOperand::build_batched(*self, m, 0),
         }
     }
 
-    /// Stage 2: run the tiled GEMM over prepared operands. Bit-identical
-    /// to [`run`](Method::run) — property-tested in `rust/tests/prop.rs`.
-    pub fn run_prepared(&self, a: &SplitOperand, b: &SplitOperand, cfg: &TileConfig) -> Mat {
-        self.run_prepared_with(a, b, cfg, self.make_backend().as_ref())
+    /// [`prepare`](Method::prepare) through the **reference simulator**:
+    /// the per-element `split_element` loop of the method's
+    /// [`KernelBackend`]. Kept as the oracle the batched splitters are
+    /// property-tested against; not on any hot path.
+    pub fn prepare_reference(&self, m: &Mat) -> SplitOperand {
+        let _ctx = crate::telemetry::numeric::MethodCtx::enter(*self);
+        let backend = self.make_backend();
+        match self {
+            Method::Fp32TruncLsb => {
+                let t = m.map(|x| truncate_f32_mantissa_lsb(x, 1));
+                SplitOperand::build(*self, &t, backend.as_ref(), 0)
+            }
+            Method::OursHalfHalfPre => {
+                let p = scaling::plan_scale(m);
+                let s = scaling::apply_scale(m, p);
+                if p.shift != 0 {
+                    crate::telemetry::numeric::record(
+                        crate::telemetry::numeric::Counter::PrescaleApplied,
+                        1,
+                    );
+                }
+                SplitOperand::build(*self, &s, backend.as_ref(), p.shift)
+            }
+            _ => SplitOperand::build(*self, m, backend.as_ref(), 0),
+        }
     }
 
-    /// [`run_prepared`](Method::run_prepared) against an
-    /// already-instantiated backend (see [`run`](Method::run), which
-    /// threads one backend through both prepares and the multiply).
-    pub(crate) fn run_prepared_with(
-        &self,
-        a: &SplitOperand,
-        b: &SplitOperand,
-        cfg: &TileConfig,
-        backend: &dyn KernelBackend,
-    ) -> Mat {
+    /// Stage 2: multiply prepared operands on the **production engine**
+    /// ([`gemm::engine`](crate::gemm::engine)) — hoisted dispatch, arena
+    /// scratch, pack-once panels. Bit-identical to [`run`](Method::run)
+    /// and to [`run_prepared_reference`](Method::run_prepared_reference) —
+    /// property-tested in `rust/tests/prop.rs`.
+    pub fn run_prepared(&self, a: &SplitOperand, b: &SplitOperand, cfg: &TileConfig) -> Mat {
         assert_eq!(a.method, *self, "operand A was prepared for {:?}", a.method);
         assert_eq!(b.method, *self, "operand B was prepared for {:?}", b.method);
         // Telemetry frame: MMA rounding-step and external-RN-add counts
         // from the tiled multiply are attributed to this method.
         let _ctx = crate::telemetry::numeric::MethodCtx::enter(*self);
-        let c = prepared::gemm_tiled_prepared(a, b, cfg, backend);
+        let c = engine::gemm_engine(a, b, cfg, engine::KernelSpec::of(*self));
+        self.descale_epilogue(a, b, c)
+    }
+
+    /// [`run_prepared`](Method::run_prepared) through the **reference
+    /// simulator** (`gemm_tiled_prepared` over the method's
+    /// [`KernelBackend`]): the original per-element path, kept verbatim as
+    /// the oracle for the production engine. Not on any hot path.
+    pub fn run_prepared_reference(
+        &self,
+        a: &SplitOperand,
+        b: &SplitOperand,
+        cfg: &TileConfig,
+    ) -> Mat {
+        assert_eq!(a.method, *self, "operand A was prepared for {:?}", a.method);
+        assert_eq!(b.method, *self, "operand B was prepared for {:?}", b.method);
+        let _ctx = crate::telemetry::numeric::MethodCtx::enter(*self);
+        let c = prepared::gemm_tiled_prepared(a, b, cfg, self.make_backend().as_ref());
+        self.descale_epilogue(a, b, c)
+    }
+
+    /// Shared exact descale epilogue — same factor sequence as
+    /// `scaling::gemm_scaled` (`halfhalf_prescale` only; identity
+    /// elsewhere).
+    fn descale_epilogue(&self, a: &SplitOperand, b: &SplitOperand, c: Mat) -> Mat {
         match self {
-            // Exact two-step descale epilogue — same factor sequence as
-            // `scaling::gemm_scaled`.
             Method::OursHalfHalfPre => {
                 scaling::descale_pow2(&c, -(a.prescale_shift + b.prescale_shift))
             }
@@ -229,17 +266,24 @@ impl Method {
         }
     }
 
-    /// Instantiate the backend and run the tiled GEMM: a thin compose of
-    /// [`prepare`](Method::prepare) and [`run_prepared`](Method::run_prepared),
-    /// sharing one backend instance across both prepares and the multiply
-    /// (the backends are stateless; building one per stage was pure
-    /// allocation overhead on the per-request hot path).
+    /// Prepare both operands and multiply on the production engine: a thin
+    /// compose of [`prepare`](Method::prepare) and
+    /// [`run_prepared`](Method::run_prepared).
     pub fn run(&self, a: &Mat, b: &Mat, cfg: &TileConfig) -> Mat {
         assert_eq!(a.cols, b.rows, "inner dimensions must agree");
-        let backend = self.make_backend();
-        let pa = self.prepare_with(a, backend.as_ref());
-        let pb = self.prepare_with(b, backend.as_ref());
-        self.run_prepared_with(&pa, &pb, cfg, backend.as_ref())
+        let pa = self.prepare(a);
+        let pb = self.prepare(b);
+        self.run_prepared(&pa, &pb, cfg)
+    }
+
+    /// [`run`](Method::run) end to end on the **reference simulator**:
+    /// per-element splits and the per-element tiled multiply. The oracle
+    /// for the whole engine pipeline.
+    pub fn run_reference(&self, a: &Mat, b: &Mat, cfg: &TileConfig) -> Mat {
+        assert_eq!(a.cols, b.rows, "inner dimensions must agree");
+        let pa = self.prepare_reference(a);
+        let pb = self.prepare_reference(b);
+        self.run_prepared_reference(&pa, &pb, cfg)
     }
 
     /// Tensor-Core low-precision GEMM term count (performance model input).

@@ -64,6 +64,44 @@ impl SplitOperand {
         }
     }
 
+    /// Split `m` with the whole-panel (SoA) splitters of `fp::split` —
+    /// the production engine's stage 1. The per-method splitter is looked
+    /// up **once** in the [`SplitPlan`](super::engine::SplitPlan) dispatch
+    /// table; each piece plane is then produced by one contiguous pass, so
+    /// hi and lo planes land in contiguous memory with no per-element
+    /// dispatch. Bit-identical to [`build`](SplitOperand::build) with the
+    /// method's reference backend (the panel splitters call the same
+    /// scalar conversion kernels element for element) — pinned by
+    /// `batched_build_bit_identical_to_elementwise` below and by the prop
+    /// suite.
+    pub(crate) fn build_batched(method: Method, m: &Mat, prescale_shift: i32) -> SplitOperand {
+        use super::engine::SplitPlan;
+        let plan = SplitPlan::of(method);
+        let mut p0 = Vec::new();
+        let mut p1 = Vec::new();
+        let mut p2 = Vec::new();
+        match plan {
+            SplitPlan::Identity => p0.extend_from_slice(&m.data),
+            SplitPlan::QuantF16 => crate::fp::quantize_panel_f16(&m.data, &mut p0),
+            SplitPlan::QuantTf32 => crate::fp::quantize_panel_tf32(&m.data, &mut p0),
+            SplitPlan::Markidis => crate::fp::split_panel_markidis(&m.data, &mut p0, &mut p1),
+            SplitPlan::Feng => crate::fp::split_panel_feng(&m.data, &mut p0, &mut p1),
+            SplitPlan::Ootomo => crate::fp::split_panel_ootomo(&m.data, &mut p0, &mut p1),
+            SplitPlan::OotomoTf32 => {
+                crate::fp::split_panel_ootomo_tf32(&m.data, &mut p0, &mut p1)
+            }
+            SplitPlan::Bf16Triple => {
+                crate::fp::split_panel_bf16_triple(&m.data, &mut p0, &mut p1, &mut p2)
+            }
+        }
+        let pieces = [p0, p1, p2]
+            .into_iter()
+            .take(plan.piece_count())
+            .map(|d| Mat::from_vec(m.rows, m.cols, d))
+            .collect();
+        SplitOperand { method, rows: m.rows, cols: m.cols, prescale_shift, pieces }
+    }
+
     pub fn n_pieces(&self) -> usize {
         self.pieces.len()
     }
@@ -280,6 +318,55 @@ mod tests {
                         prepared.data,
                         "{}: prepared path diverged at {m}x{k}x{n} (cfg {cfg:?})",
                         be.name()
+                    );
+                }
+            }
+        }
+    }
+
+    /// Stage-1 invariant of the production engine: the whole-panel (SoA)
+    /// split equals the per-element reference split bit for bit, for every
+    /// method, on adversarial content (subnormal residuals, non-finite,
+    /// signed zeros) and on the empty operand.
+    #[test]
+    fn batched_build_bit_identical_to_elementwise() {
+        let mut vals: Vec<f32> = vec![
+            0.0,
+            -0.0,
+            1.0,
+            -1.0,
+            65504.0,
+            65520.0,
+            -1.0e30,
+            f32::MAX,
+            f32::MIN_POSITIVE,
+            -f32::MIN_POSITIVE,
+            f32::NAN,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::from_bits(1),
+            f32::from_bits(0x8000_0001),
+        ];
+        // Values whose lo piece lands subnormal on the f16 grid.
+        for e in -30..-10 {
+            vals.push(((1.0 + crate::fp::exp2i(-12)) * crate::fp::exp2i(e)) as f32);
+        }
+        let r = rand_mat(3, 17, 23);
+        vals.extend_from_slice(&r.data);
+        let n = vals.len();
+        let m = Mat::from_vec(1, n, vals);
+        let empty = Mat::from_vec(0, 0, Vec::new());
+        for method in Method::ALL {
+            let backend = method.make_backend();
+            for src in [&m, &empty] {
+                let reference = SplitOperand::build(method, src, backend.as_ref(), 0);
+                let batched = SplitOperand::build_batched(method, src, 0);
+                assert_eq!(reference.n_pieces(), batched.n_pieces(), "{}", method.name());
+                for (pr, pb) in reference.pieces().iter().zip(batched.pieces()) {
+                    assert!(
+                        bitwise_eq(&pr.data, &pb.data),
+                        "{}: batched split diverged",
+                        method.name()
                     );
                 }
             }

@@ -12,7 +12,14 @@
 //!   [`gemm::SplitOperand`], [`gemm::Method::run_prepared`] multiplies the
 //!   pieces — which the batched engine (`gemm::batched`) and the
 //!   coordinator's split cache amortize across batches and requests
-//!   (DESIGN.md §8).
+//!   (DESIGN.md §8). The execution core exists twice behind one contract
+//!   (DESIGN.md §14): the per-element **reference simulator**
+//!   ([`gemm::Method::run_reference`] / `run_prepared_reference`), kept
+//!   verbatim as the oracle, and the **production engine**
+//!   ([`gemm::engine`] — SoA split panels, whole-panel batched rounding,
+//!   per-worker arenas, method dispatch hoisted out of the k-loop) that
+//!   every hot path runs, property-tested bit-identical to the reference
+//!   for all thirteen methods.
 //! * [`matgen`], [`analysis`] — workload generators (eq. 25, STARS-H-like)
 //!   and the paper's theory (Tables 1–2, Fig. 8, Fig. 9).
 //! * [`perfmodel`], [`autotune`] — the GPU throughput/power/roofline

@@ -9,6 +9,13 @@
 //! becomes `plan.shard_count()` pool jobs. Any shard failure (executor
 //! panic, shape mismatch) degrades to one unsharded `inner.execute` call —
 //! never an error the client can observe.
+//!
+//! Each pool worker is a long-lived thread, so every shard it executes
+//! runs out of that thread's reusable [`gemm::engine`](crate::gemm::engine)
+//! arena: panel, accumulator and tile scratch is allocated on a worker's
+//! first shard and reused for the rest of the process (DESIGN.md §14).
+//! Band extraction below is a single contiguous copy per row band
+//! (`Mat::copy_sub_into`'s full-width fast path).
 
 use super::plan::{plan, ShardConfig, ShardPlan};
 use super::pool::WorkerPool;

@@ -37,6 +37,13 @@ const DIRECT_CACHE_CAP: usize = 4;
 
 /// In-process backend: `method.run_prepared` under a fixed tile, with the
 /// two-stage split API amortizing the constant operand.
+///
+/// This is the solver's matvec hot path: every call multiplies through the
+/// production engine (`gemm::engine` — hoisted dispatch, pack-once panels)
+/// on the calling thread, whose arena is reused across the whole solve
+/// trajectory, and the constant `A` split is a cache hit after iteration
+/// one — so an N-iteration solve allocates split + scratch memory O(1)
+/// times, not O(N).
 pub struct DirectBackend {
     method: Method,
     tile: TileConfig,

@@ -223,6 +223,79 @@ pub fn mma_tile_zero_into(
     mma_tile_acc(d, a, b, m, n, k, cfg);
 }
 
+/// Instruction-chunked accumulate over a **chunk-major** packed A panel:
+/// `d += A×B` issued as one [`mma_tile_acc`] call per `inst_k`-wide chunk,
+/// exactly the per-chunk call sequence of the reference backends.
+///
+/// `a_cm` holds the m×kb A panel chunk-major: the chunk starting at
+/// column `k0` occupies `a_cm[k0*m .. k0*m + m*kc]` as a packed m×kc
+/// row-major block (`kc = min(inst_k, kb - k0)`). `b` is the kb×n panel
+/// row-major, so each chunk's B view is the contiguous slice the
+/// reference uses. Same slices, same `mma_tile_acc` calls in the same
+/// order ⇒ bit-identical results and identical FMA/rounding-step counter
+/// totals; the production engine packs A into this layout **once** per
+/// k-block and shares it across every product term (DESIGN.md §14),
+/// where the reference repacks per term per chunk.
+#[allow(clippy::too_many_arguments)]
+pub fn mma_tile_acc_chunked(
+    d: &mut [f32],
+    a_cm: &[f32],
+    b: &[f32],
+    m: usize,
+    n: usize,
+    kb: usize,
+    inst_k: usize,
+    cfg: MmaConfig,
+) {
+    debug_assert_eq!(a_cm.len(), m * kb);
+    debug_assert_eq!(b.len(), kb * n);
+    let mut k0 = 0;
+    while k0 < kb {
+        let kc = inst_k.min(kb - k0);
+        let a_chunk = &a_cm[k0 * m..k0 * m + m * kc];
+        let b_chunk = &b[k0 * n..(k0 + kc) * n];
+        mma_tile_acc(d, a_chunk, b_chunk, m, n, kc, cfg);
+        k0 += kc;
+    }
+}
+
+/// Instruction-chunked RZ-avoidance walk over a chunk-major A panel:
+/// per chunk, run the MMA with a **zero** C fragment into `tmp`, then add
+/// into `acc` on the FP32 (RN) datapath — the paper's Fig. 6 (right)
+/// pattern, with the external-add telemetry recorded per chunk exactly
+/// like the reference backends. `tmp` is caller-owned scratch (m×n),
+/// so the engine's arena replaces the reference's per-k-block `vec!`.
+#[allow(clippy::too_many_arguments)]
+pub fn mma_external_acc_chunked(
+    acc: &mut [f32],
+    tmp: &mut [f32],
+    a_cm: &[f32],
+    b: &[f32],
+    m: usize,
+    n: usize,
+    kb: usize,
+    inst_k: usize,
+    cfg: MmaConfig,
+) {
+    debug_assert_eq!(acc.len(), m * n);
+    debug_assert_eq!(tmp.len(), m * n);
+    let mut k0 = 0;
+    while k0 < kb {
+        let kc = inst_k.min(kb - k0);
+        let a_chunk = &a_cm[k0 * m..k0 * m + m * kc];
+        let b_chunk = &b[k0 * n..(k0 + kc) * n];
+        mma_tile_zero_into(tmp, a_chunk, b_chunk, m, n, kc, cfg);
+        for (c, t) in acc.iter_mut().zip(tmp.iter()) {
+            *c += *t; // FP32 RN add — the paper's Fig. 6 (right)
+        }
+        crate::telemetry::numeric::record(
+            crate::telemetry::numeric::Counter::ExtRnAdds,
+            (m * n) as u64,
+        );
+        k0 += kc;
+    }
+}
+
 /// Convenience: `d += a×b` with a zero C tile (the paper's RZ-avoidance
 /// pattern feeds a zero fragment and accumulates outside — see
 /// [`mma_into_external_accumulator`] for that outside step).
@@ -388,6 +461,84 @@ mod tests {
                 }
             }
             assert_eq!(d_fast, d_gen);
+        }
+    }
+
+    /// Pack a row-major m×kb panel into the chunk-major layout
+    /// `mma_tile_acc_chunked` consumes.
+    fn pack_chunk_major(a: &[f32], m: usize, kb: usize, inst_k: usize) -> Vec<f32> {
+        let mut out = Vec::with_capacity(m * kb);
+        let mut k0 = 0;
+        while k0 < kb {
+            let kc = inst_k.min(kb - k0);
+            for i in 0..m {
+                out.extend_from_slice(&a[i * kb + k0..i * kb + k0 + kc]);
+            }
+            k0 += kc;
+        }
+        out
+    }
+
+    #[test]
+    fn chunked_walkers_match_per_chunk_reference() {
+        // The chunk-major walkers must agree bit-for-bit (and in FMA
+        // counter totals) with the reference pattern: repack each chunk
+        // from the row-major panel and call the mma per chunk.
+        let inst_k = 8;
+        let mut state = 0xfeed_beef_1234_5678u64;
+        let mut rnd = || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            ((state >> 11) as f64 / (1u64 << 53) as f64 * 2.0 - 1.0) as f32
+        };
+        for (m, n, kb) in [(5usize, 7usize, 13usize), (4, 4, 8), (3, 9, 20), (1, 1, 17)] {
+            let a = to_f16_grid(&(0..m * kb).map(|_| rnd()).collect::<Vec<_>>());
+            let b = to_f16_grid(&(0..kb * n).map(|_| rnd()).collect::<Vec<_>>());
+            let a_cm = pack_chunk_major(&a, m, kb, inst_k);
+            for cfg in [MmaConfig::TENSOR_CORE, MmaConfig::MMA_RN] {
+                // Accumulate variant.
+                let mut d_ref = (0..m * n).map(|_| rnd()).collect::<Vec<_>>();
+                let mut d_eng = d_ref.clone();
+                let mut k0 = 0;
+                reset_fma_count();
+                while k0 < kb {
+                    let kc = inst_k.min(kb - k0);
+                    let mut a_chunk = Vec::with_capacity(m * kc);
+                    for i in 0..m {
+                        a_chunk.extend_from_slice(&a[i * kb + k0..i * kb + k0 + kc]);
+                    }
+                    mma_tile_acc(&mut d_ref, &a_chunk, &b[k0 * n..(k0 + kc) * n], m, n, kc, cfg);
+                    k0 += kc;
+                }
+                let fma_ref = fma_count();
+                reset_fma_count();
+                mma_tile_acc_chunked(&mut d_eng, &a_cm, &b, m, n, kb, inst_k, cfg);
+                assert_eq!(fma_count(), fma_ref, "fma totals {m}x{n}x{kb}");
+                let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(&d_ref), bits(&d_eng), "acc {m}x{n}x{kb} cfg={cfg:?}");
+
+                // External-accumulate (zero-C) variant.
+                let mut acc_ref = (0..m * n).map(|_| rnd()).collect::<Vec<_>>();
+                let mut acc_eng = acc_ref.clone();
+                let mut tmp = vec![0.0f32; m * n];
+                let mut k0 = 0;
+                while k0 < kb {
+                    let kc = inst_k.min(kb - k0);
+                    let mut a_chunk = Vec::with_capacity(m * kc);
+                    for i in 0..m {
+                        a_chunk.extend_from_slice(&a[i * kb + k0..i * kb + k0 + kc]);
+                    }
+                    let bc = &b[k0 * n..(k0 + kc) * n];
+                    mma_tile_zero_into(&mut tmp, &a_chunk, bc, m, n, kc, cfg);
+                    for (c, t) in acc_ref.iter_mut().zip(tmp.iter()) {
+                        *c += *t;
+                    }
+                    k0 += kc;
+                }
+                mma_external_acc_chunked(&mut acc_eng, &mut tmp, &a_cm, &b, m, n, kb, inst_k, cfg);
+                assert_eq!(bits(&acc_ref), bits(&acc_eng), "ext {m}x{n}x{kb} cfg={cfg:?}");
+            }
         }
     }
 

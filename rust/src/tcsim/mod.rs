@@ -10,6 +10,6 @@ pub mod mma;
 
 pub use fragment::WarpFragments;
 pub use mma::{
-    fma_count, mma_into_external_accumulator, mma_tile, mma_tile_acc, mma_tile_zero_c,
-    mma_tile_zero_into, reset_fma_count, MmaConfig,
+    fma_count, mma_external_acc_chunked, mma_into_external_accumulator, mma_tile, mma_tile_acc,
+    mma_tile_acc_chunked, mma_tile_zero_c, mma_tile_zero_into, reset_fma_count, MmaConfig,
 };

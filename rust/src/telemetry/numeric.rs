@@ -24,8 +24,9 @@
 //! # Per-method attribution
 //!
 //! Counts are attributed to the [`Method`](crate::gemm::Method) whose
-//! `prepare_with` / `run_prepared_with` frame is active on the current
-//! thread (a [`MethodCtx`] guard, entered at those two choke points).
+//! `prepare` / `run_prepared` frame is active on the current thread (a
+//! [`MethodCtx`] guard, entered at those choke points, engine and
+//! reference alike).
 //! While a guard is live, increments accumulate in thread-local cells and
 //! flush to the global per-method sink when the guard drops — one atomic
 //! add per (counter, frame) instead of per element. Increments outside
@@ -187,8 +188,8 @@ fn flush_pending(slot: usize) {
 }
 
 /// RAII frame attributing this thread's counter increments to `method`
-/// until dropped. Entered by `Method::prepare_with` and
-/// `Method::run_prepared_with` — the two points every compute path
+/// until dropped. Entered by `Method::prepare` and `Method::run_prepared`
+/// (and their `_reference` oracles) — the points every compute path
 /// (direct, batched, sharded, solver) passes through. Nesting-safe: a
 /// new frame first flushes outstanding deltas to the frame it interrupts.
 #[must_use = "the context attributes counts only while alive"]

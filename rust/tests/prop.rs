@@ -564,6 +564,188 @@ fn prop_ozaki_slice_count_vs_exactness() {
     }
 }
 
+/// Bit pattern of every element — the engine's identity contract is at
+/// the representation level (-0.0 vs +0.0, NaN payloads), not f32 `==`.
+fn bits_of(m: &Mat) -> Vec<u32> {
+    m.data.iter().map(|v| v.to_bits()).collect()
+}
+
+/// INVARIANT (DESIGN.md §14): the production engine ([`Method::run`],
+/// [`Method::run_prepared`]) is bit-identical to the reference simulator
+/// ([`Method::run_reference`], [`Method::run_prepared_reference`]) for
+/// EVERY method on adversarial operands — subnormal-heavy panels (f32
+/// subnormals, and values whose split residual underflows the f16 grid),
+/// f16-overflow magnitudes, and non-finite elements (NaN, ±inf) — across
+/// ragged shapes and a non-default tile config.
+#[test]
+fn prop_engine_bit_identical_to_reference_adversarial() {
+    const SPECIALS: [f32; 16] = [
+        0.0,
+        -0.0,
+        1.0,
+        -1.0,
+        65504.0,               // f16 max finite
+        65520.0,               // first f16-RN overflow
+        f32::MAX,
+        -f32::MAX,
+        f32::INFINITY,
+        f32::NEG_INFINITY,
+        f32::NAN,
+        f32::MIN_POSITIVE,
+        -f32::MIN_POSITIVE,
+        1.0e-40,               // f32 subnormal
+        -1.0e-45,              // smallest-magnitude subnormal region
+        3.389_531_4e38,
+    ];
+    let small = TileConfig { bm: 16, bn: 16, bk: 16, wm: 16, wn: 16, wk: 8, stages: 3 };
+    let tiles = [TileConfig::default(), small];
+    let mut rng = Rng::new(0xE41E);
+    for &method in Method::ALL.iter() {
+        for round in 0..4usize {
+            let cfg = tiles[round % 2];
+            let m = 1 + rng.int_in(0, 40) as usize;
+            let k = 1 + rng.int_in(0, 70) as usize;
+            let n = 1 + rng.int_in(0, 40) as usize;
+            let mut gen = |r: usize, c: usize| {
+                Mat::from_fn(r, c, |_, _| match rng.int_in(0, 9) {
+                    0..=3 => SPECIALS[rng.int_in(0, 15) as usize],
+                    4..=6 => {
+                        // hi + tiny tail: the 2^11-scaled split residual
+                        // lands at/below the f16 subnormal floor.
+                        let e = rng.int_in(-30, -10) as i32;
+                        ((1.0 + tcec::fp::exp2i(-12)) * tcec::fp::exp2i(e)) as f32
+                    }
+                    7 => f32::from_bits(rng.next_u64() as u32 & 0x007f_ffff),
+                    _ => random_f32(&mut rng),
+                })
+            };
+            let a = gen(m, k);
+            let b = gen(k, n);
+            let eng = method.run(&a, &b, &cfg);
+            let rf = method.run_reference(&a, &b, &cfg);
+            assert_eq!(
+                bits_of(&eng),
+                bits_of(&rf),
+                "{}: engine run != reference run at {m}x{k}x{n} (cfg {cfg:?})",
+                method.name()
+            );
+            // Multiply core in isolation: engine vs reference over the
+            // SAME reference-prepared operands (split equality is pinned
+            // by its own oracle test in gemm::prepared).
+            let pa = method.prepare_reference(&a);
+            let pb = method.prepare_reference(&b);
+            assert_eq!(
+                bits_of(&method.run_prepared(&pa, &pb, &cfg)),
+                bits_of(&method.run_prepared_reference(&pa, &pb, &cfg)),
+                "{}: engine multiply != reference multiply at {m}x{k}x{n}",
+                method.name()
+            );
+        }
+    }
+}
+
+/// INVARIANT: the engine handles every degenerate shape (m, n or k of 0
+/// or 1, empty output, empty inner dimension) exactly like the reference
+/// simulator — same dims, same bits.
+#[test]
+fn prop_engine_degenerate_shapes_bit_identical_to_reference() {
+    let cfg = TileConfig::default();
+    let shapes: [(usize, usize, usize); 9] = [
+        (0, 0, 0),
+        (0, 4, 3),
+        (4, 0, 3),
+        (4, 3, 0),
+        (1, 1, 1),
+        (1, 64, 1),
+        (7, 1, 9),
+        (1, 33, 5),
+        (65, 1, 1),
+    ];
+    for &(m, k, n) in &shapes {
+        for &method in Method::ALL.iter() {
+            let val = |i: usize, j: usize| (((i * 31 + j * 7) % 13) as f32 - 6.0) * 0.125;
+            let a = Mat::from_fn(m, k, val);
+            let b = Mat::from_fn(k, n, val);
+            let eng = method.run(&a, &b, &cfg);
+            let rf = method.run_reference(&a, &b, &cfg);
+            assert_eq!((eng.rows, eng.cols), (rf.rows, rf.cols), "{} dims", method.name());
+            assert_eq!(
+                bits_of(&eng),
+                bits_of(&rf),
+                "{}: engine != reference at degenerate {m}x{k}x{n}",
+                method.name()
+            );
+        }
+    }
+}
+
+/// INVARIANT: the FULL service path — admission, planner, shard engine,
+/// the service SplitCache, batcher — multiplies on the production engine
+/// yet stays bit-identical to the reference simulator run under the
+/// plan's equivalent tile, on subnormal-heavy operands; and a repeat
+/// submission (split-cache hit) returns the same bits.
+#[test]
+fn prop_engine_service_path_bit_identical_to_reference() {
+    use tcec::planner::{Planner, PlannerConfig};
+    let mk_cfg = || PlannerConfig {
+        autotune_tiles: false,
+        shard: Some(shard::ShardConfig {
+            workers: 2,
+            min_flops: 0,
+            ..shard::ShardConfig::default()
+        }),
+        ..PlannerConfig::default()
+    };
+    let planner = Planner::new(mk_cfg());
+    let mut rng = Rng::new(0x5E4C);
+    for &method in &[
+        Method::Fp32Simt,
+        Method::MarkidisMmaRn,
+        Method::OursHalfHalf,
+        Method::OursHalfHalfPre,
+        Method::OursBf16Triple,
+    ] {
+        let m = 80 + rng.int_in(0, 50) as usize;
+        let n = 80 + rng.int_in(0, 50) as usize;
+        let k = 20 + rng.int_in(0, 40) as usize;
+        let mut gen = |r: usize, c: usize| {
+            Mat::from_fn(r, c, |_, _| match rng.int_in(0, 3) {
+                0 => {
+                    let e = rng.int_in(-30, -12) as i32;
+                    ((1.0 + tcec::fp::exp2i(-12)) * tcec::fp::exp2i(e)) as f32
+                }
+                1 => f32::from_bits((rng.next_u64() as u32 & 0x007f_ffff) | 0x8000_0000),
+                _ => rng.uniform_in(-1.0, 1.0) as f32,
+            })
+        };
+        let a = gen(m, k);
+        let b = gen(k, n);
+        let plan = planner.plan_for_method(method, m, n, k);
+        assert!(plan.shard.is_some(), "{}: expected a shard grid at {m}x{k}x{n}", method.name());
+        let want = method.run_reference(&a, &b, &plan.equivalent_tile());
+        let client = tcec::coordinator::GemmService::builder()
+            .workers(1)
+            .force_method(method)
+            .planner(mk_cfg())
+            .split_cache(8)
+            .client(Arc::new(SimExecutor::new()));
+        for round in 0..2 {
+            let out = client
+                .call(a.clone(), b.clone())
+                .policy(Policy::Fp32Accuracy)
+                .wait()
+                .expect("served");
+            assert_eq!(
+                bits_of(&out.c),
+                bits_of(&want),
+                "{} round {round}: service (engine) != reference at {m}x{k}x{n}",
+                method.name()
+            );
+        }
+        client.shutdown();
+    }
+}
+
 /// INVARIANT: eq. 7's metric is a metric-ish: 0 iff equal, scale-invariant.
 #[test]
 fn prop_residual_metric_sanity() {

@@ -170,6 +170,35 @@ fn underflow_counters_fire_on_subnormal_residual() {
 }
 
 #[test]
+fn batched_split_counters_match_scalar_split() {
+    let _g = gate();
+    // The production engine's whole-panel splitters batch their underflow
+    // tallies (one record per panel per counter instead of one record per
+    // element); the *totals* must equal the per-element reference split
+    // exactly, for every method — otherwise dashboards would drift when
+    // the hot path switched to the engine.
+    let a = exponent_pinned(24, -20);
+    for m in Method::ALL {
+        numeric::enable();
+        let before = NumericSnapshot::capture();
+        let _pb = m.prepare(&a);
+        let batched = NumericSnapshot::capture().delta(&before);
+        let before = NumericSnapshot::capture();
+        let _ps = m.prepare_reference(&a);
+        let scalar = NumericSnapshot::capture().delta(&before);
+        numeric::disable();
+        for c in [Counter::SplitFlushed, Counter::SplitSubnormal, Counter::PrescaleApplied] {
+            assert_eq!(
+                batched.by_method(m, c),
+                scalar.by_method(m, c),
+                "{}: batched split {c:?} delta diverged from scalar reference",
+                m.name()
+            );
+        }
+    }
+}
+
+#[test]
 fn telemetry_perturbs_no_output_bit() {
     let _g = gate();
     let cfg = TileConfig::default();
