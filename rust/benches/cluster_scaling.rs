@@ -1,0 +1,133 @@
+//! Cluster scaling bench: the fig. 14 multi-GPU curve, *executed* — wall
+//! clock of one repeated-weight request stream as the cluster grows from
+//! 1 to N in-process nodes, next to `perfmodel::topology`'s projected
+//! speedup for the same shape.
+//!
+//! Every node is a full `GemmService` on the same host, so the speedup
+//! ceiling is the machine's core count (printed below), not N; the shape
+//! to look for is throughput rising with nodes while the per-node split
+//! caches stay warm (fingerprint-affine routing keeps each repeated
+//! weight on one node). Bit-identity against the single-service run is
+//! asserted, not just reported — it is deterministic, never timing-luck.
+//!
+//! Run:  `cargo bench --bench cluster_scaling`
+//! JSON: `cargo bench --bench cluster_scaling -- --json > BENCH_cluster_scaling.json`
+
+use std::sync::Arc;
+use tcec::bench_util::{json_array, json_mode, JsonObj, Table};
+use tcec::cluster::ClusterClient;
+use tcec::coordinator::{GemmService, Policy, SimExecutor};
+use tcec::gemm::Mat;
+use tcec::matgen::urand;
+use tcec::perfmodel::ClusterTopology;
+
+fn main() {
+    let smoke = tcec::bench_util::smoke();
+    let json = json_mode();
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let (requests, size, weights) = if smoke { (12, 32, 4) } else { (64, 64, 8) };
+    let node_counts: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4] };
+    if !json {
+        println!("== cluster_scaling: request throughput vs node count ==");
+        println!("   ({cores} host cores shared by all nodes — speedup saturates there)");
+        println!("   {requests} requests, {weights} distinct weights, {size}x{size} GEMMs\n");
+    }
+
+    let template = GemmService::builder().workers(2).max_batch(4).split_cache(16);
+    let gen = |i: usize| {
+        let a = urand(size, size, -1.0, 1.0, i as u64);
+        let b = urand(size, size, -1.0, 1.0, 10_000 + (i % weights) as u64);
+        (a, b)
+    };
+
+    // Reference bytes and baseline wall clock from ONE service built from
+    // the same template.
+    let single = template.clone().client(Arc::new(SimExecutor::new()));
+    let t0 = std::time::Instant::now();
+    let mut tickets = Vec::with_capacity(requests);
+    for i in 0..requests {
+        let (a, b) = gen(i);
+        tickets.push(single.call(a, b).policy(Policy::Fp32Accuracy).submit().expect("admitted"));
+    }
+    let want: Vec<Mat> =
+        tickets.into_iter().map(|t| t.wait().expect("single-node run succeeds").c).collect();
+    let base_s = t0.elapsed().as_secs_f64();
+    single.shutdown();
+    if !json {
+        println!("single service baseline: {base_s:.3}s ({:.1} req/s)", requests as f64 / base_s);
+    }
+
+    let mut t = Table::new(&[
+        "nodes",
+        "time s",
+        "req/s",
+        "speedup",
+        "projected",
+        "split hits",
+        "split misses",
+        "bit-identical",
+    ]);
+    let mut rows: Vec<String> = Vec::new();
+    for &nc in node_counts {
+        let cluster = ClusterClient::builder().nodes(nc).service(template.clone()).build_sim();
+        let t0 = std::time::Instant::now();
+        let mut tickets = Vec::with_capacity(requests);
+        for i in 0..requests {
+            let (a, b) = gen(i);
+            tickets
+                .push(cluster.call(a, b).policy(Policy::Fp32Accuracy).submit().expect("admitted"));
+        }
+        let got: Vec<Mat> =
+            tickets.into_iter().map(|t| t.wait().expect("cluster run succeeds").c).collect();
+        let secs = t0.elapsed().as_secs_f64();
+        let identical = got.iter().zip(&want).all(|(g, w)| g.data == w.data);
+        assert!(identical, "cluster results diverged from the single-node run");
+        let snap = cluster.snapshot();
+        assert!(snap.identity_holds(), "cluster ledger identity violated");
+        let (hits, misses) = snap.nodes.iter().fold((0u64, 0u64), |(h, m), n| {
+            (h + n.service.split_cache_hits, m + n.service.split_cache_misses)
+        });
+        let projected = ClusterTopology::with_nodes(nc).speedup();
+        cluster.shutdown();
+        t.row(&[
+            nc.to_string(),
+            format!("{secs:.3}"),
+            format!("{:.1}", requests as f64 / secs),
+            format!("{:.2}x", base_s / secs),
+            format!("{projected:.2}x"),
+            hits.to_string(),
+            misses.to_string(),
+            if identical { "yes".into() } else { "NO — BUG".into() },
+        ]);
+        rows.push(
+            JsonObj::new()
+                .int("nodes", nc as u64)
+                .num("time_s", secs)
+                .num("reqs_per_s", requests as f64 / secs)
+                .num("speedup", base_s / secs)
+                .num("projected_speedup", projected)
+                .int("split_hits", hits)
+                .int("split_misses", misses)
+                .bool("bit_identical", identical)
+                .finish(),
+        );
+    }
+    if json {
+        println!(
+            "{}",
+            JsonObj::new()
+                .str("bench", "cluster_scaling")
+                .bool("smoke", smoke)
+                .int("host_cores", cores as u64)
+                .int("requests", requests as u64)
+                .int("weights", weights as u64)
+                .int("size", size as u64)
+                .num("single_service_s", base_s)
+                .raw("cases", &json_array(&rows))
+                .finish()
+        );
+    } else {
+        t.print();
+        println!("\n(projected = perfmodel::topology placement model, not a measurement)");
+    }
+}

@@ -5,13 +5,91 @@
 //! size; on GA102 boards halfhalf still wins but tf32tf32 loses in some
 //! cases (its peak/3 ceiling sits below the dual-issue FP32 peak).
 //!
-//! Run: `cargo bench --bench fig14_throughput_gpus`
+//! Run:  `cargo bench --bench fig14_throughput_gpus`
+//! JSON: `cargo bench --bench fig14_throughput_gpus -- --json` — emits the
+//! same projections machine-readably, including the multi-node projection
+//! from `perfmodel::topology`, so the *projected* scaling curve can be
+//! diffed against the *executed* one from `cluster_scaling --json`.
 
-use tcec::bench_util::Table;
+use tcec::bench_util::{json_array, json_mode, JsonObj, Table};
 use tcec::experiments;
-use tcec::perfmodel::ALL_GPUS;
+use tcec::gemm::Method;
+use tcec::perfmodel::{projected_cluster_tflops, projected_tflops, ClusterTopology, ALL_GPUS};
+
+/// The fig. 14 series, mirroring `experiments::fig14`'s column set.
+const SERIES: [(&str, Method); 5] = [
+    ("cutlass_halfhalf", Method::OursHalfHalf),
+    ("cutlass_tf32tf32", Method::OursTf32),
+    ("cublas_simt(FP32)", Method::Fp32Simt),
+    ("cublas_fp16tc", Method::Fp16Tc),
+    ("cublas_tf32tc", Method::Tf32Tc),
+];
 
 fn main() {
+    let smoke = tcec::bench_util::smoke();
+    let json = json_mode();
+    let sizes: Vec<usize> =
+        if smoke { vec![256, 4096] } else { vec![256, 512, 1024, 2048, 4096, 8192, 16384] };
+
+    if json {
+        // Node counts for the projected multi-instance curve (the shape
+        // `benches/cluster_scaling.rs` executes in-process).
+        let node_counts = [1usize, 2, 4, 8];
+        let mut gpu_rows: Vec<String> = Vec::new();
+        for gpu in &ALL_GPUS {
+            let mut method_rows: Vec<String> = Vec::new();
+            for (name, method) in SERIES {
+                let tflops: Vec<String> = sizes
+                    .iter()
+                    .map(|&n| format!("{}", projected_tflops(gpu, method, n)))
+                    .collect();
+                method_rows.push(
+                    JsonObj::new()
+                        .str("method", name)
+                        .raw("tflops", &json_array(&tflops))
+                        .finish(),
+                );
+            }
+            let biggest = sizes.last().copied().unwrap_or(4096);
+            let cluster_rows: Vec<String> = node_counts
+                .iter()
+                .map(|&n| {
+                    let topo = ClusterTopology::with_nodes(n);
+                    JsonObj::new()
+                        .int("nodes", n as u64)
+                        .num("speedup", topo.speedup())
+                        .num(
+                            "halfhalf_tflops",
+                            projected_cluster_tflops(gpu, Method::OursHalfHalf, biggest, &topo),
+                        )
+                        .finish()
+                })
+                .collect();
+            let size_strs: Vec<String> = sizes.iter().map(|s| s.to_string()).collect();
+            gpu_rows.push(
+                JsonObj::new()
+                    .str("gpu", gpu.name)
+                    .num("fp16_tc_tflops", gpu.fp16_tc_tflops)
+                    .num("tf32_tc_tflops", gpu.tf32_tc_tflops)
+                    .num("fp32_tflops", gpu.fp32_tflops)
+                    .raw("sizes", &json_array(&size_strs))
+                    .raw("methods", &json_array(&method_rows))
+                    .raw("cluster_projection", &json_array(&cluster_rows))
+                    .finish(),
+            );
+        }
+        println!(
+            "{}",
+            JsonObj::new()
+                .str("bench", "fig14_throughput_gpus")
+                .bool("smoke", smoke)
+                .str("note", "projections from perfmodel (DESIGN.md §2), not measurements")
+                .raw("gpus", &json_array(&gpu_rows))
+                .finish()
+        );
+        return;
+    }
+
     println!("== Table 5: GPU specifications ==\n");
     let mut t = Table::new(&[
         "gpu",
@@ -35,11 +113,6 @@ fn main() {
     }
     t.print();
 
-    let sizes: Vec<usize> = if tcec::bench_util::smoke() {
-        vec![256, 4096]
-    } else {
-        vec![256, 512, 1024, 2048, 4096, 8192, 16384]
-    };
     for gpu in &ALL_GPUS {
         println!("\n== Figure 14 ({}): projected TFlop/s (model, DESIGN.md §2) ==\n", gpu.name);
         experiments::fig14(gpu, &sizes).print();

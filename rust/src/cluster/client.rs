@@ -1,0 +1,665 @@
+//! [`ClusterClient`], [`ClusterSession`], [`ClusterCall`] and
+//! [`ClusterTicket`] — the cluster-facing mirror of `api::Client` /
+//! `Session` / `GemmCall` / `Ticket` (DESIGN.md §15).
+//!
+//! The surface is deliberately isomorphic to the single-node API: the same
+//! call builder knobs (policy, deadline, priority, tag), the same
+//! consuming ticket state machine (`wait` / `wait_timeout` / `try_get` /
+//! `cancel`), the same `GemmResult` and `ServiceError` taxonomy. What the
+//! cluster adds lives entirely between submit and resolve:
+//!
+//! * **placement** — the routing key is the weight fingerprint of `B`
+//!   ([`crate::planner::sampled_fingerprint`]); the ring maps it to a
+//!   preference list of R distinct replicas, healthy members first (except
+//!   on probe turns, which keep raw ring order so an unhealthy owner still
+//!   sees traffic and can recover);
+//! * **failover** — a submit-time `QueueFull` shed or a reply-time
+//!   `ExecutorFailed` / `ShuttingDown` moves the attempt to the next
+//!   replica, re-submitting from the retained operands with the remaining
+//!   deadline budget. Because every node computes bit-identically, the
+//!   moved request returns the same bytes the dead node would have;
+//! * **hedging** — under [`HedgePolicy::After`] / [`HedgePolicy::P99`] a
+//!   duplicate attempt launches on the next replica once the primary has
+//!   been outstanding past its budget; the first resolution wins and the
+//!   loser is cancelled;
+//! * **exactly-once accounting** — however many attempts run, the logical
+//!   request increments `requests` once at admission and exactly one of
+//!   `completed` / `failed` / `expired` / `cancelled` at resolution (an
+//!   abandoned pending ticket resolves as cancelled via `Drop`), so the
+//!   ledger identity holds at cluster scope with hedges excluded by
+//!   construction — a hedge win counts the *request* completed once and
+//!   bumps only `hedge_wins` on top.
+
+use super::metrics::{ClusterMetrics, ClusterSnapshot, NodeSnapshot};
+use super::node::Node;
+use super::quota::TenantQuotas;
+use super::ring::HashRing;
+use super::{ClusterConfig, HedgePolicy};
+use crate::api::client::CallOptions;
+use crate::api::{CancelToken, GemmResult, Priority, ServiceError, Ticket};
+use crate::coordinator::{GemmOutcome, Policy};
+use crate::gemm::Mat;
+use crate::planner::sampled_fingerprint;
+use crate::telemetry::Stage;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Poll granularity of the hedged wait loop. Hedge budgets are stage-p99
+/// sums (tens of microseconds at the smallest), so 100 µs resolution is
+/// fine-grained enough while keeping the loop cheap.
+const SPIN: Duration = Duration::from_micros(100);
+
+/// Shared state behind every cluster handle.
+pub(crate) struct ClusterInner {
+    nodes: Vec<Node>,
+    ring: HashRing,
+    cfg: ClusterConfig,
+    metrics: Arc<ClusterMetrics>,
+    quotas: Option<TenantQuotas>,
+    probe_ctr: AtomicU64,
+}
+
+impl ClusterInner {
+    /// The routing key of a call: the (sampled) content fingerprint of the
+    /// weight operand `B` — the same bytes-in-same-key function on every
+    /// handle and across rebuilds, which is what makes placement
+    /// deterministic and cache-affine.
+    fn route_key(&self, b: &Mat) -> u128 {
+        sampled_fingerprint(&b.data, self.cfg.route_probe)
+    }
+
+    /// Replica set of one key in static ring order (health-blind).
+    fn replica_set(&self, b: &Mat) -> Vec<usize> {
+        self.ring
+            .route(self.route_key(b), self.cfg.replication.max(1))
+            .into_iter()
+            .map(|m| m as usize)
+            .collect()
+    }
+
+    /// Preference list for one submission: the replica set, stably
+    /// reordered healthy-first — except every `probe_every`-th submission,
+    /// which keeps raw ring order so a deprioritized owner still sees a
+    /// request and can flip back to healthy on success.
+    fn prefs_for(&self, b: &Mat) -> Vec<usize> {
+        let prefs = self.replica_set(b);
+        let probe_turn = self.cfg.probe_every > 0
+            && self.probe_ctr.fetch_add(1, Ordering::Relaxed) % self.cfg.probe_every as u64 == 0;
+        if probe_turn {
+            return prefs;
+        }
+        let is_healthy = |i: usize| self.nodes.get(i).is_some_and(Node::is_healthy);
+        let mut ordered: Vec<usize> = prefs.iter().copied().filter(|&i| is_healthy(i)).collect();
+        ordered.extend(prefs.iter().copied().filter(|&i| !is_healthy(i)));
+        ordered
+    }
+
+    fn node(&self, nid: usize) -> Option<&Node> {
+        self.nodes.get(nid)
+    }
+}
+
+/// Shared-ownership handle to a running cluster. Mirrors `api::Client`.
+#[derive(Clone)]
+pub struct ClusterClient {
+    inner: Arc<ClusterInner>,
+}
+
+impl ClusterClient {
+    pub(crate) fn from_parts(nodes: Vec<Node>, cfg: ClusterConfig) -> ClusterClient {
+        let ring = HashRing::new(nodes.len(), cfg.vnodes);
+        let quotas = cfg.quota.map(TenantQuotas::new);
+        ClusterClient {
+            inner: Arc::new(ClusterInner {
+                nodes,
+                ring,
+                cfg,
+                metrics: Arc::new(ClusterMetrics::new()),
+                quotas,
+                probe_ctr: AtomicU64::new(1),
+            }),
+        }
+    }
+
+    /// Start building one GEMM call (`C = A·B`) against the cluster.
+    pub fn call(&self, a: Mat, b: Mat) -> ClusterCall {
+        ClusterCall { inner: Arc::clone(&self.inner), a, b, opts: CallOptions::default() }
+    }
+
+    /// A new session over this cluster with no defaults set.
+    pub fn session(&self) -> ClusterSession {
+        ClusterSession { inner: Arc::clone(&self.inner), defaults: CallOptions::default() }
+    }
+
+    /// The member nodes, in ring-id order.
+    pub fn nodes(&self) -> &[Node] {
+        &self.inner.nodes
+    }
+
+    /// The cluster-scope ledger.
+    pub fn metrics(&self) -> Arc<ClusterMetrics> {
+        Arc::clone(&self.inner.metrics)
+    }
+
+    /// The static placement of a weight matrix: the replica set (node
+    /// indices, preference order) the ring assigns its fingerprint,
+    /// ignoring health and probing. Deterministic across handles and
+    /// rebuilds — the property the router determinism tests pin.
+    pub fn route_of(&self, b: &Mat) -> Vec<usize> {
+        self.inner.replica_set(b)
+    }
+
+    /// Cluster counters plus one full snapshot per node (the source of
+    /// truth behind the `node`-labeled exposition).
+    pub fn snapshot(&self) -> ClusterSnapshot {
+        let nodes = self
+            .inner
+            .nodes
+            .iter()
+            .map(|n| {
+                let execute_p99 = n
+                    .service()
+                    .tracer()
+                    .map(|t| {
+                        let ns: u64 = t
+                            .stage_stats()
+                            .iter()
+                            .filter(|s| s.stage == Stage::Execute)
+                            .map(|s| s.p99_ns)
+                            .sum();
+                        Duration::from_nanos(ns)
+                    })
+                    .unwrap_or_default();
+                NodeSnapshot {
+                    name: n.name().to_string(),
+                    healthy: n.is_healthy(),
+                    execute_p99,
+                    service: n.service().metrics().snapshot(),
+                }
+            })
+            .collect();
+        ClusterSnapshot { counters: self.inner.metrics.snapshot_counters(), nodes }
+    }
+
+    /// Stop admission on every node (in-flight work drains).
+    pub fn close(&self) {
+        for n in &self.inner.nodes {
+            n.service().close();
+        }
+    }
+
+    /// Close every node, then release this handle. Each node service joins
+    /// its threads when its last owner drops (`GemmService: Drop`), so a
+    /// sole-owner shutdown is a full join.
+    pub fn shutdown(self) {
+        self.close();
+    }
+}
+
+/// A bundle of per-call defaults over one cluster. Mirrors `api::Session`.
+#[derive(Clone)]
+pub struct ClusterSession {
+    inner: Arc<ClusterInner>,
+    defaults: CallOptions,
+}
+
+impl ClusterSession {
+    /// Default accuracy policy for calls of this session.
+    pub fn policy(mut self, policy: Policy) -> ClusterSession {
+        self.defaults.policy = Some(policy);
+        self
+    }
+
+    /// Default relative deadline for calls of this session.
+    pub fn deadline(mut self, deadline: Duration) -> ClusterSession {
+        self.defaults.deadline = Some(deadline);
+        self
+    }
+
+    /// Default intake lane for calls of this session.
+    pub fn priority(mut self, priority: Priority) -> ClusterSession {
+        self.defaults.priority = priority;
+        self
+    }
+
+    /// Default tag — also the tenant key of the quota ledger.
+    pub fn tag(mut self, tag: impl Into<Arc<str>>) -> ClusterSession {
+        self.defaults.tag = Some(tag.into());
+        self
+    }
+
+    /// Start building a call seeded with this session's defaults.
+    pub fn call(&self, a: Mat, b: Mat) -> ClusterCall {
+        ClusterCall { inner: Arc::clone(&self.inner), a, b, opts: self.defaults.clone() }
+    }
+}
+
+/// Builder for one clustered GEMM call. Terminal operations:
+/// [`ClusterCall::submit`] or [`ClusterCall::wait`].
+#[must_use = "a ClusterCall does nothing until submit() or wait()"]
+pub struct ClusterCall {
+    inner: Arc<ClusterInner>,
+    a: Mat,
+    b: Mat,
+    opts: CallOptions,
+}
+
+impl ClusterCall {
+    /// Accuracy policy for this call (default: `Policy::Fp32Accuracy`).
+    pub fn policy(mut self, policy: Policy) -> Self {
+        self.opts.policy = Some(policy);
+        self
+    }
+
+    /// Relative deadline, enforced end-to-end: failover re-submissions and
+    /// hedges receive only the remaining budget.
+    pub fn deadline(mut self, deadline: Duration) -> Self {
+        self.opts.deadline = Some(deadline);
+        self
+    }
+
+    /// Intake lane on whichever node serves the call.
+    pub fn priority(mut self, priority: Priority) -> Self {
+        self.opts.priority = priority;
+        self
+    }
+
+    /// Free-form label echoed back in `GemmOutcome::tag`; doubles as the
+    /// tenant key when per-tenant quotas are configured.
+    pub fn tag(mut self, tag: impl Into<Arc<str>>) -> Self {
+        self.opts.tag = Some(tag.into());
+        self
+    }
+
+    /// Admit the call: spend a quota token, route by weight fingerprint,
+    /// and submit to the first replica that accepts (submit-time sheds
+    /// fail over to the next replica synchronously). Returns the last
+    /// replica's error when every replica refused; `InvalidShape` is
+    /// terminal immediately (no node would accept it).
+    pub fn submit(self) -> Result<ClusterTicket, ServiceError> {
+        let ClusterCall { inner, a, b, opts } = self;
+        if let Some(q) = &inner.quotas {
+            if !q.try_acquire(opts.tag.as_deref(), Instant::now()) {
+                inner.metrics.on_quota_rejected();
+                inner.metrics.on_rejected();
+                return Err(ServiceError::QueueFull { queue_cap: q.burst() as usize });
+            }
+        }
+        let mut pending = inner.prefs_for(&b);
+        let retain = pending.len() > 1 || !matches!(inner.cfg.hedge, HedgePolicy::Off);
+        let submitted = Instant::now();
+        let mut admitted: Option<(usize, Ticket)> = None;
+        let mut last_err = ServiceError::ShuttingDown;
+        while !pending.is_empty() {
+            let nid = pending.remove(0);
+            let Some(node) = inner.node(nid) else { continue };
+            match node.service().submit_call(a.clone(), b.clone(), opts.clone()) {
+                Ok(t) => {
+                    admitted = Some((nid, t));
+                    break;
+                }
+                Err(e) => {
+                    if matches!(&e, ServiceError::InvalidShape { .. }) {
+                        return Err(e);
+                    }
+                    if matches!(&e, ServiceError::QueueFull { .. }) {
+                        inner.metrics.on_shed();
+                        node.note_shed(inner.cfg.shed_unhealthy_after);
+                    } else if matches!(&e, ServiceError::ShuttingDown) {
+                        node.mark_failed();
+                    }
+                    last_err = e;
+                }
+            }
+        }
+        let Some((nid, ticket)) = admitted else {
+            inner.metrics.on_rejected();
+            return Err(last_err);
+        };
+        inner.metrics.on_request();
+        let id = inner.metrics.next_id();
+        let deadline = opts.deadline;
+        let cancel = CancelToken::new();
+        Ok(ClusterTicket {
+            inner,
+            id,
+            submitted,
+            deadline,
+            opts,
+            retained: retain.then(|| (a, b)),
+            prefs: pending,
+            primary: Some((nid, ticket)),
+            hedge: None,
+            cancel,
+            finalized: false,
+        })
+    }
+
+    /// Admit and block for the reply: `submit()` + `ClusterTicket::wait()`.
+    pub fn wait(self) -> GemmResult {
+        self.submit().and_then(|t| t.wait())
+    }
+}
+
+/// Handle to one admitted clustered GEMM call — the *logical* request.
+/// Child `api::Ticket`s (the primary attempt, failover re-submissions, at
+/// most one live hedge) are owned and driven internally; the caller sees
+/// one consuming state machine identical to the single-node `Ticket`.
+#[must_use = "a ClusterTicket holds the only handle to the call's result"]
+pub struct ClusterTicket {
+    inner: Arc<ClusterInner>,
+    id: u64,
+    submitted: Instant,
+    deadline: Option<Duration>,
+    opts: CallOptions,
+    retained: Option<(Mat, Mat)>,
+    /// Replicas not yet attempted, in preference order.
+    prefs: Vec<usize>,
+    primary: Option<(usize, Ticket)>,
+    hedge: Option<(usize, Ticket)>,
+    cancel: CancelToken,
+    finalized: bool,
+}
+
+impl ClusterTicket {
+    /// The cluster-assigned logical request id (matches the resolved
+    /// `GemmOutcome::id`, whichever node computed it).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// When the call was admitted by the cluster.
+    pub fn submitted_at(&self) -> Instant {
+        self.submitted
+    }
+
+    /// Request cancellation of the logical request and every live attempt.
+    /// Best-effort with the same race semantics as `api::Ticket::cancel`.
+    pub fn cancel(&self) {
+        self.cancel.cancel();
+        self.cancel_children();
+    }
+
+    /// A cancellation handle that outlives this ticket.
+    pub fn cancel_token(&self) -> CancelToken {
+        self.cancel.clone()
+    }
+
+    /// Block until the logical request resolves. Failover and hedging run
+    /// inside this call; `ExecutorFailed` is returned only when every
+    /// replica in the preference list failed.
+    pub fn wait(mut self) -> GemmResult {
+        loop {
+            // Fast path: with hedging off at most one attempt is ever
+            // outstanding — block on it instead of polling.
+            if matches!(self.inner.cfg.hedge, HedgePolicy::Off) {
+                if let Some((nid, t)) = self.primary.take() {
+                    let res = t.wait();
+                    if let Some(r) = self.settle(nid, res, false) {
+                        return r;
+                    }
+                    continue;
+                }
+            }
+            if let Some(r) = self.poll_once() {
+                return r;
+            }
+            thread::sleep(SPIN);
+        }
+    }
+
+    /// Like [`ClusterTicket::wait`] with a local patience bound:
+    /// `Ok(result)` when resolved within `timeout`, `Err(self)` otherwise.
+    pub fn wait_timeout(mut self, timeout: Duration) -> Result<GemmResult, ClusterTicket> {
+        let start = Instant::now();
+        loop {
+            if let Some(r) = self.poll_once() {
+                return Ok(r);
+            }
+            if start.elapsed() >= timeout {
+                return Err(self);
+            }
+            thread::sleep(SPIN);
+        }
+    }
+
+    /// Non-blocking poll: `Ok(result)` when already resolved (driving one
+    /// step of failover/hedging if due), `Err(self)` while pending.
+    pub fn try_get(mut self) -> Result<GemmResult, ClusterTicket> {
+        match self.poll_once() {
+            Some(r) => Ok(r),
+            None => Err(self),
+        }
+    }
+
+    /// One scheduling step: check cancellation, poll both attempts, settle
+    /// whatever resolved, and launch a hedge if its budget elapsed.
+    /// Returns the terminal result once the logical request resolves.
+    fn poll_once(&mut self) -> Option<GemmResult> {
+        if self.cancel.is_cancelled() {
+            self.cancel_children();
+            return Some(self.finalize_err(ServiceError::Cancelled));
+        }
+        if let Some((nid, t)) = self.primary.take() {
+            match t.try_get() {
+                Ok(res) => {
+                    if let Some(r) = self.settle(nid, res, false) {
+                        return Some(r);
+                    }
+                }
+                Err(t) => self.primary = Some((nid, t)),
+            }
+        }
+        if let Some((nid, t)) = self.hedge.take() {
+            match t.try_get() {
+                Ok(res) => {
+                    if let Some(r) = self.settle(nid, res, true) {
+                        return Some(r);
+                    }
+                }
+                Err(t) => self.hedge = Some((nid, t)),
+            }
+        }
+        if self.primary.is_none() && self.hedge.is_none() {
+            // Unreachable by construction (settle refills or finalizes),
+            // kept as a terminal backstop so the loop can never spin on a
+            // ticket with no live attempt.
+            return Some(self.finalize_exhausted(ServiceError::ShuttingDown));
+        }
+        self.maybe_hedge();
+        None
+    }
+
+    /// Resolve one attempt's reply. `None` means the logical request is
+    /// still in flight (the other attempt lives, or a failover
+    /// re-submission was admitted); `Some` is the terminal result.
+    fn settle(&mut self, nid: usize, res: GemmResult, was_hedge: bool) -> Option<GemmResult> {
+        match res {
+            Ok(out) => {
+                if let Some(n) = self.inner.node(nid) {
+                    n.mark_ok();
+                }
+                Some(self.finalize_ok(out, was_hedge))
+            }
+            Err(e) => {
+                let other_live =
+                    if was_hedge { self.primary.is_some() } else { self.hedge.is_some() };
+                if matches!(&e, ServiceError::ExecutorFailed { .. } | ServiceError::ShuttingDown)
+                {
+                    if let Some(n) = self.inner.node(nid) {
+                        n.mark_failed();
+                    }
+                    if other_live || self.resubmit() {
+                        return None;
+                    }
+                    return Some(self.finalize_exhausted(e));
+                }
+                if matches!(&e, ServiceError::QueueFull { .. }) {
+                    if let Some(n) = self.inner.node(nid) {
+                        n.note_shed(self.inner.cfg.shed_unhealthy_after);
+                    }
+                    self.inner.metrics.on_shed();
+                    if other_live || self.resubmit() {
+                        return None;
+                    }
+                    return Some(self.finalize_exhausted(e));
+                }
+                if matches!(&e, ServiceError::DeadlineExceeded { .. }) && other_live {
+                    // This attempt ran out of budget but the other might
+                    // still make it; drop only this one.
+                    return None;
+                }
+                Some(self.finalize_err(e))
+            }
+        }
+    }
+
+    /// Fail the current attempt over to the next untried replica. Returns
+    /// `false` when no operands were retained, no replica remains, or the
+    /// deadline budget is exhausted.
+    fn resubmit(&mut self) -> bool {
+        let Some((ra, rb)) = self.retained.clone() else { return false };
+        while !self.prefs.is_empty() {
+            let nid = self.prefs.remove(0);
+            let Some(node) = self.inner.node(nid) else { continue };
+            let Some(opts) = self.remaining_opts() else { return false };
+            match node.service().submit_call(ra.clone(), rb.clone(), opts) {
+                Ok(t) => {
+                    self.primary = Some((nid, t));
+                    self.inner.metrics.on_failover();
+                    return true;
+                }
+                Err(e) => {
+                    if matches!(&e, ServiceError::QueueFull { .. }) {
+                        self.inner.metrics.on_shed();
+                        node.note_shed(self.inner.cfg.shed_unhealthy_after);
+                    } else if matches!(&e, ServiceError::ShuttingDown) {
+                        node.mark_failed();
+                    }
+                }
+            }
+        }
+        false
+    }
+
+    /// Launch the hedge attempt once the policy's budget has elapsed and a
+    /// replica remains to hedge onto.
+    fn maybe_hedge(&mut self) {
+        if self.hedge.is_some() || self.primary.is_none() || self.prefs.is_empty() {
+            return;
+        }
+        let budget = match self.inner.cfg.hedge {
+            HedgePolicy::Off => return,
+            HedgePolicy::After(d) => d,
+            HedgePolicy::P99 { floor } => self
+                .primary
+                .as_ref()
+                .and_then(|(nid, _)| self.inner.node(*nid))
+                .map(|n| n.p99_budget(floor))
+                .unwrap_or(floor),
+        };
+        if self.submitted.elapsed() < budget {
+            return;
+        }
+        let Some((ra, rb)) = self.retained.clone() else { return };
+        while !self.prefs.is_empty() {
+            let nid = self.prefs.remove(0);
+            let Some(node) = self.inner.node(nid) else { continue };
+            let Some(opts) = self.remaining_opts() else { return };
+            match node.service().submit_call(ra.clone(), rb.clone(), opts) {
+                Ok(t) => {
+                    self.hedge = Some((nid, t));
+                    self.inner.metrics.on_hedge();
+                    return;
+                }
+                Err(e) => {
+                    if matches!(&e, ServiceError::QueueFull { .. }) {
+                        self.inner.metrics.on_shed();
+                        node.note_shed(self.inner.cfg.shed_unhealthy_after);
+                    } else if matches!(&e, ServiceError::ShuttingDown) {
+                        node.mark_failed();
+                    }
+                }
+            }
+        }
+    }
+
+    /// The call options for a follow-up attempt: the original knobs with
+    /// the deadline rebased to the remaining end-to-end budget. `None`
+    /// when the budget is already spent.
+    fn remaining_opts(&self) -> Option<CallOptions> {
+        let mut opts = self.opts.clone();
+        if let Some(d) = self.deadline {
+            let rem = d.checked_sub(self.submitted.elapsed())?;
+            if rem.is_zero() {
+                return None;
+            }
+            opts.deadline = Some(rem);
+        }
+        Some(opts)
+    }
+
+    fn cancel_children(&self) {
+        if let Some((_, t)) = &self.primary {
+            t.cancel();
+        }
+        if let Some((_, t)) = &self.hedge {
+            t.cancel();
+        }
+    }
+
+    /// Terminal success: count `completed` exactly once, rebrand the
+    /// outcome with the cluster-logical id, cancel the losing attempt.
+    fn finalize_ok(&mut self, mut out: GemmOutcome, was_hedge: bool) -> GemmResult {
+        self.finalized = true;
+        self.cancel_children();
+        out.id = self.id;
+        self.inner.metrics.on_completed();
+        if was_hedge {
+            self.inner.metrics.on_hedge_win();
+        }
+        Ok(out)
+    }
+
+    /// Terminal failure: count exactly one of expired / cancelled /
+    /// failed, by the error's variant.
+    fn finalize_err(&mut self, e: ServiceError) -> GemmResult {
+        self.finalized = true;
+        self.cancel_children();
+        if matches!(&e, ServiceError::DeadlineExceeded { .. }) {
+            self.inner.metrics.on_expired();
+        } else if matches!(&e, ServiceError::Cancelled) {
+            self.inner.metrics.on_cancelled();
+        } else {
+            self.inner.metrics.on_failed();
+        }
+        Err(e)
+    }
+
+    /// Terminal failure after failover came up empty: when the end-to-end
+    /// deadline is the real reason no replica could take the retry, report
+    /// (and count) expiry rather than the last node's error.
+    fn finalize_exhausted(&mut self, e: ServiceError) -> GemmResult {
+        let waited = self.submitted.elapsed();
+        if self.deadline.is_some_and(|d| waited >= d) {
+            return self.finalize_err(ServiceError::DeadlineExceeded { waited });
+        }
+        self.finalize_err(e)
+    }
+}
+
+impl Drop for ClusterTicket {
+    /// Abandoning a pending logical request resolves it as cancelled —
+    /// the one remaining path to a terminal counter, which is what keeps
+    /// the cluster ledger identity unconditional.
+    fn drop(&mut self) {
+        if self.finalized {
+            return;
+        }
+        self.finalized = true;
+        self.cancel_children();
+        self.inner.metrics.on_cancelled();
+    }
+}

@@ -1,0 +1,352 @@
+//! Cluster-scope accounting and the `node`-labeled Prometheus exposition
+//! (DESIGN.md §15).
+//!
+//! Two ledgers exist on purpose. Each node's own `coordinator::Metrics`
+//! counts every *attempt* it serves — including hedge duplicates and
+//! failover re-submissions, which really did consume that node's queue and
+//! workers. The cluster ledger counts every *logical request* exactly
+//! once: admitted at submit, resolved at exactly one of
+//! completed/failed/expired/cancelled, no matter how many attempts it took
+//! or which replica won. The invariant
+//!
+//! ```text
+//! requests == completed + failed + expired + cancelled
+//! ```
+//!
+//! therefore holds at cluster scope with hedges structurally excluded
+//! (they are attempts, not requests); `rejected` counts submissions that
+//! never became requests (quota or every replica shedding), mirroring the
+//! single-node ledger's treatment of `QueueFull`.
+//!
+//! Counter updates use relaxed atomics for the same reviewed reason as
+//! `coordinator::metrics`: independent monotonic counters, no
+//! publication ordering, snapshot tearing tolerated by every consumer.
+//!
+//! The exposition renders the cluster families first, then every per-node
+//! family with a `node` label (`node="node0"`, ...). Family names are a
+//! stable schema pinned byte-for-byte by
+//! `rust/tests/golden/cluster_metrics.prom`, and tclint's metric-name rule
+//! checks every `tcec_*` literal in this module against the golden set.
+
+use crate::coordinator::Snapshot;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Cluster-scope counters (shared by the client handles and every ticket).
+#[derive(Debug, Default)]
+pub struct ClusterMetrics {
+    seq: AtomicU64,
+    requests: AtomicU64,
+    completed: AtomicU64,
+    failed: AtomicU64,
+    expired: AtomicU64,
+    cancelled: AtomicU64,
+    rejected: AtomicU64,
+    quota_rejected: AtomicU64,
+    sheds: AtomicU64,
+    failovers: AtomicU64,
+    hedges: AtomicU64,
+    hedge_wins: AtomicU64,
+}
+
+impl ClusterMetrics {
+    /// A zeroed ledger.
+    pub fn new() -> ClusterMetrics {
+        ClusterMetrics::default()
+    }
+
+    /// Next cluster-logical request id (monotonic, process-local).
+    pub(crate) fn next_id(&self) -> u64 {
+        self.seq.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// One logical request admitted.
+    pub(crate) fn on_request(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One logical request resolved with a computed outcome.
+    pub(crate) fn on_completed(&self) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One logical request resolved with a terminal failure.
+    pub(crate) fn on_failed(&self) {
+        self.failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One logical request resolved by deadline expiry.
+    pub(crate) fn on_expired(&self) {
+        self.expired.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One logical request resolved by cancellation (or abandonment).
+    pub(crate) fn on_cancelled(&self) {
+        self.cancelled.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One submission rejected before it became a request.
+    pub(crate) fn on_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One rejection specifically due to an empty tenant bucket.
+    pub(crate) fn on_quota_rejected(&self) {
+        self.quota_rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One per-attempt `QueueFull` shed absorbed by failover.
+    pub(crate) fn on_shed(&self) {
+        self.sheds.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One attempt moved to the next replica.
+    pub(crate) fn on_failover(&self) {
+        self.failovers.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One hedge attempt launched.
+    pub(crate) fn on_hedge(&self) {
+        self.hedges.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One logical request whose hedge resolved first.
+    pub(crate) fn on_hedge_win(&self) {
+        self.hedge_wins.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Point-in-time copy of the cluster-scope counters (per-node
+    /// snapshots are attached by `ClusterClient::snapshot`).
+    pub fn snapshot_counters(&self) -> ClusterCounters {
+        ClusterCounters {
+            requests: self.requests.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            expired: self.expired.load(Ordering::Relaxed),
+            cancelled: self.cancelled.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            quota_rejected: self.quota_rejected.load(Ordering::Relaxed),
+            sheds: self.sheds.load(Ordering::Relaxed),
+            failovers: self.failovers.load(Ordering::Relaxed),
+            hedges: self.hedges.load(Ordering::Relaxed),
+            hedge_wins: self.hedge_wins.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// The cluster-scope counter block of a [`ClusterSnapshot`].
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ClusterCounters {
+    /// Logical requests admitted (each counted once; hedges excluded).
+    pub requests: u64,
+    /// Logical requests resolved with a computed outcome.
+    pub completed: u64,
+    /// Logical requests resolved with a terminal failure.
+    pub failed: u64,
+    /// Logical requests resolved by deadline expiry.
+    pub expired: u64,
+    /// Logical requests resolved by cancellation (abandonment included).
+    pub cancelled: u64,
+    /// Submissions rejected before admission (never became requests).
+    pub rejected: u64,
+    /// Rejections specifically due to an empty tenant token bucket.
+    pub quota_rejected: u64,
+    /// Per-attempt `QueueFull` sheds absorbed by failover.
+    pub sheds: u64,
+    /// Attempts moved to the next replica after a shed or node failure.
+    pub failovers: u64,
+    /// Hedge attempts launched after a node's p99 budget elapsed.
+    pub hedges: u64,
+    /// Logical requests whose hedge resolved first.
+    pub hedge_wins: u64,
+}
+
+/// One node's contribution to a [`ClusterSnapshot`].
+#[derive(Debug, Clone)]
+pub struct NodeSnapshot {
+    /// Stable node name (`node0`, ...) — the `node` label value.
+    pub name: String,
+    /// Router-visible health at snapshot time.
+    pub healthy: bool,
+    /// Execute-stage p99 from the node's telemetry histograms (zero when
+    /// telemetry is off or no span has landed).
+    pub execute_p99: Duration,
+    /// The node service's full single-node snapshot.
+    pub service: Snapshot,
+}
+
+/// Cluster counters plus every member's node snapshot.
+#[derive(Debug, Clone)]
+pub struct ClusterSnapshot {
+    /// The cluster-scope ledger.
+    pub counters: ClusterCounters,
+    /// Per-node snapshots, in member order.
+    pub nodes: Vec<NodeSnapshot>,
+}
+
+impl ClusterSnapshot {
+    /// The exactly-once identity: every admitted logical request resolved
+    /// through exactly one terminal counter.
+    pub fn identity_holds(&self) -> bool {
+        let c = &self.counters;
+        c.requests == c.completed + c.failed + c.expired + c.cancelled
+    }
+
+    /// Render the cluster exposition: cluster families first, then the
+    /// per-node families with a `node` label. Family names and formats are
+    /// a stable contract (`rust/tests/golden/cluster_metrics.prom`).
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::with_capacity(4096 + self.nodes.len() * 1024);
+        let c = &self.counters;
+        family(&mut out, "tcec_cluster_requests_total", "counter",
+            "Logical requests admitted (each counted once; hedges excluded).", c.requests);
+        family(&mut out, "tcec_cluster_completed_total", "counter",
+            "Logical requests resolved with a computed outcome.", c.completed);
+        family(&mut out, "tcec_cluster_failed_total", "counter",
+            "Logical requests resolved with a terminal failure.", c.failed);
+        family(&mut out, "tcec_cluster_expired_total", "counter",
+            "Logical requests resolved by deadline expiry.", c.expired);
+        family(&mut out, "tcec_cluster_cancelled_total", "counter",
+            "Logical requests resolved by cancellation.", c.cancelled);
+        family(&mut out, "tcec_cluster_rejected_total", "counter",
+            "Submissions rejected before admission (quota or every replica shedding).",
+            c.rejected);
+        family(&mut out, "tcec_cluster_quota_rejected_total", "counter",
+            "Rejections due to an empty tenant token bucket.", c.quota_rejected);
+        family(&mut out, "tcec_cluster_sheds_total", "counter",
+            "Per-attempt QueueFull sheds absorbed by failover.", c.sheds);
+        family(&mut out, "tcec_cluster_failovers_total", "counter",
+            "Attempts moved to the next replica after a shed or node failure.", c.failovers);
+        family(&mut out, "tcec_cluster_hedges_total", "counter",
+            "Hedge attempts launched after a node's p99 budget elapsed.", c.hedges);
+        family(&mut out, "tcec_cluster_hedge_wins_total", "counter",
+            "Logical requests whose hedge resolved first.", c.hedge_wins);
+        family(&mut out, "tcec_cluster_nodes", "gauge",
+            "Member nodes on the ring.", self.nodes.len() as u64);
+
+        per_node(&mut out, "tcec_node_healthy", "gauge",
+            "Router-visible node health (1 healthy, 0 deprioritized).", &self.nodes,
+            |n| (n.healthy as u64).to_string());
+        per_node(&mut out, "tcec_node_execute_p99_seconds", "gauge",
+            "Node execute-stage p99 (log-bucket upper bound).", &self.nodes,
+            |n| secs(n.execute_p99.as_nanos() as u64));
+        per_node(&mut out, "tcec_node_requests_total", "counter",
+            "Attempts admitted by this node (hedges and failover retries included).",
+            &self.nodes, |n| n.service.requests.to_string());
+        per_node(&mut out, "tcec_node_completed_total", "counter",
+            "Attempts this node completed.", &self.nodes,
+            |n| n.service.completed.to_string());
+        per_node(&mut out, "tcec_node_failed_total", "counter",
+            "Attempts this node failed by executor panic.", &self.nodes,
+            |n| n.service.failed.to_string());
+        per_node(&mut out, "tcec_node_rejected_total", "counter",
+            "Attempts this node load-shed at admission.", &self.nodes,
+            |n| n.service.rejected.to_string());
+        per_node(&mut out, "tcec_node_expired_total", "counter",
+            "Attempts this node dropped on deadline expiry.", &self.nodes,
+            |n| n.service.expired.to_string());
+        per_node(&mut out, "tcec_node_cancelled_total", "counter",
+            "Attempts this node dropped on cancellation.", &self.nodes,
+            |n| n.service.cancelled.to_string());
+        per_node(&mut out, "tcec_node_batches_total", "counter",
+            "Batches this node handed to a worker.", &self.nodes,
+            |n| n.service.batches.to_string());
+        per_node(&mut out, "tcec_node_flops_total", "counter",
+            "Useful flops this node completed.", &self.nodes,
+            |n| n.service.flops.to_string());
+        per_node(&mut out, "tcec_node_split_cache_hits_total", "counter",
+            "Split-cache hits on this node (warm-weight affinity).", &self.nodes,
+            |n| n.service.split_cache_hits.to_string());
+        per_node(&mut out, "tcec_node_split_cache_misses_total", "counter",
+            "Split-cache misses on this node.", &self.nodes,
+            |n| n.service.split_cache_misses.to_string());
+        out
+    }
+}
+
+/// `# HELP` + `# TYPE` header pair.
+fn header(out: &mut String, name: &str, kind: &str, help: &str) {
+    out.push_str("# HELP ");
+    out.push_str(name);
+    out.push(' ');
+    out.push_str(help);
+    out.push('\n');
+    out.push_str("# TYPE ");
+    out.push_str(name);
+    out.push(' ');
+    out.push_str(kind);
+    out.push('\n');
+}
+
+/// One single-sample family.
+fn family(out: &mut String, name: &str, kind: &str, help: &str, value: u64) {
+    header(out, name, kind, help);
+    out.push_str(name);
+    out.push(' ');
+    out.push_str(&value.to_string());
+    out.push('\n');
+}
+
+/// One family with a `node`-labeled sample per member.
+fn per_node(
+    out: &mut String,
+    name: &str,
+    kind: &str,
+    help: &str,
+    nodes: &[NodeSnapshot],
+    value: impl Fn(&NodeSnapshot) -> String,
+) {
+    header(out, name, kind, help);
+    for n in nodes {
+        out.push_str(name);
+        out.push_str("{node=\"");
+        out.push_str(&n.name);
+        out.push_str("\"} ");
+        out.push_str(&value(n));
+        out.push('\n');
+    }
+}
+
+/// Nanoseconds as fixed-point seconds (same format as the single-node
+/// exposition's latency samples).
+fn secs(ns: u64) -> String {
+    format!("{:.9}", ns as f64 / 1e9)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ledger_counts_each_event_once() {
+        let m = ClusterMetrics::new();
+        assert_eq!(m.next_id(), 0);
+        assert_eq!(m.next_id(), 1);
+        m.on_request();
+        m.on_request();
+        m.on_completed();
+        m.on_expired();
+        m.on_hedge();
+        m.on_shed();
+        let c = m.snapshot_counters();
+        assert_eq!((c.requests, c.completed, c.expired), (2, 1, 1));
+        assert_eq!((c.hedges, c.sheds, c.failed), (1, 1, 0));
+        let snap = ClusterSnapshot { counters: c, nodes: vec![] };
+        assert!(snap.identity_holds(), "2 == 1 completed + 1 expired");
+    }
+
+    #[test]
+    fn identity_rejects_double_count() {
+        let mut c = ClusterCounters { requests: 3, completed: 3, ..Default::default() };
+        c.cancelled = 1; // a hedge double-count would look like this
+        let snap = ClusterSnapshot { counters: c, nodes: vec![] };
+        assert!(!snap.identity_holds());
+    }
+
+    #[test]
+    fn secs_matches_exposition_format() {
+        assert_eq!(secs(1_023), "0.000001023");
+        assert_eq!(secs(0), "0.000000000");
+        assert_eq!(secs(2_000_000), "0.002000000");
+    }
+}

@@ -1,0 +1,225 @@
+//! L5: the multi-instance serving tier — N in-process `GemmService`
+//! nodes behind a fingerprint-affine router (DESIGN.md §15).
+//!
+//! The paper's throughput story (51 TFlop/s FP16-TC, 33 TFlop/s TF32-TC on
+//! one A100, §4.3 fig. 14) scales past one device only if repeated-weight
+//! traffic keeps hitting warm per-device state. This layer models exactly
+//! that deployment: each node owns a full single-node stack — planner,
+//! shard pool, split/probe/plan caches, telemetry, metrics — and the
+//! router places every request by the content fingerprint of its weight
+//! operand on a consistent-hash ring ([`HashRing`]), so the same weights
+//! keep returning to the node whose caches already hold their splits.
+//!
+//! On top of placement the cluster layers the reliability mechanics of a
+//! real serving fleet, all expressed in the existing `ServiceError`
+//! taxonomy: replication factor R with automatic failover (submit-time
+//! `QueueFull` sheds and reply-time `ExecutorFailed` / `ShuttingDown`
+//! move the attempt to the next replica), hedged retries after a per-node
+//! p99 budget read from the node's telemetry stage histograms
+//! ([`HedgePolicy`]), per-tenant token-bucket quotas keyed by call tag
+//! ([`QuotaConfig`]), and a cluster-scope ledger ([`ClusterMetrics`])
+//! whose exactly-once identity `requests == completed + failed + expired
+//! + cancelled` counts every logical request once with hedge duplicates
+//! structurally excluded.
+//!
+//! The invariant this repo lives by survives the new layer untouched:
+//! every node computes **bit-identically** (L2's deterministic engine, the
+//! same split/reduction order regardless of batching), so a request served
+//! by any replica — or moved mid-stream by failover — returns the same
+//! bytes as the single-node run. `rust/tests/cluster.rs` pins that for
+//! every corrected `Method` with a forced mid-stream node failure.
+//!
+//! ```
+//! use tcec::cluster::ClusterClient;
+//! use tcec::matgen::urand;
+//!
+//! let cluster = ClusterClient::builder().nodes(2).build_sim();
+//! let out = cluster
+//!     .call(urand(8, 8, -1.0, 1.0, 1), urand(8, 8, -1.0, 1.0, 2))
+//!     .tag("tenant-7")
+//!     .wait()
+//!     .expect("served");
+//! assert_eq!((out.c.rows, out.c.cols), (8, 8));
+//! assert!(cluster.snapshot().identity_holds());
+//! cluster.shutdown();
+//! ```
+
+pub mod client;
+pub mod metrics;
+pub mod node;
+pub mod quota;
+pub mod ring;
+
+pub use client::{ClusterCall, ClusterClient, ClusterSession, ClusterTicket};
+pub use metrics::{ClusterCounters, ClusterMetrics, ClusterSnapshot, NodeSnapshot};
+pub use node::Node;
+pub use quota::QuotaConfig;
+pub use ring::HashRing;
+
+use crate::api::ServiceBuilder;
+use crate::coordinator::{Executor, SimExecutor};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// When (if ever) to launch a duplicate attempt for a slow request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum HedgePolicy {
+    /// Never hedge (the default): at most one attempt is outstanding at a
+    /// time and waits block instead of polling.
+    #[default]
+    Off,
+    /// Hedge onto the next replica once the request has been outstanding
+    /// for a fixed budget.
+    After(Duration),
+    /// Hedge once the request has been outstanding past the primary
+    /// node's observed p99 (the sum of its telemetry stage p99s — a
+    /// pessimistic whole-pipeline bound), floored at `floor`. Without
+    /// telemetry the floor is the budget.
+    P99 {
+        /// Lower bound on the budget, and its entire value when the node
+        /// has no telemetry.
+        floor: Duration,
+    },
+}
+
+/// Cluster topology and policy knobs (builder-settable via
+/// [`ClusterBuilder`]).
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Member node count N (each a full `GemmService`; clamped to ≥ 1).
+    pub nodes: usize,
+    /// Replication factor R: how many distinct replicas a key routes to
+    /// (preference order; clamped to the member count at routing time).
+    pub replication: usize,
+    /// Virtual nodes per member on the hash ring. More vnodes flatten
+    /// placement imbalance at O(N·V·log(N·V)) rebuild cost.
+    pub vnodes: usize,
+    /// Hedged-retry policy.
+    pub hedge: HedgePolicy,
+    /// Per-tenant token-bucket quotas (off when `None`).
+    pub quota: Option<QuotaConfig>,
+    /// Consecutive `QueueFull` sheds before a node is marked unhealthy
+    /// (0 disables shed-driven health flips).
+    pub shed_unhealthy_after: u32,
+    /// Every `probe_every`-th submission keeps raw ring order instead of
+    /// healthy-first, so unhealthy owners get probed and can recover
+    /// (0 disables probing).
+    pub probe_every: usize,
+    /// Sample cap for the routing fingerprint of `B` (see
+    /// [`crate::planner::sampled_fingerprint`]; 0 = hash every element).
+    pub route_probe: usize,
+    /// Per-node service configuration; each node gets its own instance
+    /// (own planner, caches, telemetry) built from this template.
+    pub service: ServiceBuilder,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> ClusterConfig {
+        ClusterConfig {
+            nodes: 3,
+            replication: 2,
+            vnodes: 64,
+            hedge: HedgePolicy::Off,
+            quota: None,
+            shed_unhealthy_after: 4,
+            probe_every: 8,
+            route_probe: 4096,
+            service: ServiceBuilder::default(),
+        }
+    }
+}
+
+/// Builder for a running cluster. Obtain via [`ClusterClient::builder`].
+#[derive(Debug, Clone, Default)]
+pub struct ClusterBuilder {
+    cfg: ClusterConfig,
+}
+
+impl ClusterClient {
+    /// Start configuring a cluster (3 nodes, R = 2, 64 vnodes, no
+    /// hedging, no quotas by default).
+    pub fn builder() -> ClusterBuilder {
+        ClusterBuilder::default()
+    }
+}
+
+impl ClusterBuilder {
+    /// Member node count N (clamped to ≥ 1 at build).
+    pub fn nodes(mut self, n: usize) -> Self {
+        self.cfg.nodes = n;
+        self
+    }
+
+    /// Replication factor R.
+    pub fn replication(mut self, r: usize) -> Self {
+        self.cfg.replication = r;
+        self
+    }
+
+    /// Virtual nodes per member on the hash ring.
+    pub fn vnodes(mut self, v: usize) -> Self {
+        self.cfg.vnodes = v;
+        self
+    }
+
+    /// Hedged-retry policy.
+    pub fn hedge(mut self, h: HedgePolicy) -> Self {
+        self.cfg.hedge = h;
+        self
+    }
+
+    /// Enable per-tenant token-bucket quotas.
+    pub fn quota(mut self, q: QuotaConfig) -> Self {
+        self.cfg.quota = Some(q);
+        self
+    }
+
+    /// Consecutive sheds before a node is marked unhealthy.
+    pub fn shed_unhealthy_after(mut self, n: u32) -> Self {
+        self.cfg.shed_unhealthy_after = n;
+        self
+    }
+
+    /// Probe cadence for unhealthy-node recovery.
+    pub fn probe_every(mut self, n: usize) -> Self {
+        self.cfg.probe_every = n;
+        self
+    }
+
+    /// Sample cap for the routing fingerprint.
+    pub fn route_probe(mut self, cap: usize) -> Self {
+        self.cfg.route_probe = cap;
+        self
+    }
+
+    /// Per-node service template (workers, batching, caches, telemetry).
+    pub fn service(mut self, s: ServiceBuilder) -> Self {
+        self.cfg.service = s;
+        self
+    }
+
+    /// The accumulated configuration (inspectable before build).
+    pub fn config(&self) -> &ClusterConfig {
+        &self.cfg
+    }
+
+    /// Build and start N nodes, each executing on `factory(i)`'s executor
+    /// — per-node executors are what lets tests arm a fault on exactly
+    /// one replica.
+    pub fn build_with(self, factory: impl Fn(usize) -> Arc<dyn Executor>) -> ClusterClient {
+        let cfg = self.cfg;
+        let n = cfg.nodes.max(1);
+        let mut nodes = Vec::with_capacity(n);
+        for i in 0..n {
+            let svc = cfg.service.clone().build(factory(i));
+            nodes.push(Node::new(i, Arc::new(svc)));
+        }
+        ClusterClient::from_parts(nodes, cfg)
+    }
+
+    /// Build with one `SimExecutor` per node (the reference executor —
+    /// deterministic, bit-exact across nodes by construction).
+    pub fn build_sim(self) -> ClusterClient {
+        self.build_with(|_| Arc::new(SimExecutor::new()))
+    }
+}

@@ -1,0 +1,145 @@
+//! One cluster member: a wholly-owned `GemmService` instance plus the
+//! health state the router consults and the per-node latency budget the
+//! hedging policy reads from the node's telemetry stage histograms
+//! (DESIGN.md §15).
+//!
+//! Health is a two-state machine with probe re-entry:
+//!
+//! ```text
+//!            ExecutorFailed / ShuttingDown reply,
+//!            or `shed_unhealthy_after` consecutive QueueFull sheds
+//!   Healthy ────────────────────────────────────────────▶ Unhealthy
+//!      ▲                                                     │
+//!      └──────────── probe request succeeds ◀────────────────┘
+//!              (the router sends every `probe_every`-th
+//!               request through the ring order unfiltered)
+//! ```
+//!
+//! An unhealthy node is deprioritized — moved behind the healthy replicas
+//! in every preference list — but never evicted from the ring, so its
+//! caches stay warm for the keys it owns and one successful probe restores
+//! it with zero key movement.
+
+use crate::coordinator::service::GemmService;
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// A cluster member: service handle + router-visible health.
+pub struct Node {
+    index: usize,
+    name: String,
+    svc: Arc<GemmService>,
+    healthy: AtomicBool,
+    consecutive_sheds: AtomicU32,
+}
+
+impl Node {
+    /// Wrap a running service as cluster member `index` (named `node<i>`).
+    pub(crate) fn new(index: usize, svc: Arc<GemmService>) -> Node {
+        Node {
+            index,
+            name: format!("node{index}"),
+            svc,
+            healthy: AtomicBool::new(true),
+            consecutive_sheds: AtomicU32::new(0),
+        }
+    }
+
+    /// The node's position in the cluster's member list (and on the ring).
+    pub fn index(&self) -> usize {
+        self.index
+    }
+
+    /// Stable node name (`node0`, `node1`, ...) — the `node` label value in
+    /// the cluster's Prometheus exposition.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The node's own `GemmService` (its planner, caches and metrics are
+    /// private to this node).
+    pub fn service(&self) -> &GemmService {
+        &self.svc
+    }
+
+    /// Router-visible health: `false` after an `ExecutorFailed` or
+    /// `ShuttingDown` reply (or a run of sheds) until a probe succeeds.
+    pub fn is_healthy(&self) -> bool {
+        self.healthy.load(Ordering::Acquire)
+    }
+
+    /// A reply proved the node dead or dying: deprioritize it.
+    pub(crate) fn mark_failed(&self) {
+        self.healthy.store(false, Ordering::Release);
+    }
+
+    /// A request succeeded end-to-end: restore health, clear the shed run.
+    pub(crate) fn mark_ok(&self) {
+        self.consecutive_sheds.store(0, Ordering::Relaxed);
+        self.healthy.store(true, Ordering::Release);
+    }
+
+    /// Record one `QueueFull` shed. A lone shed is back-pressure, not
+    /// sickness — only `threshold` *consecutive* sheds flip the node
+    /// unhealthy. Returns the new health.
+    pub(crate) fn note_shed(&self, threshold: u32) -> bool {
+        let run = self.consecutive_sheds.fetch_add(1, Ordering::Relaxed) + 1;
+        if threshold > 0 && run >= threshold {
+            self.healthy.store(false, Ordering::Release);
+        }
+        self.is_healthy()
+    }
+
+    /// The node's hedging budget: the sum of its per-stage p99 latencies
+    /// (a pessimistic whole-pipeline bound read from the telemetry stage
+    /// histograms), floored at `floor`. Without telemetry — or before any
+    /// span lands — the floor *is* the budget, so hedging degrades to a
+    /// fixed timer instead of firing on garbage.
+    pub fn p99_budget(&self, floor: Duration) -> Duration {
+        let Some(tracer) = self.svc.tracer() else { return floor };
+        let total_ns: u64 = tracer.stage_stats().iter().map(|s| s.p99_ns).sum();
+        floor.max(Duration::from_nanos(total_ns))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::SimExecutor;
+
+    fn node() -> Node {
+        let svc = GemmService::builder().workers(1).build(Arc::new(SimExecutor::new()));
+        Node::new(3, Arc::new(svc))
+    }
+
+    #[test]
+    fn health_state_machine() {
+        let n = node();
+        assert!(n.is_healthy());
+        assert_eq!(n.name(), "node3");
+        // Sheds below the threshold leave the node healthy.
+        assert!(n.note_shed(3));
+        assert!(n.note_shed(3));
+        assert!(n.is_healthy());
+        // The threshold-th consecutive shed trips it.
+        assert!(!n.note_shed(3));
+        assert!(!n.is_healthy());
+        // Success restores health and clears the run.
+        n.mark_ok();
+        assert!(n.is_healthy());
+        assert!(n.note_shed(3), "run restarted after mark_ok");
+        // A failed reply trips immediately.
+        n.mark_failed();
+        assert!(!n.is_healthy());
+        n.service().close();
+    }
+
+    #[test]
+    fn p99_budget_floors_without_telemetry() {
+        let n = node();
+        let floor = Duration::from_millis(7);
+        assert_eq!(n.p99_budget(floor), floor, "no tracer -> floor is the budget");
+        n.service().close();
+    }
+}

@@ -1,0 +1,201 @@
+//! Consistent-hash ring with virtual nodes — the placement function of the
+//! cluster router (DESIGN.md §15).
+//!
+//! Every member node contributes `vnodes` points on a 64-bit ring; a key
+//! (a weight fingerprint, see [`crate::gemm::content_fingerprint`]) is
+//! owned by the first point clockwise from its own hash, and its replica
+//! set is the first R *distinct* members clockwise. Point positions
+//! depend only on `(member id, vnode index)` — never on insertion order —
+//! so the mapping is reproducible across process restarts and `Cluster`
+//! rebuilds, and removing one of N members remaps only the keys that
+//! member owned (≈ 1/N of them); every other key keeps its owner exactly.
+//! That stability is what keeps repeated weights cache-affine: the same
+//! weight matrix keeps landing on the node whose `SplitCache`,
+//! `ProbeCache` and `PlanCache` are already warm with it.
+
+/// Consistent-hash ring over `u32` member ids with virtual nodes.
+#[derive(Debug, Clone)]
+pub struct HashRing {
+    /// `(point hash, member id)`, sorted by hash (ties broken by id).
+    points: Vec<(u64, u32)>,
+    /// Live member ids, ascending.
+    members: Vec<u32>,
+    /// Virtual nodes contributed per member.
+    vnodes: usize,
+}
+
+/// SplitMix64 finalizer: the ring's one-way scrambler. Public within the
+/// module tree so the router can hash routing keys consistently.
+pub(crate) fn mix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+/// Ring position of one virtual node: a pure function of the member id and
+/// the vnode index, so rebuilds reproduce the identical ring.
+fn point_hash(member: u32, vnode: u32) -> u64 {
+    mix64(((member as u64) << 32) | vnode as u64)
+}
+
+/// Fold a 128-bit fingerprint onto the 64-bit ring.
+fn key_hash(key: u128) -> u64 {
+    mix64((key >> 64) as u64 ^ mix64(key as u64))
+}
+
+impl HashRing {
+    /// A ring over members `0..nodes` (the common dense-cluster case).
+    /// `vnodes` is clamped to ≥ 1.
+    pub fn new(nodes: usize, vnodes: usize) -> HashRing {
+        let members: Vec<u32> = (0..nodes as u32).collect();
+        HashRing::with_members(&members, vnodes)
+    }
+
+    /// A ring over an explicit member set (duplicates ignored).
+    pub fn with_members(members: &[u32], vnodes: usize) -> HashRing {
+        let vnodes = vnodes.max(1);
+        let mut sorted: Vec<u32> = members.to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        let mut points = Vec::with_capacity(sorted.len() * vnodes);
+        for &m in &sorted {
+            for v in 0..vnodes as u32 {
+                points.push((point_hash(m, v), m));
+            }
+        }
+        points.sort_unstable();
+        HashRing { points, members: sorted, vnodes }
+    }
+
+    /// Live member ids, ascending.
+    pub fn members(&self) -> &[u32] {
+        &self.members
+    }
+
+    /// Number of live members.
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    /// Whether the ring has no members.
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    /// Virtual nodes contributed per member.
+    pub fn vnodes(&self) -> usize {
+        self.vnodes
+    }
+
+    /// Remove one member (its points leave the ring; every key it did not
+    /// own keeps its owner). No-op when the member is not present.
+    pub fn remove(&mut self, member: u32) {
+        self.members.retain(|&m| m != member);
+        self.points.retain(|&(_, m)| m != member);
+    }
+
+    /// The first `r` distinct members clockwise from `key`'s ring position
+    /// — the key's owner followed by its failover replicas, in preference
+    /// order. Returns fewer than `r` entries when the ring has fewer
+    /// members; an empty vector on an empty ring.
+    pub fn route(&self, key: u128, r: usize) -> Vec<u32> {
+        let want = r.min(self.members.len());
+        let mut out: Vec<u32> = Vec::with_capacity(want);
+        if want == 0 {
+            return out;
+        }
+        let h = key_hash(key);
+        let start = self.points.partition_point(|&(p, _)| p < h);
+        for &(_, m) in self.points.iter().skip(start).chain(self.points.iter().take(start)) {
+            if !out.contains(&m) {
+                out.push(m);
+                if out.len() == want {
+                    break;
+                }
+            }
+        }
+        out
+    }
+
+    /// The owning member of `key` (`None` on an empty ring).
+    pub fn node_of(&self, key: u128) -> Option<u32> {
+        self.route(key, 1).first().copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn keys(n: usize) -> Vec<u128> {
+        // Deterministic LCG-derived keys; seeds differ from any production
+        // fingerprint stream.
+        let mut s = 0x1234_5678_9abc_def0u64;
+        (0..n)
+            .map(|_| {
+                s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                let hi = s;
+                s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                ((hi as u128) << 64) | s as u128
+            })
+            .collect()
+    }
+
+    #[test]
+    fn rebuild_reproduces_placement() {
+        let a = HashRing::new(5, 64);
+        let b = HashRing::new(5, 64);
+        for k in keys(256) {
+            assert_eq!(a.route(k, 3), b.route(k, 3));
+        }
+    }
+
+    #[test]
+    fn member_order_does_not_matter() {
+        let a = HashRing::with_members(&[0, 1, 2, 3], 32);
+        let b = HashRing::with_members(&[3, 1, 0, 2], 32);
+        for k in keys(128) {
+            assert_eq!(a.node_of(k), b.node_of(k));
+        }
+    }
+
+    #[test]
+    fn replicas_are_distinct_and_bounded() {
+        let ring = HashRing::new(4, 16);
+        for k in keys(64) {
+            let r = ring.route(k, 3);
+            assert_eq!(r.len(), 3);
+            let mut sorted = r.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 3, "replica set has duplicates: {r:?}");
+        }
+        assert_eq!(ring.route(keys(1)[0], 9).len(), 4, "capped at member count");
+    }
+
+    #[test]
+    fn removal_keeps_every_unowned_key() {
+        let full = HashRing::new(4, 64);
+        let mut less = full.clone();
+        less.remove(2);
+        assert_eq!(less.len(), 3);
+        for k in keys(512) {
+            let before = full.node_of(k).unwrap();
+            let after = less.node_of(k).unwrap();
+            if before != 2 {
+                assert_eq!(before, after, "key not owned by the removed node moved");
+            } else {
+                assert_ne!(after, 2);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_ring_routes_nowhere() {
+        let ring = HashRing::with_members(&[], 8);
+        assert!(ring.is_empty());
+        assert!(ring.route(42, 2).is_empty());
+        assert_eq!(ring.node_of(42), None);
+    }
+}

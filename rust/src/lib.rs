@@ -66,6 +66,16 @@
 //!   [`fp`]/[`tcsim`]/[`gemm`] and surfaced per method in
 //!   `coordinator::Snapshot::render_prometheus`. Zero-cost when disabled
 //!   and guaranteed not to perturb a single output bit (DESIGN.md §12).
+//! * [`cluster`] — L5, the multi-instance serving tier (DESIGN.md §15):
+//!   N in-process `GemmService` nodes behind a fingerprint-affine router
+//!   (consistent-hash [`cluster::HashRing`] with virtual nodes keyed by
+//!   the weight fingerprint, so repeated weights stay cache-affine),
+//!   replication-R failover, hedged retries budgeted by per-node
+//!   telemetry p99s, per-tenant token-bucket quotas, and a cluster-scope
+//!   ledger with a `node`-labeled Prometheus exposition. The client
+//!   surface ([`cluster::ClusterClient`]) mirrors [`api`]; results are
+//!   bit-identical to the single-node run regardless of which replica
+//!   served or whether failover moved the request mid-stream.
 //! * [`experiments`] — one driver per paper figure/table, shared by the
 //!   bench binaries.
 //!
@@ -80,6 +90,7 @@ pub mod api;
 pub mod autotune;
 pub mod bench_util;
 pub mod cli;
+pub mod cluster;
 pub mod coordinator;
 pub mod experiments;
 pub mod fp;

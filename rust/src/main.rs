@@ -30,6 +30,10 @@ USAGE:
                  [--shard] [--shard-workers W] [--split-cache N] [--planner]
                  [--queue-cap N] [--deadline-ms D] [--reject-stats]
                  [--telemetry] [--trace N] [--metrics-format prometheus]
+  tcec cluster   [--nodes N] [--replication R] [--vnodes V] [--requests N] [--size N]
+                 [--weights W] [--workers W] [--batch B] [--split-cache N] [--planner]
+                 [--shard] [--shard-workers W] [--hedge-ms D] [--quota-burst N]
+                 [--quota-refill R] [--no-verify] [--metrics-format prometheus]
   tcec trace     [--out FILE] [--requests N] [--size N] [--workers W] [--batch B]
                  [--shard] [--shard-workers W]
   tcec experiment <fig1|fig4|fig5|fig8|fig9|fig11|fig13|fig14|fig15|fig16|table1_2|table3
@@ -611,6 +615,180 @@ fn cmd_serve(args: &Args) {
     client.shutdown();
 }
 
+/// `tcec cluster`: run a repeated-weight request stream through an N-node
+/// cluster (fingerprint-affine routing, DESIGN.md §15), verify the stream
+/// is bit-identical to the single-node run, and report per-node cache
+/// affinity plus the cluster-scope exactly-once ledger.
+fn cmd_cluster(args: &Args) {
+    use tcec::cluster::{ClusterClient, HedgePolicy, QuotaConfig};
+    use tcec::perfmodel::ClusterTopology;
+
+    let nodes = args.usize_flag("nodes", 3);
+    let replication = args.usize_flag("replication", 2);
+    let vnodes = args.usize_flag("vnodes", 64);
+    let requests = args.usize_flag("requests", 24);
+    let size = args.usize_flag("size", 48);
+    let weights = args.usize_flag("weights", 4).max(1);
+    // One service template shared by every node AND the single-node
+    // verification run — identical configuration is the precondition of
+    // the bit-identity check.
+    let mut svc = GemmService::builder()
+        .workers(args.usize_flag("workers", 2))
+        .max_batch(args.usize_flag("batch", 4))
+        .split_cache(args.usize_flag("split-cache", 16));
+    if args.bool_flag("planner") {
+        svc = svc.planner(PlannerConfig::default());
+    }
+    if args.bool_flag("shard") {
+        svc = svc.shard(shard::ShardConfig {
+            workers: args.usize_flag("shard-workers", 4),
+            ..shard::ShardConfig::default()
+        });
+    }
+    let mut builder = ClusterClient::builder()
+        .nodes(nodes)
+        .replication(replication)
+        .vnodes(vnodes)
+        .service(svc.clone());
+    // `--hedge-ms D`: duplicate an attempt on the next replica once the
+    // primary has been outstanding for D ms (first resolution wins).
+    if let Some(ms) = args.str_flag("hedge-ms").and_then(|s| s.parse::<u64>().ok()) {
+        builder = builder.hedge(HedgePolicy::After(Duration::from_millis(ms)));
+    }
+    // `--quota-burst/--quota-refill`: per-tenant token buckets keyed by
+    // call tag (untagged traffic shares one anonymous bucket).
+    if args.flags.contains_key("quota-burst") || args.flags.contains_key("quota-refill") {
+        builder = builder.quota(QuotaConfig {
+            burst: args.u64_flag("quota-burst", 64),
+            refill_per_s: args.f64_flag("quota-refill", 64.0),
+        });
+    }
+    let cluster = builder.build_sim();
+
+    // `weights` distinct B matrices cycled over the stream: the repeated
+    // fingerprints are what keep each weight cache-affine to its node.
+    let gen = |i: usize| {
+        let a = Workload::Urand { lo: -1.0, hi: 1.0 }.generate(size, size, i as u64);
+        let b = Workload::Urand { lo: -1.0, hi: 1.0 }
+            .generate(size, size, 10_000 + (i % weights) as u64);
+        (a, b)
+    };
+    let t0 = std::time::Instant::now();
+    let mut tickets = Vec::with_capacity(requests);
+    for i in 0..requests {
+        let (a, b) = gen(i);
+        match cluster.call(a, b).policy(Policy::Fp32Accuracy).submit() {
+            Ok(t) => tickets.push((i, t)),
+            Err(e) => eprintln!("request {i} not admitted: {e}"),
+        }
+    }
+    let mut results: Vec<Option<tcec::gemm::Mat>> = (0..requests).map(|_| None).collect();
+    let mut reply_errors = 0usize;
+    for (i, t) in tickets {
+        match t.wait() {
+            Ok(out) => results[i] = Some(out.c),
+            Err(e) => {
+                reply_errors += 1;
+                eprintln!("request {i} failed: {e}");
+            }
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let snap = cluster.snapshot();
+    // `--metrics-format prometheus`: dump the cluster exposition (cluster
+    // families + `node`-labeled per-node families; names are a stable
+    // contract pinned by rust/tests/golden/cluster_metrics.prom).
+    if args.str_flag("metrics-format") == Some("prometheus") {
+        print!("{}", snap.render_prometheus());
+        cluster.shutdown();
+        return;
+    }
+    println!(
+        "cluster: {nodes} node(s), R={replication}, {vnodes} vnodes — {requests} requests \
+         over {weights} distinct weight(s) in {dt:.3}s ({:.1} req/s)",
+        snap.counters.completed as f64 / dt
+    );
+    let mut t = Table::new(&[
+        "node",
+        "healthy",
+        "requests",
+        "completed",
+        "batches",
+        "split hits",
+        "split misses",
+    ]);
+    for n in &snap.nodes {
+        t.row(&[
+            n.name.clone(),
+            if n.healthy { "yes".into() } else { "NO".into() },
+            n.service.requests.to_string(),
+            n.service.completed.to_string(),
+            n.service.batches.to_string(),
+            n.service.split_cache_hits.to_string(),
+            n.service.split_cache_misses.to_string(),
+        ]);
+    }
+    t.print();
+    let c = &snap.counters;
+    println!(
+        "ledger: {} requests = {} completed + {} failed + {} expired + {} cancelled \
+         ({} rejected, {} sheds, {} failovers, {} hedges / {} wins)",
+        c.requests,
+        c.completed,
+        c.failed,
+        c.expired,
+        c.cancelled,
+        c.rejected,
+        c.sheds,
+        c.failovers,
+        c.hedges,
+        c.hedge_wins
+    );
+
+    // Re-run the identical stream through ONE service built from the same
+    // template and compare every result byte-for-byte — the §15 invariant,
+    // executed (`--no-verify` skips it for pure throughput runs).
+    if !args.bool_flag("no-verify") {
+        let single = svc.client(Arc::new(SimExecutor::new()));
+        let mut identical = reply_errors == 0;
+        let mut stickets = Vec::with_capacity(requests);
+        for i in 0..requests {
+            let (a, b) = gen(i);
+            match single.call(a, b).policy(Policy::Fp32Accuracy).submit() {
+                Ok(t) => stickets.push((i, t)),
+                Err(e) => {
+                    identical = false;
+                    eprintln!("single-node request {i} not admitted: {e}");
+                }
+            }
+        }
+        for (i, t) in stickets {
+            match t.wait() {
+                Ok(out) => {
+                    if results[i].as_ref().map(|m| m.data == out.c.data) != Some(true) {
+                        identical = false;
+                    }
+                }
+                Err(_) => identical = false,
+            }
+        }
+        single.shutdown();
+        println!("bit-identical across nodes: {}", if identical { "yes" } else { "NO (BUG)" });
+    }
+    println!(
+        "exactly-once identity: {}",
+        if snap.identity_holds() { "ok" } else { "VIOLATED (BUG)" }
+    );
+    let topo = ClusterTopology { nodes, vnodes, replication };
+    println!(
+        "projected scaling: {:.2}x of one node at {:.0}% placement efficiency \
+         (perfmodel::topology; executed curve: benches/cluster_scaling.rs)",
+        topo.speedup(),
+        topo.scaling_efficiency() * 100.0
+    );
+    cluster.shutdown();
+}
+
 /// `tcec trace`: run a small scripted workload through the service with
 /// full telemetry and dump the spans as Chrome `trace_event` JSON (load
 /// the file in `chrome://tracing` or Perfetto). DESIGN.md §12.
@@ -808,6 +986,7 @@ fn main() {
         Some("plan") => cmd_plan(&args),
         Some("solve") => cmd_solve(&args),
         Some("serve") => cmd_serve(&args),
+        Some("cluster") => cmd_cluster(&args),
         Some("trace") => cmd_trace(&args),
         Some("experiment") => cmd_experiment(&args),
         Some("artifacts") => cmd_artifacts(&args),

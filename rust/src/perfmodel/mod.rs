@@ -7,6 +7,7 @@ pub mod power;
 pub mod roofline;
 pub mod specs;
 pub mod throughput;
+pub mod topology;
 
 pub use power::{avg_power_w, energy_per_gemm_j, gflops_per_watt, peak_gflops_per_watt};
 pub use roofline::{figure15_points, roof, RooflinePoint};
@@ -14,3 +15,4 @@ pub use specs::{GpuSpec, A100, ALL_GPUS, RTX_3090, RTX_A6000};
 pub use throughput::{
     arithmetic_intensity, compute_ceiling, peak_tflops, projected_tflops, ramp, utilization,
 };
+pub use topology::{projected_cluster_tflops, ClusterTopology};

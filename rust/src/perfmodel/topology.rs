@@ -1,0 +1,126 @@
+//! Topology-aware placement model: what multiplying nodes does to the
+//! fig. 14 throughput projection (DESIGN.md §15).
+//!
+//! The cluster router places weights on a consistent-hash ring with `V`
+//! virtual nodes per member. For `N` members the classic balls-in-bins
+//! analysis of consistent hashing gives a max/mean arc-length (and hence
+//! load) ratio concentrating around `1 + ε` with `ε ≈ sqrt(ln N / V)` —
+//! more vnodes flatten the ring toward perfect balance, more members
+//! widen the spread. A uniformly fingerprint-keyed request stream is
+//! throughput-gated by the *most* loaded node, so the model charges the
+//! whole fleet that imbalance: `efficiency = 1 / (1 + ε)` and
+//! `speedup = N · efficiency`.
+//!
+//! Replication factor R is carried for context but does **not** discount
+//! steady-state throughput: replicas receive work only on failover or
+//! hedging, both off the common path. Like every number in `perfmodel`,
+//! these are projections from the paper's calibration, not measurements —
+//! `benches/cluster_scaling.rs` puts the *executed* multi-instance curve
+//! next to this projected one.
+
+use super::specs::GpuSpec;
+use super::throughput::projected_tflops;
+use crate::gemm::Method;
+
+/// Shape of a serving cluster, as the placement model sees it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ClusterTopology {
+    /// Member node count N.
+    pub nodes: usize,
+    /// Virtual nodes per member on the hash ring.
+    pub vnodes: usize,
+    /// Replication factor R (context only; see module docs).
+    pub replication: usize,
+}
+
+impl Default for ClusterTopology {
+    /// Mirrors `cluster::ClusterConfig::default()` (3 nodes, 64 vnodes,
+    /// R = 2).
+    fn default() -> ClusterTopology {
+        ClusterTopology { nodes: 3, vnodes: 64, replication: 2 }
+    }
+}
+
+impl ClusterTopology {
+    /// A topology with the default ring shape and `n` nodes.
+    pub fn with_nodes(n: usize) -> ClusterTopology {
+        ClusterTopology { nodes: n.max(1), ..ClusterTopology::default() }
+    }
+
+    /// Expected relative overload of the hottest node:
+    /// `ε ≈ sqrt(ln N / V)`, 0 for a single node (nothing to imbalance).
+    pub fn placement_imbalance(&self) -> f64 {
+        let n = self.nodes.max(1);
+        let v = self.vnodes.max(1);
+        if n < 2 {
+            return 0.0;
+        }
+        ((n as f64).ln() / v as f64).sqrt()
+    }
+
+    /// Fraction of linear scaling the fleet retains once the hottest node
+    /// gates throughput: `1 / (1 + ε)`, in `(0, 1]`.
+    pub fn scaling_efficiency(&self) -> f64 {
+        1.0 / (1.0 + self.placement_imbalance())
+    }
+
+    /// Projected fleet speedup over one node: `N · efficiency`.
+    pub fn speedup(&self) -> f64 {
+        self.nodes.max(1) as f64 * self.scaling_efficiency()
+    }
+}
+
+/// Projected aggregate TFlop/s of `topo.nodes` instances of `gpu` running
+/// `method` at size `n`: the single-device fig. 14 projection times the
+/// topology's speedup.
+pub fn projected_cluster_tflops(
+    gpu: &GpuSpec,
+    method: Method,
+    n: usize,
+    topo: &ClusterTopology,
+) -> f64 {
+    projected_tflops(gpu, method, n) * topo.speedup()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::A100;
+
+    #[test]
+    fn single_node_is_the_identity() {
+        let t = ClusterTopology::with_nodes(1);
+        assert_eq!(t.placement_imbalance(), 0.0);
+        assert_eq!(t.speedup(), 1.0);
+        let one = projected_tflops(&A100, Method::OursHalfHalf, 4096);
+        assert_eq!(projected_cluster_tflops(&A100, Method::OursHalfHalf, 4096, &t), one);
+    }
+
+    #[test]
+    fn efficiency_bounds_and_vnode_monotonicity() {
+        for n in [2usize, 4, 8, 16] {
+            let coarse = ClusterTopology { nodes: n, vnodes: 8, replication: 2 };
+            let fine = ClusterTopology { nodes: n, vnodes: 512, replication: 2 };
+            for t in [&coarse, &fine] {
+                let eff = t.scaling_efficiency();
+                assert!(eff > 0.0 && eff <= 1.0, "eff {eff} out of range");
+                assert!(t.speedup() < n as f64, "imbalance must cost something");
+            }
+            assert!(
+                fine.scaling_efficiency() > coarse.scaling_efficiency(),
+                "more vnodes must flatten placement"
+            );
+        }
+    }
+
+    #[test]
+    fn fleet_projection_scales_superlinearly_in_nothing() {
+        let base = projected_tflops(&A100, Method::OursTf32, 8192);
+        for n in [2usize, 4, 8] {
+            let t = ClusterTopology::with_nodes(n);
+            let fleet = projected_cluster_tflops(&A100, Method::OursTf32, 8192, &t);
+            assert!(fleet > base, "adding nodes must add throughput");
+            assert!(fleet < base * n as f64, "and never more than linearly");
+        }
+    }
+}

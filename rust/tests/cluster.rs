@@ -1,0 +1,434 @@
+//! Cluster-tier integration tests (DESIGN.md §15): router determinism
+//! across rebuilds, the removal remap bound, per-node split-cache affinity
+//! with exact pinned hit/miss counts, bit-identity across the topology for
+//! every corrected method with a forced mid-stream node failure, hedged
+//! exactly-once accounting, tenant quotas, and the `node`-labeled
+//! Prometheus exposition against its golden.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+use tcec::api::ServiceError;
+use tcec::cluster::{
+    ClusterClient, ClusterCounters, ClusterSnapshot, HashRing, HedgePolicy, NodeSnapshot,
+    QuotaConfig,
+};
+use tcec::coordinator::{BatchKey, Executor, GemmRequest, GemmService, Metrics, SimExecutor};
+use tcec::gemm::{Mat, Method};
+use tcec::matgen::urand;
+
+/// Deterministic LCG-derived 128-bit keys (distinct from any production
+/// fingerprint stream).
+fn lcg_keys(n: usize) -> Vec<u128> {
+    let mut s = 0xfeed_face_cafe_beefu64;
+    (0..n)
+        .map(|_| {
+            s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let hi = s;
+            s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            ((hi as u128) << 64) | s as u128
+        })
+        .collect()
+}
+
+#[test]
+fn routing_is_deterministic_across_rebuilds() {
+    // Same config, two independent builds (fresh ring, fresh nodes): every
+    // weight must route to the identical replica list — this is the
+    // property that keeps a weight's splits warm across cluster restarts.
+    let mk = || {
+        ClusterClient::builder()
+            .nodes(4)
+            .replication(3)
+            .vnodes(32)
+            .service(GemmService::builder().workers(1))
+            .build_sim()
+    };
+    let c1 = mk();
+    let c2 = mk();
+    for i in 0..24u64 {
+        let b = urand(16, 16, -1.0, 1.0, 900 + i);
+        let route = c1.route_of(&b);
+        assert_eq!(route, c2.route_of(&b), "rebuild moved weight {i}");
+        assert_eq!(route.len(), 3);
+        let mut dedup = route.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), 3, "replica list has duplicates: {route:?}");
+    }
+    c1.shutdown();
+    c2.shutdown();
+}
+
+#[test]
+fn removing_one_of_n_remaps_a_bounded_fraction() {
+    // Consistent hashing's contract: dropping 1 of N members moves only
+    // the keys that member owned — about 1/N of them, never the wholesale
+    // reshuffle a mod-N table would do. Bound: ceil(K/N) plus slack for
+    // placement imbalance at finite vnode count.
+    let keys = lcg_keys(512);
+    let full = HashRing::new(4, 64);
+    let mut less = full.clone();
+    less.remove(2);
+    let mut moved = 0usize;
+    for &k in &keys {
+        let before = full.node_of(k).expect("full ring routes");
+        let after = less.node_of(k).expect("3 members remain");
+        if before != after {
+            assert_eq!(before, 2, "a key not owned by the removed member moved");
+            moved += 1;
+        }
+    }
+    let bound = keys.len().div_ceil(4) + 96;
+    assert!(moved >= 1, "removing a member must orphan some keys");
+    assert!(moved <= bound, "{moved} keys moved, bound {bound}");
+}
+
+#[test]
+fn split_caches_stay_node_affine_with_exact_counts() {
+    // A repeated-weight stream through 3 nodes: fingerprint-affine routing
+    // must send each weight to exactly one node, so per-node split-cache
+    // traffic is exactly predictable — per serving node, one miss per
+    // distinct weight plus one for the shared activation A, and every
+    // other lookup (2 per request: A then B) is a hit.
+    let a = urand(24, 24, -1.0, 1.0, 1);
+    let weights: Vec<Mat> = (0..4).map(|w| urand(24, 24, -1.0, 1.0, 100 + w as u64)).collect();
+    let cluster = ClusterClient::builder()
+        .nodes(3)
+        .replication(2)
+        .service(
+            GemmService::builder()
+                .workers(1)
+                .max_batch(1)
+                .split_cache(16)
+                .force_method(Method::OursHalfHalf),
+        )
+        .build_sim();
+
+    let requests = 12usize;
+    let mut reqs_per_node = [0u64; 3];
+    let mut distinct_per_node = [0u64; 3];
+    for w in &weights {
+        distinct_per_node[cluster.route_of(w)[0]] += 1;
+    }
+    for i in 0..requests {
+        reqs_per_node[cluster.route_of(&weights[i % weights.len()])[0]] += 1;
+    }
+
+    for i in 0..requests {
+        cluster
+            .call(a.clone(), weights[i % weights.len()].clone())
+            .wait()
+            .expect("clustered call served");
+    }
+    let snap = cluster.snapshot();
+    cluster.shutdown();
+
+    assert!(snap.identity_holds());
+    for (j, n) in snap.nodes.iter().enumerate() {
+        let served = u64::from(reqs_per_node[j] > 0);
+        // Per serving node: one miss per distinct weight plus one for the
+        // shared A; every other lookup (2 per request) hits. Each weight
+        // appears in ≥ 3 requests, so misses ≤ reqs + 1 ≤ 2·reqs here.
+        let misses = distinct_per_node[j] + served;
+        let hits = 2 * reqs_per_node[j] - misses;
+        assert_eq!(
+            (n.service.split_cache_hits, n.service.split_cache_misses),
+            (hits, misses),
+            "node {j}: split-cache counters drifted \
+             ({} reqs, {} distinct weights routed here)",
+            reqs_per_node[j],
+            distinct_per_node[j]
+        );
+        assert_eq!(n.service.requests, reqs_per_node[j], "node {j}: attempt count");
+    }
+}
+
+/// Wraps the reference executor; panics exactly once after `fail_next` is
+/// armed — the service's catch_unwind turns that into `ExecutorFailed`,
+/// which is the reply-time failover trigger under test.
+struct FlakyExec {
+    inner: SimExecutor,
+    fail_next: Arc<AtomicBool>,
+}
+
+impl Executor for FlakyExec {
+    fn execute(&self, key: &BatchKey, reqs: &[GemmRequest]) -> Vec<Mat> {
+        if self.fail_next.swap(false, Ordering::SeqCst) {
+            panic!("injected node failure (test)");
+        }
+        self.inner.execute(key, reqs)
+    }
+
+    fn name(&self) -> &'static str {
+        "flaky-sim"
+    }
+}
+
+#[test]
+fn failover_preserves_bit_identity_for_every_method() {
+    // The tier's core invariant: for EVERY method, a stream served by the
+    // cluster — including one request whose primary node's executor
+    // panics mid-stream, forcing a reply-time failover to the replica —
+    // returns byte-for-byte the single-service results, and the cluster
+    // ledger shows zero failed logical requests.
+    let weights: Vec<Mat> = (0..2).map(|w| urand(24, 24, -1.0, 1.0, 300 + w as u64)).collect();
+    let gen = |i: usize| (urand(24, 24, -1.0, 1.0, 40 + i as u64), weights[i % 2].clone());
+    let requests = 5usize;
+    for m in Method::ALL {
+        let template = GemmService::builder().workers(1).max_batch(1).force_method(m);
+
+        let single = template.clone().client(Arc::new(SimExecutor::new()));
+        let want: Vec<Vec<u32>> = (0..requests)
+            .map(|i| {
+                let (a, b) = gen(i);
+                let out = single.call(a, b).wait().expect("single-node run succeeds");
+                out.c.data.iter().map(|v| v.to_bits()).collect()
+            })
+            .collect();
+        single.shutdown();
+
+        let flags: Vec<Arc<AtomicBool>> =
+            (0..3).map(|_| Arc::new(AtomicBool::new(false))).collect();
+        let exec_flags = flags.clone();
+        let cluster = ClusterClient::builder()
+            .nodes(3)
+            .replication(2)
+            .service(template)
+            .build_with(move |i| -> Arc<dyn Executor> {
+                Arc::new(FlakyExec {
+                    inner: SimExecutor::new(),
+                    fail_next: Arc::clone(&exec_flags[i]),
+                })
+            });
+        for (i, expect) in want.iter().enumerate() {
+            let (a, b) = gen(i);
+            if i == 2 {
+                // Arm the designated primary: its next batch panics, and
+                // the ticket must fail the attempt over to the replica.
+                let victim = cluster.route_of(&b)[0];
+                flags[victim].store(true, Ordering::SeqCst);
+            }
+            let out = cluster.call(a, b).wait().unwrap_or_else(|e| {
+                panic!("{}: request {i} leaked a replica error: {e:?}", m.name())
+            });
+            let got: Vec<u32> = out.c.data.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(&got, expect, "{}: request {i} diverged across topology", m.name());
+        }
+        let snap = cluster.snapshot();
+        cluster.shutdown();
+        assert_eq!(
+            snap.counters,
+            ClusterCounters {
+                requests: requests as u64,
+                completed: requests as u64,
+                failovers: 1,
+                ..ClusterCounters::default()
+            },
+            "{}: exactly-once ledger drifted under forced failover",
+            m.name()
+        );
+        assert!(snap.identity_holds(), "{}", m.name());
+    }
+}
+
+/// Wraps the reference executor; sleeps when armed so the hedge budget
+/// elapses while the primary attempt is still executing.
+struct SlowExec {
+    inner: SimExecutor,
+    slow: Arc<AtomicBool>,
+}
+
+impl Executor for SlowExec {
+    fn execute(&self, key: &BatchKey, reqs: &[GemmRequest]) -> Vec<Mat> {
+        if self.slow.load(Ordering::SeqCst) {
+            std::thread::sleep(Duration::from_millis(150));
+        }
+        self.inner.execute(key, reqs)
+    }
+
+    fn name(&self) -> &'static str {
+        "slow-sim"
+    }
+}
+
+#[test]
+fn hedge_win_counts_the_logical_request_once() {
+    // A slow primary plus a fixed hedge budget: the duplicate attempt must
+    // win, the logical request must count exactly once (requests == 1,
+    // completed == 1), and the duplicate shows up ONLY as an attempt in
+    // the per-node ledgers (sum of node admissions == 2) plus the hedge
+    // counters — never as a second cluster-scope request.
+    let flags: Vec<Arc<AtomicBool>> = (0..2).map(|_| Arc::new(AtomicBool::new(false))).collect();
+    let exec_flags = flags.clone();
+    let cluster = ClusterClient::builder()
+        .nodes(2)
+        .replication(2)
+        .hedge(HedgePolicy::After(Duration::from_millis(10)))
+        .service(GemmService::builder().workers(1).max_batch(1))
+        .build_with(move |i| -> Arc<dyn Executor> {
+            Arc::new(SlowExec { inner: SimExecutor::new(), slow: Arc::clone(&exec_flags[i]) })
+        });
+    let a = urand(16, 16, -1.0, 1.0, 61);
+    let b = urand(16, 16, -1.0, 1.0, 62);
+    let primary = cluster.route_of(&b)[0];
+    flags[primary].store(true, Ordering::SeqCst);
+
+    let ticket = cluster.call(a, b).submit().expect("admitted");
+    let id = ticket.id();
+    let out = ticket.wait().expect("hedge must resolve the request");
+    assert_eq!(out.id, id, "outcome must carry the cluster-logical id");
+
+    let snap = cluster.snapshot();
+    let attempts: u64 = snap.nodes.iter().map(|n| n.service.requests).sum();
+    cluster.shutdown();
+    assert_eq!(
+        snap.counters,
+        ClusterCounters {
+            requests: 1,
+            completed: 1,
+            hedges: 1,
+            hedge_wins: 1,
+            ..ClusterCounters::default()
+        },
+        "hedge accounting drifted"
+    );
+    assert_eq!(attempts, 2, "both attempts must appear in the per-node ledgers");
+    assert!(snap.identity_holds());
+}
+
+#[test]
+fn quota_rejects_before_any_node_and_abandonment_counts_cancelled() {
+    let cluster = ClusterClient::builder()
+        .nodes(2)
+        .quota(QuotaConfig { burst: 2, refill_per_s: 0.0 })
+        .service(GemmService::builder().workers(1).max_batch(1))
+        .build_sim();
+    let gen = |s: u64| (urand(12, 12, -1.0, 1.0, s), urand(12, 12, -1.0, 1.0, s + 50));
+
+    let (a1, b1) = gen(70);
+    let (a2, b2) = gen(71);
+    let (a3, b3) = gen(72);
+    let (a4, b4) = gen(73);
+    let t1 = cluster.call(a1, b1).tag("tenant-a").submit().expect("first burst token");
+    let t2 = cluster.call(a2, b2).tag("tenant-a").submit().expect("second burst token");
+    let dry = cluster.call(a3, b3).tag("tenant-a").submit();
+    assert!(
+        matches!(dry, Err(ServiceError::QueueFull { queue_cap: 2 })),
+        "an empty bucket must shed with QueueFull(burst), got {dry:?}"
+    );
+    // Untagged traffic draws from its own anonymous bucket, not tenant-a's.
+    let t3 = cluster.call(a4, b4).submit().expect("anonymous bucket is separate");
+    t1.wait().expect("served");
+    t2.wait().expect("served");
+    drop(t3); // abandoned while pending → resolves as cancelled
+
+    let snap = cluster.snapshot();
+    cluster.shutdown();
+    assert_eq!(
+        snap.counters,
+        ClusterCounters {
+            requests: 3,
+            completed: 2,
+            cancelled: 1,
+            rejected: 1,
+            quota_rejected: 1,
+            ..ClusterCounters::default()
+        },
+        "quota/abandonment accounting drifted"
+    );
+    assert!(snap.identity_holds());
+}
+
+/// A node snapshot whose service counters start zeroed (fresh `Metrics`)
+/// and are then edited — keeps the golden fixture independent of the
+/// `Snapshot` struct's full field list.
+fn node_snap(
+    name: &str,
+    healthy: bool,
+    p99_ns: u64,
+    edit: impl FnOnce(&mut tcec::coordinator::Snapshot),
+) -> NodeSnapshot {
+    let mut service = Metrics::new().snapshot();
+    edit(&mut service);
+    NodeSnapshot {
+        name: name.to_string(),
+        healthy,
+        execute_p99: Duration::from_nanos(p99_ns),
+        service,
+    }
+}
+
+#[test]
+fn cluster_exposition_matches_golden() {
+    // Hand-assembled 2-node snapshot, every family populated, fully
+    // deterministic. The golden file is the `node`-labeled exposition
+    // schema contract — names, label keys, number formatting.
+    let counters = ClusterCounters {
+        requests: 9,
+        completed: 7,
+        failed: 1,
+        expired: 1,
+        cancelled: 0,
+        rejected: 2,
+        quota_rejected: 1,
+        sheds: 3,
+        failovers: 2,
+        hedges: 4,
+        hedge_wins: 2,
+    };
+    let snap = ClusterSnapshot {
+        counters,
+        nodes: vec![
+            node_snap("node0", true, 2_097_151, |s| {
+                s.requests = 8;
+                s.completed = 7;
+                s.failed = 1;
+                s.rejected = 2;
+                s.batches = 5;
+                s.flops = 123_456;
+                s.split_cache_hits = 6;
+                s.split_cache_misses = 3;
+            }),
+            node_snap("node1", false, 0, |s| {
+                s.requests = 5;
+                s.completed = 4;
+                s.rejected = 1;
+                s.expired = 1;
+                s.batches = 4;
+                s.flops = 65_536;
+                s.split_cache_hits = 2;
+                s.split_cache_misses = 2;
+            }),
+        ],
+    };
+    assert!(snap.identity_holds(), "fixture itself must satisfy the ledger identity");
+    let rendered = snap.render_prometheus();
+    let golden = include_str!("golden/cluster_metrics.prom");
+    assert_eq!(
+        rendered, golden,
+        "cluster exposition drifted from tests/golden/cluster_metrics.prom — \
+         family names and formats are a stable contract; update the golden \
+         only for a deliberate, documented schema change"
+    );
+}
+
+#[test]
+fn zero_value_cluster_snapshot_renders_full_schema() {
+    // A fresh cluster's exposition must still emit every family (scrape
+    // schema is traffic-independent) — what the CI smoke step relies on.
+    let cluster = ClusterClient::builder()
+        .nodes(2)
+        .service(GemmService::builder().workers(1))
+        .build_sim();
+    let text = cluster.snapshot().render_prometheus();
+    cluster.shutdown();
+    let golden = include_str!("golden/cluster_metrics.prom");
+    let names = |s: &str| -> Vec<String> {
+        s.lines()
+            .filter(|l| l.starts_with("# TYPE "))
+            .map(|l| l.split_whitespace().nth(2).unwrap().to_string())
+            .collect()
+    };
+    assert_eq!(names(&text), names(golden), "family set drifted from the golden");
+}

@@ -37,7 +37,7 @@ pub fn run(files: &[FileModel], ctx: &Context) -> Vec<Finding> {
         if rules::in_contract_scope(&fm.path) {
             rules::contract::run_pub_doc(fm, &mut out);
         }
-        if fm.path.contains("/telemetry/") {
+        if fm.path.contains("/telemetry/") || fm.path.contains("/cluster/") {
             rules::contract::run_metric_name(fm, ctx, &mut out);
         }
         if rules::in_relaxed_scope(&fm.path) {

@@ -129,13 +129,23 @@ fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
     }
 }
 
-/// Golden Prometheus fixture: `<root>/../tests/golden/metrics.prom`
-/// (i.e. `rust/tests/...` when scanning `rust/src`).
+/// Golden Prometheus fixtures under `<root>/../tests/golden/` (i.e.
+/// `rust/tests/...` when scanning `rust/src`): the single-node exposition
+/// plus the cluster's `node`-labeled one, concatenated — the metric-name
+/// rule only needs the union of exported family names.
 fn golden_for(root: &str) -> Option<String> {
-    let candidates =
-        [Path::new(root).join("../tests/golden/metrics.prom"),
-         PathBuf::from("rust/tests/golden/metrics.prom")];
-    candidates.iter().find_map(|p| fs::read_to_string(p).ok())
+    let read = |name: &str| {
+        let candidates = [
+            Path::new(root).join("../tests/golden").join(name),
+            PathBuf::from("rust/tests/golden").join(name),
+        ];
+        candidates.iter().find_map(|p| fs::read_to_string(p).ok())
+    };
+    let goldens = [read("metrics.prom"), read("cluster_metrics.prom")];
+    if goldens.iter().all(Option::is_none) {
+        return None;
+    }
+    Some(goldens.into_iter().flatten().collect::<Vec<_>>().join("\n"))
 }
 
 /// Module names on disk next to `<root>/lib.rs`: `X.rs` files and `X/`

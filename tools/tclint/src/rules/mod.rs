@@ -22,7 +22,10 @@ pub fn in_exact_scope(path: &str) -> bool {
 /// Serving hot path: panics here take down workers mid-request instead of
 /// resolving tickets through the `ServiceError` taxonomy.
 pub fn in_hot_scope(path: &str) -> bool {
-    path.contains("/coordinator/") || path.contains("/api/") || path.contains("/shard/")
+    path.contains("/coordinator/")
+        || path.contains("/api/")
+        || path.contains("/shard/")
+        || path.contains("/cluster/")
 }
 
 /// Contract scope for `pub-doc`: the layers whose public surface is the

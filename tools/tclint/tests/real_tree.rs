@@ -79,9 +79,14 @@ fn real_tree_is_clean_under_deny_all_with_no_stale_suppressions() {
         .collect();
 
     let ctx = Context {
+        // Both expositions' goldens, concatenated, mirroring the CLI: the
+        // metric-name rule needs the union of exported family names.
         golden_metrics: Some(
             fs::read_to_string(root.join("rust/tests/golden/metrics.prom"))
-                .expect("golden metrics fixture"),
+                .expect("golden metrics fixture")
+                + "\n"
+                + &fs::read_to_string(root.join("rust/tests/golden/cluster_metrics.prom"))
+                    .expect("golden cluster metrics fixture"),
         ),
         disk_mods: Some(disk_mods(&src_root)),
     };
