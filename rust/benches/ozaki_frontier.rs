@@ -1,0 +1,120 @@
+//! Ozaki slice-count frontier bench (DESIGN.md §16): for each inner
+//! dimension k, sweep the slice count s from 1 to the fp64-target count
+//! and report the whole accuracy-vs-cost frontier — measured residual
+//! against a host-f64 reference, the provable `analysis::ozaki_bound`,
+//! TC-term count, wall clock, and the perf-model projection — with the
+//! fp32/fp64 admissibility gates the planner uses marked on each row.
+//!
+//! Expected shape: residual falls ~2^-β per extra slice while cost grows
+//! as s(s+1)/2 terms; the measured residual sits under the bound at every
+//! s (asserted); the fp64-target row lands below 1e-12 normalized
+//! (asserted). The corrected β (exact ceil(log2 k)) shows up directly:
+//! at k = 256 the fp32 gate opens at s = 3 with 6 TC terms.
+//!
+//! Run:  `cargo bench --bench ozaki_frontier`
+//! JSON: `cargo bench --bench ozaki_frontier -- --json > BENCH_ozaki_frontier.json`
+
+use tcec::analysis::{fp32_class_tol, fp64_class_tol, ozaki_bound};
+use tcec::bench_util::{json_array, json_mode, sci, JsonObj, Table};
+use tcec::gemm::{gemm_f64, ozaki_gemm_f64, ozaki_terms, slice_bits, slices_for_fp64};
+use tcec::matgen::urand;
+use tcec::perfmodel::ozaki_projected_tflops;
+use tcec::planner::PlannerConfig;
+
+fn main() {
+    let smoke = tcec::bench_util::smoke();
+    let json = json_mode();
+    let (mn, ks): (usize, &[usize]) = if smoke { (16, &[256]) } else { (48, &[256, 1024, 4096]) };
+    let gpu = PlannerConfig::default().gpu;
+    if !json {
+        println!("== ozaki_frontier: accuracy vs cost per slice count ==");
+        println!("   {mn}x{{k}}x{mn} GEMMs, residual = max|C - C_ref| / (k*maxA*maxB)");
+        println!("   projections for {}; gates from analysis::ozaki_bound\n", gpu.name);
+    }
+
+    let mut rows: Vec<String> = Vec::new();
+    for &k in ks {
+        let beta = slice_bits(k);
+        let s_max = slices_for_fp64(beta);
+        let a = urand(mn, k, -1.0, 1.0, 0x0F00 + k as u64);
+        let b = urand(k, mn, -1.0, 1.0, 0x0B00 + k as u64);
+        let reference = gemm_f64(&a, &b);
+        let norm = k as f64 * a.max_abs() as f64 * b.max_abs() as f64;
+        let (a64, b64) = (a.to_f64(), b.to_f64());
+        if !json {
+            println!("-- k = {k}: beta = {beta}, fp64 target s = {s_max} --");
+        }
+        let mut t = Table::new(&[
+            "s", "TC terms", "time s", "residual", "bound", "proj TFlop/s", "fp32", "fp64",
+        ]);
+        let mut prev = f64::INFINITY;
+        for s in 1..=s_max {
+            let t0 = std::time::Instant::now();
+            let c = ozaki_gemm_f64(&a64, &b64, s);
+            let secs = t0.elapsed().as_secs_f64();
+            let mut worst = 0.0f64;
+            for (got, want) in c.data.iter().zip(reference.data.iter()) {
+                worst = worst.max((got - want).abs());
+            }
+            let resid = worst / norm;
+            let bound = ozaki_bound(k, s);
+            assert!(resid <= bound, "k={k} s={s}: residual {resid:.3e} above bound {bound:.3e}");
+            assert!(
+                resid <= prev * (1.0 + 1e-9) + 1e-300,
+                "k={k} s={s}: residual {resid:.3e} rose above s-1's {prev:.3e}"
+            );
+            prev = resid;
+            if s == s_max {
+                assert!(resid <= 1e-12, "k={k}: fp64-target residual {resid:.3e} above 1e-12");
+            }
+            let ok32 = bound <= fp32_class_tol(k);
+            let ok64 = bound <= fp64_class_tol(k);
+            let proj = ozaki_projected_tflops(&gpu, s);
+            t.row(&[
+                s.to_string(),
+                ozaki_terms(s).to_string(),
+                format!("{secs:.4}"),
+                sci(resid),
+                sci(bound),
+                format!("{proj:.1}"),
+                if ok32 { "yes".into() } else { "-".into() },
+                if ok64 { "yes".into() } else { "-".into() },
+            ]);
+            rows.push(
+                JsonObj::new()
+                    .int("k", k as u64)
+                    .int("s", s as u64)
+                    .int("beta", beta as u64)
+                    .int("terms", ozaki_terms(s) as u64)
+                    .num("time_s", secs)
+                    .num("residual", resid)
+                    .num("bound", bound)
+                    .num("projected_tflops", proj)
+                    .bool("admissible_fp32", ok32)
+                    .bool("admissible_fp64", ok64)
+                    .finish(),
+            );
+        }
+        if !json {
+            t.print();
+            println!();
+        }
+    }
+    if json {
+        println!(
+            "{}",
+            JsonObj::new()
+                .str("bench", "ozaki_frontier")
+                .bool("smoke", smoke)
+                .int("mn", mn as u64)
+                .str("gpu", gpu.name)
+                .raw("cases", &json_array(&rows))
+                .finish()
+        );
+    } else {
+        println!(
+            "(proj TFlop/s = perfmodel::ozaki_projected_tflops placement model, not a measurement;\n \
+             residual falls ~2^-beta per slice while cost grows as s(s+1)/2 terms)"
+        );
+    }
+}

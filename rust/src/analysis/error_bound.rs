@@ -19,6 +19,8 @@
 pub const U_FP32: f64 = 1.0 / (1u64 << 24) as f64;
 /// Tensor-Core accumulator unit roundoff (25-bit significand).
 pub const U_TC_ACC: f64 = 1.0 / (1u64 << 25) as f64;
+/// FP64 unit roundoff.
+pub const U_FP64: f64 = 1.0 / (1u64 << 53) as f64;
 
 /// Predicted relative residual of an RN-accumulated FP32 inner product of
 /// length k over urand(-1,1) data. The constant is the standard
@@ -48,6 +50,43 @@ pub fn fit_growth_exponent(ks: &[usize], residuals: &[f64]) -> f64 {
     let sxx: f64 = xs.iter().map(|x| x * x).sum();
     let sxy: f64 = xs.iter().zip(&ys).map(|(x, y)| x * y).sum();
     (n * sxy - sx * sy) / (n * sxx - sx * sx)
+}
+
+/// Provable worst-case bound on the normalized elementwise error of an
+/// `s`-slice Ozaki GEMM with inner dimension `k`:
+/// `max_ij |C - C̃| / (k · max|A| · max|B|) ≤ 16 · (s+1) · 2^(-β(k)·s)`.
+///
+/// Derivation: the dropped `p+q ≥ s` tail is the only error source — the
+/// slice-pair products are exact in the 25-bit TC accumulator by the β
+/// choice (`gemm::slice_bits`) and the terms are summed double-double.
+/// Each dropped diagonal `p+q = d ≥ s` contributes at most
+/// `k · σ_A σ_B · 2^(-β(d+1)) · (1 - 2^-β)^-2` per element; summing the
+/// geometric tail over `d ≥ s` and bounding `σ ≤ 2·max|·|` per operand
+/// (factor 4) and `(1-2^-β)^-2 ≤ 4` gives the stated form (the `s+1`
+/// absorbs the diagonal multiplicities). One caveat rides on top at the
+/// `2β + ⌈log₂ k⌉ = 25` boundary: the TC's final 24-bit RZ writeback can
+/// truncate one slice-grid granule on sign-aligned adversarial data,
+/// worth at most `8 · 2^(-2β) / k` normalized — inside the fp32 class
+/// tolerance everywhere, and ~16σ away from random data (see
+/// DESIGN.md §16).
+pub fn ozaki_bound(k: usize, s: usize) -> f64 {
+    let beta = crate::gemm::slice_bits(k) as i32;
+    16.0 * (s as f64 + 1.0) * 2.0f64.powi(-(beta * s as i32))
+}
+
+/// Normalized tolerance of the **fp32 accuracy class**: the established
+/// f32-method envelope [`predicted_rz`] (every f32-path method in the
+/// evaluation sits at or below coherent RZ accumulation). An Ozaki plan is
+/// fp32-admissible when [`ozaki_bound`] clears this.
+pub fn fp32_class_tol(k: usize) -> f64 {
+    predicted_rz(k)
+}
+
+/// Normalized tolerance of the **fp64 accuracy class**: coherent f64
+/// rounding over a length-k chain, `0.5 · k · u64` — what a well-ordered
+/// native FP64 GEMM guarantees.
+pub fn fp64_class_tol(k: usize) -> f64 {
+    0.5 * k as f64 * U_FP64
 }
 
 /// Predicted k at which an RZ-accumulated corrected method crosses above
@@ -113,6 +152,35 @@ mod tests {
                 markidis / p_rz < 5.0 && p_rz / markidis < 5.0,
                 "k={k} markidis {markidis} vs {p_rz}"
             );
+        }
+    }
+
+    #[test]
+    fn ozaki_bound_gates_both_accuracy_classes() {
+        use crate::gemm::{slice_bits, slices_for_fp32, slices_for_fp64};
+        // Headline pins at k=512 (β=8 after the ceil_log2 fix):
+        // fp32 class needs exactly 3 slices, fp64 exactly 7.
+        assert!(ozaki_bound(512, 3) <= fp32_class_tol(512));
+        assert!(ozaki_bound(512, 2) > fp32_class_tol(512));
+        assert!(ozaki_bound(512, 7) <= fp64_class_tol(512));
+        assert!(ozaki_bound(512, 6) > fp64_class_tol(512));
+        // The coverage-based slice counts are bound-admissible at every
+        // power of two, and the bound is strictly decreasing in s.
+        let mut k = 1usize;
+        while k <= 16384 {
+            let beta = slice_bits(k);
+            assert!(
+                ozaki_bound(k, slices_for_fp32(beta)) <= fp32_class_tol(k),
+                "k={k}: fp32 coverage slices not admissible"
+            );
+            assert!(
+                ozaki_bound(k, slices_for_fp64(beta)) <= fp64_class_tol(k),
+                "k={k}: fp64 coverage slices not admissible"
+            );
+            for s in 1..12 {
+                assert!(ozaki_bound(k, s + 1) < ozaki_bound(k, s), "k={k} s={s}");
+            }
+            k *= 2;
         }
     }
 

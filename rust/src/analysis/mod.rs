@@ -10,7 +10,8 @@ pub mod representation;
 pub mod underflow;
 
 pub use error_bound::{
-    fit_growth_exponent, predicted_rn, predicted_rz, U_FP32, U_TC_ACC,
+    fit_growth_exponent, fp32_class_tol, fp64_class_tol, ozaki_bound, predicted_rn, predicted_rz,
+    U_FP32, U_FP64, U_TC_ACC,
 };
 
 pub use mantissa_expectation::{

@@ -10,8 +10,20 @@
 //! is load-shedding, expressed in the existing error taxonomy. Untagged
 //! traffic shares one anonymous bucket, so "no tag" is itself a tenant
 //! rather than a bypass.
+//!
+//! The ledger is **bounded** (`max_buckets`): hostile or high-cardinality
+//! tags cannot grow it without limit. When the ledger is full, a new tag
+//! first tries to LRU-evict a bucket whose *projected* token count (after
+//! refill) is back at `burst` — recreating such a bucket later yields an
+//! identical bucket, so the eviction is semantically invisible. A dry or
+//! draining bucket projects below `burst` and is never evicted, so a
+//! rate-limited tenant can never launder a fresh burst through eviction.
+//! If nothing is evictable (a same-instant storm of draining buckets),
+//! overflow tags conservatively share the anonymous bucket instead of
+//! allocating: memory stays bounded and the failure mode is throttling,
+//! never growth.
 
-use std::collections::HashMap;
+use crate::planner::lru::LruMap;
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -23,11 +35,14 @@ pub struct QuotaConfig {
     /// Continuous refill rate in tokens per second (0 = no refill: `burst`
     /// calls total, useful for tests and hard caps).
     pub refill_per_s: f64,
+    /// Ledger bound: the maximum number of distinct tenant buckets held at
+    /// once (the anonymous bucket counts as one and is never evicted).
+    pub max_buckets: usize,
 }
 
 impl Default for QuotaConfig {
     fn default() -> Self {
-        QuotaConfig { burst: 64, refill_per_s: 64.0 }
+        QuotaConfig { burst: 64, refill_per_s: 64.0, max_buckets: 1024 }
     }
 }
 
@@ -36,15 +51,23 @@ struct Bucket {
     last: Instant,
 }
 
-/// The cluster's quota ledger: lazily-created token buckets keyed by tag.
+/// The cluster's quota ledger: lazily-created token buckets keyed by tag,
+/// bounded at `max_buckets` entries with projected-full LRU eviction.
 pub(crate) struct TenantQuotas {
     cfg: QuotaConfig,
-    buckets: Mutex<HashMap<String, Bucket>>,
+    buckets: Mutex<LruMap<String, Bucket>>,
 }
 
 impl TenantQuotas {
     pub(crate) fn new(cfg: QuotaConfig) -> TenantQuotas {
-        TenantQuotas { cfg, buckets: Mutex::new(HashMap::new()) }
+        // Capacity ≥ 2: the anonymous bucket plus at least one real tenant.
+        let mut map = LruMap::new(cfg.max_buckets.max(2));
+        // Pre-seed the anonymous bucket so it exists for the lifetime of
+        // the ledger and can absorb overflow tags when the map is full.
+        // `Instant::now()` here is only the refill epoch: the first
+        // acquire's `saturating_duration_since` clamps any skew to zero.
+        map.insert(String::new(), Bucket { tokens: cfg.burst as f64, last: Instant::now() });
+        TenantQuotas { cfg, buckets: Mutex::new(map) }
     }
 
     /// The configured burst capacity (reported in `QueueFull::queue_cap`).
@@ -52,25 +75,57 @@ impl TenantQuotas {
         self.cfg.burst
     }
 
+    /// Number of buckets currently held (tests: the storm bound).
+    pub(crate) fn bucket_count(&self) -> usize {
+        // tclint: allow(hot-unwrap) -- poison propagation: a panicked ledger holder
+        self.buckets.lock().unwrap().len()
+    }
+
     /// Try to spend one token from `tenant`'s bucket at time `now`.
     /// `None` tags draw from the shared anonymous bucket.
     pub(crate) fn try_acquire(&self, tenant: Option<&str>, now: Instant) -> bool {
         let key = tenant.unwrap_or("");
         let cap = self.cfg.burst as f64;
+        let refill = self.cfg.refill_per_s;
+        let spend = |b: &mut Bucket| {
+            let dt = now.saturating_duration_since(b.last).as_secs_f64();
+            b.tokens = (b.tokens + dt * refill).min(cap);
+            b.last = now;
+            if b.tokens >= 1.0 {
+                b.tokens -= 1.0;
+                true
+            } else {
+                false
+            }
+        };
         // tclint: allow(hot-unwrap) -- poison propagation: a panicked ledger holder
         let mut buckets = self.buckets.lock().unwrap();
-        let b = buckets
-            .entry(key.to_string())
-            .or_insert_with(|| Bucket { tokens: cap, last: now });
-        let dt = now.saturating_duration_since(b.last).as_secs_f64();
-        b.tokens = (b.tokens + dt * self.cfg.refill_per_s).min(cap);
-        b.last = now;
-        if b.tokens >= 1.0 {
-            b.tokens -= 1.0;
-            true
-        } else {
-            false
+        if let Some(b) = buckets.get_mut(key) {
+            return spend(b);
         }
+        if buckets.len() >= self.cfg.max_buckets.max(2) {
+            // Full ledger: evict the LRU bucket that would refill to a full
+            // burst by `now` — indistinguishable from it never existing.
+            // The anonymous bucket is permanent.
+            let evicted = buckets
+                .evict_lru_where(|k, b| {
+                    let dt = now.saturating_duration_since(b.last).as_secs_f64();
+                    !k.is_empty() && b.tokens + dt * refill >= cap
+                })
+                .is_some();
+            if !evicted {
+                // Every held bucket is mid-drain: charge the overflow tag
+                // to the anonymous bucket rather than grow or forget state.
+                return match buckets.get_mut("") {
+                    Some(b) => spend(b),
+                    None => false,
+                };
+            }
+        }
+        let mut b = Bucket { tokens: cap, last: now };
+        let ok = spend(&mut b);
+        buckets.insert(key.to_string(), b);
+        ok
     }
 }
 
@@ -79,9 +134,13 @@ mod tests {
     use super::*;
     use std::time::Duration;
 
+    fn cfg(burst: u64, refill_per_s: f64) -> QuotaConfig {
+        QuotaConfig { burst, refill_per_s, ..QuotaConfig::default() }
+    }
+
     #[test]
     fn burst_then_dry_without_refill() {
-        let q = TenantQuotas::new(QuotaConfig { burst: 2, refill_per_s: 0.0 });
+        let q = TenantQuotas::new(cfg(2, 0.0));
         let t0 = Instant::now();
         assert!(q.try_acquire(Some("a"), t0));
         assert!(q.try_acquire(Some("a"), t0));
@@ -96,7 +155,7 @@ mod tests {
 
     #[test]
     fn refill_restores_tokens() {
-        let q = TenantQuotas::new(QuotaConfig { burst: 1, refill_per_s: 10.0 });
+        let q = TenantQuotas::new(cfg(1, 10.0));
         let t0 = Instant::now();
         assert!(q.try_acquire(Some("t"), t0));
         assert!(!q.try_acquire(Some("t"), t0));
@@ -104,5 +163,96 @@ mod tests {
         let later = t0 + Duration::from_millis(200);
         assert!(q.try_acquire(Some("t"), later));
         assert!(!q.try_acquire(Some("t"), later), "cap enforced");
+    }
+
+    #[test]
+    fn tag_storm_cannot_grow_the_ledger_past_the_bound() {
+        let q = TenantQuotas::new(QuotaConfig {
+            burst: 4,
+            refill_per_s: 0.0,
+            max_buckets: 32,
+        });
+        let t0 = Instant::now();
+        for i in 0..10_000 {
+            let tag = format!("hostile-{i}");
+            // Every acquire is admitted or throttled; either way the
+            // ledger must never exceed the bound.
+            q.try_acquire(Some(&tag), t0);
+            assert!(q.bucket_count() <= 32, "ledger grew to {}", q.bucket_count());
+        }
+        assert!(q.bucket_count() <= 32);
+    }
+
+    #[test]
+    fn eviction_never_grants_a_dry_tenant_a_fresh_burst() {
+        // Tenant "dry" spends its whole burst; a storm of new tags then
+        // fills the ledger far past the bound. With no refill, "dry"
+        // projects 0 < burst, so it must survive every eviction and keep
+        // rejecting — eviction must not launder a fresh burst.
+        let q = TenantQuotas::new(QuotaConfig {
+            burst: 2,
+            refill_per_s: 0.0,
+            max_buckets: 8,
+        });
+        let t0 = Instant::now();
+        assert!(q.try_acquire(Some("dry"), t0));
+        assert!(q.try_acquire(Some("dry"), t0));
+        assert!(!q.try_acquire(Some("dry"), t0));
+        for i in 0..100 {
+            let tag = format!("storm-{i}");
+            q.try_acquire(Some(&tag), t0 + Duration::from_millis(i));
+        }
+        assert!(q.bucket_count() <= 8);
+        assert!(
+            !q.try_acquire(Some("dry"), t0 + Duration::from_millis(200)),
+            "dry tenant must still be throttled after the storm"
+        );
+    }
+
+    #[test]
+    fn overflow_tags_share_the_anonymous_bucket() {
+        // Ledger full of same-instant draining buckets: nothing is
+        // evictable, so overflow tags drain the anonymous bucket instead
+        // of allocating — and untagged traffic sees that drain.
+        let q = TenantQuotas::new(QuotaConfig {
+            burst: 2,
+            refill_per_s: 0.0,
+            max_buckets: 3,
+        });
+        let t0 = Instant::now();
+        // Fill the ledger: anonymous + t1 + t2, each spending one token
+        // (projected 1 < 2 ⇒ none evictable at t0).
+        assert!(q.try_acquire(Some("t1"), t0));
+        assert!(q.try_acquire(Some("t2"), t0));
+        assert_eq!(q.bucket_count(), 3);
+        // Overflow tags now share the anonymous bucket's 2 tokens.
+        assert!(q.try_acquire(Some("overflow-a"), t0));
+        assert!(q.try_acquire(Some("overflow-b"), t0));
+        assert!(!q.try_acquire(Some("overflow-c"), t0), "anonymous bucket dry");
+        assert!(!q.try_acquire(None, t0), "untagged traffic shares that drain");
+        assert_eq!(q.bucket_count(), 3, "overflow never allocates");
+    }
+
+    #[test]
+    fn full_idle_buckets_are_evicted_for_new_tenants() {
+        // With refill, an idle bucket projects back to a full burst and
+        // becomes evictable — new tenants keep getting real buckets.
+        let q = TenantQuotas::new(QuotaConfig {
+            burst: 1,
+            refill_per_s: 10.0,
+            max_buckets: 3,
+        });
+        let t0 = Instant::now();
+        assert!(q.try_acquire(Some("t1"), t0));
+        assert!(q.try_acquire(Some("t2"), t0));
+        assert_eq!(q.bucket_count(), 3);
+        // 1 s later both t1 and t2 project full; a new tag evicts the LRU
+        // one (t1) and gets its own fresh bucket.
+        let t1 = t0 + Duration::from_secs(1);
+        assert!(q.try_acquire(Some("t3"), t1));
+        assert_eq!(q.bucket_count(), 3, "evict-then-insert keeps the bound");
+        // The evicted tenant is not penalized: recreation is a full bucket,
+        // exactly what the projection promised.
+        assert!(q.try_acquire(Some("t1"), t1 + Duration::from_secs(1)));
     }
 }

@@ -86,6 +86,15 @@ impl Mat {
         // tclint: allow(float-fold) -- max is an order-independent reduction (f32::max absorbs NaN symmetrically); no rounding accumulates
         self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
     }
+
+    /// Exact widening to an f64 matrix (every f32 is representable).
+    pub fn to_f64(&self) -> MatF64 {
+        MatF64 {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| x as f64).collect(),
+        }
+    }
 }
 
 /// Row-major `f64` matrix (reference results).

@@ -20,7 +20,10 @@ pub use backends::{
 pub use batched::{batched_worst_residual, gemm_batched, gemm_batched_f64, BatchedOperands};
 pub use complex::{c_relative_residual, cgemm, cgemm_f64, CgemmAlgo, CMat, CMatF64};
 pub use engine::{engine_runs, gemm_engine, KernelSpec, SplitPlan, ENGINE_ID};
-pub use ozaki::{ozaki_gemm, ozaki_terms, slice_bits, slices_for_fp32};
+pub use ozaki::{
+    ceil_log2, ozaki_gemm, ozaki_gemm_f64, ozaki_terms, slice_bits, slice_operand,
+    slices_for_fp32, slices_for_fp64, SliceTarget,
+};
 pub use prepared::{bitwise_eq, content_fingerprint, gemm_tiled_prepared, SplitDedup, SplitOperand};
 pub use scaling::{apply_scale, descale_pow2, gemm_scaled, plan_scale, ScalePlan};
 pub use error::{max_rel_error, relative_residual};

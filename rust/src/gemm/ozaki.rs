@@ -1,30 +1,55 @@
 //! Ozaki-scheme GEMM (Ozaki et al. 2012; Mukunoki et al. 2020 on Tensor
-//! Cores) — the related-work baseline the paper positions against: an
-//! *error-free transformation* that splits operands into slices whose
-//! pairwise products accumulate **exactly** in the Tensor-Core datapath,
-//! recovering FP32 (or better) accuracy at the cost of `s(s+1)/2`
-//! low-precision GEMMs. The paper's point: for FP32, this is slower than
-//! both cuBLAS SGEMM and their 3-term correction — which this module's
-//! term-count model reproduces.
+//! Cores) — an *error-free transformation* that splits operands into β-bit
+//! slices whose pairwise products accumulate **exactly** in the Tensor-Core
+//! datapath. In-tree first as the related-work baseline the paper positions
+//! against for FP32 (still reproduced: the term count loses to both cuBLAS
+//! SGEMM and the 3-term correction); it is now also the repo's
+//! FP64-from-Tensor-Cores method family (ROADMAP item 3, DESIGN.md §16):
+//! the slice count `s` is a first-class accuracy knob ([`SliceTarget`]) and
+//! slice-pair terms are combined by double-double (hi/lo f64) compensated
+//! accumulation ([`ozaki_gemm_f64`]), so the dropped `p+q ≥ s` tail — not
+//! the accumulator — is the only error source.
 //!
-//! Slicing: row `i` of A is scaled by `σ_i = 2^(max exponent of the row)`;
+//! Slicing: row `i` of A is scaled by `σ_i = 2^(max exponent of the row+1)`;
 //! each slice keeps `β` significand bits on the grid `σ_i · 2^{-β(j+1)}`,
-//! extracted by truncation so `a = Σ_j s_j` exactly after `s` slices cover
-//! the 24-bit significand. `β` is chosen so a k-long dot product of two
-//! β-bit slices fits the 25-bit TC accumulator **exactly**:
-//! `2β + ceil(log2 k) ≤ 25`. B is sliced column-wise symmetrically.
+//! extracted by truncation so `a = Σ_j s_j` exactly once the slices cover
+//! the significand. `β` is chosen so a k-long dot product of two β-bit
+//! slices fits the 25-bit TC accumulator **exactly**:
+//! `2β + ⌈log₂ k⌉ ≤ 25`. B is sliced column-wise symmetrically.
 
-use super::matrix::Mat;
+use super::matrix::{Mat, MatF64};
 use crate::fp::exp2i;
-use crate::fp::mantissa::exponent_of;
 use crate::fp::rounding::narrow_to_f32;
 use crate::tcsim::{mma_tile_zero_into, MmaConfig};
 
+/// Exact `⌈log₂ k⌉` (with `ceil_log2(0)` treated as `ceil_log2(1) = 0`).
+///
+/// The original seed computed this as `usize::BITS - leading_zeros(k)`,
+/// which is `⌊log₂ k⌋ + 1` — off by one at exact powers of two, i.e. at
+/// precisely the `k` every bench and real workload uses. At k=512 that
+/// gave β=7 (4 slices, 10 TC GEMMs) where β=8 is exact (3 slices, 6 TC
+/// GEMMs): a 1.67× throughput giveaway fed into the planner's cost model.
+pub fn ceil_log2(k: usize) -> u32 {
+    let k = k.max(1);
+    k.ilog2() + u32::from(!k.is_power_of_two())
+}
+
 /// Largest per-slice significand width β such that slice-pair dot products
-/// of length `k` are exact in the 25-bit Tensor-Core accumulator.
+/// of length `k` never round inside the 25-bit Tensor-Core accumulator:
+/// maximal β subject to `2β + ⌈log₂ k⌉ ≤ 25`, clamped to `[1, 11]` (11 is
+/// f16's significand, the widest slice the fragment grid can carry).
+///
+/// Every partial sum of a slice-pair dot product is an integer number of
+/// grid granules below `2^(2β + ⌈log₂ k⌉) ≤ 2^25`, so the RZ accumulator
+/// chain is provably error-free. The final FP32 writeback (24 bits) is
+/// additionally exact whenever the bound is strict; at the `= 25` boundary
+/// it is exact unless the dot product exceeds `2^24` granules with an odd
+/// low granule — a sign-aligned adversarial construction that sign-mixed
+/// data sits ~16σ away from (the property suite pins bit-exactness at
+/// every power-of-two k; `analysis::error_bound::ozaki_bound` documents
+/// the caveat).
 pub fn slice_bits(k: usize) -> u32 {
-    let logk = (usize::BITS - k.max(1).leading_zeros()) as u32; // ceil(log2 k)+1-ish, safe side
-    ((25u32.saturating_sub(logk)) / 2).clamp(1, 11)
+    ((25u32.saturating_sub(ceil_log2(k))) / 2).clamp(1, 11)
 }
 
 /// Number of slices needed to cover FP32's 24-bit significand at width β.
@@ -32,31 +57,109 @@ pub fn slices_for_fp32(beta: u32) -> usize {
     24u32.div_ceil(beta) as usize
 }
 
-/// Row- (or column-) scaled truncation slicing. Returns `s` matrices whose
-/// sum reconstructs `m` exactly (up to the dropped tail below slice `s`),
-/// plus the per-row (or per-column) scales.
-fn slice_matrix(m: &Mat, beta: u32, s: usize, row_wise: bool) -> (Vec<Mat>, Vec<f64>) {
-    let outer = if row_wise { m.rows } else { m.cols };
+/// Number of slices for the FP64 target at width β: covers the 53-bit f64
+/// significand plus three guard bits (56), so the provable truncation
+/// bound (`analysis::error_bound::ozaki_bound`) clears the fp64 accuracy
+/// class at every k — pinned in `analysis`' tests.
+pub fn slices_for_fp64(beta: u32) -> usize {
+    56u32.div_ceil(beta) as usize
+}
+
+/// Target precision of a multi-slice Ozaki GEMM: the accuracy knob the
+/// planner's frontier and the solver's fp64 mode select on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SliceTarget {
+    /// Cover FP32's 24-bit significand ([`slices_for_fp32`]).
+    Fp32,
+    /// Cover FP64's 53-bit significand with guard bits ([`slices_for_fp64`]).
+    Fp64,
+    /// An explicit slice count (clamped to `[1, 64]`): the raw frontier knob.
+    Slices(usize),
+}
+
+impl SliceTarget {
+    /// Resolve the slice count for inner dimension `k` (β = [`slice_bits`]).
+    pub fn slices(self, k: usize) -> usize {
+        match self {
+            SliceTarget::Fp32 => slices_for_fp32(slice_bits(k)),
+            SliceTarget::Fp64 => slices_for_fp64(slice_bits(k)),
+            SliceTarget::Slices(s) => s.clamp(1, 64),
+        }
+    }
+
+    /// Short label (`fp32`, `fp64`, `s<N>`) for reports and CLI output.
+    pub fn describe(self) -> String {
+        match self {
+            SliceTarget::Fp32 => "fp32".to_string(),
+            SliceTarget::Fp64 => "fp64".to_string(),
+            SliceTarget::Slices(s) => format!("s{s}"),
+        }
+    }
+
+    /// Parse a CLI spelling: `fp32`, `fp64`, or a bare slice count.
+    pub fn parse(s: &str) -> Option<SliceTarget> {
+        match s {
+            "fp32" => Some(SliceTarget::Fp32),
+            "fp64" => Some(SliceTarget::Fp64),
+            _ => s.parse::<usize>().ok().map(SliceTarget::Slices),
+        }
+    }
+}
+
+/// Binary exponent `e` with `2^e ≤ |v| < 2^(e+1)` for normal finite `v`;
+/// subnormals report `-1022`, a safe *overestimate* (the scale σ must
+/// never undershoot a value or its slice quotient would need β+1 bits).
+fn exponent_of_f64(v: f64) -> i32 {
+    let e = ((v.to_bits() >> 52) & 0x7ff) as i32;
+    if e == 0 {
+        -1022
+    } else {
+        e - 1023
+    }
+}
+
+/// Row- (or column-) scaled truncation slicing over any f64-valued source.
+/// Slices are f32 matrices whose entries sit exactly on the β-bit grid
+/// `σ_o · 2^{-β(idx+1)}`; their sum reconstructs the source up to the tail
+/// below slice `s`. Grid levels under f32's subnormal floor (`2^-149`) are
+/// skipped — the tail simply stays unsliced, which only triggers for
+/// operands ~40 orders of magnitude below anything the solver feeds in.
+fn slice_panels<F: Fn(usize, usize) -> f64>(
+    rows: usize,
+    cols: usize,
+    get: F,
+    beta: u32,
+    s: usize,
+    row_wise: bool,
+) -> (Vec<Mat>, Vec<f64>) {
+    let outer = if row_wise { rows } else { cols };
+    let inner = if row_wise { cols } else { rows };
+    let mut scale_exp = vec![0i32; outer];
     let mut scales = vec![0.0f64; outer];
     for o in 0..outer {
         let mut max_e = i32::MIN;
-        let n_inner = if row_wise { m.cols } else { m.rows };
-        for i in 0..n_inner {
-            let v = if row_wise { m.get(o, i) } else { m.get(i, o) };
+        for i in 0..inner {
+            let v = if row_wise { get(o, i) } else { get(i, o) };
             if v != 0.0 {
-                max_e = max_e.max(exponent_of(v));
+                max_e = max_e.max(exponent_of_f64(v));
             }
         }
-        scales[o] = if max_e == i32::MIN { 1.0 } else { exp2i(max_e + 1) };
+        let se = if max_e == i32::MIN { 0 } else { max_e + 1 };
+        scale_exp[o] = se;
+        scales[o] = exp2i(se.clamp(-1021, 1023));
     }
-    let mut slices = vec![Mat::zeros(m.rows, m.cols); s];
-    for i in 0..m.rows {
-        for j in 0..m.cols {
+    let mut slices = vec![Mat::zeros(rows, cols); s];
+    for i in 0..rows {
+        for j in 0..cols {
             let o = if row_wise { i } else { j };
-            let sigma = scales[o];
-            let mut r = m.get(i, j) as f64;
+            let se = scale_exp[o];
+            let mut r = get(i, j);
             for (idx, sl) in slices.iter_mut().enumerate() {
-                let g = sigma * exp2i(-((beta as i32) * (idx as i32 + 1)));
+                let ge = se - (beta as i32) * (idx as i32 + 1);
+                if ge < -149 {
+                    break; // below the f32 slice grid: tail stays in r
+                }
+                let g = exp2i(ge);
                 let q = (r / g).trunc() * g; // truncation toward zero: exact
                 // tclint: allow(lossy-cast) -- q sits on the beta-bit slice grid by construction, so the cast is exact
                 sl.set(i, j, q as f32);
@@ -67,24 +170,55 @@ fn slice_matrix(m: &Mat, beta: u32, s: usize, row_wise: bool) -> (Vec<Mat>, Vec<
     (slices, scales)
 }
 
-/// Ozaki-scheme GEMM: `C = Σ_{p+q < s} A_p · B_q` with every slice-pair
-/// GEMM run on the (simulated) Tensor Core — each is *exact* by the β
-/// choice, so all error comes from the dropped `p+q ≥ s` tail and the
-/// final FP32 store. `s = slices_for_fp32(slice_bits(k))` recovers full
-/// FP32 accuracy.
-pub fn ozaki_gemm(a: &Mat, b: &Mat, s: usize) -> Mat {
-    assert_eq!(a.cols, b.rows);
+/// Slice an f32 operand into `s` exact β-bit slice matrices (row-wise for
+/// an A operand, column-wise for a B operand). Public so the exactness
+/// property suite can drive individual slice-pair TC GEMMs.
+pub fn slice_operand(m: &Mat, beta: u32, s: usize, row_wise: bool) -> Vec<Mat> {
+    slice_panels(m.rows, m.cols, |i, j| m.get(i, j) as f64, beta, s, row_wise).0
+}
+
+/// Internal f32 slicing that also returns the per-row/col scales (tests).
+fn slice_matrix(m: &Mat, beta: u32, s: usize, row_wise: bool) -> (Vec<Mat>, Vec<f64>) {
+    slice_panels(m.rows, m.cols, |i, j| m.get(i, j) as f64, beta, s, row_wise)
+}
+
+/// Slice an f64 operand (the solver's un-narrowed iterate): same grid,
+/// deeper slices simply keep extracting f64 significand bits.
+fn slice_matrix_f64(m: &MatF64, beta: u32, s: usize, row_wise: bool) -> Vec<Mat> {
+    slice_panels(m.rows, m.cols, |i, j| m.get(i, j), beta, s, row_wise).0
+}
+
+/// Knuth two-sum: `(sum, err)` with `sum = fl(a + b)` and
+/// `a + b = sum + err` exactly — the compensated step of the
+/// double-double term accumulator.
+fn two_sum(a: f64, b: f64) -> (f64, f64) {
+    let sum = a + b;
+    let bb = sum - a;
+    let err = (a - (sum - bb)) + (b - bb);
+    (sum, err)
+}
+
+/// Multi-slice Ozaki GEMM with an f64 result:
+/// `C = Σ_{p+q < s} A_p · B_q`, every slice-pair GEMM run on the
+/// (simulated) Tensor Core — exact by the β choice — and the terms summed
+/// in a double-double (hi/lo f64) accumulator, so accumulation across
+/// terms contributes **no** error: the dropped `p+q ≥ s` tail is the whole
+/// error budget (`analysis::error_bound::ozaki_bound`).
+/// `s = SliceTarget::Fp64.slices(k)` reaches FP64-level accuracy.
+pub fn ozaki_gemm_f64(a: &MatF64, b: &MatF64, s: usize) -> MatF64 {
+    assert_eq!(a.cols, b.rows, "inner dimensions must agree");
     let (m, k, n) = (a.rows, a.cols, b.cols);
     let beta = slice_bits(k);
-    let (a_sl, _) = slice_matrix(a, beta, s, true);
-    let (b_sl, _) = slice_matrix(b, beta, s, false);
-    let mut acc = vec![0.0f64; m * n];
+    let a_sl = slice_matrix_f64(a, beta, s, true);
+    let b_sl = slice_matrix_f64(b, beta, s, false);
+    let mut hi = vec![0.0f64; m * n];
+    let mut lo = vec![0.0f64; m * n];
     let mut tile = vec![0.0f32; m * n];
     let mut terms = 0usize;
     for p in 0..s {
         for q in 0..s {
             if p + q >= s {
-                continue; // tail below the FP32 LSB, dropped (à la eq. 24)
+                continue; // tail below the target precision, dropped (eq. 24)
             }
             terms += 1;
             // Slice values are on a coarse power-of-two grid: the TC GEMM
@@ -99,15 +233,25 @@ pub fn ozaki_gemm(a: &Mat, b: &Mat, s: usize) -> Mat {
                 k,
                 MmaConfig::TENSOR_CORE,
             );
-            for (dst, &t) in acc.iter_mut().zip(tile.iter()) {
-                *dst += t as f64; // exact: f64 accumulation across terms
+            for ((h, l), &t) in hi.iter_mut().zip(lo.iter_mut()).zip(tile.iter()) {
+                let (sum, err) = two_sum(*h, t as f64);
+                *h = sum;
+                *l += err;
             }
         }
     }
-    debug_assert_eq!(terms, s * (s + 1) / 2);
-    // The one genuinely lossy step (the "final FP32 store" above), routed
-    // through the sanctioned fp:: narrowing site.
-    Mat::from_vec(m, n, acc.iter().map(|&x| narrow_to_f32(x)).collect())
+    debug_assert_eq!(terms, ozaki_terms(s));
+    let data = hi.iter().zip(lo.iter()).map(|(&h, &l)| h + l).collect();
+    MatF64 { rows: m, cols: n, data }
+}
+
+/// Ozaki-scheme GEMM with an f32 result: the f64 core narrowed once at the
+/// end. `s = slices_for_fp32(slice_bits(k))` recovers full FP32 accuracy.
+pub fn ozaki_gemm(a: &Mat, b: &Mat, s: usize) -> Mat {
+    let c = ozaki_gemm_f64(&a.to_f64(), &b.to_f64(), s);
+    // The one genuinely lossy step (the final FP32 store), routed through
+    // the sanctioned fp:: narrowing site.
+    Mat::from_vec(c.rows, c.cols, c.data.iter().map(|&x| narrow_to_f32(x)).collect())
 }
 
 /// GEMM-term count of the scheme (performance-model input): s(s+1)/2.
@@ -116,11 +260,10 @@ pub fn ozaki_terms(s: usize) -> usize {
 }
 
 /// Projected throughput of Ozaki-on-TC for FP32 accuracy (the paper's
-/// related-work claim: slower than cuBLAS SGEMM for FP32): TC peak divided
-/// by the term count, with corrected-kernel-class utilization.
+/// related-work claim: slower than cuBLAS SGEMM for FP32). Delegates to
+/// `perfmodel::ozaki_projected_tflops` at the FP32-target slice count.
 pub fn projected_tflops_fp32(gpu: &crate::perfmodel::GpuSpec, k: usize) -> f64 {
-    let s = slices_for_fp32(slice_bits(k));
-    gpu.fp16_tc_tflops / ozaki_terms(s) as f64 * 0.45
+    crate::perfmodel::ozaki_projected_tflops(gpu, slices_for_fp32(slice_bits(k)))
 }
 
 #[cfg(test)]
@@ -130,13 +273,50 @@ mod tests {
     use crate::matgen::urand;
 
     #[test]
+    fn ceil_log2_is_exact() {
+        for (k, want) in
+            [(1usize, 0u32), (2, 1), (3, 2), (4, 2), (5, 3), (511, 9), (512, 9), (513, 10),
+             (1024, 10), (16384, 14)]
+        {
+            assert_eq!(ceil_log2(k), want, "k={k}");
+        }
+    }
+
+    #[test]
     fn beta_and_slice_counts() {
-        // k = 1024: ceil-ish log2 = 11 -> beta = 7 -> 4 slices for 24 bits.
-        let b = slice_bits(1024);
-        assert!((6..=8).contains(&b), "beta {b}");
-        assert_eq!(slices_for_fp32(6), 4);
+        // The headline pin: at k=512 the exact bound admits β=8, giving
+        // 3 slices / 6 TC GEMM terms for the FP32 target (the old
+        // floor(log2)+1 gave β=7: 4 slices, 10 terms — a 1.67× giveaway).
+        assert_eq!(slice_bits(512), 8);
         assert_eq!(slices_for_fp32(8), 3);
-        assert_eq!(ozaki_terms(4), 10);
+        assert_eq!(ozaki_terms(3), 6);
+        assert_eq!(SliceTarget::Fp32.slices(512), 3);
+        // FP64 target at k=512: 7 slices, 28 terms.
+        assert_eq!(slices_for_fp64(8), 7);
+        assert_eq!(SliceTarget::Fp64.slices(512), 7);
+        assert_eq!(ozaki_terms(7), 28);
+        // β maximal subject to 2β + ceil(log2 k) ≤ 25 across every power
+        // of two up to 16384 (the clamp binds only for tiny k).
+        let mut k = 1usize;
+        while k <= 16384 {
+            let b = slice_bits(k);
+            let logk = ceil_log2(k);
+            assert_eq!(b, ((25 - logk) / 2).clamp(1, 11), "k={k}");
+            if b < 11 {
+                assert!(2 * b + logk <= 25, "k={k}: exactness bound violated");
+                assert!(2 * (b + 1) + logk > 25, "k={k}: beta not maximal");
+            }
+            k *= 2;
+        }
+        // Non-powers of two round the log up: 777 needs ceil(log2)=10.
+        assert_eq!(slice_bits(777), 7);
+        assert_eq!(slice_bits(1024), 7);
+        // Explicit-slice targets clamp to a sane range.
+        assert_eq!(SliceTarget::Slices(0).slices(512), 1);
+        assert_eq!(SliceTarget::Slices(5).slices(512), 5);
+        assert_eq!(SliceTarget::parse("fp64"), Some(SliceTarget::Fp64));
+        assert_eq!(SliceTarget::parse("4"), Some(SliceTarget::Slices(4)));
+        assert_eq!(SliceTarget::parse("nope"), None);
     }
 
     #[test]
@@ -156,22 +336,67 @@ mod tests {
     }
 
     #[test]
+    fn f64_slicing_extends_below_f32() {
+        // An f64 source with significand bits far past f32's 24: seven
+        // β=8 slices must reconstruct it to ~2^-56 relative.
+        let src = MatF64 {
+            rows: 4,
+            cols: 4,
+            data: (0..16).map(|i| (1.0 + i as f64 * 0.37).sin()).collect(),
+        };
+        let s = slices_for_fp64(8);
+        let slices = slice_matrix_f64(&src, 8, s, true);
+        for i in 0..4 {
+            for j in 0..4 {
+                let sum: f64 = slices.iter().map(|sl| sl.get(i, j) as f64).sum();
+                let err = (sum - src.get(i, j)).abs();
+                assert!(err <= src.get(i, j).abs() * exp2i(-55) + 1e-300, "err {err:e}");
+            }
+        }
+    }
+
+    #[test]
     fn slice_pair_products_exact_in_tc() {
         // The scheme's defining invariant: a slice-pair GEMM on the RZ
         // Tensor Core equals the f64 reference bit-for-bit (no rounding
-        // ever fires inside the accumulator).
-        let k = 256;
-        let a = urand(8, k, -1.0, 1.0, 5);
-        let b = urand(k, 8, -1.0, 1.0, 6);
-        let beta = slice_bits(k);
-        let (a_sl, _) = slice_matrix(&a, beta, 2, true);
-        let (b_sl, _) = slice_matrix(&b, beta, 2, false);
-        let mut d = vec![0.0f32; 64];
-        mma_tile_zero_into(&mut d, &a_sl[0].data, &b_sl[0].data, 8, 8, k, MmaConfig::TENSOR_CORE);
-        let r = gemm_f64(&a_sl[0], &b_sl[0]);
-        for (got, want) in d.iter().zip(r.data.iter()) {
-            assert_eq!(*got as f64, *want, "slice GEMM not exact");
+        // ever fires inside the accumulator). k=512 exercises the
+        // corrected bound at its 2β + ceil(log2 k) = 25 boundary.
+        for k in [256usize, 512] {
+            let a = urand(8, k, -1.0, 1.0, 5);
+            let b = urand(k, 8, -1.0, 1.0, 6);
+            let beta = slice_bits(k);
+            let a_sl = slice_operand(&a, beta, 2, true);
+            let b_sl = slice_operand(&b, beta, 2, false);
+            for (p, q) in [(0usize, 0usize), (0, 1), (1, 0)] {
+                let mut d = vec![0.0f32; 64];
+                mma_tile_zero_into(
+                    &mut d,
+                    &a_sl[p].data,
+                    &b_sl[q].data,
+                    8,
+                    8,
+                    k,
+                    MmaConfig::TENSOR_CORE,
+                );
+                let r = gemm_f64(&a_sl[p], &b_sl[q]);
+                for (got, want) in d.iter().zip(r.data.iter()) {
+                    assert_eq!(*got as f64, *want, "k={k} pair ({p},{q}) not exact");
+                }
+            }
         }
+    }
+
+    #[test]
+    fn two_sum_is_error_free() {
+        // 1 + 2^-60 loses the tail in plain f64; two-sum recovers it in
+        // the compensation term so hi+lo round-trips the cancellation.
+        let (mut hi, mut lo) = (0.0f64, 0.0f64);
+        for t in [1.0f64, exp2i(-60), exp2i(-60), -1.0] {
+            let (sum, err) = two_sum(hi, t);
+            hi = sum;
+            lo += err;
+        }
+        assert_eq!(hi + lo, exp2i(-59));
     }
 
     #[test]
@@ -180,13 +405,35 @@ mod tests {
         let a = urand(16, k, -1.0, 1.0, 7);
         let b = urand(k, 16, -1.0, 1.0, 8);
         let r = gemm_f64(&a, &b);
-        let s = slices_for_fp32(slice_bits(k));
+        let s = SliceTarget::Fp32.slices(k);
+        assert_eq!(s, 3, "corrected bound: 3 slices at k=512");
         let c = ozaki_gemm(&a, &b, s);
         let e = relative_residual(&r, &c);
         let simt = relative_residual(&r, &Method::Fp32Simt.run(&a, &b, &TileConfig::default()));
         // Error-free transformation: at least FP32-level (usually better —
-        // only the final store rounds).
+        // only the dropped tail and the final store round).
         assert!(e <= simt * 1.5 + 1e-12, "ozaki {e} vs simt {simt}");
+    }
+
+    #[test]
+    fn fp64_target_runs_decades_below_the_f32_floor() {
+        let k = 256;
+        let a = urand(12, k, -1.0, 1.0, 9);
+        let b = urand(k, 12, -1.0, 1.0, 10);
+        let r = gemm_f64(&a, &b);
+        let (a64, b64) = (a.to_f64(), b.to_f64());
+        let err = |s: usize| {
+            let c = ozaki_gemm_f64(&a64, &b64, s);
+            let mut num = 0.0f64;
+            for (x, y) in c.data.iter().zip(r.data.iter()) {
+                num += (x - y) * (x - y);
+            }
+            num.sqrt() / r.fro_norm()
+        };
+        let e32 = err(SliceTarget::Fp32.slices(k));
+        let e64 = err(SliceTarget::Fp64.slices(k));
+        assert!(e64 <= 1e-13, "fp64 target residual {e64:e}");
+        assert!(e64 <= e32 / 1e3, "fp64 {e64:e} not ≥3 decades below fp32 {e32:e}");
     }
 
     #[test]

@@ -19,7 +19,12 @@
 //!   ([`gemm::engine`] — SoA split panels, whole-panel batched rounding,
 //!   per-worker arenas, method dispatch hoisted out of the k-loop) that
 //!   every hot path runs, property-tested bit-identical to the reference
-//!   for all thirteen methods.
+//!   for all thirteen methods. Beyond f32, [`gemm::ozaki`] is the
+//!   multi-slice FP64-from-Tensor-Cores family (DESIGN.md §16): exact
+//!   β-bit slicing under `2β + ⌈log2 k⌉ ≤ 25`, error-free slice-pair TC
+//!   GEMMs, double-double reassembly, with
+//!   [`gemm::SliceTarget`]`::{Fp32, Fp64, Slices(s)}` picking the slice
+//!   count per accuracy target.
 //! * [`matgen`], [`analysis`] — workload generators (eq. 25, STARS-H-like)
 //!   and the paper's theory (Tables 1–2, Fig. 8, Fig. 9).
 //! * [`perfmodel`], [`autotune`] — the GPU throughput/power/roofline
@@ -37,7 +42,10 @@
 //!   ([`solver::DirectBackend`]) or through the full service
 //!   ([`solver::ServiceBackend`] — planner, shard engine and SplitCache
 //!   engaged), with bit-identical trajectories across the two paths (the
-//!   deepest whole-stack determinism test; `tcec solve`).
+//!   deepest whole-stack determinism test; `tcec solve`). The fp64-target
+//!   mode ([`solver::OzakiBackend`], `tcec solve --target fp64`) answers
+//!   matvecs natively in f64 through [`solver::Backend::gemm_f64`], so IR
+//!   converges the FP64-verified residual decades below the f32 floor.
 //! * [`api`] — L3-front, the **one supported client surface** (DESIGN.md
 //!   §10): [`api::Client`]/[`api::Session`] over a running service, the
 //!   [`api::GemmCall`] builder (policy / deadline / priority / tag), the

@@ -23,9 +23,11 @@ USAGE:
   tcec shard     [--method M] [--m N --n N --k N] [--workers W] [--kslices S] [--threshold F]
   tcec plan      [--m N --n N --k N] [--policy fp32|low|strict] [--class C | --workload W]
                  [--shard] [--shard-workers W] [--probe N] [--no-autotune]
+                 [--target fp32|fp64|S]   (ozaki slice-count frontier view)
   tcec solve     [--algo cg|ir] [--n N] [--nrhs R] [--method M] [--cond C] [--tol T]
                  [--max-iters I] [--seed S] [--trajectory] [--service] [--workers W]
-                 [--shard] [--shard-workers W] [--split-cache N]   (--help for examples)
+                 [--shard] [--shard-workers W] [--split-cache N]
+                 [--target fp32|fp64|S]   (--help for examples)
   tcec serve     [--requests N] [--size N] [--workers W] [--batch B] [--artifacts DIR]
                  [--shard] [--shard-workers W] [--split-cache N] [--planner]
                  [--queue-cap N] [--deadline-ms D] [--reject-stats]
@@ -65,6 +67,14 @@ tcec solve — mixed-precision iterative solve of A·X = B (DESIGN.md §11)
   --max-iters I      iteration cap (default 500)
   --seed S           system seed (default 7)
   --trajectory       print the per-iteration residual table
+  --target T         run the matvec on the multi-slice Ozaki backend at
+                     accuracy target T (fp32, fp64, or an explicit slice
+                     count): the fp64 target answers the matvec natively in
+                     f64 and converges the FP64-verified residual decades
+                     below any f32 method's floor (DESIGN.md §16). The
+                     requested --method still runs for contrast. Default
+                     --tol becomes 1e-12 under --target fp64. Not
+                     combinable with --service (in-process backend only).
   --service          ALSO run the solve through the full GEMM service
                      (planner + optional shard engine + SplitCache) and verify
                      the trajectory is bit-identical to the direct run
@@ -78,6 +88,7 @@ EXAMPLES:
   tcec solve --method fp16tc --cond 1e4 --trajectory     # watch the stall
   tcec solve --algo ir --method ours_tf32tc --tol 1e-5   # 1e-6 sits at the
                                                          # f32 matvec floor
+  tcec solve --algo ir --target fp64 --trajectory        # converge BELOW it
 ";
 
 /// Strict method flag: unknown names are an error listing every valid
@@ -237,6 +248,12 @@ fn cmd_plan(args: &Args) {
     let m = args.usize_flag("m", 1024);
     let n = args.usize_flag("n", 1024);
     let k = args.usize_flag("k", 1024);
+    // `--target`: the ozaki accuracy-vs-cost frontier view instead of the
+    // direct-method explain (DESIGN.md §16).
+    if let Some(ts) = args.str_flag("target") {
+        cmd_plan_ozaki(m, n, k, ts);
+        return;
+    }
     let policy = parse_policy_flag(args);
     let cfg = PlannerConfig {
         autotune_tiles: !args.bool_flag("no-autotune"),
@@ -306,12 +323,61 @@ fn cmd_plan(args: &Args) {
     table.print();
 }
 
+/// `tcec plan --target`: the multi-slice Ozaki frontier at this shape —
+/// every slice count with its provable bound, term count, projected
+/// throughput and accuracy-class admissibility, plus the planned point.
+fn cmd_plan_ozaki(m: usize, n: usize, k: usize, target_str: &str) {
+    use tcec::gemm::{ceil_log2, slice_bits, slices_for_fp64, SliceTarget};
+    use tcec::planner::{ozaki_frontier, plan_ozaki};
+    let Some(target) = SliceTarget::parse(target_str) else {
+        eprintln!("unknown --target `{target_str}` — valid: fp32, fp64, or a slice count");
+        std::process::exit(2);
+    };
+    let pcfg = PlannerConfig::default();
+    let plan = plan_ozaki(m, n, k, target, &pcfg);
+    let chosen = plan.ozaki_slices.unwrap_or(1);
+    let beta = slice_bits(k);
+    let max_s = slices_for_fp64(beta).max(chosen) + 1;
+    println!(
+        "ozaki frontier for ({m} x {k}) * ({k} x {n}), target {}:",
+        target.describe()
+    );
+    println!(
+        "  beta = {beta} bits/slice (max subject to 2*beta + ceil_log2(k) = {} <= 25)",
+        2 * beta + ceil_log2(k)
+    );
+    let yn = |b: bool| if b { "yes" } else { "no" }.to_string();
+    let mut table =
+        Table::new(&["slices", "TC terms", "error bound", "proj TFlop/s", "fp32", "fp64", ""]);
+    for pt in ozaki_frontier(&pcfg.gpu, k, max_s) {
+        table.row(&[
+            pt.slices.to_string(),
+            pt.terms.to_string(),
+            format!("{:.2e}", pt.bound),
+            format!("{:.1}", pt.est_tflops),
+            yn(pt.admissible_fp32),
+            yn(pt.admissible_fp64),
+            if pt.slices == chosen { "<-- plan".to_string() } else { String::new() },
+        ]);
+    }
+    table.print();
+    println!(
+        "  plan: {chosen} slices, {} TC GEMM terms, projected {:.1} TFlop/s ({})",
+        tcec::gemm::ozaki_terms(chosen),
+        plan.est_cost_tflops,
+        pcfg.gpu.name
+    );
+}
+
 /// `tcec solve`: mixed-precision iterative solve (DESIGN.md §11) — block
 /// CG or Jacobi IR with the matvec on any GEMM method, in-process or
 /// through the full service, with the bit-identity check between the two.
 fn cmd_solve(args: &Args) {
+    use tcec::gemm::SliceTarget;
     use tcec::matgen::{jacobi_system, spd_system};
-    use tcec::solver::{solve, Algo, DirectBackend, ServiceBackend, SolveReport, SolverConfig};
+    use tcec::solver::{
+        solve, Algo, DirectBackend, OzakiBackend, ServiceBackend, SolveReport, SolverConfig,
+    };
 
     if args.bool_flag("help") {
         print!("{SOLVE_USAGE}");
@@ -324,12 +390,22 @@ fn cmd_solve(args: &Args) {
             std::process::exit(2);
         }
     };
+    let target = args.str_flag("target").map(|s| match SliceTarget::parse(s) {
+        Some(t) => t,
+        None => {
+            eprintln!("unknown --target `{s}` — valid: fp32, fp64, or a slice count");
+            std::process::exit(2);
+        }
+    });
     let n = args.usize_flag("n", 128);
     let nrhs = args.usize_flag("nrhs", 8);
     let method = parse_method_flag(args, Method::OursHalfHalf);
     let cond = args.f64_flag("cond", 1e3);
+    // The fp64 target converges far below the f32-era default tolerance;
+    // follow it down unless the user pins --tol.
+    let default_tol = if target == Some(SliceTarget::Fp64) { 1e-12 } else { 1e-6 };
     let cfg = SolverConfig {
-        tol: args.f64_flag("tol", 1e-6),
+        tol: args.f64_flag("tol", default_tol),
         max_iters: args.usize_flag("max-iters", 500),
     };
     let seed = args.u64_flag("seed", 7);
@@ -338,6 +414,10 @@ fn cmd_solve(args: &Args) {
         Algo::JacobiIr => jacobi_system(n, nrhs, 0.45, seed),
     };
     let service = args.bool_flag("service");
+    if service && target.is_some() {
+        eprintln!("--target runs the in-process ozaki backend; it cannot combine with --service");
+        std::process::exit(2);
+    }
     let shard_cfg = if args.bool_flag("shard") {
         Some(shard::ShardConfig {
             workers: args.usize_flag("shard-workers", 4),
@@ -387,6 +467,38 @@ fn cmd_solve(args: &Args) {
     fn fail(e: tcec::solver::SolveError) -> ! {
         eprintln!("{e}");
         std::process::exit(1);
+    }
+
+    if let Some(t) = target {
+        // Fp64-target mode (DESIGN.md §16): the ozaki backend answers the
+        // matvec natively in f64, so the FP64-verified residual keeps
+        // falling where every f32 method floors. The requested --method
+        // runs afterwards under the same budget for the contrast.
+        let oz = OzakiBackend::new(t);
+        let t0 = std::time::Instant::now();
+        let orep = solve(algo, &a, &b, &oz, &cfg).unwrap_or_else(|e| fail(e));
+        print_report(&oz.label(), &orep, t0.elapsed().as_secs_f64());
+        let direct = DirectBackend::with_tile(method, tile);
+        let t0 = std::time::Instant::now();
+        let frep = solve(algo, &a, &b, &direct, &cfg).unwrap_or_else(|e| fail(e));
+        print_report(&direct.label(), &frep, t0.elapsed().as_secs_f64());
+        let floor = frep.best_true_resid();
+        let reached = orep.best_true_resid();
+        println!(
+            "\nFP64-verified floors: {} reaches {reached:.3e}; {} floors at {floor:.3e} — \
+             {:.1} decades lower",
+            oz.label(),
+            direct.label(),
+            (floor / reached.max(1e-300)).log10()
+        );
+        if args.bool_flag("trajectory") {
+            let mut tb = Table::new(&["iter", "solver resid", "FP64-verified"]);
+            for (i, (r, tr)) in orep.resid.iter().zip(&orep.true_resid).enumerate() {
+                tb.row(&[(i + 1).to_string(), format!("{r:.6e}"), format!("{tr:.6e}")]);
+            }
+            tb.print();
+        }
+        return;
     }
 
     let direct = DirectBackend::with_tile(method, tile);
@@ -661,6 +773,7 @@ fn cmd_cluster(args: &Args) {
         builder = builder.quota(QuotaConfig {
             burst: args.u64_flag("quota-burst", 64),
             refill_per_s: args.f64_flag("quota-refill", 64.0),
+            ..QuotaConfig::default()
         });
     }
     let cluster = builder.build_sim();

@@ -13,6 +13,7 @@ pub use power::{avg_power_w, energy_per_gemm_j, gflops_per_watt, peak_gflops_per
 pub use roofline::{figure15_points, roof, RooflinePoint};
 pub use specs::{GpuSpec, A100, ALL_GPUS, RTX_3090, RTX_A6000};
 pub use throughput::{
-    arithmetic_intensity, compute_ceiling, peak_tflops, projected_tflops, ramp, utilization,
+    arithmetic_intensity, compute_ceiling, ozaki_projected_tflops, peak_tflops, projected_tflops,
+    ramp, utilization,
 };
 pub use topology::{projected_cluster_tflops, ClusterTopology};

@@ -9,6 +9,7 @@
 //! future unification would migrate it onto this type.) Eviction is a
 //! linear scan, fine at the bounded capacities these caches run with.
 
+use std::borrow::Borrow;
 use std::collections::HashMap;
 use std::hash::Hash;
 
@@ -46,6 +47,38 @@ impl<K: Eq + Hash + Clone, V> LruMap<K, V> {
             }
             None => None,
         }
+    }
+
+    /// Look up `key` for mutation, restamping it most-recently-used on a
+    /// hit. Borrow-generic so a `&str` can probe a `String`-keyed map.
+    pub fn get_mut<Q>(&mut self, key: &Q) -> Option<&mut V>
+    where
+        K: Borrow<Q>,
+        Q: Eq + Hash + ?Sized,
+    {
+        self.tick += 1;
+        let tick = self.tick;
+        match self.map.get_mut(key) {
+            Some(e) => {
+                e.last_used = tick;
+                Some(&mut e.value)
+            }
+            None => None,
+        }
+    }
+
+    /// Remove and return the least-recently-used entry **among those the
+    /// predicate accepts**; `None` if no entry qualifies. Lets callers
+    /// protect entries whose eviction would be observable (the quota
+    /// tier's non-full buckets) while still bounding the map.
+    pub fn evict_lru_where<F: Fn(&K, &V) -> bool>(&mut self, pred: F) -> Option<(K, V)> {
+        let victim = self
+            .map
+            .iter()
+            .filter(|(k, e)| pred(k, &e.value))
+            .min_by_key(|(_, e)| e.last_used)
+            .map(|(k, _)| k.clone())?;
+        self.map.remove(&victim).map(|e| (victim, e.value))
     }
 
     /// Insert `key → value`, evicting the least-recently-used entry when
@@ -95,5 +128,33 @@ mod tests {
         assert_eq!(lru.len(), 2);
         assert_eq!(lru.get(&1), Some(&"uno"));
         assert_eq!(lru.get(&3), Some(&"three"));
+    }
+
+    #[test]
+    fn get_mut_restamps_and_borrows() {
+        let mut lru: LruMap<String, u32> = LruMap::new(2);
+        lru.insert("a".to_string(), 1);
+        lru.insert("b".to_string(), 2);
+        if let Some(v) = lru.get_mut("a") {
+            *v = 10; // &str probe against String keys, and "a" now hottest
+        }
+        lru.insert("c".to_string(), 3); // evicts "b"
+        assert_eq!(lru.get_mut("b"), None);
+        assert_eq!(lru.get_mut("a"), Some(&mut 10));
+    }
+
+    #[test]
+    fn filtered_eviction_respects_the_predicate() {
+        let mut lru: LruMap<u32, u32> = LruMap::new(4);
+        for k in 0..4 {
+            lru.insert(k, k * 10);
+        }
+        // Coldest is 0, but the predicate protects even keys: 1 goes.
+        let gone = lru.evict_lru_where(|k, _| k % 2 == 1);
+        assert_eq!(gone, Some((1, 10)));
+        assert_eq!(lru.len(), 3);
+        // Nothing qualifies → None, map untouched.
+        assert_eq!(lru.evict_lru_where(|_, &v| v > 100), None);
+        assert_eq!(lru.len(), 3);
     }
 }

@@ -25,7 +25,7 @@
 //! routing table they had.
 
 pub mod cache;
-mod lru;
+pub(crate) mod lru;
 pub mod probe;
 
 pub use cache::{choose_tile, tile_is_safe, PlanCache, PlanSelector};
@@ -106,6 +106,11 @@ pub struct ExecPlan {
     /// Surfaced so the service can tally per-class traffic in `Metrics`
     /// (the telemetry layer's `range_class` counter).
     pub class: Option<RangeClass>,
+    /// Ozaki slice count when this plan runs the multi-slice scheme
+    /// ([`plan_ozaki`]); `None` on every direct-method plan. Cost for
+    /// `Some(s)` plans is `ozaki_terms(s)`-scaled
+    /// (`perfmodel::ozaki_projected_tflops`).
+    pub ozaki_slices: Option<usize>,
 }
 
 impl ExecPlan {
@@ -216,6 +221,93 @@ fn build_plan(
         prescale: method == Method::OursHalfHalfPre,
         est_cost_tflops: est,
         class,
+        ozaki_slices: None,
+    }
+}
+
+/// One point on the Ozaki accuracy-vs-cost frontier at inner dimension
+/// `k`: a slice count with its provable error bound, term count, projected
+/// throughput, and which accuracy classes it clears.
+#[derive(Debug, Clone)]
+pub struct OzakiPoint {
+    /// Slice count `s` of this frontier point.
+    pub slices: usize,
+    /// Slice-pair GEMM terms the Tensor Core must run: `s(s+1)/2`.
+    pub terms: usize,
+    /// Provable normalized error bound (`analysis::ozaki_bound`).
+    pub bound: f64,
+    /// Projected saturation throughput at this term count
+    /// (`perfmodel::ozaki_projected_tflops`).
+    pub est_tflops: f64,
+    /// True when `bound` clears the fp32 accuracy class
+    /// (`analysis::fp32_class_tol`).
+    pub admissible_fp32: bool,
+    /// True when `bound` clears the fp64 accuracy class
+    /// (`analysis::fp64_class_tol`).
+    pub admissible_fp64: bool,
+}
+
+/// The Ozaki accuracy-vs-cost frontier at inner dimension `k`: one
+/// [`OzakiPoint`] per slice count `1..=max_s`, monotone in both accuracy
+/// (bound shrinks) and cost (throughput shrinks). The `tcec plan
+/// --target` view, and what [`plan_ozaki`] selects on.
+pub fn ozaki_frontier(gpu: &GpuSpec, k: usize, max_s: usize) -> Vec<OzakiPoint> {
+    use crate::analysis::{fp32_class_tol, fp64_class_tol, ozaki_bound};
+    (1..=max_s.max(1))
+        .map(|s| {
+            let bound = ozaki_bound(k, s);
+            OzakiPoint {
+                slices: s,
+                terms: crate::gemm::ozaki_terms(s),
+                bound,
+                est_tflops: crate::perfmodel::ozaki_projected_tflops(gpu, s),
+                admissible_fp32: bound <= fp32_class_tol(k),
+                admissible_fp64: bound <= fp64_class_tol(k),
+            }
+        })
+        .collect()
+}
+
+/// Plan a multi-slice Ozaki execution for an `m×k · k×n` problem: the
+/// cheapest slice count whose provable bound meets `target`'s accuracy
+/// class (minimal admissible `s` — cost is strictly decreasing in terms,
+/// so minimal `s` is cheapest), falling back to the significand-coverage
+/// count `target.slices(k)` if the bound alone never clears the class
+/// within the search window. `SliceTarget::Slices(s)` pins `s` exactly.
+/// The plan's `method` records the underlying TC primitive (`Fp16Tc`);
+/// `ozaki_slices` is what the executor dispatches on.
+pub fn plan_ozaki(
+    m: usize,
+    n: usize,
+    k: usize,
+    target: crate::gemm::SliceTarget,
+    cfg: &PlannerConfig,
+) -> ExecPlan {
+    use crate::analysis::{fp32_class_tol, fp64_class_tol, ozaki_bound};
+    use crate::gemm::SliceTarget;
+    let coverage = target.slices(k);
+    let s = match target {
+        SliceTarget::Slices(s) => s.clamp(1, 64),
+        SliceTarget::Fp32 | SliceTarget::Fp64 => {
+            let tol =
+                if target == SliceTarget::Fp32 { fp32_class_tol(k) } else { fp64_class_tol(k) };
+            (1..=coverage).find(|&s| ozaki_bound(k, s) <= tol).unwrap_or(coverage)
+        }
+    };
+    let degenerate = m == 0 || n == 0 || k == 0;
+    let est = if degenerate {
+        0.0
+    } else {
+        crate::perfmodel::ozaki_projected_tflops(&cfg.gpu, s)
+    };
+    ExecPlan {
+        method: Method::Fp16Tc,
+        tile: TileConfig::default(),
+        shard: None,
+        prescale: false,
+        est_cost_tflops: est,
+        class: None,
+        ozaki_slices: Some(s),
     }
 }
 
@@ -520,6 +612,33 @@ mod tests {
         assert_eq!(ex.rejected[0].method, Method::OursTf32);
         let inadmissible = ex.rejected.iter().filter(|r| !r.admissible).count();
         assert!(inadmissible >= 2, "at least two inadmissible alternatives reported");
+    }
+
+    #[test]
+    fn ozaki_frontier_is_monotone_and_gates_classes() {
+        use crate::gemm::SliceTarget;
+        let pts = ozaki_frontier(&A100, 512, 8);
+        assert_eq!(pts.len(), 8);
+        for w in pts.windows(2) {
+            assert!(w[1].bound < w[0].bound, "accuracy improves with s");
+            assert!(w[1].est_tflops < w[0].est_tflops, "cost grows with s");
+            assert!(w[1].terms > w[0].terms);
+        }
+        // k=512 pins (β=8 post-fix): fp32 opens at s=3, fp64 at s=7.
+        assert!(!pts[1].admissible_fp32 && pts[2].admissible_fp32);
+        assert!(!pts[5].admissible_fp64 && pts[6].admissible_fp64);
+        // plan_ozaki picks the minimal admissible point per target.
+        let cfg = PlannerConfig::default();
+        let p32 = plan_ozaki(64, 64, 512, SliceTarget::Fp32, &cfg);
+        assert_eq!(p32.ozaki_slices, Some(3));
+        let p64 = plan_ozaki(64, 64, 512, SliceTarget::Fp64, &cfg);
+        assert_eq!(p64.ozaki_slices, Some(7));
+        assert!(p64.est_cost_tflops < p32.est_cost_tflops, "fp64 costs more");
+        let pinned = plan_ozaki(64, 64, 512, SliceTarget::Slices(5), &cfg);
+        assert_eq!(pinned.ozaki_slices, Some(5));
+        // Direct-method plans never carry a slice count.
+        let direct = plan(64, 64, 512, RangeClass::HalfHalfExact, Policy::Fp32Accuracy, &cfg);
+        assert_eq!(direct.ozaki_slices, None);
     }
 
     #[test]

@@ -126,6 +126,7 @@ fn sharded_gemm_impl(
             prescale: false,
             class: None,
             est_cost_tflops: 0.0,
+            ozaki_slices: None,
         })
     });
 
@@ -268,6 +269,7 @@ fn sharded_gemm_impl(
                     prescale: method == Method::OursHalfHalfPre,
                     class: None,
                     est_cost_tflops: 0.0,
+                    ozaki_slices: None,
                 };
                 inner.execute_planned(&p, &key, &reqs)
             }
@@ -511,6 +513,7 @@ mod tests {
             prescale: false,
             class: None,
             est_cost_tflops: 0.0,
+            ozaki_slices: None,
         };
         let out = ex.execute_planned(&unsharded, &key, &reqs);
         assert_eq!(out[0].data, Method::Fp32Simt.run(&a, &b, &tile).data);
@@ -522,6 +525,7 @@ mod tests {
             prescale: false,
             class: None,
             est_cost_tflops: 0.0,
+            ozaki_slices: None,
         };
         let out = ex.execute_planned(&sharded, &key, &reqs);
         assert_eq!(out[0].data, Method::Fp32Simt.run(&a, &b, &sp.equivalent_tile()).data);

@@ -20,7 +20,7 @@
 use super::SolveError;
 use crate::api::Session;
 use crate::coordinator::SplitCache;
-use crate::gemm::{Mat, Method, TileConfig};
+use crate::gemm::{Mat, MatF64, Method, TileConfig};
 
 /// One f32 GEMM (`C = A·B`) through some execution path. Implementations
 /// must be deterministic: the same operands always produce the same bits.
@@ -28,6 +28,14 @@ pub trait Backend {
     fn gemm(&self, a: &Mat, b: &Mat) -> Result<Mat, SolveError>;
     /// Human-readable label for reports.
     fn label(&self) -> String;
+    /// Native f64-precision matvec `A·P`, for backends whose numerics
+    /// exceed f32 (the multi-slice Ozaki family): `None` (the default)
+    /// routes `matvec_f32` through the normalize → f32 GEMM → descale
+    /// path; `Some` bypasses it, so the iterate is never narrowed and the
+    /// solve can converge below the f32 residual floor.
+    fn gemm_f64(&self, _a: &Mat, _p: &MatF64) -> Option<Result<MatF64, SolveError>> {
+        None
+    }
 }
 
 /// Number of prepared operands a [`DirectBackend`] keeps: the solve's
@@ -87,6 +95,50 @@ impl Backend for DirectBackend {
 
     fn label(&self) -> String {
         format!("direct:{}", self.method.name())
+    }
+}
+
+/// Multi-slice Ozaki backend: the solver's FP64-from-Tensor-Cores path
+/// (DESIGN.md §16). Every matvec runs [`crate::gemm::ozaki_gemm_f64`] at
+/// the slice count `target` resolves for the problem's k — slice-pair TC
+/// GEMMs, exact by construction, double-double term accumulation — and
+/// returns an **f64** result through [`Backend::gemm_f64`], so iterative
+/// refinement never narrows the iterate and converges decades below any
+/// f32 method's residual floor (`rust/tests/solver.rs` pins ≥ 3).
+pub struct OzakiBackend {
+    target: crate::gemm::SliceTarget,
+}
+
+impl OzakiBackend {
+    /// Backend at an explicit accuracy target.
+    pub fn new(target: crate::gemm::SliceTarget) -> OzakiBackend {
+        OzakiBackend { target }
+    }
+
+    /// The fp64-target backend — `tcec solve --target fp64`.
+    pub fn fp64() -> OzakiBackend {
+        OzakiBackend::new(crate::gemm::SliceTarget::Fp64)
+    }
+
+    /// The accuracy target this backend slices for.
+    pub fn target(&self) -> crate::gemm::SliceTarget {
+        self.target
+    }
+}
+
+impl Backend for OzakiBackend {
+    fn gemm(&self, a: &Mat, b: &Mat) -> Result<Mat, SolveError> {
+        let s = self.target.slices(a.cols);
+        Ok(crate::gemm::ozaki_gemm(a, b, s))
+    }
+
+    fn gemm_f64(&self, a: &Mat, p: &MatF64) -> Option<Result<MatF64, SolveError>> {
+        let s = self.target.slices(a.cols);
+        Some(Ok(crate::gemm::ozaki_gemm_f64(&a.to_f64(), p, s)))
+    }
+
+    fn label(&self) -> String {
+        format!("ozaki[{}]", self.target.describe())
     }
 }
 

@@ -60,6 +60,17 @@ pub fn matvec_f32(backend: &dyn Backend, a: &Mat, p: &MatF64) -> Result<Matvec, 
     if e >= 1023 {
         return Ok(Matvec::NonFinite);
     }
+    // Backends with native f64 numerics (the multi-slice Ozaki family)
+    // bypass the normalize → f32 → descale path entirely: the iterate is
+    // never narrowed, so the solve's floor is the backend's own bound,
+    // decades below f32. Input checks above still apply.
+    if let Some(native) = backend.gemm_f64(a, p) {
+        let out = native?;
+        if out.data.iter().any(|v| !v.is_finite()) {
+            return Ok(Matvec::NonFinite);
+        }
+        return Ok(Matvec::Out(out));
+    }
     let shift = -e;
     let up = exp2i(shift);
     let down = exp2i(-shift);
@@ -168,6 +179,54 @@ mod tests {
         let mut huge = MatF64::zeros(8, 2);
         huge.set(0, 0, f64::MAX); // exponent 1023: shifting back needs 2^-1023
         assert!(matches!(matvec_f32(&be, &a, &huge), Ok(Matvec::NonFinite)));
+    }
+
+    #[test]
+    fn ozaki_backend_routes_natively_below_the_f32_floor() {
+        // An f64 iterate with structure below f32's 24 bits: the f32 path
+        // must lose it at the narrowing, the native ozaki path must not.
+        use crate::solver::OzakiBackend;
+        let a = urand(16, 16, -1.0, 1.0, 6);
+        let p = MatF64 {
+            rows: 16,
+            cols: 1,
+            data: (0..16).map(|i| 1.0 + (i as f64 + 0.5) * exp2i(-40)).collect(),
+        };
+        let oz = OzakiBackend::fp64();
+        let Ok(Matvec::Out(native)) = matvec_f32(&oz, &a, &p) else { panic!("matvec failed") };
+        let truth = {
+            let a64 = a.to_f64();
+            crate::gemm::ozaki_gemm_f64(&a64, &p, crate::gemm::SliceTarget::Fp64.slices(16))
+        };
+        assert_eq!(native.data, truth.data, "native path must not renormalize");
+        // The same iterate through an f32 backend deviates from the exact
+        // product at ~2^-24 relative; the ozaki path sits decades lower.
+        let be = DirectBackend::new(Method::Fp32Simt);
+        let Ok(Matvec::Out(narrowed)) = matvec_f32(&be, &a, &p) else { panic!("matvec failed") };
+        let exact = residual_like(&a, &p);
+        let err = |q: &MatF64| {
+            let mut e = 0.0f64;
+            for (x, y) in q.data.iter().zip(exact.data.iter()) {
+                e = e.max((x - y).abs());
+            }
+            e
+        };
+        assert!(err(&native) < err(&narrowed) / 1e3, "{} vs {}", err(&native), err(&narrowed));
+    }
+
+    /// Host-f64 reference product for the test above.
+    fn residual_like(a: &Mat, p: &MatF64) -> MatF64 {
+        let mut out = MatF64::zeros(a.rows, p.cols);
+        for i in 0..a.rows {
+            for j in 0..p.cols {
+                let mut acc = 0.0f64;
+                for l in 0..a.cols {
+                    acc += a.get(i, l) as f64 * p.get(l, j);
+                }
+                out.set(i, j, acc);
+            }
+        }
+        out
     }
 
     #[test]

@@ -35,13 +35,20 @@
 //! around 1e-2..1e-3 where `ours_f16tc` (= `cutlass_halfhalf`) tracks
 //! `cublas_simt` to its 1e-6..1e-7 floor. `tcec solve` and
 //! `experiments::solver_residual` reproduce the contrast.
+//!
+//! The **fp64-target mode** goes one rung further (DESIGN.md §16): an
+//! [`OzakiBackend`] answers the matvec natively in f64
+//! ([`Backend::gemm_f64`]) via multi-slice error-free Tensor-Core GEMMs,
+//! so the iterate is never narrowed and the same IR loop converges the
+//! FP64-verified residual decades *below* every f32 method's floor —
+//! `tcec solve --target fp64`.
 
 pub mod backend;
 pub mod cg;
 pub mod ir;
 pub mod mixed;
 
-pub use backend::{Backend, DirectBackend, ServiceBackend};
+pub use backend::{Backend, DirectBackend, OzakiBackend, ServiceBackend};
 pub use cg::solve_cg;
 pub use ir::solve_jacobi;
 pub use mixed::{matvec_f32, residual_f64};

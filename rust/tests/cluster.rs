@@ -301,7 +301,7 @@ fn hedge_win_counts_the_logical_request_once() {
 fn quota_rejects_before_any_node_and_abandonment_counts_cancelled() {
     let cluster = ClusterClient::builder()
         .nodes(2)
-        .quota(QuotaConfig { burst: 2, refill_per_s: 0.0 })
+        .quota(QuotaConfig { burst: 2, refill_per_s: 0.0, ..QuotaConfig::default() })
         .service(GemmService::builder().workers(1).max_batch(1))
         .build_sim();
     let gen = |s: u64| (urand(12, 12, -1.0, 1.0, s), urand(12, 12, -1.0, 1.0, s + 50));

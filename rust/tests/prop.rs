@@ -10,8 +10,8 @@ use tcec::fp::{
 };
 use tcec::gemm::{
     apply_scale, c_relative_residual, cgemm, cgemm_f64, descale_pow2, gemm_f64, gemm_tiled,
-    ozaki_gemm, plan_scale, relative_residual, slice_bits, slices_for_fp32, CMat, CgemmAlgo, Mat,
-    Method, SimtBackend, TileConfig,
+    ozaki_gemm, ozaki_gemm_f64, plan_scale, relative_residual, slice_bits, slice_operand,
+    slices_for_fp32, CMat, CgemmAlgo, Mat, Method, SimtBackend, SliceTarget, TileConfig,
 };
 use tcec::matgen::Rng;
 use tcec::shard;
@@ -562,6 +562,96 @@ fn prop_ozaki_slice_count_vs_exactness() {
             errs[s_full - 1]
         );
     }
+}
+
+/// INVARIANT (corrected β, adversarial ks): at every power-of-two k —
+/// including the k where the old floor(log2)+1 bound changed β — every
+/// slice-pair TC GEMM at the new (larger) β is **bit-exact** against the
+/// f64 reference, and the fp64-target error is monotone nonincreasing in
+/// the slice count all the way down to the FP64 accuracy class, each
+/// point inside the provable `analysis::ozaki_bound`.
+#[test]
+fn prop_ozaki_corrected_beta_exact_and_fp64_monotone() {
+    use tcec::tcsim::mma_tile_zero_into;
+    let mut rng = Rng::new(0x0BE7A);
+    // Slice-pair bit-exactness across the power-of-two sweep. k=512 is
+    // the headline: the fixed bound raises β from 7 to 8 there, sitting
+    // exactly on 2β + ceil_log2(k) = 25.
+    for &k in &[16usize, 64, 256, 512, 1024] {
+        let m = 4 + rng.int_in(0, 6) as usize;
+        let n = 4 + rng.int_in(0, 6) as usize;
+        let a = tcec::matgen::urand(m, k, -1.0, 1.0, 5000 + k as u64);
+        let b = tcec::matgen::urand(k, n, -1.0, 1.0, 6000 + k as u64);
+        let beta = slice_bits(k);
+        let s = 3;
+        let a_sl = slice_operand(&a, beta, s, true);
+        let b_sl = slice_operand(&b, beta, s, false);
+        for p in 0..s {
+            for q in 0..s {
+                if p + q >= s {
+                    continue;
+                }
+                let mut d = vec![0.0f32; m * n];
+                mma_tile_zero_into(
+                    &mut d,
+                    &a_sl[p].data,
+                    &b_sl[q].data,
+                    m,
+                    n,
+                    k,
+                    MmaConfig::TENSOR_CORE,
+                );
+                let want = gemm_f64(&a_sl[p], &b_sl[q]);
+                for (g, w) in d.iter().zip(want.data.iter()) {
+                    assert_eq!(
+                        *g as f64, *w,
+                        "k={k} β={beta} pair ({p},{q}): slice GEMM not bit-exact"
+                    );
+                }
+            }
+        }
+    }
+    // Monotone fp64 descent at the boundary k, bounded by the provable
+    // per-slice-count bound throughout.
+    let k = 512usize;
+    let a = tcec::matgen::urand(12, k, -1.0, 1.0, 7000);
+    let b = tcec::matgen::urand(k, 12, -1.0, 1.0, 8000);
+    let (a64, b64) = (a.to_f64(), b.to_f64());
+    let r = gemm_f64(&a, &b);
+    let s64 = SliceTarget::Fp64.slices(k);
+    let norm = (k as f64) * (a.max_abs() as f64) * (b.max_abs() as f64);
+    let errs: Vec<f64> = (1..=s64)
+        .map(|s| {
+            let c = ozaki_gemm_f64(&a64, &b64, s);
+            let mut worst = 0.0f64;
+            for (x, y) in c.data.iter().zip(r.data.iter()) {
+                worst = worst.max((x - y).abs());
+            }
+            assert!(
+                worst / norm <= tcec::analysis::ozaki_bound(k, s),
+                "k={k} s={s}: measured {:.3e} exceeds the provable bound {:.3e}",
+                worst / norm,
+                tcec::analysis::ozaki_bound(k, s)
+            );
+            worst
+        })
+        .collect();
+    for (i, w) in errs.windows(2).enumerate() {
+        assert!(
+            w[1] <= w[0] * (1.0 + 1e-9) + 1e-300,
+            "s={}→{}: fp64-path error grew {:.3e} -> {:.3e}",
+            i + 1,
+            i + 2,
+            w[0],
+            w[1]
+        );
+    }
+    // The fp64 target lands in the fp64 class, ≥3 decades below the
+    // fp32-target point of the same frontier.
+    let e32 = errs[SliceTarget::Fp32.slices(k) - 1];
+    let e64 = errs[s64 - 1];
+    assert!(e64 / norm <= tcec::analysis::fp64_class_tol(k), "fp64 point misses its class");
+    assert!(e64 <= e32 / 1e3, "fp64 {e64:.3e} not ≥3 decades below fp32 {e32:.3e}");
 }
 
 /// Bit pattern of every element — the engine's identity contract is at
